@@ -1,0 +1,208 @@
+//! End-to-end driver (DESIGN.md E2E): the full three-layer system on a
+//! realistic mixed workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example hpc_pipeline
+//! ```
+//!
+//! Boots the L3 coordinator with the PJRT engine over the AOT artifacts
+//! (L2 JAX graphs + L1 Pallas kernels lowered to HLO), generates a mixed
+//! RandNLA job trace — sketched matmuls, trace estimates, triangle counts
+//! (including the real karate-club graph) and randomized SVDs — routes
+//! every randomization through the dynamic batcher + OPU/PJRT router, and
+//! reports throughput, latency percentiles, routing mix, batching
+//! effectiveness and per-kind accuracy against exact answers.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, Payload, Policy,
+};
+use photonic_randnla::graph::generators::erdos_renyi;
+use photonic_randnla::graph::karate::karate_club;
+use photonic_randnla::linalg::{self, rel_frobenius_error, rel_scalar_error};
+use photonic_randnla::stats::Running;
+use photonic_randnla::workload::traces::{generate, JobKind, TraceConfig};
+use photonic_randnla::workload::{correlated_pair, matrix_with_spectrum, psd_matrix, Spectrum};
+
+/// Ground truth retained per submitted job for post-hoc verification.
+enum Truth {
+    Matrix(linalg::Mat),
+    Scalar(f64),
+    Rank(usize, linalg::Mat),
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::var("PHOTON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing - run `make artifacts` first"
+    );
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::Auto,
+        batch: BatchConfig::default(),
+        artifacts_dir: Some(artifacts),
+    })?;
+    println!("coordinator up: 4 workers, Auto routing, PJRT engine attached\n");
+
+    // ---- build the workload --------------------------------------------
+    let trace = generate(&TraceConfig {
+        jobs: 48,
+        sizes: vec![96, 192, 384],
+        compression: 0.25,
+        seed: 1234,
+        ..Default::default()
+    });
+
+    let mut jobs: Vec<(Job, Truth, &'static str)> = Vec::new();
+    for spec in &trace {
+        match spec.kind {
+            JobKind::SketchMatmul => {
+                let (a, b) = correlated_pair(spec.n, 0.5, spec.seed);
+                let truth = Truth::Matrix(linalg::matmul_tn(&a, &b));
+                jobs.push((Job::ApproxMatmul { a, b, m: spec.m.max(32) }, truth, "matmul"));
+            }
+            JobKind::TraceEstimate => {
+                let a = psd_matrix(spec.n, spec.n / 2, spec.seed);
+                let truth = Truth::Scalar(a.trace());
+                jobs.push((Job::Trace { a, m: spec.m.max(48) }, truth, "trace"));
+            }
+            JobKind::TriangleCount => {
+                let g = erdos_renyi(spec.n, 0.08, spec.seed);
+                let truth = Truth::Scalar(g.exact_triangles() as f64);
+                jobs.push((
+                    Job::Triangles { adjacency: g.adjacency(), m: (spec.n * 3 / 4).max(32) },
+                    truth,
+                    "triangles",
+                ));
+            }
+            JobKind::RandSvd => {
+                let a = matrix_with_spectrum(
+                    spec.n,
+                    Spectrum::Exponential { decay: 0.9 },
+                    spec.seed,
+                );
+                let rank = 12;
+                let truth = Truth::Rank(rank, a.clone());
+                jobs.push((
+                    Job::RandSvd { a, rank, oversample: 8, power_iters: 2 },
+                    truth,
+                    "randsvd",
+                ));
+            }
+        }
+    }
+    // The real dataset leg: karate-club triangles. One sketch at n=34 is
+    // high-variance, so submit repeated measurements: padding the
+    // adjacency with isolated vertices leaves the count invariant but
+    // gives each job a fresh (n, m) signature => an independent medium.
+    // We grade the mean estimate, the paper's repeated-shot protocol.
+    let karate = karate_club();
+    for pad in (0usize..12).map(|i| 2 * i) {
+        let n = 34 + pad;
+        let adj = karate.adjacency().pad(n, n);
+        jobs.push((
+            Job::Triangles { adjacency: adj, m: (n * 9) / 10 },
+            Truth::Scalar(karate.exact_triangles() as f64),
+            "karate",
+        ));
+    }
+
+    // ---- run -------------------------------------------------------------
+    let total = jobs.len();
+    let t0 = Instant::now();
+    let tickets: Vec<_> = jobs
+        .iter()
+        .map(|(job, _, _)| coord.submit(job.clone()))
+        .collect();
+
+    let mut lat = Running::new();
+    let mut per_kind_err: HashMap<&'static str, Running> = HashMap::new();
+    let mut routed: HashMap<&'static str, u64> = HashMap::new();
+    let mut karate_estimates = Running::new();
+    let mut karate_truth = 0.0;
+    for (ticket, (_job, truth, kind)) in tickets.into_iter().zip(&jobs) {
+        let resp = ticket.wait()?;
+        lat.push(resp.latency_us as f64 / 1e3);
+        *routed.entry(resp.device.name()).or_default() += 1;
+        if *kind == "karate" {
+            if let (Payload::Scalar(s), Truth::Scalar(want)) = (&resp.payload, truth) {
+                karate_estimates.push(*s);
+                karate_truth = *want;
+            }
+            continue;
+        }
+        let err = match (&resp.payload, truth) {
+            (Payload::Matrix(m), Truth::Matrix(want)) => rel_frobenius_error(want, m),
+            (Payload::Scalar(s), Truth::Scalar(want)) => rel_scalar_error(*want, *s),
+            (Payload::Svd { u, s, vt }, Truth::Rank(rank, a)) => {
+                let rec = linalg::reconstruct(u, s, vt);
+                let best = linalg::truncated(a, *rank);
+                // excess error over the Eckart-Young optimum
+                (rel_frobenius_error(a, &rec) - rel_frobenius_error(a, &best)).max(0.0)
+            }
+            _ => f64::NAN,
+        };
+        per_kind_err.entry(kind).or_default().push(err);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- report ----------------------------------------------------------
+    println!("completed {total} jobs in {wall:.2}s  ->  {:.1} jobs/s", total as f64 / wall);
+    println!(
+        "latency ms: mean {:.1}  min {:.1}  max {:.1}",
+        lat.mean(),
+        lat.min(),
+        lat.max()
+    );
+    println!("routing mix: {routed:?}");
+    println!("{}\n", coord.metrics.report());
+
+    println!("{:<12} {:>7} {:>14} {:>14}", "kind", "jobs", "mean err", "max err");
+    let mut ok = true;
+    for (kind, r) in &per_kind_err {
+        println!(
+            "{kind:<12} {:>7} {:>14.5} {:>14.5}",
+            r.count(),
+            r.mean(),
+            r.max()
+        );
+        // Generous accuracy gates: estimators at compression 0.25-0.75.
+        let gate = match *kind {
+            "matmul" => 3.0,
+            "trace" => 0.6,
+            "triangles" => 1.5,
+            "randsvd" => 0.1, // excess over optimal
+            _ => f64::INFINITY,
+        };
+        if r.mean() > gate {
+            println!("  ^ FAIL: mean err {} > gate {gate}", r.mean());
+            ok = false;
+        }
+    }
+    // Real-graph checkpoint: mean of the repeated karate estimates.
+    let karate_rel =
+        (karate_estimates.mean() - karate_truth).abs() / karate_truth.max(1e-9);
+    println!(
+        "karate-club: mean estimate {:.1} over {} sketches vs exact {} (rel {:.3})",
+        karate_estimates.mean(),
+        karate_estimates.count(),
+        karate_truth,
+        karate_rel
+    );
+    if karate_rel > 1.0 {
+        println!("  ^ FAIL: karate rel {karate_rel} > 1.0");
+        ok = false;
+    }
+
+    coord.shutdown();
+    anyhow::ensure!(ok, "accuracy gates failed");
+    println!("\nhpc_pipeline OK - three layers composed: pallas kernels -> jax HLO -> PJRT -> rust coordinator");
+    Ok(())
+}

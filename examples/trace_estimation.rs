@@ -1,0 +1,50 @@
+//! Hutchinson trace estimation on the OPU (paper §II-B).
+//!
+//! ```bash
+//! cargo run --release --example trace_estimation
+//! ```
+//!
+//! Sweeps the sketch size m on a PSD matrix and shows the optical and
+//! digital estimators converging to the exact trace at the predicted
+//! 1/sqrt(m) rate.
+
+use std::sync::Arc;
+
+use photonic_randnla::opu::{OpuConfig, OpuDevice};
+use photonic_randnla::randnla::trace::predicted_rel_std;
+use photonic_randnla::randnla::{exact_trace, hutchinson, DigitalSketcher, OpuSketcher};
+use photonic_randnla::stats::Running;
+use photonic_randnla::workload::psd_matrix;
+
+fn main() {
+    let n = 256;
+    let a = psd_matrix(n, n / 2, 5);
+    let truth = exact_trace(&a);
+    println!("PSD target {n}x{n}, exact trace = {truth:.3}\n");
+    println!(
+        "{:<8} {:>14} {:>14} {:>14}",
+        "m", "digital rel", "opu rel", "theory 1/sqrt(m)"
+    );
+
+    let trials = 6u64;
+    for &m in &[8usize, 16, 32, 64, 128] {
+        let (mut dig, mut opu) = (Running::new(), Running::new());
+        for t in 0..trials {
+            let ds = DigitalSketcher::new(m, n, 300 + 17 * t + m as u64);
+            dig.push((hutchinson(&ds, &a) - truth).abs() / truth);
+            let dev = Arc::new(OpuDevice::new(OpuConfig::new(300 + 17 * t + m as u64, m, n)));
+            opu.push((hutchinson(&OpuSketcher::new(dev), &a) - truth).abs() / truth);
+        }
+        println!(
+            "{m:<8} {:>14.5} {:>14.5} {:>14.5}",
+            dig.mean(),
+            opu.mean(),
+            predicted_rel_std(&a, m)
+        );
+    }
+    println!(
+        "\nboth estimators track the Gaussian-theory error bar; the analog \
+         chain costs no visible precision (the paper's Fig. 1 claim)"
+    );
+    println!("trace_estimation OK");
+}

@@ -1,0 +1,56 @@
+//! Triangle counting in complex networks on a photonic co-processor
+//! (paper §II-B): Tr(A^3)/6 via one symmetric sketch.
+//!
+//! ```bash
+//! cargo run --release --example triangle_counting
+//! ```
+//!
+//! Counts triangles on the real Zachary karate-club graph plus synthetic
+//! Erdős–Rényi / Barabási–Albert networks, comparing exact combinatorial
+//! counting, the digital randomized estimator and the OPU estimator.
+
+use std::sync::Arc;
+
+use photonic_randnla::graph::generators::{barabasi_albert, erdos_renyi};
+use photonic_randnla::graph::karate::karate_club;
+use photonic_randnla::graph::Graph;
+use photonic_randnla::opu::{OpuConfig, OpuDevice};
+use photonic_randnla::randnla::{estimate_triangles, DigitalSketcher, OpuSketcher};
+use photonic_randnla::stats::Running;
+
+fn evaluate(name: &str, g: &Graph, compression: f64, trials: u64) {
+    let n = g.n();
+    let m = ((n as f64 * compression) as usize).max(8);
+    let exact = g.exact_triangles();
+
+    let (mut dig, mut opu) = (Running::new(), Running::new());
+    for t in 0..trials {
+        let ds = DigitalSketcher::new(m, n, 100 + t);
+        dig.push(estimate_triangles(&ds, g));
+        let dev = Arc::new(OpuDevice::new(OpuConfig::new(100 + t, m, n)));
+        opu.push(estimate_triangles(&OpuSketcher::new(dev), g));
+    }
+    println!(
+        "{name:<18} n={n:<5} m={m:<4} exact={exact:<8} digital={:>9.1}±{:<7.1} opu={:>9.1}±{:<7.1}",
+        dig.mean(),
+        dig.ci95(),
+        opu.mean(),
+        opu.ci95()
+    );
+}
+
+fn main() {
+    println!("randomized triangle counting: Tr((G A G^T / m)^3)/6\n");
+    // Real small graph: 34 nodes, 78 edges, exactly 45 triangles.
+    evaluate("karate-club", &karate_club(), 0.8, 8);
+    // Synthetic complex networks.
+    evaluate("erdos-renyi(256)", &erdos_renyi(256, 0.08, 1), 0.5, 4);
+    evaluate("erdos-renyi(512)", &erdos_renyi(512, 0.05, 2), 0.375, 3);
+    evaluate("barabasi-alb(256)", &barabasi_albert(256, 6, 3), 0.5, 4);
+    println!(
+        "\ncompressed-domain cost: O(m^3 + n) vs naive O(n^3) — \
+         speedup {}x at n=512, m=192 (cube ratio)",
+        (512f64 / 192.0).powi(3).round()
+    );
+    println!("triangle_counting OK");
+}

@@ -1,0 +1,102 @@
+"""AOT compiler: lower every L2 lowering unit to HLO *text* + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime
+(rust/src/runtime/artifact.rs) loads the manifest and compiles each HLO
+module on its PJRT CPU client. Python never runs after this.
+
+HLO text — NOT ``lowered.compile()`` output, NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the rust side unwraps with
+``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_unit(name, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def arg_specs(example_args):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype.name if hasattr(s.dtype, "name") else s.dtype)}
+        for s in example_args
+    ]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=None, help="artifacts directory")
+    p.add_argument("--out", default=None, help="(compat) single-file target; sets out-dir to its parent")
+    p.add_argument("--sizes", default="256,512,1024", help="comma list of n buckets")
+    p.add_argument("--ratios", default="8,4,2", help="comma list of compression denominators")
+    p.add_argument("--only", default=None, help="substring filter on unit names")
+    p.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = p.parse_args()
+
+    out_dir = args.out_dir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    ratios = tuple(int(r) for r in args.ratios.split(","))
+
+    units = model.catalogue(sizes=sizes, ratios=ratios)
+    if args.only:
+        units = [u for u in units if args.only in u[0]]
+
+    manifest = {"format": "hlo-text/return-tuple-1", "jax": jax.__version__, "units": {}}
+    t0 = time.time()
+    for name, fn, example_args in units:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_unit(name, fn, example_args)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["units"][name] = {
+            "file": os.path.basename(path),
+            "args": arg_specs(example_args),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  lowered {name:<32} {len(text):>9} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # Compat: `make artifacts` tracks a single sentinel file.
+    sentinel = args.out or os.path.join(out_dir, "model.hlo.txt")
+    if not os.path.exists(sentinel):
+        first = units[0][0] if units else None
+        with open(sentinel, "w") as f:
+            f.write(f"# sentinel; see manifest.json ({first})\n")
+    print(
+        f"wrote {len(units)} artifacts + manifest.json to {out_dir} "
+        f"in {time.time() - t0:.1f}s",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused OPU forward pass  I = |R A|^2.
+
+The OPU's native physics: coherent light modulated by binary DMD pixels
+(columns of A) propagates through a multiply-scattering medium (fixed
+complex Gaussian transmission matrix R = Rr + i*Ri) and a camera measures
+the speckle *intensity* — the elementwise squared modulus.
+
+Digitally this is two real matmuls plus an elementwise epilogue:
+
+    I = (Rr @ A)^2 + (Ri @ A)^2
+
+The kernel fuses all three so the two partial fields (yr, yi) never leave
+VMEM: they live in scratch accumulators across the n-reduction, and only
+the final non-negative intensity tile is written to HBM. On real TPU this
+halves HBM traffic vs. materialising both fields (2 reads of R-halves +
+1 write of I, instead of 2 writes + 2 reads + 1 write).
+
+interpret=True for CPU-PJRT executability (see projection.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _opu_kernel(rr_ref, ri_ref, a_ref, o_ref, yr_ref, yi_ref):
+    """Accumulate both complex field halves in VMEM scratch; square at end."""
+    nsteps = pl.num_programs(2)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        yr_ref[...] = jnp.zeros_like(yr_ref)
+        yi_ref[...] = jnp.zeros_like(yi_ref)
+
+    a = a_ref[...]
+    yr_ref[...] += jnp.dot(rr_ref[...], a, preferred_element_type=jnp.float32)
+    yi_ref[...] += jnp.dot(ri_ref[...], a, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        yr = yr_ref[...]
+        yi = yi_ref[...]
+        o_ref[...] = yr * yr + yi * yi
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def opu_intensity(
+    rr: jax.Array,
+    ri: jax.Array,
+    a: jax.Array,
+    *,
+    bm: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """I = |(Rr + i Ri) @ A|^2 with Rr/Ri (m, n), A (n, k) -> I (m, k)."""
+    m, n = rr.shape
+    if ri.shape != rr.shape:
+        raise ValueError(f"Rr {rr.shape} and Ri {ri.shape} must match")
+    n2, k = a.shape
+    if n != n2:
+        raise ValueError(f"inner dims mismatch: R is {rr.shape}, A is {a.shape}")
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    for name, dim, blk in (("m", m, bm), ("n", n, bn), ("k", k, bk)):
+        if dim % blk != 0:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}")
+
+    grid = (m // bm, k // bk, n // bn)
+    return pl.pallas_call(
+        _opu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bn, bk), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), jnp.float32),
+            pltpu.VMEM((bm, bk), jnp.float32),
+        ],
+        interpret=True,
+    )(rr, ri, a)
+
+
+def hbm_traffic_bytes(m: int, n: int, k: int, fused: bool, dtype_bytes: int = 4) -> int:
+    """HBM bytes moved for the OPU forward (DESIGN.md §Perf roofline).
+
+    fused:   read Rr, Ri, A once; write I once.
+    unfused: additionally materialise + re-read yr and yi.
+    """
+    reads = 2 * m * n + n * k
+    writes = m * k
+    if not fused:
+        writes += 2 * m * k
+        reads += 2 * m * k
+    return (reads + writes) * dtype_bytes

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: simulated 8-bit ADC quantization of camera intensities.
+
+The OPU camera digitizes speckle intensities with a fixed-range ADC. This
+kernel reproduces rust/src/opu/noise.rs::AdcModel so the AOT-compiled OPU
+forward path (opu.py + this epilogue) is bit-comparable with the rust
+simulator. The [lo, hi] range is passed as scalar prefetch-style (1,1)
+operands because real auto-exposure fixes the range *before* the frame is
+digitized — it is not computed inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _adc_kernel(x_ref, lo_ref, hi_ref, o_ref, *, levels: int):
+    lo = lo_ref[0, 0]
+    hi = hi_ref[0, 0]
+    span = jnp.maximum(hi - lo, 1e-12)
+    normed = jnp.clip((x_ref[...] - lo) / span, 0.0, 1.0)
+    o_ref[...] = jnp.round(normed * levels) / levels * span + lo
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bk"))
+def adc_quantize(
+    x: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    *,
+    bits: int = 8,
+    bm: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Quantize (m, k) intensities to 2**bits levels over [lo, hi]."""
+    m, k = x.shape
+    bm, bk = min(bm, m), min(bk, k)
+    if m % bm or k % bk:
+        raise ValueError(f"shape {x.shape} not divisible by blocks ({bm},{bk})")
+    lo = jnp.asarray(lo, jnp.float32).reshape(1, 1)
+    hi = jnp.asarray(hi, jnp.float32).reshape(1, 1)
+    levels = (1 << bits) - 1
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        functools.partial(_adc_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, lo, hi)

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the Pallas kernels are validated against in
+python/tests/. They are intentionally written in the most direct jnp form —
+no tiling, no fusion — so a mismatch always implicates the kernel.
+
+Conventions (match DESIGN.md §7):
+  - projection matrices are (m, n): ``m`` output rows, ``n`` input dim;
+  - the OPU transmission matrix R is complex, represented as two real
+    matrices (Rr, Ri) with iid N(0, 1/2) entries each so that each complex
+    entry has unit variance: E[|R_ij|^2] = 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_project(r, a):
+    """Digital Gaussian projection: (m,n) @ (n,k) -> (m,k)."""
+    return jnp.dot(r, a, preferred_element_type=jnp.float32)
+
+
+def opu_intensity(rr, ri, a):
+    """OPU native op on a batch of columns: I = |R A|^2 elementwise.
+
+    rr, ri: (m, n) real/imag parts of the transmission matrix.
+    a:      (n, k) input columns (the DMD frames).
+    returns (m, k) non-negative intensities.
+    """
+    yr = jnp.dot(rr, a, preferred_element_type=jnp.float32)
+    yi = jnp.dot(ri, a, preferred_element_type=jnp.float32)
+    return yr * yr + yi * yi
+
+
+def symmetric_sketch(g, a):
+    """Hutchinson / triangle core: B = G A G^T, (m,n)x(n,n)x(n,m) -> (m,m)."""
+    return jnp.dot(jnp.dot(g, a), g.T, preferred_element_type=jnp.float32)
+
+
+def hutchinson_trace(g, a):
+    """Unbiased Hutchinson estimator Tr(A) ~= Tr(G A G^T)/m."""
+    m = g.shape[0]
+    return jnp.trace(symmetric_sketch(g, a)) / m
+
+
+def triangle_estimate(g, a):
+    """Triangle count estimator Tr(A^3)/6 ~= Tr((G A G^T / m)^3)/6."""
+    m = g.shape[0]
+    b = symmetric_sketch(g, a) / m
+    return jnp.trace(b @ b @ b) / 6.0
+
+
+def randsvd_range(a, omega, q: int = 2):
+    """Range finder for RandSVD: Y = (A A^T)^q A Omega (no re-orth).
+
+    a:     (n, n) target matrix.
+    omega: (n, l) Gaussian test matrix, l = k + oversampling.
+    """
+    y = jnp.dot(a, omega, preferred_element_type=jnp.float32)
+    for _ in range(q):
+        y = jnp.dot(a, jnp.dot(a.T, y), preferred_element_type=jnp.float32)
+    return y
+
+
+def adc_quantize(x, bits: int = 8, lo=None, hi=None):
+    """Simulated ADC: clip to [lo, hi] and round to 2**bits levels.
+
+    Mirrors rust/src/opu/noise.rs::AdcModel. lo/hi default to the batch
+    min/max (auto-ranging ADC, what the OPU camera's auto-exposure does).
+    """
+    lo = jnp.min(x) if lo is None else lo
+    hi = jnp.max(x) if hi is None else hi
+    span = jnp.maximum(hi - lo, 1e-12)
+    levels = (1 << bits) - 1
+    q = jnp.round(jnp.clip((x - lo) / span, 0.0, 1.0) * levels)
+    return q / levels * span + lo
+
+
+def bitplane_encode(x, bits: int = 8):
+    """Split a non-negative integer array (< 2**bits) into binary planes.
+
+    Returns (bits, *x.shape) with plane b holding bit b (LSB first).
+    """
+    xi = x.astype(jnp.uint32)
+    planes = [(xi >> b) & 1 for b in range(bits)]
+    return jnp.stack(planes).astype(jnp.float32)
+
+
+def bitplane_decode(planes):
+    """Inverse of bitplane_encode: sum_b 2^b * plane_b."""
+    bits = planes.shape[0]
+    weights = (2.0 ** jnp.arange(bits)).reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes * weights, axis=0)

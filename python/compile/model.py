@@ -1,0 +1,156 @@
+"""L2: the paper's compute graphs, composed from the L1 Pallas kernels.
+
+Each public function here is a *lowering unit*: aot.py jit-lowers it at a
+ladder of static shape buckets and emits HLO text the rust runtime executes
+via PJRT. Python never runs at serving time.
+
+Graphs
+------
+proj_pallas    O = R @ A                 (Pallas tiled kernel — paper path)
+proj_xla       O = R @ A                 (plain XLA dot — GPU-baseline path)
+opu_forward    I = |R A|^2               (fused Pallas kernel, = the OPU op)
+opu_linear     holographic linear recovery from three intensity frames
+sketch_sym     B = G A G^T               (Hutchinson / triangle core)
+tri_core       t = Tr(B^3)/6             (compressed-domain triangle count)
+rsvd_range     Y = (A A^T)^q A Omega     (RandSVD range finder, q static)
+gram           C = S^T T / m             (compressed-domain approx matmul)
+
+Normalisations follow DESIGN.md §7: projection matrices have unit-variance
+entries, estimators divide by m explicitly *inside* the graph so the rust
+side never needs to rescale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import opu as opu_kernels
+from compile.kernels import projection as proj_kernels
+from compile.kernels import quantize as quant_kernels
+
+
+# --------------------------------------------------------------------------
+# Projections (the randomization step)
+# --------------------------------------------------------------------------
+
+def proj_pallas(r, a):
+    """Digital Gaussian projection via the tiled Pallas kernel."""
+    return proj_kernels.dense_project(r, a)
+
+
+def proj_xla(r, a):
+    """Digital Gaussian projection via a plain XLA dot (baseline)."""
+    return jnp.dot(r, a, preferred_element_type=jnp.float32)
+
+
+def opu_forward(rr, ri, a):
+    """The OPU native op on a frame batch: I = |R A|^2 (fused Pallas)."""
+    return opu_kernels.opu_intensity(rr, ri, a)
+
+
+def opu_forward_quantized(rr, ri, a, lo, hi):
+    """OPU op + 8-bit ADC, the full physical measurement chain."""
+    return quant_kernels.adc_quantize(opu_kernels.opu_intensity(rr, ri, a), lo, hi)
+
+
+def opu_linear(i_xa, i_x, i_a):
+    """Digital holography: recover the linear field interference.
+
+    Given three intensity frames (all (m, k)):
+      i_xa = |R(x + a)|^2,  i_x = |Rx|^2,  i_a = |Ra|^2  (a broadcast col)
+    returns Re( conj(Ra) * Rx ) = (i_xa - i_x - i_a) / 2, the linear
+    random projection of x by the calibrated effective matrix.
+    """
+    return (i_xa - i_x - i_a) * 0.5
+
+
+# --------------------------------------------------------------------------
+# Compressed-domain algorithms
+# --------------------------------------------------------------------------
+
+def sketch_sym(g, a):
+    """B = G A G^T / m  — the normalised symmetric sketch.
+
+    Uses the Pallas projection kernel for the big (m,n)x(n,n) product and a
+    plain dot for the small (m,n)x(n,m)->(m,m) tail (XLA fuses the scale).
+    """
+    m = g.shape[0]
+    ga = proj_kernels.dense_project(g, a)          # (m, n)
+    return jnp.dot(ga, g.T, preferred_element_type=jnp.float32) / m
+
+
+def tri_core(b):
+    """t = Tr(B^3) / 6 on the compressed (m, m) sketch."""
+    b2 = jnp.dot(b, b, preferred_element_type=jnp.float32)
+    # Tr(B^3) = sum_ij B2_ij * B_ji = sum over elementwise product with B^T.
+    return jnp.sum(b2 * b.T) / 6.0
+
+
+def hutch_trace(b):
+    """Hutchinson estimate from the normalised sketch: Tr(B)."""
+    return jnp.trace(b)
+
+
+def rsvd_range(a, omega, q: int = 2):
+    """Y = (A A^T)^q A Omega — power-iterated range finder.
+
+    q is static (baked per artifact); re-orthonormalisation between
+    iterations happens on the rust side (QR), where it is cheap on the
+    (n, l) panel and keeps this graph GEMM-only.
+    """
+    y = proj_kernels.dense_project(a, omega)
+    for _ in range(q):
+        z = jnp.dot(a.T, y, preferred_element_type=jnp.float32)
+        y = jnp.dot(a, z, preferred_element_type=jnp.float32)
+    return y
+
+
+def gram(s, t):
+    """Approximate matmul tail: A^T B ~= S^T T / m for S = GA, T = GB."""
+    m = s.shape[0]
+    return jnp.dot(s.T, t, preferred_element_type=jnp.float32) / m
+
+
+# --------------------------------------------------------------------------
+# Shape-bucket catalogue consumed by aot.py (and mirrored by the rust
+# runtime's artifact registry — keep rust/src/runtime/artifact.rs in sync).
+# --------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def catalogue(sizes=(256, 512, 1024), ratios=(8, 4, 2), rsvd_l=64, rsvd_q=2):
+    """Yield (name, fn, example_args) lowering units.
+
+    sizes:  input dimension buckets n (k = n: square frame batches).
+    ratios: compression denominators (m = n / ratio).
+    """
+    units = []
+    for n in sizes:
+        for ratio in ratios:
+            m = n // ratio
+            tag = f"m{m}_n{n}"
+            units.append((f"proj_pallas_{tag}", proj_pallas, (_s((m, n)), _s((n, n)))))
+            units.append((f"proj_xla_{tag}", proj_xla, (_s((m, n)), _s((n, n)))))
+            units.append(
+                (f"opu_forward_{tag}", opu_forward, (_s((m, n)), _s((m, n)), _s((n, n))))
+            )
+            units.append((f"sketch_sym_{tag}", sketch_sym, (_s((m, n)), _s((n, n)))))
+        m_mid = n // 4
+        units.append((f"tri_core_m{m_mid}", tri_core, (_s((m_mid, m_mid)),)))
+        units.append(
+            (
+                f"rsvd_range_n{n}_l{rsvd_l}_q{rsvd_q}",
+                lambda a, om, _q=rsvd_q: rsvd_range(a, om, q=_q),
+                (_s((n, n)), _s((n, rsvd_l))),
+            )
+        )
+        units.append(
+            (f"gram_m{m_mid}_n{n}", gram, (_s((m_mid, n)), _s((m_mid, n))))
+        )
+    return units

@@ -1,0 +1,95 @@
+"""AOT emission: HLO text validity, manifest integrity, determinism."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def small_units():
+    return model.catalogue(sizes=(256,), ratios=(4,))
+
+
+class TestHloEmission:
+    def test_every_unit_lowers(self, small_units):
+        for name, fn, args in small_units:
+            text = aot.lower_unit(name, fn, args)
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+
+    def test_parameter_count_matches(self, small_units):
+        for name, fn, args in small_units:
+            text = aot.lower_unit(name, fn, args)
+            assert text.count("parameter(") >= len(args), name
+
+    def test_return_tuple(self, small_units):
+        """Lowered with return_tuple=True -> ROOT is a tuple (rust unwraps
+        with to_tuple1)."""
+        name, fn, args = small_units[0]
+        text = aot.lower_unit(name, fn, args)
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert any("tuple" in l for l in root_lines), root_lines
+
+    def test_deterministic(self, small_units):
+        name, fn, args = small_units[0]
+        t1 = aot.lower_unit(name, fn, args)
+        t2 = aot.lower_unit(name, fn, args)
+        assert t1 == t2
+
+    def test_no_custom_calls(self, small_units):
+        """interpret=True must fully inline pallas — a Mosaic custom-call
+        would be unexecutable on the CPU PJRT client."""
+        for name, fn, args in small_units:
+            text = aot.lower_unit(name, fn, args)
+            assert "custom-call" not in text.lower() or "mosaic" not in text.lower(), name
+
+
+class TestManifest:
+    def test_cli_writes_manifest(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+             "--sizes", "256", "--ratios", "4"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True,
+        )
+        assert out.returncode == 0, out.stderr
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["format"].startswith("hlo-text")
+        for name, meta in manifest["units"].items():
+            f = tmp_path / meta["file"]
+            assert f.exists(), name
+            assert f.stat().st_size == meta["bytes"]
+            assert all("shape" in a and "dtype" in a for a in meta["args"])
+
+    def test_arg_specs_json_serialisable(self, small_units):
+        for _name, _fn, args in small_units:
+            json.dumps(aot.arg_specs(args))
+
+
+class TestCliFilters:
+    def test_only_filter_limits_units(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+             "--sizes", "256", "--ratios", "4", "--only", "tri_core"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True,
+        )
+        assert out.returncode == 0, out.stderr
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert list(manifest["units"]) == ["tri_core_m64"]
+
+    def test_custom_sizes_change_buckets(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+             "--sizes", "128", "--ratios", "2", "--only", "proj_xla"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True,
+        )
+        assert out.returncode == 0, out.stderr
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert "proj_xla_m64_n128" in manifest["units"]

@@ -1,0 +1,195 @@
+"""L2 graph semantics: every lowering unit vs its mathematical definition."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestProjectionGraphs:
+    def test_pallas_equals_xla(self):
+        rng = np.random.default_rng(0)
+        r, a = _rand(rng, 128, 256), _rand(rng, 256, 256)
+        np.testing.assert_allclose(
+            model.proj_pallas(r, a), model.proj_xla(r, a), rtol=2e-5, atol=2e-4
+        )
+
+    def test_opu_forward_equals_ref(self):
+        rng = np.random.default_rng(1)
+        s = np.sqrt(0.5)
+        rr, ri = _rand(rng, 128, 256, scale=s), _rand(rng, 128, 256, scale=s)
+        a = _rand(rng, 256, 256)
+        np.testing.assert_allclose(
+            model.opu_forward(rr, ri, a), ref.opu_intensity(rr, ri, a),
+            rtol=2e-4, atol=2e-3,
+        )
+
+
+class TestHolography:
+    def test_linear_recovery_identity(self):
+        """(|R(x+a)|^2 - |Rx|^2 - |Ra|^2)/2 == Re(conj(Ra) * Rx)."""
+        rng = np.random.default_rng(2)
+        m, n, k = 64, 128, 8
+        rc = (rng.standard_normal((m, n)) + 1j * rng.standard_normal((m, n))) / np.sqrt(2)
+        x = rng.integers(0, 2, (n, k)).astype(np.float64)
+        a = rng.integers(0, 2, (n, 1)).astype(np.float64)
+        i_xa = np.abs(rc @ (x + a)) ** 2
+        i_x = np.abs(rc @ x) ** 2
+        i_a = np.abs(rc @ a) ** 2
+        got = np.asarray(
+            model.opu_linear(
+                i_xa.astype(np.float32), i_x.astype(np.float32),
+                np.repeat(i_a, k, 1).astype(np.float32),
+            )
+        )
+        want = np.real(np.conj(rc @ a) * (rc @ x))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_linear_in_x(self):
+        """Recovered projection is additive over disjoint binary frames."""
+        rng = np.random.default_rng(3)
+        m, n = 32, 64
+        rc = (rng.standard_normal((m, n)) + 1j * rng.standard_normal((m, n))) / np.sqrt(2)
+        a = rng.integers(0, 2, (n, 1)).astype(np.float64)
+
+        def lin(x):
+            i_xa = (np.abs(rc @ (x + a)) ** 2).astype(np.float32)
+            i_x = (np.abs(rc @ x) ** 2).astype(np.float32)
+            i_a = (np.abs(rc @ a) ** 2).astype(np.float32)
+            return np.asarray(model.opu_linear(i_xa, i_x, i_a))
+
+        x1 = rng.integers(0, 2, (n, 1)).astype(np.float64)
+        x2 = rng.integers(0, 2, (n, 1)).astype(np.float64)
+        np.testing.assert_allclose(
+            lin(x1 + x2), lin(x1) + lin(x2), rtol=1e-3, atol=1e-2
+        )
+
+
+class TestCompressedDomain:
+    def test_sketch_sym_definition(self):
+        rng = np.random.default_rng(4)
+        g, a = _rand(rng, 128, 256), _rand(rng, 256, 256)
+        want = g @ a @ g.T / 128
+        np.testing.assert_allclose(model.sketch_sym(g, a), want, rtol=2e-4, atol=2e-3)
+
+    def test_tri_core_definition(self):
+        rng = np.random.default_rng(5)
+        b = _rand(rng, 64, 64)
+        b = (b + b.T) / 2
+        want = np.trace(b @ b @ b) / 6.0
+        got = float(model.tri_core(b))
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_hutch_trace_is_trace(self):
+        rng = np.random.default_rng(6)
+        b = _rand(rng, 64, 64)
+        np.testing.assert_allclose(float(model.hutch_trace(b)), np.trace(b), rtol=1e-5)
+
+    def test_gram_normalisation(self):
+        rng = np.random.default_rng(7)
+        s, t = _rand(rng, 64, 128), _rand(rng, 64, 128)
+        np.testing.assert_allclose(
+            model.gram(s, t), s.T @ t / 64, rtol=2e-4, atol=2e-3
+        )
+
+    @pytest.mark.parametrize("q", [0, 1, 2])
+    def test_rsvd_range_matches_ref(self, q):
+        rng = np.random.default_rng(8)
+        a, om = _rand(rng, 128, 128, scale=0.1), _rand(rng, 128, 32)
+        np.testing.assert_allclose(
+            model.rsvd_range(a, om, q=q), ref.randsvd_range(a, om, q=q),
+            rtol=2e-3, atol=2e-3,
+        )
+
+    def test_rsvd_range_captures_dominant_subspace(self):
+        """With q=2, the range aligns with the top singular subspace."""
+        rng = np.random.default_rng(9)
+        n, rank = 128, 8
+        u = np.linalg.qr(rng.standard_normal((n, rank)))[0]
+        a = (u * np.arange(rank, 0, -1)) @ u.T + 0.01 * rng.standard_normal((n, n))
+        a = a.astype(np.float32)
+        om = _rand(rng, n, 16)
+        y = np.asarray(model.rsvd_range(a, om, q=2))
+        qy = np.linalg.qr(y)[0]
+        # Residual of projecting the true basis onto range(Y) is small.
+        resid = u - qy @ (qy.T @ u)
+        assert np.linalg.norm(resid) / np.linalg.norm(u) < 0.05
+
+
+class TestEstimatorStatistics:
+    """Monte-Carlo sanity: the graphs implement *unbiased* estimators."""
+
+    def test_hutchinson_unbiased(self):
+        rng = np.random.default_rng(10)
+        n, m, trials = 64, 32, 200
+        a = _rand(rng, n, n)
+        a = a @ a.T  # PSD
+        estimates = []
+        for _ in range(trials):
+            g = _rand(rng, m, n)
+            estimates.append(float(model.hutch_trace(model.sketch_sym(g, a))))
+        err = abs(np.mean(estimates) - np.trace(a)) / np.trace(a)
+        assert err < 0.05, f"relative bias {err:.3f}"
+
+    def test_gram_unbiased(self):
+        rng = np.random.default_rng(11)
+        n, m, trials = 64, 32, 200
+        a, b = _rand(rng, n, n), _rand(rng, n, n)
+        want = a.T @ b
+        acc = np.zeros_like(want)
+        for _ in range(trials):
+            g = _rand(rng, m, n)
+            acc += np.asarray(model.gram(g @ a, g @ b))
+        got = acc / trials
+        rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+        assert rel < 0.1, f"relative error {rel:.3f}"
+
+
+class TestCatalogue:
+    def test_catalogue_names_unique(self):
+        units = model.catalogue()
+        names = [u[0] for u in units]
+        assert len(names) == len(set(names))
+
+    def test_catalogue_covers_all_ops(self):
+        names = " ".join(u[0] for u in model.catalogue())
+        for op in ("proj_pallas", "proj_xla", "opu_forward", "sketch_sym",
+                   "tri_core", "rsvd_range", "gram"):
+            assert op in names
+
+    def test_catalogue_shapes_consistent(self):
+        for name, _fn, args in model.catalogue(sizes=(256,), ratios=(4,)):
+            for spec in args:
+                assert all(d > 0 for d in spec.shape), name
+
+
+class TestQuantizedForward:
+    def test_opu_forward_quantized_chain(self):
+        """Full measurement chain: intensity then 8-bit ADC."""
+        rng = np.random.default_rng(20)
+        s = np.sqrt(0.5)
+        rr, ri = _rand(rng, 64, 128, scale=s), _rand(rng, 64, 128, scale=s)
+        a = _rand(rng, 128, 128)
+        raw = np.asarray(model.opu_forward(rr, ri, a))
+        q = np.asarray(model.opu_forward_quantized(rr, ri, a, raw.min(), raw.max()))
+        # quantization bounded by half LSB of the range
+        lsb = (raw.max() - raw.min()) / 255.0
+        assert np.max(np.abs(q - raw)) <= lsb / 2 + 1e-4
+        assert np.all(q >= raw.min() - 1e-5)
+
+    def test_quantized_preserves_order(self):
+        rng = np.random.default_rng(21)
+        s = np.sqrt(0.5)
+        rr, ri = _rand(rng, 32, 32, scale=s), _rand(rng, 32, 32, scale=s)
+        a = _rand(rng, 32, 32)
+        raw = np.asarray(model.opu_forward(rr, ri, a)).ravel()
+        q = np.asarray(
+            model.opu_forward_quantized(rr, ri, a, raw.min(), raw.max())
+        ).ravel()
+        order = np.argsort(raw)
+        assert np.all(np.diff(q[order]) >= -1e-6)

@@ -1,0 +1,109 @@
+"""Fused OPU intensity kernel vs oracle + physical invariants."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import opu, ref
+
+
+def _cplx_tm(rng, m, n):
+    """Complex Gaussian TM halves with unit per-entry variance."""
+    s = np.sqrt(0.5)
+    rr = (rng.standard_normal((m, n)) * s).astype(np.float32)
+    ri = (rng.standard_normal((m, n)) * s).astype(np.float32)
+    return rr, ri
+
+
+class TestOpuIntensity:
+    @pytest.mark.parametrize("m,n,k", [(32, 32, 32), (64, 128, 64), (96, 64, 32)])
+    def test_matches_ref(self, m, n, k):
+        rng = np.random.default_rng(0)
+        rr, ri = _cplx_tm(rng, m, n)
+        a = rng.standard_normal((n, k)).astype(np.float32)
+        out = opu.opu_intensity(rr, ri, a, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(
+            out, ref.opu_intensity(rr, ri, a), rtol=2e-4, atol=1e-3
+        )
+
+    def test_nonnegative(self):
+        """Intensities are physical: |.|^2 >= 0 regardless of tiling."""
+        rng = np.random.default_rng(1)
+        rr, ri = _cplx_tm(rng, 64, 64)
+        a = rng.standard_normal((64, 64)).astype(np.float32)
+        out = opu.opu_intensity(rr, ri, a, bm=16, bn=16, bk=16)
+        assert np.all(np.asarray(out) >= 0.0)
+
+    def test_matches_complex_modulus(self):
+        """I equals |R_complex @ a|^2 computed with numpy complex."""
+        rng = np.random.default_rng(2)
+        m, n = 48, 96
+        rr, ri = _cplx_tm(rng, m, n)
+        x = rng.integers(0, 2, size=(n, 1)).astype(np.float32)  # binary DMD frame
+        rc = rr.astype(np.complex64) + 1j * ri.astype(np.complex64)
+        expect = np.abs(rc @ x.astype(np.complex64)) ** 2
+        got = opu.opu_intensity(rr, ri, x.repeat(16, axis=1), bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got[:, :1], expect, rtol=2e-4, atol=1e-3)
+
+    def test_binary_input_scaling(self):
+        """Scaling a binary frame by c scales intensity by c^2 (coherence)."""
+        rng = np.random.default_rng(3)
+        rr, ri = _cplx_tm(rng, 32, 32)
+        x = rng.integers(0, 2, size=(32, 16)).astype(np.float32)
+        i1 = np.asarray(opu.opu_intensity(rr, ri, x, bm=16, bn=16, bk=16))
+        i3 = np.asarray(opu.opu_intensity(rr, ri, 3.0 * x, bm=16, bn=16, bk=16))
+        np.testing.assert_allclose(i3, 9.0 * i1, rtol=1e-4, atol=1e-3)
+
+    def test_block_shape_independence(self):
+        rng = np.random.default_rng(4)
+        rr, ri = _cplx_tm(rng, 64, 64)
+        a = rng.standard_normal((64, 64)).astype(np.float32)
+        o1 = opu.opu_intensity(rr, ri, a, bm=64, bn=64, bk=64)
+        o2 = opu.opu_intensity(rr, ri, a, bm=16, bn=32, bk=64)
+        np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-3)
+
+    def test_rejects_mismatched_tm_halves(self):
+        with pytest.raises(ValueError, match="must match"):
+            opu.opu_intensity(
+                np.zeros((8, 16), np.float32),
+                np.zeros((8, 8), np.float32),
+                np.zeros((16, 8), np.float32),
+            )
+
+    def test_expected_intensity_is_input_energy(self):
+        """E[|r.x|^2] = ||x||^2 for unit-variance complex rows — the
+        physical gain calibration the rust simulator relies on."""
+        rng = np.random.default_rng(5)
+        m, n = 4096, 64
+        rr, ri = _cplx_tm(rng, m, n)
+        x = rng.standard_normal((n, 1)).astype(np.float32)
+        i = np.asarray(opu.opu_intensity(rr, ri, np.repeat(x, 8, 1), bm=64, bn=64, bk=8))
+        mean = i[:, 0].mean()
+        energy = float((x ** 2).sum())
+        assert abs(mean - energy) / energy < 0.1
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        mb=st.integers(1, 3), nb=st.integers(1, 3), kb=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, mb, nb, kb, seed):
+        blk = 16
+        m, n, k = mb * blk, nb * blk, kb * blk
+        rng = np.random.default_rng(seed)
+        rr, ri = _cplx_tm(rng, m, n)
+        a = rng.standard_normal((n, k)).astype(np.float32)
+        out = opu.opu_intensity(rr, ri, a, bm=blk, bn=blk, bk=blk)
+        np.testing.assert_allclose(
+            out, ref.opu_intensity(rr, ri, a), rtol=3e-4, atol=2e-3
+        )
+
+
+class TestTrafficModel:
+    def test_fusion_saves_traffic(self):
+        fused = opu.hbm_traffic_bytes(1024, 1024, 1024, fused=True)
+        unfused = opu.hbm_traffic_bytes(1024, 1024, 1024, fused=False)
+        assert fused < unfused
+        # For square shapes the fused path moves 4/8 = half the epilogue bytes.
+        assert (unfused - fused) == 4 * 1024 * 1024 * 4

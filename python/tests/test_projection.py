@@ -1,0 +1,101 @@
+"""L1 projection kernel vs pure-jnp oracle (the CORE correctness signal)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import projection, ref
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestDenseProject:
+    @pytest.mark.parametrize("m,n,k", [(32, 32, 32), (64, 128, 96), (128, 256, 64)])
+    def test_matches_ref(self, m, n, k):
+        rng = np.random.default_rng(0)
+        r, a = _rand(rng, m, n), _rand(rng, n, k)
+        out = projection.dense_project(r, a, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(out, ref.dense_project(r, a), rtol=2e-5, atol=1e-4)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(1)
+        r, a = _rand(rng, 16, 16), _rand(rng, 16, 16)
+        out = projection.dense_project(r, a, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(out, r @ a, rtol=2e-5, atol=1e-4)
+
+    def test_block_shape_independence(self):
+        """The tiling must not change the numbers (fp32 accumulate)."""
+        rng = np.random.default_rng(2)
+        r, a = _rand(rng, 64, 64), _rand(rng, 64, 64)
+        o1 = projection.dense_project(r, a, bm=64, bn=64, bk=64)
+        o2 = projection.dense_project(r, a, bm=16, bn=16, bk=16)
+        o3 = projection.dense_project(r, a, bm=32, bn=64, bk=16)
+        np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(o1, o3, rtol=1e-5, atol=1e-4)
+
+    def test_identity_projection(self):
+        n = 32
+        eye = np.eye(n, dtype=np.float32)
+        rng = np.random.default_rng(3)
+        a = _rand(rng, n, n)
+        out = projection.dense_project(eye, a, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(out, a, rtol=1e-6, atol=1e-6)
+
+    def test_zero_input(self):
+        r = np.zeros((32, 32), np.float32)
+        a = np.ones((32, 32), np.float32)
+        out = projection.dense_project(r, a, bm=16, bn=16, bk=16)
+        assert np.all(out == 0.0)
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(ValueError, match="inner dims"):
+            projection.dense_project(
+                np.zeros((8, 16), np.float32), np.zeros((8, 8), np.float32)
+            )
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="divisible"):
+            projection.dense_project(
+                np.zeros((48, 48), np.float32),
+                np.zeros((48, 48), np.float32),
+                bm=32, bn=32, bk=32,
+            )
+
+    def test_bf16_inputs_fp32_accumulate(self):
+        rng = np.random.default_rng(4)
+        r, a = _rand(rng, 32, 64), _rand(rng, 64, 32)
+        rb = jnp.asarray(r, jnp.bfloat16)
+        ab = jnp.asarray(a, jnp.bfloat16)
+        out = projection.dense_project(rb, ab, bm=32, bn=32, bk=32)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(
+            out, np.asarray(rb, np.float32) @ np.asarray(ab, np.float32),
+            rtol=5e-2, atol=5e-1,
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mb=st.integers(1, 4), nb=st.integers(1, 4), kb=st.integers(1, 4),
+        blk=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, mb, nb, kb, blk, seed):
+        """Sweep (m, n, k) multiples of the block; kernel == oracle."""
+        m, n, k = mb * blk, nb * blk, kb * blk
+        rng = np.random.default_rng(seed)
+        r, a = _rand(rng, m, n), _rand(rng, n, k)
+        out = projection.dense_project(r, a, bm=blk, bn=blk, bk=blk)
+        np.testing.assert_allclose(out, ref.dense_project(r, a), rtol=3e-5, atol=2e-4)
+
+
+class TestVmemModel:
+    def test_default_blocks_fit_vmem(self):
+        # 3 tiles double-buffered at 128^2 fp32 = 384 KiB << 16 MiB VMEM.
+        assert projection.vmem_bytes() == 2 * 3 * 128 * 128 * 4
+        assert projection.vmem_bytes() < 16 * 1024 * 1024
+
+    def test_scales_with_block(self):
+        assert projection.vmem_bytes(bm=256) > projection.vmem_bytes(bm=128)

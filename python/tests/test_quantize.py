@@ -1,0 +1,80 @@
+"""ADC quantization kernel + bit-plane codec properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref
+
+
+class TestAdcKernel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = np.abs(rng.standard_normal((64, 64))).astype(np.float32)
+        got = quantize.adc_quantize(x, x.min(), x.max(), bits=8, bm=32, bk=32)
+        want = ref.adc_quantize(x, bits=8)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8, 12])
+    def test_error_bounded_by_half_lsb(self, bits):
+        rng = np.random.default_rng(1)
+        x = rng.uniform(0.0, 10.0, size=(32, 32)).astype(np.float32)
+        q = np.asarray(quantize.adc_quantize(x, 0.0, 10.0, bits=bits, bm=32, bk=32))
+        lsb = 10.0 / ((1 << bits) - 1)
+        assert np.max(np.abs(q - x)) <= lsb / 2 + 1e-5
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(2)
+        x = rng.uniform(0.0, 1.0, size=(32, 32)).astype(np.float32)
+        q1 = np.asarray(quantize.adc_quantize(x, 0.0, 1.0, bits=8, bm=32, bk=32))
+        q2 = np.asarray(quantize.adc_quantize(q1, 0.0, 1.0, bits=8, bm=32, bk=32))
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+    def test_clips_out_of_range(self):
+        x = np.array([[-5.0, 0.5], [1.5, 2.0]], np.float32).repeat(16, 0).repeat(16, 1)
+        q = np.asarray(quantize.adc_quantize(x, 0.0, 1.0, bits=8, bm=32, bk=32))
+        assert q.min() >= 0.0 and q.max() <= 1.0
+
+    def test_level_count(self):
+        """A fine ramp quantized at 2 bits hits exactly 4 distinct levels."""
+        x = np.linspace(0, 1, 1024, dtype=np.float32).reshape(32, 32)
+        q = np.asarray(quantize.adc_quantize(x, 0.0, 1.0, bits=2, bm=32, bk=32))
+        assert len(np.unique(q)) == 4
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 10))
+    def test_hypothesis_monotone(self, seed, bits):
+        """Quantization preserves order (monotone non-decreasing map)."""
+        rng = np.random.default_rng(seed)
+        x = np.sort(rng.uniform(0, 1, size=256).astype(np.float32)).reshape(16, 16)
+        q = np.asarray(quantize.adc_quantize(x, 0.0, 1.0, bits=bits, bm=16, bk=16))
+        assert np.all(np.diff(q.ravel()) >= -1e-6)
+
+
+class TestBitplanes:
+    @pytest.mark.parametrize("bits", [1, 4, 8])
+    def test_roundtrip_exact(self, bits):
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 1 << bits, size=(16, 16)).astype(np.float32)
+        planes = ref.bitplane_encode(x, bits=bits)
+        back = ref.bitplane_decode(planes)
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_planes_are_binary(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(0, 256, size=(8, 8)).astype(np.float32)
+        planes = np.asarray(ref.bitplane_encode(x, bits=8))
+        assert set(np.unique(planes)) <= {0.0, 1.0}
+
+    def test_plane_count(self):
+        x = np.zeros((4, 4), np.float32)
+        assert ref.bitplane_encode(x, bits=6).shape == (6, 4, 4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        bits = int(rng.integers(1, 12))
+        x = rng.integers(0, 1 << bits, size=(8, 8)).astype(np.float32)
+        back = ref.bitplane_decode(ref.bitplane_encode(x, bits=bits))
+        np.testing.assert_array_equal(np.asarray(back), x)

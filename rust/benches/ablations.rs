@@ -1,0 +1,133 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+//!
+//! A1  noise chain (ideal / realistic / harsh) x sketch quality   (claim C3)
+//! A2  DMD bit depth (2..12) x linear-projection fidelity
+//! A3  anchor length x calibration yield + fidelity
+//! A4  dynamic batching (max_wait) x service throughput
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, Policy,
+};
+use photonic_randnla::linalg::{matmul, rel_frobenius_error, Mat};
+use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice};
+use photonic_randnla::randnla::{approx_matmul_tn, exact_matmul_tn, OpuSketcher};
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::stats::Running;
+use photonic_randnla::workload::correlated_pair;
+
+fn main() {
+    ablation_noise();
+    ablation_bits();
+    ablation_anchor();
+    ablation_batching();
+}
+
+/// A1: the "negligible precision loss" claim, quantified.
+fn ablation_noise() {
+    println!("\n== A1: noise chain vs sketch quality (n=128, m=64) ==");
+    let n = 128;
+    let (a, b) = correlated_pair(n, 0.5, 1);
+    let want = exact_matmul_tn(&a, &b);
+    println!("{:<12} {:>14} {:>14}", "noise", "mean rel err", "ci95");
+    for (name, noise) in [
+        ("ideal", NoiseModel::ideal()),
+        ("realistic", NoiseModel::realistic()),
+        ("harsh", NoiseModel::harsh()),
+    ] {
+        let mut r = Running::new();
+        for t in 0..4u64 {
+            let dev = OpuDevice::new(OpuConfig::new(50 + t, 64, n).with_noise(noise.clone()));
+            let s = OpuSketcher::new(Arc::new(dev));
+            r.push(rel_frobenius_error(&want, &approx_matmul_tn(&s, &a, &b)));
+        }
+        println!("{name:<12} {:>14.5} {:>14.5}", r.mean(), r.ci95());
+    }
+}
+
+/// A2: bit-plane depth vs fidelity to the device's own linear oracle.
+fn ablation_bits() {
+    println!("\n== A2: DMD bit depth vs projection fidelity (ideal noise) ==");
+    let n = 128;
+    let mut rng = Xoshiro256::new(2);
+    let x = Mat::gaussian(n, 8, 1.0, &mut rng);
+    println!("{:<8} {:>14} {:>12}", "bits", "rel err", "frames/col");
+    for bits in [2usize, 4, 6, 8, 10, 12] {
+        let dev = OpuDevice::new(OpuConfig::ideal(9, 64, n).with_bits(bits));
+        let g = dev.effective_matrix();
+        let want = matmul(&g, &x);
+        let got = dev.project(&x);
+        println!(
+            "{bits:<8} {:>14.2e} {:>12}",
+            rel_frobenius_error(&want, &got),
+            4 * bits
+        );
+    }
+}
+
+/// A3: anchor length vs calibration health and fidelity.
+fn ablation_anchor() {
+    println!("\n== A3: anchor length vs calibration yield / fidelity ==");
+    let n = 128;
+    let mut rng = Xoshiro256::new(3);
+    let x = Mat::gaussian(n, 4, 1.0, &mut rng);
+    println!("{:<8} {:>10} {:>14}", "anchor", "yield %", "rel err");
+    for anchor in [2usize, 8, 32, 128] {
+        let cfg = OpuConfig {
+            anchor_len: anchor,
+            ..OpuConfig::new(11, 64, n).with_noise(NoiseModel::realistic())
+        };
+        let dev = OpuDevice::new(cfg);
+        let g = dev.effective_matrix();
+        let want = matmul(&g, &x);
+        let got = dev.project(&x);
+        println!(
+            "{anchor:<8} {:>10.1} {:>14.5}",
+            dev.calibration().yield_fraction() * 100.0,
+            rel_frobenius_error(&want, &got)
+        );
+    }
+}
+
+/// A4: dynamic batching vs service throughput (host arm, CPU-bound).
+fn ablation_batching() {
+    println!("\n== A4: batching deadline vs throughput (64 concurrent projections) ==");
+    println!("{:<14} {:>12} {:>16}", "max_wait_us", "jobs/s", "mean batch cols");
+    for wait_us in [0u64, 100, 500, 2000] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 8,
+            policy: Policy::ForceHost,
+            batch: BatchConfig {
+                max_wait: Duration::from_micros(wait_us),
+                max_cols: 512,
+                noise: NoiseModel::ideal(),
+                ..Default::default()
+            },
+            artifacts_dir: None,
+        })
+        .unwrap();
+        let mut rng = Xoshiro256::new(4);
+        let jobs: Vec<Mat> = (0..64).map(|_| Mat::gaussian(256, 2, 1.0, &mut rng)).collect();
+        let t0 = Instant::now();
+        let tickets: Vec<_> = jobs
+            .into_iter()
+            .map(|x| coord.submit(Job::Projection { data: x, m: 64 }))
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{wait_us:<14} {:>12.1} {:>16.1}",
+            64.0 / dt,
+            coord.metrics.mean_batch_cols()
+        );
+        coord.shutdown();
+    }
+}

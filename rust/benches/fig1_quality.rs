@@ -1,0 +1,41 @@
+//! Bench: Fig. 1 — quality series for all four RandNLA tasks.
+//!
+//! ```bash
+//! cargo bench --bench fig1_quality            # default n=192, 3 trials
+//! PHOTON_FIG1_N=256 PHOTON_FIG1_TRIALS=5 cargo bench --bench fig1_quality
+//! ```
+//!
+//! This is the figure-regeneration harness: it prints the same
+//! (compression -> relative error) series the paper plots, for the optical
+//! and digital arms, and asserts the headline "optical == numerical".
+
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::reports::{fig1, print_rows};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = fig1::Fig1Config {
+        n: env_usize("PHOTON_FIG1_N", 192),
+        trials: env_usize("PHOTON_FIG1_TRIALS", 3),
+        seed: 7,
+        noise: NoiseModel::realistic(),
+        ..Default::default()
+    };
+    println!("Fig. 1 quality sweep: n={} trials={} (realistic noise)", cfg.n, cfg.trials);
+
+    let t0 = std::time::Instant::now();
+    let rows = fig1::all_panels(&cfg);
+    print_rows("Fig. 1 — optical vs numerical quality", &rows);
+
+    match fig1::optical_matches_numerical(&rows, 0.9) {
+        Ok(()) => println!("\nheadline: optical == numerical within tolerance: OK"),
+        Err(e) => {
+            println!("\nheadline check FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("(swept in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,106 @@
+//! Bench: Fig. 2 — projection time vs dimension (measured + modeled).
+//!
+//! ```bash
+//! cargo bench --bench fig2_projection
+//! ```
+//!
+//! Series printed:
+//!   host-gemm   measured rust blocked GEMM projection (digital baseline)
+//!   pjrt        measured AOT proj_xla artifact execution (GPU-arm stand-in)
+//!   opu-sim     measured wall-clock of the full OPU simulation (for
+//!               reference only — the *simulator* is software)
+//!   model-*     the paper-constant models the router actually uses
+//! plus the crossover/OOM headline numbers.
+
+use photonic_randnla::bench::{fmt_ns, run, Config};
+use photonic_randnla::linalg::{matmul, Mat};
+use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice};
+use photonic_randnla::reports::fig2;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::runtime::PjrtEngine;
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut rng = Xoshiro256::new(1);
+    let quick = Config::quick();
+
+    // Measured: host GEMM projection at a ladder of square sizes.
+    for n in [256usize, 512, 1024] {
+        let m = n / 2;
+        let r = Mat::gaussian(m, n, 1.0, &mut rng);
+        let a = Mat::gaussian(n, n, 1.0, &mut rng);
+        rows.push(run(&format!("host-gemm n={n}"), quick, || {
+            std::hint::black_box(matmul(&r, &a));
+        }));
+    }
+
+    // Measured: PJRT artifact execution (requires `make artifacts`).
+    match PjrtEngine::start_default() {
+        Ok(engine) => {
+            let h = engine.handle();
+            for (m, n) in h.buckets("proj_xla").unwrap_or_default() {
+                if m != n / 2 {
+                    continue;
+                }
+                let r = Mat::gaussian(m, n, 1.0, &mut rng);
+                let a = Mat::gaussian(n, n, 1.0, &mut rng);
+                let _ = h.project("proj_xla", r.clone(), a.clone()); // compile
+                let hh = h.clone();
+                rows.push(run(&format!("pjrt proj_xla n={n}"), quick, move || {
+                    std::hint::black_box(
+                        hh.project("proj_xla", r.clone(), a.clone()).unwrap(),
+                    );
+                }));
+            }
+        }
+        Err(e) => eprintln!("(pjrt series skipped: {e})"),
+    }
+
+    // Measured: full OPU simulation wall-clock (one 8-bit linear project).
+    for n in [256usize, 512] {
+        let m = n / 2;
+        let dev = OpuDevice::new(
+            OpuConfig::new(7, m, n).with_noise(NoiseModel::realistic()),
+        );
+        let x = Mat::gaussian(n, 8, 1.0, &mut rng);
+        rows.push(run(&format!("opu-sim n={n} k=8"), quick, || {
+            std::hint::black_box(dev.project(&x));
+        }));
+    }
+
+    photonic_randnla::bench::report("Fig. 2 measured series", &rows);
+
+    // Modeled series + headline (the actual figure).
+    let cfg = fig2::Fig2Config::default();
+    let model = fig2::model_rows(&cfg);
+    println!("\nmodel series (ms):");
+    println!("{:>10} {:>14} {:>14}", "n", "model-opu", "model-gpu");
+    for n in &cfg.model_dims {
+        let opu = model
+            .iter()
+            .find(|r| r.arm == "model-opu" && r.x == *n as f64)
+            .unwrap();
+        let gpu = model
+            .iter()
+            .find(|r| r.arm == "model-gpu" && r.x == *n as f64)
+            .unwrap();
+        let gpu_s = if gpu.y.is_nan() { "OOM".to_string() } else { format!("{:.3}", gpu.y) };
+        println!("{:>10} {:>14.3} {:>14}", n, opu.y, gpu_s);
+    }
+    let h = fig2::headline();
+    println!(
+        "\ncrossover n ~ {} (paper ~1.2e4) | GPU OOM n ~ {} (paper ~7e4) | \
+         OPU @1e6 {:.2} ms (paper ~1.2)",
+        h.crossover_dim, h.gpu_oom_dim, h.opu_ms_at_1m
+    );
+
+    println!("\nCSV");
+    println!("name,iters,mean_ns,p50_ns,p99_ns,min_ns,max_ns");
+    for r in &rows {
+        println!("{}", r.csv_row());
+    }
+    println!(
+        "\nfastest measured digital projection: {}",
+        fmt_ns(rows.iter().map(|r| r.mean_ns).fold(f64::INFINITY, f64::min))
+    );
+}

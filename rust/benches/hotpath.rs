@@ -1,0 +1,82 @@
+//! Bench: hot-path microbenchmarks — the §Perf baseline and regression
+//! guard for every layer's critical loop.
+//!
+//! ```bash
+//! cargo bench --bench hotpath
+//! ```
+
+use photonic_randnla::bench::{report, run, Config};
+use photonic_randnla::linalg::{self, Mat};
+use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice, TransmissionMatrix};
+use photonic_randnla::rng::{philox, Philox4x32, Xoshiro256};
+
+fn main() {
+    let mut rows = Vec::new();
+    let cfg = Config::default();
+    let quick = Config::quick();
+    let mut rng = Xoshiro256::new(1);
+
+    // RNG substrate.
+    let p = Philox4x32::new(7);
+    rows.push(run("philox 1M normals", cfg, || {
+        let mut acc = 0.0;
+        for i in 0..250_000u64 {
+            acc += philox::block_to_normals(p.block_at(i, 0))[0];
+        }
+        std::hint::black_box(acc);
+    }));
+    let mut xr = Xoshiro256::new(3);
+    rows.push(run("xoshiro 1M normals", cfg, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += xr.next_normal();
+        }
+        std::hint::black_box(acc);
+    }));
+
+    // TM streaming field (the OPU inner loop).
+    let tm = TransmissionMatrix::new(5, 256, 512);
+    let x = Mat::gaussian(512, 16, 1.0, &mut rng);
+    rows.push(run("tm.field 256x512 k=16", quick, || {
+        std::hint::black_box(tm.field(&x));
+    }));
+
+    // Full OPU projection pipeline (encode + 32 exposures + recombine).
+    let dev = OpuDevice::new(OpuConfig::new(7, 128, 256).with_noise(NoiseModel::realistic()));
+    let xd = Mat::gaussian(256, 8, 1.0, &mut rng);
+    rows.push(run("opu.project 128x256 k=8", quick, || {
+        std::hint::black_box(dev.project(&xd));
+    }));
+
+    // Exact-GEMM substrate.
+    for n in [128usize, 256, 512] {
+        let a = Mat::gaussian(n, n, 1.0, &mut rng);
+        let b = Mat::gaussian(n, n, 1.0, &mut rng);
+        rows.push(run(&format!("matmul {n}^3"), quick, || {
+            std::hint::black_box(linalg::matmul(&a, &b));
+        }));
+    }
+
+    // Factorizations on compressed-domain sizes.
+    let tall = Mat::gaussian(512, 64, 1.0, &mut rng);
+    rows.push(run("thin_qr 512x64", quick, || {
+        std::hint::black_box(linalg::thin_qr(&tall));
+    }));
+    let small = Mat::gaussian(96, 96, 1.0, &mut rng);
+    rows.push(run("jacobi_svd 96x96", quick, || {
+        std::hint::black_box(linalg::svd(&small));
+    }));
+
+    // Bit-plane codec.
+    let frames = Mat::gaussian(1024, 16, 1.0, &mut rng);
+    rows.push(run("bitplane encode 1024x16 @8b", cfg, || {
+        std::hint::black_box(photonic_randnla::opu::encoding::encode(&frames, 8));
+    }));
+
+    report("hot paths", &rows);
+    println!("\nCSV");
+    println!("name,iters,mean_ns,p50_ns,p99_ns,min_ns,max_ns");
+    for r in &rows {
+        println!("{}", r.csv_row());
+    }
+}

@@ -1,0 +1,177 @@
+//! Micro-benchmark harness (no criterion in the offline image).
+//!
+//! Adaptive warmup + timed runs, robust summary (mean / p50 / p99), and a
+//! plain-text + CSV reporter shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::{percentile, Running};
+
+/// One benchmark's timing summary.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// One CSV row: name,iters,mean_ns,p50_ns,p99_ns,min_ns,max_ns.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{:.1},{:.1},{:.1},{:.1}",
+            self.name, self.iters, self.mean_ns, self.p50_ns, self.p99_ns, self.min_ns,
+            self.max_ns
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Config {
+    /// Smaller budget for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Time `f` under `cfg`; `f` must perform one full operation per call.
+pub fn run<F: FnMut()>(name: &str, cfg: Config, mut f: F) -> Summary {
+    // Warmup.
+    let w0 = Instant::now();
+    while w0.elapsed() < cfg.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples: Vec<f64> = Vec::new();
+    let mut stats = Running::new();
+    let m0 = Instant::now();
+    while (m0.elapsed() < cfg.measure || samples.len() < cfg.min_iters as usize)
+        && samples.len() < cfg.max_iters as usize
+    {
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos() as f64;
+        samples.push(ns);
+        stats.push(ns);
+    }
+    Summary {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean_ns: stats.mean(),
+        p50_ns: percentile(&mut samples.clone(), 50.0),
+        p99_ns: percentile(&mut samples, 99.0),
+        min_ns: stats.min(),
+        max_ns: stats.max(),
+    }
+}
+
+/// Pretty-print a set of summaries as an aligned table.
+pub fn report(title: &str, rows: &[Summary]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p99"
+    );
+    for r in rows {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12}",
+            r.name,
+            r.iters,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns)
+        );
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = run(
+            "spin",
+            Config {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                min_iters: 3,
+                max_iters: 1000,
+            },
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+        );
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p99_ns + 1.0);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn csv_has_seven_fields() {
+        let s = Summary {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1.0,
+            p50_ns: 1.0,
+            p99_ns: 1.0,
+            min_ns: 1.0,
+            max_ns: 1.0,
+        };
+        assert_eq!(s.csv_row().split(',').count(), 7);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal declarative CLI parser (no clap in the offline image).
+//!
+//! Supports `photon <subcommand> [--flag value] [--switch]` with typed
+//! accessors and automatic usage text.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals + `--key value` options + `--switch`es.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (excluding the program / subcommand names).
+    /// Flags of known switches take no value; everything else `--k v`.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| format!("--{name} needs a value"))?;
+                    if val.starts_with("--") {
+                        return Err(format!("--{name} needs a value, got {val}"));
+                    }
+                    out.options.insert(name.to_string(), val.clone());
+                    i += 2;
+                }
+            } else {
+                out.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list of integers.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{key} expects comma-separated ints, got {v}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_switches() {
+        let a = Args::parse(&sv(&["--n", "128", "--verbose", "pos1"]), &["verbose"]).unwrap();
+        assert_eq!(a.get("n"), Some("128"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&sv(&["--n", "42", "--rho", "0.5", "--list", "1,2,3"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("rho", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize_list("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--n"]), &[]).is_err());
+        assert!(Args::parse(&sv(&["--n", "--m"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let a = Args::parse(&sv(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Coordinator metrics: lock-free counters + a latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::request::Device;
+
+/// Exponential latency histogram (microseconds, powers of two).
+const BUCKETS: usize = 32;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_cols: AtomicU64,
+    pub opu_jobs: AtomicU64,
+    pub pjrt_jobs: AtomicU64,
+    pub host_jobs: AtomicU64,
+    latency_hist: LatencyHist,
+}
+
+#[derive(Default)]
+struct LatencyHist {
+    buckets: [AtomicU64; BUCKETS],
+    samples: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_device(&self, d: Device) {
+        match d {
+            Device::Opu => &self.opu_jobs,
+            Device::Pjrt => &self.pjrt_jobs,
+            Device::Host => &self.host_jobs,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.latency_hist.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut s = self.latency_hist.samples.lock().unwrap();
+        if s.len() < 100_000 {
+            s.push(us);
+        }
+    }
+
+    /// Latency percentile over retained samples (None if empty).
+    pub fn latency_percentile_us(&self, p: f64) -> Option<f64> {
+        let s = self.latency_hist.samples.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = s.iter().map(|&x| x as f64).collect();
+        Some(crate::stats::percentile(&mut v, p))
+    }
+
+    pub fn device_counts(&self) -> (u64, u64, u64) {
+        (
+            self.opu_jobs.load(Ordering::Relaxed),
+            self.pjrt_jobs.load(Ordering::Relaxed),
+            self.host_jobs.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Mean columns per dispatched batch (batching effectiveness).
+    pub fn mean_batch_cols(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_cols.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// One-line text report.
+    pub fn report(&self) -> String {
+        let (opu, pjrt, host) = self.device_counts();
+        format!(
+            "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
+             devices: opu={} pjrt={} host={} p50={}us p99={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_cols(),
+            opu,
+            pjrt,
+            host,
+            self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
+            self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_work() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_device(Device::Opu);
+        m.record_device(Device::Opu);
+        m.record_device(Device::Pjrt);
+        assert_eq!(m.device_counts(), (2, 1, 0));
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 1000] {
+            m.record_latency_us(us);
+        }
+        let p50 = m.latency_percentile_us(50.0).unwrap();
+        assert!((p50 - 300.0).abs() < 1.0, "{p50}");
+        assert!(m.latency_percentile_us(100.0).unwrap() >= 1000.0);
+    }
+
+    #[test]
+    fn batch_means() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_cols(), 0.0);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_cols.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_cols(), 5.0);
+    }
+
+    #[test]
+    fn report_contains_fields() {
+        let m = Metrics::new();
+        m.record_latency_us(50);
+        let r = m.report();
+        assert!(r.contains("submitted="));
+        assert!(r.contains("p99="));
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator (the paper's *system* contribution, serving-shaped):
+//!
+//! ```text
+//!  Job ──▶ Coordinator (worker pool) ──▶ ProjectionService (batcher)
+//!                 │                            │ merge columns, route
+//!      compressed-domain host algebra          ▼
+//!      (QR/SVD/trace on sketches)     ┌──── Router ────┐
+//!                                     ▼        ▼       ▼
+//!                                   OpuSim   PJRT    HostCpu
+//! ```
+//!
+//! - [`router`] — the OPU/GPU offload policy (Fig. 2's decision boundary);
+//! - [`batcher`] — dynamic batching of projection requests (the
+//!   throughput lever; projection is column-wise so merging is exact);
+//! - [`server`] — worker pool decomposing RandNLA jobs;
+//! - [`metrics`] — counters + latency percentiles;
+//! - [`request`] — job/response types.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchConfig, ProjectionService};
+pub use metrics::Metrics;
+pub use request::{Device, Job, JobResponse, Payload, Ticket};
+pub use router::{Availability, Policy, Route, Router};
+pub use server::{Coordinator, CoordinatorConfig};

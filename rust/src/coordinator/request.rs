@@ -1,0 +1,170 @@
+//! Request/response types of the coordination layer.
+
+use std::time::Instant;
+
+use crate::linalg::Mat;
+
+/// Which device executed the randomization step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    /// Simulated photonic co-processor.
+    Opu,
+    /// AOT-compiled XLA projection on the PJRT client ("GPU" arm).
+    Pjrt,
+    /// Host-CPU digital fallback.
+    Host,
+}
+
+impl Device {
+    pub fn name(self) -> &'static str {
+        match self {
+            Device::Opu => "opu",
+            Device::Pjrt => "pjrt",
+            Device::Host => "host",
+        }
+    }
+}
+
+/// A RandNLA job submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub enum Job {
+    /// Raw Gaussian projection of (n x k) data to m dims.
+    Projection { data: Mat, m: usize },
+    /// Approximate A^T B at sketch size m.
+    ApproxMatmul { a: Mat, b: Mat, m: usize },
+    /// Hutchinson trace at sketch size m (A square).
+    Trace { a: Mat, m: usize },
+    /// Triangle estimate of an adjacency matrix at sketch size m.
+    Triangles { adjacency: Mat, m: usize },
+    /// Randomized SVD: rank + oversampling + power iterations.
+    RandSvd { a: Mat, rank: usize, oversample: usize, power_iters: usize },
+}
+
+impl Job {
+    /// Input dimension n contracted by the randomization step.
+    pub fn input_dim(&self) -> usize {
+        match self {
+            Job::Projection { data, .. } => data.rows,
+            Job::ApproxMatmul { a, .. } => a.rows,
+            Job::Trace { a, .. } => a.rows,
+            Job::Triangles { adjacency, .. } => adjacency.rows,
+            Job::RandSvd { a, .. } => a.cols,
+        }
+    }
+
+    /// Sketch dimension m the job asks for.
+    pub fn sketch_dim(&self) -> usize {
+        match self {
+            Job::Projection { m, .. }
+            | Job::ApproxMatmul { m, .. }
+            | Job::Trace { m, .. }
+            | Job::Triangles { m, .. } => *m,
+            Job::RandSvd { rank, oversample, .. } => rank + oversample,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Job::Projection { .. } => "projection",
+            Job::ApproxMatmul { .. } => "approx_matmul",
+            Job::Trace { .. } => "trace",
+            Job::Triangles { .. } => "triangles",
+            Job::RandSvd { .. } => "randsvd",
+        }
+    }
+}
+
+/// Result payload, matching the job kind.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Matrix(Mat),
+    Scalar(f64),
+    Svd { u: Mat, s: Vec<f64>, vt: Mat },
+}
+
+impl Payload {
+    pub fn matrix(&self) -> Option<&Mat> {
+        match self {
+            Payload::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn scalar(&self) -> Option<f64> {
+        match self {
+            Payload::Scalar(s) => Some(*s),
+            _ => None,
+        }
+    }
+}
+
+/// Completed-job response.
+#[derive(Clone, Debug)]
+pub struct JobResponse {
+    pub id: u64,
+    pub kind: &'static str,
+    pub payload: Payload,
+    /// Device that performed the randomization step.
+    pub device: Device,
+    /// End-to-end wall latency (queue + compute), microseconds.
+    pub latency_us: u64,
+    /// How many projection columns were batched with this job's frames.
+    pub batched_cols: usize,
+}
+
+/// In-flight handle for a submitted job.
+pub struct Ticket {
+    pub id: u64,
+    pub(crate) rx: std::sync::mpsc::Receiver<anyhow::Result<JobResponse>>,
+    pub(crate) submitted: Instant,
+}
+
+impl Ticket {
+    /// Block until the job completes.
+    pub fn wait(self) -> anyhow::Result<JobResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped job {}", self.id))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<anyhow::Result<JobResponse>> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.submitted.elapsed().as_micros() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_extracted_per_kind() {
+        let a = Mat::zeros(16, 16);
+        assert_eq!(Job::Trace { a: a.clone(), m: 4 }.input_dim(), 16);
+        assert_eq!(Job::Trace { a: a.clone(), m: 4 }.sketch_dim(), 4);
+        let j = Job::RandSvd { a, rank: 8, oversample: 4, power_iters: 1 };
+        assert_eq!(j.sketch_dim(), 12);
+        assert_eq!(j.kind(), "randsvd");
+    }
+
+    #[test]
+    fn payload_accessors() {
+        let p = Payload::Scalar(4.0);
+        assert_eq!(p.scalar(), Some(4.0));
+        assert!(p.matrix().is_none());
+        let m = Payload::Matrix(Mat::eye(2));
+        assert!(m.matrix().is_some());
+        assert!(m.scalar().is_none());
+    }
+
+    #[test]
+    fn device_names() {
+        assert_eq!(Device::Opu.name(), "opu");
+        assert_eq!(Device::Pjrt.name(), "pjrt");
+        assert_eq!(Device::Host.name(), "host");
+    }
+}

@@ -1,0 +1,383 @@
+//! The coordinator: worker pool decomposing RandNLA jobs into projection
+//! batches + compressed-domain host algebra.
+//!
+//! Submit a [`Job`], get a [`Ticket`]; workers pull jobs, funnel every
+//! randomization through the shared [`ProjectionService`] (where dynamic
+//! batching and device routing happen), and finish the small compressed
+//! computations on the host — exactly the paper's hybrid pipeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{BatchConfig, ProjectionService};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Device, Job, JobResponse, Payload, Ticket};
+use crate::coordinator::router::{Availability, Policy, Router};
+use crate::linalg::{self, matmul_tn, Mat};
+use crate::runtime::{PjrtEngine, PjrtHandle};
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub policy: Policy,
+    pub batch: BatchConfig,
+    /// Attach a PJRT engine over this artifacts dir (None = no PJRT arm).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            policy: Policy::Auto,
+            batch: BatchConfig::default(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+struct QueuedJob {
+    id: u64,
+    job: Job,
+    resp: mpsc::Sender<Result<JobResponse>>,
+    submitted: Instant,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    job_tx: Option<mpsc::Sender<QueuedJob>>,
+    workers: Vec<JoinHandle<()>>,
+    svc: ProjectionService,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    // Keep the engine alive for the coordinator's lifetime.
+    _engine: Option<PjrtEngine>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+
+        let (engine, handle, pjrt_max): (Option<PjrtEngine>, Option<PjrtHandle>, (usize, usize)) =
+            match &cfg.artifacts_dir {
+                Some(dir) => {
+                    let engine = PjrtEngine::start(dir.clone())?;
+                    let h = engine.handle();
+                    let max = h
+                        .buckets("proj_xla")?
+                        .into_iter()
+                        .max_by_key(|&(m, n)| m * n)
+                        .unwrap_or((0, 0));
+                    (Some(engine), Some(h), max)
+                }
+                None => (None, None, (0, 0)),
+            };
+
+        let avail = Availability {
+            opu: true,
+            pjrt: handle.is_some(),
+            pjrt_max,
+            ..Availability::default()
+        };
+        let router = Router::new(cfg.policy, avail);
+        let (svc, _batcher_join) =
+            ProjectionService::start(cfg.batch.clone(), router, handle, metrics.clone());
+
+        let (job_tx, job_rx) = mpsc::channel::<QueuedJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers.max(1) {
+            let rx = job_rx.clone();
+            let svc = svc.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || worker_loop(rx, svc, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Ok(Self {
+            job_tx: Some(job_tx),
+            workers,
+            svc,
+            metrics,
+            next_id: AtomicU64::new(1),
+            _engine: engine,
+        })
+    }
+
+    /// Submit a job; returns an awaitable ticket.
+    pub fn submit(&self, job: Job) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let q = QueuedJob { id, job, resp: tx, submitted: Instant::now() };
+        self.job_tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(q)
+            .expect("job queue alive");
+        Ticket { id, rx, submitted: Instant::now() }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn run(&self, job: Job) -> Result<JobResponse> {
+        self.submit(job).wait()
+    }
+
+    /// Direct access to the projection service (benches).
+    pub fn projection_service(&self) -> ProjectionService {
+        self.svc.clone()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.job_tx.take(); // closes the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<QueuedJob>>>,
+    svc: ProjectionService,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let queued = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(q) = queued else { return };
+        let result = execute_job(&svc, &q.job);
+        match result {
+            Ok((payload, device, batched_cols)) => {
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let latency_us = q.submitted.elapsed().as_micros() as u64;
+                metrics.record_latency_us(latency_us);
+                let _ = q.resp.send(Ok(JobResponse {
+                    id: q.id,
+                    kind: q.job.kind(),
+                    payload,
+                    device,
+                    latency_us,
+                    batched_cols,
+                }));
+            }
+            Err(e) => {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = q.resp.send(Err(e));
+            }
+        }
+    }
+}
+
+/// Decompose one job into projections + host algebra.
+fn execute_job(svc: &ProjectionService, job: &Job) -> Result<(Payload, Device, usize)> {
+    match job {
+        Job::Projection { data, m } => {
+            let r = svc.project(data.clone(), *m)?;
+            Ok((Payload::Matrix(r.result), r.device, r.batch_cols))
+        }
+        Job::ApproxMatmul { a, b, m } => {
+            // One fused projection of [A | B] guarantees a shared sketch.
+            anyhow::ensure!(a.rows == b.rows, "A and B row mismatch");
+            let n = a.rows;
+            let mut ab = Mat::zeros(n, a.cols + b.cols);
+            for i in 0..n {
+                ab.row_mut(i)[..a.cols].copy_from_slice(a.row(i));
+                ab.row_mut(i)[a.cols..].copy_from_slice(b.row(i));
+            }
+            let r = svc.project(ab, *m)?;
+            let sa = r.result.crop(*m, a.cols);
+            let sb = Mat::from_fn(*m, b.cols, |i, j| r.result.at(i, a.cols + j));
+            let approx = matmul_tn(&sa, &sb).scale(1.0 / *m as f64);
+            Ok((Payload::Matrix(approx), r.device, r.batch_cols))
+        }
+        Job::Trace { a, m } => {
+            let (b, device, cols) = symmetric_sketch_via(svc, a, *m)?;
+            Ok((Payload::Scalar(b.trace()), device, cols))
+        }
+        Job::Triangles { adjacency, m } => {
+            let (b, device, cols) = symmetric_sketch_via(svc, adjacency, *m)?;
+            let t = linalg::trace_cubed(&b) / 6.0;
+            Ok((Payload::Scalar(t), device, cols))
+        }
+        Job::RandSvd { a, rank, oversample, power_iters } => {
+            let l = rank + oversample;
+            // Randomization step: Y^T = G A^T through the service.
+            let r = svc.project(a.transpose(), l)?;
+            let y = r.result.transpose();
+            let mut q = linalg::orthonormalize(&y);
+            for _ in 0..*power_iters {
+                let z = matmul_tn(a, &q);
+                let qz = linalg::orthonormalize(&z);
+                let w = linalg::matmul(a, &qz);
+                q = linalg::orthonormalize(&w);
+            }
+            let b = matmul_tn(&q, a);
+            let linalg::Svd { u: ub, s, vt } = linalg::svd(&b);
+            let u = linalg::matmul(&q, &ub);
+            let k = (*rank).min(s.len());
+            Ok((
+                Payload::Svd {
+                    u: u.crop(u.rows, k),
+                    s: s[..k].to_vec(),
+                    vt: vt.crop(k, vt.cols),
+                },
+                r.device,
+                r.batch_cols,
+            ))
+        }
+    }
+}
+
+/// B = (G A G^T)/m with both passes through the service (same (n, m)
+/// signature => same G, see DeviceExecutor::dim_seed).
+fn symmetric_sketch_via(
+    svc: &ProjectionService,
+    a: &Mat,
+    m: usize,
+) -> Result<(Mat, Device, usize)> {
+    anyhow::ensure!(a.is_square(), "symmetric sketch needs square input");
+    let s = svc.project(a.clone(), m)?;
+    let gst = svc.project(s.result.transpose(), m)?;
+    Ok((
+        gst.result.transpose().scale(1.0 / m as f64),
+        s.device,
+        s.batch_cols.max(gst.batch_cols),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opu::NoiseModel;
+    use crate::rng::Xoshiro256;
+    use crate::workload::psd_matrix;
+
+    fn host_coordinator(workers: usize) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            workers,
+            policy: Policy::ForceHost,
+            batch: BatchConfig {
+                noise: NoiseModel::ideal(),
+                max_wait: std::time::Duration::from_micros(50),
+                ..Default::default()
+            },
+            artifacts_dir: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn projection_roundtrip() {
+        let c = host_coordinator(2);
+        let mut rng = Xoshiro256::new(1);
+        let x = Mat::gaussian(32, 4, 1.0, &mut rng);
+        let resp = c.run(Job::Projection { data: x, m: 8 }).unwrap();
+        assert_eq!(resp.kind, "projection");
+        let m = resp.payload.matrix().unwrap();
+        assert_eq!((m.rows, m.cols), (8, 4));
+        c.shutdown();
+    }
+
+    #[test]
+    fn trace_job_accurate() {
+        let c = host_coordinator(2);
+        let a = psd_matrix(48, 96, 2);
+        let truth = a.trace();
+        // Average several estimates (single-sketch variance is large).
+        let mut acc = 0.0;
+        let trials = 24;
+        for _ in 0..trials {
+            // Same (n, m) -> same G; to refresh G, use different m values.
+            acc += c
+                .run(Job::Trace { a: a.clone(), m: 40 })
+                .unwrap()
+                .payload
+                .scalar()
+                .unwrap();
+        }
+        // Deterministic G => same value each time; accuracy from m = 40.
+        let mean = acc / trials as f64;
+        let rel = (mean - truth).abs() / truth;
+        assert!(rel < 0.5, "trace rel err {rel}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn approx_matmul_job_reasonable() {
+        let c = host_coordinator(2);
+        let mut rng = Xoshiro256::new(3);
+        let a = Mat::gaussian(64, 8, 1.0, &mut rng);
+        let b = Mat::gaussian(64, 8, 1.0, &mut rng);
+        let want = matmul_tn(&a, &b);
+        let resp = c
+            .run(Job::ApproxMatmul { a, b, m: 256 })
+            .unwrap();
+        let got = resp.payload.matrix().unwrap();
+        let rel = crate::linalg::rel_frobenius_error(&want, got);
+        assert!(rel < 0.5, "approx matmul rel {rel}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn randsvd_job_recovers_low_rank() {
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = host_coordinator(2);
+        let a = matrix_with_spectrum(48, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 4);
+        let resp = c
+            .run(Job::RandSvd { a: a.clone(), rank: 6, oversample: 6, power_iters: 2 })
+            .unwrap();
+        match resp.payload {
+            Payload::Svd { u, s, vt } => {
+                let rec = linalg::reconstruct(&u, &s, &vt);
+                let rel = crate::linalg::rel_frobenius_error(&a, &rec);
+                assert!(rel < 0.02, "randsvd rel {rel}");
+            }
+            _ => panic!("wrong payload"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_jobs_all_complete() {
+        let c = host_coordinator(4);
+        let mut rng = Xoshiro256::new(5);
+        let tickets: Vec<Ticket> = (0..16)
+            .map(|_| {
+                let x = Mat::gaussian(24, 2, 1.0, &mut rng);
+                c.submit(Job::Projection { data: x, m: 8 })
+            })
+            .collect();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.kind, "projection");
+        }
+        assert_eq!(
+            c.metrics.completed.load(Ordering::Relaxed),
+            16
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let c = host_coordinator(1);
+        let mut rng = Xoshiro256::new(6);
+        let x = Mat::gaussian(16, 1, 1.0, &mut rng);
+        let _ = c.run(Job::Projection { data: x, m: 4 }).unwrap();
+        assert!(c.metrics.latency_percentile_us(50.0).is_some());
+        let report = c.metrics.report();
+        assert!(report.contains("completed=1"), "{report}");
+        c.shutdown();
+    }
+}

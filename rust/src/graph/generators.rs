@@ -1,0 +1,145 @@
+//! Random-graph generators for the triangle-counting evaluation.
+
+use super::Graph;
+use crate::rng::Xoshiro256;
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    assert!((0.0..=1.0).contains(&p), "p out of range");
+    let mut rng = Xoshiro256::new(seed);
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.next_f64() < p {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment with `m_attach` edges per new
+/// node — produces the heavy-tailed degree distributions of real complex
+/// networks (the paper's motivating application, Eubank et al.).
+pub fn barabasi_albert(n: usize, m_attach: usize, seed: u64) -> Graph {
+    assert!(m_attach >= 1 && n > m_attach, "need n > m_attach >= 1");
+    let mut rng = Xoshiro256::new(seed);
+    let mut g = Graph::new(n);
+    // Seed clique of m_attach + 1 nodes.
+    for u in 0..=m_attach {
+        for v in (u + 1)..=m_attach {
+            g.add_edge(u, v);
+        }
+    }
+    // Repeated-endpoint list implements preferential attachment.
+    let mut endpoints: Vec<u32> = Vec::new();
+    for (u, nbrs) in g.adj.iter().enumerate() {
+        for _ in 0..nbrs.len() {
+            endpoints.push(u as u32);
+        }
+    }
+    for u in (m_attach + 1)..n {
+        let mut targets = Vec::with_capacity(m_attach);
+        let mut guard = 0;
+        while targets.len() < m_attach && guard < 100 * m_attach {
+            guard += 1;
+            let t = endpoints[rng.next_below(endpoints.len() as u64) as usize] as usize;
+            if t != u && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            g.add_edge(u, t);
+            endpoints.push(u as u32);
+            endpoints.push(t as u32);
+        }
+    }
+    g
+}
+
+/// Two-community stochastic block model: within-community prob `p_in`,
+/// across `p_out`.
+pub fn sbm_two(n: usize, p_in: f64, p_out: f64, seed: u64) -> Graph {
+    let mut rng = Xoshiro256::new(seed);
+    let mut g = Graph::new(n);
+    let half = n / 2;
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let same = (u < half) == (v < half);
+            let p = if same { p_in } else { p_out };
+            if rng.next_f64() < p {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_edge_count_concentrates() {
+        let n = 200;
+        let p = 0.1;
+        let g = erdos_renyi(n, p, 42);
+        let expect = p * (n * (n - 1) / 2) as f64;
+        let got = g.m() as f64;
+        assert!((got - expect).abs() < 4.0 * expect.sqrt(), "{got} vs {expect}");
+    }
+
+    #[test]
+    fn er_deterministic_by_seed() {
+        let a = erdos_renyi(50, 0.2, 7);
+        let b = erdos_renyi(50, 0.2, 7);
+        assert_eq!(a.m(), b.m());
+        assert_eq!(a.adj, b.adj);
+        let c = erdos_renyi(50, 0.2, 8);
+        assert_ne!(a.adj, c.adj);
+    }
+
+    #[test]
+    fn er_triangle_count_near_expectation() {
+        // E[T] = C(n,3) p^3.
+        let n = 150;
+        let p = 0.15;
+        let mut total = 0.0;
+        let trials = 5;
+        for s in 0..trials {
+            total += erdos_renyi(n, p, s) .exact_triangles() as f64;
+        }
+        let mean = total / trials as f64;
+        let expect = (n * (n - 1) * (n - 2) / 6) as f64 * p * p * p;
+        assert!((mean - expect).abs() / expect < 0.25, "{mean} vs {expect}");
+    }
+
+    #[test]
+    fn ba_grows_and_connects() {
+        let g = barabasi_albert(300, 3, 1);
+        assert!(g.m() >= 3 * (300 - 4));
+        // Hubs exist: max degree far above m_attach.
+        let dmax = (0..300).map(|u| g.degree(u)).max().unwrap();
+        assert!(dmax > 15, "no hub: {dmax}");
+    }
+
+    #[test]
+    fn sbm_community_structure() {
+        let g = sbm_two(200, 0.2, 0.01, 3);
+        let half = 100;
+        let (mut within, mut across) = (0usize, 0usize);
+        for u in 0..200 {
+            for &v in &g.adj[u] {
+                let v = v as usize;
+                if v > u {
+                    if (u < half) == (v < half) {
+                        within += 1;
+                    } else {
+                        across += 1;
+                    }
+                }
+            }
+        }
+        assert!(within > 5 * across, "within {within}, across {across}");
+    }
+}

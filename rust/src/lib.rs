@@ -1,0 +1,32 @@
+//! # photonic-randnla
+//!
+//! Reproduction of *"Photonic co-processors in HPC: using LightOn OPUs for
+//! Randomized Numerical Linear Algebra"* (LightOn, 2021) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — coordinator: request router with an OPU/GPU
+//!   offload policy, dynamic batcher, device manager, RandNLA drivers.
+//! - **L2/L1 (python/compile)** — JAX graphs + Pallas kernels, AOT-lowered
+//!   to HLO text executed here via PJRT (`runtime`). Python never runs on
+//!   the request path.
+//!
+//! Substrates (all built in-tree; the offline image vendors only the `xla`
+//! crate): counter-based RNG, dense linear algebra, graphs, workload
+//! generators, performance models, a micro-bench harness, and a
+//! property-test runner.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod linalg;
+pub mod opu;
+pub mod parallel;
+pub mod perfmodel;
+pub mod randnla;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod workload;
+pub mod reports;

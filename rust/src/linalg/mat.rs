@@ -1,0 +1,255 @@
+//! Dense row-major matrix — the substrate for every exact baseline.
+
+use crate::rng::Xoshiro256;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |v| v.len());
+        assert!(rows.iter().all(|v| v.len() == c), "ragged rows");
+        Self { rows: r, cols: c, data: rows.concat() }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// iid N(0, sigma^2) entries from the given stream.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f64, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.next_normal() * sigma;
+        }
+        m
+    }
+
+    /// iid Rademacher +-1 entries.
+    pub fn rademacher(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.next_sign();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).sum()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Symmetrize: (A + A^T)/2.
+    pub fn symmetrized(&self) -> Mat {
+        assert!(self.is_square());
+        Mat::from_fn(self.rows, self.cols, |i, j| 0.5 * (self.at(i, j) + self.at(j, i)))
+    }
+
+    /// View as f32 (row-major) for the PJRT / OPU f32 pipelines.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+    }
+
+    /// Extract the leading (r, c) submatrix (used to crop padded outputs).
+    pub fn crop(&self, r: usize, c: usize) -> Mat {
+        assert!(r <= self.rows && c <= self.cols);
+        Mat::from_fn(r, c, |i, j| self.at(i, j))
+    }
+
+    /// Copy of columns [j0, j0 + k).
+    pub fn col_slice(&self, j0: usize, k: usize) -> Mat {
+        assert!(j0 + k <= self.cols);
+        Mat::from_fn(self.rows, k, |i, j| self.at(i, j0 + j))
+    }
+
+    /// Zero-pad to (r, c) (used to fit shape buckets).
+    pub fn pad(&self, r: usize, c: usize) -> Mat {
+        assert!(r >= self.rows && c >= self.cols);
+        let mut out = Mat::zeros(r, c);
+        for i in 0..self.rows {
+            out.data[i * c..i * c + self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(1);
+        let m = Mat::gaussian(13, 37, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
+        let t = m.transpose();
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(m.at(i, j), t.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn eye_trace() {
+        assert_eq!(Mat::eye(5).trace(), 5.0);
+    }
+
+    #[test]
+    fn pad_crop_roundtrip() {
+        let mut rng = Xoshiro256::new(2);
+        let m = Mat::gaussian(5, 7, 1.0, &mut rng);
+        let p = m.pad(8, 16);
+        assert_eq!(p.rows, 8);
+        assert_eq!(p.at(6, 3), 0.0);
+        assert_eq!(p.crop(5, 7), m);
+    }
+
+    #[test]
+    fn f32_roundtrip_close() {
+        let mut rng = Xoshiro256::new(3);
+        let m = Mat::gaussian(4, 4, 1.0, &mut rng);
+        let back = Mat::from_f32(4, 4, &m.to_f32());
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn symmetrized_is_symmetric() {
+        let mut rng = Xoshiro256::new(4);
+        let s = Mat::gaussian(6, 6, 1.0, &mut rng).symmetrized();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(s.at(i, j), s.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256::new(5);
+        let m = Mat::gaussian(200, 200, 2.0, &mut rng);
+        let mean: f64 = m.data.iter().sum::<f64>() / m.data.len() as f64;
+        let var: f64 =
+            m.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m.data.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Blocked, parallel dense matmul — the exact-baseline GEMM.
+//!
+//! The "GPU" in the paper is a P100 running cuBLAS; our exact substrate is
+//! this kernel. It is a straightforward L1-blocked ikj loop parallelised
+//! over row bands with [`crate::parallel::par_chunks_mut`] — good enough
+//! to run every evaluation exactly (the perf-critical digital projection
+//! path goes through PJRT/XLA instead, see rust/src/runtime/).
+
+use super::mat::Mat;
+use crate::parallel;
+
+/// Block edge for the cache-blocked kernel.
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// Rows per parallel band: small enough to keep every core busy, large
+/// enough to amortise task overhead (§Perf: fixed MC=64 left half the
+/// cores idle at n=512).
+fn band_rows(m: usize) -> usize {
+    let t = parallel::num_threads();
+    (m / (4 * t).max(1)).clamp(4, MC).max(1)
+}
+
+/// C = A @ B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    // Parallelise over row bands of C; each band is owned by one task.
+    parallel::par_chunks_mut(&mut c.data, band_rows(m) * n, |start, band| {
+        let i0 = start / n;
+        let rows_in_band = band.len() / n;
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for ii in 0..rows_in_band {
+                let i = i0 + ii;
+                let arow = a.row(i);
+                let crow = &mut band[ii * n..(ii + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    // Inner axpy: autovectorises to AVX on release builds.
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A^T @ B without materialising A^T.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "inner dims (tn)");
+    let (m, n) = (a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let k = a.rows;
+    parallel::par_chunks_mut(&mut c.data, band_rows(m) * n, |start, band| {
+        let i0 = start / n;
+        let rows_in_band = band.len() / n;
+        for kk in 0..k {
+            let brow = b.row(kk);
+            let arow = a.row(kk);
+            for ii in 0..rows_in_band {
+                let aki = arow[i0 + ii];
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = &mut band[ii * n..(ii + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aki * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A @ B^T without materialising B^T.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "inner dims (nt)");
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    let mut c = Mat::zeros(m, n);
+    parallel::par_chunks_mut(&mut c.data, n, |start, crow| {
+        let i = start / n;
+        let arow = a.row(i);
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *cv = acc;
+        }
+    });
+    c
+}
+
+/// y = A @ x.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    let mut y = vec![0.0; a.rows];
+    parallel::par_chunks_mut(&mut y, 1024, |start, chunk| {
+        for (li, v) in chunk.iter_mut().enumerate() {
+            let row = a.row(start + li);
+            *v = row.iter().zip(x).map(|(r, xv)| r * xv).sum();
+        }
+    });
+    y
+}
+
+/// Tr(A @ B) in O(nm) without forming the product.
+pub fn trace_of_product(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.rows, b.cols);
+    let mut tr = 0.0;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for (k, av) in arow.iter().enumerate() {
+            tr += av * b.at(k, i);
+        }
+    }
+    tr
+}
+
+/// Tr(B^3) for square B in O(n^2) memory-free form: Tr(B^2 * B) using
+/// sum_ij (B^2)_ij * B_ji.
+pub fn trace_cubed(b: &Mat) -> f64 {
+    assert!(b.is_square());
+    let b2 = matmul(b, b);
+    let mut tr = 0.0;
+    for i in 0..b.rows {
+        let row = b2.row(i);
+        for (j, v) in row.iter().enumerate() {
+            tr += v * b.at(j, i);
+        }
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Xoshiro256::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 31, 23), (70, 130, 65)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-9);
+        }
+    }
+
+    #[test]
+    fn tn_nt_match_explicit_transpose() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::gaussian(20, 30, 1.0, &mut rng);
+        let b = Mat::gaussian(20, 25, 1.0, &mut rng);
+        assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-9);
+        let c = Mat::gaussian(15, 30, 1.0, &mut rng);
+        assert_close(&matmul_nt(&a, &c), &matmul(&a, &c.transpose()), 1e-9);
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Mat::gaussian(9, 9, 1.0, &mut rng);
+        assert_close(&matmul(&a, &Mat::eye(9)), &a, 1e-12);
+        assert_close(&matmul(&Mat::eye(9), &a), &a, 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(40, 70, 1.0, &mut rng);
+        let x: Vec<f64> = (0..70).map(|_| rng.next_normal()).collect();
+        let xm = Mat { rows: 70, cols: 1, data: x.clone() };
+        let want = matmul(&a, &xm);
+        let got = matvec(&a, &x);
+        for i in 0..40 {
+            assert!((got[i] - want.at(i, 0)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_of_product_matches() {
+        let mut rng = Xoshiro256::new(5);
+        let a = Mat::gaussian(12, 20, 1.0, &mut rng);
+        let b = Mat::gaussian(20, 12, 1.0, &mut rng);
+        let want = matmul(&a, &b).trace();
+        assert!((trace_of_product(&a, &b) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_cubed_matches() {
+        let mut rng = Xoshiro256::new(6);
+        let b = Mat::gaussian(18, 18, 1.0, &mut rng);
+        let wanted = matmul(&matmul(&b, &b), &b).trace();
+        assert!((trace_cubed(&b) - wanted).abs() < 1e-8);
+    }
+
+    #[test]
+    fn associativity_of_scaling() {
+        let mut rng = Xoshiro256::new(7);
+        let a = Mat::gaussian(10, 10, 1.0, &mut rng);
+        let b = Mat::gaussian(10, 10, 1.0, &mut rng);
+        assert_close(&matmul(&a.scale(2.0), &b), &matmul(&a, &b).scale(2.0), 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate (exact baselines + compressed-domain math).
+//!
+//! Everything the paper's evaluation needs to compare *against*: exact GEMM,
+//! thin Householder QR, one-sided Jacobi SVD, norms. Pure rust, no BLAS —
+//! the digital *hot path* goes through PJRT/XLA (rust/src/runtime/), this
+//! module is the reference the sketches are judged by.
+
+pub mod mat;
+pub mod matmul;
+pub mod norms;
+pub mod qr;
+pub mod svd;
+
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, trace_cubed, trace_of_product};
+pub use norms::{frobenius, max_abs, rel_frobenius_error, rel_scalar_error, spectral_norm};
+pub use qr::{lstsq, orthonormalize, solve_upper_triangular, thin_qr, ThinQr};
+pub use svd::{reconstruct, svd, truncated, Svd};

@@ -1,0 +1,105 @@
+//! Norms and error metrics on dense matrices / vectors.
+
+use super::mat::Mat;
+use super::matmul::matvec;
+use crate::rng::Xoshiro256;
+
+pub fn frobenius(a: &Mat) -> f64 {
+    a.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+pub fn vec_norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+pub fn vec_dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// ||A - B||_F / ||A||_F, the paper's Fig. 1 quality metric.
+pub fn rel_frobenius_error(truth: &Mat, approx: &Mat) -> f64 {
+    let denom = frobenius(truth).max(f64::MIN_POSITIVE);
+    frobenius(&truth.sub(approx)) / denom
+}
+
+/// Relative scalar error |x - y| / max(|x|, eps).
+pub fn rel_scalar_error(truth: f64, approx: f64) -> f64 {
+    (truth - approx).abs() / truth.abs().max(1e-300)
+}
+
+/// Spectral norm ||A||_2 by power iteration on A^T A (handles rectangular).
+pub fn spectral_norm(a: &Mat, iters: usize, seed: u64) -> f64 {
+    let mut rng = Xoshiro256::new(seed);
+    let mut v: Vec<f64> = (0..a.cols).map(|_| rng.next_normal()).collect();
+    let nrm = vec_norm2(&v).max(f64::MIN_POSITIVE);
+    v.iter_mut().for_each(|x| *x /= nrm);
+    let at = a.transpose();
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let av = matvec(a, &v);
+        let atav = matvec(&at, &av);
+        let n2 = vec_norm2(&atav);
+        if n2 == 0.0 {
+            return 0.0;
+        }
+        v = atav.iter().map(|x| x / n2).collect();
+        sigma = vec_norm2(&matvec(a, &v));
+    }
+    sigma
+}
+
+/// Max-abs entry (useful for debugging padding bugs).
+pub fn max_abs(a: &Mat) -> f64 {
+    a.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frobenius_known() {
+        let m = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((frobenius(&m) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_zero_for_equal() {
+        let m = Mat::eye(4);
+        assert_eq!(rel_frobenius_error(&m, &m.clone()), 0.0);
+    }
+
+    #[test]
+    fn rel_error_scale() {
+        let m = Mat::eye(4);
+        let half = m.scale(0.5);
+        assert!((rel_frobenius_error(&m, &half) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let d = Mat::from_rows(&[
+            vec![5.0, 0.0, 0.0],
+            vec![0.0, -7.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let s = spectral_norm(&d, 50, 0);
+        assert!((s - 7.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn spectral_le_frobenius() {
+        let mut rng = Xoshiro256::new(8);
+        let a = Mat::gaussian(20, 30, 1.0, &mut rng);
+        let s = spectral_norm(&a, 100, 1);
+        let f = frobenius(&a);
+        assert!(s <= f + 1e-9);
+        assert!(s >= f / (20f64.min(30.0)).sqrt() - 1e-9);
+    }
+
+    #[test]
+    fn rel_scalar() {
+        assert!((rel_scalar_error(10.0, 9.0) - 0.1).abs() < 1e-12);
+    }
+}

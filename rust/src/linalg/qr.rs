@@ -1,0 +1,247 @@
+//! Thin QR via Householder reflections — the orthonormalisation step of
+//! RandSVD (Halko-Martinsson-Tropp Alg. 4.1 needs Q with orthonormal cols).
+
+use super::mat::Mat;
+
+/// Result of a thin QR factorisation: A (m x n, m >= n) = Q (m x n) R (n x n).
+pub struct ThinQr {
+    pub q: Mat,
+    pub r: Mat,
+}
+
+/// Householder QR; returns thin Q and upper-triangular R.
+pub fn thin_qr(a: &Mat) -> ThinQr {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin_qr requires rows >= cols, got {m}x{n}");
+    let mut work = a.clone(); // will hold R in the upper triangle
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let v = work.at(i, k);
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let a0 = work.at(k, k);
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        v[0] = a0 - alpha;
+        for i in k + 1..m {
+            v[i - k] = work.at(i, k);
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v v^T / (v^T v) to the trailing block.
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * work.at(i, j);
+                }
+                let scale = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    *work.at_mut(i, j) -= scale * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // R = leading n x n upper triangle.
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *r.at_mut(i, j) = work.at(i, j);
+        }
+    }
+
+    // Q = H_0 H_1 ... H_{n-1} applied to the thin identity.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        *q.at_mut(j, j) = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q.at(i, j);
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                *q.at_mut(i, j) -= scale * v[i - k];
+            }
+        }
+    }
+    ThinQr { q, r }
+}
+
+/// Orthonormal basis of the column space (the RandSVD "Q" step).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    thin_qr(a).q
+}
+
+/// Solve R x = y for upper-triangular R by back substitution.
+/// Singular diagonals (|r_ii| < eps * max|r|) yield x_i = 0 (minimum-norm
+/// flavoured), keeping sketch-and-solve robust to rank deficiency.
+pub fn solve_upper_triangular(r: &Mat, y: &[f64]) -> Vec<f64> {
+    assert!(r.is_square(), "triangular solve needs square R");
+    assert_eq!(r.rows, y.len());
+    let n = r.rows;
+    let scale = r.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let eps = 1e-13 * scale.max(1.0);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = y[i];
+        for j in (i + 1)..n {
+            acc -= r.at(i, j) * x[j];
+        }
+        let d = r.at(i, i);
+        x[i] = if d.abs() > eps { acc / d } else { 0.0 };
+    }
+    x
+}
+
+/// Least squares via thin QR: argmin_x ||A x - b||_2 (A m x n, m >= n).
+pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len(), "rhs length");
+    let ThinQr { q, r } = thin_qr(a);
+    // y = Q^T b.
+    let mut y = vec![0.0; q.cols];
+    for (j, yj) in y.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for i in 0..q.rows {
+            acc += q.at(i, j) * b[i];
+        }
+        *yj = acc;
+    }
+    solve_upper_triangular(&r, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_tn};
+    use crate::linalg::norms::rel_frobenius_error;
+    use crate::rng::Xoshiro256;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Xoshiro256::new(seed);
+        let a = Mat::gaussian(m, n, 1.0, &mut rng);
+        let ThinQr { q, r } = thin_qr(&a);
+        assert_eq!((q.rows, q.cols), (m, n));
+        assert_eq!((r.rows, r.cols), (n, n));
+        // A = QR
+        let qr = matmul(&q, &r);
+        assert!(rel_frobenius_error(&a, &qr) < 1e-10, "reconstruction");
+        // Q^T Q = I
+        let qtq = matmul_tn(&q, &q);
+        let err = rel_frobenius_error(&Mat::eye(n), &qtq);
+        assert!(err < 1e-10, "orthonormality {err}");
+        // R upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn square_qr() {
+        check_qr(8, 8, 1);
+    }
+
+    #[test]
+    fn tall_qr() {
+        check_qr(50, 7, 2);
+        check_qr(128, 32, 3);
+    }
+
+    #[test]
+    fn rank_deficient_survives() {
+        // Two identical columns: QR must not NaN; A = QR must still hold.
+        let mut rng = Xoshiro256::new(4);
+        let mut a = Mat::gaussian(10, 3, 1.0, &mut rng);
+        for i in 0..10 {
+            let v = a.at(i, 0);
+            *a.at_mut(i, 1) = v;
+        }
+        let ThinQr { q, r } = thin_qr(&a);
+        let qr = matmul(&q, &r);
+        assert!(rel_frobenius_error(&a, &qr) < 1e-9);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn orthonormalize_preserves_span() {
+        let mut rng = Xoshiro256::new(5);
+        let a = Mat::gaussian(20, 4, 1.0, &mut rng);
+        let q = orthonormalize(&a);
+        // Projecting A onto range(Q) reproduces A: Q Q^T A = A.
+        let qta = matmul_tn(&q, &a);
+        let proj = matmul(&q, &qta);
+        assert!(rel_frobenius_error(&a, &proj) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows >= cols")]
+    fn wide_panics() {
+        thin_qr(&Mat::zeros(3, 5));
+    }
+
+    #[test]
+    fn triangular_solve_exact() {
+        let r = Mat::from_rows(&[vec![2.0, 1.0, 0.5], vec![0.0, 3.0, -1.0], vec![0.0, 0.0, 4.0]]);
+        let x_true = [1.0, -2.0, 0.5];
+        let y: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| r.at(i, j) * x_true[j]).sum())
+            .collect();
+        let x = solve_upper_triangular(&r, &y);
+        for (a, b) in x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triangular_solve_singular_no_nan() {
+        let r = Mat::from_rows(&[vec![1.0, 1.0], vec![0.0, 0.0]]);
+        let x = solve_upper_triangular(&r, &[2.0, 3.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut rng = Xoshiro256::new(6);
+        let a = Mat::gaussian(60, 8, 1.0, &mut rng);
+        let x_true: Vec<f64> = (0..8).map(|_| rng.next_normal()).collect();
+        let b = crate::linalg::matvec(&a, &x_true);
+        let x = lstsq(&a, &b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn lstsq_residual_orthogonal_to_range() {
+        // Normal-equation optimality: A^T (A x - b) = 0.
+        let mut rng = Xoshiro256::new(7);
+        let a = Mat::gaussian(40, 5, 1.0, &mut rng);
+        let b: Vec<f64> = (0..40).map(|_| rng.next_normal()).collect();
+        let x = lstsq(&a, &b);
+        let ax = crate::linalg::matvec(&a, &x);
+        let resid: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
+        for j in 0..5 {
+            let g: f64 = (0..40).map(|i| a.at(i, j) * resid[i]).sum();
+            assert!(g.abs() < 1e-9, "gradient column {j}: {g}");
+        }
+    }
+}

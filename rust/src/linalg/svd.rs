@@ -1,0 +1,229 @@
+//! One-sided Jacobi SVD — the exact decomposition behind every RandSVD
+//! baseline and the small compressed-domain SVD(Q^T A) step.
+//!
+//! One-sided Jacobi rotates column pairs of a working copy of A until all
+//! pairs are mutually orthogonal; column norms are then the singular
+//! values. It is simple, numerically robust, and more than fast enough at
+//! the compressed sizes (<= ~1k) the pipeline ever decomposes exactly.
+
+use super::mat::Mat;
+use super::matmul::matmul;
+
+/// Full thin SVD: A (m x n, m >= n) = U (m x n) diag(s) V^T (n x n),
+/// singular values descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+/// One-sided Jacobi with the de Rijk column-pivoting sweep strategy.
+pub fn svd(a: &Mat) -> Svd {
+    let transpose_back = a.rows < a.cols;
+    let work_src = if transpose_back { a.transpose() } else { a.clone() };
+    let (m, n) = (work_src.rows, work_src.cols);
+
+    // Work on column-major storage for cache-friendly column rotations.
+    let mut u: Vec<Vec<f64>> = (0..n).map(|j| work_src.col(j)).collect();
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..n).map(|i| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+
+    let eps = 1e-13;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut alpha = 0.0;
+                let mut beta = 0.0;
+                let mut gamma = 0.0;
+                for i in 0..m {
+                    alpha += u[p][i] * u[p][i];
+                    beta += u[q][i] * u[q][i];
+                    gamma += u[p][i] * u[q][i];
+                }
+                let denom = (alpha * beta).sqrt();
+                if denom > 0.0 {
+                    off = off.max(gamma.abs() / denom);
+                }
+                if gamma.abs() <= eps * denom || denom == 0.0 {
+                    continue;
+                }
+                // Jacobi rotation annihilating the (p, q) inner product.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[p][i];
+                    let uq = u[q][i];
+                    u[p][i] = c * up - s * uq;
+                    u[q][i] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // Singular values = column norms; normalise U columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma: Vec<f64> = u
+        .iter()
+        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+
+    let mut u_mat = Mat::zeros(m, n);
+    let mut vt_mat = Mat::zeros(n, n);
+    let mut s_sorted = Vec::with_capacity(n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sv = sigma[old_j];
+        s_sorted.push(sv);
+        if sv > 0.0 {
+            for i in 0..m {
+                *u_mat.at_mut(i, new_j) = u[old_j][i] / sv;
+            }
+        }
+        for i in 0..n {
+            *vt_mat.at_mut(new_j, i) = v[old_j][i];
+        }
+    }
+    sigma.clear();
+
+    if transpose_back {
+        // A^T = U s V^T  =>  A = V s U^T.
+        Svd { u: vt_mat.transpose(), s: s_sorted, vt: u_mat.transpose() }
+    } else {
+        Svd { u: u_mat, s: s_sorted, vt: vt_mat }
+    }
+}
+
+/// Reconstruct U diag(s) V^T (for tests and low-rank truncation).
+pub fn reconstruct(u: &Mat, s: &[f64], vt: &Mat) -> Mat {
+    let mut us = u.clone();
+    for i in 0..us.rows {
+        for (j, sv) in s.iter().enumerate() {
+            *us.at_mut(i, j) *= sv;
+        }
+    }
+    matmul(&us, vt)
+}
+
+/// Best rank-k approximation via the exact SVD (Eckart-Young baseline).
+pub fn truncated(a: &Mat, k: usize) -> Mat {
+    let Svd { u, s, vt } = svd(a);
+    let k = k.min(s.len());
+    let uk = u.crop(u.rows, k);
+    let vtk = vt.crop(k, vt.cols);
+    reconstruct(&uk, &s[..k], &vtk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul_tn;
+    use crate::linalg::norms::{frobenius, rel_frobenius_error};
+    use crate::rng::Xoshiro256;
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let Svd { u, s, vt } = svd(a);
+        // Descending, non-negative.
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "not descending: {s:?}");
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+        // Reconstruction.
+        let rec = reconstruct(&u, &s, &vt);
+        assert!(rel_frobenius_error(a, &rec) < tol, "reconstruction");
+        // Orthonormality of the thin factors.
+        let k = s.len();
+        let utu = matmul_tn(&u, &u);
+        let vvt = matmul(&vt, &vt.transpose());
+        assert!(rel_frobenius_error(&Mat::eye(k), &utu) < tol, "U^T U");
+        assert!(rel_frobenius_error(&Mat::eye(vt.rows), &vvt) < tol, "V V^T");
+    }
+
+    #[test]
+    fn square_random() {
+        let mut rng = Xoshiro256::new(1);
+        check_svd(&Mat::gaussian(12, 12, 1.0, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn tall_random() {
+        let mut rng = Xoshiro256::new(2);
+        check_svd(&Mat::gaussian(40, 9, 1.0, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn wide_random() {
+        let mut rng = Xoshiro256::new(3);
+        check_svd(&Mat::gaussian(9, 40, 1.0, &mut rng), 1e-9);
+    }
+
+    #[test]
+    fn diagonal_known_values() {
+        let d = Mat::from_rows(&[
+            vec![0.0, 3.0, 0.0],
+            vec![-5.0, 0.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        let Svd { s, .. } = svd(&d);
+        assert!((s[0] - 5.0).abs() < 1e-10);
+        assert!((s[1] - 3.0).abs() < 1e-10);
+        assert!((s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ||A||_F^2 = sum sigma_i^2.
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(15, 10, 1.0, &mut rng);
+        let Svd { s, .. } = svd(&a);
+        let sum_sq: f64 = s.iter().map(|x| x * x).sum();
+        assert!((sum_sq - frobenius(&a).powi(2)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn low_rank_detected() {
+        let mut rng = Xoshiro256::new(5);
+        let b = Mat::gaussian(20, 3, 1.0, &mut rng);
+        let c = Mat::gaussian(3, 20, 1.0, &mut rng);
+        let a = matmul(&b, &c); // rank 3
+        let Svd { s, .. } = svd(&a);
+        assert!(s[2] > 1e-6);
+        for &v in &s[3..] {
+            assert!(v < 1e-9, "rank leak: {v}");
+        }
+    }
+
+    #[test]
+    fn eckart_young_optimality() {
+        // truncated() must beat any other rank-k approx we can cook up.
+        let mut rng = Xoshiro256::new(6);
+        let a = Mat::gaussian(16, 16, 1.0, &mut rng);
+        let k = 4;
+        let best = truncated(&a, k);
+        let err_best = rel_frobenius_error(&a, &best);
+        // A random rank-k projector is strictly worse.
+        let p = Mat::gaussian(16, k, 1.0, &mut rng);
+        let q = crate::linalg::qr::orthonormalize(&p);
+        let other = matmul(&q, &matmul_tn(&q, &a));
+        assert!(err_best < rel_frobenius_error(&a, &other));
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let Svd { s, .. } = svd(&Mat::zeros(5, 4));
+        assert!(s.iter().all(|&x| x == 0.0));
+    }
+}

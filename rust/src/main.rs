@@ -1,0 +1,224 @@
+//! `photon` — CLI driver for the photonic-RandNLA reproduction.
+//!
+//! Subcommands:
+//!   fig1    regenerate Fig. 1 (quality: matmul/trace/triangles/randsvd)
+//!   fig2    regenerate Fig. 2 (projection time vs dimension)
+//!   claims  check the §I/§III scalar claims against the models
+//!   serve   run the coordinator over a synthetic job trace (E2E demo)
+//!   info    artifact + device inventory
+
+use std::path::PathBuf;
+
+use photonic_randnla::cli::Args;
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, Policy,
+};
+use photonic_randnla::graph::generators::erdos_renyi;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::reports::{claims, fig1, fig2, print_rows, Row};
+use photonic_randnla::runtime::PjrtEngine;
+use photonic_randnla::workload::traces::{self, JobKind, TraceConfig};
+use photonic_randnla::workload::{correlated_pair, psd_matrix};
+
+const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
+
+  fig1   [--panel matmul|trace|triangles|randsvd|all] [--n 256]
+         [--trials 3] [--noise ideal|realistic|harsh] [--seed 7]
+  fig2   [--no-measure] [--reps 5] [--artifacts DIR]
+  claims
+  serve  [--jobs 64] [--policy auto|opu|pjrt|host] [--workers 4]
+         [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
+  info   [--artifacts DIR]";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = match argv.first().map(|s| s.as_str()) {
+        Some("fig1") => cmd_fig1(&argv[1..]),
+        Some("fig2") => cmd_fig2(&argv[1..]),
+        Some("claims") => cmd_claims(),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("info") => cmd_info(&argv[1..]),
+        _ => {
+            eprintln!("{USAGE}");
+            Err("missing or unknown subcommand".to_string())
+        }
+    };
+    let code = match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn noise_from(name: &str) -> Result<NoiseModel, String> {
+    match name {
+        "ideal" => Ok(NoiseModel::ideal()),
+        "realistic" => Ok(NoiseModel::realistic()),
+        "harsh" => Ok(NoiseModel::harsh()),
+        other => Err(format!("unknown noise model {other}")),
+    }
+}
+
+fn cmd_fig1(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &[])?;
+    let cfg = fig1::Fig1Config {
+        n: args.get_usize("n", 256)?,
+        trials: args.get_usize("trials", 3)?,
+        seed: args.get_u64("seed", 7)?,
+        noise: noise_from(&args.get_or("noise", "realistic"))?,
+        ..Default::default()
+    };
+    let panel = args.get_or("panel", "all");
+    let rows: Vec<Row> = match panel.as_str() {
+        "matmul" => fig1::matmul_panel(&cfg),
+        "trace" => fig1::trace_panel(&cfg),
+        "triangles" => fig1::triangles_panel(&cfg),
+        "randsvd" => fig1::randsvd_panel(&cfg),
+        "all" => fig1::all_panels(&cfg),
+        other => return Err(format!("unknown panel {other}")),
+    };
+    print_rows(&format!("Fig. 1 ({panel}) n={} trials={}", cfg.n, cfg.trials), &rows);
+    match fig1::optical_matches_numerical(&rows, 0.9) {
+        Ok(()) => println!("\nheadline check: optical == numerical within tolerance: OK"),
+        Err(e) => println!("\nheadline check FAILED: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_fig2(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["no-measure"])?;
+    let cfg = fig2::Fig2Config {
+        reps: args.get_usize("reps", 5)?,
+        ..Default::default()
+    };
+    let mut rows = fig2::model_rows(&cfg);
+    if !args.has("no-measure") {
+        let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+        match PjrtEngine::start(dir) {
+            Ok(engine) => match fig2::measured_pjrt_rows(&engine.handle(), &cfg) {
+                Ok(mut measured) => rows.append(&mut measured),
+                Err(e) => eprintln!("(measured PJRT points skipped: {e})"),
+            },
+            Err(e) => eprintln!("(PJRT engine unavailable, model-only: {e})"),
+        }
+    }
+    print_rows("Fig. 2 - projection time vs dimension (ms)", &rows);
+    let h = fig2::headline();
+    println!(
+        "\ncrossover n ~ {} (paper ~1.2e4) | GPU OOM n ~ {} (paper ~7e4) | \
+         OPU @1e6 = {:.2} ms (paper ~1.2 ms)",
+        h.crossover_dim, h.gpu_oom_dim, h.opu_ms_at_1m
+    );
+    Ok(())
+}
+
+fn cmd_claims() -> Result<(), String> {
+    let cs = claims::all_claims();
+    claims::print_claims(&cs);
+    if cs.iter().all(|c| c.holds()) {
+        println!("\nall claims reproduced within tolerance: OK");
+        Ok(())
+    } else {
+        Err("some claims failed".into())
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &[])?;
+    let policy = match args.get_or("policy", "auto").as_str() {
+        "auto" => Policy::Auto,
+        "opu" => Policy::ForceOpu,
+        "pjrt" => Policy::ForcePjrt,
+        "host" => Policy::ForceHost,
+        other => return Err(format!("unknown policy {other}")),
+    };
+    let artifacts = args.get("artifacts").map(PathBuf::from).or_else(|| {
+        std::path::Path::new("artifacts/manifest.json")
+            .exists()
+            .then(|| PathBuf::from("artifacts"))
+    });
+    let trace_cfg = TraceConfig {
+        jobs: args.get_usize("jobs", 64)?,
+        compression: args.get_f64("compression", 0.25)?,
+        sizes: args.get_usize_list("sizes", &[128, 256, 512])?,
+        seed: args.get_u64("seed", 0)?,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: args.get_usize("workers", 4)?,
+        policy,
+        batch: BatchConfig::default(),
+        artifacts_dir: artifacts,
+    })
+    .map_err(|e| e.to_string())?;
+
+    let trace = traces::generate(&trace_cfg);
+    println!("serving {} jobs (policy {policy:?})...", trace.len());
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = trace.iter().map(|s| coord.submit(job_from_spec(s))).collect();
+    let mut ok = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "completed {ok}/{} jobs in {wall:.2}s ({:.1} jobs/s)",
+        trace.len(),
+        ok as f64 / wall
+    );
+    println!("{}", coord.metrics.report());
+    coord.shutdown();
+    Ok(())
+}
+
+fn job_from_spec(spec: &traces::JobSpec) -> Job {
+    match spec.kind {
+        JobKind::SketchMatmul => {
+            let (a, b) = correlated_pair(spec.n, 0.5, spec.seed);
+            Job::ApproxMatmul { a, b, m: spec.m }
+        }
+        JobKind::TraceEstimate => {
+            let a = psd_matrix(spec.n, spec.n / 2, spec.seed);
+            Job::Trace { a, m: spec.m }
+        }
+        JobKind::TriangleCount => {
+            let g = erdos_renyi(spec.n, 0.05, spec.seed);
+            Job::Triangles { adjacency: g.adjacency(), m: spec.m }
+        }
+        JobKind::RandSvd => Job::RandSvd {
+            a: psd_matrix(spec.n, spec.n, spec.seed),
+            rank: spec.m.min(spec.n / 4).max(4),
+            oversample: 8,
+            power_iters: 1,
+        },
+    }
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &[])?;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    println!("photonic-randnla - artifact & device inventory");
+    match PjrtEngine::start(dir.clone()) {
+        Ok(engine) => {
+            let h = engine.handle();
+            let names = h.unit_names().map_err(|e| e.to_string())?;
+            println!("artifacts dir: {dir:?} ({} units)", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+            println!("proj_xla buckets: {:?}", h.buckets("proj_xla").unwrap_or_default());
+        }
+        Err(e) => println!("artifacts unavailable: {e}"),
+    }
+    let h = fig2::headline();
+    println!(
+        "models: crossover {} | oom {} | opu@1e6 {:.2} ms",
+        h.crossover_dim, h.gpu_oom_dim, h.opu_ms_at_1m
+    );
+    Ok(())
+}

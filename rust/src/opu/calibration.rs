@@ -1,0 +1,110 @@
+//! Anchor calibration: the one-time measurement the holographic linear
+//! mode depends on.
+//!
+//! Displays the anchor-only frame `cal_shots` times, averages the
+//! (noisy, quantized) intensity frames, and stores
+//! `i_a[i] = mean |（Ra)_i|^2` and `alpha_abs[i] = sqrt(i_a[i])`.
+//! Averaging matters: shot noise on a single calibration frame would bias
+//! *every* subsequent projection through the same rows.
+
+use crate::linalg::Mat;
+
+/// Fraction of the median anchor amplitude below which a camera row is
+/// considered *dark*. Real deployments mask such pixels; we clamp the
+/// holographic denominator to this floor so a quantized-to-zero anchor
+/// row attenuates instead of exploding.
+pub const DARK_REL: f64 = 0.05;
+
+/// Calibrated anchor response of one OPU.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Mean anchor intensity per output row: |(Ra)_i|^2.
+    pub i_a: Vec<f64>,
+    /// Anchor field amplitude per row: |(Ra)_i|, clamped at
+    /// `DARK_REL * median` (the value holography divides by).
+    pub alpha_abs: Vec<f64>,
+    /// Rows whose raw anchor response fell below the dark floor.
+    pub dark: Vec<bool>,
+    /// Number of averaged calibration shots.
+    pub shots: usize,
+}
+
+impl Calibration {
+    /// Build from `shots` measured anchor frames (each m x 1).
+    pub fn from_frames(frames: &[Mat], dark_threshold: f64) -> Self {
+        assert!(!frames.is_empty(), "need at least one calibration frame");
+        let m = frames[0].rows;
+        let mut i_a = vec![0.0f64; m];
+        for f in frames {
+            assert_eq!((f.rows, f.cols), (m, 1), "calibration frame shape");
+            for i in 0..m {
+                i_a[i] += f.at(i, 0);
+            }
+        }
+        for v in i_a.iter_mut() {
+            *v /= frames.len() as f64;
+        }
+        let raw: Vec<f64> = i_a.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        // Dark floor relative to the median amplitude (0 if all dark).
+        let mut sorted = raw.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[m / 2];
+        let floor = (DARK_REL * median).max(dark_threshold);
+        let dark: Vec<bool> = raw.iter().map(|&a| a < floor).collect();
+        let alpha_abs: Vec<f64> = raw.iter().map(|&a| a.max(floor)).collect();
+        Self { i_a, alpha_abs, dark, shots: frames.len() }
+    }
+
+    pub fn dark_count(&self) -> usize {
+        self.dark.iter().filter(|&&d| d).count()
+    }
+
+    /// Fraction of usable (non-dark) output rows.
+    pub fn yield_fraction(&self) -> f64 {
+        1.0 - self.dark_count() as f64 / self.alpha_abs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(vals: &[f64]) -> Mat {
+        Mat { rows: vals.len(), cols: 1, data: vals.to_vec() }
+    }
+
+    #[test]
+    fn averages_shots() {
+        let cal = Calibration::from_frames(&[col(&[4.0, 0.0]), col(&[2.0, 0.0])], 1e-9);
+        assert_eq!(cal.i_a, vec![3.0, 0.0]);
+        assert!((cal.alpha_abs[0] - 3.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(cal.shots, 2);
+    }
+
+    #[test]
+    fn flags_dark_rows() {
+        let cal = Calibration::from_frames(&[col(&[1.0, 0.0, 1e-20])], 1e-6);
+        assert_eq!(cal.dark, vec![false, true, true]);
+        assert_eq!(cal.dark_count(), 2);
+        assert!((cal.yield_fraction() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn empty_rejected() {
+        Calibration::from_frames(&[], 1e-9);
+    }
+
+    #[test]
+    fn averaging_reduces_noise() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(1);
+        let truth = 5.0;
+        let noisy = |rng: &mut Xoshiro256| col(&[truth + rng.next_normal() * 0.5]);
+        let one = Calibration::from_frames(&[noisy(&mut rng)], 1e-9);
+        let frames: Vec<Mat> = (0..64).map(|_| noisy(&mut rng)).collect();
+        let many = Calibration::from_frames(&frames, 1e-9);
+        assert!((many.i_a[0] - truth).abs() < (one.i_a[0] - truth).abs() + 0.3);
+        assert!((many.i_a[0] - truth).abs() < 0.3);
+    }
+}

@@ -1,0 +1,436 @@
+//! The simulated OPU device: DMD -> scattering medium -> camera -> host.
+//!
+//! Owns the transmission matrix, the noise chain, the anchor calibration
+//! and the exposure/time accounting. Thread-safe: measurement methods take
+//! `&self`; mutable state (noise RNG, counters) sits behind a mutex, so the
+//! coordinator can share one device across workers exactly like the real
+//! driver serialises access to the physical DMD.
+
+use std::sync::Mutex;
+
+use super::calibration::Calibration;
+use super::encoding;
+use super::holography;
+use super::noise::NoiseModel;
+use super::tm::TransmissionMatrix;
+use crate::linalg::Mat;
+use crate::perfmodel::OpuTimingModel;
+use crate::rng::Xoshiro256;
+
+/// Device configuration.
+#[derive(Clone, Debug)]
+pub struct OpuConfig {
+    pub seed: u64,
+    /// Camera output dimension m.
+    pub m: usize,
+    /// Data input dimension n (DMD pixels available to the user).
+    pub n: usize,
+    /// DMD pixels reserved for the holographic anchor.
+    pub anchor_len: usize,
+    /// Bit depth used when encoding real-valued inputs.
+    pub input_bits: usize,
+    pub noise: NoiseModel,
+    pub timing: OpuTimingModel,
+    /// Calibration shots averaged at power-on.
+    pub cal_shots: usize,
+}
+
+impl OpuConfig {
+    pub fn new(seed: u64, m: usize, n: usize) -> Self {
+        Self {
+            seed,
+            m,
+            n,
+            anchor_len: 32,
+            input_bits: 8,
+            noise: NoiseModel::realistic(),
+            timing: OpuTimingModel::default(),
+            cal_shots: 32,
+        }
+    }
+
+    pub fn ideal(seed: u64, m: usize, n: usize) -> Self {
+        Self { noise: NoiseModel::ideal(), cal_shots: 1, ..Self::new(seed, m, n) }
+    }
+
+    pub fn with_noise(mut self, noise: NoiseModel) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn with_bits(mut self, bits: usize) -> Self {
+        self.input_bits = bits;
+        self
+    }
+}
+
+/// Mutable device state behind the driver mutex.
+struct DeviceState {
+    rng: Xoshiro256,
+    exposures: u64,
+    elapsed_ms: f64,
+}
+
+/// The simulated OPU.
+pub struct OpuDevice {
+    pub cfg: OpuConfig,
+    tm: TransmissionMatrix,
+    cal: Calibration,
+    state: Mutex<DeviceState>,
+}
+
+impl OpuDevice {
+    /// Power on: builds the medium and runs anchor calibration.
+    pub fn new(cfg: OpuConfig) -> Self {
+        assert!(cfg.m > 0 && cfg.n > 0 && cfg.anchor_len > 0);
+        let tm = TransmissionMatrix::new(cfg.seed, cfg.m, cfg.n + cfg.anchor_len);
+        let mut rng = Xoshiro256::new(cfg.seed ^ 0x0BADF00D);
+
+        // Calibration: measure the anchor-only frame `cal_shots` times.
+        let anchor_frame = Self::anchor_only_frame(cfg.n, cfg.anchor_len);
+        let mut frames = Vec::with_capacity(cfg.cal_shots);
+        let mut exposures = 0;
+        for _ in 0..cfg.cal_shots.max(1) {
+            let mut i = Self::intensity_of(&tm, &anchor_frame);
+            cfg.noise.apply(&mut i, &mut rng);
+            frames.push(i);
+            exposures += 1;
+        }
+        let cal = Calibration::from_frames(&frames, holography::DARK_THRESHOLD);
+        let elapsed =
+            cfg.timing.projection_ms_frames(cfg.n + cfg.anchor_len, cfg.m, exposures as usize);
+        Self {
+            cfg,
+            tm,
+            cal,
+            state: Mutex::new(DeviceState { rng, exposures, elapsed_ms: elapsed }),
+        }
+    }
+
+    fn anchor_only_frame(n: usize, anchor_len: usize) -> Mat {
+        let mut f = Mat::zeros(n + anchor_len, 1);
+        for i in n..n + anchor_len {
+            *f.at_mut(i, 0) = 1.0;
+        }
+        f
+    }
+
+    /// Append the anchor region (zeros or ones) to a data frame batch.
+    fn with_anchor(&self, x: &Mat, lit: bool) -> Mat {
+        assert_eq!(x.rows, self.cfg.n, "frame dim {} != n {}", x.rows, self.cfg.n);
+        let mut f = Mat::zeros(self.cfg.n + self.cfg.anchor_len, x.cols);
+        for i in 0..x.rows {
+            f.row_mut(i).copy_from_slice(x.row(i));
+        }
+        if lit {
+            for i in self.cfg.n..self.cfg.n + self.cfg.anchor_len {
+                for j in 0..x.cols {
+                    *f.at_mut(i, j) = 1.0;
+                }
+            }
+        }
+        f
+    }
+
+    fn intensity_of(tm: &TransmissionMatrix, frames: &Mat) -> Mat {
+        let (yr, yi) = tm.field(frames);
+        let mut i = Mat::zeros(yr.rows, yr.cols);
+        for (o, (r, v)) in i.data.iter_mut().zip(yr.data.iter().zip(&yi.data)) {
+            *o = r * r + v * v;
+        }
+        i
+    }
+
+    /// One physical exposure batch: display `frames` (full DMD width
+    /// n + anchor_len), measure noisy intensities, account time.
+    fn expose(&self, frames: &Mat) -> Mat {
+        let mut i = Self::intensity_of(&self.tm, frames);
+        let mut st = self.state.lock().unwrap();
+        self.cfg.noise.apply(&mut i, &mut st.rng);
+        st.exposures += frames.cols as u64;
+        st.elapsed_ms += self
+            .cfg
+            .timing
+            .projection_ms_frames(frames.rows, self.cfg.m, frames.cols);
+        i
+    }
+
+    /// The OPU native op on binary data frames: I = |R x|^2 (anchor dark).
+    /// `x` is (n x k) with entries in {0, 1}.
+    pub fn intensity(&self, x: &Mat) -> Mat {
+        debug_assert!(
+            x.data.iter().all(|&v| v == 0.0 || v == 1.0),
+            "intensity() takes binary DMD frames; use project() for real data"
+        );
+        self.expose(&self.with_anchor(x, false))
+    }
+
+    /// Holographic linear projection of *binary* frames:
+    /// returns (m x k) G_eff @ x with G_eff entries ~ N(0, 1).
+    pub fn linear_project_binary(&self, x: &Mat) -> Mat {
+        let i_xa = self.expose(&self.with_anchor(x, true));
+        let i_x = self.expose(&self.with_anchor(x, false));
+        holography::recover(&i_xa, &i_x, &self.cal.i_a, &self.cal.alpha_abs)
+    }
+
+    /// Full pipeline for real-valued data (n x k): bit-plane encoding,
+    /// per-plane holographic projection, host recombination.
+    /// Output approximates G_eff @ x, G_eff (m x n) iid N(0, 1).
+    ///
+    /// Perf (§Perf, EXPERIMENTS.md): all 4 * bits * k DMD frames of a
+    /// projection are submitted as ONE exposure batch, so the streamed
+    /// transmission-matrix rows are generated once per call instead of
+    /// once per (sign, bit, anchor-state) — a ~4-5x host-side win. The
+    /// *simulated* exposure count/time is identical: the DMD still
+    /// displays every frame.
+    pub fn project(&self, x: &Mat) -> Mat {
+        let bp = encoding::encode(x, self.cfg.input_bits);
+        let k = x.cols;
+        let bits = bp.bits;
+        let n_total = self.cfg.n + self.cfg.anchor_len;
+        // Mega-batch layout: for sign s, bit b: [lit(k) | dark(k)].
+        let group = 2 * k; // lit + dark per plane
+        let total = 2 * bits * group;
+        let mut mega = Mat::zeros(n_total, total);
+        for s in 0..2 {
+            for (b, plane) in bp.planes[s].iter().enumerate() {
+                let base = (s * bits + b) * group;
+                for i in 0..self.cfg.n {
+                    let src = plane.row(i);
+                    let dst = mega.row_mut(i);
+                    dst[base..base + k].copy_from_slice(src);
+                    dst[base + k..base + 2 * k].copy_from_slice(src);
+                }
+                // Anchor lit on the first k columns of the group only.
+                for i in self.cfg.n..n_total {
+                    let dst = mega.row_mut(i);
+                    for j in 0..k {
+                        dst[base + j] = 1.0;
+                    }
+                }
+            }
+        }
+        let intensities = self.expose(&mega);
+        let mut pos = Vec::with_capacity(bits);
+        let mut neg = Vec::with_capacity(bits);
+        for s in 0..2 {
+            for b in 0..bits {
+                let base = (s * bits + b) * group;
+                let i_xa = intensities.col_slice(base, k);
+                let i_x = intensities.col_slice(base + k, k);
+                let rec = holography::recover(&i_xa, &i_x, &self.cal.i_a, &self.cal.alpha_abs);
+                if s == 0 {
+                    pos.push(rec);
+                } else {
+                    neg.push(rec);
+                }
+            }
+        }
+        encoding::recombine(&pos, &neg, &bp.scales)
+    }
+
+    /// Reference implementation of [`Self::project`] with one exposure
+    /// batch per plane (pre-optimization path; kept for equivalence tests
+    /// and the batching ablation).
+    pub fn project_unbatched(&self, x: &Mat) -> Mat {
+        let bp = encoding::encode(x, self.cfg.input_bits);
+        let project_planes = |planes: &[Mat]| -> Vec<Mat> {
+            planes.iter().map(|p| self.linear_project_binary(p)).collect()
+        };
+        let pos = project_planes(&bp.planes[0]);
+        let neg = project_planes(&bp.planes[1]);
+        encoding::recombine(&pos, &neg, &bp.scales)
+    }
+
+    /// The *oracle* effective linear matrix G_eff the holographic mode
+    /// realises: `sqrt(2) * Re(conj(alpha_i) R_ij) / |alpha_i|`. Simulation-
+    /// only (a physical OPU cannot read its own medium); used by tests and
+    /// by the PJRT cross-validation path.
+    pub fn effective_matrix(&self) -> Mat {
+        let m = self.cfg.m;
+        let n = self.cfg.n;
+        // Exact anchor field alpha = sum over anchor columns of R.
+        let ncols = n + self.cfg.anchor_len;
+        let mut g = Mat::zeros(m, n);
+        let mut re = vec![0.0; ncols];
+        let mut im = vec![0.0; ncols];
+        // First pass: exact anchor amplitudes, for the same dark-floor
+        // clamp the calibration applies.
+        let mut amps = Vec::with_capacity(m);
+        let mut fields = Vec::with_capacity(m);
+        for i in 0..m {
+            self.tm.row_into(i, &mut re, &mut im);
+            let (mut ar, mut ai) = (0.0, 0.0);
+            for j in n..ncols {
+                ar += re[j];
+                ai += im[j];
+            }
+            amps.push((ar * ar + ai * ai).sqrt());
+            fields.push((ar, ai));
+        }
+        let mut sorted = amps.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let floor = (super::calibration::DARK_REL * sorted[m / 2])
+            .max(holography::DARK_THRESHOLD);
+        for i in 0..m {
+            self.tm.row_into(i, &mut re, &mut im);
+            let (ar, ai) = fields[i];
+            let w = std::f64::consts::SQRT_2 / amps[i].max(floor);
+            let row = g.row_mut(i);
+            for j in 0..n {
+                // Re(conj(alpha) * R_ij) = ar*re + ai*im.
+                row[j] = w * (ar * re[j] + ai * im[j]);
+            }
+        }
+        g
+    }
+
+    /// Raw complex-field intensities of real-valued frames, bypassing the
+    /// DMD binary constraint (diagnostics / kernel cross-validation).
+    pub fn intensity_unconstrained(&self, x: &Mat) -> Mat {
+        self.expose(&self.with_anchor(x, false))
+    }
+
+    pub fn calibration(&self) -> &Calibration {
+        &self.cal
+    }
+
+    /// (exposures so far, simulated elapsed milliseconds).
+    pub fn stats(&self) -> (u64, f64) {
+        let st = self.state.lock().unwrap();
+        (st.exposures, st.elapsed_ms)
+    }
+
+    /// Frames the device would spend on one `project()` call of k columns.
+    pub fn frames_per_project(&self, k: usize) -> usize {
+        // 2 sign banks x input_bits planes x 2 exposures (x+a and x).
+        2 * self.cfg.input_bits * 2 * k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, rel_frobenius_error};
+
+    fn ideal_device(m: usize, n: usize) -> OpuDevice {
+        OpuDevice::new(OpuConfig::ideal(42, m, n))
+    }
+
+    #[test]
+    fn intensity_nonnegative_and_shaped() {
+        let dev = ideal_device(16, 32);
+        let mut x = Mat::zeros(32, 3);
+        for i in 0..16 {
+            *x.at_mut(i, 0) = 1.0;
+            *x.at_mut(31 - i, 1) = 1.0;
+        }
+        let i = dev.intensity(&x);
+        assert_eq!((i.rows, i.cols), (16, 3));
+        assert!(i.data.iter().all(|&v| v >= 0.0));
+        // Dark frame (column 2 all zeros) -> zero intensity in ideal mode.
+        assert!((0..16).all(|r| i.at(r, 2) == 0.0));
+    }
+
+    #[test]
+    fn linear_binary_matches_effective_matrix() {
+        let dev = ideal_device(24, 40);
+        let g = dev.effective_matrix();
+        let mut x = Mat::zeros(40, 8);
+        let mut rng = Xoshiro256::new(9);
+        for v in x.data.iter_mut() {
+            *v = if rng.next_f64() < 0.5 { 1.0 } else { 0.0 };
+        }
+        let got = dev.linear_project_binary(&x);
+        let want = matmul(&g, &x);
+        assert!(rel_frobenius_error(&want, &got) < 1e-10, "holography != oracle");
+    }
+
+    #[test]
+    fn project_real_data_close_to_oracle() {
+        let dev = ideal_device(32, 64);
+        let g = dev.effective_matrix();
+        let mut rng = Xoshiro256::new(10);
+        let x = Mat::gaussian(64, 4, 1.0, &mut rng);
+        let got = dev.project(&x);
+        let want = matmul(&g, &x);
+        // Ideal noise, 8-bit encoding: only quantization error remains.
+        let rel = rel_frobenius_error(&want, &got);
+        assert!(rel < 5e-3, "rel err {rel}");
+    }
+
+    #[test]
+    fn effective_matrix_is_standard_gaussian() {
+        let dev = ideal_device(64, 256);
+        let g = dev.effective_matrix();
+        let n = g.data.len() as f64;
+        let mean: f64 = g.data.iter().sum::<f64>() / n;
+        let var: f64 = g.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn projections_linear_in_input() {
+        let dev = ideal_device(16, 32);
+        let mut rng = Xoshiro256::new(11);
+        let x1 = Mat::gaussian(32, 2, 1.0, &mut rng);
+        let x2 = Mat::gaussian(32, 2, 1.0, &mut rng);
+        let p1 = dev.project(&x1);
+        let p2 = dev.project(&x2);
+        let psum = dev.project(&x1.add(&x2));
+        let lin_err = rel_frobenius_error(&p1.add(&p2), &psum);
+        assert!(lin_err < 2e-2, "linearity violated: {lin_err}");
+    }
+
+    #[test]
+    fn fused_project_matches_unbatched() {
+        // In ideal mode the fused mega-batch path must be *exactly* the
+        // per-plane path (recovery is linear in noise-free intensities).
+        let dev = ideal_device(24, 48);
+        let mut rng = Xoshiro256::new(77);
+        let x = Mat::gaussian(48, 5, 1.0, &mut rng);
+        let fused = dev.project(&x);
+        let unbatched = dev.project_unbatched(&x);
+        let rel = rel_frobenius_error(&unbatched, &fused);
+        assert!(rel < 1e-12, "fused path diverged: {rel}");
+    }
+
+    #[test]
+    fn noise_degrades_gracefully() {
+        let mk = |noise| {
+            let cfg = OpuConfig::new(42, 32, 64).with_noise(noise);
+            OpuDevice::new(cfg)
+        };
+        let ideal = ideal_device(32, 64);
+        let g = ideal.effective_matrix();
+        let mut rng = Xoshiro256::new(12);
+        let x = Mat::gaussian(64, 4, 1.0, &mut rng);
+        let want = matmul(&g, &x);
+        let realistic = mk(NoiseModel::realistic());
+        let harsh = mk(NoiseModel::harsh());
+        // Same seed -> same medium, so the oracle is shared.
+        let e_real = rel_frobenius_error(&want, &realistic.project(&x));
+        let e_harsh = rel_frobenius_error(&want, &harsh.project(&x));
+        assert!(e_real < 0.05, "realistic err {e_real}");
+        assert!(e_harsh > e_real, "harsh {e_harsh} <= realistic {e_real}");
+    }
+
+    #[test]
+    fn accounting_tracks_exposures() {
+        let dev = ideal_device(8, 16);
+        let (e0, t0) = dev.stats();
+        let x = Mat::zeros(16, 2);
+        let _ = dev.linear_project_binary(&x);
+        let (e1, t1) = dev.stats();
+        assert_eq!(e1 - e0, 4); // 2 frames x 2 columns
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn calibration_healthy() {
+        let dev = ideal_device(128, 64);
+        assert_eq!(dev.calibration().dark_count(), 0);
+        assert!((dev.calibration().yield_fraction() - 1.0).abs() < 1e-12);
+    }
+}

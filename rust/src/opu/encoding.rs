@@ -1,0 +1,184 @@
+//! DMD input encoding: real-valued data -> binary micro-mirror frames.
+//!
+//! The DMD displays only {0, 1}. Real inputs are handled exactly as the
+//! paper sketches (§II): quantize to `bits` levels, split sign into
+//! positive/negative parts, and display one binary *bit-plane* frame per
+//! (sign, bit). Linearity of the recovered projection lets the host
+//! recombine: P(x) = scale * sum_b 2^b (P(x+_b) - P(x-_b)).
+
+use crate::linalg::Mat;
+
+/// Result of encoding a real matrix (columns = inputs) into bit-planes.
+pub struct BitPlanes {
+    /// planes[s][b] is an (n x k) binary matrix; s = 0 positive, 1 negative.
+    pub planes: [Vec<Mat>; 2],
+    /// Per-column scale: x ~ scale * sum_b 2^b (p+_b - p-_b), column-wise.
+    pub scales: Vec<f64>,
+    pub bits: usize,
+}
+
+/// Encode columns of `x` (n x k) into signed bit-planes.
+pub fn encode(x: &Mat, bits: usize) -> BitPlanes {
+    assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+    let (n, k) = (x.rows, x.cols);
+    let levels = ((1u32 << bits) - 1) as f64;
+
+    // Per-column max-abs sets the quantization range (per-frame exposure).
+    let mut scales = vec![0.0f64; k];
+    for j in 0..k {
+        let mut mx = 0.0f64;
+        for i in 0..n {
+            mx = mx.max(x.at(i, j).abs());
+        }
+        scales[j] = if mx > 0.0 { mx / levels } else { 1.0 };
+    }
+
+    // Integer magnitudes per sign.
+    let mut planes_pos: Vec<Mat> = (0..bits).map(|_| Mat::zeros(n, k)).collect();
+    let mut planes_neg: Vec<Mat> = (0..bits).map(|_| Mat::zeros(n, k)).collect();
+    for j in 0..k {
+        for i in 0..n {
+            let v = x.at(i, j);
+            let q = (v.abs() / scales[j]).round() as u32;
+            let q = q.min(levels as u32);
+            let target = if v >= 0.0 { &mut planes_pos } else { &mut planes_neg };
+            for (b, plane) in target.iter_mut().enumerate() {
+                if (q >> b) & 1 == 1 {
+                    *plane.at_mut(i, j) = 1.0;
+                }
+            }
+        }
+    }
+    BitPlanes { planes: [planes_pos, planes_neg], scales, bits }
+}
+
+/// Recombine per-plane projections into the projection of the original
+/// data: given proj[s][b] = P(plane[s][b]) (each m x k), produce
+/// P(x) = scale_j * sum_b 2^b (proj[0][b] - proj[1][b]) column-wise.
+pub fn recombine(proj_pos: &[Mat], proj_neg: &[Mat], scales: &[f64]) -> Mat {
+    assert_eq!(proj_pos.len(), proj_neg.len());
+    assert!(!proj_pos.is_empty());
+    let (m, k) = (proj_pos[0].rows, proj_pos[0].cols);
+    assert_eq!(scales.len(), k);
+    let mut out = Mat::zeros(m, k);
+    for (b, (pp, pn)) in proj_pos.iter().zip(proj_neg).enumerate() {
+        assert_eq!((pp.rows, pp.cols), (m, k));
+        let w = (1u64 << b) as f64;
+        for i in 0..m {
+            let orow = out.row_mut(i);
+            let prow = pp.row(i);
+            let nrow = pn.row(i);
+            for j in 0..k {
+                orow[j] += w * (prow[j] - nrow[j]);
+            }
+        }
+    }
+    for i in 0..m {
+        let orow = out.row_mut(i);
+        for j in 0..k {
+            orow[j] *= scales[j];
+        }
+    }
+    out
+}
+
+/// Reconstruct the quantized data the planes represent (host-side check):
+/// x_q = scale * sum_b 2^b (p+ - p-).
+pub fn decode(bp: &BitPlanes) -> Mat {
+    recombine(&bp.planes[0], &bp.planes[1], &bp.scales)
+}
+
+/// Quantization SNR in dB for the given encoding of x (diagnostic).
+pub fn quantization_snr_db(x: &Mat, bits: usize) -> f64 {
+    let bp = encode(x, bits);
+    let xq = decode(&bp);
+    let sig: f64 = x.data.iter().map(|v| v * v).sum();
+    let err: f64 = x.data.iter().zip(&xq.data).map(|(a, b)| (a - b) * (a - b)).sum();
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn planes_are_binary_and_disjoint_by_sign() {
+        let mut rng = Xoshiro256::new(1);
+        let x = Mat::gaussian(20, 3, 1.0, &mut rng);
+        let bp = encode(&x, 8);
+        for s in 0..2 {
+            for plane in &bp.planes[s] {
+                assert!(plane.data.iter().all(|&v| v == 0.0 || v == 1.0));
+            }
+        }
+        // A pixel cannot be lit in both sign banks at the same bit.
+        for b in 0..8 {
+            for idx in 0..x.data.len() {
+                let p = bp.planes[0][b].data[idx];
+                let n = bp.planes[1][b].data[idx];
+                assert!(p * n == 0.0, "pixel lit in both signs");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_lsb() {
+        let mut rng = Xoshiro256::new(2);
+        let x = Mat::gaussian(50, 4, 2.0, &mut rng);
+        for bits in [4usize, 8, 12] {
+            let bp = encode(&x, bits);
+            let xq = decode(&bp);
+            for j in 0..4 {
+                let lsb = bp.scales[j];
+                for i in 0..50 {
+                    let e = (x.at(i, j) - xq.at(i, j)).abs();
+                    assert!(e <= 0.5 * lsb + 1e-12, "bits={bits} err {e} lsb {lsb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_for_integer_inputs() {
+        // Integers within range survive the codec exactly.
+        let x = Mat::from_rows(&[vec![0.0, 255.0], vec![-17.0, 128.0], vec![255.0, -1.0]]);
+        let bp = encode(&x, 8);
+        let xq = decode(&bp);
+        for (a, b) in x.data.iter().zip(&xq.data) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn snr_improves_with_bits() {
+        let mut rng = Xoshiro256::new(3);
+        let x = Mat::gaussian(100, 2, 1.0, &mut rng);
+        let s4 = quantization_snr_db(&x, 4);
+        let s8 = quantization_snr_db(&x, 8);
+        let s12 = quantization_snr_db(&x, 12);
+        assert!(s8 > s4 + 10.0, "{s4} -> {s8}");
+        assert!(s12 > s8 + 10.0, "{s8} -> {s12}");
+    }
+
+    #[test]
+    fn zero_column_is_fine() {
+        let x = Mat::zeros(10, 2);
+        let bp = encode(&x, 8);
+        let xq = decode(&bp);
+        assert!(xq.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn plane_count() {
+        let x = Mat::zeros(4, 1);
+        let bp = encode(&x, 6);
+        assert_eq!(bp.planes[0].len(), 6);
+        assert_eq!(bp.planes[1].len(), 6);
+        assert_eq!(bp.bits, 6);
+    }
+}

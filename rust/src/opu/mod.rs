@@ -1,0 +1,32 @@
+//! Simulated LightOn Optical Processing Unit (DESIGN.md §2).
+//!
+//! Physical chain, each stage its own module:
+//!
+//! ```text
+//!   real data ──encoding──▶ binary DMD frames
+//!        │                       │ display (+ anchor region)
+//!        │                 ┌─────▼─────┐
+//!        │                 │    tm     │  fixed complex Gaussian medium
+//!        │                 └─────┬─────┘
+//!        │                       │ speckle field Rx
+//!        │                 ┌─────▼─────┐
+//!        │                 │  camera   │  |.|^2 + noise (noise.rs)
+//!        │                 └─────┬─────┘
+//!        │                       │ intensities
+//!        └──────────────── holography + calibration ──▶ g(x) = G_eff x
+//! ```
+//!
+//! `device::OpuDevice` wires the stages; `device::OpuDevice::project` is
+//! the drop-in Gaussian-sketch primitive the RandNLA layer consumes.
+
+pub mod calibration;
+pub mod device;
+pub mod encoding;
+pub mod holography;
+pub mod noise;
+pub mod tm;
+
+pub use calibration::Calibration;
+pub use device::{OpuConfig, OpuDevice};
+pub use noise::NoiseModel;
+pub use tm::TransmissionMatrix;

@@ -1,0 +1,172 @@
+//! Physical noise chain of the OPU camera: shot noise + readout noise +
+//! fixed-range ADC quantization.
+//!
+//! Fig. 1's headline is that this analog chain costs *negligible* end
+//! precision; modelling each channel explicitly is what lets the
+//! ablation bench (C3 in DESIGN.md) test that claim instead of assuming
+//! it.
+
+use crate::linalg::Mat;
+use crate::rng::Xoshiro256;
+
+/// Noise + digitisation model applied to intensity frames.
+#[derive(Clone, Debug)]
+pub struct NoiseModel {
+    /// Photons per intensity unit; shot-noise std = sqrt(I / photons)*unit.
+    /// `f64::INFINITY` disables shot noise.
+    pub photons_per_unit: f64,
+    /// Additive Gaussian readout noise std (intensity units). 0 disables.
+    pub readout_std: f64,
+    /// ADC bit depth; 0 disables quantization.
+    pub adc_bits: u32,
+}
+
+impl NoiseModel {
+    /// The paper's operating point: healthy photon budget, 8-bit camera.
+    pub fn realistic() -> Self {
+        Self { photons_per_unit: 1e4, readout_std: 1e-3, adc_bits: 8 }
+    }
+
+    /// No noise at all (the "numerical" arm of Fig. 1's comparison).
+    pub fn ideal() -> Self {
+        Self { photons_per_unit: f64::INFINITY, readout_std: 0.0, adc_bits: 0 }
+    }
+
+    /// Pessimistic: starved photon budget + coarse ADC (ablation arm).
+    pub fn harsh() -> Self {
+        Self { photons_per_unit: 1e2, readout_std: 1e-2, adc_bits: 6 }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.photons_per_unit.is_infinite() && self.readout_std == 0.0 && self.adc_bits == 0
+    }
+
+    /// Apply the full chain in physical order: shot -> readout -> ADC.
+    /// Intensities are non-negative on input and stay non-negative.
+    ///
+    /// Parallel over pixel chunks with per-chunk forked streams seeded
+    /// from `rng` (§Perf): deterministic given the caller's stream state,
+    /// independent of thread count.
+    pub fn apply(&self, intensity: &mut Mat, rng: &mut Xoshiro256) {
+        let shot = !self.photons_per_unit.is_infinite();
+        let readout = self.readout_std > 0.0;
+        if shot || readout {
+            const CHUNK: usize = 8192;
+            let chunks = intensity.data.len().div_ceil(CHUNK);
+            let seeds: Vec<u64> = (0..chunks).map(|_| rng.next_u64()).collect();
+            let photons = self.photons_per_unit;
+            let r_std = self.readout_std;
+            crate::parallel::par_chunks_mut(&mut intensity.data, CHUNK, |start, chunk| {
+                let mut local = Xoshiro256::new(seeds[start / CHUNK]);
+                for v in chunk.iter_mut() {
+                    if shot {
+                        // Gaussian approx of Poisson(I * photons) / photons.
+                        let lambda = (*v).max(0.0) * photons;
+                        let noisy = lambda + lambda.sqrt() * local.next_normal();
+                        *v = (noisy / photons).max(0.0);
+                    }
+                    if readout {
+                        *v = (*v + r_std * local.next_normal()).max(0.0);
+                    }
+                }
+            });
+        }
+        if self.adc_bits > 0 {
+            // Auto-ranging ADC over the frame batch (camera auto-exposure).
+            let hi = intensity.data.iter().fold(0.0f64, |m, &v| m.max(v));
+            if hi > 0.0 {
+                let levels = ((1u64 << self.adc_bits) - 1) as f64;
+                for v in intensity.data.iter_mut() {
+                    *v = (*v / hi * levels).round() / levels * hi;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(vals: &[f64]) -> Mat {
+        Mat { rows: vals.len(), cols: 1, data: vals.to_vec() }
+    }
+
+    #[test]
+    fn ideal_is_identity() {
+        let mut rng = Xoshiro256::new(1);
+        let mut f = frame(&[0.0, 0.5, 1.0, 123.456]);
+        let orig = f.clone();
+        NoiseModel::ideal().apply(&mut f, &mut rng);
+        assert_eq!(f, orig);
+    }
+
+    #[test]
+    fn stays_nonnegative() {
+        let mut rng = Xoshiro256::new(2);
+        let mut f = frame(&vec![1e-6; 1000]);
+        NoiseModel::harsh().apply(&mut f, &mut rng);
+        assert!(f.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn shot_noise_scales_with_sqrt_intensity() {
+        let nm = NoiseModel { photons_per_unit: 1e4, readout_std: 0.0, adc_bits: 0 };
+        let mut rng = Xoshiro256::new(3);
+        let trials = 4000;
+        let (mut var_low, mut var_high) = (0.0, 0.0);
+        for _ in 0..trials {
+            let mut f = frame(&[1.0, 100.0]);
+            nm.apply(&mut f, &mut rng);
+            var_low += (f.data[0] - 1.0) * (f.data[0] - 1.0);
+            var_high += (f.data[1] - 100.0) * (f.data[1] - 100.0);
+        }
+        // Var ∝ I: ratio of variances ≈ 100.
+        let ratio = var_high / var_low;
+        assert!((50.0..200.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn adc_level_count() {
+        let nm = NoiseModel { photons_per_unit: f64::INFINITY, readout_std: 0.0, adc_bits: 2 };
+        let mut rng = Xoshiro256::new(4);
+        let mut f = frame(&(0..1000).map(|i| i as f64 / 999.0).collect::<Vec<_>>());
+        nm.apply(&mut f, &mut rng);
+        let mut uniq: Vec<u64> = f.data.iter().map(|v| (v * 1e9) as u64).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn realistic_snr_is_high() {
+        // The operating point must justify "negligible precision loss":
+        // relative RMS error of a bright frame stays below ~2%.
+        let nm = NoiseModel::realistic();
+        let mut rng = Xoshiro256::new(5);
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64 / 10.0).collect();
+        let mut f = frame(&vals);
+        nm.apply(&mut f, &mut rng);
+        let num: f64 = f.data.iter().zip(&vals).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f64 = vals.iter().map(|v| v * v).sum();
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.02, "relative error {rel}");
+    }
+
+    #[test]
+    fn harsh_noisier_than_realistic() {
+        let vals: Vec<f64> = (1..=500).map(|i| i as f64 / 50.0).collect();
+        let err = |nm: &NoiseModel, seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut f = frame(&vals);
+            nm.apply(&mut f, &mut rng);
+            f.data
+                .iter()
+                .zip(&vals)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(err(&NoiseModel::harsh(), 6) > err(&NoiseModel::realistic(), 6));
+    }
+}

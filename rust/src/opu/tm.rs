@@ -1,0 +1,196 @@
+//! The scattering medium: a fixed complex Gaussian transmission matrix.
+//!
+//! Entry `R[i, j] ~ CN(0, 1)` (so `E[|R_ij|^2] = 1`) is a pure function of
+//! `(seed, i, j)` via Philox — the matrix is never materialised unless a
+//! test asks for it. One Philox block yields 4 normals = 2 complex
+//! entries, so entry (i, j) lives in block (i, j / 2), lane (j % 2).
+
+use crate::linalg::Mat;
+use crate::parallel;
+use crate::rng::philox::{block_to_normals, Philox4x32};
+
+/// Scale so each of (re, im) is N(0, 1/2) => unit complex variance.
+const HALF_SQRT: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+#[derive(Clone, Debug)]
+pub struct TransmissionMatrix {
+    philox: Philox4x32,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl TransmissionMatrix {
+    pub fn new(seed: u64, m: usize, n: usize) -> Self {
+        Self { philox: Philox4x32::new(seed), m, n }
+    }
+
+    /// Random access to entry (i, j): (re, im).
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> (f64, f64) {
+        debug_assert!(i < self.m && j < self.n);
+        let z = block_to_normals(self.philox.block_at(i as u64, (j / 2) as u64));
+        let lane = 2 * (j % 2);
+        (z[lane] * HALF_SQRT, z[lane + 1] * HALF_SQRT)
+    }
+
+    /// Stream row `i` into caller buffers (length n each).
+    pub fn row_into(&self, i: usize, re: &mut [f64], im: &mut [f64]) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        let mut j = 0;
+        while j < self.n {
+            let z = block_to_normals(self.philox.block_at(i as u64, (j / 2) as u64));
+            re[j] = z[0] * HALF_SQRT;
+            im[j] = z[1] * HALF_SQRT;
+            if j + 1 < self.n {
+                re[j + 1] = z[2] * HALF_SQRT;
+                im[j + 1] = z[3] * HALF_SQRT;
+            }
+            j += 2;
+        }
+    }
+
+    /// Complex field Y = R @ X for a frame batch X (n x k, dense columns).
+    /// Returns (Yr, Yi), each m x k. O(n) memory: rows are streamed.
+    pub fn field(&self, x: &Mat) -> (Mat, Mat) {
+        assert_eq!(x.rows, self.n, "frame dim {} != TM input dim {}", x.rows, self.n);
+        let k = x.cols;
+        let mut yr = Mat::zeros(self.m, k);
+        let mut yi = Mat::zeros(self.m, k);
+        // Disjoint row bands of both outputs; each worker streams TM rows.
+        let yi_ptr = SyncPtr(yi.data.as_mut_ptr());
+        parallel::par_chunks_mut(&mut yr.data, k, |start, yr_row| {
+            let i = start / k;
+            let mut re = vec![0.0; self.n];
+            let mut im = vec![0.0; self.n];
+            self.row_into(i, &mut re, &mut im);
+            // yi row i lives at the same offset; rows are disjoint per task.
+            let yi_row =
+                unsafe { std::slice::from_raw_parts_mut(yi_ptr.get().add(start), k) };
+            for jj in 0..self.n {
+                let (rij, iij) = (re[jj], im[jj]);
+                if rij == 0.0 && iij == 0.0 {
+                    continue;
+                }
+                let xrow = x.row(jj);
+                for c in 0..k {
+                    yr_row[c] += rij * xrow[c];
+                    yi_row[c] += iij * xrow[c];
+                }
+            }
+        });
+        (yr, yi)
+    }
+
+    /// Materialise (Re, Im) as dense matrices — tests & PJRT operands only.
+    pub fn materialize(&self) -> (Mat, Mat) {
+        let mut re = Mat::zeros(self.m, self.n);
+        let mut im = Mat::zeros(self.m, self.n);
+        for i in 0..self.m {
+            let (rr, ri) = {
+                let mut r = vec![0.0; self.n];
+                let mut v = vec![0.0; self.n];
+                self.row_into(i, &mut r, &mut v);
+                (r, v)
+            };
+            re.row_mut(i).copy_from_slice(&rr);
+            im.row_mut(i).copy_from_slice(&ri);
+        }
+        (re, im)
+    }
+}
+
+/// Send+Sync wrapper for the disjoint-row-band write pattern in `field`.
+/// The accessor keeps edition-2021 closures capturing the whole wrapper
+/// (field-precise capture would otherwise grab the bare `*mut f64`).
+struct SyncPtr(*mut f64);
+impl SyncPtr {
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    #[test]
+    fn random_access_matches_streaming() {
+        let tm = TransmissionMatrix::new(7, 8, 33);
+        let mut re = vec![0.0; 33];
+        let mut im = vec![0.0; 33];
+        for i in 0..8 {
+            tm.row_into(i, &mut re, &mut im);
+            for j in 0..33 {
+                let (r, v) = tm.entry(i, j);
+                assert_eq!(r, re[j], "({i},{j})");
+                assert_eq!(v, im[j], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = TransmissionMatrix::new(1, 4, 4).materialize();
+        let b = TransmissionMatrix::new(1, 4, 4).materialize();
+        let c = TransmissionMatrix::new(2, 4, 4).materialize();
+        assert_eq!(a.0, b.0);
+        assert_ne!(a.0, c.0);
+    }
+
+    #[test]
+    fn unit_complex_variance() {
+        let tm = TransmissionMatrix::new(3, 200, 500);
+        let (re, im) = tm.materialize();
+        let e2: f64 = re
+            .data
+            .iter()
+            .zip(&im.data)
+            .map(|(r, i)| r * r + i * i)
+            .sum::<f64>()
+            / (200.0 * 500.0);
+        assert!((e2 - 1.0).abs() < 0.02, "E|R|^2 = {e2}");
+    }
+
+    #[test]
+    fn field_matches_materialized_matmul() {
+        let tm = TransmissionMatrix::new(9, 16, 24);
+        let mut rng = crate::rng::Xoshiro256::new(4);
+        let x = Mat::gaussian(24, 5, 1.0, &mut rng);
+        let (yr, yi) = tm.field(&x);
+        let (re, im) = tm.materialize();
+        let want_r = matmul(&re, &x);
+        let want_i = matmul(&im, &x);
+        for (a, b) in yr.data.iter().zip(&want_r.data) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        for (a, b) in yi.data.iter().zip(&want_i.data) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rows_are_decorrelated() {
+        let tm = TransmissionMatrix::new(5, 50, 2000);
+        let mut r0 = vec![0.0; 2000];
+        let mut i0 = vec![0.0; 2000];
+        let mut r1 = vec![0.0; 2000];
+        let mut i1 = vec![0.0; 2000];
+        tm.row_into(0, &mut r0, &mut i0);
+        tm.row_into(1, &mut r1, &mut i1);
+        let dot: f64 = r0.iter().zip(&r1).map(|(a, b)| a * b).sum();
+        let n0: f64 = r0.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let n1: f64 = r1.iter().map(|a| a * a).sum::<f64>().sqrt();
+        assert!((dot / (n0 * n1)).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "frame dim")]
+    fn dimension_checked() {
+        let tm = TransmissionMatrix::new(0, 4, 8);
+        tm.field(&Mat::zeros(9, 1));
+    }
+}

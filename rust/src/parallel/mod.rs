@@ -1,0 +1,193 @@
+//! Fork-join parallelism over std::thread::scope (no rayon in the image).
+//!
+//! The OPU exposure loop and the blocked matmul both reduce to "split a
+//! row range across cores, write disjoint output slices". That is exactly
+//! what [`par_chunks_mut`] and [`par_ranges`] provide — nothing more, so
+//! there is no queue, no allocation per task, and determinism is trivial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `PHOTON_THREADS` overrides).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("PHOTON_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Split `len` items into at most `workers` contiguous ranges.
+pub fn split_ranges(len: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return vec![];
+    }
+    let workers = workers.clamp(1, len);
+    let base = len / workers;
+    let extra = len % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let sz = base + usize::from(w < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Run `f(range)` over a partition of `0..len` on up to `num_threads()`
+/// scoped threads. `f` must only touch state it owns for that range.
+pub fn par_ranges<F>(len: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let ranges = split_ranges(len, num_threads());
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for r in ranges {
+            scope.spawn(|| f(r));
+        }
+    });
+}
+
+/// Parallel-map `f` over mutable chunks of `out`, passing the chunk's
+/// starting index. Chunks are `chunk` items long (last may be short).
+pub fn par_chunks_mut<T, F>(out: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk must be positive");
+    let chunks: Vec<(usize, &mut [T])> = {
+        let mut v = Vec::new();
+        let mut rest = out;
+        let mut idx = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            v.push((idx, head));
+            idx += take;
+            rest = tail;
+        }
+        v
+    };
+    if chunks.len() <= 1 || num_threads() == 1 {
+        for (idx, c) in chunks {
+            f(idx, c);
+        }
+        return;
+    }
+    // Round-robin the chunks across a fixed set of scoped workers.
+    let nw = num_threads().min(chunks.len());
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..nw).map(|_| Vec::new()).collect();
+    for (i, c) in chunks.into_iter().enumerate() {
+        buckets[i % nw].push(c);
+    }
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(|| {
+                for (idx, c) in bucket {
+                    f(idx, c);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel fold: map each range to a partial value, combine sequentially.
+pub fn par_fold<T, M, R>(len: usize, map: M, reduce: R, init: T) -> T
+where
+    T: Send,
+    M: Fn(std::ops::Range<usize>) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    let ranges = split_ranges(len, num_threads());
+    if ranges.len() <= 1 {
+        return match ranges.into_iter().next() {
+            Some(r) => reduce(init, map(r)),
+            None => init,
+        };
+    }
+    let partials: Vec<T> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges.into_iter().map(|r| scope.spawn(|| map(r))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    partials.into_iter().fold(init, reduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn split_covers_everything_once() {
+        for len in [0usize, 1, 7, 64, 1000] {
+            for w in [1usize, 3, 8, 200] {
+                let ranges = split_ranges(len, w);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len);
+                let mut prev = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev);
+                    assert!(!r.is_empty());
+                    prev = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_ranges_touches_all() {
+        let hits = AtomicU64::new(0);
+        par_ranges(1000, |r| {
+            hits.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn par_chunks_writes_disjoint() {
+        let mut data = vec![0usize; 997];
+        par_chunks_mut(&mut data, 64, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let s = par_fold(
+            10_000,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+            0u64,
+        );
+        assert_eq!(s, 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        par_ranges(0, |_| panic!("must not be called"));
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 8, |_, _| panic!("must not be called"));
+        assert_eq!(par_fold(0, |_| 1u32, |a, b| a + b, 0), 0);
+    }
+}

@@ -1,0 +1,132 @@
+//! GPU roofline model — the paper's P100 comparator.
+//!
+//! time(n, m) = max(compute, memory) + launch latency, with an OOM cliff
+//! when the working set (R + input + output + RNG state) exceeds device
+//! memory. Generating the Gaussian matrix on the fly (curand) trades FLOPs
+//! for memory; the paper's baseline stores R, which is what OOMs at
+//! n ~ 7e4 on 16 GB (7e4^2 * 4 B * ... ≈ 19.6 GB for fp32 R alone).
+
+/// Datasheet-parameterised GPU model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// Peak fp32 throughput (TFLOP/s).
+    pub peak_tflops: f64,
+    /// Achievable GEMM efficiency (cuBLAS large-GEMM fraction of peak).
+    pub gemm_efficiency: f64,
+    /// Memory bandwidth (GB/s).
+    pub mem_bw_gbs: f64,
+    /// Device memory (GB).
+    pub mem_gb: f64,
+    /// Kernel launch + driver latency (ms).
+    pub launch_ms: f64,
+    /// RNG cost to generate one Gaussian entry (ns) — curand Box-Muller.
+    pub rng_ns_per_entry: f64,
+    /// Board power (W).
+    pub power_w: f64,
+}
+
+/// NVIDIA P100 16 GB (the paper's comparator).
+pub const P100: GpuModel = GpuModel {
+    name: "P100-16GB",
+    peak_tflops: 9.3,
+    gemm_efficiency: 0.85,
+    mem_bw_gbs: 732.0,
+    mem_gb: 16.0,
+    launch_ms: 0.02,
+    rng_ns_per_entry: 0.05,
+    power_w: 250.0,
+};
+
+/// NVIDIA V100 32 GB (for the extension sweep).
+pub const V100: GpuModel = GpuModel {
+    name: "V100-32GB",
+    peak_tflops: 14.0,
+    gemm_efficiency: 0.87,
+    mem_bw_gbs: 900.0,
+    mem_gb: 32.0,
+    launch_ms: 0.02,
+    rng_ns_per_entry: 0.04,
+    power_w: 300.0,
+};
+
+impl GpuModel {
+    /// Bytes needed to hold R (m x n), input (n), output (m) in fp32.
+    pub fn working_set_bytes(&self, n: usize, m: usize) -> u64 {
+        4 * (m as u64 * n as u64 + n as u64 + m as u64)
+    }
+
+    /// Predicted time for one n -> m Gaussian projection (generate R once,
+    /// multiply). None if the working set exceeds device memory.
+    pub fn projection_ms(&self, n: usize, m: usize) -> Option<f64> {
+        if self.working_set_bytes(n, m) as f64 > self.mem_gb * 1e9 {
+            return None;
+        }
+        let flops = 2.0 * m as f64 * n as f64; // matvec MACs
+        let compute_ms = flops / (self.peak_tflops * 1e12 * self.gemm_efficiency) * 1e3;
+        // Memory: stream R once + vectors (R dominates).
+        let bytes = self.working_set_bytes(n, m) as f64;
+        let mem_ms = bytes / (self.mem_bw_gbs * 1e9) * 1e3;
+        let rng_ms = m as f64 * n as f64 * self.rng_ns_per_entry / 1e6;
+        Some(self.launch_ms + compute_ms.max(mem_ms) + rng_ms)
+    }
+
+    /// Batched variant: amortise R generation across `batch` inputs.
+    pub fn projection_batch_ms(&self, n: usize, m: usize, batch: usize) -> Option<f64> {
+        let r_bytes = 4.0 * m as f64 * n as f64;
+        let io_bytes = 4.0 * batch as f64 * (n + m) as f64;
+        if r_bytes + io_bytes > self.mem_gb * 1e9 {
+            return None;
+        }
+        let flops = 2.0 * m as f64 * n as f64 * batch as f64;
+        let compute_ms = flops / (self.peak_tflops * 1e12 * self.gemm_efficiency) * 1e3;
+        let mem_ms = (r_bytes + io_bytes) / (self.mem_bw_gbs * 1e9) * 1e3;
+        let rng_ms = m as f64 * n as f64 * self.rng_ns_per_entry / 1e6;
+        Some(self.launch_ms + compute_ms.max(mem_ms) + rng_ms)
+    }
+
+    pub fn projection_energy_j(&self, n: usize, m: usize) -> Option<f64> {
+        Some(self.projection_ms(n, m)? / 1e3 * self.power_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_cliff_near_paper_value() {
+        // fp32 R at n = 7e4: 7e4^2 * 4 = 19.6 GB > 16 GB -> OOM. At 6e4:
+        // 14.4 GB < 16 GB -> fits.
+        assert!(P100.projection_ms(70_000, 70_000).is_none());
+        assert!(P100.projection_ms(60_000, 60_000).is_some());
+    }
+
+    #[test]
+    fn quadratic_scaling() {
+        let t1 = P100.projection_ms(8_192, 8_192).unwrap();
+        let t2 = P100.projection_ms(32_768, 32_768).unwrap();
+        let ratio = t2 / t1;
+        assert!(ratio > 8.0 && ratio < 32.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn launch_dominates_tiny() {
+        let t = P100.projection_ms(128, 128).unwrap();
+        assert!(t < 0.2, "tiny projection should be launch-bound: {t} ms");
+    }
+
+    #[test]
+    fn batching_amortises() {
+        let single = P100.projection_ms(16_384, 16_384).unwrap();
+        let batched = P100.projection_batch_ms(16_384, 16_384, 64).unwrap();
+        assert!(batched < 64.0 * single, "batch {batched} vs {}", 64.0 * single);
+    }
+
+    #[test]
+    fn v100_strictly_faster() {
+        let p = P100.projection_ms(32_768, 32_768).unwrap();
+        let v = V100.projection_ms(32_768, 32_768).unwrap();
+        assert!(v < p);
+    }
+}

@@ -1,0 +1,123 @@
+//! Performance + energy models regenerating Fig. 2 and the §I/§III claims.
+//!
+//! The paper's timing comparison ran a physical OPU against a P100. We
+//! reproduce the *shape* of that comparison from first principles:
+//! published OPU constants (DMD frame rate, exposure pipeline) vs. a GPU
+//! roofline with P100 datasheet numbers. Small-n GPU points can also be
+//! *measured* on the PJRT path and spliced in (see benches/fig2).
+
+pub mod gpu;
+pub mod opu;
+
+pub use gpu::{GpuModel, P100};
+pub use opu::OpuTimingModel;
+
+/// Joint prediction for one square n x n projection.
+#[derive(Clone, Copy, Debug)]
+pub struct ProjectionCost {
+    pub n: usize,
+    pub opu_ms: f64,
+    pub gpu_ms: Option<f64>, // None => OOM
+}
+
+/// Sweep dimensions and find the OPU/GPU crossover, Fig. 2 style.
+pub fn sweep(ns: &[usize], opu: &OpuTimingModel, gpu: &GpuModel) -> Vec<ProjectionCost> {
+    ns.iter()
+        .map(|&n| ProjectionCost {
+            n,
+            opu_ms: opu.projection_ms(n, n),
+            gpu_ms: gpu.projection_ms(n, n),
+        })
+        .collect()
+}
+
+/// First dimension where the OPU is strictly faster than the GPU.
+pub fn crossover_dim(opu: &OpuTimingModel, gpu: &GpuModel) -> usize {
+    // Bisection on monotone difference; bounds cover the paper's range.
+    let (mut lo, mut hi) = (64usize, 1 << 20);
+    let faster = |n: usize| match gpu.projection_ms(n, n) {
+        Some(g) => opu.projection_ms(n, n) < g,
+        None => true,
+    };
+    if faster(lo) {
+        return lo;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if faster(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// First dimension where the GPU cannot hold the problem (Fig. 2 cliff).
+pub fn gpu_oom_dim(gpu: &GpuModel) -> usize {
+    let (mut lo, mut hi) = (64usize, 1 << 24);
+    if gpu.projection_ms(lo, lo).is_none() {
+        return lo;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if gpu.projection_ms(mid, mid).is_none() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Energy-efficiency comparison backing the §I claim (~2 orders of
+/// magnitude): effective random-projection OPS per joule.
+pub fn energy_ratio(opu: &OpuTimingModel, gpu: &GpuModel, n: usize) -> Option<f64> {
+    let ops = 2.0 * (n as f64) * (n as f64); // one n x n projection, MAC*2
+    let opu_j = opu.projection_ms(n, n) / 1e3 * opu.power_w;
+    let gpu_j = gpu.projection_ms(n, n)? / 1e3 * gpu.power_w;
+    Some((ops / opu_j) / (ops / gpu_j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_in_paper_band() {
+        // Paper: "input and output dimensions smaller than ~12e3 -> GPU
+        // faster; after this point the OPU can bring large speedups."
+        let x = crossover_dim(&OpuTimingModel::default(), &P100);
+        assert!(
+            (4_000..40_000).contains(&x),
+            "crossover {x} outside the paper's order of magnitude"
+        );
+    }
+
+    #[test]
+    fn oom_in_paper_band() {
+        // Paper: GPU OOM for sizes exceeding 7e4.
+        let d = gpu_oom_dim(&P100);
+        assert!((30_000..200_000).contains(&d), "oom dim {d}");
+    }
+
+    #[test]
+    fn sweep_is_flat_for_opu_and_quadratic_for_gpu() {
+        let opu = OpuTimingModel::default();
+        let pts = sweep(&[1 << 10, 1 << 12, 1 << 14], &opu, &P100);
+        // OPU grows sub-linearly (near-constant + O(n) I/O)...
+        let opu_ratio = pts[2].opu_ms / pts[0].opu_ms;
+        assert!(opu_ratio < 20.0, "opu ratio {opu_ratio}");
+        // ...GPU grows ~quadratically (16x dim -> ~256x time, allow wide band
+        // because small-n is launch-latency dominated).
+        let g0 = pts[0].gpu_ms.unwrap();
+        let g2 = pts[2].gpu_ms.unwrap();
+        assert!(g2 / g0 > 30.0, "gpu ratio {}", g2 / g0);
+    }
+
+    #[test]
+    fn energy_claim_two_orders() {
+        let r = energy_ratio(&OpuTimingModel::default(), &P100, 50_000).unwrap();
+        assert!(r > 10.0, "energy ratio {r} — expected >> 1");
+    }
+}

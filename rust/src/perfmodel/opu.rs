@@ -1,0 +1,133 @@
+//! OPU latency/energy model — published LightOn constants.
+//!
+//! The OPU pipeline per projection batch:
+//!   1. DMD upload + display of B bit-plane frames (2 kHz frame clock),
+//!   2. camera exposure + readout of the m-pixel speckle (overlapped with
+//!      the next frame on real hardware),
+//!   3. PCIe transfer + host pre/post-processing, the "small linear O(n)
+//!      overhead" of §III.
+//!
+//! With 1 frame the paper quotes ~1.2 ms/projection regardless of (n, m)
+//! up to the native limits (n <= 1e6, m <= 2e6).
+
+/// Latency/energy model of one OPU.
+#[derive(Clone, Copy, Debug)]
+pub struct OpuTimingModel {
+    /// DMD frame period (ms). 2 kHz DMD => 0.5 ms.
+    pub frame_ms: f64,
+    /// Fixed per-batch overhead (driver, trigger, exposure setup), ms.
+    pub fixed_ms: f64,
+    /// Host-side linear overhead per input element (binarisation + DMA), ns.
+    pub per_input_ns: f64,
+    /// Host-side linear overhead per output element (ADC readout + DMA), ns.
+    pub per_output_ns: f64,
+    /// Native input dimension limit (DMD pixels).
+    pub max_input: usize,
+    /// Native output dimension limit (camera pixels).
+    pub max_output: usize,
+    /// Wall power (W) — the paper's 30 W.
+    pub power_w: f64,
+}
+
+impl Default for OpuTimingModel {
+    fn default() -> Self {
+        Self {
+            frame_ms: 0.5,
+            fixed_ms: 0.7, // fixed + one frame = the quoted ~1.2 ms
+            per_input_ns: 1.0,
+            per_output_ns: 1.0,
+            max_input: 1_000_000,
+            max_output: 2_000_000,
+            power_w: 30.0,
+        }
+    }
+}
+
+impl OpuTimingModel {
+    /// Time to project one n-dim input to m outputs with one binary frame.
+    pub fn projection_ms(&self, n: usize, m: usize) -> f64 {
+        self.projection_ms_frames(n, m, 1)
+    }
+
+    /// Same with `frames` sequential DMD frames (bit-planes and/or sign
+    /// split multiply the frame count; holographic linear mode uses 3
+    /// exposures per frame).
+    pub fn projection_ms_frames(&self, n: usize, m: usize, frames: usize) -> f64 {
+        // Tiling beyond the native aperture: ceil-divide into passes.
+        let in_passes = n.div_ceil(self.max_input);
+        let out_passes = m.div_ceil(self.max_output);
+        let passes = (in_passes * out_passes) as f64;
+        let optics = self.fixed_ms + self.frame_ms * frames as f64 * passes;
+        let host = (n as f64 * self.per_input_ns + m as f64 * self.per_output_ns) / 1e6;
+        optics + host
+    }
+
+    /// Frames needed for a signed `bits`-bit linear projection in
+    /// holographic mode: 2 sign planes x bits bit-planes x 3 exposures,
+    /// minus shared anchor/readout reuse (|Ra|^2 is calibrated once).
+    pub fn linear_frames(&self, bits: usize, signed: bool) -> usize {
+        let planes = bits * if signed { 2 } else { 1 };
+        2 * planes // |R(x+a)|^2 and |Rx|^2 per plane; |Ra|^2 amortised
+    }
+
+    /// Energy per projection (J).
+    pub fn projection_energy_j(&self, n: usize, m: usize) -> f64 {
+        self.projection_ms(n, m) / 1e3 * self.power_w
+    }
+
+    /// Effective OPS of the analog multiply-accumulate (the "1500 TeraOPS"
+    /// §I headline at native full aperture): 2nm ops per frame period.
+    pub fn effective_tops(&self, n: usize, m: usize) -> f64 {
+        let ops = 2.0 * n as f64 * m as f64;
+        ops / (self.frame_ms / 1e3) / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoted_latency_at_any_dim() {
+        let m = OpuTimingModel::default();
+        // ~1.2 ms, near-constant from 1k to 1M inputs.
+        let t_small = m.projection_ms(1_000, 1_000);
+        let t_big = m.projection_ms(1_000_000, 1_000_000);
+        assert!((t_small - 1.2).abs() < 0.1, "{t_small}");
+        assert!(t_big < 2.0 * 1.2 + 2.1, "{t_big}"); // + O(n) host overhead
+    }
+
+    #[test]
+    fn linear_in_host_overhead_only() {
+        let m = OpuTimingModel::default();
+        let t1 = m.projection_ms(100_000, 100_000);
+        let t2 = m.projection_ms(1_000_000, 1_000_000);
+        // 10x dims => far less than 10x time (near-constant optics).
+        assert!(t2 / t1 < 3.0, "{t1} -> {t2}");
+    }
+
+    #[test]
+    fn tiling_beyond_aperture() {
+        let m = OpuTimingModel::default();
+        let t_in = m.projection_ms(2_000_000, 1_000); // 2 input passes
+        let t_native = m.projection_ms(1_000_000, 1_000);
+        assert!(t_in > t_native);
+    }
+
+    #[test]
+    fn headline_tops_order_of_magnitude() {
+        let m = OpuTimingModel::default();
+        // 1e6 x 2e6 at 2 kHz = 8e15 OPS = 8000 TOPS; the paper quotes
+        // 1500 TOPS for the shipping configuration — same order.
+        let tops = m.effective_tops(1_000_000, 2_000_000);
+        assert!(tops > 1_000.0 && tops < 20_000.0, "{tops}");
+    }
+
+    #[test]
+    fn frames_accounting() {
+        let m = OpuTimingModel::default();
+        assert_eq!(m.linear_frames(8, true), 32);
+        assert_eq!(m.linear_frames(1, false), 2);
+        assert!(m.projection_ms_frames(1000, 1000, 32) > m.projection_ms(1000, 1000));
+    }
+}

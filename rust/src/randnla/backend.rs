@@ -1,0 +1,182 @@
+//! Sketching backends: who performs the randomization step.
+//!
+//! The paper's whole point is that the *same* RandNLA algorithm can take
+//! its Gaussian sketch from different devices. [`Sketcher`] is that seam:
+//!
+//! - [`DigitalSketcher`] — host CPU, explicit G (the "numerical" arm);
+//! - [`PjrtSketcher`]    — AOT-compiled XLA projection (the GPU-baseline
+//!   arm, running the L1 Pallas kernel or the plain dot);
+//! - `OpuSketcher` (in [`crate::randnla::sketch`]) — the simulated
+//!   photonic co-processor (the "optical" arm).
+
+use anyhow::Result;
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::Xoshiro256;
+use crate::runtime::PjrtHandle;
+
+/// A fixed m x n Gaussian sketching operator.
+pub trait Sketcher: Send + Sync {
+    /// Output (sketch) dimension m.
+    fn m(&self) -> usize;
+    /// Input dimension n.
+    fn n(&self) -> usize;
+    /// Apply: (n x k) -> (m x k), approximately G @ a with G iid N(0, 1).
+    fn project(&self, a: &Mat) -> Mat;
+    /// Human-readable arm label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Host-CPU digital Gaussian sketch (materialised G, exact matmul).
+pub struct DigitalSketcher {
+    g: Mat,
+}
+
+impl DigitalSketcher {
+    pub fn new(m: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        Self { g: Mat::gaussian(m, n, 1.0, &mut rng) }
+    }
+
+    /// The explicit operator (tests / cross-validation).
+    pub fn matrix(&self) -> &Mat {
+        &self.g
+    }
+}
+
+impl Sketcher for DigitalSketcher {
+    fn m(&self) -> usize {
+        self.g.rows
+    }
+
+    fn n(&self) -> usize {
+        self.g.cols
+    }
+
+    fn project(&self, a: &Mat) -> Mat {
+        matmul(&self.g, a)
+    }
+
+    fn label(&self) -> &'static str {
+        "digital"
+    }
+}
+
+/// XLA/PJRT-executed digital sketch: G is generated host-side once, the
+/// projection runs through the AOT artifact ladder (pad/crop adapted) on
+/// the PJRT engine thread.
+pub struct PjrtSketcher {
+    g: Mat,
+    handle: PjrtHandle,
+    /// Artifact prefix: "proj_xla" (plain dot) or "proj_pallas" (L1 kernel).
+    prefix: &'static str,
+}
+
+impl PjrtSketcher {
+    pub fn new(
+        m: usize,
+        n: usize,
+        seed: u64,
+        handle: PjrtHandle,
+        use_pallas: bool,
+    ) -> Result<Self> {
+        let mut rng = Xoshiro256::new(seed);
+        let g = Mat::gaussian(m, n, 1.0, &mut rng);
+        let prefix = if use_pallas { "proj_pallas" } else { "proj_xla" };
+        // Fail fast if no bucket can serve this shape.
+        let ok = handle
+            .buckets(prefix)?
+            .iter()
+            .any(|&(bm, bn)| bm >= m && bn >= n);
+        if !ok {
+            anyhow::bail!("no {prefix} bucket >= {m}x{n}");
+        }
+        Ok(Self { g, handle, prefix })
+    }
+
+    pub fn matrix(&self) -> &Mat {
+        &self.g
+    }
+}
+
+impl Sketcher for PjrtSketcher {
+    fn m(&self) -> usize {
+        self.g.rows
+    }
+
+    fn n(&self) -> usize {
+        self.g.cols
+    }
+
+    fn project(&self, a: &Mat) -> Mat {
+        self.handle
+            .project(self.prefix, self.g.clone(), a.clone())
+            .expect("PJRT projection failed")
+    }
+
+    fn label(&self) -> &'static str {
+        match self.prefix {
+            "proj_pallas" => "pjrt-pallas",
+            _ => "pjrt-xla",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_frobenius_error;
+
+    #[test]
+    fn digital_project_is_exact_matmul() {
+        let s = DigitalSketcher::new(8, 32, 1);
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::gaussian(32, 5, 1.0, &mut rng);
+        let got = s.project(&a);
+        let want = matmul(s.matrix(), &a);
+        assert_eq!(got, want);
+        assert_eq!(s.m(), 8);
+        assert_eq!(s.n(), 32);
+    }
+
+    #[test]
+    fn digital_deterministic_by_seed() {
+        let a = DigitalSketcher::new(4, 8, 7);
+        let b = DigitalSketcher::new(4, 8, 7);
+        assert_eq!(a.matrix(), b.matrix());
+        let c = DigitalSketcher::new(4, 8, 8);
+        assert_ne!(a.matrix(), c.matrix());
+    }
+
+    #[test]
+    fn jl_property_preserves_norms_in_expectation() {
+        // E[||Gx||^2 / m] = ||x||^2.
+        let n = 64;
+        let m = 48;
+        let mut rng = Xoshiro256::new(3);
+        let x = Mat::gaussian(n, 1, 1.0, &mut rng);
+        let x_norm2: f64 = x.data.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 50;
+        for t in 0..trials {
+            let s = DigitalSketcher::new(m, n, 100 + t);
+            let gx = s.project(&x);
+            acc += gx.data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - x_norm2).abs() / x_norm2 < 0.1,
+            "JL violated: {mean} vs {x_norm2}"
+        );
+    }
+
+    #[test]
+    fn gtg_concentrates_to_identity() {
+        // G^T G / m ~= I for m >> 1 (the estimator's core property).
+        let s = DigitalSketcher::new(512, 16, 5);
+        let gtg = crate::linalg::matmul_tn(s.matrix(), s.matrix()).scale(1.0 / 512.0);
+        // Theory: E||G^T G/m - I||_F ~ sqrt(n(n+1)/m)/sqrt(n) ≈ 0.18 here.
+        let err = rel_frobenius_error(&Mat::eye(16), &gtg);
+        assert!(err < 0.3, "G^T G / m far from I: {err}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Optical random features — the OPU's heritage application (the paper
+//! cites Saade et al. 2016 and Ohana et al. 2020: "kernel computations
+//! from large-scale random features obtained by optical processing
+//! units"). Two feature maps over the same device:
+//!
+//! - **RFF** (random Fourier features, linear mode):
+//!   phi(x) = sqrt(2/D) cos(G x / sigma + b) approximates the Gaussian
+//!   kernel k(x, y) = exp(-||x-y||^2 / (2 sigma^2)).
+//! - **Optical kernel** (native intensity mode): phi(x) = |R x|^2 / D
+//!   approximates the OPU's polynomial kernel
+//!   k(x, y) = (||x||^2 ||y||^2 + |<x, y>|^2-ish moments); we expose the
+//!   second-moment form k2(x, y) = ||x||^2 ||y||^2 + 2 <x, y>^2 (real R
+//!   halves, cf. Saade et al. eq. (4)).
+
+use crate::linalg::Mat;
+use crate::randnla::backend::Sketcher;
+use crate::rng::Xoshiro256;
+
+/// Random Fourier features through any sketching backend.
+pub struct RffMap {
+    /// Kernel bandwidth sigma.
+    pub sigma: f64,
+    /// Phase offsets b ~ U[0, 2pi), one per output feature.
+    phases: Vec<f64>,
+}
+
+impl RffMap {
+    pub fn new(features: usize, sigma: f64, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let phases = (0..features)
+            .map(|_| rng.next_f64() * std::f64::consts::TAU)
+            .collect();
+        Self { sigma, phases }
+    }
+
+    /// phi(X): (n x k) data columns -> (D x k) feature columns.
+    pub fn features(&self, sketcher: &dyn Sketcher, x: &Mat) -> Mat {
+        let d = sketcher.m();
+        assert_eq!(d, self.phases.len(), "feature count mismatch");
+        let gx = sketcher.project(x);
+        let scale = (2.0 / d as f64).sqrt();
+        Mat::from_fn(d, x.cols, |i, j| {
+            scale * (gx.at(i, j) / self.sigma + self.phases[i]).cos()
+        })
+    }
+
+    /// The kernel RFF approximates.
+    pub fn kernel(&self, x: &[f64], y: &[f64]) -> f64 {
+        let d2: f64 = x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum();
+        (-d2 / (2.0 * self.sigma * self.sigma)).exp()
+    }
+}
+
+/// Approximate Gram matrix K ~= phi(X)^T phi(X) from feature columns.
+pub fn gram_from_features(phi: &Mat) -> Mat {
+    crate::linalg::matmul_tn(phi, phi)
+}
+
+/// The optical (intensity-mode) feature map: phi(x) = I(x) / D where
+/// I = |Rx|^2 from the native OPU op. Expectation over complex-Gaussian
+/// R: E[phi(x)^T phi(y)] * D -> ||x||^2 ||y||^2 + <x, y>^2.
+pub fn optical_kernel_expectation(x: &[f64], y: &[f64]) -> f64 {
+    let nx: f64 = x.iter().map(|v| v * v).sum();
+    let ny: f64 = y.iter().map(|v| v * v).sum();
+    let dot: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    nx * ny + dot * dot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opu::{OpuConfig, OpuDevice};
+    use crate::randnla::backend::DigitalSketcher;
+    use crate::randnla::sketch::OpuSketcher;
+    use std::sync::Arc;
+
+    fn unit_cols(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        let mut x = Mat::gaussian(n, k, 1.0, &mut rng);
+        for j in 0..k {
+            let norm: f64 = (0..n).map(|i| x.at(i, j) * x.at(i, j)).sum::<f64>().sqrt();
+            for i in 0..n {
+                *x.at_mut(i, j) /= norm;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn rff_gram_approximates_gaussian_kernel_digital() {
+        let (n, d, k) = (32, 4096, 6);
+        let x = unit_cols(n, k, 1);
+        let map = RffMap::new(d, 1.0, 2);
+        let s = DigitalSketcher::new(d, n, 3);
+        let phi = map.features(&s, &x);
+        let gram = gram_from_features(&phi);
+        for i in 0..k {
+            for j in 0..k {
+                let want = map.kernel(&x.col(i), &x.col(j));
+                let got = gram.at(i, j);
+                assert!(
+                    (want - got).abs() < 0.08,
+                    "K[{i}{j}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rff_gram_approximates_gaussian_kernel_optical() {
+        let (n, d, k) = (32, 2048, 4);
+        let x = unit_cols(n, k, 4);
+        let map = RffMap::new(d, 1.0, 5);
+        let dev = Arc::new(OpuDevice::new(OpuConfig::ideal(6, d, n)));
+        let s = OpuSketcher::new(dev);
+        let phi = map.features(&s, &x);
+        let gram = gram_from_features(&phi);
+        for i in 0..k {
+            for j in 0..k {
+                let want = map.kernel(&x.col(i), &x.col(j));
+                assert!(
+                    (want - gram.at(i, j)).abs() < 0.12,
+                    "optical K[{i}{j}]: {} vs {want}",
+                    gram.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rff_features_bounded() {
+        let map = RffMap::new(64, 1.0, 7);
+        let s = DigitalSketcher::new(64, 16, 8);
+        let x = unit_cols(16, 3, 9);
+        let phi = map.features(&s, &x);
+        let bound = (2.0 / 64.0f64).sqrt() + 1e-12;
+        assert!(phi.data.iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn optical_kernel_matches_native_intensity_moments() {
+        // Native-mode check: mean_i I_x(i) * I_y(i) over many camera rows
+        // converges to ||x||^2||y||^2 + <x,y>^2 for our complex medium.
+        let n = 24;
+        let m = 20_000;
+        let dev = OpuDevice::new(OpuConfig::ideal(10, m, n));
+        let x = unit_cols(n, 2, 11);
+        let ix = dev.intensity_unconstrained(&x);
+        let mut acc = 0.0;
+        for i in 0..m {
+            acc += ix.at(i, 0) * ix.at(i, 1);
+        }
+        let got = acc / m as f64;
+        let want = optical_kernel_expectation(&x.col(0), &x.col(1));
+        assert!(
+            (got - want).abs() / want < 0.1,
+            "native optical kernel: {got} vs {want}"
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Sketched (approximate) matrix multiplication — paper §II-A.
+//!
+//! `A^T B ~= (GA)^T (GB) / m`, unbiased because `E[G^T G] = m I`.
+//! Relative Frobenius error decays as ~1/sqrt(m) (compression-ratio sweep
+//! is Fig. 1's matmul panel).
+
+use crate::linalg::{matmul_tn, Mat};
+use crate::randnla::backend::Sketcher;
+
+/// Approximate A^T B via a shared sketch of both operands.
+/// A, B are (n x k); result approximates the (k x k) Gram product.
+pub fn approx_matmul_tn(sketcher: &dyn Sketcher, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "A and B must share the projected axis");
+    assert_eq!(a.rows, sketcher.n(), "operand dim != sketcher input dim");
+    let sa = sketcher.project(a);
+    let sb = sketcher.project(b);
+    matmul_tn(&sa, &sb).scale(1.0 / sketcher.m() as f64)
+}
+
+/// Exact baseline for the same product.
+pub fn exact_matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    matmul_tn(a, b)
+}
+
+/// Theoretical speedup factor of the sketched product at compression m/n
+/// (paper: "results in an n/m speedup").
+pub fn speedup_factor(n: usize, m: usize) -> f64 {
+    n as f64 / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{frobenius, rel_frobenius_error};
+    use crate::randnla::backend::DigitalSketcher;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn unbiased_over_trials() {
+        let n = 48;
+        let mut rng = Xoshiro256::new(1);
+        let a = Mat::gaussian(n, 8, 1.0, &mut rng);
+        let b = Mat::gaussian(n, 8, 1.0, &mut rng);
+        let want = exact_matmul_tn(&a, &b);
+        let mut acc = Mat::zeros(8, 8);
+        let trials = 300;
+        for t in 0..trials {
+            let s = DigitalSketcher::new(24, n, 1000 + t);
+            acc = acc.add(&approx_matmul_tn(&s, &a, &b));
+        }
+        let mean = acc.scale(1.0 / trials as f64);
+        let rel = rel_frobenius_error(&want, &mean);
+        assert!(rel < 0.12, "bias: {rel}");
+    }
+
+    #[test]
+    fn error_decays_with_m() {
+        let n = 128;
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::gaussian(n, 16, 1.0, &mut rng);
+        let b = Mat::gaussian(n, 16, 1.0, &mut rng);
+        let want = exact_matmul_tn(&a, &b);
+        let err_at = |m: usize| {
+            let mut total = 0.0;
+            for t in 0..8 {
+                let s = DigitalSketcher::new(m, n, 50 + t);
+                total += rel_frobenius_error(&want, &approx_matmul_tn(&s, &a, &b));
+            }
+            total / 8.0
+        };
+        let e16 = err_at(16);
+        let e64 = err_at(64);
+        let e256 = err_at(256);
+        assert!(e64 < e16, "{e16} -> {e64}");
+        assert!(e256 < e64, "{e64} -> {e256}");
+        // ~1/sqrt(m): quadrupling m should roughly halve the error.
+        let ratio = e16 / e64;
+        assert!(ratio > 1.3 && ratio < 3.5, "decay ratio {ratio}");
+    }
+
+    #[test]
+    fn exact_recovered_when_m_equals_identity_dims() {
+        // With G = I (not random), the "sketch" is exact; sanity-check the
+        // plumbing by monkey-sketching through a DigitalSketcher whose G
+        // we overwrite conceptually: use big m and check closeness instead.
+        let n = 32;
+        let mut rng = Xoshiro256::new(3);
+        let a = Mat::gaussian(n, 4, 1.0, &mut rng);
+        let b = Mat::gaussian(n, 4, 1.0, &mut rng);
+        let s = DigitalSketcher::new(4096, n, 9);
+        let approx = approx_matmul_tn(&s, &a, &b);
+        let want = exact_matmul_tn(&a, &b);
+        assert!(rel_frobenius_error(&want, &approx) < 0.1);
+    }
+
+    #[test]
+    fn speedup_is_n_over_m() {
+        assert_eq!(speedup_factor(1024, 128), 8.0);
+    }
+
+    #[test]
+    fn norm_scale_sane() {
+        // The approximation must not blow up norms.
+        let n = 64;
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(n, 8, 1.0, &mut rng);
+        let s = DigitalSketcher::new(32, n, 5);
+        let approx = approx_matmul_tn(&s, &a, &a);
+        let want = exact_matmul_tn(&a, &a);
+        let ratio = frobenius(&approx) / frobenius(&want);
+        assert!(ratio > 0.5 && ratio < 2.0, "{ratio}");
+    }
+}

@@ -1,0 +1,25 @@
+//! RandNLA algorithms over pluggable sketching backends (paper §II).
+//!
+//! Every algorithm is written against the [`backend::Sketcher`] seam so the
+//! randomization step can run on the simulated OPU, the host CPU, or the
+//! AOT-compiled PJRT path — the comparison that *is* the paper.
+
+pub mod backend;
+pub mod features;
+pub mod lstsq;
+pub mod matmul;
+pub mod nystrom;
+pub mod randsvd;
+pub mod sketch;
+pub mod trace;
+pub mod triangles;
+
+pub use backend::{DigitalSketcher, PjrtSketcher, Sketcher};
+pub use features::{gram_from_features, RffMap};
+pub use lstsq::{exact_lstsq, sketched_lstsq};
+pub use matmul::{approx_matmul_tn, exact_matmul_tn};
+pub use nystrom::nystrom;
+pub use randsvd::{randsvd, RandSvd, RandSvdOpts};
+pub use sketch::{symmetric_sketch, OpuSketcher};
+pub use trace::{exact_trace, hutchinson};
+pub use triangles::{estimate_triangles, estimate_triangles_dense};

@@ -1,0 +1,81 @@
+//! Nyström approximation of PSD matrices — an "extension" RandNLA method
+//! beyond the paper's four demos (its conclusion invites exactly this kind
+//! of pipeline: OPU randomization + compressed-domain algebra).
+//!
+//! A ~= (A G^T) (G A G^T)^+ (G A): two sketches, one m x m pseudo-inverse.
+
+use crate::linalg::{self, matmul, Mat};
+use crate::randnla::backend::Sketcher;
+
+/// Nyström PSD approximation with spectral-cutoff pseudo-inverse.
+pub fn nystrom(sketcher: &dyn Sketcher, a: &Mat, rcond: f64) -> Mat {
+    assert!(a.is_square(), "nystrom needs PSD (square) input");
+    assert_eq!(a.rows, sketcher.n());
+    let ga = sketcher.project(a); // (m x n) = G A
+    let agt = ga.transpose(); // A G^T for symmetric A
+    let core = sketcher.project(&agt); // G A G^T (m x m)
+    let core_pinv = pinv(&core.symmetrized(), rcond);
+    matmul(&matmul(&agt, &core_pinv), &ga)
+}
+
+/// Moore-Penrose pseudo-inverse via the exact SVD with cutoff
+/// `rcond * sigma_max`.
+pub fn pinv(a: &Mat, rcond: f64) -> Mat {
+    let linalg::Svd { u, s, vt } = linalg::svd(a);
+    let cutoff = s.first().copied().unwrap_or(0.0) * rcond;
+    let mut vs = vt.transpose();
+    for i in 0..vs.rows {
+        for (j, sv) in s.iter().enumerate() {
+            let inv = if *sv > cutoff && *sv > 0.0 { 1.0 / sv } else { 0.0 };
+            *vs.at_mut(i, j) *= inv;
+        }
+    }
+    linalg::matmul_nt(&vs, &u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_frobenius_error;
+    use crate::randnla::backend::DigitalSketcher;
+    use crate::workload::psd_matrix;
+
+    #[test]
+    fn pinv_of_invertible_is_inverse() {
+        let a = Mat::from_rows(&[vec![2.0, 0.0], vec![0.0, 4.0]]);
+        let p = pinv(&a, 1e-12);
+        let prod = matmul(&a, &p);
+        assert!(rel_frobenius_error(&Mat::eye(2), &prod) < 1e-10);
+    }
+
+    #[test]
+    fn pinv_handles_rank_deficiency() {
+        let a = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 0.0]]);
+        let p = pinv(&a, 1e-10);
+        // A A^+ A = A.
+        let back = matmul(&matmul(&a, &p), &a);
+        assert!(rel_frobenius_error(&a, &back) < 1e-10);
+    }
+
+    #[test]
+    fn nystrom_reconstructs_low_rank_psd() {
+        // PSD with inner dim 8 has rank <= 8; m = 24 captures it.
+        let a = psd_matrix(48, 8, 1);
+        let s = DigitalSketcher::new(24, 48, 2);
+        let approx = nystrom(&s, &a, 1e-8);
+        let rel = rel_frobenius_error(&a, &approx);
+        assert!(rel < 0.05, "nystrom error {rel}");
+    }
+
+    #[test]
+    fn nystrom_improves_with_m() {
+        let a = psd_matrix(64, 32, 3);
+        let err = |m: usize, seed| {
+            let s = DigitalSketcher::new(m, 64, seed);
+            rel_frobenius_error(&a, &nystrom(&s, &a, 1e-8))
+        };
+        let e_small: f64 = (0..5).map(|t| err(12, 10 + t)).sum::<f64>() / 5.0;
+        let e_big: f64 = (0..5).map(|t| err(48, 20 + t)).sum::<f64>() / 5.0;
+        assert!(e_big < e_small, "{e_small} -> {e_big}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Randomized SVD — paper §II-C (Halko, Martinsson & Tropp 2011).
+//!
+//! 1. Range finding: Y = A Omega (Omega = G^T from the sketcher, so the
+//!    OPU performs the randomization step: Y^T = G A^T).
+//! 2. Optional power iterations with re-orthonormalisation.
+//! 3. Q = thinQR(Y); small exact SVD of Q^T A; left factor lifted by Q.
+
+use crate::linalg::{self, matmul, matmul_tn, Mat};
+use crate::randnla::backend::Sketcher;
+
+/// RandSVD output: rank-k factors, singular values descending.
+pub struct RandSvd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+    /// Columns actually used for the range (k + oversample).
+    pub l: usize,
+}
+
+/// Options for the decomposition.
+#[derive(Clone, Copy, Debug)]
+pub struct RandSvdOpts {
+    pub rank: usize,
+    pub oversample: usize,
+    /// Power iterations (q in HMT); 0 is plain range finding.
+    pub power_iters: usize,
+}
+
+impl Default for RandSvdOpts {
+    fn default() -> Self {
+        Self { rank: 16, oversample: 8, power_iters: 2 }
+    }
+}
+
+/// Compute a rank-`opts.rank` approximate SVD of `a` (n x n or rectangular
+/// with rows = sketcher.n()). The sketcher must have m >= rank+oversample;
+/// its first l rows are used as Omega^T.
+pub fn randsvd(sketcher: &dyn Sketcher, a: &Mat, opts: RandSvdOpts) -> RandSvd {
+    let l = opts.rank + opts.oversample;
+    assert!(l <= sketcher.m(), "sketcher m {} < rank+oversample {l}", sketcher.m());
+    assert_eq!(
+        a.cols,
+        sketcher.n(),
+        "A cols {} != sketcher n {} (the sketch contracts A's columns)",
+        a.cols,
+        sketcher.n()
+    );
+
+    // Y = A Omega with Omega = G^T (n x m): the device computes G A^T
+    // (= Y^T), so the *randomization* step is one OPU/PJRT projection of
+    // A^T — exactly the offload the paper proposes. Keep l columns.
+    let yt = sketcher.project(&a.transpose()); // (m x a.rows)
+    let y_full = yt.transpose(); // (a.rows x m)
+    let y = y_full.crop(y_full.rows, l.min(y_full.cols));
+
+    // Power iterations with re-orth: Y <- A (A^T Q(Y)).
+    let mut q = linalg::orthonormalize(&y);
+    for _ in 0..opts.power_iters {
+        let z = matmul_tn(a, &q); // A^T Q
+        let qz = linalg::orthonormalize(&z);
+        let w = matmul(a, &qz); // A Q(Z)
+        q = linalg::orthonormalize(&w);
+    }
+
+    // Small exact SVD in the compressed space.
+    let b = matmul_tn(&q, a); // (l x cols)
+    let linalg::Svd { u: ub, s, vt } = linalg::svd(&b);
+    let u = matmul(&q, &ub);
+
+    let k = opts.rank.min(s.len());
+    RandSvd {
+        u: u.crop(u.rows, k),
+        s: s[..k].to_vec(),
+        vt: vt.crop(k, vt.cols),
+        l,
+    }
+}
+
+/// Rank-k reconstruction from the factors.
+pub fn reconstruct(r: &RandSvd) -> Mat {
+    linalg::reconstruct(&r.u, &r.s, &r.vt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_frobenius_error;
+    use crate::randnla::backend::DigitalSketcher;
+    use crate::workload::{matrix_with_spectrum, Spectrum};
+
+    fn low_rank(n: usize, rank: usize, seed: u64) -> Mat {
+        matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank, noise: 1e-3 }, seed)
+    }
+
+    #[test]
+    fn recovers_low_rank_matrix() {
+        let n = 64;
+        let a = low_rank(n, 8, 1);
+        let s = DigitalSketcher::new(24, n, 2);
+        let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+        let rec = reconstruct(&r);
+        let rel = rel_frobenius_error(&a, &rec);
+        assert!(rel < 0.02, "low-rank recovery: {rel}");
+    }
+
+    #[test]
+    fn singular_values_match_exact() {
+        let n = 48;
+        let a = matrix_with_spectrum(n, Spectrum::Exponential { decay: 0.7 }, 3);
+        let exact = linalg::svd(&a).s;
+        let s = DigitalSketcher::new(32, n, 4);
+        let r = randsvd(&s, &a, RandSvdOpts { rank: 10, oversample: 10, power_iters: 2 });
+        for i in 0..6 {
+            let rel = (r.s[i] - exact[i]).abs() / exact[i];
+            assert!(rel < 0.05, "sigma_{i}: {} vs {} ({rel})", r.s[i], exact[i]);
+        }
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let n = 40;
+        let a = low_rank(n, 6, 5);
+        let s = DigitalSketcher::new(20, n, 6);
+        let r = randsvd(&s, &a, RandSvdOpts { rank: 6, oversample: 6, power_iters: 1 });
+        let utu = matmul_tn(&r.u, &r.u);
+        assert!(rel_frobenius_error(&Mat::eye(6), &utu) < 1e-9);
+        let vvt = matmul(&r.vt, &r.vt.transpose());
+        assert!(rel_frobenius_error(&Mat::eye(6), &vvt) < 1e-9);
+    }
+
+    #[test]
+    fn power_iterations_help_flat_spectra() {
+        let n = 64;
+        let a = matrix_with_spectrum(n, Spectrum::Polynomial { power: 0.5 }, 7);
+        let err = |q: usize| {
+            let s = DigitalSketcher::new(24, n, 100 + q as u64);
+            let r = randsvd(
+                &s,
+                &a,
+                RandSvdOpts { rank: 8, oversample: 8, power_iters: q },
+            );
+            let rec = reconstruct(&r);
+            // Compare against the optimal rank-8 truncation.
+            let best = linalg::truncated(&a, 8);
+            rel_frobenius_error(&best, &rec)
+        };
+        let e0 = err(0);
+        let e3 = err(3);
+        assert!(e3 < e0, "power iters did not help: {e0} -> {e3}");
+    }
+
+    #[test]
+    fn near_optimal_vs_eckart_young() {
+        let n = 56;
+        let a = matrix_with_spectrum(n, Spectrum::Exponential { decay: 0.8 }, 9);
+        let k = 8;
+        let best_err = rel_frobenius_error(&a, &linalg::truncated(&a, k));
+        let s = DigitalSketcher::new(32, n, 10);
+        let r = randsvd(&s, &a, RandSvdOpts { rank: k, oversample: 12, power_iters: 2 });
+        let rand_err = rel_frobenius_error(&a, &reconstruct(&r));
+        assert!(
+            rand_err < 1.3 * best_err + 1e-9,
+            "randsvd {rand_err} vs optimal {best_err}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "rank+oversample")]
+    fn rejects_undersized_sketcher() {
+        let a = low_rank(32, 4, 11);
+        let s = DigitalSketcher::new(8, 32, 12);
+        randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 0 });
+    }
+}

@@ -1,0 +1,118 @@
+//! The optical sketching arm + symmetric-sketch helpers shared by the
+//! trace / triangle estimators.
+
+use std::sync::Arc;
+
+use crate::linalg::{matmul_nt, Mat};
+use crate::opu::OpuDevice;
+use crate::randnla::backend::Sketcher;
+
+/// Photonic sketcher: projections run on the simulated OPU in holographic
+/// linear mode (bit-plane encoded, noisy, quantized — the full chain).
+pub struct OpuSketcher {
+    device: Arc<OpuDevice>,
+}
+
+impl OpuSketcher {
+    pub fn new(device: Arc<OpuDevice>) -> Self {
+        Self { device }
+    }
+
+    pub fn device(&self) -> &OpuDevice {
+        &self.device
+    }
+}
+
+impl Sketcher for OpuSketcher {
+    fn m(&self) -> usize {
+        self.device.cfg.m
+    }
+
+    fn n(&self) -> usize {
+        self.device.cfg.n
+    }
+
+    fn project(&self, a: &Mat) -> Mat {
+        self.device.project(a)
+    }
+
+    fn label(&self) -> &'static str {
+        "opu"
+    }
+}
+
+/// B = (G A G^T) / m using two passes of the *same* sketcher — the shared
+/// core of Hutchinson and triangle estimation. `a` must be n x n.
+pub fn symmetric_sketch(sketcher: &dyn Sketcher, a: &Mat) -> Mat {
+    assert!(a.is_square(), "symmetric_sketch needs square A");
+    assert_eq!(a.rows, sketcher.n(), "A dim {} != sketcher n {}", a.rows, sketcher.n());
+    let m = sketcher.m() as f64;
+    // S = G A  (m x n)
+    let s = sketcher.project(a);
+    // B = S G^T = (G S^T)^T  (m x m)
+    let gst = sketcher.project(&s.transpose());
+    gst.transpose().scale(1.0 / m)
+}
+
+/// Symmetric sketch for an explicit digital G (reference path used by
+/// tests and the exact-G ablation): B = G A G^T / m.
+pub fn symmetric_sketch_explicit(g: &Mat, a: &Mat) -> Mat {
+    let ga = crate::linalg::matmul(g, a);
+    matmul_nt(&ga, g).scale(1.0 / g.rows as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_frobenius_error;
+    use crate::opu::OpuConfig;
+    use crate::randnla::backend::DigitalSketcher;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn symmetric_sketch_matches_explicit_for_digital() {
+        let s = DigitalSketcher::new(16, 32, 1);
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::gaussian(32, 32, 1.0, &mut rng).symmetrized();
+        let via_trait = symmetric_sketch(&s, &a);
+        let explicit = symmetric_sketch_explicit(s.matrix(), &a);
+        assert!(rel_frobenius_error(&explicit, &via_trait) < 1e-10);
+    }
+
+    #[test]
+    fn symmetric_sketch_is_symmetric_for_symmetric_input() {
+        let s = DigitalSketcher::new(12, 24, 3);
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(24, 24, 1.0, &mut rng).symmetrized();
+        let b = symmetric_sketch(&s, &a);
+        let asym = rel_frobenius_error(&b, &b.transpose());
+        assert!(asym < 1e-10, "asymmetry {asym}");
+    }
+
+    #[test]
+    fn opu_sketcher_close_to_its_oracle() {
+        let dev = Arc::new(OpuDevice::new(OpuConfig::ideal(5, 16, 32)));
+        let g_oracle = dev.effective_matrix();
+        let s = OpuSketcher::new(dev);
+        let mut rng = Xoshiro256::new(6);
+        let a = Mat::gaussian(32, 8, 1.0, &mut rng);
+        let got = s.project(&a);
+        let want = crate::linalg::matmul(&g_oracle, &a);
+        let rel = rel_frobenius_error(&want, &got);
+        assert!(rel < 5e-3, "opu vs oracle: {rel}");
+        assert_eq!(s.label(), "opu");
+    }
+
+    #[test]
+    fn opu_symmetric_sketch_consistent_with_oracle() {
+        let dev = Arc::new(OpuDevice::new(OpuConfig::ideal(7, 12, 24)));
+        let g = dev.effective_matrix();
+        let s = OpuSketcher::new(dev);
+        let mut rng = Xoshiro256::new(8);
+        let a = Mat::gaussian(24, 24, 0.5, &mut rng).symmetrized();
+        let got = symmetric_sketch(&s, &a);
+        let want = symmetric_sketch_explicit(&g, &a);
+        let rel = rel_frobenius_error(&want, &got);
+        assert!(rel < 2e-2, "opu symmetric sketch: {rel}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Scalar claims check — the quotable numbers from §I/§III:
+//!   C1  crossover ~1.2e4, GPU OOM past ~7e4;
+//!   C2  ~2 orders of magnitude energy advantage (1500 TOPS @ 30 W).
+
+use crate::perfmodel::{self, GpuModel, OpuTimingModel, P100};
+
+/// One claim: paper value vs our model's value.
+#[derive(Clone, Debug)]
+pub struct Claim {
+    pub id: &'static str,
+    pub description: &'static str,
+    pub paper: f64,
+    pub measured: f64,
+    /// Acceptable factor (shape reproduction, not absolute numbers).
+    pub tolerance_factor: f64,
+}
+
+impl Claim {
+    pub fn holds(&self) -> bool {
+        if self.paper == 0.0 {
+            return self.measured == 0.0;
+        }
+        let ratio = self.measured / self.paper;
+        ratio >= 1.0 / self.tolerance_factor && ratio <= self.tolerance_factor
+    }
+}
+
+pub fn all_claims() -> Vec<Claim> {
+    let opu = OpuTimingModel::default();
+    let gpu: GpuModel = P100;
+    vec![
+        Claim {
+            id: "C1a",
+            description: "OPU/GPU crossover dimension (paper ~1.2e4)",
+            paper: 12_000.0,
+            measured: perfmodel::crossover_dim(&opu, &gpu) as f64,
+            tolerance_factor: 3.0,
+        },
+        Claim {
+            id: "C1b",
+            description: "GPU OOM dimension on 16 GB (paper ~7e4)",
+            paper: 70_000.0,
+            measured: perfmodel::gpu_oom_dim(&gpu) as f64,
+            tolerance_factor: 2.0,
+        },
+        Claim {
+            id: "C1c",
+            description: "OPU projection latency, ms (paper ~1.2)",
+            paper: 1.2,
+            measured: opu.projection_ms(1_000_000, 2_000_000),
+            tolerance_factor: 5.0,
+        },
+        Claim {
+            id: "C2a",
+            description: "OPU effective TOPS at native aperture (paper 1500)",
+            paper: 1_500.0,
+            measured: opu.effective_tops(1_000_000, 2_000_000),
+            tolerance_factor: 8.0,
+        },
+        Claim {
+            id: "C2b",
+            description: "energy-efficiency ratio OPU/GPU at n=5e4 (paper ~100x)",
+            paper: 100.0,
+            measured: perfmodel::energy_ratio(&opu, &gpu, 50_000).unwrap_or(0.0),
+            tolerance_factor: 10.0,
+        },
+    ]
+}
+
+pub fn print_claims(claims: &[Claim]) {
+    println!("\n== paper claims vs model ==");
+    println!(
+        "{:<5} {:<55} {:>12} {:>12} {:>6}",
+        "id", "claim", "paper", "measured", "ok"
+    );
+    for c in claims {
+        println!(
+            "{:<5} {:<55} {:>12.1} {:>12.1} {:>6}",
+            c.id,
+            c.description,
+            c.paper,
+            c.measured,
+            if c.holds() { "yes" } else { "NO" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_claims_hold() {
+        for c in all_claims() {
+            assert!(
+                c.holds(),
+                "{} failed: paper {} vs measured {}",
+                c.id,
+                c.paper,
+                c.measured
+            );
+        }
+    }
+
+    #[test]
+    fn tolerance_logic() {
+        let c = Claim {
+            id: "t",
+            description: "t",
+            paper: 100.0,
+            measured: 250.0,
+            tolerance_factor: 3.0,
+        };
+        assert!(c.holds());
+        let c2 = Claim { measured: 400.0, ..c };
+        assert!(!c2.holds());
+    }
+}

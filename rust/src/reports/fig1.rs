@@ -1,0 +1,304 @@
+//! Fig. 1 — quality of OPU vs numerical randomization on the four RandNLA
+//! tasks. Each panel sweeps compression (or rank) and reports the relative
+//! error of the optical arm against the digital arm on identical inputs.
+
+use std::sync::Arc;
+
+use super::Row;
+use crate::graph::generators::erdos_renyi;
+use crate::graph::karate::karate_club;
+use crate::linalg::{self, rel_frobenius_error, rel_scalar_error};
+use crate::opu::{NoiseModel, OpuConfig, OpuDevice};
+use crate::randnla::{
+    approx_matmul_tn, estimate_triangles_dense, exact_matmul_tn, hutchinson, randsvd,
+    DigitalSketcher, OpuSketcher, RandSvdOpts,
+};
+use crate::stats::Running;
+use crate::workload::{correlated_pair, matrix_with_spectrum, psd_matrix, Spectrum};
+
+/// Sweep parameters shared by the four panels.
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub n: usize,
+    pub ratios: Vec<f64>,
+    pub trials: usize,
+    pub seed: u64,
+    pub noise: NoiseModel,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Self {
+            n: 256,
+            ratios: vec![0.0625, 0.125, 0.25, 0.5, 0.75, 1.0],
+            trials: 3,
+            seed: 7,
+            noise: NoiseModel::realistic(),
+        }
+    }
+}
+
+impl Fig1Config {
+    fn m_for(&self, ratio: f64) -> usize {
+        ((self.n as f64 * ratio) as usize).max(8)
+    }
+
+    fn opu(&self, m: usize, trial: u64) -> OpuSketcher {
+        let cfg = OpuConfig::new(self.seed ^ (trial << 17) ^ m as u64, m, self.n)
+            .with_noise(self.noise.clone());
+        OpuSketcher::new(Arc::new(OpuDevice::new(cfg)))
+    }
+
+    fn digital(&self, m: usize, trial: u64) -> DigitalSketcher {
+        DigitalSketcher::new(m, self.n, self.seed ^ (trial << 17) ^ m as u64)
+    }
+}
+
+fn summarize(
+    panel: &'static str,
+    x_label: &'static str,
+    x: f64,
+    arm: &str,
+    errs: &[f64],
+) -> Row {
+    let mut r = Running::new();
+    for &e in errs {
+        r.push(e);
+    }
+    Row {
+        panel,
+        x_label,
+        x,
+        arm: arm.to_string(),
+        y: r.mean(),
+        ci95: r.ci95(),
+        trials: errs.len(),
+    }
+}
+
+/// Panel (a): approximate matrix multiplication.
+pub fn matmul_panel(cfg: &Fig1Config) -> Vec<Row> {
+    let (a, b) = correlated_pair(cfg.n, 0.5, cfg.seed);
+    let want = exact_matmul_tn(&a, &b);
+    let mut rows = Vec::new();
+    for &ratio in &cfg.ratios {
+        let m = cfg.m_for(ratio);
+        for arm in ["digital", "opu"] {
+            let errs: Vec<f64> = (0..cfg.trials as u64)
+                .map(|t| {
+                    let approx = match arm {
+                        "digital" => approx_matmul_tn(&cfg.digital(m, t), &a, &b),
+                        _ => approx_matmul_tn(&cfg.opu(m, t), &a, &b),
+                    };
+                    rel_frobenius_error(&want, &approx)
+                })
+                .collect();
+            rows.push(summarize("fig1-matmul", "m/n", ratio, arm, &errs));
+        }
+    }
+    rows
+}
+
+/// Panel (b): Hutchinson trace estimation on a PSD matrix.
+pub fn trace_panel(cfg: &Fig1Config) -> Vec<Row> {
+    let a = psd_matrix(cfg.n, cfg.n / 2, cfg.seed);
+    let truth = a.trace();
+    let mut rows = Vec::new();
+    for &ratio in &cfg.ratios {
+        let m = cfg.m_for(ratio);
+        for arm in ["digital", "opu"] {
+            let errs: Vec<f64> = (0..cfg.trials as u64)
+                .map(|t| {
+                    let est = match arm {
+                        "digital" => hutchinson(&cfg.digital(m, t), &a),
+                        _ => hutchinson(&cfg.opu(m, t), &a),
+                    };
+                    rel_scalar_error(truth, est)
+                })
+                .collect();
+            rows.push(summarize("fig1-trace", "m/n", ratio, arm, &errs));
+        }
+    }
+    rows
+}
+
+/// Panel (c): triangle estimation on ER + the karate club.
+pub fn triangles_panel(cfg: &Fig1Config) -> Vec<Row> {
+    let er = erdos_renyi(cfg.n, 0.1, cfg.seed);
+    let er_truth = er.exact_triangles() as f64;
+    let er_adj = er.adjacency();
+    let mut rows = Vec::new();
+    for &ratio in &cfg.ratios {
+        let m = cfg.m_for(ratio);
+        for arm in ["digital", "opu"] {
+            let errs: Vec<f64> = (0..cfg.trials as u64)
+                .map(|t| {
+                    let est = match arm {
+                        "digital" => estimate_triangles_dense(&cfg.digital(m, t), &er_adj),
+                        _ => estimate_triangles_dense(&cfg.opu(m, t), &er_adj),
+                    };
+                    rel_scalar_error(er_truth, est)
+                })
+                .collect();
+            rows.push(summarize("fig1-triangles", "m/n", ratio, arm, &errs));
+        }
+    }
+    // Real-graph checkpoint: karate club at m/n = 0.75 (n = 34).
+    let karate = karate_club();
+    let kn = karate.n();
+    let ka = karate.adjacency();
+    let ktruth = karate.exact_triangles() as f64;
+    for arm in ["digital", "opu"] {
+        let errs: Vec<f64> = (0..cfg.trials.max(5) as u64)
+            .map(|t| {
+                let m = 26;
+                let est = match arm {
+                    "digital" => estimate_triangles_dense(
+                        &DigitalSketcher::new(m, kn, cfg.seed ^ t),
+                        &ka,
+                    ),
+                    _ => {
+                        let dev = OpuDevice::new(
+                            OpuConfig::new(cfg.seed ^ t, m, kn).with_noise(cfg.noise.clone()),
+                        );
+                        estimate_triangles_dense(&OpuSketcher::new(Arc::new(dev)), &ka)
+                    }
+                };
+                rel_scalar_error(ktruth, est)
+            })
+            .collect();
+        rows.push(summarize("fig1-karate", "m/n", 26.0 / 34.0, arm, &errs));
+    }
+    rows
+}
+
+/// Panel (d): RandSVD rank-k reconstruction error vs k.
+pub fn randsvd_panel(cfg: &Fig1Config) -> Vec<Row> {
+    let a = matrix_with_spectrum(cfg.n, Spectrum::Exponential { decay: 0.9 }, cfg.seed);
+    let ranks = [4usize, 8, 16, 32];
+    let mut rows = Vec::new();
+    for &k in &ranks {
+        // Eckart-Young floor.
+        let best = rel_frobenius_error(&a, &linalg::truncated(&a, k));
+        rows.push(Row {
+            panel: "fig1-randsvd",
+            x_label: "rank",
+            x: k as f64,
+            arm: "exact".into(),
+            y: best,
+            ci95: 0.0,
+            trials: 1,
+        });
+        for arm in ["digital", "opu"] {
+            let errs: Vec<f64> = (0..cfg.trials as u64)
+                .map(|t| {
+                    let opts = RandSvdOpts { rank: k, oversample: 8, power_iters: 2 };
+                    let m = k + 8;
+                    let r = match arm {
+                        "digital" => randsvd(&cfg.digital(m, t), &a, opts),
+                        _ => randsvd(&cfg.opu(m, t), &a, opts),
+                    };
+                    let rec = linalg::reconstruct(&r.u, &r.s, &r.vt);
+                    rel_frobenius_error(&a, &rec)
+                })
+                .collect();
+            rows.push(summarize("fig1-randsvd", "rank", k as f64, arm, &errs));
+        }
+    }
+    rows
+}
+
+/// Full Fig. 1 (all four panels).
+pub fn all_panels(cfg: &Fig1Config) -> Vec<Row> {
+    let mut rows = matmul_panel(cfg);
+    rows.extend(trace_panel(cfg));
+    rows.extend(triangles_panel(cfg));
+    rows.extend(randsvd_panel(cfg));
+    rows
+}
+
+/// The paper's headline check: optical ~= numerical. For every (panel, x)
+/// pair present in `rows`, the opu arm must be within `tol` absolute error
+/// of the digital arm (both are random estimators; they agree in
+/// *distribution*, so compare means loosely).
+pub fn optical_matches_numerical(rows: &[Row], tol: f64) -> Result<(), String> {
+    let mut failures = Vec::new();
+    for r in rows.iter().filter(|r| r.arm == "opu") {
+        if let Some(d) = rows
+            .iter()
+            .find(|d| d.arm == "digital" && d.panel == r.panel && (d.x - r.x).abs() < 1e-12)
+        {
+            let gap = (r.y - d.y).abs();
+            let scale = d.y.abs().max(0.02);
+            if gap > tol * scale + r.ci95 + d.ci95 {
+                failures.push(format!(
+                    "{} x={}: opu {:.4} vs digital {:.4}",
+                    r.panel, r.x, r.y, d.y
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(failures.join("; "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Fig1Config {
+        Fig1Config {
+            n: 64,
+            ratios: vec![0.25, 0.75],
+            trials: 2,
+            seed: 3,
+            noise: NoiseModel::realistic(),
+        }
+    }
+
+    #[test]
+    fn matmul_panel_shape_and_decay() {
+        let rows = matmul_panel(&tiny());
+        assert_eq!(rows.len(), 4); // 2 ratios x 2 arms
+        // Error decreases as m/n grows, per arm.
+        for arm in ["digital", "opu"] {
+            let coarse = rows.iter().find(|r| r.arm == arm && r.x == 0.25).unwrap();
+            let fine = rows.iter().find(|r| r.arm == arm && r.x == 0.75).unwrap();
+            assert!(fine.y < coarse.y, "{arm}: {} -> {}", coarse.y, fine.y);
+        }
+    }
+
+    #[test]
+    fn optical_matches_numerical_on_matmul() {
+        let rows = matmul_panel(&tiny());
+        optical_matches_numerical(&rows, 0.75).unwrap();
+    }
+
+    #[test]
+    fn randsvd_panel_has_exact_floor() {
+        let cfg = tiny();
+        let rows = randsvd_panel(&cfg);
+        for &k in &[4.0, 8.0] {
+            let exact = rows
+                .iter()
+                .find(|r| r.arm == "exact" && r.x == k)
+                .unwrap();
+            let digital = rows
+                .iter()
+                .find(|r| r.arm == "digital" && r.x == k)
+                .unwrap();
+            // Randomized can't beat the optimum (allow tiny slack).
+            assert!(digital.y >= exact.y - 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_panel_runs() {
+        let rows = trace_panel(&tiny());
+        assert!(rows.iter().all(|r| r.y.is_finite()));
+        assert_eq!(rows.len(), 4);
+    }
+}

@@ -1,0 +1,161 @@
+//! Fig. 2 — projection time vs dimension, OPU vs GPU.
+//!
+//! Three series:
+//! - `model-opu`  — OPU latency model (published constants; flat + O(n));
+//! - `model-gpu`  — P100 roofline (quadratic, OOM cliff past ~7e4);
+//! - `pjrt`       — *measured* wall-clock of the AOT proj_xla artifact on
+//!   the CPU PJRT client for the buckets we actually ship (the measured
+//!   points anchor the model's small-n regime).
+
+use std::time::Instant;
+
+use super::Row;
+use crate::linalg::Mat;
+use crate::perfmodel::{self, GpuModel, OpuTimingModel, P100};
+use crate::rng::Xoshiro256;
+use crate::runtime::PjrtHandle;
+
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    /// Dimensions for the model sweep (square n x n).
+    pub model_dims: Vec<usize>,
+    /// Repetitions for measured points.
+    pub reps: usize,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Self {
+            model_dims: (8..=17).map(|p| 1usize << p).collect(),
+            reps: 5,
+        }
+    }
+}
+
+/// Model sweep (always available).
+pub fn model_rows(cfg: &Fig2Config) -> Vec<Row> {
+    let opu = OpuTimingModel::default();
+    let gpu = P100;
+    let mut rows = Vec::new();
+    for &n in &cfg.model_dims {
+        rows.push(Row {
+            panel: "fig2",
+            x_label: "n",
+            x: n as f64,
+            arm: "model-opu".into(),
+            y: opu.projection_ms(n, n),
+            ci95: 0.0,
+            trials: 1,
+        });
+        let gms = gpu.projection_ms(n, n);
+        rows.push(Row {
+            panel: "fig2",
+            x_label: "n",
+            x: n as f64,
+            arm: "model-gpu".into(),
+            y: gms.unwrap_or(f64::NAN), // NaN = OOM
+            ci95: 0.0,
+            trials: 1,
+        });
+    }
+    rows
+}
+
+/// Measured PJRT points over the shipped proj_xla buckets.
+pub fn measured_pjrt_rows(handle: &PjrtHandle, cfg: &Fig2Config) -> anyhow::Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    let mut rng = Xoshiro256::new(42);
+    for (m, n) in handle.buckets("proj_xla")? {
+        if m != n / 2 {
+            continue; // one representative compression per n
+        }
+        let r = Mat::gaussian(m, n, 1.0, &mut rng);
+        let a = Mat::gaussian(n, n, 1.0, &mut rng);
+        // Warm (compile) once.
+        let _ = handle.project("proj_xla", r.clone(), a.clone())?;
+        let mut stats = crate::stats::Running::new();
+        for _ in 0..cfg.reps {
+            let t = Instant::now();
+            let _ = handle.project("proj_xla", r.clone(), a.clone())?;
+            stats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        rows.push(Row {
+            panel: "fig2",
+            x_label: "n",
+            x: n as f64,
+            arm: "pjrt".into(),
+            y: stats.mean(),
+            ci95: stats.ci95(),
+            trials: cfg.reps,
+        });
+    }
+    Ok(rows)
+}
+
+/// Headline numbers printed beneath the figure.
+pub struct Fig2Headline {
+    pub crossover_dim: usize,
+    pub gpu_oom_dim: usize,
+    pub opu_ms_at_1m: f64,
+}
+
+pub fn headline() -> Fig2Headline {
+    let opu = OpuTimingModel::default();
+    let gpu: GpuModel = P100;
+    Fig2Headline {
+        crossover_dim: perfmodel::crossover_dim(&opu, &gpu),
+        gpu_oom_dim: perfmodel::gpu_oom_dim(&gpu),
+        opu_ms_at_1m: opu.projection_ms(1_000_000, 1_000_000),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_rows_have_oom_nan_tail() {
+        let cfg = Fig2Config {
+            model_dims: vec![1 << 12, 1 << 17],
+            reps: 1,
+        };
+        let rows = model_rows(&cfg);
+        let small_gpu = rows
+            .iter()
+            .find(|r| r.arm == "model-gpu" && r.x == (1 << 12) as f64)
+            .unwrap();
+        assert!(small_gpu.y.is_finite());
+        let big_gpu = rows
+            .iter()
+            .find(|r| r.arm == "model-gpu" && r.x == (1 << 17) as f64)
+            .unwrap();
+        assert!(big_gpu.y.is_nan(), "1e5+ should OOM on 16 GB");
+    }
+
+    #[test]
+    fn headline_bands() {
+        let h = headline();
+        assert!((4_000..40_000).contains(&h.crossover_dim));
+        assert!((30_000..200_000).contains(&h.gpu_oom_dim));
+        assert!(h.opu_ms_at_1m < 10.0);
+    }
+
+    #[test]
+    fn opu_flat_gpu_quadratic() {
+        let cfg = Fig2Config {
+            model_dims: vec![1 << 10, 1 << 14],
+            reps: 1,
+        };
+        let rows = model_rows(&cfg);
+        let pick = |arm: &str, n: usize| {
+            rows.iter()
+                .find(|r| r.arm == arm && r.x == n as f64)
+                .unwrap()
+                .y
+        };
+        let opu_ratio = pick("model-opu", 1 << 14) / pick("model-opu", 1 << 10);
+        let gpu_ratio = pick("model-gpu", 1 << 14) / pick("model-gpu", 1 << 10);
+        assert!(opu_ratio < 3.0, "opu should be near-flat: {opu_ratio}");
+        assert!(gpu_ratio > 10.0, "gpu should be ~quadratic: {gpu_ratio}");
+    }
+}

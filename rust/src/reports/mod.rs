@@ -1,0 +1,76 @@
+//! Experiment harnesses regenerating every figure/claim in the paper
+//! (DESIGN.md §5 experiment index). Shared by the `photon` CLI and the
+//! cargo benches so both print identical series.
+
+pub mod claims;
+pub mod fig1;
+pub mod fig2;
+
+/// One data point of a figure series.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Panel / experiment id (e.g. "fig1-matmul").
+    pub panel: &'static str,
+    /// x-axis meaning (e.g. "m/n").
+    pub x_label: &'static str,
+    pub x: f64,
+    /// Measurement arm: "opu", "digital", "pjrt", "exact", "model-gpu"...
+    pub arm: String,
+    /// y value (relative error, milliseconds, ...).
+    pub y: f64,
+    /// 95% CI half-width (0 when single-shot).
+    pub ci95: f64,
+    pub trials: usize,
+}
+
+impl Row {
+    pub fn csv_header() -> &'static str {
+        "panel,x_label,x,arm,y,ci95,trials"
+    }
+
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{}",
+            self.panel, self.x_label, self.x, self.arm, self.y, self.ci95, self.trials
+        )
+    }
+}
+
+/// Print a series as an aligned table + CSV block.
+pub fn print_rows(title: &str, rows: &[Row]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<16} {:>10} {:<10} {:>14} {:>12} {:>7}",
+        "panel", "x", "arm", "y", "ci95", "trials"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:>10.4} {:<10} {:>14.6} {:>12.6} {:>7}",
+            r.panel, r.x, r.arm, r.y, r.ci95, r.trials
+        );
+    }
+    println!("\n--- CSV ---");
+    println!("{}", Row::csv_header());
+    for r in rows {
+        println!("{}", r.csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let r = Row {
+            panel: "p",
+            x_label: "x",
+            x: 0.5,
+            arm: "opu".into(),
+            y: 1.0,
+            ci95: 0.1,
+            trials: 3,
+        };
+        assert_eq!(r.csv().split(',').count(), Row::csv_header().split(',').count());
+    }
+}

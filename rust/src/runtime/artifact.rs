@@ -1,0 +1,356 @@
+//! Artifact registry: the rust mirror of python/compile/aot.py's manifest.
+//!
+//! Loads `artifacts/manifest.json`, lazily compiles each HLO module on
+//! first use, and provides shape-bucket lookup with zero-pad / crop so
+//! callers can run any (m, n) problem against the fixed AOT shape ladder
+//! — the standard serving-system trick for static-shape compilers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::client::{Executable, Operand, Output, PjrtClient};
+use crate::linalg::Mat;
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug)]
+pub struct UnitMeta {
+    pub name: String,
+    pub file: String,
+    /// Shapes of the expected operands, in call order.
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// Registry over an artifacts directory.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    client: PjrtClient,
+    units: HashMap<String, UnitMeta>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir` (default: ./artifacts) and parse its manifest.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        let units = parse_manifest(&text)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            client: PjrtClient::cpu()?,
+            units,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PHOTON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn unit_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.units.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&UnitMeta> {
+        self.units.get(name)
+    }
+
+    /// Compile-once-and-cache lookup.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .units
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have: {:?}", self.unit_names()))?;
+        let exe = std::sync::Arc::new(self.client.compile_file(&self.dir.join(&meta.file))?);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run a unit with Mat operands, checking shapes against the manifest.
+    pub fn run(&self, name: &str, mats: &[&Mat]) -> Result<Output> {
+        let meta = self
+            .units
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if mats.len() != meta.arg_shapes.len() {
+            bail!(
+                "{name}: expected {} operands, got {}",
+                meta.arg_shapes.len(),
+                mats.len()
+            );
+        }
+        for (i, (m, want)) in mats.iter().zip(&meta.arg_shapes).enumerate() {
+            let got = [m.rows, m.cols];
+            if want.len() == 2 && (got[0] != want[0] || got[1] != want[1]) {
+                bail!("{name}: operand {i} is {got:?}, manifest wants {want:?}");
+            }
+        }
+        let operands: Vec<Operand> = mats.iter().map(|m| Operand::from_mat(m)).collect();
+        self.executable(name)?.run(&operands)
+    }
+
+    /// Shape ladder available for a given op prefix, as (m, n) pairs
+    /// sorted ascending — e.g. `buckets("proj_xla")`.
+    pub fn buckets(&self, prefix: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .units
+            .keys()
+            .filter_map(|k| parse_mn(k, prefix))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Smallest bucket with m >= want_m and n >= want_n.
+    pub fn bucket_for(&self, prefix: &str, want_m: usize, want_n: usize) -> Option<(usize, usize)> {
+        self.buckets(prefix)
+            .into_iter()
+            .filter(|&(m, n)| m >= want_m && n >= want_n)
+            .min_by_key(|&(m, n)| m.saturating_mul(n))
+    }
+
+    /// Run a projection-style unit `prefix_m{M}_n{N}` on arbitrary
+    /// (m x n) @ (n x k): pads operands up to the chosen bucket, crops the
+    /// result back. Batches wider than the bucket's (square) A operand are
+    /// split into column chunks of <= bn. Returns (result, bucket_used).
+    pub fn run_projection_padded(
+        &self,
+        prefix: &str,
+        r: &Mat,
+        a: &Mat,
+    ) -> Result<(Mat, (usize, usize))> {
+        let (bm, bn) = self
+            .bucket_for(prefix, r.rows, r.cols)
+            .ok_or_else(|| anyhow!("no {prefix} bucket fits {}x{}", r.rows, r.cols))?;
+        if a.rows != r.cols {
+            bail!("projection inner dims: R {}x{}, A {}x{}", r.rows, r.cols, a.rows, a.cols);
+        }
+        // The artifact ladder is square in A: (bn x bn).
+        let name = format!("{prefix}_m{bm}_n{bn}");
+        let rp = if (r.rows, r.cols) == (bm, bn) { r.clone() } else { r.pad(bm, bn) };
+        let exe_cols = bn;
+        let mut out = Mat::zeros(r.rows, a.cols);
+        let mut j0 = 0usize;
+        while j0 < a.cols {
+            let jc = exe_cols.min(a.cols - j0);
+            let chunk = Mat::from_fn(a.rows, jc, |i, j| a.at(i, j0 + j));
+            let ap = if (chunk.rows, chunk.cols) == (bn, bn) {
+                chunk
+            } else {
+                chunk.pad(bn, bn)
+            };
+            let res = self.run(&name, &[&rp, &ap])?.into_mat()?;
+            for i in 0..r.rows {
+                out.row_mut(i)[j0..j0 + jc].copy_from_slice(&res.row(i)[..jc]);
+            }
+            j0 += jc;
+        }
+        Ok((out, (bm, bn)))
+    }
+}
+
+fn parse_mn(key: &str, prefix: &str) -> Option<(usize, usize)> {
+    let rest = key.strip_prefix(prefix)?.strip_prefix("_m")?;
+    let (m_str, n_part) = rest.split_once("_n")?;
+    Some((m_str.parse().ok()?, n_part.parse().ok()?))
+}
+
+/// Minimal JSON parsing for our own manifest format (no serde in image).
+/// Extracts `units.<name>.file` and `units.<name>.args[*].shape`.
+fn parse_manifest(text: &str) -> Result<HashMap<String, UnitMeta>> {
+    let mut units = HashMap::new();
+    let units_obj = extract_object(text, "units")
+        .ok_or_else(|| anyhow!("manifest missing \"units\" object"))?;
+    for (name, body) in iter_object_entries(units_obj) {
+        let file = extract_string(body, "file")
+            .ok_or_else(|| anyhow!("unit {name} missing file"))?;
+        let mut arg_shapes = Vec::new();
+        if let Some(args) = extract_array(body, "args") {
+            for item in iter_array_items(args) {
+                if let Some(shape) = extract_array(item, "shape") {
+                    let dims: Vec<usize> = shape
+                        .split(',')
+                        .filter_map(|s| {
+                            s.trim().trim_matches(|c| c == '[' || c == ']').parse().ok()
+                        })
+                        .collect();
+                    arg_shapes.push(dims);
+                }
+            }
+        }
+        units.insert(
+            name.to_string(),
+            UnitMeta { name: name.to_string(), file, arg_shapes },
+        );
+    }
+    Ok(units)
+}
+
+// ---- tiny JSON helpers (sufficient for the manifest we emit) ----
+
+/// Find `"key": {...}` and return the {...} body (balanced braces).
+fn extract_object<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    let open = rest.find('{')?;
+    balanced(&rest[open..], '{', '}')
+}
+
+/// Find `"key": [...]` and return the [...] body.
+fn extract_array<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    let colon = rest.find(':')?;
+    let after = rest[colon + 1..].trim_start();
+    if !after.starts_with('[') {
+        return None;
+    }
+    balanced(after, '[', ']')
+}
+
+fn extract_string<'a>(text: &'a str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\"");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    let colon = rest.find(':')?;
+    let after = rest[colon + 1..].trim_start();
+    let inner = after.strip_prefix('"')?;
+    let end = inner.find('"')?;
+    Some(inner[..end].to_string())
+}
+
+/// Return the substring starting at an `open` char through its matching
+/// `close` (inclusive interior, exclusive of the delimiters).
+fn balanced(s: &str, open: char, close: char) -> Option<&str> {
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut started = false;
+    let mut start_idx = 0;
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            c if c == open => {
+                if !started {
+                    started = true;
+                    start_idx = i + 1;
+                }
+                depth += 1;
+            }
+            c if c == close => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    return Some(&s[start_idx..i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Iterate `"name": {body}` pairs of an object body.
+fn iter_object_entries(body: &str) -> Vec<(&str, &str)> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    loop {
+        let Some(q0) = rest.find('"') else { break };
+        let after = &rest[q0 + 1..];
+        let Some(q1) = after.find('"') else { break };
+        let name = &after[..q1];
+        let tail = &after[q1 + 1..];
+        let Some(ob) = tail.find('{') else { break };
+        let Some(inner) = balanced(&tail[ob..], '{', '}') else { break };
+        out.push((name, inner));
+        // Advance past this entry's closing brace.
+        let consumed = q0 + 1 + q1 + 1 + ob + inner.len() + 2;
+        rest = &rest[consumed.min(rest.len())..];
+    }
+    out
+}
+
+/// Iterate top-level `{...}` items of an array body.
+fn iter_array_items(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while let Some(ob) = rest.find('{') {
+        let Some(inner) = balanced(&rest[ob..], '{', '}') else { break };
+        out.push(inner);
+        rest = &rest[ob + inner.len() + 2..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple-1",
+      "jax": "0.8.2",
+      "units": {
+        "proj_xla_m64_n256": {
+          "args": [
+            {"dtype": "float32", "shape": [64, 256]},
+            {"dtype": "float32", "shape": [256, 256]}
+          ],
+          "bytes": 363,
+          "file": "proj_xla_m64_n256.hlo.txt",
+          "sha256": "abc"
+        },
+        "tri_core_m64": {
+          "args": [{"dtype": "float32", "shape": [64, 64]}],
+          "bytes": 732,
+          "file": "tri_core_m64.hlo.txt",
+          "sha256": "def"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let units = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(units.len(), 2);
+        let u = &units["proj_xla_m64_n256"];
+        assert_eq!(u.file, "proj_xla_m64_n256.hlo.txt");
+        assert_eq!(u.arg_shapes, vec![vec![64, 256], vec![256, 256]]);
+        assert_eq!(units["tri_core_m64"].arg_shapes, vec![vec![64, 64]]);
+    }
+
+    #[test]
+    fn bucket_parsing() {
+        assert_eq!(parse_mn("proj_xla_m64_n256", "proj_xla"), Some((64, 256)));
+        assert_eq!(parse_mn("proj_pallas_m64_n256", "proj_xla"), None);
+        assert_eq!(parse_mn("tri_core_m64", "tri_core"), None);
+    }
+
+    #[test]
+    fn balanced_extraction() {
+        assert_eq!(balanced("{a{b}c}", '{', '}'), Some("a{b}c"));
+        assert_eq!(balanced(r#"{"}": 1}"#, '{', '}'), Some(r#""}": 1"#));
+        assert_eq!(balanced("{unterminated", '{', '}'), None);
+    }
+
+    #[test]
+    fn missing_units_is_error() {
+        assert!(parse_manifest("{}").is_err());
+    }
+}

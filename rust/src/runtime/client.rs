@@ -1,0 +1,119 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute many.
+//!
+//! Thin safety layer over the `xla` crate (xla_extension 0.5.1, CPU). All
+//! artifacts were lowered with `return_tuple=True`, so every execution
+//! unwraps a 1-tuple. Inputs/outputs are f32 row-major — the Mat (f64)
+//! conversion happens at this boundary.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Shared PJRT CPU client.
+pub struct PjrtClient {
+    client: xla::PjRtClient,
+}
+
+impl PjrtClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, name: path.file_stem().unwrap().to_string_lossy().into() })
+    }
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// An f32 input operand with shape.
+pub struct Operand {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Operand {
+    pub fn from_mat(m: &Mat) -> Self {
+        Self { dims: vec![m.rows as i64, m.cols as i64], data: m.to_f32() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // 0-d scalar: reshape from [1].
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+}
+
+/// A single f32 result tensor.
+#[derive(Debug)]
+pub struct Output {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Output {
+    pub fn into_mat(self) -> Result<Mat> {
+        match self.dims.len() {
+            2 => Ok(Mat::from_f32(self.dims[0], self.dims[1], &self.data)),
+            0 | 1 => {
+                let r = self.data.len();
+                Ok(Mat::from_f32(r, 1, &self.data))
+            }
+            d => bail!("cannot view rank-{d} output as Mat"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        if self.data.len() != 1 {
+            bail!("expected scalar output, got {} elements", self.data.len());
+        }
+        Ok(self.data[0] as f64)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 operands; returns the unwrapped 1-tuple result.
+    pub fn run(&self, operands: &[Operand]) -> Result<Output> {
+        let literals: Vec<xla::Literal> = operands
+            .iter()
+            .map(|o| o.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let shape = out.array_shape().context("result shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().context("reading f32 result")?;
+        Ok(Output { dims, data })
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT engine thread: confines the (non-Send) xla-crate state to one
+//! dedicated worker, exposing a cheap, cloneable, Send + Sync handle.
+//!
+//! Exactly how a real accelerator driver serialises device access: the
+//! coordinator's workers post requests to the device queue and block on
+//! their response channel. One engine == one PJRT context == one device.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::ArtifactRegistry;
+use crate::linalg::Mat;
+
+enum Request {
+    /// Run an artifact by exact name with Mat operands; respond with the
+    /// result as a Mat (rank <= 2) or scalar-in-Mat.
+    Run { name: String, mats: Vec<Mat>, resp: mpsc::Sender<Result<Mat>> },
+    /// Run a scalar-producing artifact.
+    RunScalar { name: String, mats: Vec<Mat>, resp: mpsc::Sender<Result<f64>> },
+    /// Padded projection (see ArtifactRegistry::run_projection_padded).
+    Project { prefix: &'static str, r: Mat, a: Mat, resp: mpsc::Sender<Result<Mat>> },
+    /// Bucket query.
+    Buckets { prefix: &'static str, resp: mpsc::Sender<Vec<(usize, usize)>> },
+    /// Unit listing.
+    Units { resp: mpsc::Sender<Vec<String>> },
+    Shutdown,
+}
+
+/// Send + Sync handle to the engine thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the engine thread; dropping shuts it down.
+pub struct PjrtEngine {
+    handle: PjrtHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl PjrtEngine {
+    /// Start an engine over the given artifacts directory.
+    pub fn start(dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let registry = match ArtifactRegistry::open(&dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::Run { name, mats, resp } => {
+                            let refs: Vec<&Mat> = mats.iter().collect();
+                            let out = registry
+                                .run(&name, &refs)
+                                .and_then(|o| o.into_mat());
+                            let _ = resp.send(out);
+                        }
+                        Request::RunScalar { name, mats, resp } => {
+                            let refs: Vec<&Mat> = mats.iter().collect();
+                            let out = registry.run(&name, &refs).and_then(|o| o.scalar());
+                            let _ = resp.send(out);
+                        }
+                        Request::Project { prefix, r, a, resp } => {
+                            let out = registry
+                                .run_projection_padded(prefix, &r, &a)
+                                .map(|(m, _)| m);
+                            let _ = resp.send(out);
+                        }
+                        Request::Buckets { prefix, resp } => {
+                            let _ = resp.send(registry.buckets(prefix));
+                        }
+                        Request::Units { resp } => {
+                            let _ = resp.send(registry.unit_names());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Self { handle: PjrtHandle { tx }, join: Some(join) })
+    }
+
+    /// Start over the default artifacts directory.
+    pub fn start_default() -> Result<Self> {
+        Self::start(ArtifactRegistry::default_dir())
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    fn roundtrip<T>(&self, build: impl FnOnce(mpsc::Sender<T>) -> Request) -> Result<T> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(build(tx))
+            .map_err(|_| anyhow!("pjrt engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt engine dropped the request"))
+    }
+
+    /// Run an artifact returning a matrix.
+    pub fn run(&self, name: &str, mats: Vec<Mat>) -> Result<Mat> {
+        self.roundtrip(|resp| Request::Run { name: name.to_string(), mats, resp })?
+    }
+
+    /// Run an artifact returning a scalar.
+    pub fn run_scalar(&self, name: &str, mats: Vec<Mat>) -> Result<f64> {
+        self.roundtrip(|resp| Request::RunScalar { name: name.to_string(), mats, resp })?
+    }
+
+    /// Padded/cropped projection through the bucket ladder.
+    pub fn project(&self, prefix: &'static str, r: Mat, a: Mat) -> Result<Mat> {
+        self.roundtrip(|resp| Request::Project { prefix, r, a, resp })?
+    }
+
+    pub fn buckets(&self, prefix: &'static str) -> Result<Vec<(usize, usize)>> {
+        self.roundtrip(|resp| Request::Buckets { prefix, resp })
+    }
+
+    pub fn unit_names(&self) -> Result<Vec<String>> {
+        self.roundtrip(|resp| Request::Units { resp })
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: the AOT bridge between the rust coordinator and the
+//! python-lowered HLO artifacts (DESIGN.md §3).
+//!
+//! - [`client`] wraps the `xla` crate: HLO text -> compile -> execute.
+//! - [`artifact`] mirrors `artifacts/manifest.json`: shape buckets, lazy
+//!   compilation, pad/crop adaptation.
+//!
+//! Python never runs here — `make artifacts` is the only python step.
+
+pub mod artifact;
+pub mod client;
+pub mod engine;
+
+pub use artifact::{ArtifactRegistry, UnitMeta};
+pub use client::{Executable, Operand, Output, PjrtClient};
+pub use engine::{PjrtEngine, PjrtHandle};

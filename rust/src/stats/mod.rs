@@ -1,0 +1,148 @@
+//! Summary statistics for experiment harnesses (means, CIs, percentiles).
+
+/// Online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// ~95% normal CI half-width.
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample (linear interpolation, p in [0, 100]).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let w = rank - lo as f64;
+        samples[lo] * (1.0 - w) + samples[hi] * w
+    }
+}
+
+/// Geometric mean (used for factor-style comparisons, e.g. speedups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positives");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        let direct_var = xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>() / 7.0;
+        assert!((r.var() - direct_var).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut r = Running::new();
+        r.push(3.0);
+        assert_eq!(r.mean(), 3.0);
+        assert_eq!(r.var(), 0.0);
+        assert_eq!(r.ci95(), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 50.0), 3.0);
+        assert_eq!(percentile(&mut xs, 100.0), 5.0);
+        assert_eq!(percentile(&mut xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for i in 0..10 {
+            a.push(i as f64);
+        }
+        for i in 0..1000 {
+            b.push((i % 10) as f64);
+        }
+        assert!(b.ci95() < a.ci95());
+    }
+}

@@ -1,0 +1,148 @@
+//! proptest-lite: a seeded randomized property-test runner (no proptest in
+//! the offline image, so we own a minimal one).
+//!
+//! Usage:
+//! ```no_run
+//! use photonic_randnla::testkit::{Gen, check};
+//! check("reverse twice is identity", 100, |g| {
+//!     let v: Vec<u8> = g.vec(0..=255u64, 0, 20).iter().map(|&x| x as u8).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     if w != v { return Err(format!("{v:?}")); }
+//!     Ok(())
+//! });
+//! ```
+//! On failure it reports the failing case number and seed so the exact
+//! case can be replayed (`PHOTON_PROPTEST_SEED`).
+
+use crate::rng::Xoshiro256;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, range: std::ops::RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        match (hi - lo).checked_add(1) {
+            // Full 2^64 span: every u64 is in range.
+            None => self.rng.next_u64(),
+            Some(span) => lo + self.rng.next_below(span),
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64..=hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.next_normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn vec(&mut self, range: std::ops::RangeInclusive<u64>, min_len: usize, max_len: usize) -> Vec<u64> {
+        let len = self.usize(min_len, max_len);
+        (0..len).map(|_| self.u64(range.clone())).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+
+    /// Fork an independent stream (for building matrices etc.).
+    pub fn rng(&mut self) -> Xoshiro256 {
+        self.rng.fork()
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with diagnostics on failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let seed = std::env::var("PHOTON_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let mut g = Gen { rng: Xoshiro256::new(seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15))), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with PHOTON_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("addition commutes", 50, |g| {
+            let a = g.u64(0..=1000);
+            let b = g.u64(0..=1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure() {
+        check("always fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", 200, |g| {
+            let x = g.u64(5..=9);
+            if !(5..=9).contains(&x) {
+                return Err(format!("u64 out of range: {x}"));
+            }
+            let u = g.usize(2, 4);
+            if !(2..=4).contains(&u) {
+                return Err(format!("usize out of range: {u}"));
+            }
+            let f = g.f64(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f64 out of range: {f}"));
+            }
+            let v = g.vec(0..=1, 3, 6);
+            if v.len() < 3 || v.len() > 6 {
+                return Err(format!("vec len {}", v.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first = Vec::new();
+        check("collect", 5, |g| {
+            first.push(g.u64(0..=u64::MAX));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("collect", 5, |g| {
+            second.push(g.u64(0..=u64::MAX));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

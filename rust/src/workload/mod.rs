@@ -1,0 +1,158 @@
+//! Synthetic evaluation workloads with controlled ground truth.
+//!
+//! The paper evaluates on matrices where the exact answer is computable:
+//! we generate matrices with *prescribed spectra* (low-rank + noise,
+//! exponential / polynomial singular-value decay), PSD matrices for trace
+//! estimation, and mixed job traces for the end-to-end service run.
+
+pub mod traces;
+
+use crate::linalg::{matmul_nt, Mat};
+use crate::rng::Xoshiro256;
+
+/// Spectrum profiles for synthetic targets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Spectrum {
+    /// `rank` unit singular values, the rest `noise`.
+    LowRankPlusNoise { rank: usize, noise: f64 },
+    /// sigma_i = decay^i.
+    Exponential { decay: f64 },
+    /// sigma_i = (i+1)^(-power).
+    Polynomial { power: f64 },
+}
+
+impl Spectrum {
+    pub fn singular_values(&self, n: usize) -> Vec<f64> {
+        match *self {
+            Spectrum::LowRankPlusNoise { rank, noise } => (0..n)
+                .map(|i| if i < rank { 1.0 } else { noise })
+                .collect(),
+            Spectrum::Exponential { decay } => {
+                (0..n).map(|i| decay.powi(i as i32)).collect()
+            }
+            Spectrum::Polynomial { power } => {
+                (0..n).map(|i| ((i + 1) as f64).powf(-power)).collect()
+            }
+        }
+    }
+}
+
+/// Random n x n matrix with the given spectrum: A = U diag(s) V^T with
+/// Haar-ish U, V from QR of Gaussian matrices.
+pub fn matrix_with_spectrum(n: usize, spectrum: Spectrum, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let s = spectrum.singular_values(n);
+    let u = crate::linalg::orthonormalize(&Mat::gaussian(n, n, 1.0, &mut rng));
+    let v = crate::linalg::orthonormalize(&Mat::gaussian(n, n, 1.0, &mut rng));
+    let mut us = u;
+    for i in 0..n {
+        for j in 0..n {
+            *us.at_mut(i, j) *= s[j];
+        }
+    }
+    matmul_nt(&us, &v)
+}
+
+/// Random PSD matrix A = B B^T / cols(B), trace known analytically only
+/// after the fact — callers read `Mat::trace()` as ground truth.
+pub fn psd_matrix(n: usize, inner: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let b = Mat::gaussian(n, inner, 1.0, &mut rng);
+    matmul_nt(&b, &b).scale(1.0 / inner as f64)
+}
+
+/// Diagonally-dominant well-conditioned test matrix.
+pub fn diag_dominant(n: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let mut a = Mat::gaussian(n, n, 0.1, &mut rng);
+    for i in 0..n {
+        *a.at_mut(i, i) += 1.0 + rng.next_f64();
+    }
+    a
+}
+
+/// Pair of correlated matrices for approximate-matmul experiments
+/// (correlation rho makes A^T B non-trivial).
+pub fn correlated_pair(n: usize, rho: f64, seed: u64) -> (Mat, Mat) {
+    let mut rng = Xoshiro256::new(seed);
+    let a = Mat::gaussian(n, n, 1.0, &mut rng);
+    let noise = Mat::gaussian(n, n, 1.0, &mut rng);
+    let b = a.scale(rho).add(&noise.scale((1.0 - rho * rho).sqrt()));
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{frobenius, svd};
+
+    #[test]
+    fn spectrum_profiles() {
+        let s = Spectrum::LowRankPlusNoise { rank: 3, noise: 0.01 }.singular_values(6);
+        assert_eq!(s, vec![1.0, 1.0, 1.0, 0.01, 0.01, 0.01]);
+        let e = Spectrum::Exponential { decay: 0.5 }.singular_values(4);
+        assert_eq!(e, vec![1.0, 0.5, 0.25, 0.125]);
+        let p = Spectrum::Polynomial { power: 1.0 }.singular_values(3);
+        assert!((p[2] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_realises_prescribed_spectrum() {
+        let n = 24;
+        let spec = Spectrum::Exponential { decay: 0.8 };
+        let a = matrix_with_spectrum(n, spec, 9);
+        let got = svd(&a).s;
+        let want = spec.singular_values(n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn psd_is_symmetric_positive() {
+        let a = psd_matrix(16, 32, 4);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-12);
+            }
+        }
+        // PSD => all diagonal entries and the trace are positive.
+        assert!(a.trace() > 0.0);
+        assert!((0..16).all(|i| a.at(i, i) > 0.0));
+        // Quadratic form positive for a few random vectors.
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..16).map(|_| rng.next_normal()).collect();
+            let ax = crate::linalg::matvec(&a, &x);
+            let q: f64 = x.iter().zip(&ax).map(|(a, b)| a * b).sum();
+            assert!(q >= -1e-10);
+        }
+    }
+
+    #[test]
+    fn psd_trace_concentrates_at_n() {
+        // E[trace] = n for B B^T / inner with unit-variance entries.
+        let n = 32;
+        let a = psd_matrix(n, 256, 6);
+        assert!((a.trace() - n as f64).abs() < 0.2 * n as f64);
+    }
+
+    #[test]
+    fn correlated_pair_has_correlation() {
+        let (a, b) = correlated_pair(64, 0.9, 7);
+        let dot: f64 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        let corr = dot / (frobenius(&a) * frobenius(&b));
+        assert!(corr > 0.7, "corr {corr}");
+        let (a2, b2) = correlated_pair(64, 0.0, 8);
+        let dot2: f64 = a2.data.iter().zip(&b2.data).map(|(x, y)| x * y).sum();
+        let corr2 = dot2 / (frobenius(&a2) * frobenius(&b2));
+        assert!(corr2.abs() < 0.1, "corr {corr2}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = matrix_with_spectrum(8, Spectrum::Polynomial { power: 2.0 }, 1);
+        let b = matrix_with_spectrum(8, Spectrum::Polynomial { power: 2.0 }, 1);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,132 @@
+//! Mixed job traces for the end-to-end service experiment (DESIGN.md E2E).
+//!
+//! A trace is a list of RandNLA jobs with Poisson-ish arrival offsets —
+//! the closest synthetic equivalent of the HPC batch logs the paper's
+//! deployment would see (we have no production trace; see DESIGN.md §2).
+
+use crate::rng::Xoshiro256;
+
+/// What kind of RandNLA computation a job requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    /// Approximate A^T B with compression ratio index.
+    SketchMatmul,
+    /// Hutchinson trace of a PSD matrix.
+    TraceEstimate,
+    /// Triangle count of a random graph.
+    TriangleCount,
+    /// Randomized SVD, rank k.
+    RandSvd,
+}
+
+pub const ALL_KINDS: [JobKind; 4] = [
+    JobKind::SketchMatmul,
+    JobKind::TraceEstimate,
+    JobKind::TriangleCount,
+    JobKind::RandSvd,
+];
+
+/// One job in a trace.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: u64,
+    pub kind: JobKind,
+    /// Problem dimension n.
+    pub n: usize,
+    /// Sketch dimension m (or rank for RandSvd).
+    pub m: usize,
+    /// Arrival offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    /// RNG seed for this job's data.
+    pub seed: u64,
+}
+
+/// Trace generation parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub jobs: usize,
+    /// Mean inter-arrival gap in microseconds (exponential).
+    pub mean_gap_us: f64,
+    /// Problem sizes to sample from.
+    pub sizes: Vec<usize>,
+    /// Compression ratio m/n.
+    pub compression: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 64,
+            mean_gap_us: 500.0,
+            sizes: vec![256, 512, 1024],
+            compression: 0.25,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a mixed trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut t = 0u64;
+    (0..cfg.jobs)
+        .map(|i| {
+            let kind = ALL_KINDS[rng.next_below(ALL_KINDS.len() as u64) as usize];
+            let n = cfg.sizes[rng.next_below(cfg.sizes.len() as u64) as usize];
+            let m = ((n as f64 * cfg.compression) as usize).max(8);
+            // Exponential inter-arrival.
+            let gap = (-cfg.mean_gap_us * rng.next_open_f64().ln()).max(0.0) as u64;
+            t += gap;
+            JobSpec { id: i as u64, kind, n, m, arrival_us: t, seed: rng.next_u64() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_has_requested_length_and_monotone_arrivals() {
+        let trace = generate(&TraceConfig { jobs: 100, ..Default::default() });
+        assert_eq!(trace.len(), 100);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+    }
+
+    #[test]
+    fn trace_mixes_all_kinds() {
+        let trace = generate(&TraceConfig { jobs: 200, ..Default::default() });
+        for kind in ALL_KINDS {
+            assert!(trace.iter().any(|j| j.kind == kind), "{kind:?} missing");
+        }
+    }
+
+    #[test]
+    fn compression_respected() {
+        let cfg = TraceConfig { jobs: 50, compression: 0.5, ..Default::default() };
+        for j in generate(&cfg) {
+            assert_eq!(j.m, (j.n / 2).max(8));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.seed == y.seed && x.kind == y.kind));
+    }
+
+    #[test]
+    fn mean_gap_roughly_exponential() {
+        let cfg = TraceConfig { jobs: 2000, mean_gap_us: 100.0, ..Default::default() };
+        let trace = generate(&cfg);
+        let total = trace.last().unwrap().arrival_us as f64;
+        let mean = total / 2000.0;
+        assert!((mean - 100.0).abs() < 15.0, "mean gap {mean}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: the full coordinator over real artifacts (L3 x runtime).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Device, Job, Payload, Policy,
+};
+use photonic_randnla::linalg::{self, rel_frobenius_error, Mat};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::workload::psd_matrix;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("PHOTON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn coordinator(policy: Policy, workers: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers,
+        policy,
+        batch: BatchConfig {
+            max_wait: Duration::from_micros(100),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        artifacts_dir: Some(artifacts_dir()),
+    })
+    .expect("coordinator start (run `make artifacts`)")
+}
+
+#[test]
+fn auto_routes_small_jobs_to_pjrt() {
+    let c = coordinator(Policy::Auto, 2);
+    let mut rng = Xoshiro256::new(1);
+    let x = Mat::gaussian(128, 4, 1.0, &mut rng);
+    let resp = c.run(Job::Projection { data: x, m: 32 }).unwrap();
+    assert_eq!(resp.device, Device::Pjrt, "small jobs belong on the GPU arm");
+    c.shutdown();
+}
+
+#[test]
+fn force_opu_routes_to_opu_and_stays_accurate() {
+    let c = coordinator(Policy::ForceOpu, 2);
+    let mut rng = Xoshiro256::new(2);
+    let x = Mat::gaussian(64, 4, 1.0, &mut rng);
+    let resp = c.run(Job::Projection { data: x.clone(), m: 16 }).unwrap();
+    assert_eq!(resp.device, Device::Opu);
+    let p = resp.payload.matrix().unwrap();
+    assert_eq!((p.rows, p.cols), (16, 4));
+    // Norm preservation in expectation: |Gx| ~ sqrt(m)|x| within slop.
+    let in_norm: f64 = x.data.iter().map(|v| v * v).sum::<f64>();
+    let out_norm: f64 = p.data.iter().map(|v| v * v).sum::<f64>();
+    let ratio = out_norm / (16.0 * in_norm);
+    assert!(ratio > 0.2 && ratio < 5.0, "JL ratio {ratio}");
+    c.shutdown();
+}
+
+#[test]
+fn pjrt_and_host_agree_on_deterministic_sketch() {
+    // Same (n, m) seed derivation => PJRT and Host arms use the same G,
+    // so their results must agree to f32 precision.
+    let mut rng = Xoshiro256::new(3);
+    let x = Mat::gaussian(96, 3, 1.0, &mut rng);
+
+    let c1 = coordinator(Policy::ForcePjrt, 1);
+    let r1 = c1.run(Job::Projection { data: x.clone(), m: 24 }).unwrap();
+    assert_eq!(r1.device, Device::Pjrt);
+    c1.shutdown();
+
+    let c2 = coordinator(Policy::ForceHost, 1);
+    let r2 = c2.run(Job::Projection { data: x, m: 24 }).unwrap();
+    assert_eq!(r2.device, Device::Host);
+    c2.shutdown();
+
+    let rel = rel_frobenius_error(r2.payload.matrix().unwrap(), r1.payload.matrix().unwrap());
+    assert!(rel < 1e-5, "pjrt vs host sketch mismatch: {rel}");
+}
+
+#[test]
+fn trace_job_via_pjrt_is_accurate() {
+    let c = coordinator(Policy::ForcePjrt, 2);
+    let a = psd_matrix(128, 64, 4);
+    let truth = a.trace();
+    let est = c
+        .run(Job::Trace { a, m: 96 })
+        .unwrap()
+        .payload
+        .scalar()
+        .unwrap();
+    let rel = (est - truth).abs() / truth;
+    assert!(rel < 0.4, "trace est {est} vs {truth} ({rel})");
+    c.shutdown();
+}
+
+#[test]
+fn randsvd_job_via_pjrt_recovers_low_rank() {
+    use photonic_randnla::workload::{matrix_with_spectrum, Spectrum};
+    let c = coordinator(Policy::ForcePjrt, 2);
+    let a = matrix_with_spectrum(96, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 5);
+    let resp = c
+        .run(Job::RandSvd { a: a.clone(), rank: 6, oversample: 6, power_iters: 2 })
+        .unwrap();
+    match resp.payload {
+        Payload::Svd { u, s, vt } => {
+            let rec = linalg::reconstruct(&u, &s, &vt);
+            assert!(rel_frobenius_error(&a, &rec) < 0.02);
+        }
+        _ => panic!("expected SVD payload"),
+    }
+    c.shutdown();
+}
+
+#[test]
+fn throughput_batching_kicks_in_under_load() {
+    let c = coordinator(Policy::ForcePjrt, 4);
+    let mut rng = Xoshiro256::new(6);
+    let tickets: Vec<_> = (0..32)
+        .map(|_| {
+            let x = Mat::gaussian(64, 2, 1.0, &mut rng);
+            c.submit(Job::Projection { data: x, m: 16 })
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(c.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 32);
+    // Under concurrent submission at one signature, batching must merge.
+    assert!(
+        c.metrics.mean_batch_cols() > 2.0,
+        "no batching observed: {}",
+        c.metrics.mean_batch_cols()
+    );
+    c.shutdown();
+}
+
+#[test]
+fn mixed_workload_completes_and_reports() {
+    let c = coordinator(Policy::Auto, 4);
+    let mut rng = Xoshiro256::new(7);
+    let mut tickets = Vec::new();
+    for i in 0..12u64 {
+        let job = match i % 4 {
+            0 => Job::Projection { data: Mat::gaussian(64, 2, 1.0, &mut rng), m: 16 },
+            1 => Job::Trace { a: psd_matrix(64, 32, i), m: 32 },
+            2 => {
+                let g = photonic_randnla::graph::generators::erdos_renyi(64, 0.1, i);
+                Job::Triangles { adjacency: g.adjacency(), m: 48 }
+            }
+            _ => Job::ApproxMatmul {
+                a: Mat::gaussian(64, 4, 1.0, &mut rng),
+                b: Mat::gaussian(64, 4, 1.0, &mut rng),
+                m: 32,
+            },
+        };
+        tickets.push(c.submit(job));
+    }
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert!(r.latency_us > 0);
+    }
+    let report = c.metrics.report();
+    assert!(report.contains("completed=12"), "{report}");
+    c.shutdown();
+}

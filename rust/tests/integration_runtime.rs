@@ -1,0 +1,197 @@
+//! Integration: rust runtime x AOT artifacts (requires `make artifacts`).
+//!
+//! Validates the full L1/L2 -> HLO -> PJRT -> rust bridge: every artifact
+//! class is executed from rust and checked against the in-crate oracles.
+
+use std::path::PathBuf;
+
+use photonic_randnla::linalg::{self, matmul, rel_frobenius_error, Mat};
+use photonic_randnla::opu::{OpuConfig, OpuDevice};
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::runtime::{ArtifactRegistry, PjrtEngine};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("PHOTON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn registry() -> ArtifactRegistry {
+    ArtifactRegistry::open(&artifacts_dir())
+        .expect("artifacts missing - run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_op_families() {
+    let reg = registry();
+    let names = reg.unit_names();
+    for prefix in ["proj_xla", "proj_pallas", "opu_forward", "sketch_sym", "tri_core", "rsvd_range", "gram"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(prefix)),
+            "missing artifact family {prefix}; have {names:?}"
+        );
+    }
+}
+
+#[test]
+fn proj_xla_matches_host_matmul() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(1);
+    let r = Mat::gaussian(64, 256, 1.0, &mut rng);
+    let a = Mat::gaussian(256, 256, 1.0, &mut rng);
+    let got = reg.run("proj_xla_m64_n256", &[&r, &a]).unwrap().into_mat().unwrap();
+    let want = matmul(&r, &a);
+    assert!(rel_frobenius_error(&want, &got) < 1e-5, "f32 vs f64 GEMM mismatch");
+}
+
+#[test]
+fn proj_pallas_matches_proj_xla() {
+    // The L1 Pallas kernel and the plain XLA dot must agree bit-closely.
+    let reg = registry();
+    let mut rng = Xoshiro256::new(2);
+    let r = Mat::gaussian(64, 256, 1.0, &mut rng);
+    let a = Mat::gaussian(256, 256, 1.0, &mut rng);
+    let xla = reg.run("proj_xla_m64_n256", &[&r, &a]).unwrap().into_mat().unwrap();
+    let pallas = reg.run("proj_pallas_m64_n256", &[&r, &a]).unwrap().into_mat().unwrap();
+    assert!(rel_frobenius_error(&xla, &pallas) < 1e-5);
+}
+
+#[test]
+fn opu_forward_artifact_cross_validates_simulator() {
+    // |R A|^2 computed by the fused Pallas kernel == host oracle for the
+    // same explicit medium; and the device's intensities are physical.
+    let reg = registry();
+    let dev = OpuDevice::new(OpuConfig::ideal(3, 64, 256));
+    let mut rng = Xoshiro256::new(4);
+    let a = Mat::gaussian(256, 256, 1.0, &mut rng);
+
+    let tm = photonic_randnla::opu::TransmissionMatrix::new(99, 64, 256);
+    let (rr, ri) = tm.materialize();
+    let got = reg
+        .run("opu_forward_m64_n256", &[&rr, &ri, &a])
+        .unwrap()
+        .into_mat()
+        .unwrap();
+    let yr = matmul(&rr, &a);
+    let yi = matmul(&ri, &a);
+    let want = Mat::from_fn(64, 256, |i, j| {
+        yr.at(i, j) * yr.at(i, j) + yi.at(i, j) * yi.at(i, j)
+    });
+    assert!(rel_frobenius_error(&want, &got) < 1e-4);
+    let x = Mat::gaussian(256, 4, 1.0, &mut rng);
+    let dev_i = dev.intensity_unconstrained(&x);
+    assert!(dev_i.data.iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn sketch_sym_artifact_matches_definition() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(5);
+    let g = Mat::gaussian(64, 256, 1.0, &mut rng);
+    let a = Mat::gaussian(256, 256, 1.0, &mut rng).symmetrized();
+    let got = reg.run("sketch_sym_m64_n256", &[&g, &a]).unwrap().into_mat().unwrap();
+    let want = photonic_randnla::randnla::sketch::symmetric_sketch_explicit(&g, &a);
+    assert!(rel_frobenius_error(&want, &got) < 1e-4);
+}
+
+#[test]
+fn tri_core_artifact_matches_trace_cubed() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(6);
+    let b = Mat::gaussian(64, 64, 1.0, &mut rng).symmetrized();
+    let got = reg.run("tri_core_m64", &[&b]).unwrap().scalar().unwrap();
+    let want = linalg::trace_cubed(&b) / 6.0;
+    assert!((got - want).abs() / want.abs().max(1.0) < 1e-4, "{got} vs {want}");
+}
+
+#[test]
+fn gram_artifact_matches_definition() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(7);
+    let s = Mat::gaussian(64, 256, 1.0, &mut rng);
+    let t = Mat::gaussian(64, 256, 1.0, &mut rng);
+    let got = reg.run("gram_m64_n256", &[&s, &t]).unwrap().into_mat().unwrap();
+    let want = linalg::matmul_tn(&s, &t).scale(1.0 / 64.0);
+    assert!(rel_frobenius_error(&want, &got) < 1e-4);
+}
+
+#[test]
+fn rsvd_range_artifact_matches_power_iteration() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(8);
+    let a = Mat::gaussian(256, 256, 0.08, &mut rng);
+    let om = Mat::gaussian(256, 64, 1.0, &mut rng);
+    let got = reg
+        .run("rsvd_range_n256_l64_q2", &[&a, &om])
+        .unwrap()
+        .into_mat()
+        .unwrap();
+    let mut y = matmul(&a, &om);
+    for _ in 0..2 {
+        y = matmul(&a, &linalg::matmul_tn(&a, &y));
+    }
+    assert!(rel_frobenius_error(&y, &got) < 1e-3);
+}
+
+#[test]
+fn padded_projection_correct_for_odd_shapes() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(9);
+    // 50 x 200 does not match any bucket; must pad to (64, 256) and crop.
+    let r = Mat::gaussian(50, 200, 1.0, &mut rng);
+    let a = Mat::gaussian(200, 30, 1.0, &mut rng);
+    let (got, bucket) = reg.run_projection_padded("proj_xla", &r, &a).unwrap();
+    assert_eq!(bucket, (64, 256));
+    assert_eq!((got.rows, got.cols), (50, 30));
+    let want = matmul(&r, &a);
+    assert!(rel_frobenius_error(&want, &got) < 1e-5);
+}
+
+#[test]
+fn padded_projection_chunks_wide_batches() {
+    let reg = registry();
+    let mut rng = Xoshiro256::new(10);
+    let r = Mat::gaussian(32, 128, 1.0, &mut rng);
+    // 300 columns > the 256-wide bucket: forces column chunking.
+    let a = Mat::gaussian(128, 300, 1.0, &mut rng);
+    let (got, _) = reg.run_projection_padded("proj_xla", &r, &a).unwrap();
+    assert_eq!((got.rows, got.cols), (32, 300));
+    let want = matmul(&r, &a);
+    assert!(rel_frobenius_error(&want, &got) < 1e-5);
+}
+
+#[test]
+fn engine_thread_serves_concurrent_clients() {
+    let engine = PjrtEngine::start(artifacts_dir()).unwrap();
+    let handle = engine.handle();
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let h = handle.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::new(100 + t);
+            let r = Mat::gaussian(64, 256, 1.0, &mut rng);
+            let a = Mat::gaussian(256, 256, 1.0, &mut rng);
+            let got = h.project("proj_xla", r.clone(), a.clone()).unwrap();
+            let want = matmul(&r, &a);
+            assert!(rel_frobenius_error(&want, &got) < 1e-5);
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let reg = registry();
+    let err = reg.run("nonexistent_op", &[]).unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"));
+}
+
+#[test]
+fn shape_mismatch_is_clean_error() {
+    let reg = registry();
+    let bad = Mat::zeros(3, 3);
+    let err = reg.run("proj_xla_m64_n256", &[&bad, &bad]).unwrap_err();
+    assert!(err.to_string().contains("manifest wants"));
+}

@@ -1,0 +1,246 @@
+//! Property-based invariants (testkit, our proptest-lite): coordinator
+//! routing/batching/state invariants plus the algebraic substrate laws
+//! they depend on.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use photonic_randnla::coordinator::{
+    Availability, BatchConfig, Coordinator, CoordinatorConfig, Job, Policy, Router,
+};
+use photonic_randnla::linalg::{self, Mat};
+use photonic_randnla::opu::{encoding, NoiseModel};
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::check;
+
+#[test]
+fn prop_router_respects_availability() {
+    check("router never picks an absent device", 200, |g| {
+        let avail = Availability {
+            opu: g.bool(),
+            pjrt: g.bool(),
+            pjrt_max: (g.usize(16, 2048), g.usize(16, 4096)),
+            opu_max_n: g.usize(1024, 1 << 20),
+            opu_max_m: g.usize(1024, 1 << 20),
+        };
+        let r = Router::new(Policy::Auto, avail);
+        let m = g.usize(8, 4096);
+        let n = g.usize(8, 1 << 15);
+        let k = g.usize(1, 512);
+        let route = r.route(m, n, k);
+        match route.device {
+            photonic_randnla::coordinator::Device::Opu if !avail.opu => {
+                Err(format!("routed to absent OPU: m={m} n={n}"))
+            }
+            photonic_randnla::coordinator::Device::Pjrt
+                if !avail.pjrt || m > avail.pjrt_max.0 || n > avail.pjrt_max.1 =>
+            {
+                Err(format!("routed to unfit PJRT: m={m} n={n} max={:?}", avail.pjrt_max))
+            }
+            _ => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_router_predictions_positive_and_monotone_in_k() {
+    check("predicted latency positive, nondecreasing in batch", 100, |g| {
+        let r = Router::new(Policy::Auto, Availability::default());
+        let m = g.usize(8, 512);
+        let n = g.usize(8, 1024);
+        let k1 = g.usize(1, 64);
+        let k2 = k1 + g.usize(1, 64);
+        let r1 = r.route(m, n, k1);
+        let r2 = r.route(m, n, k2);
+        if r1.predicted_ms <= 0.0 {
+            return Err(format!("non-positive prediction {}", r1.predicted_ms));
+        }
+        // Same device => more columns cannot be predicted cheaper.
+        if r1.device == r2.device && r2.predicted_ms + 1e-9 < r1.predicted_ms {
+            return Err(format!(
+                "k {k1}->{k2} got cheaper: {} -> {}",
+                r1.predicted_ms, r2.predicted_ms
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_projection_equals_individual() {
+    // The batcher invariant: merging requests never changes any result.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: Duration::from_micros(2000),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        artifacts_dir: None,
+    })
+    .unwrap();
+    let coord = Arc::new(coord);
+
+    check("batching preserves per-request results", 12, |g| {
+        let n = 16 * g.usize(1, 4);
+        let m = 8 * g.usize(1, 2);
+        let reqs: Vec<Mat> = (0..g.usize(2, 6))
+            .map(|_| {
+                let mut rng = g.rng();
+                Mat::gaussian(n, g.usize(1, 5), 1.0, &mut rng)
+            })
+            .collect();
+        // Submit concurrently (they will merge), then sequentially.
+        let tickets: Vec<_> = reqs
+            .iter()
+            .map(|x| coord.submit(Job::Projection { data: x.clone(), m }))
+            .collect();
+        let merged: Vec<Mat> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().payload.matrix().unwrap().clone())
+            .collect();
+        for (x, got) in reqs.iter().zip(&merged) {
+            let again = coord
+                .run(Job::Projection { data: x.clone(), m })
+                .unwrap();
+            let again = again.payload.matrix().unwrap().clone();
+            if linalg::rel_frobenius_error(&again, got) > 1e-12 {
+                return Err(format!("batch result differs at n={n} m={m}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitplane_roundtrip() {
+    check("bitplane encode/decode roundtrip within half LSB", 60, |g| {
+        let mut rng = g.rng();
+        let rows = g.usize(1, 40);
+        let cols = g.usize(1, 6);
+        let bits = g.usize(2, 12);
+        let x = Mat::gaussian(rows, cols, g.f64(0.1, 5.0), &mut rng);
+        let bp = encoding::encode(&x, bits);
+        let xq = encoding::decode(&bp);
+        for j in 0..cols {
+            let lsb = bp.scales[j];
+            for i in 0..rows {
+                let e = (x.at(i, j) - xq.at(i, j)).abs();
+                if e > 0.5 * lsb + 1e-9 {
+                    return Err(format!("err {e} > lsb/2 {lsb} at bits={bits}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pad_crop_roundtrip() {
+    check("pad then crop is identity", 100, |g| {
+        let mut rng = g.rng();
+        let r = g.usize(1, 30);
+        let c = g.usize(1, 30);
+        let m = Mat::gaussian(r, c, 1.0, &mut rng);
+        let p = m.pad(r + g.usize(0, 20), c + g.usize(0, 20));
+        if p.crop(r, c) != m {
+            return Err(format!("roundtrip failed at {r}x{c}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_reconstructs() {
+    check("thin QR: A = QR and Q orthonormal", 30, |g| {
+        let mut rng = g.rng();
+        let n = g.usize(1, 12);
+        let m = n + g.usize(0, 20);
+        let a = Mat::gaussian(m, n, 1.0, &mut rng);
+        let qr = linalg::thin_qr(&a);
+        let rec = linalg::matmul(&qr.q, &qr.r);
+        if linalg::rel_frobenius_error(&a, &rec) > 1e-9 {
+            return Err(format!("A != QR at {m}x{n}"));
+        }
+        let qtq = linalg::matmul_tn(&qr.q, &qr.q);
+        if linalg::rel_frobenius_error(&Mat::eye(n), &qtq) > 1e-9 {
+            return Err(format!("Q^T Q != I at {m}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_frobenius_identity() {
+    check("sum sigma^2 == ||A||_F^2", 25, |g| {
+        let mut rng = g.rng();
+        let r = g.usize(1, 14);
+        let c = g.usize(1, 14);
+        let a = Mat::gaussian(r, c, 1.0, &mut rng);
+        let s = linalg::svd(&a).s;
+        let sum: f64 = s.iter().map(|x| x * x).sum();
+        let fro2 = linalg::frobenius(&a).powi(2);
+        if (sum - fro2).abs() > 1e-7 * fro2.max(1.0) {
+            return Err(format!("{sum} vs {fro2} at {r}x{c}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_triangle_trace_identity() {
+    check("Tr(A^3) == 6 * exact triangle count", 20, |g| {
+        let n = g.usize(4, 40);
+        let p = g.f64(0.05, 0.5);
+        let seed = g.u64(0..=u64::MAX);
+        let graph = photonic_randnla::graph::generators::erdos_renyi(n, p, seed);
+        let dense = linalg::trace_cubed(&graph.adjacency());
+        let exact = 6.0 * graph.exact_triangles() as f64;
+        if (dense - exact).abs() > 1e-6 {
+            return Err(format!("n={n} p={p}: {dense} vs {exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_philox_parallel_partition_invariance() {
+    // The OPU's reproducibility bedrock: any partition of the index space
+    // generates identical values.
+    check("philox random access == streaming", 40, |g| {
+        let seed = g.u64(0..=u64::MAX);
+        let m = g.usize(1, 8);
+        let n = g.usize(1, 64);
+        let tm = photonic_randnla::opu::TransmissionMatrix::new(seed, m, n);
+        let i = g.usize(0, m - 1);
+        let j = g.usize(0, n - 1);
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        tm.row_into(i, &mut re, &mut im);
+        let (er, ei) = tm.entry(i, j);
+        if er != re[j] || ei != im[j] {
+            return Err(format!("mismatch at ({i},{j}) seed {seed}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sketch_scale_equivariance() {
+    check("G(c*x) == c * G(x) for the digital sketcher", 40, |g| {
+        let mut rng = g.rng();
+        let n = g.usize(2, 48);
+        let m = g.usize(1, 24);
+        let c = g.f64(-3.0, 3.0);
+        let s = photonic_randnla::randnla::DigitalSketcher::new(m, n, g.u64(0..=u64::MAX));
+        use photonic_randnla::randnla::Sketcher;
+        let x = Mat::gaussian(n, 2, 1.0, &mut rng);
+        let lhs = s.project(&x.scale(c));
+        let rhs = s.project(&x).scale(c);
+        if linalg::rel_frobenius_error(&rhs, &lhs) > 1e-10 {
+            return Err(format!("scale equivariance broken: c={c} n={n} m={m}"));
+        }
+        Ok(())
+    });
+}
