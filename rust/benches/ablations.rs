@@ -109,7 +109,7 @@ fn ablation_batching() {
                 noise: NoiseModel::ideal(),
                 ..Default::default()
             },
-            artifacts_dir: None,
+            ..Default::default()
         })
         .unwrap();
         let mut rng = Xoshiro256::new(4);

@@ -1,0 +1,130 @@
+//! Bench: pool-scaling ablation — projection throughput vs OPU replicas.
+//!
+//! ```bash
+//! cargo bench --bench pool_scaling
+//! ```
+//!
+//! Two series over the same batched projection workload:
+//!
+//! - **replication** (fits aperture): identical batches round-robin over
+//!   1/2/4 OPU replicas; the headline metric is *simulated device-timeline
+//!   throughput* — total projected columns divided by the pool makespan
+//!   (max per-replica simulated busy time). This is the quantity a pool
+//!   of physical 2 kHz-DMD OPUs scales: each added replica multiplies the
+//!   frame budget. Wall-clock jobs/s is printed for reference only (the
+//!   *simulator* is host-CPU-bound, so wall time measures this machine,
+//!   not the modelled hardware).
+//! - **sharding** (exceeds aperture): one oversized projection (2x the
+//!   per-replica aperture in both dims) across growing pools; the shard
+//!   planner spreads the 2x2 grid, and the simulated makespan drops.
+//!
+//! Acceptance gate: >= 1.5x simulated throughput at 4 replicas vs 1.
+
+use std::time::Instant;
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Device, Job, Policy, PoolConfig,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+
+const JOBS: usize = 16;
+const N: usize = 128;
+const M: usize = 32;
+const K: usize = 8;
+
+fn opu_coordinator(replicas: usize, aperture: Option<(usize, usize)>) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceOpu,
+        batch: BatchConfig {
+            max_cols: K,
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig {
+            opu_replicas: replicas,
+            pjrt_replicas: 0,
+            opu_aperture: aperture,
+            ..Default::default()
+        },
+        artifacts_dir: None,
+    })
+    .expect("coordinator start")
+}
+
+/// (simulated makespan ms, wall seconds) of the batched workload.
+fn run_workload(replicas: usize) -> (f64, f64) {
+    let c = opu_coordinator(replicas, None);
+    let mut rng = Xoshiro256::new(1);
+    let t0 = Instant::now();
+    for _ in 0..JOBS {
+        let x = Mat::gaussian(N, K, 1.0, &mut rng);
+        c.run(Job::Projection { data: x, m: M }).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let makespan = c
+        .pool()
+        .devices()
+        .iter()
+        .filter(|d| d.id.kind == Device::Opu)
+        .map(|d| d.busy_ms())
+        .fold(0.0, f64::max);
+    c.shutdown();
+    (makespan, wall)
+}
+
+fn main() {
+    println!("== pool scaling: {JOBS} batched projections of {N} -> {M}, k = {K} ==");
+    println!(
+        "{:<10} {:>16} {:>18} {:>12}",
+        "replicas", "sim makespan ms", "sim cols/device-s", "wall jobs/s"
+    );
+    let total_cols = (JOBS * K) as f64;
+    let mut tput = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let (makespan, wall) = run_workload(replicas);
+        let cols_per_s = total_cols / (makespan / 1e3);
+        tput.push((replicas, cols_per_s));
+        println!(
+            "{replicas:<10} {makespan:>16.2} {cols_per_s:>18.1} {:>12.1}",
+            JOBS as f64 / wall
+        );
+    }
+    let t1 = tput.iter().find(|(r, _)| *r == 1).unwrap().1;
+    let t4 = tput.iter().find(|(r, _)| *r == 4).unwrap().1;
+    let speedup = t4 / t1;
+    println!(
+        "\nheadline: 4-replica / 1-replica projection throughput = {speedup:.2}x \
+         (gate >= 1.5x): {}",
+        if speedup >= 1.5 { "PASS" } else { "FAIL" }
+    );
+
+    // Sharded oversized projection: (2*aperture) in both dims.
+    let (am, an) = (M / 2, N / 2);
+    println!(
+        "\n== aperture sharding: one {N} -> {M} projection on ({am}, {an})-aperture replicas =="
+    );
+    println!("{:<10} {:>10} {:>16}", "replicas", "shards", "sim makespan ms");
+    for replicas in [1usize, 2, 4] {
+        let c = opu_coordinator(replicas, Some((am, an)));
+        let mut rng = Xoshiro256::new(2);
+        let x = Mat::gaussian(N, K, 1.0, &mut rng);
+        c.run(Job::Projection { data: x, m: M }).unwrap();
+        let shards = c
+            .metrics
+            .shards_dispatched
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let makespan = c
+            .pool()
+            .devices()
+            .iter()
+            .filter(|d| d.id.kind == Device::Opu)
+            .map(|d| d.busy_ms())
+            .fold(0.0, f64::max);
+        println!("{replicas:<10} {shards:>10} {makespan:>16.2}");
+        c.shutdown();
+    }
+}

@@ -1,30 +1,45 @@
-//! Dynamic batcher + projection service.
+//! Dynamic batcher + sharded projection service.
 //!
 //! All randomization in the system funnels through [`ProjectionService`]:
 //! workers post (data, m) projection requests; the batcher groups requests
 //! with the same (n, m) signature, concatenates their columns into one
 //! frame batch (projection is column-wise, so `G [X1|X2] = [GX1|GX2]`
-//! exactly), routes the merged batch to a device, and scatters results.
+//! exactly), asks the [`Router`] for a pool [`Schedule`], executes the
+//! schedule's shard cells on their assigned devices (in parallel, with
+//! reroute-on-failure), recombines, and scatters results.
 //!
 //! Batching is the vLLM-style throughput lever: the OPU charges its fixed
 //! exposure pipeline per *frame batch*, and PJRT amortises the compiled
-//! GEMM launch the same way.
+//! GEMM launch the same way. Sharding is the capacity lever: batches
+//! larger than any single aperture split across the pool (see
+//! [`crate::coordinator::shard`]) with no change to the estimator.
+//!
+//! Operator identity: every (n, m) signature owns one logical Gaussian
+//! operator seeded by [`signature_seed`]. The digital/PJRT arms address
+//! blocks of it through the counter-based
+//! [`CounterSketcher`](crate::randnla::backend::CounterSketcher), so the
+//! same signature sees the same G across batches, shards, replicas and
+//! pool sizes. OPU shard cells pin a Philox-derived medium per cell
+//! coordinate, so the composite optical operator is equally reproducible.
 
 use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{DeviceId, DevicePool};
 use crate::coordinator::request::Device;
-use crate::coordinator::router::Router;
-use crate::linalg::Mat;
+use crate::coordinator::router::{Router, Schedule, ShardAssignment};
+use crate::coordinator::shard;
+use crate::linalg::{matmul, Mat};
 use crate::opu::{NoiseModel, OpuConfig, OpuDevice};
-use crate::randnla::backend::{DigitalSketcher, Sketcher};
-use crate::randnla::sketch::OpuSketcher;
+use crate::randnla::backend::{CounterSketcher, PjrtSketcher, Sketcher};
+use crate::rng::Philox4x32;
 use crate::runtime::PjrtHandle;
 
 /// Batcher configuration.
@@ -34,7 +49,7 @@ pub struct BatchConfig {
     pub max_cols: usize,
     /// Flush any group whose oldest request is older than this.
     pub max_wait: Duration,
-    /// Base seed: every (n, m) device derives its medium from it.
+    /// Base seed: every (n, m) signature derives its operator from it.
     pub seed: u64,
     /// OPU noise model (ablation knob).
     pub noise: NoiseModel,
@@ -52,6 +67,26 @@ impl Default for BatchConfig {
             use_pallas: false,
         }
     }
+}
+
+/// Operator seed for a (n, m) signature: same signature => same logical G
+/// across batches and shards (estimator coherence).
+pub fn signature_seed(base: u64, n: usize, m: usize) -> u64 {
+    base ^ ((n as u64) << 32) ^ m as u64
+}
+
+/// Medium/operator seed for one shard cell. The unsharded cell keeps the
+/// signature seed itself; proper cells derive theirs from the cell's
+/// (out, in) origin through Philox, so a shard's operator depends only on
+/// its coordinates — never on which replica runs it or how many replicas
+/// exist. That is what keeps sharded results deterministic across pool
+/// sizes.
+fn cell_seed(base: u64, (n, m): (usize, usize), out: &Range<usize>, inp: &Range<usize>) -> u64 {
+    if out.start == 0 && out.end == m && inp.start == 0 && inp.end == n {
+        return base;
+    }
+    let b = Philox4x32::new(base).block_at(out.start as u64, inp.start as u64);
+    ((b[0] as u64) << 32) | b[1] as u64
 }
 
 /// One projection request (n x k columns -> m x k).
@@ -91,13 +126,14 @@ impl ProjectionService {
     pub fn start(
         cfg: BatchConfig,
         router: Router,
+        pool: Arc<DevicePool>,
         pjrt: Option<PjrtHandle>,
         metrics: Arc<Metrics>,
     ) -> (Self, JoinHandle<()>) {
         let (tx, rx) = mpsc::channel::<ProjReq>();
         let join = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || batcher_loop(cfg, router, pjrt, metrics, rx))
+            .spawn(move || batcher_loop(cfg, router, pool, pjrt, metrics, rx))
             .expect("spawn batcher");
         (Self { tx }, join)
     }
@@ -113,11 +149,12 @@ struct Group {
 fn batcher_loop(
     cfg: BatchConfig,
     router: Router,
+    pool: Arc<DevicePool>,
     pjrt: Option<PjrtHandle>,
     metrics: Arc<Metrics>,
     rx: mpsc::Receiver<ProjReq>,
 ) {
-    let mut exec = DeviceExecutor::new(&cfg, pjrt);
+    let exec = Arc::new(DeviceExecutor::new(&cfg, pjrt));
     let mut groups: HashMap<(usize, usize), Group> = HashMap::new();
     loop {
         // Wait bounded by the earliest deadline among pending groups.
@@ -143,7 +180,7 @@ fn batcher_loop(
                 g.reqs.push(req);
                 if g.cols >= cfg.max_cols {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &mut exec, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, key, g);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -154,7 +191,7 @@ fn batcher_loop(
                     .collect();
                 for key in due {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &mut exec, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, key, g);
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -162,7 +199,7 @@ fn batcher_loop(
                 let keys: Vec<(usize, usize)> = groups.keys().copied().collect();
                 for key in keys {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &mut exec, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, key, g);
                 }
                 return;
             }
@@ -170,18 +207,22 @@ fn batcher_loop(
     }
 }
 
+/// Merge a group, schedule it onto the pool and hand it to a dispatch
+/// thread, so the batcher loop keeps merging other signatures while this
+/// batch runs on its devices. Pool accounting for the initial assignments
+/// happens here, synchronously — the next schedule decision must already
+/// see this batch as in-flight work.
 fn flush(
     router: &Router,
-    exec: &mut DeviceExecutor,
-    metrics: &Metrics,
+    exec: &Arc<DeviceExecutor>,
+    pool: &Arc<DevicePool>,
+    metrics: &Arc<Metrics>,
     (n, m): (usize, usize),
     group: Group,
 ) {
     let total_cols = group.cols;
-    metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    metrics
-        .batched_cols
-        .fetch_add(total_cols as u64, std::sync::atomic::Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_cols.fetch_add(total_cols as u64, Ordering::Relaxed);
 
     // Concatenate all columns into one (n x total_cols) frame batch.
     let mut merged = Mat::zeros(n, total_cols);
@@ -194,14 +235,214 @@ fn flush(
         at += req.data.cols;
     }
 
-    let route = router.route(m, n, total_cols);
-    let outcome = exec.execute(route.device, m, n, &merged);
+    // Kind affinity: later batches of this signature stay on the arm the
+    // first batch used while it remains viable. Each arm realises a
+    // different operator G, and multi-pass estimators (Trace/Triangles)
+    // project the same signature twice — flip-flopping arms between
+    // passes would silently corrupt the estimate.
+    let preferred = exec.preferred_kind(n, m);
+    let schedule = router.schedule_preferring(pool, m, n, total_cols, preferred);
+    exec.note_kind(n, m, schedule.kind);
+    for a in &schedule.shards {
+        pool.begin(a.device, a.predicted_ms);
+    }
+    if schedule.shards.len() > 1 {
+        metrics.sharded_jobs.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .shards_dispatched
+            .fetch_add(schedule.shards.len() as u64, Ordering::Relaxed);
+    }
 
+    let job = FlushJob {
+        exec: exec.clone(),
+        pool: pool.clone(),
+        metrics: metrics.clone(),
+        schedule,
+        sig: (n, m),
+        merged,
+        reqs: group.reqs,
+        total_cols,
+    };
+    // Dispatch off the batcher loop; under thread exhaustion degrade to
+    // inline execution instead of panicking (which would wedge every
+    // pending requester behind a dead batcher).
+    let slot = Arc::new(Mutex::new(Some(job)));
+    let in_thread = slot.clone();
+    let spawned = std::thread::Builder::new().name("flush".into()).spawn(move || {
+        if let Some(job) = in_thread.lock().unwrap().take() {
+            job.run();
+        }
+    });
+    if spawned.is_err() {
+        if let Some(job) = slot.lock().unwrap().take() {
+            job.run();
+        }
+    }
+}
+
+/// One merged batch on its way to the pool: everything the dispatch
+/// thread (or the inline fallback) needs to execute and respond.
+struct FlushJob {
+    exec: Arc<DeviceExecutor>,
+    pool: Arc<DevicePool>,
+    metrics: Arc<Metrics>,
+    schedule: Schedule,
+    sig: (usize, usize),
+    merged: Mat,
+    reqs: Vec<ProjReq>,
+    total_cols: usize,
+}
+
+impl FlushJob {
+    fn run(self) {
+        let outcome = execute_schedule(
+            &self.exec,
+            &self.pool,
+            &self.metrics,
+            &self.schedule,
+            self.sig,
+            &self.merged,
+        );
+        scatter(&self.metrics, self.sig, self.total_cols, self.reqs, outcome);
+    }
+}
+
+/// Run every shard cell of the schedule (in parallel when sharded) and
+/// recombine. Initial pool accounting was done by `flush`; reroutes do
+/// their own.
+fn execute_schedule(
+    exec: &DeviceExecutor,
+    pool: &DevicePool,
+    metrics: &Metrics,
+    schedule: &Schedule,
+    sig: (usize, usize),
+    merged: &Mat,
+) -> Result<(Mat, Device)> {
+    let k = merged.cols;
+    let parts: Vec<Result<(Mat, DeviceId)>> = if schedule.shards.len() == 1 {
+        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, merged)]
+    } else {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = schedule
+                .shards
+                .iter()
+                .map(|a| s.spawn(move || run_shard(exec, pool, metrics, a, sig, merged)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("shard execution thread panicked")),
+                })
+                .collect()
+        })
+    };
+    let mut partials = Vec::with_capacity(parts.len());
+    let mut used: Vec<DeviceId> = Vec::with_capacity(parts.len());
+    for p in parts {
+        let (mat, id) = p?;
+        partials.push(mat);
+        used.push(id);
+    }
+    let result = if schedule.plan.is_unsharded() {
+        partials.pop().expect("single partial")
+    } else {
+        shard::recombine(&schedule.plan, k, &partials)
+    };
+    // Report the kind that actually executed (reroutes may have moved
+    // cells off the planned kind): majority wins, ties go to the plan.
+    let mut counts: Vec<(Device, usize)> = Vec::new();
+    for id in &used {
+        match counts.iter_mut().find(|(kind, _)| *kind == id.kind) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((id.kind, 1)),
+        }
+    }
+    let device = counts
+        .iter()
+        .max_by_key(|(kind, c)| (*c, usize::from(*kind == schedule.kind)))
+        .map(|(kind, _)| *kind)
+        .unwrap_or(schedule.kind);
+    Ok((result, device))
+}
+
+/// Execute one shard cell with reroute-on-failure: an execution error
+/// marks the replica dead and the cell moves to the least-loaded live
+/// replica of the same kind, then to the host arm, before giving up.
+fn run_shard(
+    exec: &DeviceExecutor,
+    pool: &DevicePool,
+    metrics: &Metrics,
+    a: &ShardAssignment,
+    sig: (usize, usize),
+    merged: &Mat,
+) -> Result<(Mat, DeviceId)> {
+    // Slice this cell's input rows (borrow the batch when unsharded).
+    let x_store;
+    let x: &Mat = if a.inp.start == 0 && a.inp.end == merged.rows {
+        merged
+    } else {
+        x_store = Mat::from_fn(a.inp.len(), merged.cols, |i, j| merged.at(a.inp.start + i, j));
+        &x_store
+    };
+
+    let mut tried: Vec<DeviceId> = Vec::new();
+    let mut device = a.device;
+    let predicted = a.predicted_ms;
+    let mut begun = true; // flush accounted the initial assignment
+    loop {
+        if !begun {
+            pool.begin(device, predicted);
+        }
+        begun = false;
+        let poisoned = pool.get(device).map(|d| d.take_poison()).unwrap_or(false);
+        let t0 = Instant::now();
+        let outcome = if poisoned {
+            Err(anyhow::anyhow!("injected fault on {}", device.label()))
+        } else {
+            exec.run_cell(device, sig, &a.out, &a.inp, x)
+        };
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        match outcome {
+            Ok((y, simulated_ms)) => {
+                pool.finish(device, predicted, simulated_ms.unwrap_or(wall_ms));
+                return Ok((y, device));
+            }
+            Err(e) => {
+                pool.finish(device, predicted, wall_ms);
+                pool.mark_dead(device);
+                metrics.rerouted.fetch_add(1, Ordering::Relaxed);
+                tried.push(device);
+                let next = pool
+                    .least_loaded(device.kind, &tried)
+                    .or_else(|| pool.least_loaded(Device::Host, &tried));
+                match next {
+                    Some(d) => device = d.id,
+                    None => {
+                        return Err(anyhow::anyhow!(
+                            "no live device left for shard of {}: {e}",
+                            a.device.label()
+                        ))
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Slice the batch result back to the requesters.
+fn scatter(
+    metrics: &Metrics,
+    (_n, m): (usize, usize),
+    total_cols: usize,
+    reqs: Vec<ProjReq>,
+    outcome: Result<(Mat, Device)>,
+) {
     match outcome {
         Ok((result, device)) => {
             metrics.record_device(device);
             let mut at = 0usize;
-            for req in group.reqs {
+            for req in reqs {
                 let k = req.data.cols;
                 let mut slice = Mat::zeros(m, k);
                 for i in 0..m {
@@ -218,24 +459,36 @@ fn flush(
             }
         }
         Err(e) => {
-            metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
             let msg = format!("device execution failed: {e}");
-            for req in group.reqs {
+            for req in reqs {
                 let _ = req.resp.send(Err(anyhow::anyhow!(msg.clone())));
             }
         }
     }
 }
 
-/// Owns per-(n, m) device instances; falls back Pjrt -> Host on error.
+type BlockKey = (usize, usize, usize, usize, usize, usize);
+
+/// Owns per-cell device/operator instances behind mutexed caches so shard
+/// threads share them. Execution happens outside the cache locks.
 struct DeviceExecutor {
     seed: u64,
     noise: NoiseModel,
     use_pallas: bool,
-    pjrt: Option<PjrtHandle>,
-    opus: HashMap<(usize, usize), Arc<OpuDevice>>,
-    digitals: HashMap<(usize, usize), DigitalSketcher>,
-    pjrts: HashMap<(usize, usize), crate::randnla::backend::PjrtSketcher>,
+    /// The PJRT handle's mpsc sender is `Send` but not `Sync`; the mutex
+    /// makes the executor shareable and clones a handle per use.
+    pjrt: Option<Mutex<PjrtHandle>>,
+    /// (replica, n, m, out0, inp0) -> OPU instance. The medium seed
+    /// depends only on the cell, never the replica: replicas of one cell
+    /// share a medium (estimator coherence) but keep independent
+    /// exposure/noise/timing state (per-replica device timelines).
+    opus: Mutex<HashMap<(usize, usize, usize, usize, usize), Arc<OpuDevice>>>,
+    /// Counter-generated operator blocks for the digital/PJRT arms.
+    blocks: Mutex<HashMap<BlockKey, Arc<Mat>>>,
+    pjrts: Mutex<HashMap<BlockKey, PjrtSketcher>>,
+    /// Signature -> arm last scheduled, for kind affinity (see `flush`).
+    affinity: Mutex<HashMap<(usize, usize), Device>>,
 }
 
 impl DeviceExecutor {
@@ -244,76 +497,135 @@ impl DeviceExecutor {
             seed: cfg.seed,
             noise: cfg.noise.clone(),
             use_pallas: cfg.use_pallas,
-            pjrt,
-            opus: HashMap::new(),
-            digitals: HashMap::new(),
-            pjrts: HashMap::new(),
+            pjrt: pjrt.map(Mutex::new),
+            opus: Mutex::new(HashMap::new()),
+            blocks: Mutex::new(HashMap::new()),
+            pjrts: Mutex::new(HashMap::new()),
+            affinity: Mutex::new(HashMap::new()),
         }
     }
 
-    fn dim_seed(&self, n: usize, m: usize) -> u64 {
-        // Same (n, m) => same medium/G across batches: estimator coherence.
-        self.seed ^ ((n as u64) << 32) ^ m as u64
+    fn preferred_kind(&self, n: usize, m: usize) -> Option<Device> {
+        self.affinity.lock().unwrap().get(&(n, m)).copied()
     }
 
-    fn execute(&mut self, device: Device, m: usize, n: usize, merged: &Mat) -> Result<(Mat, Device)> {
-        match device {
+    fn note_kind(&self, n: usize, m: usize, kind: Device) {
+        self.affinity.lock().unwrap().insert((n, m), kind);
+    }
+
+    fn pjrt_handle(&self) -> Option<PjrtHandle> {
+        self.pjrt.as_ref().map(|m| m.lock().unwrap().clone())
+    }
+
+    /// Execute one shard cell on one device. Returns the partial result
+    /// and, for the OPU, the simulated device milliseconds consumed.
+    fn run_cell(
+        &self,
+        device: DeviceId,
+        sig: (usize, usize),
+        out: &Range<usize>,
+        inp: &Range<usize>,
+        x: &Mat,
+    ) -> Result<(Mat, Option<f64>)> {
+        match device.kind {
             Device::Opu => {
-                let key = (n, m);
-                let seed = self.dim_seed(n, m);
-                let noise = self.noise.clone();
-                let dev = self.opus.entry(key).or_insert_with(|| {
-                    Arc::new(OpuDevice::new(
-                        OpuConfig::new(seed, m, n).with_noise(noise),
-                    ))
-                });
-                let s = OpuSketcher::new(dev.clone());
-                Ok((s.project(merged), Device::Opu))
+                let dev = self.opu_device(device.replica, sig, out, inp);
+                let y = dev.project(x);
+                // Model-derived per-call cost, not a stats() delta: the
+                // device may be shared by concurrent batches, and a
+                // t1 - t0 window would double-count their exposures.
+                Ok((y, Some(dev.project_cost_ms(x.cols))))
             }
             Device::Pjrt => {
-                let seed = self.dim_seed(n, m);
-                if let Some(h) = &self.pjrt {
-                    let key = (n, m);
-                    if !self.pjrts.contains_key(&key) {
-                        match crate::randnla::backend::PjrtSketcher::new(
-                            m,
-                            n,
-                            seed,
-                            h.clone(),
-                            self.use_pallas,
-                        ) {
-                            Ok(s) => {
-                                self.pjrts.insert(key, s);
-                            }
-                            Err(_) => return self.execute(Device::Host, m, n, merged),
-                        }
-                    }
-                    let s = &self.pjrts[&key];
-                    Ok((s.project(merged), Device::Pjrt))
-                } else {
-                    self.execute(Device::Host, m, n, merged)
-                }
+                let sk = self.pjrt_sketcher(sig, out, inp)?;
+                Ok((sk.try_project(x)?, None))
             }
             Device::Host => {
-                let seed = self.dim_seed(n, m);
-                let s = self
-                    .digitals
-                    .entry((n, m))
-                    .or_insert_with(|| DigitalSketcher::new(m, n, seed));
-                Ok((s.project(merged), Device::Host))
+                let g = self.operator_block(sig, out, inp);
+                Ok((matmul(&g, x), None))
             }
         }
+    }
+
+    fn opu_device(
+        &self,
+        replica: usize,
+        (n, m): (usize, usize),
+        out: &Range<usize>,
+        inp: &Range<usize>,
+    ) -> Arc<OpuDevice> {
+        let key = (replica, n, m, out.start, inp.start);
+        if let Some(d) = self.opus.lock().unwrap().get(&key) {
+            return d.clone();
+        }
+        // Power-on outside the lock; a racing build keeps the first
+        // insert (identical seed => identical medium either way).
+        let seed = cell_seed(signature_seed(self.seed, n, m), (n, m), out, inp);
+        let dev = Arc::new(OpuDevice::new(
+            OpuConfig::new(seed, out.len(), inp.len())
+                .with_noise(self.noise.clone())
+                .with_replica(replica),
+        ));
+        let mut map = self.opus.lock().unwrap();
+        map.entry(key).or_insert(dev).clone()
+    }
+
+    /// Counter-generated block of the signature's logical operator.
+    fn operator_block(
+        &self,
+        (n, m): (usize, usize),
+        out: &Range<usize>,
+        inp: &Range<usize>,
+    ) -> Arc<Mat> {
+        let key = (n, m, out.start, out.len(), inp.start, inp.len());
+        if let Some(b) = self.blocks.lock().unwrap().get(&key) {
+            return b.clone();
+        }
+        let cs = CounterSketcher::new(m, n, signature_seed(self.seed, n, m));
+        let block = Arc::new(cs.block(out.clone(), inp.clone()));
+        let mut map = self.blocks.lock().unwrap();
+        map.entry(key).or_insert(block).clone()
+    }
+
+    fn pjrt_sketcher(
+        &self,
+        sig: (usize, usize),
+        out: &Range<usize>,
+        inp: &Range<usize>,
+    ) -> Result<PjrtSketcher> {
+        let (n, m) = sig;
+        let key = (n, m, out.start, out.len(), inp.start, inp.len());
+        if let Some(s) = self.pjrts.lock().unwrap().get(&key) {
+            return Ok(s.clone());
+        }
+        let handle = self
+            .pjrt_handle()
+            .ok_or_else(|| anyhow::anyhow!("pjrt arm not attached"))?;
+        let g = self.operator_block(sig, out, inp);
+        let sk = PjrtSketcher::from_operator(g, handle, self.use_pallas)?;
+        let mut map = self.pjrts.lock().unwrap();
+        Ok(map.entry(key).or_insert(sk).clone())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::PoolConfig;
     use crate::coordinator::router::{Availability, Policy};
     use crate::linalg::rel_frobenius_error;
     use crate::rng::Xoshiro256;
 
-    fn host_service(max_cols: usize, wait_us: u64) -> (ProjectionService, Arc<Metrics>) {
+    fn no_pjrt_avail() -> Availability {
+        Availability { pjrt: false, ..Availability::default() }
+    }
+
+    fn service(
+        policy: Policy,
+        pool_cfg: PoolConfig,
+        max_cols: usize,
+        wait_us: u64,
+    ) -> (ProjectionService, Arc<Metrics>, Arc<DevicePool>) {
         let metrics = Arc::new(Metrics::new());
         let cfg = BatchConfig {
             max_cols,
@@ -321,8 +633,21 @@ mod tests {
             noise: NoiseModel::ideal(),
             ..Default::default()
         };
-        let router = Router::new(Policy::ForceHost, Availability::default());
-        let (svc, _join) = ProjectionService::start(cfg, router, None, metrics.clone());
+        let avail = no_pjrt_avail();
+        let router = Router::new(policy, avail);
+        let pool = Arc::new(DevicePool::build(&pool_cfg, &avail));
+        let (svc, _join) =
+            ProjectionService::start(cfg, router, pool.clone(), None, metrics.clone());
+        (svc, metrics, pool)
+    }
+
+    fn host_service(max_cols: usize, wait_us: u64) -> (ProjectionService, Arc<Metrics>) {
+        let (svc, metrics, _pool) = service(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            max_cols,
+            wait_us,
+        );
         (svc, metrics)
     }
 
@@ -347,6 +672,20 @@ mod tests {
         let r1 = svc.project(x.clone(), 8).unwrap();
         let r2 = svc.project(x, 8).unwrap();
         assert!(rel_frobenius_error(&r1.result, &r2.result) < 1e-12);
+    }
+
+    #[test]
+    fn host_arm_applies_the_signature_operator_exactly() {
+        // The digital arm must compute exactly G @ x for the counter-based
+        // signature operator.
+        let (svc, _m) = host_service(8, 50);
+        let mut rng = Xoshiro256::new(9);
+        let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+        let got = svc.project(x.clone(), 8).unwrap().result;
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let g = CounterSketcher::new(8, 24, seed).matrix();
+        let want = matmul(&g, &x);
+        assert_eq!(got, want, "host arm drifted from the signature operator");
     }
 
     #[test]
@@ -394,20 +733,106 @@ mod tests {
 
     #[test]
     fn opu_arm_works_through_service() {
-        let metrics = Arc::new(Metrics::new());
-        let cfg = BatchConfig {
-            max_cols: 8,
-            max_wait: Duration::from_micros(50),
-            noise: NoiseModel::ideal(),
-            ..Default::default()
-        };
-        let router = Router::new(Policy::ForceOpu, Availability::default());
-        let (svc, _join) = ProjectionService::start(cfg, router, None, metrics.clone());
+        let (svc, metrics, _pool) = service(
+            Policy::ForceOpu,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            8,
+            50,
+        );
         let mut rng = Xoshiro256::new(5);
         let x = Mat::gaussian(32, 2, 1.0, &mut rng);
         let r = svc.project(x, 8).unwrap();
         assert_eq!(r.device, Device::Opu);
         assert_eq!((r.result.rows, r.result.cols), (8, 2));
         assert_eq!(metrics.device_counts().0, 1);
+    }
+
+    #[test]
+    fn host_sharded_recombination_matches_manual_reference() {
+        // Force a 2x2 digital shard grid and check the pool result equals
+        // the shard-sum reference computed independently — bit for bit.
+        let (n, m, k) = (32usize, 16usize, 3usize);
+        let (svc, metrics, _pool) = service(
+            Policy::ForceHost,
+            PoolConfig {
+                pjrt_replicas: 0,
+                host_workers: 4,
+                host_aperture: Some((8, 16)),
+                ..Default::default()
+            },
+            4,
+            50,
+        );
+        let mut rng = Xoshiro256::new(6);
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let got = svc.project(x.clone(), m).unwrap().result;
+        assert!(metrics.sharded_jobs.load(Ordering::Relaxed) >= 1);
+
+        let seed = signature_seed(BatchConfig::default().seed, n, m);
+        let cs = CounterSketcher::new(m, n, seed);
+        let plan = crate::coordinator::shard::ShardPlan::for_aperture(m, n, 8, 16);
+        let partials: Vec<Mat> = plan
+            .cells()
+            .iter()
+            .map(|c| {
+                let g = cs.block(c.out.clone(), c.inp.clone());
+                let xb = Mat::from_fn(c.inp.len(), k, |i, j| x.at(c.inp.start + i, j));
+                matmul(&g, &xb)
+            })
+            .collect();
+        let want = crate::coordinator::shard::recombine(&plan, k, &partials);
+        assert_eq!(got, want, "sharded execution != shard-sum reference");
+
+        // And the composite stays the unsharded operator up to summation
+        // association.
+        let unsharded = matmul(&cs.matrix(), &x);
+        assert!(rel_frobenius_error(&unsharded, &got) < 1e-12);
+    }
+
+    #[test]
+    fn output_dim_sharding_is_bit_identical_to_unsharded() {
+        // m-only sharding stacks disjoint row blocks: every output row is
+        // produced by exactly one cell with the full input range, so the
+        // result must equal the unsharded projection exactly.
+        let (n, m, k) = (24usize, 16usize, 2usize);
+        let (svc, _metrics, _pool) = service(
+            Policy::ForceHost,
+            PoolConfig {
+                pjrt_replicas: 0,
+                host_workers: 2,
+                host_aperture: Some((4, usize::MAX)),
+                ..Default::default()
+            },
+            2,
+            50,
+        );
+        let mut rng = Xoshiro256::new(7);
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let got = svc.project(x.clone(), m).unwrap().result;
+        let seed = signature_seed(BatchConfig::default().seed, n, m);
+        let want = matmul(&CounterSketcher::new(m, n, seed).matrix(), &x);
+        assert_eq!(got, want, "output-dim sharding must be bit-identical");
+    }
+
+    #[test]
+    fn poisoned_host_worker_reroutes_to_peer() {
+        let (svc, metrics, pool) = service(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, host_workers: 2, ..Default::default() },
+            4,
+            50,
+        );
+        let victim = DeviceId { kind: Device::Host, replica: 0 };
+        pool.poison(victim);
+        let mut rng = Xoshiro256::new(8);
+        // Run enough single requests that one lands on the poisoned worker.
+        for _ in 0..4 {
+            let x = Mat::gaussian(16, 2, 1.0, &mut rng);
+            let r = svc.project(x, 8).unwrap();
+            assert_eq!((r.result.rows, r.result.cols), (8, 2));
+        }
+        assert_eq!(metrics.rerouted.load(Ordering::Relaxed), 1);
+        assert!(!pool.get(victim).unwrap().is_alive());
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
     }
 }

@@ -18,6 +18,12 @@ pub struct Metrics {
     pub opu_jobs: AtomicU64,
     pub pjrt_jobs: AtomicU64,
     pub host_jobs: AtomicU64,
+    /// Batches that were split by the shard planner.
+    pub sharded_jobs: AtomicU64,
+    /// Total shard cells dispatched (>= sharded_jobs).
+    pub shards_dispatched: AtomicU64,
+    /// Shard executions rerouted off a failed replica.
+    pub rerouted: AtomicU64,
     latency_hist: LatencyHist,
 }
 
@@ -82,7 +88,8 @@ impl Metrics {
         let (opu, pjrt, host) = self.device_counts();
         format!(
             "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
-             devices: opu={} pjrt={} host={} p50={}us p99={}us",
+             devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
+             p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -91,6 +98,9 @@ impl Metrics {
             opu,
             pjrt,
             host,
+            self.sharded_jobs.load(Ordering::Relaxed),
+            self.shards_dispatched.load(Ordering::Relaxed),
+            self.rerouted.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
         )
@@ -138,5 +148,7 @@ mod tests {
         let r = m.report();
         assert!(r.contains("submitted="));
         assert!(r.contains("p99="));
+        assert!(r.contains("sharded="));
+        assert!(r.contains("rerouted="));
     }
 }

@@ -1,29 +1,53 @@
 //! L3 coordinator (the paper's *system* contribution, serving-shaped):
+//! a sharded multi-device execution plane for the randomization step.
 //!
 //! ```text
 //!  Job ──▶ Coordinator (worker pool) ──▶ ProjectionService (batcher)
-//!                 │                            │ merge columns, route
+//!                 │                            │ merge same-(n, m) columns
 //!      compressed-domain host algebra          ▼
-//!      (QR/SVD/trace on sketches)     ┌──── Router ────┐
-//!                                     ▼        ▼       ▼
-//!                                   OpuSim   PJRT    HostCpu
+//!      (QR/SVD/trace on sketches)     Router::schedule ──── DevicePool
+//!                                     (argmin predicted +    (liveness,
+//!                                      queue delay; shard     queue depth,
+//!                                      planner for oversized  in-flight)
+//!                                      batches)
+//!                                          │ shard cells
+//!                          ┌───────────────┼────────────────┐
+//!                          ▼               ▼                ▼
+//!                     OpuSim x N       PJRT x M         HostCpu x W
+//!                          └───────────────┴────────────────┘
+//!                           recombine (Σ input shards, stack
+//!                           output shards) ──▶ scatter results
 //! ```
 //!
-//! - [`router`] — the OPU/GPU offload policy (Fig. 2's decision boundary);
+//! - [`pool`]    — the device inventory: replicas with per-device queue
+//!   depth, in-flight accounting and liveness (the scheduler's state);
+//! - [`router`]  — the OPU/GPU offload policy (Fig. 2's decision
+//!   boundary) plus the load-aware pool scheduler; `Force*` policies are
+//!   pool filters, not pins — a dead kind degrades to the host arm;
+//! - [`shard`]   — the aperture shard planner: `G X = Σᵢ Gᵢ Xᵢ` over
+//!   input blocks, `[G₁; G₂] X = [G₁X; G₂X]` over output blocks, so a
+//!   pool of small devices serves arbitrarily large sketches exactly;
 //! - [`batcher`] — dynamic batching of projection requests (the
-//!   throughput lever; projection is column-wise so merging is exact);
-//! - [`server`] — worker pool decomposing RandNLA jobs;
-//! - [`metrics`] — counters + latency percentiles;
+//!   throughput lever; projection is column-wise so merging is exact),
+//!   shard execution with reroute-on-failure, recombination;
+//! - [`server`]  — worker pool decomposing RandNLA jobs;
+//! - [`metrics`] — counters + latency percentiles + shard/reroute stats;
 //! - [`request`] — job/response types.
+//!
+//! See `docs/architecture.md` for the full request-path walkthrough.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod shard;
 
-pub use batcher::{BatchConfig, ProjectionService};
+pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use metrics::Metrics;
+pub use pool::{DeviceId, DevicePool, PoolConfig, PoolDevice};
 pub use request::{Device, Job, JobResponse, Payload, Ticket};
-pub use router::{Availability, Policy, Route, Router};
+pub use router::{Availability, Policy, Route, Router, Schedule, ShardAssignment};
 pub use server::{Coordinator, CoordinatorConfig};
+pub use shard::{recombine, ShardCell, ShardPlan};

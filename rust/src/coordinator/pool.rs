@@ -1,0 +1,408 @@
+//! Device pool: the execution plane's inventory of randomization devices.
+//!
+//! The coordinator no longer owns "one OPU and one PJRT arm": it owns a
+//! [`DevicePool`] of N OPU replicas, M PJRT executors and host fallback
+//! workers. Every [`PoolDevice`] carries its own aperture limits, liveness
+//! flag and load accounting (in-flight batches, predicted-pending work,
+//! accumulated service time), which is exactly the state the load-aware
+//! scheduler in [`crate::coordinator::router`] minimises over.
+//!
+//! Accounting is lock-free (atomics; f64 totals stored as bit patterns)
+//! because it sits on the dispatch hot path of every flush.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::request::Device;
+use crate::coordinator::router::Availability;
+
+/// Identity of one device in the pool: kind + replica index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DeviceId {
+    pub kind: Device,
+    pub replica: usize,
+}
+
+impl DeviceId {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.kind.name(), self.replica)
+    }
+}
+
+/// Pool sizing + per-kind aperture overrides.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Simulated OPU replicas.
+    pub opu_replicas: usize,
+    /// PJRT executor slots (they share the engine thread; the slots bound
+    /// concurrent dispatch and form independent failure domains).
+    pub pjrt_replicas: usize,
+    /// Host digital fallback workers (always at least 1).
+    pub host_workers: usize,
+    /// Per-replica OPU aperture (max_m, max_n); `None` = the availability
+    /// defaults (native DMD/camera limits).
+    pub opu_aperture: Option<(usize, usize)>,
+    /// PJRT aperture override; `None` = the artifact bucket ladder max.
+    pub pjrt_aperture: Option<(usize, usize)>,
+    /// Host aperture; `None` = unlimited. Setting it forces the shard
+    /// planner on the digital arm (tests, benches).
+    pub host_aperture: Option<(usize, usize)>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            opu_replicas: 1,
+            pjrt_replicas: 1,
+            host_workers: 1,
+            opu_aperture: None,
+            pjrt_aperture: None,
+            host_aperture: None,
+        }
+    }
+}
+
+/// One device slot with its own queue-depth and in-flight accounting.
+pub struct PoolDevice {
+    pub id: DeviceId,
+    /// Output (sketch) aperture: largest m one batch may use.
+    pub max_m: usize,
+    /// Input aperture: largest n one batch may use.
+    pub max_n: usize,
+    alive: AtomicBool,
+    /// Fault injection: the executor fails the next batch on a poisoned
+    /// device (chaos testing of the reroute path).
+    poisoned: AtomicBool,
+    inflight: AtomicUsize,
+    /// Predicted ms of work dispatched but not yet finished (f64 bits).
+    pending_ms: AtomicU64,
+    /// Accumulated service time, ms (f64 bits). For OPUs this is
+    /// *simulated* device time — the per-replica timeline a physical pool
+    /// would expose; for PJRT/host it is wall-clock.
+    busy_ms: AtomicU64,
+    jobs: AtomicU64,
+}
+
+fn f64_fetch_add(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).max(0.0);
+        match cell.compare_exchange_weak(
+            cur,
+            next.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl PoolDevice {
+    fn new(id: DeviceId, max_m: usize, max_n: usize) -> Self {
+        Self {
+            id,
+            max_m,
+            max_n,
+            alive: AtomicBool::new(true),
+            poisoned: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            pending_ms: AtomicU64::new(0.0f64.to_bits()),
+            busy_ms: AtomicU64::new(0.0f64.to_bits()),
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Whether one (m x n) batch fits this device's aperture unsharded.
+    pub fn fits(&self, m: usize, n: usize) -> bool {
+        m <= self.max_m && n <= self.max_n
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Predicted wait before a new batch would start here (the scheduler's
+    /// queue-delay term, see [`crate::perfmodel::queue_delay_ms`]).
+    pub fn queue_delay_ms(&self) -> f64 {
+        crate::perfmodel::queue_delay_ms(
+            f64::from_bits(self.pending_ms.load(Ordering::Relaxed)),
+            self.inflight(),
+        )
+    }
+
+    /// Accumulated service time (simulated for OPUs, wall for the rest).
+    pub fn busy_ms(&self) -> f64 {
+        f64::from_bits(self.busy_ms.load(Ordering::Relaxed))
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Consume a pending poison marker (executor-side fault injection).
+    pub fn take_poison(&self) -> bool {
+        self.poisoned.swap(false, Ordering::Relaxed)
+    }
+}
+
+/// The pool. Cheap to share: devices live behind `Arc`s.
+pub struct DevicePool {
+    devices: Vec<Arc<PoolDevice>>,
+}
+
+impl DevicePool {
+    /// Build the pool from sizing config + device availability. Absent
+    /// kinds (no PJRT engine, OPU disabled) contribute zero devices; at
+    /// least one host worker always exists so every request has a home.
+    pub fn build(cfg: &PoolConfig, avail: &Availability) -> Self {
+        let mut devices = Vec::new();
+        if avail.opu {
+            let (mm, mn) = cfg.opu_aperture.unwrap_or((avail.opu_max_m, avail.opu_max_n));
+            for r in 0..cfg.opu_replicas {
+                devices.push(Arc::new(PoolDevice::new(
+                    DeviceId { kind: Device::Opu, replica: r },
+                    mm,
+                    mn,
+                )));
+            }
+        }
+        if avail.pjrt {
+            let (mm, mn) = cfg.pjrt_aperture.unwrap_or(avail.pjrt_max);
+            for r in 0..cfg.pjrt_replicas {
+                devices.push(Arc::new(PoolDevice::new(
+                    DeviceId { kind: Device::Pjrt, replica: r },
+                    mm,
+                    mn,
+                )));
+            }
+        }
+        let (hm, hn) = cfg.host_aperture.unwrap_or((usize::MAX, usize::MAX));
+        for r in 0..cfg.host_workers.max(1) {
+            devices.push(Arc::new(PoolDevice::new(
+                DeviceId { kind: Device::Host, replica: r },
+                hm,
+                hn,
+            )));
+        }
+        Self { devices }
+    }
+
+    pub fn devices(&self) -> &[Arc<PoolDevice>] {
+        &self.devices
+    }
+
+    pub fn get(&self, id: DeviceId) -> Option<Arc<PoolDevice>> {
+        self.devices.iter().find(|d| d.id == id).cloned()
+    }
+
+    /// Alive devices of one kind.
+    pub fn alive_of(&self, kind: Device) -> Vec<Arc<PoolDevice>> {
+        self.devices
+            .iter()
+            .filter(|d| d.id.kind == kind && d.is_alive())
+            .cloned()
+            .collect()
+    }
+
+    pub fn alive_count(&self, kind: Device) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| d.id.kind == kind && d.is_alive())
+            .count()
+    }
+
+    /// Remove a replica from scheduling (it stays listed for metrics).
+    pub fn mark_dead(&self, id: DeviceId) -> bool {
+        match self.get(id) {
+            Some(d) => {
+                d.alive.store(false, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn revive(&self, id: DeviceId) -> bool {
+        match self.get(id) {
+            Some(d) => {
+                d.alive.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Make the device fail its next batch (tests the reroute path).
+    pub fn poison(&self, id: DeviceId) -> bool {
+        match self.get(id) {
+            Some(d) => {
+                d.poisoned.store(true, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Dispatch accounting: a batch predicted to take `predicted_ms` is
+    /// now in flight on `id`.
+    pub fn begin(&self, id: DeviceId, predicted_ms: f64) {
+        if let Some(d) = self.get(id) {
+            d.inflight.fetch_add(1, Ordering::Relaxed);
+            f64_fetch_add(&d.pending_ms, predicted_ms);
+        }
+    }
+
+    /// Completion accounting (`actual_ms`: simulated device ms for OPUs,
+    /// wall ms otherwise).
+    pub fn finish(&self, id: DeviceId, predicted_ms: f64, actual_ms: f64) {
+        if let Some(d) = self.get(id) {
+            d.inflight.fetch_sub(1, Ordering::Relaxed);
+            f64_fetch_add(&d.pending_ms, -predicted_ms);
+            f64_fetch_add(&d.busy_ms, actual_ms);
+            d.jobs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Least-loaded alive device of `kind`, excluding `exclude` (devices a
+    /// reroute has already failed on). Ties break toward the least total
+    /// service time, then the lowest replica index, so idle replicas are
+    /// rotated through deterministically.
+    pub fn least_loaded(&self, kind: Device, exclude: &[DeviceId]) -> Option<Arc<PoolDevice>> {
+        self.devices
+            .iter()
+            .filter(|d| d.id.kind == kind && d.is_alive() && !exclude.contains(&d.id))
+            .min_by(|a, b| {
+                (a.queue_delay_ms(), a.busy_ms(), a.id.replica)
+                    .partial_cmp(&(b.queue_delay_ms(), b.busy_ms(), b.id.replica))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .cloned()
+    }
+
+    /// One line per device: replica, liveness, load counters.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for d in &self.devices {
+            out.push_str(&format!(
+                "{:<8} alive={} jobs={} inflight={} busy_ms={:.2}\n",
+                d.id.label(),
+                d.is_alive(),
+                d.jobs(),
+                d.inflight(),
+                d.busy_ms(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(opu: usize, pjrt: usize, host: usize) -> DevicePool {
+        DevicePool::build(
+            &PoolConfig {
+                opu_replicas: opu,
+                pjrt_replicas: pjrt,
+                host_workers: host,
+                ..Default::default()
+            },
+            &Availability::default(),
+        )
+    }
+
+    #[test]
+    fn build_counts_kinds() {
+        let p = pool(3, 2, 1);
+        assert_eq!(p.alive_count(Device::Opu), 3);
+        assert_eq!(p.alive_count(Device::Pjrt), 2);
+        assert_eq!(p.alive_count(Device::Host), 1);
+    }
+
+    #[test]
+    fn absent_kinds_contribute_nothing_but_host_is_guaranteed() {
+        let avail = Availability { opu: false, pjrt: false, ..Availability::default() };
+        let p = DevicePool::build(
+            &PoolConfig { host_workers: 0, ..Default::default() },
+            &avail,
+        );
+        assert_eq!(p.alive_count(Device::Opu), 0);
+        assert_eq!(p.alive_count(Device::Pjrt), 0);
+        assert_eq!(p.alive_count(Device::Host), 1);
+    }
+
+    #[test]
+    fn mark_dead_removes_from_scheduling() {
+        let p = pool(2, 0, 1);
+        let id = DeviceId { kind: Device::Opu, replica: 0 };
+        assert!(p.mark_dead(id));
+        assert_eq!(p.alive_count(Device::Opu), 1);
+        assert!(p.least_loaded(Device::Opu, &[]).unwrap().id.replica == 1);
+        assert!(p.revive(id));
+        assert_eq!(p.alive_count(Device::Opu), 2);
+    }
+
+    #[test]
+    fn accounting_roundtrip() {
+        let p = pool(1, 0, 1);
+        let id = DeviceId { kind: Device::Opu, replica: 0 };
+        let d = p.get(id).unwrap();
+        assert_eq!(d.queue_delay_ms(), 0.0);
+        p.begin(id, 2.5);
+        assert_eq!(d.inflight(), 1);
+        assert!(d.queue_delay_ms() >= 2.5);
+        p.finish(id, 2.5, 3.0);
+        assert_eq!(d.inflight(), 0);
+        assert_eq!(d.queue_delay_ms(), 0.0);
+        assert_eq!(d.busy_ms(), 3.0);
+        assert_eq!(d.jobs(), 1);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_then_rotates() {
+        let p = pool(2, 0, 1);
+        let id0 = DeviceId { kind: Device::Opu, replica: 0 };
+        p.begin(id0, 5.0);
+        assert_eq!(p.least_loaded(Device::Opu, &[]).unwrap().id.replica, 1);
+        p.finish(id0, 5.0, 5.0);
+        // Both idle now; replica 0 has more busy time -> pick replica 1.
+        assert_eq!(p.least_loaded(Device::Opu, &[]).unwrap().id.replica, 1);
+        // Excluding replica 1 falls back to replica 0.
+        let ex = [DeviceId { kind: Device::Opu, replica: 1 }];
+        assert_eq!(p.least_loaded(Device::Opu, &ex).unwrap().id.replica, 0);
+    }
+
+    #[test]
+    fn poison_is_one_shot() {
+        let p = pool(1, 0, 1);
+        let id = DeviceId { kind: Device::Opu, replica: 0 };
+        assert!(p.poison(id));
+        let d = p.get(id).unwrap();
+        assert!(d.take_poison());
+        assert!(!d.take_poison());
+    }
+
+    #[test]
+    fn aperture_overrides_apply() {
+        let p = DevicePool::build(
+            &PoolConfig {
+                opu_replicas: 1,
+                opu_aperture: Some((16, 32)),
+                host_aperture: Some((8, 8)),
+                ..Default::default()
+            },
+            &Availability::default(),
+        );
+        let opu = p.get(DeviceId { kind: Device::Opu, replica: 0 }).unwrap();
+        assert!(opu.fits(16, 32) && !opu.fits(17, 32));
+        let host = p.get(DeviceId { kind: Device::Host, replica: 0 }).unwrap();
+        assert!(!host.fits(9, 4));
+    }
+}

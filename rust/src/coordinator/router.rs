@@ -1,4 +1,5 @@
-//! Offload router: which device performs the randomization step.
+//! Offload router / load-aware scheduler: which device(s) perform the
+//! randomization step.
 //!
 //! Implements the paper's §III decision boundary as a *policy object*: for
 //! small projections the GPU(PJRT) is faster (launch+GEMM beats the OPU's
@@ -6,8 +7,24 @@
 //! memory cliff the OPU is the only option. The predicted-latency route
 //! uses the perfmodel; availability constraints (device present, bucket
 //! exists) are applied on top.
+//!
+//! Two entry points:
+//! - [`Router::route`] — the legacy single-device decision (kept for the
+//!   Fig. 2 crossover diagnostics and the routing property tests);
+//! - [`Router::schedule`] — the pool scheduler: picks the device *kind*
+//!   whose (perfmodel service time + queue-delay estimate) makespan is
+//!   smallest, builds a [`ShardPlan`] against that kind's aperture, and
+//!   greedily assigns shard cells to the least-loaded alive replicas.
+//!   `Force*` policies act as pool filters (restrict the candidate kind),
+//!   not pins: if the forced kind has no alive replica the request
+//!   degrades to the host arm instead of failing.
 
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::coordinator::pool::{DeviceId, DevicePool, PoolDevice};
 use crate::coordinator::request::Device;
+use crate::coordinator::shard::ShardPlan;
 use crate::perfmodel::{GpuModel, OpuTimingModel};
 
 /// Routing policy.
@@ -51,6 +68,30 @@ pub struct Route {
     pub predicted_ms: f64,
 }
 
+/// One shard cell assigned to one pool replica.
+#[derive(Clone, Debug)]
+pub struct ShardAssignment {
+    pub device: DeviceId,
+    /// Output rows this shard produces.
+    pub out: Range<usize>,
+    /// Input rows (operator columns) this shard consumes.
+    pub inp: Range<usize>,
+    /// Perfmodel service-time prediction for this shard.
+    pub predicted_ms: f64,
+}
+
+/// A scheduled batch: the chosen kind, its shard plan and the per-replica
+/// assignments (in [`ShardPlan::cells`] order, which is also the
+/// deterministic recombination order).
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: Device,
+    pub plan: ShardPlan,
+    pub shards: Vec<ShardAssignment>,
+    /// Predicted makespan (max over replicas of queue delay + assigned work).
+    pub predicted_ms: f64,
+}
+
 impl Router {
     pub fn new(policy: Policy, avail: Availability) -> Self {
         Self {
@@ -91,6 +132,153 @@ impl Router {
             (Some(o), None) => Route { device: Device::Opu, predicted_ms: o },
             (None, None) => Route { device: Device::Host, predicted_ms: self.gpu_ms(m, n, k) },
         }
+    }
+
+    /// Perfmodel service time of one (m x n) x k batch on a device kind.
+    fn device_ms(&self, kind: Device, m: usize, n: usize, k: usize) -> f64 {
+        match kind {
+            Device::Opu => self.opu_ms(m, n, k),
+            Device::Pjrt => self.gpu_ms(m, n, k),
+            Device::Host => crate::perfmodel::host_projection_ms(n, m, k),
+        }
+    }
+
+    /// Load-aware pool scheduling: choose the device kind minimising the
+    /// predicted makespan (perfmodel service time x dispatch waves + best
+    /// queue delay among its alive replicas), shard against that kind's
+    /// aperture, and spread cells over the least-loaded replicas. Falls
+    /// back to the host arm when no candidate kind is viable.
+    pub fn schedule(&self, pool: &DevicePool, m: usize, n: usize, k: usize) -> Schedule {
+        self.schedule_preferring(pool, m, n, k, None)
+    }
+
+    /// [`schedule`](Self::schedule) with kind affinity: if `preferred` is
+    /// a policy-allowed kind that is still viable, use it regardless of
+    /// momentary load. Multi-pass estimators (Trace/Triangles run two
+    /// projections of one (n, m) signature) need both passes on the same
+    /// arm — each arm realises a *different* operator G, and mixing arms
+    /// across passes would silently corrupt the estimate.
+    pub fn schedule_preferring(
+        &self,
+        pool: &DevicePool,
+        m: usize,
+        n: usize,
+        k: usize,
+        preferred: Option<Device>,
+    ) -> Schedule {
+        let kinds: &[Device] = match self.policy {
+            Policy::Auto => &[Device::Opu, Device::Pjrt],
+            Policy::ForceOpu => &[Device::Opu],
+            Policy::ForcePjrt => &[Device::Pjrt],
+            Policy::ForceHost => &[],
+        };
+        if let Some(p) = preferred {
+            if kinds.contains(&p) {
+                if let Some((_, plan, devs)) = self.kind_plan(pool, p, m, n, k) {
+                    return self.assign_cells(p, &plan, &devs, k);
+                }
+            }
+        }
+        let mut best: Option<(f64, Device, ShardPlan, Vec<Arc<PoolDevice>>)> = None;
+        for &kind in kinds {
+            let Some((cost, plan, devs)) = self.kind_plan(pool, kind, m, n, k) else {
+                continue;
+            };
+            if best.as_ref().map_or(true, |(c, ..)| cost < *c) {
+                best = Some((cost, kind, plan, devs));
+            }
+        }
+        match best {
+            Some((_, kind, plan, devs)) => self.assign_cells(kind, &plan, &devs, k),
+            None => {
+                // Host fallback; if every host worker was marked dead, use
+                // them anyway — digital execution cannot actually fail.
+                let mut devs = pool.alive_of(Device::Host);
+                if devs.is_empty() {
+                    devs = pool
+                        .devices()
+                        .iter()
+                        .filter(|d| d.id.kind == Device::Host)
+                        .cloned()
+                        .collect();
+                }
+                assert!(!devs.is_empty(), "pool built without host workers");
+                let max_m = devs.iter().map(|d| d.max_m).min().unwrap_or(usize::MAX);
+                let max_n = devs.iter().map(|d| d.max_n).min().unwrap_or(usize::MAX);
+                let plan = ShardPlan::for_aperture(m, n, max_m, max_n);
+                self.assign_cells(Device::Host, &plan, &devs, k)
+            }
+        }
+    }
+
+    /// Viability of one kind for this batch: its alive replicas, a plan
+    /// against their (minimum) aperture, and the predicted makespan.
+    /// `None` when no replica is alive or the perfmodel says the kind
+    /// cannot serve even one shard (e.g. GPU OOM).
+    fn kind_plan(
+        &self,
+        pool: &DevicePool,
+        kind: Device,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Option<(f64, ShardPlan, Vec<Arc<PoolDevice>>)> {
+        let devs = pool.alive_of(kind);
+        if devs.is_empty() {
+            return None;
+        }
+        let max_m = devs.iter().map(|d| d.max_m).min().unwrap_or(0);
+        let max_n = devs.iter().map(|d| d.max_n).min().unwrap_or(0);
+        if max_m == 0 || max_n == 0 {
+            return None;
+        }
+        let plan = ShardPlan::for_aperture(m, n, max_m, max_n);
+        let (sm, sn) = plan.shard_dims();
+        let per = self.device_ms(kind, sm, sn, k);
+        if !per.is_finite() {
+            return None;
+        }
+        let waves = plan.num_cells().div_ceil(devs.len());
+        let queue = devs
+            .iter()
+            .map(|d| d.queue_delay_ms())
+            .fold(f64::INFINITY, f64::min);
+        Some((queue + waves as f64 * per, plan, devs))
+    }
+
+    /// Greedy least-loaded assignment of plan cells onto replicas: each
+    /// cell goes to the replica with the smallest (queue delay + work
+    /// assigned so far), ties broken by total service time then replica
+    /// index — so an idle pool round-robins deterministically.
+    fn assign_cells(
+        &self,
+        kind: Device,
+        plan: &ShardPlan,
+        devs: &[Arc<PoolDevice>],
+        k: usize,
+    ) -> Schedule {
+        let mut local: Vec<f64> = devs.iter().map(|d| d.queue_delay_ms()).collect();
+        let mut shards = Vec::with_capacity(plan.num_cells());
+        for cell in plan.cells() {
+            let per = self.device_ms(kind, cell.out.len(), cell.inp.len(), k);
+            let mut best = 0usize;
+            for i in 1..devs.len() {
+                let a = (local[i], devs[i].busy_ms(), devs[i].id.replica);
+                let b = (local[best], devs[best].busy_ms(), devs[best].id.replica);
+                if a < b {
+                    best = i;
+                }
+            }
+            local[best] += per;
+            shards.push(ShardAssignment {
+                device: devs[best].id,
+                out: cell.out,
+                inp: cell.inp,
+                predicted_ms: per,
+            });
+        }
+        let predicted_ms = local.iter().copied().fold(0.0, f64::max);
+        Schedule { kind, plan: plan.clone(), shards, predicted_ms }
     }
 
     fn opu_ms(&self, m: usize, n: usize, k: usize) -> f64 {
@@ -212,5 +400,109 @@ mod tests {
         let single = r.route(512, 1024, 1);
         let batched = r.route(512, 1024, 64);
         assert!(batched.predicted_ms < 64.0 * single.predicted_ms);
+    }
+
+    // ---- pool scheduling ----
+
+    use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
+
+    fn opu_pool(replicas: usize, aperture: (usize, usize)) -> DevicePool {
+        DevicePool::build(
+            &PoolConfig {
+                opu_replicas: replicas,
+                pjrt_replicas: 0,
+                opu_aperture: Some(aperture),
+                ..Default::default()
+            },
+            &Availability { pjrt: false, ..Availability::default() },
+        )
+    }
+
+    #[test]
+    fn schedule_unsharded_when_it_fits() {
+        let pool = opu_pool(2, (64, 128));
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        let s = r.schedule(&pool, 32, 64, 4);
+        assert_eq!(s.kind, Device::Opu);
+        assert!(s.plan.is_unsharded());
+        assert_eq!(s.shards.len(), 1);
+    }
+
+    #[test]
+    fn schedule_shards_oversized_across_distinct_replicas() {
+        let pool = opu_pool(4, (16, 32));
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        // 2x the aperture in both dims -> 2x2 grid of shards.
+        let s = r.schedule(&pool, 32, 64, 2);
+        assert_eq!(s.shards.len(), 4);
+        let mut replicas: Vec<usize> = s.shards.iter().map(|a| a.device.replica).collect();
+        replicas.sort_unstable();
+        replicas.dedup();
+        assert_eq!(replicas.len(), 4, "shards not spread over distinct replicas");
+        // Every output/input row covered exactly once per axis pair.
+        let covered: usize = s.shards.iter().map(|a| a.out.len() * a.inp.len()).sum();
+        assert_eq!(covered, 32 * 64);
+    }
+
+    #[test]
+    fn schedule_avoids_busy_replica() {
+        let pool = opu_pool(2, (64, 128));
+        pool.begin(DeviceId { kind: Device::Opu, replica: 0 }, 50.0);
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        let s = r.schedule(&pool, 32, 64, 1);
+        assert_eq!(s.shards[0].device.replica, 1, "scheduler ignored queue delay");
+    }
+
+    #[test]
+    fn schedule_force_filters_fall_back_to_host_when_kind_dead() {
+        let pool = opu_pool(1, (64, 128));
+        pool.mark_dead(DeviceId { kind: Device::Opu, replica: 0 });
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        let s = r.schedule(&pool, 32, 64, 1);
+        assert_eq!(s.kind, Device::Host, "dead forced kind must degrade to host");
+    }
+
+    #[test]
+    fn schedule_force_host_uses_host() {
+        let pool = opu_pool(2, (64, 128));
+        let r = Router::new(Policy::ForceHost, Availability::default());
+        let s = r.schedule(&pool, 32, 64, 1);
+        assert_eq!(s.kind, Device::Host);
+        assert!(s.plan.is_unsharded());
+    }
+
+    #[test]
+    fn schedule_auto_prefers_accelerator_over_host() {
+        let pool = DevicePool::build(
+            &PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            &Availability { pjrt: false, ..Availability::default() },
+        );
+        let r = Router::new(Policy::Auto, Availability::default());
+        let s = r.schedule(&pool, 512, 4096, 1);
+        assert_eq!(s.kind, Device::Opu);
+    }
+
+    #[test]
+    fn schedule_preferring_pins_kind_against_load() {
+        // Auto would pick PJRT for a tiny job; affinity pins OPU while
+        // it stays viable (multi-pass estimator coherence).
+        let pool = DevicePool::build(&PoolConfig::default(), &Availability::default());
+        let r = Router::new(Policy::Auto, Availability::default());
+        assert_eq!(r.schedule(&pool, 8, 64, 1).kind, Device::Pjrt);
+        let s = r.schedule_preferring(&pool, 8, 64, 1, Some(Device::Opu));
+        assert_eq!(s.kind, Device::Opu);
+        // A dead preferred kind falls back to the normal argmin.
+        pool.mark_dead(DeviceId { kind: Device::Opu, replica: 0 });
+        let s = r.schedule_preferring(&pool, 8, 64, 1, Some(Device::Opu));
+        assert_eq!(s.kind, Device::Pjrt);
+    }
+
+    #[test]
+    fn schedule_predicts_positive_makespan() {
+        let pool = opu_pool(3, (16, 32));
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        let s = r.schedule(&pool, 48, 96, 2);
+        assert!(s.predicted_ms > 0.0);
+        assert!(s.shards.iter().all(|a| a.predicted_ms > 0.0));
     }
 }

@@ -3,8 +3,15 @@
 //!
 //! Submit a [`Job`], get a [`Ticket`]; workers pull jobs, funnel every
 //! randomization through the shared [`ProjectionService`] (where dynamic
-//! batching and device routing happen), and finish the small compressed
-//! computations on the host — exactly the paper's hybrid pipeline.
+//! batching, pool scheduling, sharding and device routing happen), and
+//! finish the small compressed computations on the host — exactly the
+//! paper's hybrid pipeline, scaled out over a [`DevicePool`].
+//!
+//! Degradation over failure: if the PJRT engine cannot start (missing
+//! artifacts, missing `xla` feature) the coordinator serves without that
+//! arm instead of refusing to start, and a replica that dies mid-run is
+//! removed from scheduling while its work reroutes (see
+//! [`crate::coordinator::batcher`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -15,6 +22,7 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{BatchConfig, ProjectionService};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
 use crate::coordinator::request::{Device, Job, JobResponse, Payload, Ticket};
 use crate::coordinator::router::{Availability, Policy, Router};
 use crate::linalg::{self, matmul_tn, Mat};
@@ -25,6 +33,8 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     pub policy: Policy,
     pub batch: BatchConfig,
+    /// Execution-plane sizing: replicas per device kind + apertures.
+    pub pool: PoolConfig,
     /// Attach a PJRT engine over this artifacts dir (None = no PJRT arm).
     pub artifacts_dir: Option<std::path::PathBuf>,
 }
@@ -35,6 +45,7 @@ impl Default for CoordinatorConfig {
             workers: 4,
             policy: Policy::Auto,
             batch: BatchConfig::default(),
+            pool: PoolConfig::default(),
             artifacts_dir: None,
         }
     }
@@ -52,6 +63,7 @@ pub struct Coordinator {
     job_tx: Option<mpsc::Sender<QueuedJob>>,
     workers: Vec<JoinHandle<()>>,
     svc: ProjectionService,
+    pool: Arc<DevicePool>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     // Keep the engine alive for the coordinator's lifetime.
@@ -62,30 +74,52 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
 
+        // The PJRT arm is best-effort: a missing engine (no artifacts, no
+        // xla runtime) removes the arm from the pool instead of failing
+        // the whole coordinator.
         let (engine, handle, pjrt_max): (Option<PjrtEngine>, Option<PjrtHandle>, (usize, usize)) =
             match &cfg.artifacts_dir {
-                Some(dir) => {
-                    let engine = PjrtEngine::start(dir.clone())?;
-                    let h = engine.handle();
-                    let max = h
-                        .buckets("proj_xla")?
-                        .into_iter()
-                        .max_by_key(|&(m, n)| m * n)
-                        .unwrap_or((0, 0));
-                    (Some(engine), Some(h), max)
-                }
+                Some(dir) => match PjrtEngine::start(dir.clone()) {
+                    Ok(engine) => {
+                        let h = engine.handle();
+                        match h.buckets("proj_xla") {
+                            Ok(b) => {
+                                let max = b
+                                    .into_iter()
+                                    .max_by_key(|&(m, n)| m * n)
+                                    .unwrap_or((0, 0));
+                                (Some(engine), Some(h), max)
+                            }
+                            Err(e) => {
+                                eprintln!("(pjrt arm unavailable, serving without it: {e})");
+                                (None, None, (0, 0))
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("(pjrt arm unavailable, serving without it: {e})");
+                        (None, None, (0, 0))
+                    }
+                },
                 None => (None, None, (0, 0)),
             };
 
+        let pjrt_usable = handle.is_some() && pjrt_max != (0, 0);
         let avail = Availability {
             opu: true,
-            pjrt: handle.is_some(),
+            pjrt: pjrt_usable,
             pjrt_max,
             ..Availability::default()
         };
+        let pool = Arc::new(DevicePool::build(&cfg.pool, &avail));
         let router = Router::new(cfg.policy, avail);
-        let (svc, _batcher_join) =
-            ProjectionService::start(cfg.batch.clone(), router, handle, metrics.clone());
+        let (svc, _batcher_join) = ProjectionService::start(
+            cfg.batch.clone(),
+            router,
+            pool.clone(),
+            handle,
+            metrics.clone(),
+        );
 
         let (job_tx, job_rx) = mpsc::channel::<QueuedJob>();
         let job_rx = Arc::new(Mutex::new(job_rx));
@@ -106,23 +140,27 @@ impl Coordinator {
             job_tx: Some(job_tx),
             workers,
             svc,
+            pool,
             metrics,
             next_id: AtomicU64::new(1),
             _engine: engine,
         })
     }
 
-    /// Submit a job; returns an awaitable ticket.
+    /// Submit a job; returns an awaitable ticket. Never panics: if the
+    /// queue is gone the ticket resolves to an error.
     pub fn submit(&self, job: Job) -> Ticket {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         let q = QueuedJob { id, job, resp: tx, submitted: Instant::now() };
-        self.job_tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(q)
-            .expect("job queue alive");
+        let undelivered = match self.job_tx.as_ref() {
+            Some(queue) => queue.send(q).err().map(|mpsc::SendError(q)| q),
+            None => Some(q),
+        };
+        if let Some(q) = undelivered {
+            let _ = q.resp.send(Err(anyhow::anyhow!("coordinator queue is closed")));
+        }
         Ticket { id, rx, submitted: Instant::now() }
     }
 
@@ -134,6 +172,27 @@ impl Coordinator {
     /// Direct access to the projection service (benches).
     pub fn projection_service(&self) -> ProjectionService {
         self.svc.clone()
+    }
+
+    /// The execution plane's device pool (metrics, chaos testing).
+    pub fn pool(&self) -> &DevicePool {
+        &self.pool
+    }
+
+    /// Remove one replica from scheduling, as if it died. In-flight work
+    /// on it reroutes on its next failure; queued work avoids it at once.
+    pub fn kill_replica(&self, kind: Device, replica: usize) -> bool {
+        self.pool.mark_dead(DeviceId { kind, replica })
+    }
+
+    /// Make one replica fail its next batch (fault injection).
+    pub fn poison_replica(&self, kind: Device, replica: usize) -> bool {
+        self.pool.poison(DeviceId { kind, replica })
+    }
+
+    /// Combined metrics + per-replica pool report.
+    pub fn report(&self) -> String {
+        format!("{}\n{}", self.metrics.report(), self.pool.report())
     }
 
     /// Drain and stop all workers.
@@ -240,7 +299,7 @@ fn execute_job(svc: &ProjectionService, job: &Job) -> Result<(Payload, Device, u
 }
 
 /// B = (G A G^T)/m with both passes through the service (same (n, m)
-/// signature => same G, see DeviceExecutor::dim_seed).
+/// signature => same G, see batcher::signature_seed).
 fn symmetric_sketch_via(
     svc: &ProjectionService,
     a: &Mat,
@@ -263,16 +322,36 @@ mod tests {
     use crate::rng::Xoshiro256;
     use crate::workload::psd_matrix;
 
+    fn quiet_batch() -> BatchConfig {
+        BatchConfig {
+            noise: NoiseModel::ideal(),
+            max_wait: std::time::Duration::from_micros(50),
+            ..Default::default()
+        }
+    }
+
     fn host_coordinator(workers: usize) -> Coordinator {
         Coordinator::start(CoordinatorConfig {
             workers,
             policy: Policy::ForceHost,
-            batch: BatchConfig {
-                noise: NoiseModel::ideal(),
-                max_wait: std::time::Duration::from_micros(50),
+            batch: quiet_batch(),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn opu_coordinator(replicas: usize, aperture: Option<(usize, usize)>) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            policy: Policy::ForceOpu,
+            batch: BatchConfig { max_cols: 4, ..quiet_batch() },
+            pool: PoolConfig {
+                opu_replicas: replicas,
+                pjrt_replicas: 0,
+                opu_aperture: aperture,
                 ..Default::default()
             },
-            artifacts_dir: None,
+            ..Default::default()
         })
         .unwrap()
     }
@@ -378,6 +457,125 @@ mod tests {
         assert!(c.metrics.latency_percentile_us(50.0).is_some());
         let report = c.metrics.report();
         assert!(report.contains("completed=1"), "{report}");
+        let full = c.report();
+        assert!(full.contains("host-0"), "{full}");
         c.shutdown();
+    }
+
+    #[test]
+    fn oversized_projection_completes_through_shard_planner() {
+        // n and m each 2x a single OPU aperture: the planner must split
+        // the batch into a 2x2 grid over the replica pool and recombine.
+        let c = opu_coordinator(4, Some((16, 32)));
+        let mut rng = Xoshiro256::new(7);
+        let x = Mat::gaussian(64, 3, 1.0, &mut rng);
+        let resp = c.run(Job::Projection { data: x.clone(), m: 32 }).unwrap();
+        assert_eq!(resp.device, Device::Opu);
+        let got = resp.payload.matrix().unwrap().clone();
+        assert_eq!((got.rows, got.cols), (32, 3));
+        assert!(c.metrics.sharded_jobs.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics.shards_dispatched.load(Ordering::Relaxed) >= 4);
+        c.shutdown();
+
+        // Determinism: a fresh pool of a *different size* produces the
+        // bit-identical sharded result (cell media are coordinate-seeded).
+        let c2 = opu_coordinator(2, Some((16, 32)));
+        let again = c2
+            .run(Job::Projection { data: x, m: 32 })
+            .unwrap()
+            .payload
+            .matrix()
+            .unwrap()
+            .clone();
+        assert_eq!(got, again, "sharded OPU result depends on pool size");
+        c2.shutdown();
+    }
+
+    #[test]
+    fn killed_replica_mid_run_jobs_still_complete() {
+        let c = opu_coordinator(2, None);
+        let mut rng = Xoshiro256::new(8);
+        for _ in 0..3 {
+            let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+            c.run(Job::Projection { data: x, m: 8 }).unwrap();
+        }
+        // Kill replica 0 mid-run; replica 1 must absorb the rest.
+        assert!(c.kill_replica(Device::Opu, 0));
+        for _ in 0..3 {
+            let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+            let r = c.run(Job::Projection { data: x, m: 8 }).unwrap();
+            assert_eq!(r.device, Device::Opu);
+        }
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 6);
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 0);
+        // Post-kill work ran on the surviving replica.
+        let survivor = c
+            .pool()
+            .get(crate::coordinator::pool::DeviceId { kind: Device::Opu, replica: 1 })
+            .unwrap();
+        assert!(survivor.jobs() >= 3, "survivor ran {} jobs", survivor.jobs());
+        c.shutdown();
+    }
+
+    #[test]
+    fn poisoned_replica_reroutes_in_flight_work() {
+        let c = opu_coordinator(2, None);
+        let mut rng = Xoshiro256::new(9);
+        // Prime both replicas so scheduling is spread.
+        for _ in 0..2 {
+            let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+            c.run(Job::Projection { data: x, m: 8 }).unwrap();
+        }
+        // Poison replica 0; if the next batch lands there it must fail
+        // once and reroute to the healthy replica.
+        c.poison_replica(Device::Opu, 0);
+        let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+        let r = c.run(Job::Projection { data: x, m: 8 });
+        assert!(r.is_ok(), "job failed instead of rerouting: {r:?}");
+        // Either the poisoned replica was hit (rerouted >= 1 and it is now
+        // dead) or the scheduler sent the batch to the healthy one; both
+        // leave the system serving.
+        let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+        assert!(c.run(Job::Projection { data: x, m: 8 }).is_ok());
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        let mut c = host_coordinator(1);
+        c.job_tx.take(); // simulate a closed queue without joining workers
+        let t = c.submit(Job::Projection { data: Mat::zeros(8, 1), m: 4 });
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn pool_scaling_multiplies_simulated_throughput() {
+        // The acceptance ablation in test form: identical batched
+        // workloads on 1 vs 4 OPU replicas; simulated device-timeline
+        // makespan (max busy_ms over replicas) must drop by >= 1.5x.
+        let makespan = |replicas: usize| -> f64 {
+            let c = opu_coordinator(replicas, None);
+            let mut rng = Xoshiro256::new(10);
+            for _ in 0..8 {
+                let x = Mat::gaussian(64, 4, 1.0, &mut rng);
+                c.run(Job::Projection { data: x, m: 16 }).unwrap();
+            }
+            let span = c
+                .pool()
+                .devices()
+                .iter()
+                .filter(|d| d.id.kind == Device::Opu)
+                .map(|d| d.busy_ms())
+                .fold(0.0, f64::max);
+            c.shutdown();
+            span
+        };
+        let single = makespan(1);
+        let pooled = makespan(4);
+        assert!(single > 0.0 && pooled > 0.0);
+        let speedup = single / pooled;
+        assert!(speedup >= 1.5, "pool scaling speedup {speedup:.2} < 1.5");
     }
 }

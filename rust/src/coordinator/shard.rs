@@ -1,0 +1,199 @@
+//! Aperture shard planner: serve projections larger than any one device.
+//!
+//! Gaussian projection splits exactly along both axes:
+//!
+//! - **input-dim sharding** (n > aperture): `G X = Σᵢ Gᵢ Xᵢ` over row
+//!   blocks `Xᵢ` of the data and the matching column blocks `Gᵢ` of the
+//!   operator — partials are *summed*;
+//! - **output-dim sharding** (m > aperture): `[G₁; G₂] X = [G₁X; G₂X]` —
+//!   partials are *stacked*.
+//!
+//! A [`ShardPlan`] is the cross product of both splits; each
+//! [`ShardCell`] is one (output-block x input-block) sub-projection small
+//! enough for a single device. Because the digital operator blocks come
+//! from the counter-based RNG (`randnla::backend::CounterSketcher`), the
+//! composite operator is identical for every plan — sharding changes the
+//! execution shape, never the estimator.
+//!
+//! Determinism: [`recombine`] folds partials in cell order, so a given
+//! plan always produces bit-identical results. Output-dim-only sharding
+//! is bit-identical even to the *unsharded* projection (each output row
+//! is computed by exactly one cell, in the same accumulation order);
+//! input-dim sums agree with the unsharded result up to f64 summation
+//! association (~1e-16 relative), exactly like any blocked reduction.
+
+use std::ops::Range;
+
+use crate::linalg::Mat;
+
+/// How one (m x n) projection splits across device apertures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Full output (sketch) dimension.
+    pub m: usize,
+    /// Full input dimension.
+    pub n: usize,
+    /// Output-dim (m) blocks, in order, covering 0..m.
+    pub out_splits: Vec<Range<usize>>,
+    /// Input-dim (n) blocks, in order, covering 0..n.
+    pub in_splits: Vec<Range<usize>>,
+}
+
+/// One sub-projection of the plan's (out x in) grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardCell {
+    /// Row-major index in the grid (out-major, then in).
+    pub index: usize,
+    /// Output rows this cell produces.
+    pub out: Range<usize>,
+    /// Input rows of the data (= operator columns) this cell consumes.
+    pub inp: Range<usize>,
+}
+
+/// Split `len` into the fewest even contiguous ranges of size <= `max`.
+fn split_even(len: usize, max: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return vec![0..0]; // degenerate: keep the plan single-cell
+    }
+    let parts = len.div_ceil(max.max(1)).max(1);
+    crate::parallel::split_ranges(len, parts)
+}
+
+impl ShardPlan {
+    /// The trivial single-cell plan.
+    pub fn unsharded(m: usize, n: usize) -> Self {
+        Self { m, n, out_splits: vec![0..m], in_splits: vec![0..n] }
+    }
+
+    /// Plan for a device aperture of (max_m, max_n) per cell.
+    pub fn for_aperture(m: usize, n: usize, max_m: usize, max_n: usize) -> Self {
+        Self {
+            m,
+            n,
+            out_splits: split_even(m, max_m),
+            in_splits: split_even(n, max_n),
+        }
+    }
+
+    pub fn is_unsharded(&self) -> bool {
+        self.out_splits.len() == 1 && self.in_splits.len() == 1
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.out_splits.len() * self.in_splits.len()
+    }
+
+    /// Largest (out, in) dims of any cell — what the scheduler prices.
+    pub fn shard_dims(&self) -> (usize, usize) {
+        let om = self.out_splits.iter().map(|r| r.len()).max().unwrap_or(0);
+        let im = self.in_splits.iter().map(|r| r.len()).max().unwrap_or(0);
+        (om, im)
+    }
+
+    /// The grid, out-major (all input blocks of output block 0 first).
+    pub fn cells(&self) -> Vec<ShardCell> {
+        let mut cells = Vec::with_capacity(self.num_cells());
+        for o in &self.out_splits {
+            for i in &self.in_splits {
+                cells.push(ShardCell {
+                    index: cells.len(),
+                    out: o.clone(),
+                    inp: i.clone(),
+                });
+            }
+        }
+        cells
+    }
+}
+
+/// Recombine per-cell partials (cell `c` being `c.out.len() x k`) into
+/// the full (m x k) result: stack across output blocks, sum across input
+/// blocks. Partials must be in [`ShardPlan::cells`] order; the fold is in
+/// that order, so results are bit-deterministic for a given plan.
+pub fn recombine(plan: &ShardPlan, k: usize, partials: &[Mat]) -> Mat {
+    assert_eq!(partials.len(), plan.num_cells(), "partials != plan cells");
+    let mut out = Mat::zeros(plan.m, k);
+    for (cell, part) in plan.cells().iter().zip(partials) {
+        assert_eq!(
+            (part.rows, part.cols),
+            (cell.out.len(), k),
+            "partial shape mismatch at cell {}",
+            cell.index
+        );
+        for (local, i) in cell.out.clone().enumerate() {
+            let src = part.row(local);
+            for (dst, s) in out.row_mut(i).iter_mut().zip(src) {
+                *dst += s;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn unsharded_is_single_cell() {
+        let p = ShardPlan::unsharded(8, 32);
+        assert!(p.is_unsharded());
+        assert_eq!(p.cells().len(), 1);
+        assert_eq!(p.cells()[0].out, 0..8);
+        assert_eq!(p.cells()[0].inp, 0..32);
+    }
+
+    #[test]
+    fn aperture_grid_covers_everything() {
+        let p = ShardPlan::for_aperture(32, 64, 16, 32);
+        assert_eq!(p.out_splits.len(), 2);
+        assert_eq!(p.in_splits.len(), 2);
+        assert_eq!(p.num_cells(), 4);
+        let covered_out: usize = p.out_splits.iter().map(|r| r.len()).sum();
+        let covered_in: usize = p.in_splits.iter().map(|r| r.len()).sum();
+        assert_eq!(covered_out, 32);
+        assert_eq!(covered_in, 64);
+        assert_eq!(p.shard_dims(), (16, 32));
+    }
+
+    #[test]
+    fn uneven_lengths_respect_aperture() {
+        let p = ShardPlan::for_aperture(33, 100, 16, 32);
+        assert!(p.out_splits.iter().all(|r| r.len() <= 16));
+        assert!(p.in_splits.iter().all(|r| r.len() <= 32));
+        assert_eq!(p.out_splits.len(), 3);
+        assert_eq!(p.in_splits.len(), 4);
+    }
+
+    #[test]
+    fn fits_within_aperture_means_unsharded() {
+        assert!(ShardPlan::for_aperture(8, 32, 16, 32).is_unsharded());
+    }
+
+    #[test]
+    fn recombine_stacks_and_sums() {
+        // Direct algebra check: partials computed with explicit blocks.
+        let mut rng = Xoshiro256::new(1);
+        let (m, n, k) = (10, 12, 3);
+        let g = Mat::gaussian(m, n, 1.0, &mut rng);
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let plan = ShardPlan::for_aperture(m, n, 4, 5);
+        let partials: Vec<Mat> = plan
+            .cells()
+            .iter()
+            .map(|c| {
+                let gb = Mat::from_fn(c.out.len(), c.inp.len(), |i, j| {
+                    g.at(c.out.start + i, c.inp.start + j)
+                });
+                let xb = Mat::from_fn(c.inp.len(), k, |i, j| x.at(c.inp.start + i, j));
+                matmul(&gb, &xb)
+            })
+            .collect();
+        let got = recombine(&plan, k, &partials);
+        let want = matmul(&g, &x);
+        let rel = crate::linalg::rel_frobenius_error(&want, &got);
+        assert!(rel < 1e-12, "recombine drifted: {rel}");
+    }
+}

@@ -4,14 +4,17 @@
 //! Randomized Numerical Linear Algebra"* (LightOn, 2021) as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! - **L3 (this crate)** — coordinator: request router with an OPU/GPU
-//!   offload policy, dynamic batcher, device manager, RandNLA drivers.
+//! - **L3 (this crate)** — coordinator: a sharded multi-device execution
+//!   plane (device pool + load-aware scheduler + aperture shard planner),
+//!   dynamic batcher, RandNLA drivers.
 //! - **L2/L1 (python/compile)** — JAX graphs + Pallas kernels, AOT-lowered
 //!   to HLO text executed here via PJRT (`runtime`). Python never runs on
-//!   the request path.
+//!   the request path. The `xla` runtime crate is optional (cargo feature
+//!   `xla`); without it the PJRT arm reports itself absent and the pool
+//!   serves from the OPU/host arms.
 //!
-//! Substrates (all built in-tree; the offline image vendors only the `xla`
-//! crate): counter-based RNG, dense linear algebra, graphs, workload
+//! Substrates (all built in-tree; only a minimal vendored `anyhow` shim is
+//! pulled in): counter-based RNG, dense linear algebra, graphs, workload
 //! generators, performance models, a micro-bench harness, and a
 //! property-test runner.
 

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
-    BatchConfig, Coordinator, CoordinatorConfig, Job, Policy,
+    BatchConfig, Coordinator, CoordinatorConfig, Job, Policy, PoolConfig,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::opu::NoiseModel;
@@ -27,6 +27,7 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
   fig2   [--no-measure] [--reps 5] [--artifacts DIR]
   claims
   serve  [--jobs 64] [--policy auto|opu|pjrt|host] [--workers 4]
+         [--opu-replicas 1] [--pjrt-replicas 1] [--host-workers 1]
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
 
@@ -147,10 +148,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         seed: args.get_u64("seed", 0)?,
         ..Default::default()
     };
+    let pool = PoolConfig {
+        opu_replicas: args.get_usize("opu-replicas", 1)?,
+        pjrt_replicas: args.get_usize("pjrt-replicas", 1)?,
+        host_workers: args.get_usize("host-workers", 1)?,
+        ..Default::default()
+    };
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
         batch: BatchConfig::default(),
+        pool,
         artifacts_dir: artifacts,
     })
     .map_err(|e| e.to_string())?;
@@ -171,7 +179,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         trace.len(),
         ok as f64 / wall
     );
-    println!("{}", coord.metrics.report());
+    println!("{}", coord.report());
     coord.shutdown();
     Ok(())
 }

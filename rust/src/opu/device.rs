@@ -33,6 +33,9 @@ pub struct OpuConfig {
     pub timing: OpuTimingModel,
     /// Calibration shots averaged at power-on.
     pub cal_shots: usize,
+    /// Pool replica index this device serves as (metrics / diagnostics;
+    /// does not influence the medium — see [`OpuDevice::replicate`]).
+    pub replica: usize,
 }
 
 impl OpuConfig {
@@ -46,6 +49,7 @@ impl OpuConfig {
             noise: NoiseModel::realistic(),
             timing: OpuTimingModel::default(),
             cal_shots: 32,
+            replica: 0,
         }
     }
 
@@ -60,6 +64,11 @@ impl OpuConfig {
 
     pub fn with_bits(mut self, bits: usize) -> Self {
         self.input_bits = bits;
+        self
+    }
+
+    pub fn with_replica(mut self, replica: usize) -> Self {
+        self.replica = replica;
         self
     }
 }
@@ -105,6 +114,33 @@ impl OpuDevice {
             cal,
             state: Mutex::new(DeviceState { rng, exposures, elapsed_ms: elapsed }),
         }
+    }
+
+    /// Pool replica index this device serves as.
+    pub fn replica(&self) -> usize {
+        self.cfg.replica
+    }
+
+    /// Cheap clone-with-new-seed: a pool replica of this device. Reuses
+    /// the full configuration (dims, noise chain, timing, bit depth); the
+    /// medium seed is Philox-derived from (base seed, replica), so every
+    /// replica index maps to one reproducible medium. "Cheap" because the
+    /// transmission matrix is counter-streamed, never materialised —
+    /// power-on cost is the `cal_shots` calibration exposures only.
+    ///
+    /// Note the two replica-seeding schemes in this codebase and when
+    /// each applies: `replicate` gives every physical replica an
+    /// *independent* medium (fresh sketches — what real pooled hardware
+    /// provides). The coordinator's shard executor deliberately does
+    /// NOT use it: it pins one medium per shard-cell coordinate
+    /// (`cell_seed` in `coordinator::batcher`) so the composite operator
+    /// of a signature is identical across replicas and pool sizes
+    /// (estimator coherence).
+    pub fn replicate(&self, replica: usize) -> OpuDevice {
+        let b = crate::rng::Philox4x32::new(self.cfg.seed)
+            .block_at(replica as u64, 0x5EED_F00D);
+        let seed = ((b[0] as u64) << 32) | b[1] as u64;
+        OpuDevice::new(OpuConfig { seed, replica, ..self.cfg.clone() })
     }
 
     fn anchor_only_frame(n: usize, anchor_len: usize) -> Mat {
@@ -306,6 +342,19 @@ impl OpuDevice {
         // 2 sign banks x input_bits planes x 2 exposures (x+a and x).
         2 * self.cfg.input_bits * 2 * k
     }
+
+    /// Simulated device milliseconds one `project()` of k columns costs —
+    /// the per-call counterpart of the accounting `expose` adds to
+    /// [`stats`](Self::stats). Pure function of the config, so callers
+    /// sharing a device across threads can attribute cost per call
+    /// without racing on the stats counters.
+    pub fn project_cost_ms(&self, k: usize) -> f64 {
+        self.cfg.timing.projection_ms_frames(
+            self.cfg.n + self.cfg.anchor_len,
+            self.cfg.m,
+            self.frames_per_project(k),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -417,6 +466,18 @@ mod tests {
     }
 
     #[test]
+    fn project_cost_matches_stats_delta() {
+        let dev = ideal_device(8, 16);
+        let mut rng = Xoshiro256::new(21);
+        let x = Mat::gaussian(16, 3, 1.0, &mut rng);
+        let (_, t0) = dev.stats();
+        let _ = dev.project(&x);
+        let (_, t1) = dev.stats();
+        let cost = dev.project_cost_ms(3);
+        assert!((cost - (t1 - t0)).abs() < 1e-9, "{cost} vs {}", t1 - t0);
+    }
+
+    #[test]
     fn accounting_tracks_exposures() {
         let dev = ideal_device(8, 16);
         let (e0, t0) = dev.stats();
@@ -425,6 +486,20 @@ mod tests {
         let (e1, t1) = dev.stats();
         assert_eq!(e1 - e0, 4); // 2 frames x 2 columns
         assert!(t1 > t0);
+    }
+
+    #[test]
+    fn replicate_gives_fresh_reproducible_medium() {
+        let dev = ideal_device(12, 24);
+        let r1 = dev.replicate(1);
+        let r1_again = dev.replicate(1);
+        let r2 = dev.replicate(2);
+        assert_eq!(r1.replica(), 1);
+        assert_eq!((r1.cfg.m, r1.cfg.n), (12, 24));
+        // Same replica index => identical medium; different => fresh one.
+        assert_eq!(r1.effective_matrix(), r1_again.effective_matrix());
+        assert_ne!(r1.effective_matrix(), r2.effective_matrix());
+        assert_ne!(r1.effective_matrix(), dev.effective_matrix());
     }
 
     #[test]

@@ -70,6 +70,28 @@ pub fn gpu_oom_dim(gpu: &GpuModel) -> usize {
     hi
 }
 
+/// Fixed per-dispatch overhead the scheduler charges for every batch
+/// already in flight on a device (driver hop + response scatter).
+pub const DISPATCH_OVERHEAD_MS: f64 = 0.02;
+
+/// Queue-delay term of the load-aware scheduler: predicted work already
+/// queued on a device plus the dispatch overhead of each in-flight batch.
+/// The router adds this to the perfmodel service-time prediction, so the
+/// argmin naturally spreads load across replicas of equal speed.
+pub fn queue_delay_ms(pending_ms: f64, inflight: usize) -> f64 {
+    pending_ms.max(0.0) + DISPATCH_OVERHEAD_MS * inflight as f64
+}
+
+/// Host-CPU GEMM roofline for the digital fallback arm (rough: blocked
+/// f64 GEMM on a few cores). Only relative magnitudes matter — it keeps
+/// the scheduler from preferring the host while an accelerator is alive,
+/// yet prices host shards sensibly once it is the only arm left.
+pub fn host_projection_ms(n: usize, m: usize, k: usize) -> f64 {
+    const HOST_GFLOPS: f64 = 25.0;
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    0.01 + flops / (HOST_GFLOPS * 1e9) * 1e3
+}
+
 /// Energy-efficiency comparison backing the §I claim (~2 orders of
 /// magnitude): effective random-projection OPS per joule.
 pub fn energy_ratio(opu: &OpuTimingModel, gpu: &GpuModel, n: usize) -> Option<f64> {
@@ -113,6 +135,22 @@ mod tests {
         let g0 = pts[0].gpu_ms.unwrap();
         let g2 = pts[2].gpu_ms.unwrap();
         assert!(g2 / g0 > 30.0, "gpu ratio {}", g2 / g0);
+    }
+
+    #[test]
+    fn queue_delay_monotone_and_clamped() {
+        assert_eq!(queue_delay_ms(0.0, 0), 0.0);
+        assert_eq!(queue_delay_ms(-5.0, 0), 0.0);
+        assert!(queue_delay_ms(1.0, 2) > queue_delay_ms(1.0, 1));
+        assert!(queue_delay_ms(2.0, 1) > queue_delay_ms(1.0, 1));
+    }
+
+    #[test]
+    fn host_model_scales_with_work() {
+        let small = host_projection_ms(256, 128, 1);
+        let big = host_projection_ms(2048, 1024, 8);
+        assert!(small > 0.0);
+        assert!(big > small);
     }
 
     #[test]

@@ -4,14 +4,28 @@
 //! its Gaussian sketch from different devices. [`Sketcher`] is that seam:
 //!
 //! - [`DigitalSketcher`] — host CPU, explicit G (the "numerical" arm);
+//! - [`CounterSketcher`] — host CPU, counter-based G: any block of the
+//!   operator is addressable by (row, col) alone, which is what makes
+//!   aperture sharding across a device pool exact (shards of one logical
+//!   G agree bit-for-bit, whatever the pool size);
 //! - [`PjrtSketcher`]    — AOT-compiled XLA projection (the GPU-baseline
 //!   arm, running the L1 Pallas kernel or the plain dot);
 //! - `OpuSketcher` (in [`crate::randnla::sketch`]) — the simulated
 //!   photonic co-processor (the "optical" arm).
+//!
+//! Fallibility: [`Sketcher::try_project`] is the serving-path entry point
+//! — a dead device returns `Err` and the coordinator reroutes. The
+//! infallible [`Sketcher::project`] stays for the algorithm layer; the
+//! PJRT arm satisfies it by degrading to an exact host multiply with its
+//! own operator instead of panicking.
+
+use std::ops::Range;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::linalg::{matmul, Mat};
+use crate::rng::philox::{block_to_normals, Philox4x32};
 use crate::rng::Xoshiro256;
 use crate::runtime::PjrtHandle;
 
@@ -22,7 +36,14 @@ pub trait Sketcher: Send + Sync {
     /// Input dimension n.
     fn n(&self) -> usize;
     /// Apply: (n x k) -> (m x k), approximately G @ a with G iid N(0, 1).
+    /// Must not fail: backends with fallible transports degrade to an
+    /// equivalent host computation.
     fn project(&self, a: &Mat) -> Mat;
+    /// Fallible apply for the serving path: backends that can lose their
+    /// device return `Err` here so the pool scheduler can reroute.
+    fn try_project(&self, a: &Mat) -> Result<Mat> {
+        Ok(self.project(a))
+    }
     /// Human-readable arm label for reports.
     fn label(&self) -> &'static str;
 }
@@ -62,11 +83,89 @@ impl Sketcher for DigitalSketcher {
     }
 }
 
-/// XLA/PJRT-executed digital sketch: G is generated host-side once, the
-/// projection runs through the AOT artifact ladder (pad/crop adapted) on
-/// the PJRT engine thread.
+/// Counter-based digital Gaussian operator: entry `G[i, j]` of the full
+/// (m x n) operator is a pure function of `(seed, i, j)` via Philox
+/// (Box-Muller over one 4-lane block per 4 columns). Because any
+/// rectangular [`block`](Self::block) is addressable independently, the
+/// shard planner can hand disjoint blocks of *one* logical operator to
+/// different pool devices and the recombined sketch is exactly the
+/// unsharded one — same property the OPU's transmission matrix gets from
+/// the same RNG.
+pub struct CounterSketcher {
+    key: Philox4x32,
+    m: usize,
+    n: usize,
+}
+
+impl CounterSketcher {
+    pub fn new(m: usize, n: usize, seed: u64) -> Self {
+        Self { key: Philox4x32::new(seed), m, n }
+    }
+
+    /// Random access to operator entry (i, j).
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.m && j < self.n);
+        let z = block_to_normals(self.key.block_at(i as u64, (j / 4) as u64));
+        z[j % 4]
+    }
+
+    /// Materialise the (rows x cols) block of the operator. Blocks of one
+    /// seed tile together bit-exactly: `block(r, c)` equals the matching
+    /// slice of `block(0..m, 0..n)`.
+    pub fn block(&self, rows: Range<usize>, cols: Range<usize>) -> Mat {
+        debug_assert!(rows.end <= self.m && cols.end <= self.n);
+        let mut out = Mat::zeros(rows.len(), cols.len());
+        for (bi, i) in rows.enumerate() {
+            let row = out.row_mut(bi);
+            let mut j = cols.start;
+            while j < cols.end {
+                let z = block_to_normals(self.key.block_at(i as u64, (j / 4) as u64));
+                let lane0 = j % 4;
+                let take = (4 - lane0).min(cols.end - j);
+                for t in 0..take {
+                    row[j - cols.start + t] = z[lane0 + t];
+                }
+                j += take;
+            }
+        }
+        out
+    }
+
+    /// The full explicit operator (tests / small problems).
+    pub fn matrix(&self) -> Mat {
+        self.block(0..self.m, 0..self.n)
+    }
+}
+
+impl Sketcher for CounterSketcher {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Materialises the operator per call — fine for tests and one-shot
+    /// use; the coordinator's executor caches blocks instead.
+    fn project(&self, a: &Mat) -> Mat {
+        matmul(&self.matrix(), a)
+    }
+
+    fn label(&self) -> &'static str {
+        "counter"
+    }
+}
+
+/// XLA/PJRT-executed digital sketch: G is generated host-side once and
+/// shared behind an `Arc` (the engine thread borrows it per call — the
+/// hot path no longer deep-copies the operator), the projection runs
+/// through the AOT artifact ladder (pad/crop adapted) on the PJRT engine
+/// thread.
+#[derive(Clone)]
 pub struct PjrtSketcher {
-    g: Mat,
+    g: Arc<Mat>,
     handle: PjrtHandle,
     /// Artifact prefix: "proj_xla" (plain dot) or "proj_pallas" (L1 kernel).
     prefix: &'static str,
@@ -81,15 +180,21 @@ impl PjrtSketcher {
         use_pallas: bool,
     ) -> Result<Self> {
         let mut rng = Xoshiro256::new(seed);
-        let g = Mat::gaussian(m, n, 1.0, &mut rng);
+        let g = Arc::new(Mat::gaussian(m, n, 1.0, &mut rng));
+        Self::from_operator(g, handle, use_pallas)
+    }
+
+    /// Wrap an existing operator (e.g. a counter-generated shard block)
+    /// without copying it.
+    pub fn from_operator(g: Arc<Mat>, handle: PjrtHandle, use_pallas: bool) -> Result<Self> {
         let prefix = if use_pallas { "proj_pallas" } else { "proj_xla" };
         // Fail fast if no bucket can serve this shape.
         let ok = handle
             .buckets(prefix)?
             .iter()
-            .any(|&(bm, bn)| bm >= m && bn >= n);
+            .any(|&(bm, bn)| bm >= g.rows && bn >= g.cols);
         if !ok {
-            anyhow::bail!("no {prefix} bucket >= {m}x{n}");
+            anyhow::bail!("no {prefix} bucket >= {}x{}", g.rows, g.cols);
         }
         Ok(Self { g, handle, prefix })
     }
@@ -108,10 +213,15 @@ impl Sketcher for PjrtSketcher {
         self.g.cols
     }
 
+    /// Infallible path: if the engine is gone, fall back to the exact
+    /// host multiply with the same operator (no panic, same estimator,
+    /// f64 instead of the artifact's f32).
     fn project(&self, a: &Mat) -> Mat {
-        self.handle
-            .project(self.prefix, self.g.clone(), a.clone())
-            .expect("PJRT projection failed")
+        self.try_project(a).unwrap_or_else(|_| matmul(&self.g, a))
+    }
+
+    fn try_project(&self, a: &Mat) -> Result<Mat> {
+        self.handle.project(self.prefix, self.g.clone(), a.clone())
     }
 
     fn label(&self) -> &'static str {
@@ -146,6 +256,42 @@ mod tests {
         assert_eq!(a.matrix(), b.matrix());
         let c = DigitalSketcher::new(4, 8, 8);
         assert_ne!(a.matrix(), c.matrix());
+    }
+
+    #[test]
+    fn counter_blocks_tile_bit_exactly() {
+        let s = CounterSketcher::new(16, 37, 99);
+        let full = s.matrix();
+        // Arbitrary interior block, including lanes not aligned to 4.
+        let b = s.block(3..11, 5..23);
+        for i in 0..8 {
+            for j in 0..18 {
+                assert_eq!(b.at(i, j), full.at(3 + i, 5 + j), "({i},{j})");
+            }
+        }
+        // Entry accessor agrees with block materialisation.
+        assert_eq!(s.entry(7, 19), full.at(7, 19));
+    }
+
+    #[test]
+    fn counter_operator_is_standard_gaussian() {
+        let s = CounterSketcher::new(64, 256, 5);
+        let g = s.matrix();
+        let len = g.data.len() as f64;
+        let mean: f64 = g.data.iter().sum::<f64>() / len;
+        let var: f64 = g.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / len;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn counter_project_matches_explicit() {
+        let s = CounterSketcher::new(8, 24, 3);
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(24, 5, 1.0, &mut rng);
+        assert_eq!(s.project(&a), matmul(&s.matrix(), &a));
+        assert!(s.try_project(&a).is_ok());
+        assert_eq!(s.label(), "counter");
     }
 
     #[test]

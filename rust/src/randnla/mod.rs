@@ -14,7 +14,7 @@ pub mod sketch;
 pub mod trace;
 pub mod triangles;
 
-pub use backend::{DigitalSketcher, PjrtSketcher, Sketcher};
+pub use backend::{CounterSketcher, DigitalSketcher, PjrtSketcher, Sketcher};
 pub use features::{gram_from_features, RffMap};
 pub use lstsq::{exact_lstsq, sketched_lstsq};
 pub use matmul::{approx_matmul_tn, exact_matmul_tn};

@@ -1,0 +1,113 @@
+//! Stub PJRT client, compiled when the `xla` feature is off.
+//!
+//! The offline image does not ship the `xla` crate, so the default build
+//! replaces [`client`](super::client) with this API-identical stub: every
+//! entry point that would touch PJRT reports the arm as unavailable. The
+//! coordinator treats that exactly like a dead device — the PJRT pool is
+//! empty and traffic degrades to the OPU/host arms (see
+//! `coordinator::server`). Enable the `xla` cargo feature (plus a local
+//! `xla` dependency) to restore real execution.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built without the `xla` cargo feature (see rust/Cargo.toml)";
+
+/// Stand-in for the shared PJRT CPU client; construction always fails.
+pub struct PjrtClient {
+    _private: (),
+}
+
+impl PjrtClient {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Unreachable in practice (no client can be constructed); kept for
+    /// API parity with the real module.
+    pub fn compile_file(&self, _path: &Path) -> Result<Executable> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// One compiled computation (never constructed by the stub).
+pub struct Executable {
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, _operands: &[Operand]) -> Result<Output> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// An f32 input operand with shape.
+pub struct Operand {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Operand {
+    pub fn from_mat(m: &Mat) -> Self {
+        Self { dims: vec![m.rows as i64, m.cols as i64], data: m.to_f32() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+}
+
+/// A single f32 result tensor.
+#[derive(Debug)]
+pub struct Output {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Output {
+    pub fn into_mat(self) -> Result<Mat> {
+        match self.dims.len() {
+            2 => Ok(Mat::from_f32(self.dims[0], self.dims[1], &self.data)),
+            0 | 1 => {
+                let r = self.data.len();
+                Ok(Mat::from_f32(r, 1, &self.data))
+            }
+            d => bail!("cannot view rank-{d} output as Mat"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        if self.data.len() != 1 {
+            bail!("expected scalar output, got {} elements", self.data.len());
+        }
+        Ok(self.data[0] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjrtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn output_adapters_still_work() {
+        let o = Output { dims: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let m = o.into_mat().unwrap();
+        assert_eq!(m.at(1, 0), 3.0);
+        let s = Output { dims: vec![], data: vec![5.0] };
+        assert_eq!(s.scalar().unwrap(), 5.0);
+    }
+}

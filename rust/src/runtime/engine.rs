@@ -7,6 +7,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -21,7 +22,9 @@ enum Request {
     /// Run a scalar-producing artifact.
     RunScalar { name: String, mats: Vec<Mat>, resp: mpsc::Sender<Result<f64>> },
     /// Padded projection (see ArtifactRegistry::run_projection_padded).
-    Project { prefix: &'static str, r: Mat, a: Mat, resp: mpsc::Sender<Result<Mat>> },
+    /// The operator rides behind an `Arc` so long-lived sketchers never
+    /// deep-copy it per call.
+    Project { prefix: &'static str, r: Arc<Mat>, a: Mat, resp: mpsc::Sender<Result<Mat>> },
     /// Bucket query.
     Buckets { prefix: &'static str, resp: mpsc::Sender<Vec<(usize, usize)>> },
     /// Unit listing.
@@ -75,7 +78,7 @@ impl PjrtEngine {
                         }
                         Request::Project { prefix, r, a, resp } => {
                             let out = registry
-                                .run_projection_padded(prefix, &r, &a)
+                                .run_projection_padded(prefix, r.as_ref(), &a)
                                 .map(|(m, _)| m);
                             let _ = resp.send(out);
                         }
@@ -133,8 +136,12 @@ impl PjrtHandle {
         self.roundtrip(|resp| Request::RunScalar { name: name.to_string(), mats, resp })?
     }
 
-    /// Padded/cropped projection through the bucket ladder.
-    pub fn project(&self, prefix: &'static str, r: Mat, a: Mat) -> Result<Mat> {
+    /// Padded/cropped projection through the bucket ladder. The operator
+    /// is accepted as anything convertible to `Arc<Mat>`: persistent
+    /// sketchers pass their shared `Arc` (zero-copy), one-shot callers
+    /// can still pass an owned `Mat`.
+    pub fn project(&self, prefix: &'static str, r: impl Into<Arc<Mat>>, a: Mat) -> Result<Mat> {
+        let r = r.into();
         self.roundtrip(|resp| Request::Project { prefix, r, a, resp })?
     }
 

@@ -6,8 +6,17 @@
 //!   compilation, pad/crop adaptation.
 //!
 //! Python never runs here — `make artifacts` is the only python step.
+//!
+//! The `xla` crate is not vendored in the offline image, so the real
+//! [`client`] is gated behind the `xla` cargo feature; the default build
+//! substitutes an API-identical stub whose client construction fails,
+//! which the coordinator treats as "PJRT arm absent" and routes around.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod engine;
 

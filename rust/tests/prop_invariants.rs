@@ -77,7 +77,7 @@ fn prop_batched_projection_equals_individual() {
             noise: NoiseModel::ideal(),
             ..Default::default()
         },
-        artifacts_dir: None,
+        ..Default::default()
     })
     .unwrap();
     let coord = Arc::new(coord);

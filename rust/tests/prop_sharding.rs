@@ -1,0 +1,194 @@
+//! Property tests for the aperture shard planner + counter-based operator
+//! (testkit, our proptest-lite): shard-and-recombine must reproduce the
+//! digital projection for 1–4 shards along either axis.
+//!
+//! Exactness contract (see rust/src/coordinator/shard.rs):
+//! - output-dim sharding is **bit-identical** to the unsharded projection
+//!   (each output row is produced by exactly one cell over the full input
+//!   range, in the same accumulation order);
+//! - input-dim sharding is bit-identical to the shard-sum reference
+//!   `Σᵢ Gᵢ Xᵢ` folded in plan order, and equal to the unsharded
+//!   projection up to f64 summation association (<= 1e-12 relative);
+//! - the composite operator never changes: blocks of one counter seed
+//!   tile into exactly the full G.
+
+use photonic_randnla::coordinator::shard::{recombine, ShardPlan};
+use photonic_randnla::linalg::{matmul, rel_frobenius_error, Mat};
+use photonic_randnla::parallel::split_ranges;
+use photonic_randnla::randnla::backend::CounterSketcher;
+use photonic_randnla::testkit::check;
+
+/// A plan with exact shard counts along each axis (vs. for_aperture,
+/// which derives counts from an aperture).
+fn plan_with_counts(m: usize, n: usize, out_shards: usize, in_shards: usize) -> ShardPlan {
+    ShardPlan {
+        m,
+        n,
+        out_splits: split_ranges(m, out_shards),
+        in_splits: split_ranges(n, in_shards),
+    }
+}
+
+/// Execute a plan the way the coordinator's host arm does: one
+/// counter-operator block + matmul per cell, recombined in plan order.
+fn execute_plan(cs: &CounterSketcher, plan: &ShardPlan, x: &Mat) -> Mat {
+    let partials: Vec<Mat> = plan
+        .cells()
+        .iter()
+        .map(|c| {
+            let g = cs.block(c.out.clone(), c.inp.clone());
+            let xb = Mat::from_fn(c.inp.len(), x.cols, |i, j| x.at(c.inp.start + i, j));
+            matmul(&g, &xb)
+        })
+        .collect();
+    recombine(plan, x.cols, &partials)
+}
+
+#[test]
+fn prop_output_dim_sharding_bit_identical() {
+    check("1-4 output shards == unsharded digital projection, bitwise", 40, |g| {
+        let m = g.usize(4, 40);
+        let n = g.usize(4, 60);
+        let k = g.usize(1, 6);
+        let shards = g.usize(1, 4.min(m));
+        let seed = g.u64(0..=u64::MAX);
+        let cs = CounterSketcher::new(m, n, seed);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let got = execute_plan(&cs, &plan_with_counts(m, n, shards, 1), &x);
+        let want = matmul(&cs.matrix(), &x);
+        if got != want {
+            return Err(format!(
+                "output-dim sharding not bit-identical at m={m} n={n} k={k} shards={shards}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_input_dim_sharding_exact_recombination() {
+    check("1-4 input shards: Σᵢ GᵢXᵢ reference, ~unsharded", 40, |g| {
+        let m = g.usize(4, 32);
+        let n = g.usize(4, 64);
+        let k = g.usize(1, 6);
+        let shards = g.usize(1, 4.min(n));
+        let seed = g.u64(0..=u64::MAX);
+        let cs = CounterSketcher::new(m, n, seed);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let plan = plan_with_counts(m, n, 1, shards);
+        let got = execute_plan(&cs, &plan, &x);
+
+        // Bit-identical to the shard-sum reference folded in plan order.
+        let mut reference = Mat::zeros(m, k);
+        for cell in plan.cells() {
+            let gb = cs.block(cell.out.clone(), cell.inp.clone());
+            let xb = Mat::from_fn(cell.inp.len(), k, |i, j| x.at(cell.inp.start + i, j));
+            let part = matmul(&gb, &xb);
+            for i in 0..m {
+                for (dst, s) in reference.row_mut(i).iter_mut().zip(part.row(i)) {
+                    *dst += s;
+                }
+            }
+        }
+        if got != reference {
+            return Err(format!(
+                "input-dim sharding != shard-sum reference at m={m} n={n} shards={shards}"
+            ));
+        }
+
+        // And matches the unsharded projection up to fp association.
+        let unsharded = matmul(&cs.matrix(), &x);
+        let rel = rel_frobenius_error(&unsharded, &got);
+        if rel > 1e-12 {
+            return Err(format!("input-dim sharding drifted {rel} at m={m} n={n}"));
+        }
+        // With a single shard the fold is the same computation: bitwise.
+        if shards == 1 && got != unsharded {
+            return Err("single input shard must be bit-identical".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_sharding_matches_unsharded() {
+    check("out x in shard grids reproduce the unsharded projection", 30, |g| {
+        let m = g.usize(6, 30);
+        let n = g.usize(6, 48);
+        let k = g.usize(1, 5);
+        let so = g.usize(1, 3.min(m));
+        let si = g.usize(1, 3.min(n));
+        let seed = g.u64(0..=u64::MAX);
+        let cs = CounterSketcher::new(m, n, seed);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let got = execute_plan(&cs, &plan_with_counts(m, n, so, si), &x);
+        let want = matmul(&cs.matrix(), &x);
+        let rel = rel_frobenius_error(&want, &got);
+        if rel > 1e-12 {
+            return Err(format!("grid {so}x{si} drifted {rel} at m={m} n={n} k={k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plans_are_independent_of_evaluation_order_inputs() {
+    // Determinism for a fixed plan: executing the same plan twice (fresh
+    // blocks each time) is bit-identical — there is no hidden state.
+    check("same plan executed twice is bit-identical", 20, |g| {
+        let m = g.usize(4, 24);
+        let n = g.usize(4, 40);
+        let so = g.usize(1, 3.min(m));
+        let si = g.usize(1, 3.min(n));
+        let seed = g.u64(0..=u64::MAX);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, g.usize(1, 4), 1.0, &mut rng);
+        let plan = plan_with_counts(m, n, so, si);
+        let a = execute_plan(&CounterSketcher::new(m, n, seed), &plan, &x);
+        let b = execute_plan(&CounterSketcher::new(m, n, seed), &plan, &x);
+        if a != b {
+            return Err(format!("plan execution nondeterministic at m={m} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aperture_plans_cover_and_respect_limits() {
+    check("for_aperture covers both axes with cells within limits", 60, |g| {
+        let m = g.usize(1, 200);
+        let n = g.usize(1, 200);
+        let max_m = g.usize(1, 64);
+        let max_n = g.usize(1, 64);
+        let plan = ShardPlan::for_aperture(m, n, max_m, max_n);
+        let out_total: usize = plan.out_splits.iter().map(|r| r.len()).sum();
+        let in_total: usize = plan.in_splits.iter().map(|r| r.len()).sum();
+        if out_total != m || in_total != n {
+            return Err(format!("coverage broken: {out_total}/{m}, {in_total}/{n}"));
+        }
+        for c in plan.cells() {
+            if c.out.len() > max_m || c.inp.len() > max_n {
+                return Err(format!(
+                    "cell {}x{} exceeds aperture {max_m}x{max_n}",
+                    c.out.len(),
+                    c.inp.len()
+                ));
+            }
+        }
+        // Contiguity: consecutive splits tile without gaps.
+        for w in plan.out_splits.windows(2) {
+            if w[0].end != w[1].start {
+                return Err("output splits not contiguous".to_string());
+            }
+        }
+        for w in plan.in_splits.windows(2) {
+            if w[0].end != w[1].start {
+                return Err("input splits not contiguous".to_string());
+            }
+        }
+        Ok(())
+    });
+}
