@@ -2,18 +2,61 @@
 //! guard for every layer's critical loop.
 //!
 //! ```bash
-//! cargo bench --bench hotpath
+//! cargo bench --bench hotpath            # full budgets, 2x GEMM gate
+//! cargo bench --bench hotpath -- --quick # CI smoke: small budgets,
+//!                                        # relaxed gate, same checks
 //! ```
+//!
+//! Emits BENCH_hotpath.json (name, iters, ns/op) for cross-PR tracking
+//! and exits non-zero when the packed GEMM regresses against the
+//! in-file seed (axpy) kernel — kernel regressions fail CI instead of
+//! landing silently.
 
-use photonic_randnla::bench::{report, run, Config};
+use photonic_randnla::bench::{quick_mode, report, run, write_json, Config};
 use photonic_randnla::linalg::{self, Mat};
 use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice, TransmissionMatrix};
+use photonic_randnla::parallel;
 use photonic_randnla::rng::{philox, Philox4x32, Xoshiro256};
 
+/// The seed GEMM this repo shipped before the packed microkernel: an
+/// L1-blocked ikj axpy loop over row bands. Kept here as the fixed
+/// baseline the packed kernel is gated against.
+fn seed_axpy_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    const KC: usize = 256;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let t = parallel::num_threads();
+    let band = (m / (4 * t).max(1)).clamp(4, 64).max(1);
+    let mut c = Mat::zeros(m, n);
+    parallel::par_chunks_mut(&mut c.data, band * n, |start, band_c| {
+        let i0 = start / n;
+        let rows_in_band = band_c.len() / n;
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for ii in 0..rows_in_band {
+                let arow = a.row(i0 + ii);
+                let crow = &mut band_c[ii * n..(ii + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
 fn main() {
+    let quick = quick_mode();
+    let cfg = if quick { Config::quick() } else { Config::default() };
+    let heavy = Config::quick();
     let mut rows = Vec::new();
-    let cfg = Config::default();
-    let quick = Config::quick();
     let mut rng = Xoshiro256::new(1);
 
     // RNG substrate.
@@ -37,33 +80,58 @@ fn main() {
     // TM streaming field (the OPU inner loop).
     let tm = TransmissionMatrix::new(5, 256, 512);
     let x = Mat::gaussian(512, 16, 1.0, &mut rng);
-    rows.push(run("tm.field 256x512 k=16", quick, || {
+    rows.push(run("tm.field 256x512 k=16", heavy, || {
         std::hint::black_box(tm.field(&x));
     }));
 
     // Full OPU projection pipeline (encode + 32 exposures + recombine).
     let dev = OpuDevice::new(OpuConfig::new(7, 128, 256).with_noise(NoiseModel::realistic()));
     let xd = Mat::gaussian(256, 8, 1.0, &mut rng);
-    rows.push(run("opu.project 128x256 k=8", quick, || {
+    rows.push(run("opu.project 128x256 k=8", heavy, || {
         std::hint::black_box(dev.project(&xd));
     }));
 
-    // Exact-GEMM substrate.
+    // Exact-GEMM substrate: packed microkernel vs the seed axpy kernel.
+    let mut packed_512 = None;
+    let mut seed_512 = None;
     for n in [128usize, 256, 512] {
         let a = Mat::gaussian(n, n, 1.0, &mut rng);
         let b = Mat::gaussian(n, n, 1.0, &mut rng);
-        rows.push(run(&format!("matmul {n}^3"), quick, || {
+        let packed = run(&format!("matmul {n}^3 (packed)"), heavy, || {
             std::hint::black_box(linalg::matmul(&a, &b));
-        }));
+        });
+        let seed = run(&format!("matmul {n}^3 (seed axpy)"), heavy, || {
+            std::hint::black_box(seed_axpy_matmul(&a, &b));
+        });
+        if n == 512 {
+            packed_512 = Some(packed.mean_ns);
+            seed_512 = Some(seed.mean_ns);
+        }
+        rows.push(packed);
+        rows.push(seed);
     }
+
+    // A @ B^T (banded task grain; used by workload generators + sketch.rs).
+    let ant = Mat::gaussian(512, 384, 1.0, &mut rng);
+    let bnt = Mat::gaussian(512, 384, 1.0, &mut rng);
+    rows.push(run("matmul_nt 512x384 @ (512x384)^T", heavy, || {
+        std::hint::black_box(linalg::matmul_nt(&ant, &bnt));
+    }));
+
+    // Parallel trace contractions (Hutchinson / triangle hot loops).
+    let ta = Mat::gaussian(512, 512, 1.0, &mut rng);
+    let tb = Mat::gaussian(512, 512, 1.0, &mut rng);
+    rows.push(run("trace_of_product 512", heavy, || {
+        std::hint::black_box(linalg::trace_of_product(&ta, &tb));
+    }));
 
     // Factorizations on compressed-domain sizes.
     let tall = Mat::gaussian(512, 64, 1.0, &mut rng);
-    rows.push(run("thin_qr 512x64", quick, || {
+    rows.push(run("thin_qr 512x64", heavy, || {
         std::hint::black_box(linalg::thin_qr(&tall));
     }));
     let small = Mat::gaussian(96, 96, 1.0, &mut rng);
-    rows.push(run("jacobi_svd 96x96", quick, || {
+    rows.push(run("jacobi_svd 96x96", heavy, || {
         std::hint::black_box(linalg::svd(&small));
     }));
 
@@ -78,5 +146,20 @@ fn main() {
     println!("name,iters,mean_ns,p50_ns,p99_ns,min_ns,max_ns");
     for r in &rows {
         println!("{}", r.csv_row());
+    }
+    if let Err(e) = write_json("BENCH_hotpath.json", &rows) {
+        eprintln!("(could not write BENCH_hotpath.json: {e})");
+    }
+
+    // Regression gate: packed >= 2x over the seed kernel at 512^3
+    // (>= 1.3x in --quick smoke runs, where budgets are tiny and CI
+    // runners are noisy).
+    let (seed_ns, packed_ns) = (seed_512.unwrap(), packed_512.unwrap());
+    let speedup = seed_ns / packed_ns;
+    let floor = if quick { 1.3 } else { 2.0 };
+    println!("\npacked GEMM speedup at 512^3: {speedup:.2}x (gate >= {floor}x)");
+    if speedup < floor {
+        eprintln!("FAIL: packed GEMM speedup {speedup:.2}x below the {floor}x gate");
+        std::process::exit(1);
     }
 }

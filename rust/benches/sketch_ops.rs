@@ -1,0 +1,112 @@
+//! Bench: structured sketch operators vs the dense Gaussian host sketch.
+//!
+//! ```bash
+//! cargo bench --bench sketch_ops            # full budgets, 5x gate
+//! cargo bench --bench sketch_ops -- --quick # CI smoke, 3x gate
+//! ```
+//!
+//! The tentpole's acceptance shape (paper Fig. 2 scale for the host
+//! arm): at n=4096, m=512, k=16 both structured operators must project
+//! >= 5x faster than the dense Gaussian host sketch, while matching the
+//! dense path's JL scale (`E[S^T S] = m I`) closely enough that every
+//! estimator keeps its tolerances — the scale sanity check runs inline
+//! here, the statistical suite lives in tests/prop_sketch_stats.rs.
+//!
+//! Emits BENCH_sketch_ops.json (name, iters, ns/op) for cross-PR
+//! tracking and exits non-zero when a gate fails.
+
+use photonic_randnla::bench::{quick_mode, report, run, write_json, Config};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::randnla::backend::{DigitalSketcher, Sketcher};
+use photonic_randnla::randnla::structured::{SparseSignSketcher, SrhtSketcher};
+use photonic_randnla::rng::Xoshiro256;
+
+const N: usize = 4096;
+const M: usize = 512;
+const K: usize = 16;
+const SPARSE_NNZ: usize = 8;
+
+fn main() {
+    let quick = quick_mode();
+    let cfg = if quick {
+        Config {
+            warmup: std::time::Duration::from_millis(20),
+            measure: std::time::Duration::from_millis(150),
+            min_iters: 3,
+            max_iters: 1000,
+        }
+    } else {
+        Config::quick() // dense 512x4096x16 GEMMs: keep budgets moderate
+    };
+
+    let mut rng = Xoshiro256::new(42);
+    let x = Mat::gaussian(N, K, 1.0, &mut rng);
+
+    // Operators are built once; the bench times the projection (the
+    // serving-path hot loop), not operator setup.
+    let dense = DigitalSketcher::new(M, N, 7);
+    let srht = SrhtSketcher::new(M, N, 7);
+    let sparse = SparseSignSketcher::new(M, N, SPARSE_NNZ, 7);
+
+    let mut rows = Vec::new();
+    let dense_row = run(&format!("dense gaussian {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(dense.project(&x));
+    });
+    let srht_row = run(&format!("srht {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(srht.project(&x));
+    });
+    let sparse_row = run(&format!("sparse-sign s={SPARSE_NNZ} {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(sparse.project(&x));
+    });
+
+    // Operator-construction cost, for the amortisation story.
+    rows.push(run("build srht operator", cfg, || {
+        std::hint::black_box(SrhtSketcher::new(M, N, 9));
+    }));
+    rows.push(run("build sparse-sign operator", cfg, || {
+        std::hint::black_box(SparseSignSketcher::new(M, N, SPARSE_NNZ, 9));
+    }));
+
+    let (dense_ns, srht_ns, sparse_ns) =
+        (dense_row.mean_ns, srht_row.mean_ns, sparse_row.mean_ns);
+    rows.insert(0, sparse_row);
+    rows.insert(0, srht_row);
+    rows.insert(0, dense_row);
+
+    report("sketch operators", &rows);
+    if let Err(e) = write_json("BENCH_sketch_ops.json", &rows) {
+        eprintln!("(could not write BENCH_sketch_ops.json: {e})");
+    }
+
+    // JL-scale sanity: the structured sketches must sit on the same
+    // E||Sx||^2 = m ||x||^2 convention the estimators divide by.
+    let x1 = Mat::gaussian(N, 1, 1.0, &mut rng);
+    let x2: f64 = x1.data.iter().map(|v| v * v).sum();
+    for (label, y) in [("srht", srht.project(&x1)), ("sparse", sparse.project(&x1))] {
+        let ratio = y.data.iter().map(|v| v * v).sum::<f64>() / (M as f64 * x2);
+        assert!(
+            (ratio - 1.0).abs() < 0.5,
+            "{label} sketch scale off: ||Sx||^2/(m||x||^2) = {ratio}"
+        );
+    }
+
+    let srht_speedup = dense_ns / srht_ns;
+    let sparse_speedup = dense_ns / sparse_ns;
+    let floor = if quick { 3.0 } else { 5.0 };
+    println!(
+        "\nstructured speedup over dense at n={N} m={M} k={K}: \
+         srht {srht_speedup:.1}x, sparse {sparse_speedup:.1}x (gate >= {floor}x)"
+    );
+    let mut failed = false;
+    if srht_speedup < floor {
+        eprintln!("FAIL: srht speedup {srht_speedup:.1}x below the {floor}x gate");
+        failed = true;
+    }
+    if sparse_speedup < floor {
+        eprintln!("FAIL: sparse speedup {sparse_speedup:.1}x below the {floor}x gate");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -116,6 +116,33 @@ pub fn report(title: &str, rows: &[Summary]) {
     }
 }
 
+/// True when the bench binary was invoked with `--quick` (CI smoke
+/// mode): callers swap in [`Config::quick`] budgets and relaxed gates.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// Write summaries as machine-readable JSON (`[{"name", "iters",
+/// "ns_per_op"}...]`) so the perf trajectory is trackable across PRs
+/// (BENCH_<target>.json next to the working directory).
+pub fn write_json(path: &str, rows: &[Summary]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        let name = r.name.replace('\\', "\\\\").replace('"', "\\\"");
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"iters\": {}, \"ns_per_op\": {:.1}}}{}\n",
+            name,
+            r.iters,
+            r.mean_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)?;
+    println!("(wrote {path})");
+    Ok(())
+}
+
 /// Human-format nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -165,6 +192,28 @@ mod tests {
             max_ns: 1.0,
         };
         assert_eq!(s.csv_row().split(',').count(), 7);
+    }
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let rows = vec![Summary {
+            name: "matmul \"512^3\"".into(),
+            iters: 2,
+            mean_ns: 1.5,
+            p50_ns: 1.0,
+            p99_ns: 2.0,
+            min_ns: 1.0,
+            max_ns: 2.0,
+        }];
+        let path = std::env::temp_dir().join("photon_bench_json_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &rows).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.trim_start().starts_with('['));
+        assert!(s.trim_end().ends_with(']'));
+        assert!(s.contains("\\\"512^3\\\""), "{s}");
+        assert!(s.contains("\"ns_per_op\": 1.5"), "{s}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

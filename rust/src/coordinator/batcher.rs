@@ -14,13 +14,17 @@
 //! larger than any single aperture split across the pool (see
 //! [`crate::coordinator::shard`]) with no change to the estimator.
 //!
-//! Operator identity: every (n, m) signature owns one logical Gaussian
-//! operator seeded by [`signature_seed`]. The digital/PJRT arms address
+//! Operator identity: every (n, m) signature owns one logical operator
+//! seeded by [`signature_seed`]. The dense digital/PJRT arms address
 //! blocks of it through the counter-based
-//! [`CounterSketcher`](crate::randnla::backend::CounterSketcher), so the
-//! same signature sees the same G across batches, shards, replicas and
-//! pool sizes. OPU shard cells pin a Philox-derived medium per cell
-//! coordinate, so the composite optical operator is equally reproducible.
+//! [`CounterSketcher`](crate::randnla::backend::CounterSketcher); when
+//! the router selects a structured host operator (`serve --sketch
+//! srht|sparse|auto`) the host arm instead addresses blocks of one
+//! signature-seeded [`SrhtSketcher`] / [`SparseSignSketcher`] — either
+//! way the same signature sees the same operator across batches, shards,
+//! replicas and pool sizes. OPU shard cells pin a Philox-derived medium
+//! per cell coordinate, so the composite optical operator is equally
+//! reproducible.
 
 use std::collections::HashMap;
 use std::ops::Range;
@@ -38,7 +42,9 @@ use crate::coordinator::router::{Router, Schedule, ShardAssignment};
 use crate::coordinator::shard;
 use crate::linalg::{matmul, Mat};
 use crate::opu::{NoiseModel, OpuConfig, OpuDevice};
-use crate::randnla::backend::{CounterSketcher, PjrtSketcher, Sketcher};
+use crate::perfmodel::{SketchKind, SPARSE_SKETCH_NNZ};
+use crate::randnla::backend::{CounterSketcher, PjrtSketcher};
+use crate::randnla::structured::{SparseSignSketcher, SrhtSketcher};
 use crate::rng::Philox4x32;
 use crate::runtime::PjrtHandle;
 
@@ -259,7 +265,7 @@ fn flush(
         metrics: metrics.clone(),
         schedule,
         sig: (n, m),
-        merged,
+        merged: Arc::new(merged),
         reqs: group.reqs,
         total_cols,
     };
@@ -288,7 +294,9 @@ struct FlushJob {
     metrics: Arc<Metrics>,
     schedule: Schedule,
     sig: (usize, usize),
-    merged: Mat,
+    /// Shared with shard threads and the PJRT engine thread — the
+    /// request payload is never deep-copied on the serving path.
+    merged: Arc<Mat>,
     reqs: Vec<ProjReq>,
     total_cols: usize,
 }
@@ -316,17 +324,18 @@ fn execute_schedule(
     metrics: &Metrics,
     schedule: &Schedule,
     sig: (usize, usize),
-    merged: &Mat,
+    merged: &Arc<Mat>,
 ) -> Result<(Mat, Device)> {
     let k = merged.cols;
+    let sketch = schedule.host_sketch;
     let parts: Vec<Result<(Mat, DeviceId)>> = if schedule.shards.len() == 1 {
-        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, merged)]
+        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, merged, sketch)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = schedule
                 .shards
                 .iter()
-                .map(|a| s.spawn(move || run_shard(exec, pool, metrics, a, sig, merged)))
+                .map(|a| s.spawn(move || run_shard(exec, pool, metrics, a, sig, merged, sketch)))
                 .collect();
             handles
                 .into_iter()
@@ -375,15 +384,28 @@ fn run_shard(
     metrics: &Metrics,
     a: &ShardAssignment,
     sig: (usize, usize),
-    merged: &Mat,
+    merged: &Arc<Mat>,
+    sketch: SketchKind,
 ) -> Result<(Mat, DeviceId)> {
-    // Slice this cell's input rows (borrow the batch when unsharded).
-    let x_store;
-    let x: &Mat = if a.inp.start == 0 && a.inp.end == merged.rows {
-        merged
+    // Slice this cell's input rows (share the batch `Arc` when the cell
+    // spans the full input — no copy on the unsharded fast path).
+    let x: Arc<Mat> = if a.inp.start == 0 && a.inp.end == merged.rows {
+        merged.clone()
     } else {
-        x_store = Mat::from_fn(a.inp.len(), merged.cols, |i, j| merged.at(a.inp.start + i, j));
-        &x_store
+        Arc::new(Mat::from_fn(a.inp.len(), merged.cols, |i, j| merged.at(a.inp.start + i, j)))
+    };
+
+    // Operator identity across reroutes: a *host-planned* cell realises
+    // the schedule's chosen operator; an accelerator cell that falls
+    // back to the host realises the dense counter-Gaussian instead —
+    // that is the operator the PJRT arm's blocks are built from, so a
+    // PJRT->host reroute stays on the same logical G (as in the
+    // pre-structured serving plane) rather than splicing a structured
+    // operator into a job whose sibling cells used G.
+    let host_sketch = if a.device.kind == Device::Host {
+        sketch
+    } else {
+        SketchKind::Dense
     };
 
     let mut tried: Vec<DeviceId> = Vec::new();
@@ -400,7 +422,7 @@ fn run_shard(
         let outcome = if poisoned {
             Err(anyhow::anyhow!("injected fault on {}", device.label()))
         } else {
-            exec.run_cell(device, sig, &a.out, &a.inp, x)
+            exec.run_cell(device, sig, &a.out, &a.inp, &x, host_sketch)
         };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         match outcome {
@@ -487,6 +509,12 @@ struct DeviceExecutor {
     /// Counter-generated operator blocks for the digital/PJRT arms.
     blocks: Mutex<HashMap<BlockKey, Arc<Mat>>>,
     pjrts: Mutex<HashMap<BlockKey, PjrtSketcher>>,
+    /// Signature -> structured SRHT operator (signs + sampled rows are
+    /// O(n + m) state; every shard cell addresses blocks of this one
+    /// logical operator, so results never depend on the pool size).
+    srhts: Mutex<HashMap<(usize, usize), Arc<SrhtSketcher>>>,
+    /// Signature -> sparse-sign operator (CSR, O(n * s) state).
+    sparses: Mutex<HashMap<(usize, usize), Arc<SparseSignSketcher>>>,
     /// Signature -> arm last scheduled, for kind affinity (see `flush`).
     affinity: Mutex<HashMap<(usize, usize), Device>>,
 }
@@ -501,6 +529,8 @@ impl DeviceExecutor {
             opus: Mutex::new(HashMap::new()),
             blocks: Mutex::new(HashMap::new()),
             pjrts: Mutex::new(HashMap::new()),
+            srhts: Mutex::new(HashMap::new()),
+            sparses: Mutex::new(HashMap::new()),
             affinity: Mutex::new(HashMap::new()),
         }
     }
@@ -519,13 +549,18 @@ impl DeviceExecutor {
 
     /// Execute one shard cell on one device. Returns the partial result
     /// and, for the OPU, the simulated device milliseconds consumed.
+    /// Host cells realise the schedule's digital operator: the dense
+    /// counter-Gaussian block GEMM, or a structured fast path (SRHT /
+    /// sparse-sign) addressing a block of the signature's one logical
+    /// structured operator.
     fn run_cell(
         &self,
         device: DeviceId,
         sig: (usize, usize),
         out: &Range<usize>,
         inp: &Range<usize>,
-        x: &Mat,
+        x: &Arc<Mat>,
+        sketch: SketchKind,
     ) -> Result<(Mat, Option<f64>)> {
         match device.kind {
             Device::Opu => {
@@ -538,12 +573,22 @@ impl DeviceExecutor {
             }
             Device::Pjrt => {
                 let sk = self.pjrt_sketcher(sig, out, inp)?;
-                Ok((sk.try_project(x)?, None))
+                Ok((sk.try_project_shared(x)?, None))
             }
-            Device::Host => {
-                let g = self.operator_block(sig, out, inp);
-                Ok((matmul(&g, x), None))
-            }
+            Device::Host => match sketch {
+                SketchKind::Dense => {
+                    let g = self.operator_block(sig, out, inp);
+                    Ok((matmul(&g, x), None))
+                }
+                SketchKind::Srht => {
+                    let sk = self.srht_sketcher(sig);
+                    Ok((sk.project_block(out.clone(), inp.clone(), x), None))
+                }
+                SketchKind::Sparse => {
+                    let sk = self.sparse_sketcher(sig);
+                    Ok((sk.project_block(out.clone(), inp.clone(), x), None))
+                }
+            },
         }
     }
 
@@ -587,6 +632,28 @@ impl DeviceExecutor {
         map.entry(key).or_insert(block).clone()
     }
 
+    /// The signature's logical SRHT operator (built once, shared by
+    /// every shard cell and replica of the signature).
+    fn srht_sketcher(&self, (n, m): (usize, usize)) -> Arc<SrhtSketcher> {
+        if let Some(s) = self.srhts.lock().unwrap().get(&(n, m)) {
+            return s.clone();
+        }
+        let sk = Arc::new(SrhtSketcher::new(m, n, signature_seed(self.seed, n, m)));
+        let mut map = self.srhts.lock().unwrap();
+        map.entry((n, m)).or_insert(sk).clone()
+    }
+
+    /// The signature's logical sparse-sign operator.
+    fn sparse_sketcher(&self, (n, m): (usize, usize)) -> Arc<SparseSignSketcher> {
+        if let Some(s) = self.sparses.lock().unwrap().get(&(n, m)) {
+            return s.clone();
+        }
+        let s = SPARSE_SKETCH_NNZ.min(m);
+        let sk = Arc::new(SparseSignSketcher::new(m, n, s, signature_seed(self.seed, n, m)));
+        let mut map = self.sparses.lock().unwrap();
+        map.entry((n, m)).or_insert(sk).clone()
+    }
+
     fn pjrt_sketcher(
         &self,
         sig: (usize, usize),
@@ -612,19 +679,21 @@ impl DeviceExecutor {
 mod tests {
     use super::*;
     use crate::coordinator::pool::PoolConfig;
-    use crate::coordinator::router::{Availability, Policy};
+    use crate::coordinator::router::{Availability, HostSketch, Policy};
     use crate::linalg::rel_frobenius_error;
+    use crate::randnla::backend::Sketcher;
     use crate::rng::Xoshiro256;
 
     fn no_pjrt_avail() -> Availability {
         Availability { pjrt: false, ..Availability::default() }
     }
 
-    fn service(
+    fn service_with_sketch(
         policy: Policy,
         pool_cfg: PoolConfig,
         max_cols: usize,
         wait_us: u64,
+        host_sketch: HostSketch,
     ) -> (ProjectionService, Arc<Metrics>, Arc<DevicePool>) {
         let metrics = Arc::new(Metrics::new());
         let cfg = BatchConfig {
@@ -634,11 +703,26 @@ mod tests {
             ..Default::default()
         };
         let avail = no_pjrt_avail();
-        let router = Router::new(policy, avail);
+        let router = Router::new(policy, avail).with_host_sketch(host_sketch);
         let pool = Arc::new(DevicePool::build(&pool_cfg, &avail));
         let (svc, _join) =
             ProjectionService::start(cfg, router, pool.clone(), None, metrics.clone());
         (svc, metrics, pool)
+    }
+
+    fn service(
+        policy: Policy,
+        pool_cfg: PoolConfig,
+        max_cols: usize,
+        wait_us: u64,
+    ) -> (ProjectionService, Arc<Metrics>, Arc<DevicePool>) {
+        service_with_sketch(
+            policy,
+            pool_cfg,
+            max_cols,
+            wait_us,
+            HostSketch::Fixed(SketchKind::Dense),
+        )
     }
 
     fn host_service(max_cols: usize, wait_us: u64) -> (ProjectionService, Arc<Metrics>) {
@@ -686,6 +770,114 @@ mod tests {
         let g = CounterSketcher::new(8, 24, seed).matrix();
         let want = matmul(&g, &x);
         assert_eq!(got, want, "host arm drifted from the signature operator");
+    }
+
+    #[test]
+    fn host_srht_arm_applies_the_signature_operator_exactly() {
+        // With `--sketch srht` the host arm must compute exactly S @ x
+        // for the signature-seeded SRHT operator (same fast path, same
+        // association: bitwise).
+        let (svc, _m, _p) = service_with_sketch(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            8,
+            50,
+            HostSketch::Fixed(SketchKind::Srht),
+        );
+        let mut rng = Xoshiro256::new(21);
+        let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+        let got = svc.project(x.clone(), 8).unwrap().result;
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let want = SrhtSketcher::new(8, 24, seed).project(&x);
+        assert_eq!(got, want, "host srht arm drifted from the signature operator");
+    }
+
+    #[test]
+    fn host_sparse_arm_applies_the_signature_operator_exactly() {
+        let (svc, _m, _p) = service_with_sketch(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            8,
+            50,
+            HostSketch::Fixed(SketchKind::Sparse),
+        );
+        let mut rng = Xoshiro256::new(22);
+        let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+        let got = svc.project(x.clone(), 8).unwrap().result;
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let want = SparseSignSketcher::new(8, 24, SPARSE_SKETCH_NNZ.min(8), seed).project(&x);
+        assert_eq!(got, want, "host sparse arm drifted from the signature operator");
+    }
+
+    #[test]
+    fn sharded_srht_bit_identical_across_worker_counts() {
+        // The acceptance property behind `serve --sketch srht`: shard
+        // cells address blocks of one signature operator whose identity
+        // depends only on cell coordinates, so a 2x2 sharded projection
+        // is bit-identical whatever the replica count.
+        let (n, m, k) = (32usize, 16usize, 3usize);
+        let run = |workers: usize| {
+            let (svc, metrics, _pool) = service_with_sketch(
+                Policy::ForceHost,
+                PoolConfig {
+                    pjrt_replicas: 0,
+                    host_workers: workers,
+                    host_aperture: Some((8, 16)),
+                    ..Default::default()
+                },
+                4,
+                50,
+                HostSketch::Fixed(SketchKind::Srht),
+            );
+            let mut rng = Xoshiro256::new(23);
+            let x = Mat::gaussian(n, k, 1.0, &mut rng);
+            let y = svc.project(x, m).unwrap().result;
+            assert!(metrics.sharded_jobs.load(Ordering::Relaxed) >= 1);
+            y
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one, four, "sharded SRHT depends on the pool size");
+
+        // And stays within summation-association distance of the
+        // unsharded signature projection.
+        let (svc, _m2, _p2) = service_with_sketch(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            4,
+            50,
+            HostSketch::Fixed(SketchKind::Srht),
+        );
+        let mut rng = Xoshiro256::new(23);
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let unsharded = svc.project(x, m).unwrap().result;
+        assert!(rel_frobenius_error(&unsharded, &one) < 1e-12);
+    }
+
+    #[test]
+    fn poisoned_host_worker_reroute_keeps_structured_operator() {
+        // A host-planned cell that reroutes to a peer host worker must
+        // still realise the signature's structured operator (only
+        // accelerator->host fallbacks drop to the dense counter G).
+        let (svc, metrics, pool) = service_with_sketch(
+            Policy::ForceHost,
+            PoolConfig { pjrt_replicas: 0, host_workers: 2, ..Default::default() },
+            4,
+            50,
+            HostSketch::Fixed(SketchKind::Srht),
+        );
+        pool.poison(DeviceId { kind: Device::Host, replica: 0 });
+        let mut rng = Xoshiro256::new(24);
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let operator = SrhtSketcher::new(8, 24, seed);
+        // Enough single requests that one lands on the poisoned worker.
+        for _ in 0..4 {
+            let x = Mat::gaussian(24, 2, 1.0, &mut rng);
+            let got = svc.project(x.clone(), 8).unwrap().result;
+            assert_eq!(got, operator.project(&x), "rerouted cell changed operator");
+        }
+        assert_eq!(metrics.rerouted.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -48,6 +48,6 @@ pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use metrics::Metrics;
 pub use pool::{DeviceId, DevicePool, PoolConfig, PoolDevice};
 pub use request::{Device, Job, JobResponse, Payload, Ticket};
-pub use router::{Availability, Policy, Route, Router, Schedule, ShardAssignment};
+pub use router::{Availability, HostSketch, Policy, Route, Router, Schedule, ShardAssignment};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use shard::{recombine, ShardCell, ShardPlan};

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::coordinator::pool::{DeviceId, DevicePool, PoolDevice};
 use crate::coordinator::request::Device;
 use crate::coordinator::shard::ShardPlan;
-use crate::perfmodel::{GpuModel, OpuTimingModel};
+use crate::perfmodel::{self, GpuModel, OpuTimingModel, SketchKind};
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +38,17 @@ pub enum Policy {
     ForcePjrt,
     /// Pin to host CPU (exact digital, no accelerator).
     ForceHost,
+}
+
+/// Which digital operator the host arm realises (CLI `serve --sketch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostSketch {
+    /// Route each signature through the perfmodel-cheapest operator
+    /// ([`perfmodel::cheapest_digital_sketch`]; k-invariant, so every
+    /// batch of a (n, m) signature picks the same operator).
+    Auto,
+    /// Always use one operator kind.
+    Fixed(SketchKind),
 }
 
 /// Device availability as seen by the router.
@@ -59,6 +70,8 @@ pub struct Router {
     pub opu_model: OpuTimingModel,
     pub gpu_model: GpuModel,
     pub avail: Availability,
+    /// Digital operator selection for the host arm.
+    pub host_sketch: HostSketch,
 }
 
 /// A routing decision with its predicted cost.
@@ -88,6 +101,10 @@ pub struct Schedule {
     pub kind: Device,
     pub plan: ShardPlan,
     pub shards: Vec<ShardAssignment>,
+    /// Digital operator any host cell of this batch realises (also the
+    /// operator a reroute-to-host fallback must use). Chosen once per
+    /// signature — it never varies with batch width or pool load.
+    pub host_sketch: SketchKind,
     /// Predicted makespan (max over replicas of queue delay + assigned work).
     pub predicted_ms: f64,
 }
@@ -99,6 +116,24 @@ impl Router {
             opu_model: OpuTimingModel::default(),
             gpu_model: crate::perfmodel::P100,
             avail,
+            host_sketch: HostSketch::Fixed(SketchKind::Dense),
+        }
+    }
+
+    /// Builder: select the host arm's digital operator policy.
+    pub fn with_host_sketch(mut self, host_sketch: HostSketch) -> Self {
+        self.host_sketch = host_sketch;
+        self
+    }
+
+    /// The digital operator the host arm uses for a (n, m) signature.
+    /// Auto consults the perfmodel; the result is k-invariant (all cost
+    /// terms share one overhead and are linear in k), so multi-pass
+    /// estimators of one signature always see one operator.
+    pub fn digital_kind(&self, n: usize, m: usize, k: usize) -> SketchKind {
+        match self.host_sketch {
+            HostSketch::Fixed(kind) => kind,
+            HostSketch::Auto => perfmodel::cheapest_digital_sketch(n, m, k).0,
         }
     }
 
@@ -135,11 +170,16 @@ impl Router {
     }
 
     /// Perfmodel service time of one (m x n) x k batch on a device kind.
+    /// The host arm is priced at its *chosen* digital operator, so a
+    /// structured sketch makes the host a real competitor in the
+    /// OPU-vs-digital crossover instead of a dense-GEMM strawman.
     fn device_ms(&self, kind: Device, m: usize, n: usize, k: usize) -> f64 {
         match kind {
             Device::Opu => self.opu_ms(m, n, k),
             Device::Pjrt => self.gpu_ms(m, n, k),
-            Device::Host => crate::perfmodel::host_projection_ms(n, m, k),
+            Device::Host => {
+                perfmodel::digital_sketch_ms(self.digital_kind(n, m, k), n, m, k)
+            }
         }
     }
 
@@ -257,10 +297,29 @@ impl Router {
         devs: &[Arc<PoolDevice>],
         k: usize,
     ) -> Schedule {
+        // The host operator is chosen once from the *signature* dims, so
+        // cells are priced with the operator they will actually execute.
+        let host_sketch = self.digital_kind(plan.n, plan.m, k);
         let mut local: Vec<f64> = devs.iter().map(|d| d.queue_delay_ms()).collect();
         let mut shards = Vec::with_capacity(plan.num_cells());
         for cell in plan.cells() {
-            let per = self.device_ms(kind, cell.out.len(), cell.inp.len(), k);
+            let per = match (kind, host_sketch) {
+                // The SRHT transform always spans the signature's padded
+                // input dimension, whatever the cell's input slice.
+                (Device::Host, SketchKind::Srht) => perfmodel::srht_cell_projection_ms(
+                    plan.n,
+                    cell.inp.len(),
+                    cell.out.len(),
+                    k,
+                ),
+                (Device::Host, _) => perfmodel::digital_sketch_ms(
+                    host_sketch,
+                    cell.inp.len(),
+                    cell.out.len(),
+                    k,
+                ),
+                _ => self.device_ms(kind, cell.out.len(), cell.inp.len(), k),
+            };
             let mut best = 0usize;
             for i in 1..devs.len() {
                 let a = (local[i], devs[i].busy_ms(), devs[i].id.replica);
@@ -278,7 +337,7 @@ impl Router {
             });
         }
         let predicted_ms = local.iter().copied().fold(0.0, f64::max);
-        Schedule { kind, plan: plan.clone(), shards, predicted_ms }
+        Schedule { kind, plan: plan.clone(), shards, host_sketch, predicted_ms }
     }
 
     fn opu_ms(&self, m: usize, n: usize, k: usize) -> f64 {
@@ -495,6 +554,46 @@ mod tests {
         pool.mark_dead(DeviceId { kind: Device::Opu, replica: 0 });
         let s = r.schedule_preferring(&pool, 8, 64, 1, Some(Device::Opu));
         assert_eq!(s.kind, Device::Pjrt);
+    }
+
+    #[test]
+    fn host_sketch_fixed_propagates_into_schedule() {
+        let pool = opu_pool(2, (64, 128));
+        let r = Router::new(Policy::ForceHost, Availability::default())
+            .with_host_sketch(HostSketch::Fixed(SketchKind::Srht));
+        let s = r.schedule(&pool, 32, 64, 1);
+        assert_eq!(s.kind, Device::Host);
+        assert_eq!(s.host_sketch, SketchKind::Srht);
+    }
+
+    #[test]
+    fn host_sketch_defaults_to_dense() {
+        let r = auto_router();
+        assert_eq!(r.host_sketch, HostSketch::Fixed(SketchKind::Dense));
+        assert_eq!(r.digital_kind(4096, 512, 16), SketchKind::Dense);
+    }
+
+    #[test]
+    fn auto_host_sketch_is_structured_at_scale_and_k_stable() {
+        let r = Router::new(Policy::ForceHost, Availability::default())
+            .with_host_sketch(HostSketch::Auto);
+        let kind = r.digital_kind(4096, 512, 1);
+        assert_ne!(kind, SketchKind::Dense, "auto kept the dense strawman at scale");
+        for k in [2usize, 16, 256] {
+            assert_eq!(r.digital_kind(4096, 512, k), kind, "kind flipped with k={k}");
+        }
+        // Skinny sketches stay dense: the crossover works both ways.
+        assert_eq!(r.digital_kind(1024, 8, 1), SketchKind::Dense);
+    }
+
+    #[test]
+    fn auto_host_sketch_lowers_host_makespan_at_scale() {
+        let pool = opu_pool(1, (4096, 4096));
+        let dense = Router::new(Policy::ForceHost, Availability::default());
+        let auto = dense.clone().with_host_sketch(HostSketch::Auto);
+        let d = dense.schedule(&pool, 512, 4096, 16).predicted_ms;
+        let a = auto.schedule(&pool, 512, 4096, 16).predicted_ms;
+        assert!(a < d / 3.0, "structured host arm not cheaper: {a} vs {d}");
     }
 
     #[test]

@@ -24,14 +24,19 @@ use crate::coordinator::batcher::{BatchConfig, ProjectionService};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
 use crate::coordinator::request::{Device, Job, JobResponse, Payload, Ticket};
-use crate::coordinator::router::{Availability, Policy, Router};
+use crate::coordinator::router::{Availability, HostSketch, Policy, Router};
 use crate::linalg::{self, matmul_tn, Mat};
+use crate::perfmodel::SketchKind;
 use crate::runtime::{PjrtEngine, PjrtHandle};
 
 /// Coordinator configuration.
 pub struct CoordinatorConfig {
     pub workers: usize,
     pub policy: Policy,
+    /// Digital operator for the host arm (CLI `serve --sketch`):
+    /// dense counter-Gaussian, structured SRHT / sparse-sign, or the
+    /// perfmodel-cheapest per signature.
+    pub host_sketch: HostSketch,
     pub batch: BatchConfig,
     /// Execution-plane sizing: replicas per device kind + apertures.
     pub pool: PoolConfig,
@@ -44,6 +49,7 @@ impl Default for CoordinatorConfig {
         Self {
             workers: 4,
             policy: Policy::Auto,
+            host_sketch: HostSketch::Fixed(SketchKind::Dense),
             batch: BatchConfig::default(),
             pool: PoolConfig::default(),
             artifacts_dir: None,
@@ -112,7 +118,7 @@ impl Coordinator {
             ..Availability::default()
         };
         let pool = Arc::new(DevicePool::build(&cfg.pool, &avail));
-        let router = Router::new(cfg.policy, avail);
+        let router = Router::new(cfg.policy, avail).with_host_sketch(cfg.host_sketch);
         let (svc, _batcher_join) = ProjectionService::start(
             cfg.batch.clone(),
             router,
@@ -489,6 +495,80 @@ mod tests {
             .clone();
         assert_eq!(got, again, "sharded OPU result depends on pool size");
         c2.shutdown();
+    }
+
+    fn srht_host_coordinator(host_workers: usize, aperture: Option<(usize, usize)>) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            policy: Policy::ForceHost,
+            host_sketch: HostSketch::Fixed(SketchKind::Srht),
+            batch: quiet_batch(),
+            pool: PoolConfig {
+                pjrt_replicas: 0,
+                host_workers,
+                host_aperture: aperture,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn srht_sketch_round_trips_bit_reproducibly_across_replica_counts() {
+        // Acceptance: `serve --sketch srht` through the full coordinator
+        // pool + shard planner gives bit-identical results whatever the
+        // worker/replica count — every shard cell addresses a block of
+        // the one signature-seeded SRHT operator.
+        let mut rng = Xoshiro256::new(31);
+        let x = Mat::gaussian(64, 3, 1.0, &mut rng);
+        let run = |host_workers: usize| {
+            let c = srht_host_coordinator(host_workers, Some((16, 32)));
+            let resp = c.run(Job::Projection { data: x.clone(), m: 32 }).unwrap();
+            assert_eq!(resp.device, Device::Host);
+            let got = resp.payload.matrix().unwrap().clone();
+            assert!(c.metrics.sharded_jobs.load(Ordering::Relaxed) >= 1);
+            c.shutdown();
+            got
+        };
+        let one = run(1);
+        let three = run(3);
+        assert_eq!(one, three, "sharded SRHT result depends on replica count");
+        assert_eq!((one.rows, one.cols), (32, 3));
+
+        // The unsharded pool agrees up to input-shard summation
+        // association (the shard planner's standard exactness class).
+        let c = srht_host_coordinator(1, None);
+        let whole = c
+            .run(Job::Projection { data: x.clone(), m: 32 })
+            .unwrap()
+            .payload
+            .matrix()
+            .unwrap()
+            .clone();
+        c.shutdown();
+        assert!(crate::linalg::rel_frobenius_error(&whole, &one) < 1e-12);
+    }
+
+    #[test]
+    fn randsvd_job_recovers_low_rank_with_structured_sketch() {
+        // Fig-1-class accuracy through the serving plane with the SRHT
+        // host arm: same tolerance as the dense randsvd job test.
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = srht_host_coordinator(1, None);
+        let a = matrix_with_spectrum(48, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 4);
+        let resp = c
+            .run(Job::RandSvd { a: a.clone(), rank: 6, oversample: 6, power_iters: 2 })
+            .unwrap();
+        match resp.payload {
+            Payload::Svd { u, s, vt } => {
+                let rec = linalg::reconstruct(&u, &s, &vt);
+                let rel = crate::linalg::rel_frobenius_error(&a, &rec);
+                assert!(rel < 0.02, "srht randsvd rel {rel}");
+            }
+            _ => panic!("wrong payload"),
+        }
+        c.shutdown();
     }
 
     #[test]

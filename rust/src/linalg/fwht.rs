@@ -1,0 +1,178 @@
+//! Fast Walsh–Hadamard transform — the O(n log n) core of the SRHT
+//! structured sketch (see [`crate::randnla::structured::SrhtSketcher`]).
+//!
+//! The transform is applied along the *input* dimension of a projection:
+//! the SRHT apply path lays the k data columns out as contiguous
+//! power-of-two rows of a scratch matrix (one row per column, so each
+//! butterfly touches one cache-resident slice) and [`fwht_rows`]
+//! transforms every row in place, parallelised over column blocks with
+//! [`crate::parallel::par_chunks_mut`]. Each column's arithmetic is a
+//! fixed sequential butterfly network, so results are bit-reproducible
+//! for any thread count — the same property the counter-based Gaussian
+//! operator gives the shard planner.
+
+use super::mat::Mat;
+use crate::parallel;
+
+/// Smallest power of two >= `n` (and >= 1): the padded transform length
+/// for an `n`-dimensional input.
+#[inline]
+pub fn padded_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// In-place unnormalised FWHT of one length-2^p slice.
+///
+/// Entry semantics: `out[i] = sum_j (-1)^{popcount(i & j)} v[j]` — the
+/// unnormalised Hadamard matrix H with entries +-1, so `fwht(fwht(v)) =
+/// len * v`.
+pub fn fwht_inplace(v: &mut [f64]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} is not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// In-place FWHT of every row of `buf` (rows must have power-of-two
+/// length), parallelised over blocks of rows. In the SRHT apply path a
+/// row of `buf` holds one *column* of the projected data, so this is the
+/// "transform all k columns in parallel" step.
+pub fn fwht_rows(buf: &mut Mat) {
+    let len = buf.cols;
+    if len <= 1 {
+        return;
+    }
+    assert!(len.is_power_of_two(), "FWHT row length {len} is not a power of two");
+    // One task per row block; each row transform is self-contained, so
+    // the result is independent of the worker count.
+    parallel::par_chunks_mut(&mut buf.data, len, |_, row| fwht_inplace(row));
+}
+
+/// Hadamard-matrix entry sign as +-1.0: `H[i, j] = (-1)^{popcount(i & j)}`.
+/// Random access used when a shard cell materialises an operator block.
+#[inline]
+pub fn hadamard_sign(i: usize, j: usize) -> f64 {
+    if (i & j).count_ones() & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn naive_fwht(v: &[f64]) -> Vec<f64> {
+        let n = v.len();
+        (0..n)
+            .map(|i| (0..n).map(|j| hadamard_sign(i, j) * v[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn padded_pow2_edges() {
+        assert_eq!(padded_pow2(0), 1);
+        assert_eq!(padded_pow2(1), 1);
+        assert_eq!(padded_pow2(2), 2);
+        assert_eq!(padded_pow2(3), 4);
+        assert_eq!(padded_pow2(4), 4);
+        assert_eq!(padded_pow2(1000), 1024);
+        assert_eq!(padded_pow2(1 << 20), 1 << 20);
+    }
+
+    #[test]
+    fn matches_naive_hadamard_multiply() {
+        let mut rng = Xoshiro256::new(1);
+        for p in 0..7 {
+            let n = 1usize << p;
+            let v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+            let mut got = v.clone();
+            fwht_inplace(&mut got);
+            let want = naive_fwht(&v);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9 * (n as f64).max(1.0), "p={p}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_length() {
+        let mut rng = Xoshiro256::new(2);
+        let n = 64;
+        let v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut w = v.clone();
+        fwht_inplace(&mut w);
+        fwht_inplace(&mut w);
+        for (a, b) in v.iter().zip(&w) {
+            assert!((a * n as f64 - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn preserves_energy_scaled() {
+        // ||H v||^2 = n ||v||^2 (rows of H are orthogonal, norm sqrt(n)).
+        let mut rng = Xoshiro256::new(3);
+        let n = 256;
+        let v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let before: f64 = v.iter().map(|x| x * x).sum();
+        let mut w = v;
+        fwht_inplace(&mut w);
+        let after: f64 = w.iter().map(|x| x * x).sum();
+        assert!((after / before - n as f64).abs() < 1e-6, "{after} vs {before}");
+    }
+
+    #[test]
+    fn rows_variant_matches_per_row_transform() {
+        let mut rng = Xoshiro256::new(4);
+        let mut m = Mat::gaussian(5, 32, 1.0, &mut rng);
+        let want: Vec<Vec<f64>> = (0..5)
+            .map(|i| {
+                let mut r = m.row(i).to_vec();
+                fwht_inplace(&mut r);
+                r
+            })
+            .collect();
+        fwht_rows(&mut m);
+        for i in 0..5 {
+            assert_eq!(m.row(i), &want[i][..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Xoshiro256::new(5);
+        let n = 128;
+        let a: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut ha = a.clone();
+        let mut hb = b.clone();
+        let mut hab: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        fwht_inplace(&mut ha);
+        fwht_inplace(&mut hb);
+        fwht_inplace(&mut hab);
+        for i in 0..n {
+            assert!((ha[i] + hb[i] - hab[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut v = vec![0.0; 6];
+        fwht_inplace(&mut v);
+    }
+}

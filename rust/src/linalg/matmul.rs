@@ -1,24 +1,96 @@
 //! Blocked, parallel dense matmul — the exact-baseline GEMM.
 //!
-//! The "GPU" in the paper is a P100 running cuBLAS; our exact substrate is
-//! this kernel. It is a straightforward L1-blocked ikj loop parallelised
-//! over row bands with [`crate::parallel::par_chunks_mut`] — good enough
-//! to run every evaluation exactly (the perf-critical digital projection
-//! path goes through PJRT/XLA instead, see rust/src/runtime/).
+//! The "GPU" in the paper is a P100 running cuBLAS; our exact substrate
+//! is this kernel: a packed, register-blocked microkernel GEMM
+//! parallelised over row bands with [`crate::parallel::par_chunks_mut`].
+//! B is packed once into NR-wide column panels, each band packs its A
+//! rows into MR-tall panels, and the inner loop keeps an MR x NR
+//! accumulator tile entirely in registers across the full k dimension
+//! (§Perf: the previous axpy kernel re-streamed the C row through L1 on
+//! every k step; register tiling reuses it k times and roughly doubles
+//! the 512^3 hotpath).
+//!
+//! Determinism contract: element (i, j) always accumulates over k in
+//! ascending order with no FMA contraction, independent of band, tile or
+//! thread-count choices — so row-sharded GEMMs are bit-identical to the
+//! matching rows of the full product (the shard planner relies on this;
+//! see rust/src/coordinator/shard.rs).
 
 use super::mat::Mat;
 use crate::parallel;
 
-/// Block edge for the cache-blocked kernel.
+/// Register-tile height (rows of A per microkernel call).
+const MR: usize = 4;
+/// Register-tile width (columns of B per microkernel call).
+const NR: usize = 8;
+/// Upper bound for rows per parallel band.
 const MC: usize = 64;
-const KC: usize = 256;
 
 /// Rows per parallel band: small enough to keep every core busy, large
 /// enough to amortise task overhead (§Perf: fixed MC=64 left half the
-/// cores idle at n=512).
+/// cores idle at n=512). Rounded up to a multiple of MR so only the last
+/// band sees a partial register tile.
 fn band_rows(m: usize) -> usize {
     let t = parallel::num_threads();
-    (m / (4 * t).max(1)).clamp(4, MC).max(1)
+    let raw = (m / (4 * t).max(1)).clamp(4, MC).max(1);
+    raw.div_ceil(MR) * MR
+}
+
+/// Pack B into NR-wide column panels: panel `s` holds columns
+/// `[s*NR, s*NR+NR)` laid out k-major (`panel[kk*NR + c]`), zero-padded
+/// on the right edge so the microkernel never branches on width.
+fn pack_b_panels(b: &Mat) -> Vec<f64> {
+    let (k, n) = (b.rows, b.cols);
+    let panels = n.div_ceil(NR);
+    let mut out = vec![0.0; panels * k * NR];
+    for s in 0..panels {
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut out[s * k * NR..(s + 1) * k * NR];
+        for kk in 0..k {
+            panel[kk * NR..kk * NR + w].copy_from_slice(&b.row(kk)[j0..j0 + w]);
+        }
+    }
+    out
+}
+
+/// Pack `rows` rows of A starting at `i0` into MR-tall panels laid out
+/// k-major (`panel[kk*MR + r]`), zero-padded on the bottom edge.
+fn pack_a_band(a: &Mat, i0: usize, rows: usize) -> Vec<f64> {
+    let k = a.cols;
+    let panels = rows.div_ceil(MR);
+    let mut out = vec![0.0; panels * k * MR];
+    for s in 0..panels {
+        let r0 = s * MR;
+        let h = MR.min(rows - r0);
+        let panel = &mut out[s * k * MR..(s + 1) * k * MR];
+        for r in 0..h {
+            let arow = a.row(i0 + r0 + r);
+            for (kk, &v) in arow.iter().enumerate() {
+                panel[kk * MR + r] = v;
+            }
+        }
+    }
+    out
+}
+
+/// The register-blocked inner loop: one MR x NR tile of C accumulated
+/// over the full k range from packed panels. Accumulators live in
+/// registers; per element the sum runs over k in ascending order.
+#[inline(always)]
+fn microkernel(a_panel: &[f64], b_panel: &[f64]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for (av, bv) in a_panel.chunks_exact(MR).zip(b_panel.chunks_exact(NR)) {
+        let av: &[f64; MR] = av.try_into().unwrap();
+        let bv: &[f64; NR] = bv.try_into().unwrap();
+        for r in 0..MR {
+            let a = av[r];
+            for c in 0..NR {
+                acc[r][c] += a * bv[c];
+            }
+        }
+    }
+    acc
 }
 
 /// C = A @ B.
@@ -26,26 +98,29 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Mat::zeros(m, n);
-    // Parallelise over row bands of C; each band is owned by one task.
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    // B panels are packed once and shared read-only by every band task.
+    let bp = pack_b_panels(b);
+    let n_panels = n.div_ceil(NR);
     parallel::par_chunks_mut(&mut c.data, band_rows(m) * n, |start, band| {
         let i0 = start / n;
-        let rows_in_band = band.len() / n;
-        for kb in (0..k).step_by(KC) {
-            let kend = (kb + KC).min(k);
-            for ii in 0..rows_in_band {
-                let i = i0 + ii;
-                let arow = a.row(i);
-                let crow = &mut band[ii * n..(ii + 1) * n];
-                for kk in kb..kend {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = b.row(kk);
-                    // Inner axpy: autovectorises to AVX on release builds.
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
+        let rows = band.len() / n;
+        let ap = pack_a_band(a, i0, rows);
+        let m_panels = rows.div_ceil(MR);
+        for si in 0..m_panels {
+            let r0 = si * MR;
+            let h = MR.min(rows - r0);
+            let a_panel = &ap[si * k * MR..(si + 1) * k * MR];
+            for sj in 0..n_panels {
+                let j0 = sj * NR;
+                let w = NR.min(n - j0);
+                let b_panel = &bp[sj * k * NR..(sj + 1) * k * NR];
+                let acc = microkernel(a_panel, b_panel);
+                for r in 0..h {
+                    let at = (r0 + r) * n + j0;
+                    band[at..at + w].copy_from_slice(&acc[r][..w]);
                 }
             }
         }
@@ -80,21 +155,45 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = A @ B^T without materialising B^T.
+/// C = A @ B^T without materialising B^T. Parallelised over row *bands*
+/// (same grain as [`matmul`]); within a band, four dot products run as
+/// independent accumulator chains per C row for ILP.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "inner dims (nt)");
     let (m, n, k) = (a.rows, b.rows, a.cols);
     let mut c = Mat::zeros(m, n);
-    parallel::par_chunks_mut(&mut c.data, n, |start, crow| {
-        let i = start / n;
-        let arow = a.row(i);
-        for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = b.row(j);
-            let mut acc = 0.0;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
+    if m == 0 || n == 0 {
+        return c;
+    }
+    parallel::par_chunks_mut(&mut c.data, band_rows(m) * n, |start, band| {
+        let i0 = start / n;
+        let rows_in_band = band.len() / n;
+        for ii in 0..rows_in_band {
+            let arow = a.row(i0 + ii);
+            let crow = &mut band[ii * n..(ii + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let b0 = &b.row(j)[..k];
+                let b1 = &b.row(j + 1)[..k];
+                let b2 = &b.row(j + 2)[..k];
+                let b3 = &b.row(j + 3)[..k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                for (kk, &av) in arow.iter().enumerate() {
+                    s0 += av * b0[kk];
+                    s1 += av * b1[kk];
+                    s2 += av * b2[kk];
+                    s3 += av * b3[kk];
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+                j += 4;
             }
-            *cv = acc;
+            for jj in j..n {
+                let brow = b.row(jj);
+                crow[jj] = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+            }
         }
     });
     c
@@ -113,33 +212,50 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// Tr(A @ B) in O(nm) without forming the product.
+/// Tr(A @ B) in O(nm) without forming the product, parallelised with
+/// [`crate::parallel::par_fold`] over row ranges (partials combine in
+/// range order; the worker partition fixes the f64 association).
 pub fn trace_of_product(a: &Mat, b: &Mat) -> f64 {
     assert_eq!(a.cols, b.rows);
     assert_eq!(a.rows, b.cols);
-    let mut tr = 0.0;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        for (k, av) in arow.iter().enumerate() {
-            tr += av * b.at(k, i);
-        }
-    }
-    tr
+    parallel::par_fold(
+        a.rows,
+        |range| {
+            let mut tr = 0.0;
+            for i in range {
+                let arow = a.row(i);
+                for (k, av) in arow.iter().enumerate() {
+                    tr += av * b.at(k, i);
+                }
+            }
+            tr
+        },
+        |x, y| x + y,
+        0.0,
+    )
 }
 
 /// Tr(B^3) for square B in O(n^2) memory-free form: Tr(B^2 * B) using
-/// sum_ij (B^2)_ij * B_ji.
+/// sum_ij (B^2)_ij * B_ji. The contraction runs under
+/// [`crate::parallel::par_fold`] like [`trace_of_product`].
 pub fn trace_cubed(b: &Mat) -> f64 {
     assert!(b.is_square());
     let b2 = matmul(b, b);
-    let mut tr = 0.0;
-    for i in 0..b.rows {
-        let row = b2.row(i);
-        for (j, v) in row.iter().enumerate() {
-            tr += v * b.at(j, i);
-        }
-    }
-    tr
+    parallel::par_fold(
+        b.rows,
+        |range| {
+            let mut tr = 0.0;
+            for i in range {
+                let row = b2.row(i);
+                for (j, v) in row.iter().enumerate() {
+                    tr += v * b.at(j, i);
+                }
+            }
+            tr
+        },
+        |x, y| x + y,
+        0.0,
+    )
 }
 
 #[cfg(test)]
@@ -171,10 +287,46 @@ mod tests {
     #[test]
     fn matches_naive() {
         let mut rng = Xoshiro256::new(1);
-        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 31, 23), (70, 130, 65)] {
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 5, 2),
+            (17, 31, 23),
+            (70, 130, 65),
+            // Edge tiles: dims straddling the MR=4 / NR=8 panel sizes.
+            (4, 9, 8),
+            (5, 3, 9),
+            (8, 8, 7),
+            (13, 2, 17),
+        ] {
             let a = Mat::gaussian(m, k, 1.0, &mut rng);
             let b = Mat::gaussian(k, n, 1.0, &mut rng);
             assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_inner_dim_is_zero() {
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_blocks_are_bit_identical_to_full() {
+        // The shard planner's exactness contract: a GEMM over a row
+        // subset of A must match those rows of the full product bitwise,
+        // whatever bands/tiles either call used internally.
+        let mut rng = Xoshiro256::new(9);
+        let a = Mat::gaussian(37, 29, 1.0, &mut rng);
+        let b = Mat::gaussian(29, 31, 1.0, &mut rng);
+        let full = matmul(&a, &b);
+        let (lo, hi) = (5usize, 22usize);
+        let a_sub = Mat::from_fn(hi - lo, a.cols, |i, j| a.at(lo + i, j));
+        let sub = matmul(&a_sub, &b);
+        for i in 0..hi - lo {
+            assert_eq!(sub.row(i), full.row(lo + i), "row {i} drifted");
         }
     }
 
@@ -186,6 +338,9 @@ mod tests {
         assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-9);
         let c = Mat::gaussian(15, 30, 1.0, &mut rng);
         assert_close(&matmul_nt(&a, &c), &matmul(&a, &c.transpose()), 1e-9);
+        // Widths not divisible by the 4-wide nt tiling.
+        let d = Mat::gaussian(9, 30, 1.0, &mut rng);
+        assert_close(&matmul_nt(&a, &d), &matmul(&a, &d.transpose()), 1e-9);
     }
 
     #[test]
@@ -216,6 +371,26 @@ mod tests {
         let b = Mat::gaussian(20, 12, 1.0, &mut rng);
         let want = matmul(&a, &b).trace();
         assert!((trace_of_product(&a, &b) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_of_product_parallel_consistent_with_sequential() {
+        // par_fold partials must recombine to the sequential contraction
+        // within f64 association noise, including sizes that split
+        // unevenly across workers.
+        let mut rng = Xoshiro256::new(8);
+        for n in [1usize, 7, 129] {
+            let a = Mat::gaussian(n, n + 3, 1.0, &mut rng);
+            let b = Mat::gaussian(n + 3, n, 1.0, &mut rng);
+            let mut seq = 0.0;
+            for i in 0..n {
+                for (k, av) in a.row(i).iter().enumerate() {
+                    seq += av * b.at(k, i);
+                }
+            }
+            let par = trace_of_product(&a, &b);
+            assert!((par - seq).abs() < 1e-9 * (1.0 + seq.abs()), "{par} vs {seq}");
+        }
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //! the digital *hot path* goes through PJRT/XLA (rust/src/runtime/), this
 //! module is the reference the sketches are judged by.
 
+pub mod fwht;
 pub mod mat;
 pub mod matmul;
 pub mod norms;
 pub mod qr;
 pub mod svd;
 
+pub use fwht::{fwht_inplace, fwht_rows, hadamard_sign, padded_pow2};
 pub use mat::Mat;
 pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, trace_cubed, trace_of_product};
 pub use norms::{frobenius, max_abs, rel_frobenius_error, rel_scalar_error, spectral_norm};

@@ -11,10 +11,11 @@ use std::path::PathBuf;
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
-    BatchConfig, Coordinator, CoordinatorConfig, Job, Policy, PoolConfig,
+    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, Job, Policy, PoolConfig,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::perfmodel::SketchKind;
 use photonic_randnla::reports::{claims, fig1, fig2, print_rows, Row};
 use photonic_randnla::runtime::PjrtEngine;
 use photonic_randnla::workload::traces::{self, JobKind, TraceConfig};
@@ -27,6 +28,7 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
   fig2   [--no-measure] [--reps 5] [--artifacts DIR]
   claims
   serve  [--jobs 64] [--policy auto|opu|pjrt|host] [--workers 4]
+         [--sketch dense|srht|sparse|auto] (host digital operator)
          [--opu-replicas 1] [--pjrt-replicas 1] [--host-workers 1]
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
@@ -136,6 +138,16 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         "host" => Policy::ForceHost,
         other => return Err(format!("unknown policy {other}")),
     };
+    // Digital operator for the host arm: dense keeps the seed behaviour,
+    // srht/sparse force a structured fast sketch, auto lets the router
+    // price all three per signature and pick the cheapest.
+    let host_sketch = match args.get_or("sketch", "dense").as_str() {
+        "dense" => HostSketch::Fixed(SketchKind::Dense),
+        "srht" => HostSketch::Fixed(SketchKind::Srht),
+        "sparse" => HostSketch::Fixed(SketchKind::Sparse),
+        "auto" => HostSketch::Auto,
+        other => return Err(format!("unknown sketch operator {other}")),
+    };
     let artifacts = args.get("artifacts").map(PathBuf::from).or_else(|| {
         std::path::Path::new("artifacts/manifest.json")
             .exists()
@@ -157,6 +169,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
+        host_sketch,
         batch: BatchConfig::default(),
         pool,
         artifacts_dir: artifacts,
@@ -164,7 +177,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     .map_err(|e| e.to_string())?;
 
     let trace = traces::generate(&trace_cfg);
-    println!("serving {} jobs (policy {policy:?})...", trace.len());
+    println!(
+        "serving {} jobs (policy {policy:?}, host sketch {host_sketch:?})...",
+        trace.len()
+    );
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = trace.iter().map(|s| coord.submit(job_from_spec(s))).collect();
     let mut ok = 0usize;

@@ -232,6 +232,15 @@ impl Sketcher for PjrtSketcher {
     }
 }
 
+impl PjrtSketcher {
+    /// Serving-path apply: the batch already lives behind an `Arc`
+    /// (see the batcher's shard executor), so the engine thread shares
+    /// it instead of receiving a deep copy of the request payload.
+    pub fn try_project_shared(&self, a: &Arc<Mat>) -> Result<Mat> {
+        self.handle.project(self.prefix, self.g.clone(), a.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

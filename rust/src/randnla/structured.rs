@@ -1,0 +1,611 @@
+//! Structured fast sketches: SRHT and sparse-sign operators for the host
+//! projection arm.
+//!
+//! The paper's Fig. 2 argument is that dense Gaussian projection is the
+//! digital bottleneck; the RandNLA software stack's standard answer is a
+//! *structured* transform with the same JL guarantees at a fraction of
+//! the flops:
+//!
+//! - [`SrhtSketcher`] — subsampled randomized Hadamard transform
+//!   `S = R · H · D`: Rademacher column signs (D), a fast Walsh–Hadamard
+//!   transform over the padded input dimension (H, applied in
+//!   O(n log n) per column via [`crate::linalg::fwht`]), and counter-based
+//!   row sampling (R). O(k · n log n) per k-column batch instead of
+//!   O(k · m · n).
+//! - [`SparseSignSketcher`] — `s` nonzero entries of magnitude
+//!   `sqrt(m/s)` per input column (CountSketch at `s = 1`), stored in
+//!   CSR form so a projection is one O(nnz · k) sparse accumulation.
+//!
+//! Both follow the repo's Gaussian convention `E[S^T S] = m · I` (rows
+//! behave like unnormalised N(0,1) probes), so every estimator that
+//! divides by `m` — trace, approximate matmul, triangles — and every
+//! range finder (randsvd, nystrom, lstsq, features) works unchanged
+//! through the [`Sketcher`] seam.
+//!
+//! Reproducibility contract (mirrors
+//! [`CounterSketcher`](crate::randnla::backend::CounterSketcher)): every
+//! sign, sample row and sparse coordinate is a pure Philox function of
+//! `(seed, index)`, so shard cells address blocks of *one* logical
+//! operator. Output-dim shards are bit-identical to the unsharded
+//! projection; input-dim shards recombine to it up to f64 summation
+//! association — the same exactness classes the shard planner already
+//! guarantees for the counter Gaussian (see rust/src/coordinator/shard.rs).
+
+use std::ops::Range;
+
+use crate::linalg::{fwht_rows, hadamard_sign, padded_pow2, Mat};
+use crate::parallel;
+use crate::randnla::backend::Sketcher;
+use crate::rng::philox::Philox4x32;
+
+/// Philox counter tag for SRHT column signs (kept far from the
+/// row-permutation tags so the two streams never share a counter).
+const SRHT_SIGN_TAG: u64 = u64::MAX;
+/// Philox counter tag for the row-sampling permutation constants.
+const SRHT_PERM_TAG: u64 = u64::MAX - 1;
+
+/// A seeded bijection on `[0, 2^bits)`: three rounds of xor-constant,
+/// odd-multiply and xor-shift folding, every step invertible mod
+/// 2^bits. Used to sample Hadamard rows *without replacement* while
+/// staying a pure function of `(seed, i)` — the counter-addressability
+/// the shard planner needs.
+struct BitPerm {
+    bits: u32,
+    muls: [u64; 3],
+    xors: [u64; 3],
+}
+
+impl BitPerm {
+    fn new(key: &Philox4x32, bits: u32) -> Self {
+        let mut muls = [1u64; 3];
+        let mut xors = [0u64; 3];
+        for r in 0..3 {
+            let b = key.block_at(SRHT_PERM_TAG, r as u64);
+            muls[r] = (((b[0] as u64) << 32) | b[1] as u64) | 1; // odd => invertible
+            xors[r] = ((b[2] as u64) << 32) | b[3] as u64;
+        }
+        Self { bits, muls, xors }
+    }
+
+    fn apply(&self, i: u64) -> u64 {
+        if self.bits == 0 {
+            return 0;
+        }
+        let mask = (1u64 << self.bits) - 1;
+        let shift = (self.bits / 2 + 1).min(self.bits.max(1));
+        let mut x = i & mask;
+        for r in 0..3 {
+            x ^= self.xors[r] & mask;
+            x = x.wrapping_mul(self.muls[r]) & mask;
+            x ^= x >> shift;
+        }
+        x & mask
+    }
+}
+
+/// Subsampled randomized Hadamard transform operator (m x n).
+///
+/// Entry `S[i, j] = d_j * (-1)^{popcount(r_i & j)}` with `d_j` Rademacher
+/// signs and `r_i` rows of the `n_pad = 2^ceil(log2 n)` Hadamard matrix
+/// sampled without replacement through a seeded bit-permutation (rows
+/// cycle when m > n_pad). Entries are +-1, so `E[S^T S] = m I` like the
+/// dense Gaussian convention.
+pub struct SrhtSketcher {
+    m: usize,
+    n: usize,
+    n_pad: usize,
+    /// Rademacher column signs d_j (Philox, tag [`SRHT_SIGN_TAG`]).
+    signs: Vec<f64>,
+    /// Sampled Hadamard rows r_i = perm(i mod n_pad).
+    rows: Vec<u32>,
+}
+
+impl SrhtSketcher {
+    pub fn new(m: usize, n: usize, seed: u64) -> Self {
+        assert!(m > 0 && n > 0, "SRHT needs positive dims, got {m}x{n}");
+        let key = Philox4x32::new(seed);
+        let n_pad = padded_pow2(n);
+        let signs = (0..n)
+            .map(|j| {
+                let lane = key.block_at(SRHT_SIGN_TAG, (j / 4) as u64)[j % 4];
+                if lane & 1 == 0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        let perm = BitPerm::new(&key, n_pad.trailing_zeros());
+        let rows = (0..m).map(|i| perm.apply((i % n_pad) as u64) as u32).collect();
+        Self { m, n, n_pad, signs, rows }
+    }
+
+    /// Padded Hadamard dimension (power of two >= n).
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+
+    /// The Hadamard row output row `i` samples (distinct while
+    /// `i < n_pad`, cycling after).
+    pub fn sampled_row(&self, i: usize) -> usize {
+        self.rows[i] as usize
+    }
+
+    /// Random access to operator entry (i, j) — used when a shard cell
+    /// materialises a block instead of running the fast path.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.m && j < self.n);
+        self.signs[j] * hadamard_sign(self.rows[i] as usize, j)
+    }
+
+    /// Materialise the (rows x cols) block of the operator. Blocks of
+    /// one seed tile together exactly, like `CounterSketcher::block`.
+    pub fn block(&self, rows: Range<usize>, cols: Range<usize>) -> Mat {
+        debug_assert!(rows.end <= self.m && cols.end <= self.n);
+        Mat::from_fn(rows.len(), cols.len(), |bi, bj| {
+            self.entry(rows.start + bi, cols.start + bj)
+        })
+    }
+
+    /// The full explicit operator (tests / small problems).
+    pub fn matrix(&self) -> Mat {
+        self.block(0..self.m, 0..self.n)
+    }
+
+    /// Fast structured apply of one shard cell: rows `out` of the
+    /// operator against input rows `inp` (x holds exactly those rows).
+    ///
+    /// The cell embeds its input rows at their global positions of the
+    /// zero-padded n_pad buffer, so input-dim shards sum to the full
+    /// projection by FWHT linearity; output-dim shards read disjoint
+    /// sampled rows of the *same* transform and are bit-identical to the
+    /// unsharded apply.
+    pub fn project_block(&self, out: Range<usize>, inp: Range<usize>, x: &Mat) -> Mat {
+        debug_assert!(out.end <= self.m && inp.end <= self.n);
+        assert_eq!(x.rows, inp.len(), "cell input rows {} != range {:?}", x.rows, inp);
+        let k = x.cols;
+        if k == 0 {
+            return Mat::zeros(out.len(), 0);
+        }
+        // Scratch: one row per data column (contiguous butterflies),
+        // scaled by the Rademacher signs at the global coordinates.
+        let mut buf = Mat::zeros(k, self.n_pad);
+        for (li, j) in inp.clone().enumerate() {
+            let s = self.signs[j];
+            let xrow = x.row(li);
+            for (c, &xv) in xrow.iter().enumerate() {
+                buf.data[c * self.n_pad + j] = s * xv;
+            }
+        }
+        fwht_rows(&mut buf);
+        let mut y = Mat::zeros(out.len(), k);
+        for (oi, i) in out.clone().enumerate() {
+            let r = self.rows[i] as usize;
+            let yrow = y.row_mut(oi);
+            for (c, dst) in yrow.iter_mut().enumerate() {
+                *dst = buf.at(c, r);
+            }
+        }
+        y
+    }
+}
+
+impl Sketcher for SrhtSketcher {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn project(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.n, "SRHT input rows {} != n {}", a.rows, self.n);
+        self.project_block(0..self.m, 0..self.n, a)
+    }
+
+    fn label(&self) -> &'static str {
+        "srht"
+    }
+}
+
+/// Sparse-sign sketching operator (m x n): each input column holds `s`
+/// nonzeros of magnitude `sqrt(m/s)` at distinct counter-drawn rows
+/// (CountSketch when `s = 1`). `E[S^T S] = m I`, matching the repo's
+/// Gaussian scale convention.
+///
+/// Stored CSR (row-major over output rows) so the apply parallelises
+/// over disjoint output bands in O(nnz · k); the per-column definition
+/// stays the source of truth, which is what makes input-dim shards
+/// (column subsets) exact.
+pub struct SparseSignSketcher {
+    m: usize,
+    n: usize,
+    s: usize,
+    /// CSR row starts (len m + 1).
+    row_ptr: Vec<usize>,
+    /// Column index per nonzero, ascending within each row.
+    cols: Vec<u32>,
+    /// Signed magnitude per nonzero (+- sqrt(m/s)).
+    vals: Vec<f64>,
+}
+
+impl SparseSignSketcher {
+    pub fn new(m: usize, n: usize, s: usize, seed: u64) -> Self {
+        assert!(m > 0 && n > 0, "sparse sign needs positive dims, got {m}x{n}");
+        assert!((1..=m).contains(&s), "nnz/col {s} must be in 1..={m}");
+        let rows_key = Philox4x32::new(seed ^ 0xA5A5_5A5A_0F0F_F0F0);
+        let signs_key = Philox4x32::new(seed ^ 0x3C3C_C3C3_69A5_5A96);
+        let scale = (m as f64 / s as f64).sqrt();
+
+        // Column-major definition: s distinct rows per column by
+        // counter-based rejection (deterministic in (seed, j, draw#)).
+        let mut col_rows = vec![0u32; n * s];
+        let mut col_vals = vec![0.0f64; n * s];
+        for j in 0..n {
+            let taken = &mut col_rows[j * s..(j + 1) * s];
+            let mut chosen = 0usize;
+            let mut ctr = 0u64;
+            while chosen < s {
+                let block = rows_key.block_at(j as u64, ctr);
+                ctr += 1;
+                for &w in &block {
+                    // Lemire map of the 32-bit word onto [0, m).
+                    let r = ((w as u64 * m as u64) >> 32) as u32;
+                    if taken[..chosen].contains(&r) {
+                        continue;
+                    }
+                    taken[chosen] = r;
+                    chosen += 1;
+                    if chosen == s {
+                        break;
+                    }
+                }
+            }
+            for t in 0..s {
+                let lane = signs_key.block_at(j as u64, (t / 4) as u64)[t % 4];
+                col_vals[j * s + t] = if lane & 1 == 0 { scale } else { -scale };
+            }
+        }
+
+        // Convert to CSR; filling in ascending j keeps each row's
+        // accumulation order fixed regardless of sharding.
+        let mut row_ptr = vec![0usize; m + 1];
+        for &r in &col_rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut fill = row_ptr.clone();
+        let mut cols = vec![0u32; n * s];
+        let mut vals = vec![0.0f64; n * s];
+        for j in 0..n {
+            for t in 0..s {
+                let r = col_rows[j * s + t] as usize;
+                cols[fill[r]] = j as u32;
+                vals[fill[r]] = col_vals[j * s + t];
+                fill[r] += 1;
+            }
+        }
+        Self { m, n, s, row_ptr, cols, vals }
+    }
+
+    /// Nonzeros per input column.
+    pub fn nnz_per_col(&self) -> usize {
+        self.s
+    }
+
+    /// Random access to operator entry (i, j) (zero when absent).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.m && j < self.n);
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        match self.cols[lo..hi].binary_search(&(j as u32)) {
+            Ok(at) => self.vals[lo + at],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Materialise the (rows x cols) block of the operator.
+    pub fn block(&self, rows: Range<usize>, cols: Range<usize>) -> Mat {
+        debug_assert!(rows.end <= self.m && cols.end <= self.n);
+        Mat::from_fn(rows.len(), cols.len(), |bi, bj| {
+            self.entry(rows.start + bi, cols.start + bj)
+        })
+    }
+
+    /// The full explicit operator (tests / small problems).
+    pub fn matrix(&self) -> Mat {
+        self.block(0..self.m, 0..self.n)
+    }
+
+    /// O(nnz · k) apply of one shard cell: output rows `out`, input rows
+    /// `inp` (x holds exactly those rows). Parallel over disjoint output
+    /// bands; each row accumulates its nonzeros in ascending column
+    /// order, so results are thread-count independent and output-dim
+    /// shards are bit-identical to the unsharded apply.
+    pub fn project_block(&self, out: Range<usize>, inp: Range<usize>, x: &Mat) -> Mat {
+        debug_assert!(out.end <= self.m && inp.end <= self.n);
+        assert_eq!(x.rows, inp.len(), "cell input rows {} != range {:?}", x.rows, inp);
+        let k = x.cols;
+        let mut y = Mat::zeros(out.len(), k);
+        if k == 0 || out.is_empty() {
+            return y;
+        }
+        const ROWS_PER_TASK: usize = 64;
+        let out0 = out.start;
+        parallel::par_chunks_mut(&mut y.data, ROWS_PER_TASK * k, |start, band| {
+            let first = out0 + start / k;
+            let rows_here = band.len() / k;
+            for li in 0..rows_here {
+                let gi = first + li;
+                let yrow = &mut band[li * k..(li + 1) * k];
+                for idx in self.row_ptr[gi]..self.row_ptr[gi + 1] {
+                    let j = self.cols[idx] as usize;
+                    if !inp.contains(&j) {
+                        continue;
+                    }
+                    let v = self.vals[idx];
+                    let xrow = x.row(j - inp.start);
+                    for (acc, xv) in yrow.iter_mut().zip(xrow) {
+                        *acc += v * xv;
+                    }
+                }
+            }
+        });
+        y
+    }
+}
+
+impl Sketcher for SparseSignSketcher {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn project(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.n, "sparse-sign input rows {} != n {}", a.rows, self.n);
+        self.project_block(0..self.m, 0..self.n, a)
+    }
+
+    fn label(&self) -> &'static str {
+        "sparse-sign"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, rel_frobenius_error};
+    use crate::parallel::split_ranges;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn srht_project_matches_explicit_operator() {
+        let s = SrhtSketcher::new(12, 37, 7);
+        let mut rng = Xoshiro256::new(1);
+        let x = Mat::gaussian(37, 5, 1.0, &mut rng);
+        let fast = s.project(&x);
+        let explicit = matmul(&s.matrix(), &x);
+        let rel = rel_frobenius_error(&explicit, &fast);
+        assert!(rel < 1e-12, "fast apply drifted from the operator: {rel}");
+        assert_eq!(s.label(), "srht");
+        assert_eq!((s.m(), s.n()), (12, 37));
+        assert_eq!(s.n_pad(), 64);
+    }
+
+    #[test]
+    fn srht_basis_vectors_read_operator_columns_exactly() {
+        // H, D entries are +-1 integers: projecting e_j sums small
+        // integers, so the fast path must equal entry() bit for bit.
+        let s = SrhtSketcher::new(9, 21, 3);
+        for j in [0usize, 1, 7, 20] {
+            let e = Mat::from_fn(21, 1, |i, _| if i == j { 1.0 } else { 0.0 });
+            let col = s.project(&e);
+            for i in 0..9 {
+                assert_eq!(col.at(i, 0), s.entry(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn srht_blocks_tile_exactly() {
+        let s = SrhtSketcher::new(16, 30, 11);
+        let full = s.matrix();
+        let b = s.block(3..11, 5..23);
+        for i in 0..8 {
+            for j in 0..18 {
+                assert_eq!(b.at(i, j), full.at(3 + i, 5 + j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn srht_output_dim_shards_bit_identical() {
+        let s = SrhtSketcher::new(24, 50, 5);
+        let mut rng = Xoshiro256::new(2);
+        let x = Mat::gaussian(50, 3, 1.0, &mut rng);
+        let full = s.project(&x);
+        for shards in 1..=4 {
+            let mut at = 0usize;
+            for r in split_ranges(24, shards) {
+                let part = s.project_block(r.clone(), 0..50, &x);
+                for (bi, i) in r.enumerate() {
+                    assert_eq!(part.row(bi), full.row(i), "shards={shards} row {i}");
+                }
+                at += part.rows;
+            }
+            assert_eq!(at, 24);
+        }
+    }
+
+    #[test]
+    fn srht_input_dim_shards_sum_to_full() {
+        let s = SrhtSketcher::new(16, 40, 9);
+        let mut rng = Xoshiro256::new(3);
+        let x = Mat::gaussian(40, 4, 1.0, &mut rng);
+        let full = s.project(&x);
+        for shards in 2..=4 {
+            let mut acc = Mat::zeros(16, 4);
+            for r in split_ranges(40, shards) {
+                let xb = Mat::from_fn(r.len(), 4, |i, j| x.at(r.start + i, j));
+                acc = acc.add(&s.project_block(0..16, r, &xb));
+            }
+            let rel = rel_frobenius_error(&full, &acc);
+            assert!(rel < 1e-12, "input shards={shards} drifted {rel}");
+        }
+    }
+
+    #[test]
+    fn srht_samples_rows_without_replacement() {
+        // Up to n_pad output rows, every sampled Hadamard row is
+        // distinct (the bit-permutation is a bijection); past n_pad the
+        // sampling cycles.
+        let s = SrhtSketcher::new(64, 60, 17); // n_pad = 64 = m
+        let mut seen = vec![false; 64];
+        for i in 0..64 {
+            let r = s.sampled_row(i);
+            assert!(r < 64);
+            assert!(!seen[r], "row {r} sampled twice");
+            seen[r] = true;
+        }
+        let wide = SrhtSketcher::new(70, 60, 17);
+        assert_eq!(wide.sampled_row(64), wide.sampled_row(0), "cycling past n_pad");
+    }
+
+    #[test]
+    fn srht_deterministic_by_seed() {
+        let a = SrhtSketcher::new(8, 33, 42);
+        let b = SrhtSketcher::new(8, 33, 42);
+        assert_eq!(a.matrix(), b.matrix());
+        let c = SrhtSketcher::new(8, 33, 43);
+        assert_ne!(a.matrix(), c.matrix());
+    }
+
+    #[test]
+    fn srht_gram_matches_gaussian_scale_convention() {
+        // E[S^T S] = m I: diagonal entries are exactly m (rows are +-1),
+        // and off-diagonals stay small relative to m.
+        let m = 512;
+        let n = 32;
+        let s = SrhtSketcher::new(m, n, 5);
+        let g = s.matrix();
+        let gtg = crate::linalg::matmul_tn(&g, &g).scale(1.0 / m as f64);
+        for i in 0..n {
+            assert!((gtg.at(i, i) - 1.0).abs() < 1e-12, "diag {i}: {}", gtg.at(i, i));
+        }
+        let err = rel_frobenius_error(&Mat::eye(n), &gtg);
+        assert!(err < 0.35, "S^T S / m far from I: {err}");
+    }
+
+    #[test]
+    fn sparse_each_column_has_s_distinct_nonzeros() {
+        let m = 24;
+        let n = 40;
+        let s = 6;
+        let sk = SparseSignSketcher::new(m, n, s, 11);
+        let g = sk.matrix();
+        let scale = (m as f64 / s as f64).sqrt();
+        for j in 0..n {
+            let nz: Vec<f64> = (0..m).map(|i| g.at(i, j)).filter(|v| *v != 0.0).collect();
+            assert_eq!(nz.len(), s, "column {j}");
+            for v in &nz {
+                assert!((v.abs() - scale).abs() < 1e-12, "column {j} magnitude {v}");
+            }
+            // Column norm^2 is exactly m: the estimator scale convention.
+            let norm2: f64 = nz.iter().map(|v| v * v).sum();
+            assert!((norm2 - m as f64).abs() < 1e-9, "column {j} norm2 {norm2}");
+        }
+    }
+
+    #[test]
+    fn sparse_project_matches_explicit_operator() {
+        let sk = SparseSignSketcher::new(14, 33, 4, 5);
+        let mut rng = Xoshiro256::new(6);
+        let x = Mat::gaussian(33, 5, 1.0, &mut rng);
+        let fast = sk.project(&x);
+        let explicit = matmul(&sk.matrix(), &x);
+        let rel = rel_frobenius_error(&explicit, &fast);
+        assert!(rel < 1e-12, "sparse apply drifted: {rel}");
+        assert_eq!(sk.label(), "sparse-sign");
+        assert_eq!(sk.nnz_per_col(), 4);
+    }
+
+    #[test]
+    fn sparse_shards_recombine() {
+        let sk = SparseSignSketcher::new(20, 36, 3, 8);
+        let mut rng = Xoshiro256::new(7);
+        let x = Mat::gaussian(36, 2, 1.0, &mut rng);
+        let full = sk.project(&x);
+        // Output-dim: bit-identical stacking.
+        for r in split_ranges(20, 3) {
+            let part = sk.project_block(r.clone(), 0..36, &x);
+            for (bi, i) in r.enumerate() {
+                assert_eq!(part.row(bi), full.row(i));
+            }
+        }
+        // Input-dim: exact sum up to f64 association.
+        let mut acc = Mat::zeros(20, 2);
+        for r in split_ranges(36, 3) {
+            let xb = Mat::from_fn(r.len(), 2, |i, j| x.at(r.start + i, j));
+            acc = acc.add(&sk.project_block(0..20, r, &xb));
+        }
+        assert!(rel_frobenius_error(&full, &acc) < 1e-12);
+    }
+
+    #[test]
+    fn sparse_deterministic_by_seed() {
+        let a = SparseSignSketcher::new(10, 25, 3, 99);
+        let b = SparseSignSketcher::new(10, 25, 3, 99);
+        assert_eq!(a.matrix(), b.matrix());
+        let c = SparseSignSketcher::new(10, 25, 3, 100);
+        assert_ne!(a.matrix(), c.matrix());
+    }
+
+    #[test]
+    fn sparse_countsketch_edge_s_equals_one_and_s_equals_m() {
+        let cs = SparseSignSketcher::new(8, 20, 1, 1);
+        let g = cs.matrix();
+        for j in 0..20 {
+            let nz = (0..8).filter(|&i| g.at(i, j) != 0.0).count();
+            assert_eq!(nz, 1, "countsketch column {j}");
+        }
+        // Fully dense column: rejection loop must still terminate.
+        let dense = SparseSignSketcher::new(4, 6, 4, 2);
+        let gd = dense.matrix();
+        for j in 0..6 {
+            let nz = (0..4).filter(|&i| gd.at(i, j) != 0.0).count();
+            assert_eq!(nz, 4, "dense column {j}");
+        }
+    }
+
+    #[test]
+    fn structured_sketchers_preserve_norms_in_expectation() {
+        // JL over Philox seeds: E[||Sx||^2 / m] = ||x||^2 for both
+        // structured families (quick in-module check; the heavier sweep
+        // lives in tests/prop_sketch_stats.rs).
+        let n = 48;
+        let m = 32;
+        let mut rng = Xoshiro256::new(9);
+        let x = Mat::gaussian(n, 1, 1.0, &mut rng);
+        let x2: f64 = x.data.iter().map(|v| v * v).sum();
+        let trials = 60u64;
+        let mut srht_acc = 0.0;
+        let mut sparse_acc = 0.0;
+        for t in 0..trials {
+            let sr = SrhtSketcher::new(m, n, 500 + t);
+            srht_acc += sr.project(&x).data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+            let sp = SparseSignSketcher::new(m, n, 4, 900 + t);
+            sparse_acc += sp.project(&x).data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+        }
+        let srht_mean = srht_acc / trials as f64;
+        let sparse_mean = sparse_acc / trials as f64;
+        assert!((srht_mean - x2).abs() / x2 < 0.15, "srht JL: {srht_mean} vs {x2}");
+        assert!((sparse_mean - x2).abs() / x2 < 0.15, "sparse JL: {sparse_mean} vs {x2}");
+    }
+}

@@ -22,9 +22,10 @@ enum Request {
     /// Run a scalar-producing artifact.
     RunScalar { name: String, mats: Vec<Mat>, resp: mpsc::Sender<Result<f64>> },
     /// Padded projection (see ArtifactRegistry::run_projection_padded).
-    /// The operator rides behind an `Arc` so long-lived sketchers never
-    /// deep-copy it per call.
-    Project { prefix: &'static str, r: Arc<Mat>, a: Mat, resp: mpsc::Sender<Result<Mat>> },
+    /// Both operands ride behind `Arc`s: long-lived sketchers never
+    /// deep-copy the operator, and the serving path shares the merged
+    /// request batch with the engine thread instead of cloning it.
+    Project { prefix: &'static str, r: Arc<Mat>, a: Arc<Mat>, resp: mpsc::Sender<Result<Mat>> },
     /// Bucket query.
     Buckets { prefix: &'static str, resp: mpsc::Sender<Vec<(usize, usize)>> },
     /// Unit listing.
@@ -78,7 +79,7 @@ impl PjrtEngine {
                         }
                         Request::Project { prefix, r, a, resp } => {
                             let out = registry
-                                .run_projection_padded(prefix, r.as_ref(), &a)
+                                .run_projection_padded(prefix, r.as_ref(), a.as_ref())
                                 .map(|(m, _)| m);
                             let _ = resp.send(out);
                         }
@@ -136,12 +137,19 @@ impl PjrtHandle {
         self.roundtrip(|resp| Request::RunScalar { name: name.to_string(), mats, resp })?
     }
 
-    /// Padded/cropped projection through the bucket ladder. The operator
-    /// is accepted as anything convertible to `Arc<Mat>`: persistent
-    /// sketchers pass their shared `Arc` (zero-copy), one-shot callers
-    /// can still pass an owned `Mat`.
-    pub fn project(&self, prefix: &'static str, r: impl Into<Arc<Mat>>, a: Mat) -> Result<Mat> {
+    /// Padded/cropped projection through the bucket ladder. Both
+    /// operands are accepted as anything convertible to `Arc<Mat>`:
+    /// persistent sketchers pass their shared operator `Arc` and the
+    /// serving path passes the merged batch `Arc` (zero-copy); one-shot
+    /// callers can still pass owned `Mat`s.
+    pub fn project(
+        &self,
+        prefix: &'static str,
+        r: impl Into<Arc<Mat>>,
+        a: impl Into<Arc<Mat>>,
+    ) -> Result<Mat> {
         let r = r.into();
+        let a = a.into();
         self.roundtrip(|resp| Request::Project { prefix, r, a, resp })?
     }
 

@@ -1,0 +1,226 @@
+//! Property tests for the structured sketch operators (testkit, our
+//! proptest-lite): JL-style norm preservation in expectation over Philox
+//! seeds, estimator accuracy through the Sketcher seam, and the shard
+//! exactness contract for SRHT — mirroring tests/prop_sharding.rs:
+//!
+//! - output-dim sharding is **bit-identical** to the unsharded fast
+//!   apply for 1–4 shards (each output row reads one sampled row of the
+//!   same transform);
+//! - input-dim sharding recombines to the unsharded projection up to
+//!   f64 summation association (<= 1e-12 relative), bit-identically to
+//!   the cell-sum reference folded in plan order.
+
+use photonic_randnla::linalg::{matmul, rel_frobenius_error, Mat};
+use photonic_randnla::parallel::split_ranges;
+use photonic_randnla::randnla::backend::Sketcher;
+use photonic_randnla::randnla::structured::{SparseSignSketcher, SrhtSketcher};
+use photonic_randnla::randnla::{hutchinson, randsvd, RandSvdOpts};
+use photonic_randnla::testkit::check;
+use photonic_randnla::workload::{matrix_with_spectrum, psd_matrix, Spectrum};
+
+#[test]
+fn prop_srht_preserves_norms_in_expectation() {
+    // JL over Philox seeds: E[||Sx||^2 / m] = ||x||^2, averaged over a
+    // band of seeds for each random instance.
+    check("SRHT JL norm preservation", 12, |g| {
+        let n = g.usize(8, 160);
+        let m = g.usize(8, 96);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, 1, 1.0, &mut rng);
+        let x2: f64 = x.data.iter().map(|v| v * v).sum();
+        let trials = 64u64;
+        let base = g.u64(0..=u64::MAX / 2);
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let s = SrhtSketcher::new(m, n, base + t);
+            acc += s.project(&x).data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+        }
+        let mean = acc / trials as f64;
+        let rel = (mean - x2).abs() / x2;
+        if rel > 0.25 {
+            return Err(format!("JL violated at n={n} m={m}: {mean} vs {x2} ({rel})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_sign_preserves_norms_in_expectation() {
+    check("sparse-sign JL norm preservation", 12, |g| {
+        let n = g.usize(8, 160);
+        let m = g.usize(8, 96);
+        let s = g.usize(1, 8.min(m));
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, 1, 1.0, &mut rng);
+        let x2: f64 = x.data.iter().map(|v| v * v).sum();
+        let trials = 64u64;
+        let base = g.u64(0..=u64::MAX / 2);
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let sk = SparseSignSketcher::new(m, n, s, base + t);
+            acc += sk.project(&x).data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+        }
+        let mean = acc / trials as f64;
+        let rel = (mean - x2).abs() / x2;
+        if rel > 0.3 {
+            return Err(format!("JL violated at n={n} m={m} s={s}: {mean} vs {x2} ({rel})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_srht_bit_identical_1_to_4_output_shards() {
+    check("1-4 SRHT output shards == unsharded fast apply, bitwise", 30, |g| {
+        let m = g.usize(4, 40);
+        let n = g.usize(4, 60);
+        let k = g.usize(1, 6);
+        let shards = g.usize(1, 4.min(m));
+        let seed = g.u64(0..=u64::MAX);
+        let s = SrhtSketcher::new(m, n, seed);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let full = s.project(&x);
+        let mut stacked = Mat::zeros(m, k);
+        for r in split_ranges(m, shards) {
+            let part = s.project_block(r.clone(), 0..n, &x);
+            for (bi, i) in r.enumerate() {
+                stacked.row_mut(i).copy_from_slice(part.row(bi));
+            }
+        }
+        if stacked != full {
+            return Err(format!(
+                "output-dim SRHT sharding not bit-identical at m={m} n={n} shards={shards}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_srht_input_shards_recombine_exactly() {
+    check("1-4 SRHT input shards: fold reference, ~unsharded", 30, |g| {
+        let m = g.usize(4, 32);
+        let n = g.usize(4, 64);
+        let k = g.usize(1, 6);
+        let shards = g.usize(1, 4.min(n));
+        let seed = g.u64(0..=u64::MAX);
+        let s = SrhtSketcher::new(m, n, seed);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let full = s.project(&x);
+
+        // Fold partials in plan order, twice: determinism must be bitwise.
+        let fold = |sk: &SrhtSketcher| {
+            let mut acc = Mat::zeros(m, k);
+            for r in split_ranges(n, shards) {
+                let xb = Mat::from_fn(r.len(), k, |i, j| x.at(r.start + i, j));
+                acc = acc.add(&sk.project_block(0..m, r, &xb));
+            }
+            acc
+        };
+        let a = fold(&s);
+        let b = fold(&SrhtSketcher::new(m, n, seed));
+        if a != b {
+            return Err(format!("SRHT shard fold nondeterministic at m={m} n={n}"));
+        }
+        let rel = rel_frobenius_error(&full, &a);
+        if rel > 1e-12 {
+            return Err(format!("input-dim SRHT drifted {rel} at m={m} n={n} shards={shards}"));
+        }
+        if shards == 1 && a != full {
+            return Err("single input shard must be bit-identical".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_structured_blocks_match_explicit_operator() {
+    // A materialised block times the matching input slice equals the
+    // fast apply of that cell (the reroute-to-materialised escape hatch
+    // and the fast path describe one operator).
+    check("block matmul == fast apply per cell", 20, |g| {
+        let m = g.usize(4, 24);
+        let n = g.usize(4, 48);
+        let k = g.usize(1, 4);
+        let seed = g.u64(0..=u64::MAX);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let srht = SrhtSketcher::new(m, n, seed);
+        let sparse = SparseSignSketcher::new(m, n, g.usize(1, 4.min(m)), seed);
+
+        let lo = g.usize(0, n - 1);
+        let hi = g.usize(lo + 1, n);
+        let xb = Mat::from_fn(hi - lo, k, |i, j| x.at(lo + i, j));
+        let fast = srht.project_block(0..m, lo..hi, &xb);
+        let explicit = matmul(&srht.block(0..m, lo..hi), &xb);
+        let rel = rel_frobenius_error(&explicit, &fast);
+        if rel > 1e-10 {
+            return Err(format!("srht cell {lo}..{hi} drifted {rel}"));
+        }
+        let fast = sparse.project_block(0..m, lo..hi, &xb);
+        let explicit = matmul(&sparse.block(0..m, lo..hi), &xb);
+        let rel = rel_frobenius_error(&explicit, &fast);
+        if rel > 1e-10 {
+            return Err(format!("sparse cell {lo}..{hi} drifted {rel}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn srht_hutchinson_unbiased_within_seed_tolerance() {
+    // Same shape and tolerance as the dense trace test
+    // (src/randnla/trace.rs::unbiased): mean over seeds within 3%.
+    let a = psd_matrix(48, 96, 1);
+    let truth = a.trace();
+    let mut acc = 0.0;
+    let trials = 400u64;
+    for t in 0..trials {
+        let s = SrhtSketcher::new(16, 48, 2000 + t);
+        acc += hutchinson(&s, &a);
+    }
+    let mean = acc / trials as f64;
+    let rel = (mean - truth).abs() / truth;
+    assert!(rel < 0.03, "srht hutchinson bias {rel}");
+}
+
+#[test]
+fn sparse_hutchinson_unbiased_within_seed_tolerance() {
+    let a = psd_matrix(48, 96, 2);
+    let truth = a.trace();
+    let mut acc = 0.0;
+    let trials = 400u64;
+    for t in 0..trials {
+        let s = SparseSignSketcher::new(16, 48, 4, 3000 + t);
+        acc += hutchinson(&s, &a);
+    }
+    let mean = acc / trials as f64;
+    let rel = (mean - truth).abs() / truth;
+    assert!(rel < 0.05, "sparse hutchinson bias {rel}");
+}
+
+#[test]
+fn srht_randsvd_recovers_low_rank_within_seed_tolerance() {
+    // Same tolerance as the dense randsvd test
+    // (src/randnla/randsvd.rs::recovers_low_rank_matrix).
+    let n = 64;
+    let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank: 8, noise: 1e-3 }, 1);
+    let s = SrhtSketcher::new(24, n, 2);
+    let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+    let rec = photonic_randnla::randnla::randsvd::reconstruct(&r);
+    let rel = rel_frobenius_error(&a, &rec);
+    assert!(rel < 0.02, "srht randsvd recovery: {rel}");
+}
+
+#[test]
+fn sparse_randsvd_recovers_low_rank_within_seed_tolerance() {
+    let n = 64;
+    let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank: 8, noise: 1e-3 }, 3);
+    let s = SparseSignSketcher::new(24, n, 8, 4);
+    let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+    let rec = photonic_randnla::randnla::randsvd::reconstruct(&r);
+    let rel = rel_frobenius_error(&a, &rec);
+    assert!(rel < 0.02, "sparse randsvd recovery: {rel}");
+}
