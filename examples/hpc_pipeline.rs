@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         policy: Policy::Auto,
         batch: BatchConfig::default(),
         artifacts_dir: Some(artifacts),
+        ..Default::default()
     })?;
     println!("coordinator up: 4 workers, Auto routing, PJRT engine attached\n");
 
@@ -61,6 +62,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     let mut jobs: Vec<(Job, Truth, &'static str)> = Vec::new();
+    let mut session_only = 0usize;
     for spec in &trace {
         match spec.kind {
             JobKind::SketchMatmul => {
@@ -96,7 +98,19 @@ fn main() -> anyhow::Result<()> {
                     "randsvd",
                 ));
             }
+            // Session-API-only kinds (handle-based JobSpec; exercised by
+            // `photon serve` and tests/integration_session.rs) — this
+            // example sticks to the legacy owned-Mat surface.
+            JobKind::LstsqSolve | JobKind::NystromApprox => session_only += 1,
         }
+    }
+    if session_only > 0 {
+        println!(
+            "({session_only}/{} trace jobs are session-API kinds (lstsq/nystrom); \
+             this legacy-surface example runs the remaining {})",
+            trace.len(),
+            trace.len() - session_only
+        );
     }
     // The real dataset leg: karate-club triangles. One sketch at n=34 is
     // high-variance, so submit repeated measurements: padding the

@@ -1,0 +1,151 @@
+//! Bench: client-plane submit throughput — store handles vs inline
+//! operand shipping.
+//!
+//! ```bash
+//! cargo bench --bench client_plane [-- --quick]
+//! ```
+//!
+//! The session API's hot-path claim: k jobs against one uploaded
+//! operand should cost k `Arc` clones, not k deep copies. Two series
+//! over the same projection workload (one n x 64 operand, k jobs):
+//!
+//! - **inline** — the legacy path: every `submit(Job)` re-ships the
+//!   operand (the client clones it to keep its copy, exactly what a
+//!   multi-pass algorithm without handles must do);
+//! - **handle** — upload once, then submit k `JobSpec`s referencing the
+//!   store handle (payload rides one `Arc` end-to-end).
+//!
+//! The timed region is submission only (what the client observes as
+//! submit latency); jobs drain outside it. Acceptance gate: handle-path
+//! submit throughput >= 2x inline (1.5x in --quick smoke mode).
+//! Emits BENCH_client_plane.json.
+
+use std::time::Instant;
+
+use photonic_randnla::bench::{self, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, JobSpec, OperandRef, Policy, PoolConfig,
+    SubmitOptions,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+fn summary(name: String, iters: u64, ns_per_op: f64) -> Summary {
+    Summary {
+        name,
+        iters,
+        mean_ns: ns_per_op,
+        p50_ns: ns_per_op,
+        p99_ns: ns_per_op,
+        min_ns: ns_per_op,
+        max_ns: ns_per_op,
+    }
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 1024 } else { 4096 };
+    let cols = 64usize;
+    let m = 16usize;
+    let k = if quick { 16u64 } else { 32 };
+    let reps = if quick { 3 } else { 5 };
+    let mib = (n * cols * 8) as f64 / (1024.0 * 1024.0);
+
+    println!(
+        "== client plane: {k} jobs sharing one {n} x {cols} operand ({mib:.1} MiB), m = {m} =="
+    );
+
+    let c = coordinator();
+    let mut rng = Xoshiro256::new(1);
+    let x = Mat::gaussian(n, cols, 1.0, &mut rng);
+
+    // Inline path: every submit re-ships the operand.
+    let mut inline_best = f64::INFINITY;
+    let mut inline_result: Option<Mat> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..k)
+            .map(|_| c.submit(Job::Projection { data: x.clone(), m }))
+            .collect();
+        let dt = t0.elapsed().as_nanos() as f64;
+        inline_best = inline_best.min(dt / k as f64);
+        for t in tickets {
+            let r = t.wait().expect("inline job");
+            inline_result.get_or_insert_with(|| r.payload.matrix().unwrap().clone());
+        }
+    }
+
+    // Handle path: upload once, k Arc-clean submissions.
+    let id = c.upload(x.clone()).expect("upload");
+    let mut handle_best = f64::INFINITY;
+    let mut handle_result: Option<Mat> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..k)
+            .map(|_| {
+                c.submit_spec(
+                    JobSpec::Projection { data: OperandRef::Handle(id), m },
+                    SubmitOptions::default(),
+                )
+                .expect("handle submit")
+            })
+            .collect();
+        let dt = t0.elapsed().as_nanos() as f64;
+        handle_best = handle_best.min(dt / k as f64);
+        for t in tickets {
+            let r = t.wait().expect("handle job");
+            handle_result.get_or_insert_with(|| r.payload.matrix().unwrap().clone());
+        }
+    }
+
+    // Same signature => same operator: both paths must agree bitwise.
+    assert_eq!(
+        inline_result.unwrap(),
+        handle_result.unwrap(),
+        "handle and inline submissions of one operand diverged"
+    );
+
+    let rows = vec![
+        summary(format!("inline submit n={n} k={cols}"), k, inline_best),
+        summary(format!("handle submit n={n} k={cols}"), k, handle_best),
+    ];
+    bench::report("client plane submit path", &rows);
+    if let Err(e) = bench::write_json("BENCH_client_plane.json", &rows) {
+        eprintln!("(could not write BENCH_client_plane.json: {e})");
+    }
+
+    println!(
+        "\nstore: {} operands resident, {} B",
+        c.store().len(),
+        c.store().bytes()
+    );
+    c.shutdown();
+
+    let speedup = inline_best / handle_best;
+    let floor = if quick { 1.5 } else { 2.0 };
+    println!(
+        "\nheadline: handle-path submit is {speedup:.1}x the inline path \
+         (gate >= {floor}x): {}",
+        if speedup >= floor { "PASS" } else { "FAIL" }
+    );
+    if speedup < floor {
+        eprintln!("FAIL: handle-path speedup {speedup:.1}x below the {floor}x gate");
+        std::process::exit(1);
+    }
+}

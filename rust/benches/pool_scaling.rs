@@ -51,6 +51,7 @@ fn opu_coordinator(replicas: usize, aperture: Option<(usize, usize)>) -> Coordin
             ..Default::default()
         },
         artifacts_dir: None,
+        ..Default::default()
     })
     .expect("coordinator start")
 }

@@ -95,9 +95,11 @@ fn cell_seed(base: u64, (n, m): (usize, usize), out: &Range<usize>, inp: &Range<
     ((b[0] as u64) << 32) | b[1] as u64
 }
 
-/// One projection request (n x k columns -> m x k).
+/// One projection request (n x k columns -> m x k). The payload is
+/// shared, never owned: handle-path submissions ride the store's `Arc`
+/// all the way to the shard executor.
 struct ProjReq {
-    data: Mat,
+    data: Arc<Mat>,
     m: usize,
     resp: mpsc::Sender<Result<ProjResp>>,
     enqueued: Instant,
@@ -107,6 +109,16 @@ struct ProjReq {
 pub struct ProjResp {
     pub result: Mat,
     pub device: Device,
+    /// The arm the scheduler *planned* this batch on. This — not the
+    /// realized `device`, which reroutes can mask — is what fixes the
+    /// logical operator at batch level: host-planned cells realise the
+    /// schedule's host sketch, accelerator-planned cells their arm's
+    /// operator (or its dense-G equivalent on a PJRT->host fallback).
+    /// Multi-pass estimators compare it across passes to catch arm
+    /// flips. Scope: an *intra-pass* OPU->host cell fallback (dense G
+    /// spliced next to OPU-medium cells) is the pre-existing documented
+    /// degraded-reroute mode and is not visible here.
+    pub planned: Device,
     /// Total columns in the merged batch this rode in.
     pub batch_cols: usize,
 }
@@ -117,14 +129,41 @@ pub struct ProjectionService {
     tx: mpsc::Sender<ProjReq>,
 }
 
+/// An in-flight projection request: submit now, [`wait`](Self::wait)
+/// later. Submitting a job's independent same-signature requests before
+/// waiting lets the batcher merge them into one frame batch (one
+/// flush, one operator application — the fused-projection latency).
+pub struct ProjPending {
+    rx: mpsc::Receiver<Result<ProjResp>>,
+}
+
+impl ProjPending {
+    /// Block until the projection completes.
+    pub fn wait(self) -> Result<ProjResp> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("projection service dropped request"))?
+    }
+}
+
 impl ProjectionService {
-    /// Blocking projection through the batcher.
-    pub fn project(&self, data: Mat, m: usize) -> Result<ProjResp> {
+    /// Blocking projection through the batcher. Accepts an owned `Mat`
+    /// (wrapped once) or an already-shared `Arc<Mat>` (store handles —
+    /// no payload copy anywhere between submit and the shard executor).
+    pub fn project(&self, data: impl Into<Arc<Mat>>, m: usize) -> Result<ProjResp> {
+        self.project_async(data, m)?.wait()
+    }
+
+    /// Non-blocking submit; the result arrives on the returned pending
+    /// handle. Use for a job's *independent* projections (ApproxMatmul's
+    /// A and B, Lstsq's A and b) so they ride one merged batch instead
+    /// of two sequential flush round-trips.
+    pub fn project_async(&self, data: impl Into<Arc<Mat>>, m: usize) -> Result<ProjPending> {
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(ProjReq { data, m, resp: tx, enqueued: Instant::now() })
+            .send(ProjReq { data: data.into(), m, resp: tx, enqueued: Instant::now() })
             .map_err(|_| anyhow::anyhow!("projection service is down"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("projection service dropped request"))?
+        Ok(ProjPending { rx })
     }
 
     /// Start the service; returns (client, join-handle). Dropping every
@@ -230,16 +269,27 @@ fn flush(
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_cols.fetch_add(total_cols as u64, Ordering::Relaxed);
 
-    // Concatenate all columns into one (n x total_cols) frame batch.
-    let mut merged = Mat::zeros(n, total_cols);
-    let mut at = 0usize;
-    for req in &group.reqs {
-        for i in 0..n {
-            let src = req.data.row(i);
-            merged.row_mut(i)[at..at + req.data.cols].copy_from_slice(src);
+    // Single-request batches (the handle-path fast case) share the
+    // request's `Arc` outright — zero operand copies between client and
+    // shard executor. Only a genuine multi-request merge concatenates
+    // columns into a fresh frame batch, and that copy is accounted.
+    let merged: Arc<Mat> = if group.reqs.len() == 1 {
+        group.reqs[0].data.clone()
+    } else {
+        let mut merged = Mat::zeros(n, total_cols);
+        let mut at = 0usize;
+        let mut copied = 0u64;
+        for req in &group.reqs {
+            for i in 0..n {
+                let src = req.data.row(i);
+                merged.row_mut(i)[at..at + req.data.cols].copy_from_slice(src);
+            }
+            at += req.data.cols;
+            copied += (req.data.data.len() * std::mem::size_of::<f64>()) as u64;
         }
-        at += req.data.cols;
-    }
+        metrics.operand_bytes_copied.fetch_add(copied, Ordering::Relaxed);
+        Arc::new(merged)
+    };
 
     // Kind affinity: later batches of this signature stay on the arm the
     // first batch used while it remains viable. Each arm realises a
@@ -265,7 +315,7 @@ fn flush(
         metrics: metrics.clone(),
         schedule,
         sig: (n, m),
-        merged: Arc::new(merged),
+        merged,
         reqs: group.reqs,
         total_cols,
     };
@@ -303,6 +353,7 @@ struct FlushJob {
 
 impl FlushJob {
     fn run(self) {
+        let planned = self.schedule.kind;
         let outcome = execute_schedule(
             &self.exec,
             &self.pool,
@@ -311,7 +362,7 @@ impl FlushJob {
             self.sig,
             &self.merged,
         );
-        scatter(&self.metrics, self.sig, self.total_cols, self.reqs, outcome);
+        scatter(&self.metrics, self.sig, planned, self.total_cols, self.reqs, outcome);
     }
 }
 
@@ -456,6 +507,7 @@ fn run_shard(
 fn scatter(
     metrics: &Metrics,
     (_n, m): (usize, usize),
+    planned: Device,
     total_cols: usize,
     reqs: Vec<ProjReq>,
     outcome: Result<(Mat, Device)>,
@@ -463,6 +515,17 @@ fn scatter(
     match outcome {
         Ok((result, device)) => {
             metrics.record_device(device);
+            if reqs.len() == 1 {
+                // The whole batch is this requester's slice: move it.
+                let req = reqs.into_iter().next().unwrap();
+                let _ = req.resp.send(Ok(ProjResp {
+                    result,
+                    device,
+                    planned,
+                    batch_cols: total_cols,
+                }));
+                return;
+            }
             let mut at = 0usize;
             for req in reqs {
                 let k = req.data.cols;
@@ -476,12 +539,16 @@ fn scatter(
                 let _ = req.resp.send(Ok(ProjResp {
                     result: slice,
                     device,
+                    planned,
                     batch_cols: total_cols,
                 }));
             }
         }
         Err(e) => {
-            metrics.failed.fetch_add(1, Ordering::Relaxed);
+            // No failed-counter bump here: the error propagates to each
+            // requester, and the worker counts failures per *job* — a
+            // batch-level increment on top would over-count (failed
+            // could exceed submitted).
             let msg = format!("device execution failed: {e}");
             for req in reqs {
                 let _ = req.resp.send(Err(anyhow::anyhow!(msg.clone())));

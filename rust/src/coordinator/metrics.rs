@@ -24,6 +24,23 @@ pub struct Metrics {
     pub shards_dispatched: AtomicU64,
     /// Shard executions rerouted off a failed replica.
     pub rerouted: AtomicU64,
+    /// Jobs cancelled before touching a device (queue removal or
+    /// worker-side flag check).
+    pub cancelled: AtomicU64,
+    /// Jobs whose deadline expired while queued (failed fast, no device).
+    pub deadline_expired: AtomicU64,
+    /// Submissions refused by the bounded admission queue.
+    pub rejected_busy: AtomicU64,
+    /// Gauge: Interactive-class jobs queued right now.
+    pub queue_interactive: AtomicU64,
+    /// Gauge: Batch-class jobs queued right now.
+    pub queue_batch: AtomicU64,
+    /// Gauge: bytes resident in the operand store.
+    pub store_bytes: AtomicU64,
+    /// Operand payload bytes deep-copied on the serving path: only
+    /// multi-request batch merges and plan stage-output publication
+    /// copy; the handle-path single-request pipeline keeps this at zero.
+    pub operand_bytes_copied: AtomicU64,
     latency_hist: LatencyHist,
 }
 
@@ -89,7 +106,8 @@ impl Metrics {
         format!(
             "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
              devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
-             p50={}us p99={}us",
+             qos: cancelled={} expired={} busy={} queue_i={} queue_b={} \
+             store_bytes={} copied_bytes={} p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -101,6 +119,13 @@ impl Metrics {
             self.sharded_jobs.load(Ordering::Relaxed),
             self.shards_dispatched.load(Ordering::Relaxed),
             self.rerouted.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.rejected_busy.load(Ordering::Relaxed),
+            self.queue_interactive.load(Ordering::Relaxed),
+            self.queue_batch.load(Ordering::Relaxed),
+            self.store_bytes.load(Ordering::Relaxed),
+            self.operand_bytes_copied.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
         )
@@ -150,5 +175,24 @@ mod tests {
         assert!(r.contains("p99="));
         assert!(r.contains("sharded="));
         assert!(r.contains("rerouted="));
+        assert!(r.contains("cancelled="));
+        assert!(r.contains("expired="));
+        assert!(r.contains("busy="));
+        assert!(r.contains("queue_i="));
+        assert!(r.contains("store_bytes="));
+    }
+
+    #[test]
+    fn qos_counters_and_gauges_report() {
+        let m = Metrics::new();
+        m.cancelled.fetch_add(2, Ordering::Relaxed);
+        m.rejected_busy.fetch_add(1, Ordering::Relaxed);
+        m.queue_interactive.store(3, Ordering::Relaxed);
+        m.store_bytes.store(4096, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("cancelled=2"), "{r}");
+        assert!(r.contains("busy=1"), "{r}");
+        assert!(r.contains("queue_i=3"), "{r}");
+        assert!(r.contains("store_bytes=4096"), "{r}");
     }
 }

@@ -30,24 +30,43 @@
 //! - [`batcher`] — dynamic batching of projection requests (the
 //!   throughput lever; projection is column-wise so merging is exact),
 //!   shard execution with reroute-on-failure, recombination;
-//! - [`server`]  — worker pool decomposing RandNLA jobs;
-//! - [`metrics`] — counters + latency percentiles + shard/reroute stats;
-//! - [`request`] — job/response types.
+//! - [`server`]  — session front door + worker pool decomposing RandNLA
+//!   jobs;
+//! - [`store`]   — the server-resident operand store: upload once, get a
+//!   cheap [`OperandId`](store::OperandId), submit by handle (the
+//!   Arc-clean path — no request-payload deep copy anywhere between
+//!   client and shard executor);
+//! - [`plan`]    — composable job plans: DAGs of [`JobSpec`] stages
+//!   whose matrix outputs land back in the store as fresh handles;
+//! - [`queue`]   — bounded two-level (Interactive/Batch) admission queue
+//!   with cancellation: the QoS layer (deadlines, backpressure);
+//! - [`metrics`] — counters + latency percentiles + shard/reroute/QoS
+//!   stats and store/queue gauges;
+//! - [`request`] — job/response/QoS types (legacy [`Job`] shim included).
 //!
-//! See `docs/architecture.md` for the full request-path walkthrough.
+//! See `docs/architecture.md` for the full request-path walkthrough and
+//! the "Sessions, handles, and plans" migration guide.
 
 pub mod batcher;
 pub mod metrics;
+pub mod plan;
 pub mod pool;
+pub(crate) mod queue;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod store;
 
 pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use metrics::Metrics;
+pub use plan::{Plan, PlanError, PlanResult};
 pub use pool::{DeviceId, DevicePool, PoolConfig, PoolDevice};
-pub use request::{Device, Job, JobResponse, Payload, Ticket};
+pub use request::{
+    Device, Job, JobError, JobResponse, JobSpec, OperandRef, Payload, Priority, SubmitError,
+    SubmitOptions, Ticket,
+};
 pub use router::{Availability, HostSketch, Policy, Route, Router, Schedule, ShardAssignment};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use shard::{recombine, ShardCell, ShardPlan};
+pub use store::{mat_bytes, OperandId, OperandStore, StoreError};

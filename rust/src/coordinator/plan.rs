@@ -1,0 +1,206 @@
+//! Composable job plans: a small DAG of [`JobSpec`] stages whose matrix
+//! outputs land back in the [`OperandStore`] as fresh handles.
+//!
+//! A stage's operands may reference uploaded handles, inline matrices,
+//! or — the point of a plan — the output of an earlier stage via
+//! [`OperandRef::Stage`]. The canonical use is the paper's shared-sketch
+//! pattern: compute one symmetric sketch `B = (G A G^T)/m` (two
+//! projection passes) and feed *both* the trace and the triangle
+//! estimator from it, instead of re-projecting per estimator:
+//!
+//! ```no_run
+//! use photonic_randnla::coordinator::{
+//!     Coordinator, CoordinatorConfig, JobSpec, OperandRef, Plan, SubmitOptions,
+//! };
+//! use photonic_randnla::linalg::Mat;
+//!
+//! let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
+//! let a = coord.upload(Mat::eye(64)).unwrap();
+//!
+//! let mut plan = Plan::new();
+//! let sketch = plan.stage(JobSpec::SymmetricSketch { a: OperandRef::Handle(a), m: 16 });
+//! plan.stage(JobSpec::TraceOf { b: OperandRef::Stage(sketch) });
+//! plan.stage(JobSpec::TrianglesOf { b: OperandRef::Stage(sketch) });
+//!
+//! let result = coord.run_plan(&plan, SubmitOptions::default()).unwrap();
+//! let trace = result.responses[1].payload.scalar().unwrap();
+//! let triangles = result.responses[2].payload.scalar().unwrap();
+//! result.free_stage_handles(coord.store());
+//! # let _ = (trace, triangles);
+//! ```
+//!
+//! Similarly, a `RandSvd { publish_q: true, .. }` stage leaves its range
+//! basis Q in the store for *follow-up submissions* to reuse — its
+//! handle rides back in that stage's [`JobResponse::aux`] once the plan
+//! returns. Note that only Matrix-payload stages become `Stage(i)`
+//! operands; an svd/scalar/vector stage has no stage handle, so wire Q
+//! into a second plan (or plain `submit_spec`) via its aux handle.
+//!
+//! [`OperandStore`]: crate::coordinator::store::OperandStore
+//! [`JobResponse::aux`]: crate::coordinator::request::JobResponse
+
+use crate::coordinator::request::{JobResponse, JobSpec, OperandRef};
+use crate::coordinator::store::{OperandId, OperandStore};
+
+/// An ordered list of stages forming a DAG: stage i may reference any
+/// stage j < i through [`OperandRef::Stage`].
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    stages: Vec<JobSpec>,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a stage; the returned index is what later stages name via
+    /// [`OperandRef::Stage`].
+    pub fn stage(&mut self, spec: JobSpec) -> usize {
+        self.stages.push(spec);
+        self.stages.len() - 1
+    }
+
+    pub fn stages(&self) -> &[JobSpec] {
+        &self.stages
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+/// Why a plan could not even be scheduled (distinct from a stage
+/// failing at execution, which surfaces as that stage's
+/// [`JobError`](crate::coordinator::request::JobError)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// `Stage(i)` referenced a stage at or after the referencing one.
+    ForwardStageRef { stage: usize, referenced: usize },
+    /// `Stage(i)` referenced a stage that produced no matrix output
+    /// (scalar / vector / svd payloads don't become operands).
+    NoMatrixOutput { stage: usize, referenced: usize },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::ForwardStageRef { stage, referenced } => write!(
+                f,
+                "plan stage {stage} references stage {referenced}, which has not run yet"
+            ),
+            PlanError::NoMatrixOutput { stage, referenced } => write!(
+                f,
+                "plan stage {stage} references stage {referenced}, which produced no matrix"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Everything a finished plan produced.
+#[derive(Debug)]
+pub struct PlanResult {
+    /// Per-stage responses, in stage order.
+    pub responses: Vec<JobResponse>,
+    /// Per-stage store handle of the stage's matrix output (`None` for
+    /// scalar/vector/svd stages). The plan's submitter owns these; free
+    /// them (plus any `aux` handles) when done.
+    pub stage_handles: Vec<Option<OperandId>>,
+}
+
+impl PlanResult {
+    /// The store handle stage `i` published, if any.
+    pub fn handle(&self, stage: usize) -> Option<OperandId> {
+        self.stage_handles.get(stage).copied().flatten()
+    }
+
+    /// Free every stage-output and aux handle this plan created.
+    pub fn free_stage_handles(&self, store: &OperandStore) {
+        for h in self.stage_handles.iter().flatten() {
+            store.free(*h);
+        }
+        for resp in &self.responses {
+            for (_, h) in &resp.aux {
+                store.free(*h);
+            }
+        }
+    }
+}
+
+/// Rewrite one stage's `Stage(i)` references into store handles using
+/// the outputs of already-executed stages.
+pub(crate) fn resolve_stage_refs(
+    stage_idx: usize,
+    spec: JobSpec,
+    handles: &[Option<OperandId>],
+) -> Result<JobSpec, PlanError> {
+    spec.try_map_refs(&mut |r| match r {
+        OperandRef::Stage(i) => {
+            if i >= stage_idx || i >= handles.len() {
+                return Err(PlanError::ForwardStageRef { stage: stage_idx, referenced: i });
+            }
+            match handles[i] {
+                Some(id) => Ok(OperandRef::Handle(id)),
+                None => Err(PlanError::NoMatrixOutput { stage: stage_idx, referenced: i }),
+            }
+        }
+        other => Ok(other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_are_sequential() {
+        let mut p = Plan::new();
+        assert!(p.is_empty());
+        let s0 = p.stage(JobSpec::TraceOf { b: OperandRef::Handle(OperandId(1)) });
+        let s1 = p.stage(JobSpec::TraceOf { b: OperandRef::Stage(s0) });
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn forward_and_self_references_rejected() {
+        let spec = JobSpec::TraceOf { b: OperandRef::Stage(1) };
+        let err = resolve_stage_refs(1, spec.clone(), &[Some(OperandId(9))]).unwrap_err();
+        assert_eq!(err, PlanError::ForwardStageRef { stage: 1, referenced: 1 });
+        let err = resolve_stage_refs(0, spec, &[]).unwrap_err();
+        assert!(matches!(err, PlanError::ForwardStageRef { .. }));
+    }
+
+    #[test]
+    fn scalar_stage_cannot_be_an_operand() {
+        let spec = JobSpec::TraceOf { b: OperandRef::Stage(0) };
+        let err = resolve_stage_refs(1, spec, &[None]).unwrap_err();
+        assert_eq!(err, PlanError::NoMatrixOutput { stage: 1, referenced: 0 });
+    }
+
+    #[test]
+    fn handle_refs_pass_through_untouched() {
+        let spec = JobSpec::SymmetricSketch { a: OperandRef::Handle(OperandId(4)), m: 8 };
+        let resolved = resolve_stage_refs(2, spec, &[Some(OperandId(1)), None]).unwrap();
+        match resolved {
+            JobSpec::SymmetricSketch { a: OperandRef::Handle(OperandId(4)), m: 8 } => {}
+            other => panic!("handle ref rewritten: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stage_refs_resolve_to_prior_handles() {
+        let spec = JobSpec::TrianglesOf { b: OperandRef::Stage(0) };
+        let resolved = resolve_stage_refs(2, spec, &[Some(OperandId(7)), None]).unwrap();
+        match resolved {
+            JobSpec::TrianglesOf { b: OperandRef::Handle(OperandId(7)) } => {}
+            other => panic!("stage ref unresolved: {other:?}"),
+        }
+    }
+}

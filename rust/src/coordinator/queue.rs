@@ -1,0 +1,287 @@
+//! Bounded two-level admission queue — the QoS half of the session API.
+//!
+//! Replaces the coordinator's unbounded mpsc job channel with an
+//! explicitly scheduled structure:
+//!
+//! - **two priority classes**: `Interactive` pops strictly before
+//!   `Batch`; each class is FIFO within itself (no starvation *within* a
+//!   class; Interactive is allowed to starve Batch by design — it is the
+//!   latency tier);
+//! - **bounded admission**: `push` refuses with
+//!   [`SubmitError::Busy`] once `cap` jobs of that *class* are queued
+//!   (backpressure instead of unbounded memory growth under overload;
+//!   per-class caps mean a Batch pile can never lock the latency tier
+//!   out of admission);
+//! - **cancellation**: a still-queued job can be removed by id — its
+//!   ticket resolves to [`JobError::Cancelled`] and it never reaches a
+//!   worker;
+//! - **pause/resume**: admission-control gate used for drains and for
+//!   deterministic QoS tests (workers sleep while paused; `close`
+//!   overrides pause so shutdown always drains).
+//!
+//! Queue-depth gauges per class are mirrored into [`Metrics`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{JobError, JobResponse, Priority, ResolvedJob, SubmitError};
+
+/// One admitted job: resolved operands + QoS envelope + response channel.
+pub(crate) struct QueuedJob {
+    pub id: u64,
+    pub job: ResolvedJob,
+    pub resp: mpsc::Sender<Result<JobResponse, JobError>>,
+    /// The single submit timestamp: both the client's `Ticket` and the
+    /// server's `latency_us` derive from this instant.
+    pub submitted: Instant,
+    pub deadline: Option<Duration>,
+    pub cancelled: Arc<AtomicBool>,
+    pub priority: Priority,
+}
+
+struct State {
+    interactive: VecDeque<QueuedJob>,
+    batch: VecDeque<QueuedJob>,
+    closed: bool,
+    paused: bool,
+}
+
+/// The coordinator's admission queue.
+pub(crate) struct JobQueue {
+    state: Mutex<State>,
+    cond: Condvar,
+    cap: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl JobQueue {
+    pub fn new(cap: usize, metrics: Arc<Metrics>) -> Self {
+        Self {
+            state: Mutex::new(State {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+                paused: false,
+            }),
+            cond: Condvar::new(),
+            cap: cap.max(1),
+            metrics,
+        }
+    }
+
+    /// Admit a job, or refuse with typed backpressure. On refusal the
+    /// job is handed back so the caller controls its response channel.
+    ///
+    /// The cap bounds each class *separately*: a pile of Batch work at
+    /// cap cannot lock the latency tier out of admission (total queued
+    /// memory stays bounded by 2·cap).
+    pub fn push(&self, job: QueuedJob) -> Result<(), (QueuedJob, SubmitError)> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err((job, SubmitError::Closed));
+        }
+        let depth = match job.priority {
+            Priority::Interactive => s.interactive.len(),
+            Priority::Batch => s.batch.len(),
+        };
+        if depth >= self.cap {
+            return Err((job, SubmitError::Busy { depth, cap: self.cap }));
+        }
+        match job.priority {
+            Priority::Interactive => {
+                s.interactive.push_back(job);
+                self.metrics.queue_interactive.fetch_add(1, Ordering::Relaxed);
+            }
+            Priority::Batch => {
+                s.batch.push_back(job);
+                self.metrics.queue_batch.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        drop(s);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue: Interactive strictly first, then Batch. Returns
+    /// `None` once the queue is closed *and* drained (worker exit
+    /// signal). Paused queues hold workers unless closed.
+    pub fn pop(&self) -> Option<QueuedJob> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let drainable = !s.paused || s.closed;
+            if drainable {
+                if let Some(job) = s.interactive.pop_front() {
+                    self.metrics.queue_interactive.fetch_sub(1, Ordering::Relaxed);
+                    return Some(job);
+                }
+                if let Some(job) = s.batch.pop_front() {
+                    self.metrics.queue_batch.fetch_sub(1, Ordering::Relaxed);
+                    return Some(job);
+                }
+                if s.closed {
+                    return None;
+                }
+            }
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+
+    /// Remove a still-queued job by id. The job's ticket resolves to
+    /// [`JobError::Cancelled`]; returns `false` if the job already left
+    /// the queue (running or finished — in-flight cancellation is then
+    /// down to the worker-side flag check).
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let removed = match remove_by_id(&mut s.interactive, id) {
+            Some(j) => {
+                self.metrics.queue_interactive.fetch_sub(1, Ordering::Relaxed);
+                Some(j)
+            }
+            None => match remove_by_id(&mut s.batch, id) {
+                Some(j) => {
+                    self.metrics.queue_batch.fetch_sub(1, Ordering::Relaxed);
+                    Some(j)
+                }
+                None => None,
+            },
+        };
+        drop(s);
+        match removed {
+            Some(job) => {
+                self.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                let _ = job.resp.send(Err(JobError::Cancelled));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop admitting; wake every worker. Queued jobs still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Hold workers (admission continues). Used for drains and to make
+    /// QoS ordering tests deterministic.
+    pub fn pause(&self) {
+        self.state.lock().unwrap().paused = true;
+    }
+
+    pub fn resume(&self) {
+        self.state.lock().unwrap().paused = false;
+        self.cond.notify_all();
+    }
+
+    /// (interactive, batch) queued right now.
+    pub fn depths(&self) -> (usize, usize) {
+        let s = self.state.lock().unwrap();
+        (s.interactive.len(), s.batch.len())
+    }
+}
+
+fn remove_by_id(q: &mut VecDeque<QueuedJob>, id: u64) -> Option<QueuedJob> {
+    let at = q.iter().position(|j| j.id == id)?;
+    q.remove(at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    type RespRx = mpsc::Receiver<Result<JobResponse, JobError>>;
+
+    fn job(id: u64, priority: Priority) -> (QueuedJob, RespRx) {
+        let (tx, rx) = mpsc::channel();
+        (
+            QueuedJob {
+                id,
+                job: ResolvedJob::TraceOf { b: Arc::new(Mat::eye(2)) },
+                resp: tx,
+                submitted: Instant::now(),
+                deadline: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                priority,
+            },
+            rx,
+        )
+    }
+
+    fn queue(cap: usize) -> JobQueue {
+        JobQueue::new(cap, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn interactive_pops_before_earlier_batch() {
+        let q = queue(16);
+        let (b, _rb) = job(1, Priority::Batch);
+        let (i, _ri) = job(2, Priority::Interactive);
+        q.push(b).unwrap();
+        q.push(i).unwrap();
+        assert_eq!(q.depths(), (1, 1));
+        assert_eq!(q.pop().unwrap().id, 2, "interactive must overtake");
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn bounded_admission_is_per_class() {
+        let q = queue(2);
+        q.push(job(1, Priority::Batch).0).unwrap();
+        q.push(job(2, Priority::Batch).0).unwrap();
+        let (j3, _r3) = job(3, Priority::Batch);
+        let (_back, err) = q.push(j3).unwrap_err();
+        assert_eq!(err, SubmitError::Busy { depth: 2, cap: 2 });
+        // A full Batch pile must not lock the latency tier out.
+        q.push(job(4, Priority::Interactive).0).unwrap();
+        assert_eq!(q.depths(), (1, 2));
+    }
+
+    #[test]
+    fn cancel_removes_queued_job_and_resolves_ticket() {
+        let q = queue(4);
+        let (j, rx) = job(7, Priority::Batch);
+        q.push(j).unwrap();
+        assert!(q.cancel(7));
+        assert!(!q.cancel(7), "second cancel finds nothing");
+        assert_eq!(rx.recv().unwrap().unwrap_err(), JobError::Cancelled);
+        assert_eq!(q.depths(), (0, 0));
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = queue(4);
+        q.push(job(1, Priority::Batch).0).unwrap();
+        q.close();
+        assert!(q.pop().is_some(), "queued work drains after close");
+        assert!(q.pop().is_none(), "then workers are told to exit");
+        let (j, _rx) = job(2, Priority::Batch);
+        assert!(matches!(q.push(j), Err((_, SubmitError::Closed))));
+    }
+
+    #[test]
+    fn pause_holds_pop_until_resume() {
+        let q = Arc::new(queue(4));
+        q.pause();
+        q.push(job(1, Priority::Batch).0).unwrap();
+        let qq = q.clone();
+        let h = std::thread::spawn(move || qq.pop().map(|j| j.id));
+        // The popper must still be blocked when we resume it.
+        std::thread::sleep(Duration::from_millis(20));
+        q.resume();
+        assert_eq!(h.join().unwrap(), Some(1));
+    }
+
+    #[test]
+    fn close_overrides_pause() {
+        let q = queue(4);
+        q.pause();
+        q.push(job(1, Priority::Batch).0).unwrap();
+        q.close();
+        assert!(q.pop().is_some(), "shutdown must drain a paused queue");
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,7 +1,28 @@
 //! Request/response types of the coordination layer.
+//!
+//! Two generations of the client surface live here:
+//!
+//! - [`JobSpec`] — the session API: operands are [`OperandRef`]s, i.e.
+//!   cheap handles into the coordinator's [`OperandStore`], inline
+//!   matrices (compat), or outputs of earlier [`Plan`] stages. Submission
+//!   carries [`SubmitOptions`] (priority / deadline) and can be refused
+//!   with a typed [`SubmitError`] (bounded-queue backpressure).
+//! - [`Job`] — the original owned-`Mat` enum, kept as a compatibility
+//!   shim: [`Job::into_spec`] translates every variant into the
+//!   equivalent inline `JobSpec`, so legacy call sites ride the new
+//!   submit path unchanged.
+//!
+//! [`OperandStore`]: crate::coordinator::store::OperandStore
+//! [`Plan`]: crate::coordinator::plan::Plan
 
-use std::time::Instant;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Weak};
+use std::time::{Duration, Instant};
 
+use crate::coordinator::plan::PlanError;
+use crate::coordinator::queue::JobQueue;
+use crate::coordinator::store::OperandId;
 use crate::linalg::Mat;
 
 /// Which device executed the randomization step.
@@ -25,7 +46,8 @@ impl Device {
     }
 }
 
-/// A RandNLA job submitted to the coordinator.
+/// A RandNLA job submitted to the coordinator (legacy owned-`Mat` API;
+/// new call sites should upload operands and submit a [`JobSpec`]).
 #[derive(Clone, Debug)]
 pub enum Job {
     /// Raw Gaussian projection of (n x k) data to m dims.
@@ -72,13 +94,284 @@ impl Job {
             Job::RandSvd { .. } => "randsvd",
         }
     }
+
+    /// Translate into the session API: every operand becomes an inline
+    /// reference (promoted to a server-side `Arc` on submit — the
+    /// internal upload-then-spec path), so no legacy call site is
+    /// stranded mid-migration.
+    pub fn into_spec(self) -> JobSpec {
+        match self {
+            Job::Projection { data, m } => {
+                JobSpec::Projection { data: OperandRef::Inline(data), m }
+            }
+            Job::ApproxMatmul { a, b, m } => JobSpec::ApproxMatmul {
+                a: OperandRef::Inline(a),
+                b: OperandRef::Inline(b),
+                m,
+            },
+            Job::Trace { a, m } => JobSpec::Trace { a: OperandRef::Inline(a), m },
+            Job::Triangles { adjacency, m } => {
+                JobSpec::Triangles { adjacency: OperandRef::Inline(adjacency), m }
+            }
+            Job::RandSvd { a, rank, oversample, power_iters } => JobSpec::RandSvd {
+                a: OperandRef::Inline(a),
+                rank,
+                oversample,
+                power_iters,
+                publish_q: false,
+            },
+        }
+    }
 }
+
+/// How a [`JobSpec`] names an operand.
+#[derive(Clone, Debug)]
+pub enum OperandRef {
+    /// A server-resident operand previously uploaded to the store.
+    Handle(OperandId),
+    /// An operand shipped with the request (compat shim; promoted to an
+    /// anonymous server-side `Arc` at submit time).
+    Inline(Mat),
+    /// The matrix output of an earlier stage of the same [`Plan`]
+    /// (resolved to a store handle as the plan executes; invalid in a
+    /// bare `submit_spec`).
+    ///
+    /// [`Plan`]: crate::coordinator::plan::Plan
+    Stage(usize),
+}
+
+/// A RandNLA job in the session API: operands are references, never
+/// payload copies.
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// Raw Gaussian projection of (n x k) data to m dims.
+    Projection { data: OperandRef, m: usize },
+    /// Approximate A^T B at sketch size m (shared operator via the
+    /// signature seed — A and B are projected independently).
+    ApproxMatmul { a: OperandRef, b: OperandRef, m: usize },
+    /// Hutchinson trace at sketch size m (A square).
+    Trace { a: OperandRef, m: usize },
+    /// Triangle estimate of an adjacency matrix at sketch size m.
+    Triangles { adjacency: OperandRef, m: usize },
+    /// The shared intermediate behind Trace/Triangles, exposed as its
+    /// own stage: B = (G A G^T)/m. Feed the resulting handle to
+    /// [`JobSpec::TraceOf`] / [`JobSpec::TrianglesOf`] to reuse one
+    /// projection pass across estimators.
+    SymmetricSketch { a: OperandRef, m: usize },
+    /// trace(B) of an already-computed symmetric sketch — pure host
+    /// algebra, touches no projection device.
+    TraceOf { b: OperandRef },
+    /// trace(B^3)/6 of an already-computed symmetric sketch.
+    TrianglesOf { b: OperandRef },
+    /// Randomized SVD; with `publish_q` the range basis Q lands in the
+    /// store and its handle rides back in [`JobResponse::aux`].
+    RandSvd {
+        a: OperandRef,
+        rank: usize,
+        oversample: usize,
+        power_iters: usize,
+        publish_q: bool,
+    },
+    /// Sketch-and-solve least squares: argmin_x ||A x - b|| on the
+    /// compressed system (GA) x ~ (Gb), m sketch rows.
+    Lstsq { a: OperandRef, b: Vec<f64>, m: usize },
+    /// Nyström PSD approximation (A G^T)(G A G^T)^+(G A) at sketch
+    /// size m with spectral-cutoff pseudo-inverse.
+    Nystrom { a: OperandRef, m: usize, rcond: f64 },
+}
+
+impl JobSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::Projection { .. } => "projection",
+            JobSpec::ApproxMatmul { .. } => "approx_matmul",
+            JobSpec::Trace { .. } => "trace",
+            JobSpec::Triangles { .. } => "triangles",
+            JobSpec::SymmetricSketch { .. } => "symmetric_sketch",
+            JobSpec::TraceOf { .. } => "trace_of",
+            JobSpec::TrianglesOf { .. } => "triangles_of",
+            JobSpec::RandSvd { .. } => "randsvd",
+            JobSpec::Lstsq { .. } => "lstsq",
+            JobSpec::Nystrom { .. } => "nystrom",
+        }
+    }
+
+    /// Rewrite every operand reference through `f` (how plan execution
+    /// turns `Stage(i)` references into store handles).
+    pub(crate) fn try_map_refs<E>(
+        self,
+        f: &mut impl FnMut(OperandRef) -> Result<OperandRef, E>,
+    ) -> Result<JobSpec, E> {
+        Ok(match self {
+            JobSpec::Projection { data, m } => JobSpec::Projection { data: f(data)?, m },
+            JobSpec::ApproxMatmul { a, b, m } => {
+                JobSpec::ApproxMatmul { a: f(a)?, b: f(b)?, m }
+            }
+            JobSpec::Trace { a, m } => JobSpec::Trace { a: f(a)?, m },
+            JobSpec::Triangles { adjacency, m } => {
+                JobSpec::Triangles { adjacency: f(adjacency)?, m }
+            }
+            JobSpec::SymmetricSketch { a, m } => JobSpec::SymmetricSketch { a: f(a)?, m },
+            JobSpec::TraceOf { b } => JobSpec::TraceOf { b: f(b)? },
+            JobSpec::TrianglesOf { b } => JobSpec::TrianglesOf { b: f(b)? },
+            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q } => {
+                JobSpec::RandSvd { a: f(a)?, rank, oversample, power_iters, publish_q }
+            }
+            JobSpec::Lstsq { a, b, m } => JobSpec::Lstsq { a: f(a)?, b, m },
+            JobSpec::Nystrom { a, m, rcond } => JobSpec::Nystrom { a: f(a)?, m, rcond },
+        })
+    }
+}
+
+/// A [`JobSpec`] with every operand resolved to a shared `Arc<Mat>` —
+/// what actually travels the queue. Resolution happens at submit time,
+/// so freeing a handle after submit cannot strand an in-flight job.
+#[derive(Clone, Debug)]
+pub(crate) enum ResolvedJob {
+    Projection { data: Arc<Mat>, m: usize },
+    ApproxMatmul { a: Arc<Mat>, b: Arc<Mat>, m: usize },
+    Trace { a: Arc<Mat>, m: usize },
+    Triangles { adjacency: Arc<Mat>, m: usize },
+    SymmetricSketch { a: Arc<Mat>, m: usize },
+    TraceOf { b: Arc<Mat> },
+    TrianglesOf { b: Arc<Mat> },
+    RandSvd { a: Arc<Mat>, rank: usize, oversample: usize, power_iters: usize, publish_q: bool },
+    Lstsq { a: Arc<Mat>, b: Vec<f64>, m: usize },
+    Nystrom { a: Arc<Mat>, m: usize, rcond: f64 },
+}
+
+impl ResolvedJob {
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            ResolvedJob::Projection { .. } => "projection",
+            ResolvedJob::ApproxMatmul { .. } => "approx_matmul",
+            ResolvedJob::Trace { .. } => "trace",
+            ResolvedJob::Triangles { .. } => "triangles",
+            ResolvedJob::SymmetricSketch { .. } => "symmetric_sketch",
+            ResolvedJob::TraceOf { .. } => "trace_of",
+            ResolvedJob::TrianglesOf { .. } => "triangles_of",
+            ResolvedJob::RandSvd { .. } => "randsvd",
+            ResolvedJob::Lstsq { .. } => "lstsq",
+            ResolvedJob::Nystrom { .. } => "nystrom",
+        }
+    }
+}
+
+/// Two-level scheduling class for the coordinator's admission queue.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: always dequeued before any queued Batch work.
+    Interactive,
+    /// Throughput traffic (the default; FIFO among itself).
+    #[default]
+    Batch,
+}
+
+/// Per-submission quality-of-service options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// Fail fast with [`JobError::DeadlineExceeded`] if the job is still
+    /// queued this long after submit — expired work never touches a
+    /// device.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn interactive() -> Self {
+        Self { priority: Priority::Interactive, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Typed submission refusal (the request never entered the queue).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded admission queue is full — backpressure; retry later or
+    /// shed load.
+    Busy { depth: usize, cap: usize },
+    /// Coordinator is shutting down.
+    Closed,
+    /// A `Handle` reference names no resident operand.
+    UnknownOperand(OperandId),
+    /// A `Stage` reference is only meaningful inside a [`Plan`].
+    ///
+    /// [`Plan`]: crate::coordinator::plan::Plan
+    StageRefOutsidePlan(usize),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Busy { depth, cap } => {
+                write!(f, "admission queue full ({depth}/{cap}): backpressure, retry later")
+            }
+            SubmitError::Closed => write!(f, "coordinator queue is closed"),
+            SubmitError::UnknownOperand(id) => {
+                write!(f, "unknown operand {id} (freed or never uploaded)")
+            }
+            SubmitError::StageRefOutsidePlan(i) => {
+                write!(f, "stage reference #{i} outside a plan")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Typed job outcome failures (what a [`Ticket`] can resolve to).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// The job was cancelled before it ran.
+    Cancelled,
+    /// The job's deadline expired while it was queued; no device was
+    /// touched.
+    DeadlineExceeded { deadline: Duration, waited: Duration },
+    /// Coordinator shut down before the job could be queued.
+    QueueClosed,
+    /// The coordinator dropped the response channel (crash/teardown).
+    Dropped,
+    /// Submission was refused (shim path: the legacy infallible
+    /// `submit` folds a [`SubmitError`] into the ticket).
+    Rejected(SubmitError),
+    /// The plan's referencing structure was invalid — fix the plan, do
+    /// not retry (distinct from a stage failing at execution).
+    Plan(PlanError),
+    /// Execution failed on the serving plane.
+    Failed(String),
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::Cancelled => write!(f, "job cancelled before execution"),
+            JobError::DeadlineExceeded { deadline, waited } => write!(
+                f,
+                "deadline exceeded: queued {:.1} ms > deadline {:.1} ms",
+                waited.as_secs_f64() * 1e3,
+                deadline.as_secs_f64() * 1e3
+            ),
+            JobError::QueueClosed => write!(f, "coordinator queue is closed"),
+            JobError::Dropped => write!(f, "coordinator dropped job"),
+            JobError::Rejected(e) => write!(f, "{e}"),
+            JobError::Plan(e) => write!(f, "{e}"),
+            JobError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// Result payload, matching the job kind.
 #[derive(Clone, Debug)]
 pub enum Payload {
     Matrix(Mat),
     Scalar(f64),
+    Vector(Vec<f64>),
     Svd { u: Mat, s: Vec<f64>, vt: Mat },
 }
 
@@ -96,9 +389,58 @@ impl Payload {
             _ => None,
         }
     }
+
+    /// Solution vector of an `lstsq` job.
+    pub fn vector(&self) -> Option<&[f64]> {
+        match self {
+            Payload::Vector(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The (U, s, V^T) factors of a `randsvd` job, without destructuring
+    /// by hand.
+    ///
+    /// ```
+    /// use photonic_randnla::coordinator::Payload;
+    /// use photonic_randnla::linalg::Mat;
+    ///
+    /// let p = Payload::Svd { u: Mat::eye(3), s: vec![2.0, 1.0], vt: Mat::eye(3) };
+    /// let (u, s, vt) = p.svd().expect("svd payload");
+    /// assert_eq!((u.rows, s.len(), vt.cols), (3, 2, 3));
+    /// assert!(p.matrix().is_none());
+    /// ```
+    pub fn svd(&self) -> Option<(&Mat, &[f64], &Mat)> {
+        match self {
+            Payload::Svd { u, s, vt } => Some((u, s, vt)),
+            _ => None,
+        }
+    }
 }
 
 /// Completed-job response.
+///
+/// `payload` carries the estimator output; use the typed accessors
+/// instead of destructuring:
+///
+/// ```
+/// use photonic_randnla::coordinator::Payload;
+///
+/// fn report(payload: &Payload) -> String {
+///     if let Some(t) = payload.scalar() {
+///         return format!("scalar estimate {t}");
+///     }
+///     if let Some((u, s, _vt)) = payload.svd() {
+///         return format!("rank-{} factorization of {} rows", s.len(), u.rows);
+///     }
+///     if let Some(x) = payload.vector() {
+///         return format!("solution with {} unknowns", x.len());
+///     }
+///     "matrix result".to_string()
+/// }
+///
+/// assert_eq!(report(&Payload::Scalar(7.0)), "scalar estimate 7");
+/// ```
 #[derive(Clone, Debug)]
 pub struct JobResponse {
     pub id: u64,
@@ -106,32 +448,68 @@ pub struct JobResponse {
     pub payload: Payload,
     /// Device that performed the randomization step.
     pub device: Device,
-    /// End-to-end wall latency (queue + compute), microseconds.
+    /// End-to-end wall latency (queue + compute), microseconds — stamped
+    /// from the same submit instant the client's [`Ticket`] holds.
     pub latency_us: u64,
     /// How many projection columns were batched with this job's frames.
     pub batched_cols: usize,
+    /// Auxiliary store handles published by the job (e.g. `("q", id)` —
+    /// the range basis of a `randsvd` with `publish_q`). The submitter
+    /// owns (and frees) these handles.
+    pub aux: Vec<(&'static str, OperandId)>,
+    /// Global completion sequence number (0-based, coordinator-wide) —
+    /// the observable ordering QoS tests assert on.
+    pub seq: u64,
+}
+
+/// How a ticket reaches back into the admission queue to cancel.
+pub(crate) struct CancelHandle {
+    pub(crate) flag: Arc<AtomicBool>,
+    pub(crate) queue: Weak<JobQueue>,
+}
+
+impl CancelHandle {
+    /// Handle for tickets that never made it into a queue (shim errors).
+    pub(crate) fn detached() -> Self {
+        Self { flag: Arc::new(AtomicBool::new(false)), queue: Weak::new() }
+    }
 }
 
 /// In-flight handle for a submitted job.
 pub struct Ticket {
     pub id: u64,
-    pub(crate) rx: std::sync::mpsc::Receiver<anyhow::Result<JobResponse>>,
+    pub(crate) rx: mpsc::Receiver<Result<JobResponse, JobError>>,
     pub(crate) submitted: Instant,
+    pub(crate) cancel: CancelHandle,
 }
 
 impl Ticket {
     /// Block until the job completes.
-    pub fn wait(self) -> anyhow::Result<JobResponse> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator dropped job {}", self.id))?
+    pub fn wait(self) -> Result<JobResponse, JobError> {
+        self.rx.recv().map_err(|_| JobError::Dropped)?
     }
 
     /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<anyhow::Result<JobResponse>> {
+    pub fn try_wait(&self) -> Option<Result<JobResponse, JobError>> {
         self.rx.try_recv().ok()
     }
 
+    /// Best-effort cancellation. Returns `true` when the job was still
+    /// queued and is now guaranteed never to run (the ticket resolves to
+    /// [`JobError::Cancelled`]); `false` when it already started (or
+    /// finished) — a started job runs to completion, but a worker that
+    /// dequeues a flagged job drops it without touching a device.
+    pub fn cancel(&self) -> bool {
+        self.cancel.flag.store(true, Ordering::SeqCst);
+        match self.cancel.queue.upgrade() {
+            Some(q) => q.cancel(self.id),
+            None => false,
+        }
+    }
+
+    /// Wall time since submission — measured from the same instant the
+    /// server stamps `latency_us` from, so client- and server-observed
+    /// latency agree.
     pub fn elapsed_us(&self) -> u64 {
         self.submitted.elapsed().as_micros() as u64
     }
@@ -159,6 +537,13 @@ mod tests {
         let m = Payload::Matrix(Mat::eye(2));
         assert!(m.matrix().is_some());
         assert!(m.scalar().is_none());
+        let v = Payload::Vector(vec![1.0, 2.0]);
+        assert_eq!(v.vector(), Some(&[1.0, 2.0][..]));
+        assert!(v.svd().is_none());
+        let svd = Payload::Svd { u: Mat::eye(2), s: vec![1.0], vt: Mat::eye(2) };
+        let (u, s, vt) = svd.svd().unwrap();
+        assert_eq!((u.rows, s.len(), vt.rows), (2, 1, 2));
+        assert!(svd.vector().is_none());
     }
 
     #[test]
@@ -166,5 +551,55 @@ mod tests {
         assert_eq!(Device::Opu.name(), "opu");
         assert_eq!(Device::Pjrt.name(), "pjrt");
         assert_eq!(Device::Host.name(), "host");
+    }
+
+    #[test]
+    fn legacy_jobs_translate_into_inline_specs() {
+        let spec = Job::Trace { a: Mat::eye(4), m: 2 }.into_spec();
+        assert_eq!(spec.kind(), "trace");
+        match spec {
+            JobSpec::Trace { a: OperandRef::Inline(m), m: 2 } => assert_eq!(m.rows, 4),
+            other => panic!("wrong translation: {other:?}"),
+        }
+        let spec = Job::RandSvd { a: Mat::eye(4), rank: 2, oversample: 1, power_iters: 0 }
+            .into_spec();
+        match spec {
+            JobSpec::RandSvd { publish_q: false, rank: 2, .. } => {}
+            other => panic!("wrong translation: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_kinds_cover_new_scenarios() {
+        let h = OperandRef::Handle(OperandId(1));
+        assert_eq!(JobSpec::Lstsq { a: h.clone(), b: vec![1.0], m: 4 }.kind(), "lstsq");
+        assert_eq!(JobSpec::Nystrom { a: h.clone(), m: 4, rcond: 1e-8 }.kind(), "nystrom");
+        assert_eq!(JobSpec::SymmetricSketch { a: h.clone(), m: 4 }.kind(), "symmetric_sketch");
+        assert_eq!(JobSpec::TraceOf { b: h.clone() }.kind(), "trace_of");
+        assert_eq!(JobSpec::TrianglesOf { b: h }.kind(), "triangles_of");
+    }
+
+    #[test]
+    fn error_displays_are_actionable() {
+        assert!(JobError::QueueClosed.to_string().contains("closed"));
+        assert!(JobError::Cancelled.to_string().contains("cancel"));
+        let e = JobError::DeadlineExceeded {
+            deadline: Duration::from_millis(1),
+            waited: Duration::from_millis(5),
+        };
+        assert!(e.to_string().contains("deadline"), "{e}");
+        let b = SubmitError::Busy { depth: 8, cap: 8 };
+        assert!(b.to_string().contains("full"), "{b}");
+        assert!(SubmitError::UnknownOperand(OperandId(3)).to_string().contains("op#3"));
+    }
+
+    #[test]
+    fn default_qos_is_batch_no_deadline() {
+        let opts = SubmitOptions::default();
+        assert_eq!(opts.priority, Priority::Batch);
+        assert!(opts.deadline.is_none());
+        let i = SubmitOptions::interactive().with_deadline(Duration::from_millis(3));
+        assert_eq!(i.priority, Priority::Interactive);
+        assert_eq!(i.deadline, Some(Duration::from_millis(3)));
     }
 }

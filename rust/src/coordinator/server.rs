@@ -1,11 +1,18 @@
-//! The coordinator: worker pool decomposing RandNLA jobs into projection
-//! batches + compressed-domain host algebra.
+//! The coordinator: session front door + worker pool decomposing RandNLA
+//! jobs into projection batches and compressed-domain host algebra.
 //!
-//! Submit a [`Job`], get a [`Ticket`]; workers pull jobs, funnel every
-//! randomization through the shared [`ProjectionService`] (where dynamic
-//! batching, pool scheduling, sharding and device routing happen), and
-//! finish the small compressed computations on the host — exactly the
-//! paper's hybrid pipeline, scaled out over a [`DevicePool`].
+//! The client surface is handle-based: [`upload`](Coordinator::upload) an
+//! operand once, then submit any number of [`JobSpec`]s referencing it by
+//! [`OperandId`] — the payload is never copied again between the client
+//! and the shard executor (everything rides one `Arc<Mat>`). Submission
+//! carries QoS: a bounded two-level admission queue
+//! (`Interactive`/`Batch`, [`SubmitError::Busy`] backpressure), per-job
+//! deadlines that fail fast without touching a device, and
+//! [`Ticket::cancel`]. Multi-stage work composes through [`Plan`]s whose
+//! intermediate outputs land back in the [`OperandStore`].
+//!
+//! The legacy owned-`Mat` [`Job`] API remains as a shim: `submit`
+//! translates it into an inline `JobSpec` internally.
 //!
 //! Degradation over failure: if the PJRT engine cannot start (missing
 //! artifacts, missing `xla` feature) the coordinator serves without that
@@ -13,8 +20,8 @@
 //! removed from scheduling while its work reroutes (see
 //! [`crate::coordinator::batcher`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -22,9 +29,15 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{BatchConfig, ProjectionService};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::plan::{resolve_stage_refs, Plan, PlanResult};
 use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
-use crate::coordinator::request::{Device, Job, JobResponse, Payload, Ticket};
+use crate::coordinator::queue::{JobQueue, QueuedJob};
+use crate::coordinator::request::{
+    CancelHandle, Device, Job, JobError, JobResponse, JobSpec, OperandRef, Payload, ResolvedJob,
+    SubmitError, SubmitOptions, Ticket,
+};
 use crate::coordinator::router::{Availability, HostSketch, Policy, Router};
+use crate::coordinator::store::{OperandId, OperandStore, StoreError};
 use crate::linalg::{self, matmul_tn, Mat};
 use crate::perfmodel::SketchKind;
 use crate::runtime::{PjrtEngine, PjrtHandle};
@@ -42,6 +55,12 @@ pub struct CoordinatorConfig {
     pub pool: PoolConfig,
     /// Attach a PJRT engine over this artifacts dir (None = no PJRT arm).
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Bounded admission-queue capacity (CLI `serve --queue-cap`);
+    /// submissions beyond it get [`SubmitError::Busy`].
+    pub queue_cap: usize,
+    /// Operand-store byte quota (CLI `serve --store-mb`);
+    /// `usize::MAX` = unbounded.
+    pub store_quota: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -53,23 +72,19 @@ impl Default for CoordinatorConfig {
             batch: BatchConfig::default(),
             pool: PoolConfig::default(),
             artifacts_dir: None,
+            queue_cap: 1024,
+            store_quota: usize::MAX,
         }
     }
 }
 
-struct QueuedJob {
-    id: u64,
-    job: Job,
-    resp: mpsc::Sender<Result<JobResponse>>,
-    submitted: Instant,
-}
-
 /// The running coordinator.
 pub struct Coordinator {
-    job_tx: Option<mpsc::Sender<QueuedJob>>,
+    queue: Arc<JobQueue>,
     workers: Vec<JoinHandle<()>>,
     svc: ProjectionService,
     pool: Arc<DevicePool>,
+    store: Arc<OperandStore>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     // Keep the engine alive for the coordinator's lifetime.
@@ -127,52 +142,280 @@ impl Coordinator {
             metrics.clone(),
         );
 
-        let (job_tx, job_rx) = mpsc::channel::<QueuedJob>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
+        let store = Arc::new(OperandStore::with_metrics(cfg.store_quota, metrics.clone()));
+        let queue = Arc::new(JobQueue::new(cfg.queue_cap, metrics.clone()));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
-            let rx = job_rx.clone();
+            let queue = queue.clone();
             let svc = svc.clone();
+            let store = store.clone();
             let metrics = metrics.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{w}"))
-                    .spawn(move || worker_loop(rx, svc, metrics))
+                    .spawn(move || worker_loop(queue, svc, store, metrics))
                     .expect("spawn worker"),
             );
         }
 
         Ok(Self {
-            job_tx: Some(job_tx),
+            queue,
             workers,
             svc,
             pool,
+            store,
             metrics,
             next_id: AtomicU64::new(1),
             _engine: engine,
         })
     }
 
-    /// Submit a job; returns an awaitable ticket. Never panics: if the
-    /// queue is gone the ticket resolves to an error.
-    pub fn submit(&self, job: Job) -> Ticket {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::channel();
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        let q = QueuedJob { id, job, resp: tx, submitted: Instant::now() };
-        let undelivered = match self.job_tx.as_ref() {
-            Some(queue) => queue.send(q).err().map(|mpsc::SendError(q)| q),
-            None => Some(q),
-        };
-        if let Some(q) = undelivered {
-            let _ = q.resp.send(Err(anyhow::anyhow!("coordinator queue is closed")));
-        }
-        Ticket { id, rx, submitted: Instant::now() }
+    /// Upload an operand into the server-resident store; the returned
+    /// handle makes every subsequent submission an `Arc` clone.
+    pub fn upload(&self, m: Mat) -> Result<OperandId, StoreError> {
+        self.store.upload(m)
     }
 
-    /// Convenience: submit and wait.
-    pub fn run(&self, job: Job) -> Result<JobResponse> {
+    /// Drop the store's reference to an operand (in-flight jobs holding
+    /// the `Arc` finish unaffected).
+    pub fn free_operand(&self, id: OperandId) -> bool {
+        self.store.free(id)
+    }
+
+    /// The operand store (byte accounting, direct `get`).
+    pub fn store(&self) -> &OperandStore {
+        &self.store
+    }
+
+    /// Submit a session-API job with QoS options. Typed refusal instead
+    /// of unbounded queueing: [`SubmitError::Busy`] is the backpressure
+    /// signal, [`SubmitError::UnknownOperand`] a stale handle.
+    pub fn submit_spec(&self, spec: JobSpec, opts: SubmitOptions) -> Result<Ticket, SubmitError> {
+        let job = self.resolve(spec)?;
+        self.submit_resolved(job, opts)
+    }
+
+    /// Queue an already-resolved job. Retry loops live here-abouts:
+    /// `ResolvedJob` clones are `Arc`-cheap, so a `Busy` retry never
+    /// re-copies an operand payload.
+    fn submit_resolved(
+        &self,
+        job: ResolvedJob,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // The single submit timestamp: client ticket and server latency
+        // stamp both derive from it, so the two views always agree.
+        let submitted = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let queued = QueuedJob {
+            id,
+            job,
+            resp: tx,
+            submitted,
+            deadline: opts.deadline,
+            cancelled: cancelled.clone(),
+            priority: opts.priority,
+        };
+        match self.queue.push(queued) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket {
+                    id,
+                    rx,
+                    submitted,
+                    cancel: CancelHandle {
+                        flag: cancelled,
+                        queue: Arc::downgrade(&self.queue),
+                    },
+                })
+            }
+            Err((_job, e)) => {
+                if matches!(e, SubmitError::Busy { .. }) {
+                    self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit a spec and wait.
+    pub fn run_spec(&self, spec: JobSpec, opts: SubmitOptions) -> Result<JobResponse, JobError> {
+        self.submit_spec(spec, opts)
+            .map_err(|e| match e {
+                SubmitError::Closed => JobError::QueueClosed,
+                other => JobError::Rejected(other),
+            })?
+            .wait()
+    }
+
+    /// Legacy submit (owned-`Mat` [`Job`], infallible signature): the job
+    /// translates into an inline [`JobSpec`] internally. Never panics —
+    /// a refused submission resolves the ticket to the matching error.
+    /// Compatibility: the unbounded channel this API fronted accepted
+    /// any burst, so `Busy` backpressure is absorbed by waiting for
+    /// queue space (bounded memory, same eventual completion) rather
+    /// than failing jobs a legacy caller has no way to retry.
+    pub fn submit(&self, job: Job) -> Ticket {
+        let resolved = match self.resolve(job.into_spec()) {
+            Ok(r) => r,
+            Err(e) => return Self::rejected_ticket(e),
+        };
+        loop {
+            match self.submit_resolved(resolved.clone(), SubmitOptions::default()) {
+                Ok(t) => return t,
+                Err(SubmitError::Busy { .. }) => {
+                    std::thread::sleep(std::time::Duration::from_millis(1))
+                }
+                Err(e) => return Self::rejected_ticket(e),
+            }
+        }
+    }
+
+    /// A ticket already resolved to the given refusal.
+    fn rejected_ticket(e: SubmitError) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let err = match e {
+            SubmitError::Closed => JobError::QueueClosed,
+            other => JobError::Rejected(other),
+        };
+        let _ = tx.send(Err(err));
+        Ticket { id: 0, rx, submitted: Instant::now(), cancel: CancelHandle::detached() }
+    }
+
+    /// Convenience: legacy submit and wait.
+    pub fn run(&self, job: Job) -> Result<JobResponse, JobError> {
         self.submit(job).wait()
+    }
+
+    /// Execute a [`Plan`]: stages run in order, each `Stage(i)` operand
+    /// resolves to the store handle of stage i's matrix output, so
+    /// shared intermediates (one symmetric sketch feeding both Trace and
+    /// Triangles; a randsvd range basis) are computed once. Transient
+    /// `Busy` backpressure is absorbed between stages rather than
+    /// failing the plan. The caller owns the returned stage handles.
+    pub fn run_plan(&self, plan: &Plan, opts: SubmitOptions) -> Result<PlanResult, JobError> {
+        let mut responses = Vec::with_capacity(plan.len());
+        let mut stage_handles: Vec<Option<OperandId>> = Vec::with_capacity(plan.len());
+        match self.run_plan_stages(plan, opts, &mut responses, &mut stage_handles) {
+            Ok(()) => Ok(PlanResult { responses, stage_handles }),
+            Err(e) => {
+                // A failed stage must not orphan quota-accounted store
+                // entries: the partial result is dropped, so free every
+                // stage-output and aux handle the completed stages made.
+                PlanResult { responses, stage_handles }.free_stage_handles(&self.store);
+                Err(e)
+            }
+        }
+    }
+
+    fn run_plan_stages(
+        &self,
+        plan: &Plan,
+        opts: SubmitOptions,
+        responses: &mut Vec<JobResponse>,
+        stage_handles: &mut Vec<Option<OperandId>>,
+    ) -> Result<(), JobError> {
+        for (idx, spec) in plan.stages().iter().enumerate() {
+            let spec = resolve_stage_refs(idx, spec.clone(), stage_handles)
+                .map_err(JobError::Plan)?;
+            let job = match self.resolve(spec) {
+                Ok(job) => job,
+                Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
+                Err(other) => return Err(JobError::Rejected(other)),
+            };
+            // Busy is a retry-later signal; failing the plan on it would
+            // discard the device work already paid for by earlier
+            // stages. The executor runs on the submitter's thread (not
+            // a worker), so waiting out the backpressure is safe; the
+            // resolved job's clones are Arc-cheap.
+            let resp = loop {
+                match self.submit_resolved(job.clone(), opts) {
+                    Ok(t) => break t.wait()?,
+                    Err(SubmitError::Busy { .. }) => {
+                        std::thread::sleep(std::time::Duration::from_millis(1))
+                    }
+                    Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
+                    Err(other) => return Err(JobError::Rejected(other)),
+                }
+            };
+            let handle = match &resp.payload {
+                Payload::Matrix(mat) => {
+                    // Per the session contract the stage output lives in
+                    // both the response and the store; the one copy that
+                    // makes is accounted, not hidden.
+                    let bytes = crate::coordinator::store::mat_bytes(mat) as u64;
+                    self.metrics.operand_bytes_copied.fetch_add(bytes, Ordering::Relaxed);
+                    Some(
+                        self.store
+                            .insert(Arc::new(mat.clone()))
+                            .map_err(|e| JobError::Failed(e.to_string()))?,
+                    )
+                }
+                _ => None,
+            };
+            stage_handles.push(handle);
+            responses.push(resp);
+        }
+        Ok(())
+    }
+
+    /// Resolve every operand reference to a shared `Arc<Mat>` at submit
+    /// time (freeing a handle after submit cannot strand the job).
+    fn resolve(&self, spec: JobSpec) -> Result<ResolvedJob, SubmitError> {
+        let resolve_ref = |r: OperandRef| -> Result<Arc<Mat>, SubmitError> {
+            match r {
+                OperandRef::Handle(id) => {
+                    self.store.get(id).ok_or(SubmitError::UnknownOperand(id))
+                }
+                // The compat shim's internal upload: inline payloads are
+                // promoted to an anonymous server-side Arc (a move, not
+                // a copy) without entering the accounted store.
+                OperandRef::Inline(m) => Ok(Arc::new(m)),
+                OperandRef::Stage(i) => Err(SubmitError::StageRefOutsidePlan(i)),
+            }
+        };
+        Ok(match spec {
+            JobSpec::Projection { data, m } => {
+                ResolvedJob::Projection { data: resolve_ref(data)?, m }
+            }
+            JobSpec::ApproxMatmul { a, b, m } => {
+                ResolvedJob::ApproxMatmul { a: resolve_ref(a)?, b: resolve_ref(b)?, m }
+            }
+            JobSpec::Trace { a, m } => ResolvedJob::Trace { a: resolve_ref(a)?, m },
+            JobSpec::Triangles { adjacency, m } => {
+                ResolvedJob::Triangles { adjacency: resolve_ref(adjacency)?, m }
+            }
+            JobSpec::SymmetricSketch { a, m } => {
+                ResolvedJob::SymmetricSketch { a: resolve_ref(a)?, m }
+            }
+            JobSpec::TraceOf { b } => ResolvedJob::TraceOf { b: resolve_ref(b)? },
+            JobSpec::TrianglesOf { b } => ResolvedJob::TrianglesOf { b: resolve_ref(b)? },
+            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q } => {
+                let a = resolve_ref(a)?;
+                ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q }
+            }
+            JobSpec::Lstsq { a, b, m } => ResolvedJob::Lstsq { a: resolve_ref(a)?, b, m },
+            JobSpec::Nystrom { a, m, rcond } => {
+                ResolvedJob::Nystrom { a: resolve_ref(a)?, m, rcond }
+            }
+        })
+    }
+
+    /// Hold workers (admission continues): drain gate, also what makes
+    /// QoS ordering tests deterministic.
+    pub fn pause(&self) {
+        self.queue.pause();
+    }
+
+    pub fn resume(&self) {
+        self.queue.resume();
+    }
+
+    /// (interactive, batch) jobs queued right now.
+    pub fn queue_depths(&self) -> (usize, usize) {
+        self.queue.depths()
     }
 
     /// Direct access to the projection service (benches).
@@ -203,79 +446,145 @@ impl Coordinator {
 
     /// Drain and stop all workers.
     pub fn shutdown(mut self) {
-        self.job_tx.take(); // closes the queue
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+impl Drop for Coordinator {
+    /// RAII parity with the old mpsc channel (whose drop closed the
+    /// queue): a coordinator dropped without `shutdown` — test panic,
+    /// early `?` return — must not strand its workers in the condvar
+    /// wait forever. Close is idempotent, so this is a no-op after a
+    /// proper `shutdown`.
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
 fn worker_loop(
-    rx: Arc<Mutex<mpsc::Receiver<QueuedJob>>>,
+    queue: Arc<JobQueue>,
     svc: ProjectionService,
+    store: Arc<OperandStore>,
     metrics: Arc<Metrics>,
 ) {
-    loop {
-        let queued = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        let Ok(q) = queued else { return };
-        let result = execute_job(&svc, &q.job);
-        match result {
-            Ok((payload, device, batched_cols)) => {
-                metrics.completed.fetch_add(1, Ordering::Relaxed);
+    while let Some(q) = queue.pop() {
+        // QoS gates, checked before any device is touched.
+        if q.cancelled.load(Ordering::SeqCst) {
+            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            let _ = q.resp.send(Err(JobError::Cancelled));
+            continue;
+        }
+        if let Some(deadline) = q.deadline {
+            let waited = q.submitted.elapsed();
+            if waited > deadline {
+                metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = q.resp.send(Err(JobError::DeadlineExceeded { deadline, waited }));
+                continue;
+            }
+        }
+        match execute_job(&svc, &store, &q.job) {
+            Ok((payload, device, batched_cols, aux)) => {
+                // fetch_add returns the prior count: a coordinator-wide
+                // completion sequence number (QoS ordering observable).
+                let seq = metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let latency_us = q.submitted.elapsed().as_micros() as u64;
                 metrics.record_latency_us(latency_us);
-                let _ = q.resp.send(Ok(JobResponse {
+                let published: Vec<OperandId> = aux.iter().map(|(_, id)| *id).collect();
+                let delivered = q.resp.send(Ok(JobResponse {
                     id: q.id,
                     kind: q.job.kind(),
                     payload,
                     device,
                     latency_us,
                     batched_cols,
+                    aux,
+                    seq,
                 }));
+                // A dropped ticket is the only holder of the job's aux
+                // handle ids: free them or they orphan in the quota-
+                // accounted store.
+                if delivered.is_err() {
+                    for id in published {
+                        store.free(id);
+                    }
+                }
             }
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = q.resp.send(Err(e));
+                let _ = q.resp.send(Err(JobError::Failed(e.to_string())));
             }
         }
     }
 }
 
-/// Decompose one job into projections + host algebra.
-fn execute_job(svc: &ProjectionService, job: &Job) -> Result<(Payload, Device, usize)> {
+/// What executing one job yields: payload, device, batched columns, and
+/// any auxiliary store handles the job published.
+type ExecOutcome = (Payload, Device, usize, Vec<(&'static str, OperandId)>);
+
+/// Decompose one job into projections + host algebra. Operands arrive as
+/// shared `Arc<Mat>`s and stay shared through the projection service —
+/// no request-payload deep copy anywhere on this path.
+fn execute_job(
+    svc: &ProjectionService,
+    store: &OperandStore,
+    job: &ResolvedJob,
+) -> Result<ExecOutcome> {
     match job {
-        Job::Projection { data, m } => {
+        ResolvedJob::Projection { data, m } => {
             let r = svc.project(data.clone(), *m)?;
-            Ok((Payload::Matrix(r.result), r.device, r.batch_cols))
+            Ok((Payload::Matrix(r.result), r.device, r.batch_cols, Vec::new()))
         }
-        Job::ApproxMatmul { a, b, m } => {
-            // One fused projection of [A | B] guarantees a shared sketch.
+        ResolvedJob::ApproxMatmul { a, b, m } => {
             anyhow::ensure!(a.rows == b.rows, "A and B row mismatch");
-            let n = a.rows;
-            let mut ab = Mat::zeros(n, a.cols + b.cols);
-            for i in 0..n {
-                ab.row_mut(i)[..a.cols].copy_from_slice(a.row(i));
-                ab.row_mut(i)[a.cols..].copy_from_slice(b.row(i));
-            }
-            let r = svc.project(ab, *m)?;
-            let sa = r.result.crop(*m, a.cols);
-            let sb = Mat::from_fn(*m, b.cols, |i, j| r.result.at(i, a.cols + j));
-            let approx = matmul_tn(&sa, &sb).scale(1.0 / *m as f64);
-            Ok((Payload::Matrix(approx), r.device, r.batch_cols))
+            // A and B share the (n, m) signature, hence the operator G
+            // (and kind affinity keeps both passes on one arm), so two
+            // projections equal the fused [A | B] projection column for
+            // column — without materializing the concatenation. Both are
+            // submitted before waiting: the batcher merges them into one
+            // frame batch, keeping the fused path's single round-trip.
+            let pa = svc.project_async(a.clone(), *m)?;
+            let pb = svc.project_async(b.clone(), *m)?;
+            let ra = pa.wait()?;
+            let rb = pb.wait()?;
+            ensure_same_arm(ra.planned, rb.planned, "approx_matmul")?;
+            let approx = matmul_tn(&ra.result, &rb.result).scale(1.0 / *m as f64);
+            Ok((
+                Payload::Matrix(approx),
+                ra.device,
+                ra.batch_cols.max(rb.batch_cols),
+                Vec::new(),
+            ))
         }
-        Job::Trace { a, m } => {
+        ResolvedJob::Trace { a, m } => {
             let (b, device, cols) = symmetric_sketch_via(svc, a, *m)?;
-            Ok((Payload::Scalar(b.trace()), device, cols))
+            Ok((Payload::Scalar(b.trace()), device, cols, Vec::new()))
         }
-        Job::Triangles { adjacency, m } => {
+        ResolvedJob::Triangles { adjacency, m } => {
             let (b, device, cols) = symmetric_sketch_via(svc, adjacency, *m)?;
             let t = linalg::trace_cubed(&b) / 6.0;
-            Ok((Payload::Scalar(t), device, cols))
+            Ok((Payload::Scalar(t), device, cols, Vec::new()))
         }
-        Job::RandSvd { a, rank, oversample, power_iters } => {
+        ResolvedJob::SymmetricSketch { a, m } => {
+            let (b, device, cols) = symmetric_sketch_via(svc, a, *m)?;
+            Ok((Payload::Matrix(b), device, cols, Vec::new()))
+        }
+        ResolvedJob::TraceOf { b } => {
+            anyhow::ensure!(b.is_square(), "trace_of needs a square sketch");
+            Ok((Payload::Scalar(b.trace()), Device::Host, 0, Vec::new()))
+        }
+        ResolvedJob::TrianglesOf { b } => {
+            anyhow::ensure!(b.is_square(), "triangles_of needs a square sketch");
+            Ok((
+                Payload::Scalar(linalg::trace_cubed(b) / 6.0),
+                Device::Host,
+                0,
+                Vec::new(),
+            ))
+        }
+        ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q } => {
             let l = rank + oversample;
             // Randomization step: Y^T = G A^T through the service.
             let r = svc.project(a.transpose(), l)?;
@@ -290,6 +599,12 @@ fn execute_job(svc: &ProjectionService, job: &Job) -> Result<(Payload, Device, u
             let b = matmul_tn(&q, a);
             let linalg::Svd { u: ub, s, vt } = linalg::svd(&b);
             let u = linalg::matmul(&q, &ub);
+            // Q's last use was computing U: move it into the store.
+            let aux = if *publish_q {
+                vec![("q", store.insert(Arc::new(q))?)]
+            } else {
+                Vec::new()
+            };
             let k = (*rank).min(s.len());
             Ok((
                 Payload::Svd {
@@ -299,21 +614,99 @@ fn execute_job(svc: &ProjectionService, job: &Job) -> Result<(Payload, Device, u
                 },
                 r.device,
                 r.batch_cols,
+                aux,
+            ))
+        }
+        ResolvedJob::Lstsq { a, b, m } => {
+            anyhow::ensure!(a.rows == b.len(), "rhs length {} != A rows {}", b.len(), a.rows);
+            anyhow::ensure!(
+                *m >= a.cols,
+                "sketch dim {} < unknowns {} — system would be underdetermined",
+                m,
+                a.cols
+            );
+            // A and the rhs share the (n, m) signature => the same G
+            // sketches both sides (the fused-[A | b] guarantee, without
+            // the concatenation); submitted together, they merge into
+            // one frame batch.
+            let rhs = Mat::from_fn(a.rows, 1, |i, _| b[i]);
+            let pa = svc.project_async(a.clone(), *m)?;
+            let pb = svc.project_async(rhs, *m)?;
+            let ra = pa.wait()?;
+            let rb = pb.wait()?;
+            ensure_same_arm(ra.planned, rb.planned, "lstsq")?;
+            let sb: Vec<f64> = (0..rb.result.rows).map(|i| rb.result.at(i, 0)).collect();
+            let x = linalg::lstsq(&ra.result, &sb);
+            Ok((
+                Payload::Vector(x),
+                ra.device,
+                ra.batch_cols.max(rb.batch_cols),
+                Vec::new(),
+            ))
+        }
+        ResolvedJob::Nystrom { a, m, rcond } => {
+            anyhow::ensure!(a.is_square(), "nystrom needs PSD (square) input");
+            // (G A)^T = A G^T only holds for symmetric A; a non-symmetric
+            // input would complete Ok with a meaningless approximation.
+            let asym = (0..a.rows)
+                .flat_map(|i| (0..i).map(move |j| (a.at(i, j) - a.at(j, i)).abs()))
+                .fold(0.0f64, f64::max);
+            let tol = 1e-9 * linalg::max_abs(a).max(f64::MIN_POSITIVE);
+            anyhow::ensure!(
+                asym <= tol,
+                "nystrom needs symmetric PSD input (max |A - A^T| = {asym:e})"
+            );
+            let ga = svc.project(a.clone(), *m)?; // G A (m x n)
+            let agt = Arc::new(ga.result.transpose()); // A G^T for symmetric A
+            let core = svc.project(agt.clone(), *m)?; // G A G^T (m x m)
+            ensure_same_arm(ga.planned, core.planned, "nystrom")?;
+            let core_pinv = crate::randnla::nystrom::pinv(&core.result.symmetrized(), *rcond);
+            let approx = linalg::matmul(&linalg::matmul(&agt, &core_pinv), &ga.result);
+            Ok((
+                Payload::Matrix(approx),
+                ga.device,
+                ga.batch_cols.max(core.batch_cols),
+                Vec::new(),
             ))
         }
     }
 }
 
+/// Multi-pass estimator coherence: the passes of one job must realise
+/// the same signature operator, which holds exactly when the scheduler
+/// *planned* them on the same arm (kind affinity guarantees it while the
+/// arm lives; an arm dying *between* passes breaks it). The planned kind
+/// — not the realized device, which a reroute-to-host can mask — is what
+/// fixes the logical operator (a host-planned batch realises the
+/// schedule's host sketch even if pass 1 fell back to host from an
+/// accelerator with its dense-G equivalent). A cross-arm pair would
+/// complete Ok with a silently meaningless estimate — fail typed.
+/// Scope: this catches *between-pass* arm changes; an intra-pass
+/// OPU->host cell fallback remains the documented degraded-reroute
+/// mode (see `ProjResp::planned`).
+fn ensure_same_arm(first: Device, second: Device, kind: &str) -> Result<()> {
+    anyhow::ensure!(
+        first == second,
+        "{kind}: serving arm changed between passes ({} -> {}); \
+         the two sketches used different operators — resubmit",
+        first.name(),
+        second.name()
+    );
+    Ok(())
+}
+
 /// B = (G A G^T)/m with both passes through the service (same (n, m)
-/// signature => same G, see batcher::signature_seed).
+/// signature => same G, see batcher::signature_seed). The first pass
+/// shares the operand's `Arc` — no clone of A anywhere.
 fn symmetric_sketch_via(
     svc: &ProjectionService,
-    a: &Mat,
+    a: &Arc<Mat>,
     m: usize,
 ) -> Result<(Mat, Device, usize)> {
     anyhow::ensure!(a.is_square(), "symmetric sketch needs square input");
     let s = svc.project(a.clone(), m)?;
     let gst = svc.project(s.result.transpose(), m)?;
+    ensure_same_arm(s.planned, gst.planned, "symmetric_sketch")?;
     Ok((
         gst.result.transpose().scale(1.0 / m as f64),
         s.device,
@@ -465,6 +858,110 @@ mod tests {
         assert!(report.contains("completed=1"), "{report}");
         let full = c.report();
         assert!(full.contains("host-0"), "{full}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn lstsq_job_recovers_consistent_system() {
+        let c = host_coordinator(2);
+        let mut rng = Xoshiro256::new(11);
+        let a = Mat::gaussian(128, 6, 1.0, &mut rng);
+        let x_true: Vec<f64> = (0..6).map(|_| rng.next_normal()).collect();
+        let b = crate::linalg::matvec(&a, &x_true);
+        let id = c.upload(a).unwrap();
+        let resp = c
+            .run_spec(
+                JobSpec::Lstsq { a: OperandRef::Handle(id), b, m: 32 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(resp.kind, "lstsq");
+        // Consistent system: any full-rank sketch solves it exactly.
+        let x = resp.payload.vector().unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn lstsq_undersized_sketch_is_a_typed_failure() {
+        let c = host_coordinator(1);
+        let mut rng = Xoshiro256::new(12);
+        let a = Mat::gaussian(64, 16, 1.0, &mut rng);
+        let b = vec![0.0; 64];
+        let err = c
+            .run_spec(
+                JobSpec::Lstsq { a: OperandRef::Inline(a), b, m: 8 },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        match err {
+            JobError::Failed(msg) => assert!(msg.contains("underdetermined"), "{msg}"),
+            other => panic!("expected execution failure, got {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn nystrom_job_reconstructs_low_rank_psd() {
+        let c = host_coordinator(2);
+        let a = psd_matrix(48, 8, 1);
+        let id = c.upload(a.clone()).unwrap();
+        let resp = c
+            .run_spec(
+                JobSpec::Nystrom { a: OperandRef::Handle(id), m: 24, rcond: 1e-8 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(resp.kind, "nystrom");
+        let approx = resp.payload.matrix().unwrap();
+        let rel = crate::linalg::rel_frobenius_error(&a, approx);
+        assert!(rel < 0.05, "nystrom via coordinator error {rel}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn randsvd_publishes_range_basis_handle() {
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = host_coordinator(2);
+        let a = matrix_with_spectrum(48, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 4);
+        let id = c.upload(a).unwrap();
+        let resp = c
+            .run_spec(
+                JobSpec::RandSvd {
+                    a: OperandRef::Handle(id),
+                    rank: 6,
+                    oversample: 6,
+                    power_iters: 1,
+                    publish_q: true,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(resp.aux.len(), 1);
+        let (name, qid) = resp.aux[0];
+        assert_eq!(name, "q");
+        let q = c.store().get(qid).unwrap();
+        assert_eq!((q.rows, q.cols), (48, 12));
+        // Orthonormal columns: Q^T Q = I.
+        let qtq = matmul_tn(&q, &q);
+        assert!(crate::linalg::rel_frobenius_error(&Mat::eye(12), &qtq) < 1e-10);
+        assert!(c.free_operand(qid));
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_handle_is_a_typed_submit_error() {
+        let c = host_coordinator(1);
+        let stale = OperandId(u64::MAX);
+        let err = c
+            .submit_spec(
+                JobSpec::Projection { data: OperandRef::Handle(stale), m: 4 },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::UnknownOperand(stale));
         c.shutdown();
     }
 
@@ -623,8 +1120,8 @@ mod tests {
 
     #[test]
     fn submit_after_shutdown_errors_instead_of_panicking() {
-        let mut c = host_coordinator(1);
-        c.job_tx.take(); // simulate a closed queue without joining workers
+        let c = host_coordinator(1);
+        c.queue.close(); // simulate a closed queue without joining workers
         let t = c.submit(Job::Projection { data: Mat::zeros(8, 1), m: 4 });
         let err = t.wait().unwrap_err();
         assert!(err.to_string().contains("closed"), "{err}");

@@ -1,0 +1,233 @@
+//! Server-resident operand store: upload a matrix once, reference it by
+//! a cheap [`OperandId`] in any number of [`JobSpec`] submissions.
+//!
+//! The store is the data-placement half of the session API (the
+//! algorithm-invocation half is [`JobSpec`] / [`Plan`]): operands live
+//! behind `Arc<Mat>` so a handle submission clones a pointer, never the
+//! payload. Entries are byte-accounted against a configurable quota —
+//! `upload` refuses (typed [`StoreError::OverQuota`]) instead of letting
+//! a hot store grow without bound. Freeing a handle drops the store's
+//! reference; jobs already holding the `Arc` keep computing on it
+//! (refcounted lifetime, no use-after-free possible).
+//!
+//! [`JobSpec`]: crate::coordinator::request::JobSpec
+//! [`Plan`]: crate::coordinator::plan::Plan
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::Mat;
+
+/// Opaque handle to a server-resident operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OperandId(pub u64);
+
+impl fmt::Display for OperandId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "op#{}", self.0)
+    }
+}
+
+/// Typed store failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// Admitting the operand would exceed the configured byte quota.
+    OverQuota { needed: usize, used: usize, quota: usize },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::OverQuota { needed, used, quota } => write!(
+                f,
+                "operand store over quota: need {needed} B on top of {used} B (quota {quota} B)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Bytes a matrix occupies in the store (f64 payload; header noise ignored).
+pub fn mat_bytes(m: &Mat) -> usize {
+    m.data.len() * std::mem::size_of::<f64>()
+}
+
+struct Inner {
+    entries: HashMap<OperandId, Arc<Mat>>,
+    bytes: usize,
+}
+
+/// Arc-backed, byte-accounted operand store shared by a coordinator and
+/// its clients.
+pub struct OperandStore {
+    inner: Mutex<Inner>,
+    quota: usize,
+    next: AtomicU64,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl OperandStore {
+    /// Standalone store with a byte quota (`usize::MAX` = unbounded).
+    pub fn new(quota: usize) -> Self {
+        Self::build(quota, None)
+    }
+
+    /// Store that mirrors its byte gauge into coordinator metrics.
+    pub fn with_metrics(quota: usize, metrics: Arc<Metrics>) -> Self {
+        Self::build(quota, Some(metrics))
+    }
+
+    fn build(quota: usize, metrics: Option<Arc<Metrics>>) -> Self {
+        Self {
+            inner: Mutex::new(Inner { entries: HashMap::new(), bytes: 0 }),
+            quota,
+            next: AtomicU64::new(1),
+            metrics,
+        }
+    }
+
+    /// Upload an operand (the one deep transfer of the session protocol —
+    /// a move, not a copy) and get its handle.
+    ///
+    /// The operand is consumed either way: an [`StoreError::OverQuota`]
+    /// refusal drops it. A caller that wants to free handles and retry
+    /// without recomputing should hold its own `Arc` and use
+    /// [`insert`](Self::insert), which leaves that `Arc` intact on
+    /// refusal (see the serve driver's quota-retire loop).
+    pub fn upload(&self, m: Mat) -> Result<OperandId, StoreError> {
+        self.insert(Arc::new(m))
+    }
+
+    /// Admit an already-shared operand without copying it.
+    pub fn insert(&self, m: Arc<Mat>) -> Result<OperandId, StoreError> {
+        let needed = mat_bytes(&m);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.bytes.saturating_add(needed) > self.quota {
+            return Err(StoreError::OverQuota {
+                needed,
+                used: inner.bytes,
+                quota: self.quota,
+            });
+        }
+        let id = OperandId(self.next.fetch_add(1, Ordering::Relaxed));
+        inner.bytes += needed;
+        inner.entries.insert(id, m);
+        self.publish_gauge(inner.bytes);
+        Ok(id)
+    }
+
+    /// Shared reference to an operand (cheap; `None` for unknown/freed ids).
+    pub fn get(&self, id: OperandId) -> Option<Arc<Mat>> {
+        self.inner.lock().unwrap().entries.get(&id).cloned()
+    }
+
+    /// Drop the store's reference. In-flight jobs holding the `Arc` are
+    /// unaffected; their copy dies with the last clone.
+    pub fn free(&self, id: OperandId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.remove(&id) {
+            Some(m) => {
+                inner.bytes -= mat_bytes(&m);
+                let bytes = inner.bytes;
+                self.publish_gauge(bytes);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resident operand bytes (the quota-accounted quantity).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Number of resident operands.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured byte quota.
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    fn publish_gauge(&self, bytes: usize) {
+        if let Some(m) = &self.metrics {
+            m.store_bytes.store(bytes as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_get_free_roundtrip() {
+        let s = OperandStore::new(usize::MAX);
+        let id = s.upload(Mat::eye(4)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 16 * 8);
+        let m = s.get(id).unwrap();
+        assert_eq!(m.trace(), 4.0);
+        assert!(s.free(id));
+        assert!(!s.free(id), "double free must report false");
+        assert!(s.get(id).is_none());
+        assert_eq!(s.bytes(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn handles_are_unique_across_free() {
+        let s = OperandStore::new(usize::MAX);
+        let a = s.upload(Mat::eye(2)).unwrap();
+        s.free(a);
+        let b = s.upload(Mat::eye(2)).unwrap();
+        assert_ne!(a, b, "freed ids must never be reissued");
+    }
+
+    #[test]
+    fn quota_enforced_with_typed_error() {
+        // Quota fits exactly one 4x4 (128 B).
+        let s = OperandStore::new(128);
+        let id = s.upload(Mat::eye(4)).unwrap();
+        let err = s.upload(Mat::eye(4)).unwrap_err();
+        match err {
+            StoreError::OverQuota { needed, used, quota } => {
+                assert_eq!((needed, used, quota), (128, 128, 128));
+            }
+        }
+        // Freeing makes room again.
+        s.free(id);
+        assert!(s.upload(Mat::eye(4)).is_ok());
+    }
+
+    #[test]
+    fn freed_operand_survives_for_existing_refs() {
+        let s = OperandStore::new(usize::MAX);
+        let id = s.upload(Mat::eye(3)).unwrap();
+        let held = s.get(id).unwrap();
+        s.free(id);
+        // The job-side Arc still computes on the operand.
+        assert_eq!(held.trace(), 3.0);
+        assert_eq!(Arc::strong_count(&held), 1);
+    }
+
+    #[test]
+    fn gauge_mirrors_into_metrics() {
+        let metrics = Arc::new(Metrics::new());
+        let s = OperandStore::with_metrics(usize::MAX, metrics.clone());
+        let id = s.upload(Mat::eye(4)).unwrap();
+        assert_eq!(metrics.store_bytes.load(Ordering::Relaxed), 128);
+        s.free(id);
+        assert_eq!(metrics.store_bytes.load(Ordering::Relaxed), 0);
+    }
+}

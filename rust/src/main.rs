@@ -11,12 +11,15 @@ use std::path::PathBuf;
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
-    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, Job, Policy, PoolConfig,
+    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, OperandId, OperandRef,
+    Policy, PoolConfig, SubmitError, SubmitOptions, Ticket,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
+use photonic_randnla::linalg::{matvec, Mat};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::perfmodel::SketchKind;
 use photonic_randnla::reports::{claims, fig1, fig2, print_rows, Row};
+use photonic_randnla::rng::Xoshiro256;
 use photonic_randnla::runtime::PjrtEngine;
 use photonic_randnla::workload::traces::{self, JobKind, TraceConfig};
 use photonic_randnla::workload::{correlated_pair, psd_matrix};
@@ -30,6 +33,8 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
   serve  [--jobs 64] [--policy auto|opu|pjrt|host] [--workers 4]
          [--sketch dense|srht|sparse|auto] (host digital operator)
          [--opu-replicas 1] [--pjrt-replicas 1] [--host-workers 1]
+         [--queue-cap 1024] (bounded admission queue; Busy beyond it)
+         [--store-mb 1024] (operand-store quota; 0 = unbounded)
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
 
@@ -166,6 +171,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         host_workers: args.get_usize("host-workers", 1)?,
         ..Default::default()
     };
+    let store_mb = args.get_usize("store-mb", 1024)?;
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
@@ -173,6 +179,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         batch: BatchConfig::default(),
         pool,
         artifacts_dir: artifacts,
+        queue_cap: args.get_usize("queue-cap", 1024)?,
+        store_quota: if store_mb == 0 { usize::MAX } else { store_mb * 1024 * 1024 },
     })
     .map_err(|e| e.to_string())?;
 
@@ -181,45 +189,156 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         "serving {} jobs (policy {policy:?}, host sketch {host_sketch:?})...",
         trace.len()
     );
+    // Session-API driver: every operand is uploaded once and submitted
+    // by handle — the payload is never re-shipped per job. Finished jobs
+    // are reaped as we go so freed operands bound the resident store to
+    // in-flight work, whatever --jobs is.
     let t0 = std::time::Instant::now();
-    let tickets: Vec<_> = trace.iter().map(|s| coord.submit(job_from_spec(s))).collect();
+    let mut in_flight: InFlight = std::collections::VecDeque::new();
     let mut ok = 0usize;
-    for t in tickets {
-        if t.wait().is_ok() {
-            ok += 1;
-        }
+    let mut peak_store = 0usize;
+    for spec in &trace {
+        reap_finished(&coord, &mut in_flight, &mut ok);
+        let pair = submit_trace_job(&coord, spec, &mut in_flight, &mut ok)?;
+        in_flight.push_back(pair);
+        peak_store = peak_store.max(coord.store().bytes());
     }
+    while reap_front(&coord, &mut in_flight, &mut ok) {}
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "completed {ok}/{} jobs in {wall:.2}s ({:.1} jobs/s)",
         trace.len(),
         ok as f64 / wall
     );
+    println!(
+        "operand store: peak {:.1} MiB across {} jobs, {} B resident after free",
+        peak_store as f64 / (1024.0 * 1024.0),
+        trace.len(),
+        coord.store().bytes()
+    );
     println!("{}", coord.report());
     coord.shutdown();
     Ok(())
 }
 
-fn job_from_spec(spec: &traces::JobSpec) -> Job {
-    match spec.kind {
+/// Jobs submitted but not yet waited on, with the handles they own.
+type InFlight = std::collections::VecDeque<(Ticket, Vec<OperandId>)>;
+
+/// Block on the oldest in-flight job and free its operands; false when
+/// nothing is in flight.
+fn reap_front(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) -> bool {
+    match in_flight.pop_front() {
+        Some((t, handles)) => {
+            if t.wait().is_ok() {
+                *ok += 1;
+            }
+            for h in handles {
+                coord.free_operand(h);
+            }
+            true
+        }
+        None => false,
+    }
+}
+
+/// Non-blocking reap: retire every already-finished job at the front of
+/// the in-flight queue, freeing its operands.
+fn reap_finished(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) {
+    loop {
+        let done = match in_flight.front() {
+            Some((t, _)) => t.try_wait(),
+            None => None,
+        };
+        match done {
+            Some(res) => {
+                let (_t, handles) = in_flight.pop_front().expect("front just observed");
+                if res.is_ok() {
+                    *ok += 1;
+                }
+                for h in handles {
+                    coord.free_operand(h);
+                }
+            }
+            None => break,
+        }
+    }
+}
+
+/// Build one trace job's operands, upload them, and submit the
+/// handle-based spec. Both backpressure signals are absorbed: a `Busy`
+/// queue by waiting for it to drain, an over-quota store by retiring
+/// the oldest in-flight jobs (blocking) until the upload is admitted.
+fn submit_trace_job(
+    coord: &Coordinator,
+    spec: &traces::JobSpec,
+    in_flight: &mut InFlight,
+    ok: &mut usize,
+) -> Result<(Ticket, Vec<OperandId>), String> {
+    let mut handles = Vec::new();
+    let mut upload = |m: Mat| -> Result<OperandRef, String> {
+        let arc = std::sync::Arc::new(m);
+        loop {
+            match coord.store().insert(arc.clone()) {
+                Ok(id) => {
+                    handles.push(id);
+                    return Ok(OperandRef::Handle(id));
+                }
+                // Store full (typed backpressure): retire the oldest
+                // in-flight job to free its operands and retry. With
+                // nothing left to retire, the operand genuinely
+                // exceeds the quota.
+                Err(e) => {
+                    if !reap_front(coord, in_flight, ok) {
+                        return Err(e.to_string());
+                    }
+                }
+            }
+        }
+    };
+    let job = match spec.kind {
         JobKind::SketchMatmul => {
             let (a, b) = correlated_pair(spec.n, 0.5, spec.seed);
-            Job::ApproxMatmul { a, b, m: spec.m }
+            JobSpec::ApproxMatmul { a: upload(a)?, b: upload(b)?, m: spec.m }
         }
         JobKind::TraceEstimate => {
-            let a = psd_matrix(spec.n, spec.n / 2, spec.seed);
-            Job::Trace { a, m: spec.m }
+            JobSpec::Trace { a: upload(psd_matrix(spec.n, spec.n / 2, spec.seed))?, m: spec.m }
         }
         JobKind::TriangleCount => {
             let g = erdos_renyi(spec.n, 0.05, spec.seed);
-            Job::Triangles { adjacency: g.adjacency(), m: spec.m }
+            JobSpec::Triangles { adjacency: upload(g.adjacency())?, m: spec.m }
         }
-        JobKind::RandSvd => Job::RandSvd {
-            a: psd_matrix(spec.n, spec.n, spec.seed),
+        JobKind::RandSvd => JobSpec::RandSvd {
+            a: upload(psd_matrix(spec.n, spec.n, spec.seed))?,
             rank: spec.m.min(spec.n / 4).max(4),
             oversample: 8,
             power_iters: 1,
+            publish_q: false,
         },
+        JobKind::LstsqSolve => {
+            let mut rng = Xoshiro256::new(spec.seed);
+            let cols = (spec.n / 16).clamp(4, spec.m.max(4));
+            let a = Mat::gaussian(spec.n, cols, 1.0, &mut rng);
+            let x: Vec<f64> = (0..cols).map(|_| rng.next_normal()).collect();
+            let mut b = matvec(&a, &x);
+            for v in b.iter_mut() {
+                *v += 0.1 * rng.next_normal();
+            }
+            JobSpec::Lstsq { a: upload(a)?, b, m: spec.m.max(cols) }
+        }
+        JobKind::NystromApprox => JobSpec::Nystrom {
+            a: upload(psd_matrix(spec.n, spec.n / 4, spec.seed))?,
+            m: spec.m,
+            rcond: 1e-8,
+        },
+    };
+    loop {
+        match coord.submit_spec(job.clone(), SubmitOptions::default()) {
+            Ok(t) => return Ok((t, handles)),
+            Err(SubmitError::Busy { .. }) => {
+                std::thread::sleep(std::time::Duration::from_millis(1))
+            }
+            Err(e) => return Err(e.to_string()),
+        }
     }
 }
 

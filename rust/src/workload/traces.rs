@@ -17,13 +17,19 @@ pub enum JobKind {
     TriangleCount,
     /// Randomized SVD, rank k.
     RandSvd,
+    /// Sketch-and-solve least squares on an overdetermined system.
+    LstsqSolve,
+    /// Nyström PSD approximation.
+    NystromApprox,
 }
 
-pub const ALL_KINDS: [JobKind; 4] = [
+pub const ALL_KINDS: [JobKind; 6] = [
     JobKind::SketchMatmul,
     JobKind::TraceEstimate,
     JobKind::TriangleCount,
     JobKind::RandSvd,
+    JobKind::LstsqSolve,
+    JobKind::NystromApprox,
 ];
 
 /// One job in a trace.

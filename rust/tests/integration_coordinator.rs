@@ -212,6 +212,7 @@ fn oversized_jobs_complete_on_pooled_coordinator_under_mixed_load() {
             ..Default::default()
         },
         artifacts_dir: None,
+        ..Default::default()
     })
     .expect("pooled coordinator start");
     let mut rng = Xoshiro256::new(8);
@@ -247,6 +248,7 @@ fn pool_survives_replica_loss_under_concurrent_load() {
         },
         pool: PoolConfig { opu_replicas: 2, pjrt_replicas: 0, ..Default::default() },
         artifacts_dir: None,
+        ..Default::default()
     })
     .expect("pooled coordinator start");
     let mut rng = Xoshiro256::new(9);

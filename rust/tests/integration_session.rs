@@ -1,0 +1,340 @@
+//! Integration: the handle-based session API and its QoS semantics.
+//!
+//! Covers the serving plane's front-door contract:
+//! - cancelled jobs never run; expired deadlines fail fast without
+//!   touching a device; Interactive overtakes queued Batch work; a full
+//!   admission queue yields typed `Busy` backpressure;
+//! - handle and inline submissions of one operand are bit-identical;
+//! - k jobs against one uploaded operand perform exactly one deep copy
+//!   of it end-to-end (store accounting + `Arc::strong_count`);
+//! - a plan's shared symmetric sketch feeds Trace and Triangles without
+//!   recomputing the projection.
+//!
+//! All tests run on the host arm (no artifacts needed) and use
+//! `pause`/`resume` to make queue-ordering assertions deterministic.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, JobError, JobSpec, OperandRef, Plan,
+    Policy, PoolConfig, SubmitError, SubmitOptions,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::workload::psd_matrix;
+
+fn host_coordinator(workers: usize, queue_cap: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            // Flush every request as its own single-request batch: the
+            // zero-copy fast path, and deterministic batch counting.
+            max_cols: 1,
+            max_wait: Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        queue_cap,
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Spin until `f` holds (bounded); returns its final value.
+fn eventually(mut f: impl FnMut() -> bool) -> bool {
+    for _ in 0..400 {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+#[test]
+fn cancelled_job_never_runs() {
+    let c = host_coordinator(1, 64);
+    c.pause();
+    let t = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(32, 2)), m: 8 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+    assert!(t.cancel(), "queued job must be cancellable");
+    c.resume();
+    assert_eq!(t.wait().unwrap_err(), JobError::Cancelled);
+    assert_eq!(c.metrics.cancelled.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 0);
+    // The projection plane was never touched.
+    assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 0);
+    c.shutdown();
+}
+
+#[test]
+fn expired_deadline_fails_fast_without_touching_a_device() {
+    let c = host_coordinator(1, 64);
+    c.pause();
+    let t = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(32, 2)), m: 8 },
+            SubmitOptions::default().with_deadline(Duration::from_millis(1)),
+        )
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    c.resume();
+    match t.wait().unwrap_err() {
+        JobError::DeadlineExceeded { deadline, waited } => {
+            assert_eq!(deadline, Duration::from_millis(1));
+            assert!(waited >= Duration::from_millis(10), "waited {waited:?}");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(c.metrics.deadline_expired.load(Ordering::Relaxed), 1);
+    assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 0, "expired job touched a device");
+
+    // A generous deadline sails through.
+    let ok = c
+        .run_spec(
+            JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(32, 2)), m: 8 },
+            SubmitOptions::default().with_deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    assert_eq!(ok.kind, "projection");
+    c.shutdown();
+}
+
+#[test]
+fn interactive_overtakes_queued_batch() {
+    let c = host_coordinator(1, 64);
+    let mut rng = Xoshiro256::new(3);
+    let x = Mat::gaussian(32, 2, 1.0, &mut rng);
+    c.pause();
+    // Batch submitted FIRST, interactive second; with one worker the
+    // completion sequence proves who ran first.
+    let tb = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Inline(x.clone()), m: 8 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+    let ti = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Inline(x), m: 8 },
+            SubmitOptions::interactive(),
+        )
+        .unwrap();
+    let (qi, qb) = c.queue_depths();
+    assert_eq!((qi, qb), (1, 1));
+    c.resume();
+    let rb = tb.wait().unwrap();
+    let ri = ti.wait().unwrap();
+    assert!(
+        ri.seq < rb.seq,
+        "interactive (seq {}) must complete before batch (seq {})",
+        ri.seq,
+        rb.seq
+    );
+    c.shutdown();
+}
+
+#[test]
+fn full_queue_yields_busy_backpressure() {
+    let c = host_coordinator(1, 2);
+    c.pause();
+    let spec = || JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 };
+    let t1 = c.submit_spec(spec(), SubmitOptions::default()).unwrap();
+    let t2 = c.submit_spec(spec(), SubmitOptions::default()).unwrap();
+    let err = c.submit_spec(spec(), SubmitOptions::default()).unwrap_err();
+    assert_eq!(err, SubmitError::Busy { depth: 2, cap: 2 });
+    assert_eq!(c.metrics.rejected_busy.load(Ordering::Relaxed), 1);
+    // The legacy infallible submit absorbs the backpressure instead:
+    // it waits for queue space (old unbounded-channel semantics at
+    // bounded memory) and the job still completes.
+    std::thread::scope(|s| {
+        let shim = s.spawn(|| c.submit(Job::Projection { data: Mat::zeros(16, 1), m: 4 }).wait());
+        std::thread::sleep(Duration::from_millis(20));
+        c.resume();
+        let r = shim.join().expect("legacy submit thread");
+        assert!(r.is_ok(), "legacy submit must wait out backpressure: {r:?}");
+    });
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+    c.shutdown();
+}
+
+#[test]
+fn handle_and_inline_submissions_are_bit_identical() {
+    let c = host_coordinator(2, 64);
+    let mut rng = Xoshiro256::new(5);
+    let x = Mat::gaussian(48, 3, 1.0, &mut rng);
+    let id = c.upload(x.clone()).unwrap();
+    let via_handle = c
+        .run_spec(
+            JobSpec::Projection { data: OperandRef::Handle(id), m: 12 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+    let via_inline = c
+        .run_spec(
+            JobSpec::Projection { data: OperandRef::Inline(x), m: 12 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+    assert_eq!(
+        via_handle.payload.matrix().unwrap(),
+        via_inline.payload.matrix().unwrap(),
+        "same operand, same signature operator — results must match bitwise"
+    );
+    c.shutdown();
+}
+
+#[test]
+fn k_jobs_against_one_upload_cost_exactly_one_deep_copy() {
+    let c = host_coordinator(2, 64);
+    let mut rng = Xoshiro256::new(7);
+    let (n, cols, k_jobs) = (256usize, 8usize, 8usize);
+    let x = Mat::gaussian(n, cols, 1.0, &mut rng);
+    let operand_bytes = n * cols * std::mem::size_of::<f64>();
+
+    // The upload is the one deep transfer (a move into the store).
+    let id = c.upload(x).unwrap();
+    let resident = c.store().get(id).unwrap();
+    assert_eq!(Arc::strong_count(&resident), 2, "store + this test");
+
+    for _ in 0..k_jobs {
+        let r = c
+            .run_spec(
+                JobSpec::Projection { data: OperandRef::Handle(id), m: 16 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(r.payload.matrix().unwrap().rows, 16);
+    }
+
+    // Store accounting: k jobs later, exactly one operand's bytes are
+    // resident and the serving path copied zero operand bytes.
+    assert_eq!(c.store().len(), 1);
+    assert_eq!(c.store().bytes(), operand_bytes);
+    assert_eq!(
+        c.metrics.operand_bytes_copied.load(Ordering::Relaxed),
+        0,
+        "handle path must not deep-copy the operand"
+    );
+    // Transient Arc clones (queue, batcher, shard executor) all drain:
+    // back to store + test.
+    assert!(
+        eventually(|| Arc::strong_count(&resident) == 2),
+        "leaked operand refs: strong_count = {}",
+        Arc::strong_count(&resident)
+    );
+    c.free_operand(id);
+    assert_eq!(c.store().bytes(), 0);
+    c.shutdown();
+}
+
+#[test]
+fn plan_shared_sketch_feeds_trace_and_triangles_without_reprojection() {
+    let c = host_coordinator(2, 64);
+    let a = psd_matrix(32, 16, 9);
+    let id = c.upload(a.clone()).unwrap();
+
+    let mut plan = Plan::new();
+    let sketch = plan.stage(JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 8 });
+    let t_stage = plan.stage(JobSpec::TraceOf { b: OperandRef::Stage(sketch) });
+    let tri_stage = plan.stage(JobSpec::TrianglesOf { b: OperandRef::Stage(sketch) });
+
+    let result = c.run_plan(&plan, SubmitOptions::default()).unwrap();
+    // The symmetric sketch takes exactly two projection passes; the
+    // downstream stages reuse the stage-1 handle and project nothing.
+    assert_eq!(
+        c.metrics.batches.load(Ordering::Relaxed),
+        2,
+        "plan recomputed the projection"
+    );
+    let b_handle = result.handle(sketch).expect("sketch stage publishes a handle");
+    let b = c.store().get(b_handle).unwrap();
+    assert_eq!((b.rows, b.cols), (8, 8));
+    assert!(result.handle(t_stage).is_none(), "scalar stages publish no handle");
+
+    // The plan's estimates equal the monolithic jobs' bit for bit (same
+    // signature operator, same arithmetic)...
+    let trace_plan = result.responses[t_stage].payload.scalar().unwrap();
+    let tri_plan = result.responses[tri_stage].payload.scalar().unwrap();
+    let trace_direct = c
+        .run(Job::Trace { a: a.clone(), m: 8 })
+        .unwrap()
+        .payload
+        .scalar()
+        .unwrap();
+    let tri_direct = c
+        .run(Job::Triangles { adjacency: a, m: 8 })
+        .unwrap()
+        .payload
+        .scalar()
+        .unwrap();
+    assert_eq!(trace_plan, trace_direct);
+    assert_eq!(tri_plan, tri_direct);
+    // ...but the monolithic pair costs two projection passes EACH.
+    assert_eq!(c.metrics.batches.load(Ordering::Relaxed), 6);
+
+    result.free_stage_handles(c.store());
+    c.free_operand(id);
+    assert_eq!(c.store().bytes(), 0, "plan left operands resident");
+    c.shutdown();
+}
+
+#[test]
+fn failing_plan_stage_frees_partial_handles() {
+    let c = host_coordinator(2, 64);
+    let a = psd_matrix(24, 12, 13);
+    let id = c.upload(a).unwrap();
+    let before = c.store().bytes();
+    let mut plan = Plan::new();
+    plan.stage(JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 6 });
+    // Undersized lstsq sketch: this stage fails at execution, after the
+    // sketch stage already parked its output in the store.
+    plan.stage(JobSpec::Lstsq { a: OperandRef::Handle(id), b: vec![0.0; 24], m: 2 });
+    let err = c.run_plan(&plan, SubmitOptions::default()).unwrap_err();
+    assert!(matches!(err, JobError::Failed(_)), "{err:?}");
+    assert_eq!(c.store().bytes(), before, "failed plan leaked stage handles");
+    c.free_operand(id);
+    c.shutdown();
+}
+
+#[test]
+fn freed_handle_is_typed_error_but_inflight_jobs_survive_free() {
+    let c = host_coordinator(1, 64);
+    let mut rng = Xoshiro256::new(11);
+
+    // Stale handle: typed refusal at submit.
+    let dead = c.upload(Mat::gaussian(16, 1, 1.0, &mut rng)).unwrap();
+    c.free_operand(dead);
+    let err = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Handle(dead), m: 4 },
+            SubmitOptions::default(),
+        )
+        .unwrap_err();
+    assert_eq!(err, SubmitError::UnknownOperand(dead));
+
+    // Free *after* submit: the resolved job holds the Arc and completes.
+    let live = c.upload(Mat::gaussian(16, 1, 1.0, &mut rng)).unwrap();
+    c.pause();
+    let t = c
+        .submit_spec(
+            JobSpec::Projection { data: OperandRef::Handle(live), m: 4 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+    assert!(c.free_operand(live));
+    c.resume();
+    let r = t.wait().expect("free-after-submit must not strand the job");
+    assert_eq!(r.payload.matrix().unwrap().rows, 4);
+    c.shutdown();
+}
