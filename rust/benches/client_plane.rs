@@ -46,18 +46,6 @@ fn coordinator() -> Coordinator {
     .expect("coordinator start")
 }
 
-fn summary(name: String, iters: u64, ns_per_op: f64) -> Summary {
-    Summary {
-        name,
-        iters,
-        mean_ns: ns_per_op,
-        p50_ns: ns_per_op,
-        p99_ns: ns_per_op,
-        min_ns: ns_per_op,
-        max_ns: ns_per_op,
-    }
-}
-
 fn main() {
     let quick = bench::quick_mode();
     let n = if quick { 1024 } else { 4096 };
@@ -122,8 +110,8 @@ fn main() {
     );
 
     let rows = vec![
-        summary(format!("inline submit n={n} k={cols}"), k, inline_best),
-        summary(format!("handle submit n={n} k={cols}"), k, handle_best),
+        Summary::flat(format!("inline submit n={n} k={cols}"), k, inline_best),
+        Summary::flat(format!("handle submit n={n} k={cols}"), k, handle_best),
     ];
     bench::report("client plane submit path", &rows);
     if let Err(e) = bench::write_json("BENCH_client_plane.json", &rows) {

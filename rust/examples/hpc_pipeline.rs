@@ -101,12 +101,17 @@ fn main() -> anyhow::Result<()> {
             // Session-API-only kinds (handle-based JobSpec; exercised by
             // `photon serve` and tests/integration_session.rs) — this
             // example sticks to the legacy owned-Mat surface.
-            JobKind::LstsqSolve | JobKind::NystromApprox => session_only += 1,
+            JobKind::LstsqSolve
+            | JobKind::NystromApprox
+            | JobKind::HutchPP
+            | JobKind::AdaptiveSvd
+            | JobKind::LstsqPrecond => session_only += 1,
         }
     }
     if session_only > 0 {
         println!(
-            "({session_only}/{} trace jobs are session-API kinds (lstsq/nystrom); \
+            "({session_only}/{} trace jobs are session-API kinds \
+             (lstsq/nystrom/hutch++/adaptive-svd); \
              this legacy-surface example runs the remaining {})",
             trace.len(),
             trace.len() - session_only

@@ -27,7 +27,7 @@ fn main() {
     for &k in &[4usize, 8, 16, 32, 64] {
         let optimal = rel_frobenius_error(&a, &linalg::truncated(&a, k));
 
-        let opts = RandSvdOpts { rank: k, oversample: 8, power_iters: 2 };
+        let opts = RandSvdOpts { rank: k, oversample: 8, power_iters: 2, ..Default::default() };
         let m = k + 8;
 
         let dig = randsvd(&DigitalSketcher::new(m, n, 21 + k as u64), &a, opts);
@@ -50,7 +50,7 @@ fn main() {
     let opu = randsvd(
         &OpuSketcher::new(dev),
         &a,
-        RandSvdOpts { rank: 16, oversample: 8, power_iters: 2 },
+        RandSvdOpts { rank: 16, oversample: 8, power_iters: 2, ..Default::default() },
     );
     println!("\nleading singular values (exact vs OPU-randomized):");
     for i in 0..8 {

@@ -20,6 +20,21 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Flat summary for single-shot measurements (externally timed, one
+    /// ns/op value stands in for every percentile) — the shape the
+    /// end-to-end benches report.
+    pub fn flat(name: String, iters: u64, ns_per_op: f64) -> Self {
+        Self {
+            name,
+            iters,
+            mean_ns: ns_per_op,
+            p50_ns: ns_per_op,
+            p99_ns: ns_per_op,
+            min_ns: ns_per_op,
+            max_ns: ns_per_op,
+        }
+    }
+
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }

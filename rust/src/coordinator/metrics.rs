@@ -38,9 +38,15 @@ pub struct Metrics {
     /// Gauge: bytes resident in the operand store.
     pub store_bytes: AtomicU64,
     /// Operand payload bytes deep-copied on the serving path: only
-    /// multi-request batch merges and plan stage-output publication
-    /// copy; the handle-path single-request pipeline keeps this at zero.
+    /// multi-request batch merges, plan stage-output publication and
+    /// the adaptive rangefinder's parked-basis snapshots copy; the
+    /// handle-path single-request pipeline keeps this at zero.
     pub operand_bytes_copied: AtomicU64,
+    /// Rangefinder ladder passes executed by adaptive jobs
+    /// (`Trace { estimator: HutchPP }` counts its range pass via the
+    /// batcher like any projection; this counter is the per-block pass
+    /// count of `RandSvd { tol }` jobs — the adaptivity observable).
+    pub adaptive_passes: AtomicU64,
     latency_hist: LatencyHist,
 }
 
@@ -107,7 +113,7 @@ impl Metrics {
             "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
              devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
              qos: cancelled={} expired={} busy={} queue_i={} queue_b={} \
-             store_bytes={} copied_bytes={} p50={}us p99={}us",
+             store_bytes={} copied_bytes={} adaptive_passes={} p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -126,6 +132,7 @@ impl Metrics {
             self.queue_batch.load(Ordering::Relaxed),
             self.store_bytes.load(Ordering::Relaxed),
             self.operand_bytes_copied.load(Ordering::Relaxed),
+            self.adaptive_passes.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
         )
@@ -180,6 +187,7 @@ mod tests {
         assert!(r.contains("busy="));
         assert!(r.contains("queue_i="));
         assert!(r.contains("store_bytes="));
+        assert!(r.contains("adaptive_passes="));
     }
 
     #[test]

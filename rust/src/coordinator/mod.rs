@@ -64,9 +64,13 @@ pub use plan::{Plan, PlanError, PlanResult};
 pub use pool::{DeviceId, DevicePool, PoolConfig, PoolDevice};
 pub use request::{
     Device, Job, JobError, JobResponse, JobSpec, OperandRef, Payload, Priority, SubmitError,
-    SubmitOptions, Ticket,
+    SubmitOptions, Ticket, TraceEstimator,
 };
 pub use router::{Availability, HostSketch, Policy, Route, Router, Schedule, ShardAssignment};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, ADAPTIVE_RANGE_BLOCK};
+
+// Re-exported for client convenience: `Lstsq { refine }` takes the same
+// options type the algorithm layer uses.
+pub use crate::randnla::lstsq::LsqrOpts;
 pub use shard::{recombine, ShardCell, ShardPlan};
 pub use store::{mat_bytes, OperandId, OperandStore, StoreError};

@@ -11,7 +11,9 @@
 //!   [`SubmitError::Busy`] once `cap` jobs of that *class* are queued
 //!   (backpressure instead of unbounded memory growth under overload;
 //!   per-class caps mean a Batch pile can never lock the latency tier
-//!   out of admission);
+//!   out of admission); `push_wait` is the blocking flavour — it parks
+//!   the submitter on a condvar until a slot frees (pop or cancel) or
+//!   the queue closes, replacing the old caller-side 1 ms sleep polls;
 //! - **cancellation**: a still-queued job can be removed by id — its
 //!   ticket resolves to [`JobError::Cancelled`] and it never reaches a
 //!   worker;
@@ -52,7 +54,13 @@ struct State {
 /// The coordinator's admission queue.
 pub(crate) struct JobQueue {
     state: Mutex<State>,
+    /// Wakes workers: signalled on push and close.
     cond: Condvar,
+    /// Wakes blocked `push_wait` submitters: signalled whenever a slot
+    /// frees (pop, cancel) and on close. Both classes share it, so slot
+    /// events use `notify_all` — a waiter of the still-full class simply
+    /// re-checks and parks again.
+    space: Condvar,
     cap: usize,
     metrics: Arc<Metrics>,
 }
@@ -67,6 +75,7 @@ impl JobQueue {
                 paused: false,
             }),
             cond: Condvar::new(),
+            space: Condvar::new(),
             cap: cap.max(1),
             metrics,
         }
@@ -90,6 +99,40 @@ impl JobQueue {
         if depth >= self.cap {
             return Err((job, SubmitError::Busy { depth, cap: self.cap }));
         }
+        self.enqueue(&mut s, job);
+        drop(s);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Blocking admission: park on the space condvar until the job's
+    /// class has a free slot, then enqueue. Never returns `Busy`; a
+    /// waiter wakes on both a freed slot (pop/cancel) and on `close`
+    /// (which hands the job back with [`SubmitError::Closed`]). This is
+    /// the legacy-`submit` / plan-executor / CLI admission path — the
+    /// condvar replacement for their former 1 ms sleep-poll loops.
+    pub fn push_wait(&self, job: QueuedJob) -> Result<(), (QueuedJob, SubmitError)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err((job, SubmitError::Closed));
+            }
+            let depth = match job.priority {
+                Priority::Interactive => s.interactive.len(),
+                Priority::Batch => s.batch.len(),
+            };
+            if depth < self.cap {
+                break;
+            }
+            s = self.space.wait(s).unwrap();
+        }
+        self.enqueue(&mut s, job);
+        drop(s);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    fn enqueue(&self, s: &mut State, job: QueuedJob) {
         match job.priority {
             Priority::Interactive => {
                 s.interactive.push_back(job);
@@ -100,9 +143,6 @@ impl JobQueue {
                 self.metrics.queue_batch.fetch_add(1, Ordering::Relaxed);
             }
         }
-        drop(s);
-        self.cond.notify_one();
-        Ok(())
     }
 
     /// Blocking dequeue: Interactive strictly first, then Batch. Returns
@@ -115,10 +155,12 @@ impl JobQueue {
             if drainable {
                 if let Some(job) = s.interactive.pop_front() {
                     self.metrics.queue_interactive.fetch_sub(1, Ordering::Relaxed);
+                    self.space.notify_all();
                     return Some(job);
                 }
                 if let Some(job) = s.batch.pop_front() {
                     self.metrics.queue_batch.fetch_sub(1, Ordering::Relaxed);
+                    self.space.notify_all();
                     return Some(job);
                 }
                 if s.closed {
@@ -151,6 +193,7 @@ impl JobQueue {
         drop(s);
         match removed {
             Some(job) => {
+                self.space.notify_all();
                 self.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
                 let _ = job.resp.send(Err(JobError::Cancelled));
                 true
@@ -159,10 +202,12 @@ impl JobQueue {
         }
     }
 
-    /// Stop admitting; wake every worker. Queued jobs still drain.
+    /// Stop admitting; wake every worker and every blocked submitter.
+    /// Queued jobs still drain.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cond.notify_all();
+        self.space.notify_all();
     }
 
     /// Hold workers (admission continues). Used for drains and to make
@@ -249,6 +294,64 @@ mod tests {
         assert!(!q.cancel(7), "second cancel finds nothing");
         assert_eq!(rx.recv().unwrap().unwrap_err(), JobError::Cancelled);
         assert_eq!(q.depths(), (0, 0));
+    }
+
+    #[test]
+    fn push_wait_waiter_wakes_on_pop() {
+        let q = Arc::new(queue(1));
+        q.push(job(1, Priority::Batch).0).unwrap();
+        let (j2, r2) = job(2, Priority::Batch);
+        let qq = q.clone();
+        let waiter = std::thread::spawn(move || qq.push_wait(j2).is_ok());
+        // The waiter must still be parked while the queue is full.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.depths(), (0, 1), "waiter enqueued without space");
+        assert_eq!(q.pop().unwrap().id, 1, "pop frees the slot");
+        assert!(waiter.join().unwrap(), "waiter failed after space freed");
+        assert_eq!(q.pop().unwrap().id, 2, "waited job was enqueued");
+        drop(r2);
+    }
+
+    #[test]
+    fn push_wait_waiter_wakes_on_close() {
+        let q = Arc::new(queue(1));
+        q.push(job(1, Priority::Batch).0).unwrap();
+        let (j2, _r2) = job(2, Priority::Batch);
+        let qq = q.clone();
+        let waiter =
+            std::thread::spawn(move || matches!(qq.push_wait(j2), Err((_, SubmitError::Closed))));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(waiter.join().unwrap(), "close must hand the job back as Closed");
+        // The job admitted before close still drains.
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn push_wait_cancel_frees_a_slot_for_the_waiter() {
+        let q = Arc::new(queue(1));
+        let (j1, r1) = job(1, Priority::Batch);
+        q.push(j1).unwrap();
+        let (j2, _r2) = job(2, Priority::Batch);
+        let qq = q.clone();
+        let waiter = std::thread::spawn(move || qq.push_wait(j2).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.cancel(1), "queued job cancels");
+        assert!(waiter.join().unwrap());
+        assert_eq!(rx_err(r1), JobError::Cancelled);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    fn rx_err(rx: RespRx) -> JobError {
+        rx.recv().unwrap().unwrap_err()
+    }
+
+    #[test]
+    fn push_wait_with_space_is_immediate() {
+        let q = queue(4);
+        assert!(q.push_wait(job(5, Priority::Interactive).0).is_ok());
+        assert_eq!(q.depths(), (1, 0));
     }
 
     #[test]

@@ -24,6 +24,23 @@ use crate::coordinator::plan::PlanError;
 use crate::coordinator::queue::JobQueue;
 use crate::coordinator::store::OperandId;
 use crate::linalg::Mat;
+use crate::randnla::lstsq::LsqrOpts;
+
+/// Which estimator a `Trace` job runs (the accuracy/cost knob of the
+/// trace family — see `docs/algorithms.md`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum TraceEstimator {
+    /// Plain Hutchinson: one symmetric sketch of size m. Error shrinks
+    /// as 1/sqrt(m) — O(1/eps^2) columns for relative error eps.
+    #[default]
+    Hutchinson,
+    /// Hutch++ (Meyer et al. 2021): the m-column budget splits into a
+    /// range pass (exact low-rank head) and a Hutchinson pass on the
+    /// deflated residual — O(1/eps) columns on decaying spectra. The
+    /// two passes address *different* batch signatures, hence
+    /// independent operators (required for unbiasedness).
+    HutchPP,
+}
 
 /// Which device executed the randomization step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -109,7 +126,11 @@ impl Job {
                 b: OperandRef::Inline(b),
                 m,
             },
-            Job::Trace { a, m } => JobSpec::Trace { a: OperandRef::Inline(a), m },
+            Job::Trace { a, m } => JobSpec::Trace {
+                a: OperandRef::Inline(a),
+                m,
+                estimator: TraceEstimator::Hutchinson,
+            },
             Job::Triangles { adjacency, m } => {
                 JobSpec::Triangles { adjacency: OperandRef::Inline(adjacency), m }
             }
@@ -119,6 +140,7 @@ impl Job {
                 oversample,
                 power_iters,
                 publish_q: false,
+                tol: None,
             },
         }
     }
@@ -149,8 +171,10 @@ pub enum JobSpec {
     /// Approximate A^T B at sketch size m (shared operator via the
     /// signature seed — A and B are projected independently).
     ApproxMatmul { a: OperandRef, b: OperandRef, m: usize },
-    /// Hutchinson trace at sketch size m (A square).
-    Trace { a: OperandRef, m: usize },
+    /// Trace estimate at a total column budget m (A square). The
+    /// `estimator` picks plain Hutchinson or the variance-reduced
+    /// Hutch++ at the same budget.
+    Trace { a: OperandRef, m: usize, estimator: TraceEstimator },
     /// Triangle estimate of an adjacency matrix at sketch size m.
     Triangles { adjacency: OperandRef, m: usize },
     /// The shared intermediate behind Trace/Triangles, exposed as its
@@ -164,17 +188,25 @@ pub enum JobSpec {
     /// trace(B^3)/6 of an already-computed symmetric sketch.
     TrianglesOf { b: OperandRef },
     /// Randomized SVD; with `publish_q` the range basis Q lands in the
-    /// store and its handle rides back in [`JobResponse::aux`].
+    /// store and its handle rides back in [`JobResponse::aux`]. With
+    /// `tol` set, the rank is *chosen* by the incremental rangefinder:
+    /// the basis grows pass by pass (rank+oversample caps it) until the
+    /// measured relative reconstruction error meets `tol`, and the
+    /// returned rank is the smallest that still meets it.
     RandSvd {
         a: OperandRef,
         rank: usize,
         oversample: usize,
         power_iters: usize,
         publish_q: bool,
+        tol: Option<f64>,
     },
     /// Sketch-and-solve least squares: argmin_x ||A x - b|| on the
-    /// compressed system (GA) x ~ (Gb), m sketch rows.
-    Lstsq { a: OperandRef, b: Vec<f64>, m: usize },
+    /// compressed system (GA) x ~ (Gb), m sketch rows. With `refine`
+    /// set, the sketched R becomes a right preconditioner for LSQR on
+    /// the full system (sketch-and-precondition): the answer carries a
+    /// residual guarantee instead of a (1+eps) approximation.
+    Lstsq { a: OperandRef, b: Vec<f64>, m: usize, refine: Option<LsqrOpts> },
     /// Nyström PSD approximation (A G^T)(G A G^T)^+(G A) at sketch
     /// size m with spectral-cutoff pseudo-inverse.
     Nystrom { a: OperandRef, m: usize, rcond: f64 },
@@ -207,17 +239,17 @@ impl JobSpec {
             JobSpec::ApproxMatmul { a, b, m } => {
                 JobSpec::ApproxMatmul { a: f(a)?, b: f(b)?, m }
             }
-            JobSpec::Trace { a, m } => JobSpec::Trace { a: f(a)?, m },
+            JobSpec::Trace { a, m, estimator } => JobSpec::Trace { a: f(a)?, m, estimator },
             JobSpec::Triangles { adjacency, m } => {
                 JobSpec::Triangles { adjacency: f(adjacency)?, m }
             }
             JobSpec::SymmetricSketch { a, m } => JobSpec::SymmetricSketch { a: f(a)?, m },
             JobSpec::TraceOf { b } => JobSpec::TraceOf { b: f(b)? },
             JobSpec::TrianglesOf { b } => JobSpec::TrianglesOf { b: f(b)? },
-            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q } => {
-                JobSpec::RandSvd { a: f(a)?, rank, oversample, power_iters, publish_q }
+            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
+                JobSpec::RandSvd { a: f(a)?, rank, oversample, power_iters, publish_q, tol }
             }
-            JobSpec::Lstsq { a, b, m } => JobSpec::Lstsq { a: f(a)?, b, m },
+            JobSpec::Lstsq { a, b, m, refine } => JobSpec::Lstsq { a: f(a)?, b, m, refine },
             JobSpec::Nystrom { a, m, rcond } => JobSpec::Nystrom { a: f(a)?, m, rcond },
         })
     }
@@ -230,13 +262,20 @@ impl JobSpec {
 pub(crate) enum ResolvedJob {
     Projection { data: Arc<Mat>, m: usize },
     ApproxMatmul { a: Arc<Mat>, b: Arc<Mat>, m: usize },
-    Trace { a: Arc<Mat>, m: usize },
+    Trace { a: Arc<Mat>, m: usize, estimator: TraceEstimator },
     Triangles { adjacency: Arc<Mat>, m: usize },
     SymmetricSketch { a: Arc<Mat>, m: usize },
     TraceOf { b: Arc<Mat> },
     TrianglesOf { b: Arc<Mat> },
-    RandSvd { a: Arc<Mat>, rank: usize, oversample: usize, power_iters: usize, publish_q: bool },
-    Lstsq { a: Arc<Mat>, b: Vec<f64>, m: usize },
+    RandSvd {
+        a: Arc<Mat>,
+        rank: usize,
+        oversample: usize,
+        power_iters: usize,
+        publish_q: bool,
+        tol: Option<f64>,
+    },
+    Lstsq { a: Arc<Mat>, b: Vec<f64>, m: usize, refine: Option<LsqrOpts> },
     Nystrom { a: Arc<Mat>, m: usize, rcond: f64 },
 }
 
@@ -558,13 +597,17 @@ mod tests {
         let spec = Job::Trace { a: Mat::eye(4), m: 2 }.into_spec();
         assert_eq!(spec.kind(), "trace");
         match spec {
-            JobSpec::Trace { a: OperandRef::Inline(m), m: 2 } => assert_eq!(m.rows, 4),
+            JobSpec::Trace {
+                a: OperandRef::Inline(m),
+                m: 2,
+                estimator: TraceEstimator::Hutchinson,
+            } => assert_eq!(m.rows, 4),
             other => panic!("wrong translation: {other:?}"),
         }
         let spec = Job::RandSvd { a: Mat::eye(4), rank: 2, oversample: 1, power_iters: 0 }
             .into_spec();
         match spec {
-            JobSpec::RandSvd { publish_q: false, rank: 2, .. } => {}
+            JobSpec::RandSvd { publish_q: false, rank: 2, tol: None, .. } => {}
             other => panic!("wrong translation: {other:?}"),
         }
     }
@@ -572,11 +615,42 @@ mod tests {
     #[test]
     fn spec_kinds_cover_new_scenarios() {
         let h = OperandRef::Handle(OperandId(1));
-        assert_eq!(JobSpec::Lstsq { a: h.clone(), b: vec![1.0], m: 4 }.kind(), "lstsq");
+        assert_eq!(
+            JobSpec::Lstsq { a: h.clone(), b: vec![1.0], m: 4, refine: None }.kind(),
+            "lstsq"
+        );
         assert_eq!(JobSpec::Nystrom { a: h.clone(), m: 4, rcond: 1e-8 }.kind(), "nystrom");
         assert_eq!(JobSpec::SymmetricSketch { a: h.clone(), m: 4 }.kind(), "symmetric_sketch");
         assert_eq!(JobSpec::TraceOf { b: h.clone() }.kind(), "trace_of");
         assert_eq!(JobSpec::TrianglesOf { b: h }.kind(), "triangles_of");
+    }
+
+    #[test]
+    fn estimator_defaults_to_hutchinson_and_rides_ref_mapping() {
+        assert_eq!(TraceEstimator::default(), TraceEstimator::Hutchinson);
+        let spec = JobSpec::Trace {
+            a: OperandRef::Handle(OperandId(2)),
+            m: 9,
+            estimator: TraceEstimator::HutchPP,
+        };
+        assert_eq!(spec.kind(), "trace");
+        // try_map_refs must carry the estimator (and tol/refine) through.
+        let mapped: Result<JobSpec, ()> = spec.try_map_refs(&mut Ok);
+        match mapped.expect("identity mapping") {
+            JobSpec::Trace { m: 9, estimator: TraceEstimator::HutchPP, .. } => {}
+            other => panic!("estimator dropped: {other:?}"),
+        }
+        let spec = JobSpec::Lstsq {
+            a: OperandRef::Handle(OperandId(3)),
+            b: vec![1.0],
+            m: 4,
+            refine: Some(crate::randnla::lstsq::LsqrOpts { tol: 1e-6, max_iters: 9 }),
+        };
+        let mapped: Result<JobSpec, ()> = spec.try_map_refs(&mut Ok);
+        match mapped.unwrap() {
+            JobSpec::Lstsq { refine: Some(o), .. } => assert_eq!(o.max_iters, 9),
+            other => panic!("refine dropped: {other:?}"),
+        }
     }
 
     #[test]

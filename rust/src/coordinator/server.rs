@@ -34,13 +34,21 @@ use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
 use crate::coordinator::queue::{JobQueue, QueuedJob};
 use crate::coordinator::request::{
     CancelHandle, Device, Job, JobError, JobResponse, JobSpec, OperandRef, Payload, ResolvedJob,
-    SubmitError, SubmitOptions, Ticket,
+    SubmitError, SubmitOptions, Ticket, TraceEstimator,
 };
 use crate::coordinator::router::{Availability, HostSketch, Policy, Router};
 use crate::coordinator::store::{OperandId, OperandStore, StoreError};
 use crate::linalg::{self, matmul_tn, Mat};
 use crate::perfmodel::SketchKind;
+use crate::randnla::adaptive::{rank_for_tol, IncrementalRange};
+use crate::randnla::hutchpp;
+use crate::randnla::lstsq::precond_refine;
 use crate::runtime::{PjrtEngine, PjrtHandle};
+
+/// Base block size of the serving plane's incremental rangefinder ladder
+/// (`RandSvd { tol: Some(_) }` jobs; see
+/// [`crate::randnla::adaptive::block_width`]).
+pub const ADAPTIVE_RANGE_BLOCK: usize = 8;
 
 /// Coordinator configuration.
 pub struct CoordinatorConfig {
@@ -195,13 +203,37 @@ impl Coordinator {
         self.submit_resolved(job, opts)
     }
 
-    /// Queue an already-resolved job. Retry loops live here-abouts:
-    /// `ResolvedJob` clones are `Arc`-cheap, so a `Busy` retry never
-    /// re-copies an operand payload.
+    /// Submit with *blocking* admission: instead of refusing with
+    /// [`SubmitError::Busy`], the caller parks on the queue's space
+    /// condvar until a slot frees (no sleep polling) or the queue
+    /// closes. The typed `submit_spec` stays the backpressure-visible
+    /// path; this is for callers that would otherwise spin on `Busy`
+    /// (drivers feeding a saturated coordinator).
+    pub fn submit_spec_wait(
+        &self,
+        spec: JobSpec,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, SubmitError> {
+        let job = self.resolve(spec)?;
+        self.submit_resolved_with(job, opts, true)
+    }
+
+    /// Queue an already-resolved job, refusing with `Busy` when full.
     fn submit_resolved(
         &self,
         job: ResolvedJob,
         opts: SubmitOptions,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_resolved_with(job, opts, false)
+    }
+
+    /// Shared enqueue: `wait` picks between bounded-refusal `push` and
+    /// condvar-blocking `push_wait` (which never returns `Busy`).
+    fn submit_resolved_with(
+        &self,
+        job: ResolvedJob,
+        opts: SubmitOptions,
+        wait: bool,
     ) -> Result<Ticket, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // The single submit timestamp: client ticket and server latency
@@ -218,7 +250,8 @@ impl Coordinator {
             cancelled: cancelled.clone(),
             priority: opts.priority,
         };
-        match self.queue.push(queued) {
+        let pushed = if wait { self.queue.push_wait(queued) } else { self.queue.push(queued) };
+        match pushed {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(Ticket {
@@ -254,22 +287,17 @@ impl Coordinator {
     /// translates into an inline [`JobSpec`] internally. Never panics —
     /// a refused submission resolves the ticket to the matching error.
     /// Compatibility: the unbounded channel this API fronted accepted
-    /// any burst, so `Busy` backpressure is absorbed by waiting for
-    /// queue space (bounded memory, same eventual completion) rather
-    /// than failing jobs a legacy caller has no way to retry.
+    /// any burst, so `Busy` backpressure is absorbed by blocking on the
+    /// queue's space condvar (bounded memory, same eventual completion)
+    /// rather than failing jobs a legacy caller has no way to retry.
     pub fn submit(&self, job: Job) -> Ticket {
         let resolved = match self.resolve(job.into_spec()) {
             Ok(r) => r,
             Err(e) => return Self::rejected_ticket(e),
         };
-        loop {
-            match self.submit_resolved(resolved.clone(), SubmitOptions::default()) {
-                Ok(t) => return t,
-                Err(SubmitError::Busy { .. }) => {
-                    std::thread::sleep(std::time::Duration::from_millis(1))
-                }
-                Err(e) => return Self::rejected_ticket(e),
-            }
+        match self.submit_resolved_with(resolved, SubmitOptions::default(), true) {
+            Ok(t) => t,
+            Err(e) => Self::rejected_ticket(e),
         }
     }
 
@@ -325,20 +353,15 @@ impl Coordinator {
                 Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
                 Err(other) => return Err(JobError::Rejected(other)),
             };
-            // Busy is a retry-later signal; failing the plan on it would
-            // discard the device work already paid for by earlier
+            // Busy is a wait-for-space signal; failing the plan on it
+            // would discard the device work already paid for by earlier
             // stages. The executor runs on the submitter's thread (not
-            // a worker), so waiting out the backpressure is safe; the
-            // resolved job's clones are Arc-cheap.
-            let resp = loop {
-                match self.submit_resolved(job.clone(), opts) {
-                    Ok(t) => break t.wait()?,
-                    Err(SubmitError::Busy { .. }) => {
-                        std::thread::sleep(std::time::Duration::from_millis(1))
-                    }
-                    Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
-                    Err(other) => return Err(JobError::Rejected(other)),
-                }
+            // a worker), so blocking on the queue's space condvar is
+            // safe (and poll-free).
+            let resp = match self.submit_resolved_with(job, opts, true) {
+                Ok(t) => t.wait()?,
+                Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
+                Err(other) => return Err(JobError::Rejected(other)),
             };
             let handle = match &resp.payload {
                 Payload::Matrix(mat) => {
@@ -383,7 +406,9 @@ impl Coordinator {
             JobSpec::ApproxMatmul { a, b, m } => {
                 ResolvedJob::ApproxMatmul { a: resolve_ref(a)?, b: resolve_ref(b)?, m }
             }
-            JobSpec::Trace { a, m } => ResolvedJob::Trace { a: resolve_ref(a)?, m },
+            JobSpec::Trace { a, m, estimator } => {
+                ResolvedJob::Trace { a: resolve_ref(a)?, m, estimator }
+            }
             JobSpec::Triangles { adjacency, m } => {
                 ResolvedJob::Triangles { adjacency: resolve_ref(adjacency)?, m }
             }
@@ -392,11 +417,13 @@ impl Coordinator {
             }
             JobSpec::TraceOf { b } => ResolvedJob::TraceOf { b: resolve_ref(b)? },
             JobSpec::TrianglesOf { b } => ResolvedJob::TrianglesOf { b: resolve_ref(b)? },
-            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q } => {
+            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
                 let a = resolve_ref(a)?;
-                ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q }
+                ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q, tol }
             }
-            JobSpec::Lstsq { a, b, m } => ResolvedJob::Lstsq { a: resolve_ref(a)?, b, m },
+            JobSpec::Lstsq { a, b, m, refine } => {
+                ResolvedJob::Lstsq { a: resolve_ref(a)?, b, m, refine }
+            }
             JobSpec::Nystrom { a, m, rcond } => {
                 ResolvedJob::Nystrom { a: resolve_ref(a)?, m, rcond }
             }
@@ -485,7 +512,7 @@ fn worker_loop(
                 continue;
             }
         }
-        match execute_job(&svc, &store, &q.job) {
+        match execute_job(&svc, &store, &metrics, &q.job) {
             Ok((payload, device, batched_cols, aux)) => {
                 // fetch_add returns the prior count: a coordinator-wide
                 // completion sequence number (QoS ordering observable).
@@ -530,6 +557,7 @@ type ExecOutcome = (Payload, Device, usize, Vec<(&'static str, OperandId)>);
 fn execute_job(
     svc: &ProjectionService,
     store: &OperandStore,
+    metrics: &Metrics,
     job: &ResolvedJob,
 ) -> Result<ExecOutcome> {
     match job {
@@ -558,10 +586,41 @@ fn execute_job(
                 Vec::new(),
             ))
         }
-        ResolvedJob::Trace { a, m } => {
-            let (b, device, cols) = symmetric_sketch_via(svc, a, *m)?;
-            Ok((Payload::Scalar(b.trace()), device, cols, Vec::new()))
-        }
+        ResolvedJob::Trace { a, m, estimator } => match estimator {
+            TraceEstimator::Hutchinson => {
+                let (b, device, cols) = symmetric_sketch_via(svc, a, *m)?;
+                Ok((Payload::Scalar(b.trace()), device, cols, Vec::new()))
+            }
+            TraceEstimator::HutchPP => {
+                anyhow::ensure!(a.is_square(), "hutch++ trace needs square input");
+                anyhow::ensure!(*m >= 3, "hutch++ needs a column budget >= 3, got {m}");
+                let split = hutchpp::split_budget(*m);
+                anyhow::ensure!(
+                    split.range <= a.rows,
+                    "hutch++ range pass ({} columns) exceeds the {}-dim operand — \
+                     lower the budget or use plain hutchinson",
+                    split.range,
+                    a.rows
+                );
+                // Range pass: Y = A Omega^T through the service. The
+                // residual pass below addresses the *different*
+                // (n, split.resid) signature, so its probes realise an
+                // operator independent of the range columns — the
+                // unbiasedness requirement. (No same-arm constraint
+                // between the two: independent operators are the point.)
+                let yr = svc.project(a.transpose(), split.range)?;
+                let q = linalg::orthonormalize(&yr.result.transpose());
+                let head = matmul_tn(&q, &linalg::matmul(a, &q)).trace();
+                let a_def = Arc::new(hutchpp::deflate(a, &q));
+                let (b, device, cols) = symmetric_sketch_via(svc, &a_def, split.resid)?;
+                Ok((
+                    Payload::Scalar(head + b.trace()),
+                    device,
+                    yr.batch_cols.max(cols),
+                    Vec::new(),
+                ))
+            }
+        },
         ResolvedJob::Triangles { adjacency, m } => {
             let (b, device, cols) = symmetric_sketch_via(svc, adjacency, *m)?;
             let t = linalg::trace_cubed(&b) / 6.0;
@@ -584,40 +643,79 @@ fn execute_job(
                 Vec::new(),
             ))
         }
-        ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q } => {
-            let l = rank + oversample;
-            // Randomization step: Y^T = G A^T through the service.
-            let r = svc.project(a.transpose(), l)?;
-            let y = r.result.transpose();
-            let mut q = linalg::orthonormalize(&y);
+        ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
+            let cap = rank + oversample;
+            // Range finding: one fixed-size pass, or — when a tolerance
+            // drives rank selection — the incremental rangefinder.
+            // `gate` carries the rangefinder's (tol, ||A||^2, resid^2)
+            // readings so rank selection never rescans the operand.
+            let (mut q, mut b, device, batch_cols, gate) = match tol {
+                None => {
+                    // Randomization step: Y^T = G A^T through the service.
+                    let r = svc.project(a.transpose(), cap)?;
+                    let q = linalg::orthonormalize(&r.result.transpose());
+                    (q, None, r.device, r.batch_cols, None)
+                }
+                Some(t) => {
+                    let (res, device, cols) =
+                        adaptive_range_via(svc, store, metrics, a, ADAPTIVE_RANGE_BLOCK, cap, *t)?;
+                    let gate = Some((*t, res.fro2, res.resid2));
+                    (res.q, Some(res.b), device, cols, gate)
+                }
+            };
             for _ in 0..*power_iters {
                 let z = matmul_tn(a, &q);
                 let qz = linalg::orthonormalize(&z);
                 let w = linalg::matmul(a, &qz);
                 q = linalg::orthonormalize(&w);
+                // Power iterations move the basis: the rangefinder's
+                // B = Q^T A no longer describes it.
+                b = None;
             }
-            let b = matmul_tn(&q, a);
+            let b = match b {
+                Some(b) => b,
+                None => matmul_tn(&q, a),
+            };
             let linalg::Svd { u: ub, s, vt } = linalg::svd(&b);
             let u = linalg::matmul(&q, &ub);
+            let k = match gate {
+                // Fixed mode keeps the requested rank.
+                None => (*rank).min(s.len()),
+                // Adaptive mode returns the *smallest* rank meeting the
+                // tolerance — exact: ||A - Q B_k||_F^2 splits into the
+                // basis residual (||A||^2 - ||B||^2) plus the discarded
+                // singular-value tail (orthogonal pieces). The gate's
+                // residual is reused verbatim unless power iterations
+                // moved the basis (then only B is rescanned; ||A||^2
+                // never changes).
+                Some((t, fro2, gate_resid2)) => {
+                    let resid2 = if *power_iters == 0 {
+                        gate_resid2
+                    } else {
+                        let bn2: f64 = b.data.iter().map(|v| v * v).sum();
+                        (fro2 - bn2).max(0.0)
+                    };
+                    rank_for_tol(&s, resid2, fro2, t, *rank)
+                }
+            };
             // Q's last use was computing U: move it into the store.
             let aux = if *publish_q {
                 vec![("q", store.insert(Arc::new(q))?)]
             } else {
                 Vec::new()
             };
-            let k = (*rank).min(s.len());
             Ok((
                 Payload::Svd {
                     u: u.crop(u.rows, k),
                     s: s[..k].to_vec(),
                     vt: vt.crop(k, vt.cols),
                 },
-                r.device,
-                r.batch_cols,
+                device,
+                batch_cols,
                 aux,
             ))
         }
-        ResolvedJob::Lstsq { a, b, m } => {
+        ResolvedJob::Lstsq { a, b, m, refine } => {
             anyhow::ensure!(a.rows == b.len(), "rhs length {} != A rows {}", b.len(), a.rows);
             anyhow::ensure!(
                 *m >= a.cols,
@@ -636,7 +734,16 @@ fn execute_job(
             let rb = pb.wait()?;
             ensure_same_arm(ra.planned, rb.planned, "lstsq")?;
             let sb: Vec<f64> = (0..rb.result.rows).map(|i| rb.result.at(i, 0)).collect();
-            let x = linalg::lstsq(&ra.result, &sb);
+            let x = match refine {
+                // Sketch-and-solve: the (1+eps) answer straight off the
+                // compressed system.
+                None => linalg::lstsq(&ra.result, &sb),
+                // Sketch-and-precondition: QR of the sketched system
+                // right-preconditions LSQR on the full system — an
+                // iteratively refined solve with a residual guarantee,
+                // no extra device pass.
+                Some(opts) => precond_refine(a, b, &ra.result, &sb, *opts).x,
+            };
             Ok((
                 Payload::Vector(x),
                 ra.device,
@@ -712,6 +819,82 @@ fn symmetric_sketch_via(
         s.device,
         s.batch_cols.max(gst.batch_cols),
     ))
+}
+
+/// Incremental rangefinder on the serving plane (blocked randQB with the
+/// exact Frobenius a-posteriori gate — see `randnla/adaptive.rs`). Pass
+/// `i` projects the ladder width `block + i`, i.e. a *distinct*
+/// (n, width) batch signature, so every block realises a fresh
+/// independent operator through the unchanged batcher/shard plane — the
+/// OPU, SRHT, sparse and dense arms all serve adaptive jobs without any
+/// new device code. Between passes the growing basis Q is parked in the
+/// operand store: cross-pass state is quota-accounted and observable
+/// (`store_bytes`), and the copy it costs is charged to
+/// `operand_bytes_copied` like every other serving-path copy.
+fn adaptive_range_via(
+    svc: &ProjectionService,
+    store: &OperandStore,
+    metrics: &Metrics,
+    a: &Arc<Mat>,
+    block: usize,
+    cap: usize,
+    tol: f64,
+) -> Result<(crate::randnla::adaptive::RangeFindResult, Device, usize)> {
+    anyhow::ensure!(
+        tol > 0.0 && tol < 1.0,
+        "adaptive tolerance must lie in (0, 1), got {tol}"
+    );
+    let Some(mut inc) = IncrementalRange::try_new(a, cap, tol) else {
+        anyhow::bail!("adaptive rangefinder needs nonzero input");
+    };
+    let mut parked: Option<OperandId> = None;
+    let mut device = Device::Host;
+    let mut batch_cols = 0usize;
+    // One transpose for every pass: the batcher shares the Arc.
+    let at: Arc<Mat> = Arc::new(a.transpose());
+    let run = (|| -> Result<()> {
+        while !inc.done() {
+            let width = inc.next_width(block);
+            let r = svc.project(at.clone(), width)?;
+            metrics.adaptive_passes.fetch_add(1, Ordering::Relaxed);
+            device = r.device;
+            batch_cols = batch_cols.max(r.batch_cols);
+            if inc.absorb(a, r.result.transpose()) == 0 {
+                break; // block already in span: the basis is complete
+            }
+            // Parking is observability (cross-pass state under the
+            // store's quota accounting), not correctness: an over-quota
+            // store skips the snapshot instead of failing a job whose
+            // in-memory basis is intact.
+            let q = inc.q().expect("just absorbed a block");
+            match store.insert(Arc::new(q.clone())) {
+                Ok(id) => {
+                    let bytes = crate::coordinator::store::mat_bytes(q) as u64;
+                    metrics.operand_bytes_copied.fetch_add(bytes, Ordering::Relaxed);
+                    if let Some(old) = parked.replace(id) {
+                        store.free(old);
+                    }
+                }
+                Err(StoreError::OverQuota { .. }) => {
+                    if let Some(old) = parked.take() {
+                        store.free(old);
+                    }
+                }
+            }
+        }
+        Ok(())
+    })();
+    // The parked basis is pass-to-pass scratch, not a published handle:
+    // always release it (also on the error path — no quota orphans).
+    if let Some(id) = parked.take() {
+        store.free(id);
+    }
+    run?;
+    anyhow::ensure!(
+        inc.q().is_some(),
+        "adaptive rangefinder made no progress (degenerate input)"
+    );
+    Ok((inc.into_result(), device, batch_cols))
 }
 
 #[cfg(test)]
@@ -871,7 +1054,7 @@ mod tests {
         let id = c.upload(a).unwrap();
         let resp = c
             .run_spec(
-                JobSpec::Lstsq { a: OperandRef::Handle(id), b, m: 32 },
+                JobSpec::Lstsq { a: OperandRef::Handle(id), b, m: 32, refine: None },
                 SubmitOptions::default(),
             )
             .unwrap();
@@ -892,7 +1075,7 @@ mod tests {
         let b = vec![0.0; 64];
         let err = c
             .run_spec(
-                JobSpec::Lstsq { a: OperandRef::Inline(a), b, m: 8 },
+                JobSpec::Lstsq { a: OperandRef::Inline(a), b, m: 8, refine: None },
                 SubmitOptions::default(),
             )
             .unwrap_err();
@@ -935,6 +1118,7 @@ mod tests {
                     oversample: 6,
                     power_iters: 1,
                     publish_q: true,
+                    tol: None,
                 },
                 SubmitOptions::default(),
             )
@@ -949,6 +1133,236 @@ mod tests {
         assert!(crate::linalg::rel_frobenius_error(&Mat::eye(12), &qtq) < 1e-10);
         assert!(c.free_operand(qid));
         c.shutdown();
+    }
+
+    #[test]
+    fn hutchpp_trace_job_close_to_truth() {
+        // Hutch++ through the serving plane: on a fast-decaying PSD
+        // matrix the deflated residual is tiny, so even one seeded
+        // estimate lands near the exact trace — far inside the band a
+        // single same-budget Hutchinson sketch can promise.
+        use crate::workload::{psd_with_spectrum, Spectrum};
+        let c = host_coordinator(2);
+        let a = psd_with_spectrum(48, Spectrum::Exponential { decay: 0.6 }, 17);
+        let truth = a.trace();
+        let est = c
+            .run_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Inline(a),
+                    m: 24,
+                    estimator: TraceEstimator::HutchPP,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap()
+            .payload
+            .scalar()
+            .unwrap();
+        let rel = (est - truth).abs() / truth;
+        assert!(rel < 0.05, "hutch++ trace rel err {rel}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn hutchpp_rejects_tiny_budget_typed() {
+        let c = host_coordinator(1);
+        let err = c
+            .run_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Inline(Mat::eye(8)),
+                    m: 2,
+                    estimator: TraceEstimator::HutchPP,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        match err {
+            JobError::Failed(msg) => assert!(msg.contains("budget"), "{msg}"),
+            other => panic!("expected execution failure, got {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn adaptive_randsvd_meets_tol_and_stops_early() {
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = host_coordinator(2);
+        let a = matrix_with_spectrum(48, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 19);
+        let tol = 0.05;
+        let resp = c
+            .run_spec(
+                JobSpec::RandSvd {
+                    a: OperandRef::Inline(a.clone()),
+                    rank: 20,
+                    oversample: 8,
+                    power_iters: 0,
+                    publish_q: false,
+                    tol: Some(tol),
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        match resp.payload {
+            Payload::Svd { u, s, vt } => {
+                // The tolerance drove rank selection below the cap...
+                assert!(s.len() < 20, "no adaptivity: rank {}", s.len());
+                assert!(s.len() >= 6, "rank {} lost the signal", s.len());
+                // ...and the measured error honours it.
+                let rec = linalg::reconstruct(&u, &s, &vt);
+                let rel = crate::linalg::rel_frobenius_error(&a, &rec);
+                assert!(rel <= tol, "adaptive randsvd rel {rel} > tol {tol}");
+            }
+            _ => panic!("wrong payload"),
+        }
+        // The rangefinder ran as multiple ladder passes, and its parked
+        // basis was released (scratch, not a published handle).
+        assert!(c.metrics.adaptive_passes.load(Ordering::Relaxed) >= 1);
+        assert_eq!(c.store().len(), 0, "parked basis leaked");
+        c.shutdown();
+    }
+
+    #[test]
+    fn adaptive_randsvd_survives_an_over_quota_store() {
+        // Basis parking is observability, not correctness: with a store
+        // quota too small for even one snapshot, the adaptive job must
+        // still complete (unparked) instead of failing typed.
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            policy: Policy::ForceHost,
+            batch: quiet_batch(),
+            store_quota: 64, // smaller than any parked basis
+            ..Default::default()
+        })
+        .unwrap();
+        let a = matrix_with_spectrum(32, Spectrum::LowRankPlusNoise { rank: 4, noise: 1e-3 }, 29);
+        let resp = c
+            .run_spec(
+                JobSpec::RandSvd {
+                    a: OperandRef::Inline(a.clone()),
+                    rank: 12,
+                    oversample: 4,
+                    power_iters: 0,
+                    publish_q: false,
+                    tol: Some(0.1),
+                },
+                SubmitOptions::default(),
+            )
+            .expect("over-quota store must not fail the adaptive job");
+        let (u, s, vt) = resp.payload.svd().expect("svd payload");
+        let rec = linalg::reconstruct(u, s, vt);
+        assert!(crate::linalg::rel_frobenius_error(&a, &rec) <= 0.1);
+        assert_eq!(c.store().bytes(), 0, "no snapshot bytes may linger");
+        c.shutdown();
+    }
+
+    #[test]
+    fn refined_lstsq_job_matches_exact_solution() {
+        let c = host_coordinator(2);
+        let mut rng = Xoshiro256::new(23);
+        let a = Mat::gaussian(192, 6, 1.0, &mut rng);
+        let x_true: Vec<f64> = (0..6).map(|_| rng.next_normal()).collect();
+        let mut b = crate::linalg::matvec(&a, &x_true);
+        for v in b.iter_mut() {
+            *v += 0.3 * rng.next_normal();
+        }
+        let exact = crate::randnla::lstsq::exact_lstsq(&a, &b);
+        let resp = c
+            .run_spec(
+                JobSpec::Lstsq {
+                    a: OperandRef::Inline(a),
+                    b,
+                    m: 48,
+                    refine: Some(crate::randnla::lstsq::LsqrOpts::default()),
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        let x = resp.payload.vector().unwrap();
+        // Refinement converges to the true least-squares argmin, not a
+        // (1+eps) approximation of it.
+        for (u, v) in x.iter().zip(&exact) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_spec_wait_blocks_until_space_then_completes() {
+        let c = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            policy: Policy::ForceHost,
+            batch: quiet_batch(),
+            queue_cap: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        c.pause();
+        // Fill the single Batch slot while workers are held.
+        let t1 = c
+            .submit_spec(
+                JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        // The bounded path refuses...
+        assert!(matches!(
+            c.submit_spec(
+                JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 },
+                SubmitOptions::default(),
+            ),
+            Err(SubmitError::Busy { .. })
+        ));
+        // ...the waiting path parks on the space condvar until resume
+        // lets the worker drain a slot.
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                c.submit_spec_wait(
+                    JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 },
+                    SubmitOptions::default(),
+                )
+                .expect("wait-submit")
+                .wait()
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            c.resume();
+            assert!(waiter.join().unwrap().is_ok());
+        });
+        assert!(t1.wait().is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_spec_wait_unblocks_on_close() {
+        let c = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            policy: Policy::ForceHost,
+            batch: quiet_batch(),
+            queue_cap: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        c.pause();
+        let _t1 = c
+            .submit_spec(
+                JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                c.submit_spec_wait(
+                    JobSpec::Projection { data: OperandRef::Inline(Mat::zeros(16, 1)), m: 4 },
+                    SubmitOptions::default(),
+                )
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            c.queue.close();
+            match waiter.join().unwrap() {
+                Err(SubmitError::Closed) => {}
+                other => panic!("expected Closed, got {other:?}"),
+            }
+        });
     }
 
     #[test]

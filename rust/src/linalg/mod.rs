@@ -15,6 +15,10 @@ pub mod svd;
 pub use fwht::{fwht_inplace, fwht_rows, hadamard_sign, padded_pow2};
 pub use mat::Mat;
 pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, trace_cubed, trace_of_product};
-pub use norms::{frobenius, max_abs, rel_frobenius_error, rel_scalar_error, spectral_norm};
-pub use qr::{lstsq, orthonormalize, solve_upper_triangular, thin_qr, ThinQr};
+pub use norms::{
+    frobenius, max_abs, rel_frobenius_error, rel_scalar_error, spectral_norm, vec_dot, vec_norm2,
+};
+pub use qr::{
+    lstsq, orthonormalize, solve_upper_transposed, solve_upper_triangular, thin_qr, ThinQr,
+};
 pub use svd::{reconstruct, svd, truncated, Svd};

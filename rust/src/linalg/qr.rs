@@ -111,6 +111,29 @@ pub fn solve_upper_triangular(r: &Mat, y: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Solve R^T x = y for upper-triangular R by *forward* substitution —
+/// the transpose-preconditioner application of LSQR's adjoint pass
+/// (sketch-and-precondition lstsq). Same singular-diagonal convention as
+/// [`solve_upper_triangular`].
+pub fn solve_upper_transposed(r: &Mat, y: &[f64]) -> Vec<f64> {
+    assert!(r.is_square(), "triangular solve needs square R");
+    assert_eq!(r.rows, y.len());
+    let n = r.rows;
+    let scale = r.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let eps = 1e-13 * scale.max(1.0);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = y[i];
+        for j in 0..i {
+            // (R^T)[i, j] = R[j, i].
+            acc -= r.at(j, i) * x[j];
+        }
+        let d = r.at(i, i);
+        x[i] = if d.abs() > eps { acc / d } else { 0.0 };
+    }
+    x
+}
+
 /// Least squares via thin QR: argmin_x ||A x - b||_2 (A m x n, m >= n).
 pub fn lstsq(a: &Mat, b: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows, b.len(), "rhs length");
@@ -209,6 +232,34 @@ mod tests {
         for (a, b) in x.iter().zip(&x_true) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn transposed_triangular_solve_exact() {
+        let r = Mat::from_rows(&[vec![2.0, 1.0, 0.5], vec![0.0, 3.0, -1.0], vec![0.0, 0.0, 4.0]]);
+        let x_true = [1.0, -2.0, 0.5];
+        // y = R^T x.
+        let y: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| r.at(j, i) * x_true[j]).sum())
+            .collect();
+        let x = solve_upper_transposed(&r, &y);
+        for (a, b) in x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Residual check: R^T x reproduces y.
+        let back: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| r.at(j, i) * x[j]).sum())
+            .collect();
+        for (u, v) in back.iter().zip(&y) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transposed_triangular_solve_singular_no_nan() {
+        let r = Mat::from_rows(&[vec![0.0, 1.0], vec![0.0, 3.0]]);
+        let x = solve_upper_transposed(&r, &[2.0, 3.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -11,8 +11,8 @@ use std::path::PathBuf;
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
-    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, OperandId, OperandRef,
-    Policy, PoolConfig, SubmitError, SubmitOptions, Ticket,
+    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, OperandId,
+    OperandRef, Policy, PoolConfig, SubmitOptions, Ticket, TraceEstimator,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
@@ -35,6 +35,7 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
          [--opu-replicas 1] [--pjrt-replicas 1] [--host-workers 1]
          [--queue-cap 1024] (bounded admission queue; Busy beyond it)
          [--store-mb 1024] (operand-store quota; 0 = unbounded)
+         [--adaptive-tol 0.05] (rel. error target of adaptive-svd jobs)
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
 
@@ -172,6 +173,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         ..Default::default()
     };
     let store_mb = args.get_usize("store-mb", 1024)?;
+    let adaptive_tol = args.get_f64("adaptive-tol", 0.05)?;
+    if adaptive_tol <= 0.0 || adaptive_tol >= 1.0 {
+        return Err(format!("--adaptive-tol must lie in (0, 1), got {adaptive_tol}"));
+    }
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
@@ -199,7 +204,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let mut peak_store = 0usize;
     for spec in &trace {
         reap_finished(&coord, &mut in_flight, &mut ok);
-        let pair = submit_trace_job(&coord, spec, &mut in_flight, &mut ok)?;
+        let pair = submit_trace_job(&coord, spec, adaptive_tol, &mut in_flight, &mut ok)?;
         in_flight.push_back(pair);
         peak_store = peak_store.max(coord.store().bytes());
     }
@@ -265,12 +270,14 @@ fn reap_finished(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) 
 }
 
 /// Build one trace job's operands, upload them, and submit the
-/// handle-based spec. Both backpressure signals are absorbed: a `Busy`
-/// queue by waiting for it to drain, an over-quota store by retiring
-/// the oldest in-flight jobs (blocking) until the upload is admitted.
+/// handle-based spec. Both backpressure signals are absorbed: a full
+/// queue by blocking on its space condvar (`submit_spec_wait`), an
+/// over-quota store by retiring the oldest in-flight jobs (blocking)
+/// until the upload is admitted.
 fn submit_trace_job(
     coord: &Coordinator,
     spec: &traces::JobSpec,
+    adaptive_tol: f64,
     in_flight: &mut InFlight,
     ok: &mut usize,
 ) -> Result<(Ticket, Vec<OperandId>), String> {
@@ -300,9 +307,19 @@ fn submit_trace_job(
             let (a, b) = correlated_pair(spec.n, 0.5, spec.seed);
             JobSpec::ApproxMatmul { a: upload(a)?, b: upload(b)?, m: spec.m }
         }
-        JobKind::TraceEstimate => {
-            JobSpec::Trace { a: upload(psd_matrix(spec.n, spec.n / 2, spec.seed))?, m: spec.m }
-        }
+        JobKind::TraceEstimate => JobSpec::Trace {
+            a: upload(psd_matrix(spec.n, spec.n / 2, spec.seed))?,
+            m: spec.m,
+            estimator: TraceEstimator::Hutchinson,
+        },
+        // Same operand family and column budget as TraceEstimate — the
+        // estimator knob is the only difference, which is exactly the
+        // comparison benches/adaptive.rs grades.
+        JobKind::HutchPP => JobSpec::Trace {
+            a: upload(psd_matrix(spec.n, spec.n / 2, spec.seed))?,
+            m: spec.m.max(3),
+            estimator: TraceEstimator::HutchPP,
+        },
         JobKind::TriangleCount => {
             let g = erdos_renyi(spec.n, 0.05, spec.seed);
             JobSpec::Triangles { adjacency: upload(g.adjacency())?, m: spec.m }
@@ -313,8 +330,19 @@ fn submit_trace_job(
             oversample: 8,
             power_iters: 1,
             publish_q: false,
+            tol: None,
         },
-        JobKind::LstsqSolve => {
+        // Accuracy-first SVD: the rank cap is generous and the
+        // incremental rangefinder decides how much of it to spend.
+        JobKind::AdaptiveSvd => JobSpec::RandSvd {
+            a: upload(psd_matrix(spec.n, spec.n / 8, spec.seed))?,
+            rank: spec.m.min(spec.n / 2).max(8),
+            oversample: 8,
+            power_iters: 0,
+            publish_q: false,
+            tol: Some(adaptive_tol),
+        },
+        JobKind::LstsqSolve | JobKind::LstsqPrecond => {
             let mut rng = Xoshiro256::new(spec.seed);
             let cols = (spec.n / 16).clamp(4, spec.m.max(4));
             let a = Mat::gaussian(spec.n, cols, 1.0, &mut rng);
@@ -323,7 +351,11 @@ fn submit_trace_job(
             for v in b.iter_mut() {
                 *v += 0.1 * rng.next_normal();
             }
-            JobSpec::Lstsq { a: upload(a)?, b, m: spec.m.max(cols) }
+            let refine = match spec.kind {
+                JobKind::LstsqPrecond => Some(LsqrOpts::default()),
+                _ => None,
+            };
+            JobSpec::Lstsq { a: upload(a)?, b, m: spec.m.max(cols), refine }
         }
         JobKind::NystromApprox => JobSpec::Nystrom {
             a: upload(psd_matrix(spec.n, spec.n / 4, spec.seed))?,
@@ -331,15 +363,12 @@ fn submit_trace_job(
             rcond: 1e-8,
         },
     };
-    loop {
-        match coord.submit_spec(job.clone(), SubmitOptions::default()) {
-            Ok(t) => return Ok((t, handles)),
-            Err(SubmitError::Busy { .. }) => {
-                std::thread::sleep(std::time::Duration::from_millis(1))
-            }
-            Err(e) => return Err(e.to_string()),
-        }
-    }
+    // Blocking admission: the queue's space condvar replaces the old
+    // 1 ms Busy sleep-poll loop.
+    coord
+        .submit_spec_wait(job, SubmitOptions::default())
+        .map(|t| (t, handles))
+        .map_err(|e| e.to_string())
 }
 
 fn cmd_info(argv: &[String]) -> Result<(), String> {

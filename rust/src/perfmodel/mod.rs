@@ -182,6 +182,43 @@ pub fn cheapest_digital_sketch(n: usize, m: usize, k: usize) -> (SketchKind, f64
     best
 }
 
+/// Column widths of the incremental rangefinder ladder up to a rank
+/// cap, straight from the canonical schedule
+/// ([`block_width`](crate::randnla::adaptive::block_width) — pass `i`
+/// projects a distinct batch signature), so the widths here are exactly
+/// the batches an adaptive `RandSvd { tol }` job submits when it runs
+/// to its cap.
+pub fn adaptive_block_widths(block: usize, max_rank: usize) -> Vec<usize> {
+    let mut widths = Vec::new();
+    let (mut have, mut pass) = (0usize, 0usize);
+    while have < max_rank {
+        let w = crate::randnla::adaptive::block_width(block, pass);
+        widths.push(w);
+        have += w;
+        pass += 1;
+    }
+    widths
+}
+
+/// Predicted cost of an adaptive rangefinder job that executes `passes`
+/// ladder passes with the given digital operator on a `(n, ·) x k`
+/// signature. Each pass is priced as its own batch — the same per-batch
+/// model `Router::schedule` applies — so this aggregate and the router's
+/// pass-by-pass pricing agree by construction. On the m-linear dense
+/// arm a job that converges after few passes is cheaper than the
+/// fixed-size sketch at the cap; on the structured arms (SRHT/sparse),
+/// whose per-pass cost is dominated by the O(n)-ish input scan rather
+/// than the output width, multiple small passes cost nearly as much as
+/// one big one — adaptivity there buys *rank selection*, not device
+/// time, and the model makes that visible.
+pub fn adaptive_range_ms(kind: SketchKind, n: usize, block: usize, k: usize, passes: usize) -> f64 {
+    (0..passes)
+        .map(|pass| {
+            digital_sketch_ms(kind, n, crate::randnla::adaptive::block_width(block, pass), k)
+        })
+        .sum()
+}
+
 /// Energy-efficiency comparison backing the §I claim (~2 orders of
 /// magnitude): effective random-projection OPS per joule.
 pub fn energy_ratio(opu: &OpuTimingModel, gpu: &GpuModel, n: usize) -> Option<f64> {
@@ -299,6 +336,39 @@ mod tests {
             let slope4 = c4 - 0.01;
             assert!((slope4 / slope1 - 4.0).abs() < 1e-9, "{kind:?} not linear in k");
         }
+    }
+
+    #[test]
+    fn adaptive_ladder_covers_the_cap_with_distinct_widths() {
+        let widths = adaptive_block_widths(8, 64);
+        assert!(widths.iter().sum::<usize>() >= 64, "{widths:?}");
+        assert!(widths.iter().sum::<usize>() < 64 + widths.last().unwrap(), "overshoot");
+        for w in widths.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "ladder must grow by one (distinct signatures)");
+        }
+        assert_eq!(adaptive_block_widths(0, 3), vec![1, 2], "zero block clamps to 1");
+    }
+
+    #[test]
+    fn early_convergence_prices_below_the_fixed_cap_sketch() {
+        // An adaptive randsvd that converges after two 8-wide-ish passes
+        // (17 columns) must be predicted cheaper than one fixed 64-column
+        // sketch; running the full ladder costs more than the one-shot
+        // (the price of adaptivity when the rank guess was right).
+        let n = 4096;
+        let k = 16;
+        let early = adaptive_range_ms(SketchKind::Dense, n, 8, k, 2);
+        let full_passes = adaptive_block_widths(8, 64).len();
+        let full = adaptive_range_ms(SketchKind::Dense, n, 8, k, full_passes);
+        let fixed = digital_sketch_ms(SketchKind::Dense, n, 64, k);
+        assert!(early < fixed, "early {early} !< fixed {fixed}");
+        assert!(full > fixed, "full ladder {full} !> fixed {fixed}");
+        // Structured arms scan the whole input per pass: two sparse
+        // passes already cost about two full sketches — adaptivity buys
+        // rank selection there, not device time.
+        let sparse_two = adaptive_range_ms(SketchKind::Sparse, n, 8, k, 2);
+        let sparse_fixed = digital_sketch_ms(SketchKind::Sparse, n, 64, k);
+        assert!(sparse_two > sparse_fixed, "{sparse_two} vs {sparse_fixed}");
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Incremental rangefinder — blocked randQB with an a-posteriori error
+//! gate (Halko, Martinsson & Tropp 2011 §4.3 / Yu, Gu & Li 2018).
+//!
+//! The fixed-size rangefinder in [`randsvd`](crate::randnla::randsvd())
+//! takes a sketch size `k` and hopes. This module makes accuracy the
+//! input instead: grow an orthonormal basis Q block by block until the
+//! *measured* residual `||A - QQ^T A||_F / ||A||_F` falls below a target
+//! tolerance. The gate is exact and cheap: for orthonormal Q,
+//! `||A - QQ^T A||_F^2 = ||A||_F^2 - ||Q^T A||_F^2`, and `B = Q^T A` is
+//! maintained incrementally anyway (it is the matrix the small SVD runs
+//! on).
+//!
+//! Each pass draws a *fresh, independent* Gaussian block. Through the
+//! serving plane this falls out of the ladder convention encoded in
+//! [`block_width`]: pass `i` projects `block + i` columns, so every pass
+//! addresses a distinct `(n, width)` batch signature — a distinct
+//! signature-seeded operator — without plumbing any salt through the
+//! batcher, and every pass stays on the existing sketch/shard plane
+//! (OPU, SRHT, sparse and dense arms all get adaptivity for free).
+//!
+//! [`IncrementalRange`] is the driver-agnostic core: callers feed it
+//! range blocks (`Y = A·Omega_pass`) and read the gate; the coordinator
+//! parks the growing basis in its operand store between passes (see
+//! `coordinator/server.rs`). [`adaptive_range`] is the in-process
+//! convenience loop over a block-drawing closure.
+
+use crate::linalg::{self, frobenius, matmul, matmul_tn, Mat};
+use crate::randnla::backend::DigitalSketcher;
+
+/// Options for [`adaptive_range`].
+#[derive(Clone, Copy, Debug)]
+pub struct RangeFinderOpts {
+    /// Base block size of the ladder (pass `i` draws `block + i` columns,
+    /// see [`block_width`]).
+    pub block: usize,
+    /// Hard cap on the basis size (the budget the caller is willing to
+    /// pay when the gate never passes).
+    pub max_rank: usize,
+    /// Target relative residual `||A - QQ^T A||_F / ||A||_F`.
+    pub tol: f64,
+}
+
+impl Default for RangeFinderOpts {
+    fn default() -> Self {
+        Self { block: 8, max_rank: 64, tol: 1e-2 }
+    }
+}
+
+/// Width of pass `pass` of the rangefinder ladder. Widths grow by one
+/// per pass so that, through the serving plane, every pass projects a
+/// *distinct* `(n, width)` signature — i.e. a fresh independent operator
+/// — while in-process callers simply use it as a block-size schedule.
+pub fn block_width(block: usize, pass: usize) -> usize {
+    block.max(1) + pass
+}
+
+/// What the rangefinder found.
+pub struct RangeFindResult {
+    /// Orthonormal basis of (an approximation of) A's column space.
+    pub q: Mat,
+    /// `B = Q^T A`, maintained incrementally — feed it straight to the
+    /// small SVD (no recompute) when no power iterations follow.
+    pub b: Mat,
+    /// Measured relative residual `||A - QQ^T A||_F / ||A||_F`.
+    pub rel_err: f64,
+    /// `||A||_F^2`, fixed over the run — exposed so rank selection
+    /// never rescans A.
+    pub fro2: f64,
+    /// The gate's final residual `||A - QQ^T A||_F^2` (valid for this
+    /// basis; stale once power iterations move it).
+    pub resid2: f64,
+    /// Projection passes executed.
+    pub passes: usize,
+    /// Whether the gate passed (false = the rank cap was hit first).
+    pub converged: bool,
+}
+
+/// Driver-agnostic incremental rangefinder state: absorb fresh range
+/// blocks, read the exact Frobenius error gate.
+pub struct IncrementalRange {
+    rows: usize,
+    q: Option<Mat>,
+    b: Option<Mat>,
+    /// ||A||_F^2, fixed at construction.
+    fro2: f64,
+    /// ||Q^T A||_F^2 accumulated over absorbed blocks.
+    bn2: f64,
+    cap: usize,
+    tol: f64,
+    passes: usize,
+}
+
+impl IncrementalRange {
+    /// Start a range find on `a` with basis capped at `cap` columns and
+    /// a relative-error target of `tol`. Panics on an all-zero matrix —
+    /// serving-path callers that must not panic use
+    /// [`try_new`](Self::try_new).
+    pub fn new(a: &Mat, cap: usize, tol: f64) -> Self {
+        Self::try_new(a, cap, tol).expect("adaptive rangefinder needs a nonzero matrix")
+    }
+
+    /// Fallible constructor: `None` when A is all-zero (no column space
+    /// to find; a relative tolerance is meaningless).
+    pub fn try_new(a: &Mat, cap: usize, tol: f64) -> Option<Self> {
+        assert!(
+            tol > 0.0 && tol < 1.0,
+            "relative tolerance must lie in (0, 1), got {tol}"
+        );
+        let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+        if fro2 <= 0.0 {
+            return None;
+        }
+        Some(Self {
+            rows: a.rows,
+            q: None,
+            b: None,
+            fro2,
+            bn2: 0.0,
+            cap: cap.clamp(1, a.rows),
+            tol,
+            passes: 0,
+        })
+    }
+
+    /// Columns in the basis so far.
+    pub fn rank(&self) -> usize {
+        self.q.as_ref().map_or(0, |q| q.cols)
+    }
+
+    /// Passes absorbed so far (the ladder index of the *next* pass).
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+
+    /// Requested width of the next pass for a given base block size.
+    pub fn next_width(&self, block: usize) -> usize {
+        block_width(block, self.passes)
+    }
+
+    /// Measured relative residual `||A - QQ^T A||_F / ||A||_F`.
+    pub fn rel_err(&self) -> f64 {
+        ((self.fro2 - self.bn2).max(0.0) / self.fro2).sqrt()
+    }
+
+    pub fn converged(&self) -> bool {
+        self.rel_err() <= self.tol
+    }
+
+    /// True once the gate passed or the rank cap is exhausted.
+    pub fn done(&self) -> bool {
+        self.converged() || self.rank() >= self.cap
+    }
+
+    /// Current basis, if any block has been absorbed.
+    pub fn q(&self) -> Option<&Mat> {
+        self.q.as_ref()
+    }
+
+    /// Absorb one fresh range block `y = A·Omega_pass` (columns iid
+    /// Gaussian images, independent of every earlier pass): deflate it
+    /// against the current basis (twice, for orthogonality at the
+    /// gate's precision), orthonormalize, append, and update the gate.
+    /// Returns the number of columns actually added — 0 means the block
+    /// was already in the span (caller should stop).
+    pub fn absorb(&mut self, a: &Mat, y: Mat) -> usize {
+        assert_eq!(y.rows, self.rows, "range block rows {} != A rows {}", y.rows, self.rows);
+        self.passes += 1;
+        let take = y.cols.min(self.cap - self.rank());
+        if take == 0 {
+            return 0;
+        }
+        let mut y = y.crop(y.rows, take);
+        if let Some(q) = &self.q {
+            // Two-pass block Gram-Schmidt against the existing basis.
+            for _ in 0..2 {
+                let c = matmul_tn(q, &y);
+                y = y.sub(&matmul(q, &c));
+            }
+        }
+        // Drop columns the basis already explains: machine-noise columns
+        // would seed spurious (non-orthogonal) directions in the QR.
+        let floor = 1e-26 * self.fro2;
+        let kept: Vec<usize> = (0..y.cols)
+            .filter(|&j| (0..y.rows).map(|i| y.at(i, j) * y.at(i, j)).sum::<f64>() > floor)
+            .collect();
+        if kept.is_empty() {
+            return 0;
+        }
+        let y = Mat::from_fn(y.rows, kept.len(), |i, j| y.at(i, kept[j]));
+        let qi = linalg::orthonormalize(&y);
+        let bi = matmul_tn(&qi, a);
+        self.bn2 += frobenius(&bi).powi(2);
+        self.q = Some(match self.q.take() {
+            None => qi,
+            Some(q) => hstack(&q, &qi),
+        });
+        self.b = Some(match self.b.take() {
+            None => bi,
+            Some(b) => vstack(&b, &bi),
+        });
+        kept.len()
+    }
+
+    /// Finish: package basis, `B = Q^T A` and the gate readings.
+    /// Panics if no block was ever absorbed.
+    pub fn into_result(self) -> RangeFindResult {
+        let converged = self.converged();
+        let rel_err = self.rel_err();
+        RangeFindResult {
+            q: self.q.expect("rangefinder absorbed no blocks"),
+            b: self.b.expect("rangefinder absorbed no blocks"),
+            rel_err,
+            fro2: self.fro2,
+            resid2: (self.fro2 - self.bn2).max(0.0),
+            passes: self.passes,
+            converged,
+        }
+    }
+}
+
+/// Grow an orthonormal basis of A's column space until the error gate
+/// passes. `draw(pass, width)` must return a fresh range block
+/// `Y = A·Omega_pass` with up to `width` iid Gaussian-image columns,
+/// independent across passes (fewer columns — or zero — signal an
+/// exhausted source and stop the loop).
+pub fn adaptive_range(
+    a: &Mat,
+    opts: RangeFinderOpts,
+    mut draw: impl FnMut(usize, usize) -> Mat,
+) -> RangeFindResult {
+    let mut inc = IncrementalRange::new(a, opts.max_rank, opts.tol);
+    while !inc.done() {
+        let width = inc.next_width(opts.block);
+        let y = draw(inc.passes(), width);
+        if y.cols == 0 || inc.absorb(a, y) == 0 {
+            break;
+        }
+    }
+    inc.into_result()
+}
+
+/// Host-arm adaptive rangefinder: pass `i` draws its block from a fresh
+/// seed-derived [`DigitalSketcher`] of the ladder width.
+pub fn adaptive_range_digital(a: &Mat, opts: RangeFinderOpts, seed: u64) -> RangeFindResult {
+    adaptive_range(a, opts, |pass, width| {
+        let salt = seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(pass as u64 + 1);
+        let s = DigitalSketcher::new(width, a.cols, salt);
+        s.project(&a.transpose()).transpose()
+    })
+}
+
+/// Smallest rank whose QB-truncation error meets `tol`, given the
+/// singular values `s` of `B = Q^T A`, the basis residual
+/// `resid2 = ||A - QQ^T A||_F^2` and `fro2 = ||A||_F^2`. Exact:
+/// `||A - Q B_k||_F^2 = resid2 + sum_{i>k} s_i^2` (the two terms are
+/// orthogonal). Falls back to `max_rank` when no rank qualifies.
+pub fn rank_for_tol(s: &[f64], resid2: f64, fro2: f64, tol: f64, max_rank: usize) -> usize {
+    if s.is_empty() {
+        return 0;
+    }
+    let cap = max_rank.min(s.len()).max(1);
+    let total: f64 = s.iter().map(|v| v * v).sum();
+    let target = tol * tol * fro2;
+    let mut head = 0.0;
+    for k in 1..=cap {
+        head += s[k - 1] * s[k - 1];
+        if resid2 + (total - head).max(0.0) <= target {
+            return k;
+        }
+    }
+    cap
+}
+
+fn hstack(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    Mat::from_fn(a.rows, a.cols + b.cols, |i, j| {
+        if j < a.cols {
+            a.at(i, j)
+        } else {
+            b.at(i, j - a.cols)
+        }
+    })
+}
+
+fn vstack(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    Mat::from_fn(a.rows + b.rows, a.cols, |i, j| {
+        if i < a.rows {
+            a.at(i, j)
+        } else {
+            b.at(i - a.rows, j)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_frobenius_error;
+    use crate::workload::{matrix_with_spectrum, Spectrum};
+
+    /// Direct measurement of ||A - QQ^T A||_F / ||A||_F.
+    fn measured_rel_err(a: &Mat, q: &Mat) -> f64 {
+        let proj = matmul(q, &matmul_tn(q, a));
+        rel_frobenius_error(a, &proj)
+    }
+
+    #[test]
+    fn ladder_widths_are_distinct_and_grow() {
+        let mut seen = std::collections::HashSet::new();
+        for pass in 0..32 {
+            assert!(seen.insert(block_width(8, pass)), "width collision at pass {pass}");
+        }
+        assert_eq!(block_width(0, 0), 1, "zero block clamps to 1");
+    }
+
+    #[test]
+    fn gate_matches_direct_measurement() {
+        // The cheap gate ||A||^2 - ||B||^2 must agree with the directly
+        // measured projection residual at every pass.
+        let a = matrix_with_spectrum(48, Spectrum::Exponential { decay: 0.8 }, 1);
+        let mut inc = IncrementalRange::new(&a, 32, 1e-12);
+        for pass in 0..4u64 {
+            let s = DigitalSketcher::new(6, 48, 100 + pass);
+            inc.absorb(&a, s.project(&a.transpose()).transpose());
+            let direct = measured_rel_err(&a, inc.q().unwrap());
+            assert!(
+                (inc.rel_err() - direct).abs() < 1e-9,
+                "gate {} vs direct {direct} after pass {pass}",
+                inc.rel_err()
+            );
+        }
+    }
+
+    #[test]
+    fn converges_on_low_rank_and_true_error_meets_tol() {
+        let a = matrix_with_spectrum(64, Spectrum::LowRankPlusNoise { rank: 8, noise: 1e-3 }, 2);
+        let tol = 0.05;
+        let r = adaptive_range_digital(
+            &a,
+            RangeFinderOpts { block: 4, max_rank: 48, tol },
+            7,
+        );
+        assert!(r.converged, "gate never passed (rel {})", r.rel_err);
+        assert!(r.q.cols < 24, "no adaptivity: used {} columns", r.q.cols);
+        let direct = measured_rel_err(&a, &r.q);
+        assert!(direct <= tol, "true error {direct} > tol {tol}");
+        assert!(r.passes >= 2, "should take multiple blocks");
+    }
+
+    #[test]
+    fn cap_stops_unconverged_flat_spectra() {
+        // A flat spectrum cannot be compressed: the cap must end the
+        // loop with converged = false and an honest error reading.
+        let a = matrix_with_spectrum(32, Spectrum::Polynomial { power: 0.1 }, 3);
+        let r = adaptive_range_digital(
+            &a,
+            RangeFinderOpts { block: 4, max_rank: 8, tol: 1e-3 },
+            9,
+        );
+        assert!(!r.converged);
+        assert_eq!(r.q.cols, 8, "cap not respected");
+        assert!(r.rel_err > 1e-3);
+    }
+
+    #[test]
+    fn basis_stays_orthonormal_across_blocks() {
+        let a = matrix_with_spectrum(40, Spectrum::Exponential { decay: 0.7 }, 4);
+        let r = adaptive_range_digital(
+            &a,
+            RangeFinderOpts { block: 5, max_rank: 30, tol: 1e-6 },
+            11,
+        );
+        let qtq = matmul_tn(&r.q, &r.q);
+        let err = rel_frobenius_error(&Mat::eye(r.q.cols), &qtq);
+        assert!(err < 1e-9, "basis drifted from orthonormal: {err}");
+        // And B really is Q^T A.
+        assert!(rel_frobenius_error(&matmul_tn(&r.q, &a), &r.b) < 1e-12);
+    }
+
+    #[test]
+    fn try_new_refuses_zero_matrices_and_result_carries_gate_readings() {
+        assert!(IncrementalRange::try_new(&Mat::zeros(4, 4), 4, 0.1).is_none());
+        let a = matrix_with_spectrum(32, Spectrum::Exponential { decay: 0.7 }, 6);
+        let r = adaptive_range_digital(
+            &a,
+            RangeFinderOpts { block: 4, max_rank: 24, tol: 0.05 },
+            13,
+        );
+        // fro2/resid2 are consistent with the reported relative error —
+        // callers can reuse them instead of rescanning A.
+        let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+        assert!((r.fro2 - fro2).abs() < 1e-9 * fro2, "{} vs {fro2}", r.fro2);
+        let rel_from_fields = (r.resid2 / r.fro2).sqrt();
+        assert!((rel_from_fields - r.rel_err).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_for_tol_picks_the_smallest_sufficient_rank() {
+        // Spectrum 4, 2, 1, 0.1 with no basis residual; fro2 = sum s^2.
+        let s = [4.0, 2.0, 1.0, 0.1];
+        let fro2: f64 = s.iter().map(|v| v * v).sum();
+        // Tail after k=2 is 1.01; tol^2*fro2 must exceed it for k=2.
+        let tol = (1.02f64 / fro2).sqrt();
+        assert_eq!(rank_for_tol(&s, 0.0, fro2, tol, 4), 2);
+        // Impossible tolerance falls back to the cap.
+        assert_eq!(rank_for_tol(&s, 1.0, fro2, 1e-9, 3), 3);
+        // Everything passes at a loose tolerance with one rank.
+        assert_eq!(rank_for_tol(&s, 0.0, fro2, 0.9, 4), 1);
+    }
+}

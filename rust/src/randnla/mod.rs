@@ -4,8 +4,10 @@
 //! randomization step can run on the simulated OPU, the host CPU, or the
 //! AOT-compiled PJRT path — the comparison that *is* the paper.
 
+pub mod adaptive;
 pub mod backend;
 pub mod features;
+pub mod hutchpp;
 pub mod lstsq;
 pub mod matmul;
 pub mod nystrom;
@@ -15,9 +17,16 @@ pub mod structured;
 pub mod trace;
 pub mod triangles;
 
+pub use adaptive::{
+    adaptive_range, adaptive_range_digital, rank_for_tol, IncrementalRange, RangeFindResult,
+    RangeFinderOpts,
+};
 pub use backend::{CounterSketcher, DigitalSketcher, PjrtSketcher, Sketcher};
 pub use features::{gram_from_features, RffMap};
-pub use lstsq::{exact_lstsq, sketched_lstsq};
+pub use hutchpp::{hutchpp, hutchpp_digital, split_budget, HutchPPSplit};
+pub use lstsq::{
+    exact_lstsq, sketch_precond_lstsq, sketched_lstsq, LsqrOpts, PrecondLstsq,
+};
 pub use matmul::{approx_matmul_tn, exact_matmul_tn};
 pub use nystrom::nystrom;
 pub use randsvd::{randsvd, RandSvd, RandSvdOpts};

@@ -6,6 +6,7 @@
 //! 3. Q = thinQR(Y); small exact SVD of Q^T A; left factor lifted by Q.
 
 use crate::linalg::{self, matmul, matmul_tn, Mat};
+use crate::randnla::adaptive::{rank_for_tol, IncrementalRange};
 use crate::randnla::backend::Sketcher;
 
 /// RandSVD output: rank-k factors, singular values descending.
@@ -13,31 +14,51 @@ pub struct RandSvd {
     pub u: Mat,
     pub s: Vec<f64>,
     pub vt: Mat,
-    /// Columns actually used for the range (k + oversample).
+    /// Columns actually used for the range (<= rank + oversample; fewer
+    /// when an adaptive `tol` stopped the rangefinder early).
     pub l: usize,
 }
 
 /// Options for the decomposition.
 #[derive(Clone, Copy, Debug)]
 pub struct RandSvdOpts {
+    /// Target rank — in adaptive mode (`tol` set) the *maximum* rank.
     pub rank: usize,
     pub oversample: usize,
     /// Power iterations (q in HMT); 0 is plain range finding.
     pub power_iters: usize,
+    /// Adaptive accuracy: when set, the range basis grows in blocks of
+    /// [`block`](Self::block) columns until the measured relative
+    /// reconstruction error `||A - QQ^T A||_F / ||A||_F` falls below
+    /// this (rank + oversample caps the budget), and the returned rank
+    /// is the smallest that still meets it. `None` keeps the classic
+    /// fixed-size range find.
+    pub tol: Option<f64>,
+    /// Block size of the adaptive rangefinder (ignored without `tol`).
+    pub block: usize,
 }
 
 impl Default for RandSvdOpts {
     fn default() -> Self {
-        Self { rank: 16, oversample: 8, power_iters: 2 }
+        Self { rank: 16, oversample: 8, power_iters: 2, tol: None, block: 8 }
     }
 }
 
 /// Compute a rank-`opts.rank` approximate SVD of `a` (n x n or rectangular
 /// with rows = sketcher.n()). The sketcher must have m >= rank+oversample;
 /// its first l rows are used as Omega^T.
+///
+/// With `opts.tol` set, rank selection is adaptive: the basis consumes
+/// the projection's columns in rangefinder blocks until the exact
+/// Frobenius error gate passes (row-slices of one Gaussian operator are
+/// iid, so the blocks are fresh), and the returned rank is the smallest
+/// meeting the tolerance. The algorithm layer pays one device pass of
+/// the full budget either way; the serving plane's `RandSvd { tol }` job
+/// instead grows pass by pass and only pays for the columns it uses
+/// (see `coordinator/server.rs`).
 pub fn randsvd(sketcher: &dyn Sketcher, a: &Mat, opts: RandSvdOpts) -> RandSvd {
-    let l = opts.rank + opts.oversample;
-    assert!(l <= sketcher.m(), "sketcher m {} < rank+oversample {l}", sketcher.m());
+    let cap = opts.rank + opts.oversample;
+    assert!(cap <= sketcher.m(), "sketcher m {} < rank+oversample {cap}", sketcher.m());
     assert_eq!(
         a.cols,
         sketcher.n(),
@@ -48,26 +69,66 @@ pub fn randsvd(sketcher: &dyn Sketcher, a: &Mat, opts: RandSvdOpts) -> RandSvd {
 
     // Y = A Omega with Omega = G^T (n x m): the device computes G A^T
     // (= Y^T), so the *randomization* step is one OPU/PJRT projection of
-    // A^T — exactly the offload the paper proposes. Keep l columns.
+    // A^T — exactly the offload the paper proposes. Keep cap columns.
     let yt = sketcher.project(&a.transpose()); // (m x a.rows)
     let y_full = yt.transpose(); // (a.rows x m)
-    let y = y_full.crop(y_full.rows, l.min(y_full.cols));
+    let y_full = y_full.crop(y_full.rows, cap.min(y_full.cols));
+
+    // `gate` carries the rangefinder's (tol, ||A||^2, resid^2) readings
+    // so rank selection never rescans the operand.
+    let (mut q, mut range_b, gate) = match opts.tol {
+        None => (linalg::orthonormalize(&y_full), None, None),
+        Some(tol) => {
+            let mut inc = IncrementalRange::new(a, cap, tol);
+            let mut used = 0usize;
+            while !inc.done() && used < y_full.cols {
+                let width = inc.next_width(opts.block).min(y_full.cols - used);
+                let block = y_full.col_slice(used, width);
+                used += width;
+                if inc.absorb(a, block) == 0 {
+                    break;
+                }
+            }
+            let res = inc.into_result();
+            let gate = Some((tol, res.fro2, res.resid2));
+            (res.q, Some(res.b), gate)
+        }
+    };
 
     // Power iterations with re-orth: Y <- A (A^T Q(Y)).
-    let mut q = linalg::orthonormalize(&y);
     for _ in 0..opts.power_iters {
         let z = matmul_tn(a, &q); // A^T Q
         let qz = linalg::orthonormalize(&z);
         let w = matmul(a, &qz); // A Q(Z)
         q = linalg::orthonormalize(&w);
+        range_b = None; // the basis moved: Q^T A must be recomputed
     }
 
     // Small exact SVD in the compressed space.
-    let b = matmul_tn(&q, a); // (l x cols)
+    let b = match range_b {
+        Some(b) => b,
+        None => matmul_tn(&q, a), // (l x cols)
+    };
+    let l = q.cols;
     let linalg::Svd { u: ub, s, vt } = linalg::svd(&b);
     let u = matmul(&q, &ub);
 
-    let k = opts.rank.min(s.len());
+    let k = match gate {
+        None => opts.rank.min(s.len()),
+        // Smallest rank meeting the tolerance, exactly:
+        // ||A - Q B_k||^2 = (||A||^2 - ||B||^2) + tail_k(s)^2. The
+        // gate's residual is reused unless power iterations moved the
+        // basis (then only B is rescanned; ||A||^2 never changes).
+        Some((tol, fro2, gate_resid2)) => {
+            let resid2 = if opts.power_iters == 0 {
+                gate_resid2
+            } else {
+                let bn2: f64 = b.data.iter().map(|v| v * v).sum();
+                (fro2 - bn2).max(0.0)
+            };
+            rank_for_tol(&s, resid2, fro2, tol, opts.rank)
+        }
+    };
     RandSvd {
         u: u.crop(u.rows, k),
         s: s[..k].to_vec(),
@@ -97,7 +158,8 @@ mod tests {
         let n = 64;
         let a = low_rank(n, 8, 1);
         let s = DigitalSketcher::new(24, n, 2);
-        let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+        let opts = RandSvdOpts { rank: 8, oversample: 8, power_iters: 2, ..Default::default() };
+        let r = randsvd(&s, &a, opts);
         let rec = reconstruct(&r);
         let rel = rel_frobenius_error(&a, &rec);
         assert!(rel < 0.02, "low-rank recovery: {rel}");
@@ -109,7 +171,8 @@ mod tests {
         let a = matrix_with_spectrum(n, Spectrum::Exponential { decay: 0.7 }, 3);
         let exact = linalg::svd(&a).s;
         let s = DigitalSketcher::new(32, n, 4);
-        let r = randsvd(&s, &a, RandSvdOpts { rank: 10, oversample: 10, power_iters: 2 });
+        let opts = RandSvdOpts { rank: 10, oversample: 10, power_iters: 2, ..Default::default() };
+        let r = randsvd(&s, &a, opts);
         for i in 0..6 {
             let rel = (r.s[i] - exact[i]).abs() / exact[i];
             assert!(rel < 0.05, "sigma_{i}: {} vs {} ({rel})", r.s[i], exact[i]);
@@ -121,7 +184,8 @@ mod tests {
         let n = 40;
         let a = low_rank(n, 6, 5);
         let s = DigitalSketcher::new(20, n, 6);
-        let r = randsvd(&s, &a, RandSvdOpts { rank: 6, oversample: 6, power_iters: 1 });
+        let opts = RandSvdOpts { rank: 6, oversample: 6, power_iters: 1, ..Default::default() };
+        let r = randsvd(&s, &a, opts);
         let utu = matmul_tn(&r.u, &r.u);
         assert!(rel_frobenius_error(&Mat::eye(6), &utu) < 1e-9);
         let vvt = matmul(&r.vt, &r.vt.transpose());
@@ -137,7 +201,7 @@ mod tests {
             let r = randsvd(
                 &s,
                 &a,
-                RandSvdOpts { rank: 8, oversample: 8, power_iters: q },
+                RandSvdOpts { rank: 8, oversample: 8, power_iters: q, ..Default::default() },
             );
             let rec = reconstruct(&r);
             // Compare against the optimal rank-8 truncation.
@@ -156,7 +220,8 @@ mod tests {
         let k = 8;
         let best_err = rel_frobenius_error(&a, &linalg::truncated(&a, k));
         let s = DigitalSketcher::new(32, n, 10);
-        let r = randsvd(&s, &a, RandSvdOpts { rank: k, oversample: 12, power_iters: 2 });
+        let opts = RandSvdOpts { rank: k, oversample: 12, power_iters: 2, ..Default::default() };
+        let r = randsvd(&s, &a, opts);
         let rand_err = rel_frobenius_error(&a, &reconstruct(&r));
         assert!(
             rand_err < 1.3 * best_err + 1e-9,
@@ -165,10 +230,69 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_tol_meets_target_and_stops_early() {
+        let n = 64;
+        let a = low_rank(n, 8, 21);
+        let tol = 0.05;
+        let s = DigitalSketcher::new(32, n, 22);
+        let r = randsvd(
+            &s,
+            &a,
+            RandSvdOpts {
+                rank: 24,
+                oversample: 8,
+                power_iters: 0,
+                tol: Some(tol),
+                block: 4,
+            },
+        );
+        // The gate stopped the rangefinder well before the 32-column cap
+        // and the tolerance picked the rank.
+        assert!(r.l < 24, "no adaptivity: used {} columns", r.l);
+        assert!(r.s.len() >= 8, "rank {} lost the signal", r.s.len());
+        assert!(r.s.len() < 24, "rank selection did not engage");
+        let rel = rel_frobenius_error(&a, &reconstruct(&r));
+        assert!(rel <= tol, "measured error {rel} > tol {tol}");
+    }
+
+    #[test]
+    fn adaptive_tol_with_power_iters_still_meets_tol() {
+        let n = 48;
+        let a = matrix_with_spectrum(n, Spectrum::Exponential { decay: 0.7 }, 23);
+        let tol = 0.1;
+        let s = DigitalSketcher::new(32, n, 24);
+        let r = randsvd(
+            &s,
+            &a,
+            RandSvdOpts { rank: 20, oversample: 8, power_iters: 2, tol: Some(tol), block: 4 },
+        );
+        let rel = rel_frobenius_error(&a, &reconstruct(&r));
+        assert!(rel <= tol, "measured error {rel} > tol {tol}");
+        assert!(r.s.len() <= 20);
+    }
+
+    #[test]
+    fn adaptive_cap_bounds_the_budget_on_flat_spectra() {
+        // A near-flat spectrum cannot meet a tight tolerance: the basis
+        // must stop at the rank+oversample cap instead of running away.
+        let n = 40;
+        let a = matrix_with_spectrum(n, Spectrum::Polynomial { power: 0.1 }, 25);
+        let s = DigitalSketcher::new(16, n, 26);
+        let r = randsvd(
+            &s,
+            &a,
+            RandSvdOpts { rank: 12, oversample: 4, power_iters: 0, tol: Some(1e-6), block: 4 },
+        );
+        assert_eq!(r.l, 16, "cap not respected: {} columns", r.l);
+        assert_eq!(r.s.len(), 12, "falls back to max rank");
+    }
+
+    #[test]
     #[should_panic(expected = "rank+oversample")]
     fn rejects_undersized_sketcher() {
         let a = low_rank(32, 4, 11);
         let s = DigitalSketcher::new(8, 32, 12);
-        randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 0 });
+        let opts = RandSvdOpts { rank: 8, oversample: 8, power_iters: 0, ..Default::default() };
+        randsvd(&s, &a, opts);
     }
 }

@@ -192,7 +192,12 @@ pub fn randsvd_panel(cfg: &Fig1Config) -> Vec<Row> {
         for arm in ["digital", "opu"] {
             let errs: Vec<f64> = (0..cfg.trials as u64)
                 .map(|t| {
-                    let opts = RandSvdOpts { rank: k, oversample: 8, power_iters: 2 };
+                    let opts = RandSvdOpts {
+                        rank: k,
+                        oversample: 8,
+                        power_iters: 2,
+                        ..Default::default()
+                    };
                     let m = k + 8;
                     let r = match arm {
                         "digital" => randsvd(&cfg.digital(m, t), &a, opts),

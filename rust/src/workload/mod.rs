@@ -53,6 +53,24 @@ pub fn matrix_with_spectrum(n: usize, spectrum: Spectrum, seed: u64) -> Mat {
     matmul_nt(&us, &v)
 }
 
+/// Random symmetric PSD matrix with *prescribed eigenvalues*:
+/// A = V diag(s) V^T with a Haar-ish orthonormal V. The spectrum knobs of
+/// [`matrix_with_spectrum`] for the estimators that need symmetry (trace,
+/// Hutch++, Nyström) — trace and Frobenius norm are known in closed form
+/// from the spectrum.
+pub fn psd_with_spectrum(n: usize, spectrum: Spectrum, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let s = spectrum.singular_values(n);
+    let v = crate::linalg::orthonormalize(&Mat::gaussian(n, n, 1.0, &mut rng));
+    let mut vs = v.clone();
+    for i in 0..n {
+        for j in 0..n {
+            *vs.at_mut(i, j) *= s[j];
+        }
+    }
+    matmul_nt(&vs, &v)
+}
+
 /// Random PSD matrix A = B B^T / cols(B), trace known analytically only
 /// after the fact — callers read `Mat::trace()` as ground truth.
 pub fn psd_matrix(n: usize, inner: usize, seed: u64) -> Mat {
@@ -103,6 +121,27 @@ mod tests {
         let a = matrix_with_spectrum(n, spec, 9);
         let got = svd(&a).s;
         let want = spec.singular_values(n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn psd_with_spectrum_realises_prescribed_eigenvalues() {
+        let n = 20;
+        let spec = Spectrum::Exponential { decay: 0.7 };
+        let a = psd_with_spectrum(n, spec, 11);
+        // Symmetric...
+        for i in 0..n {
+            for j in 0..n {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-10);
+            }
+        }
+        // ...with the spectrum's trace and singular values.
+        let want = spec.singular_values(n);
+        let tr: f64 = want.iter().sum();
+        assert!((a.trace() - tr).abs() < 1e-8, "{} vs {tr}", a.trace());
+        let got = svd(&a).s;
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-8, "{g} vs {w}");
         }

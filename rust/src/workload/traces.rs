@@ -21,15 +21,27 @@ pub enum JobKind {
     LstsqSolve,
     /// Nyström PSD approximation.
     NystromApprox,
+    /// Hutch++ trace of a PSD matrix (variance-reduced; same column
+    /// budget convention as `TraceEstimate`).
+    HutchPP,
+    /// Tolerance-driven randomized SVD through the incremental
+    /// rangefinder (`RandSvd { tol: Some(_) }`).
+    AdaptiveSvd,
+    /// Sketch-and-precondition least squares (`Lstsq { refine }`): the
+    /// sketched QR right-preconditions LSQR on the full system.
+    LstsqPrecond,
 }
 
-pub const ALL_KINDS: [JobKind; 6] = [
+pub const ALL_KINDS: [JobKind; 9] = [
     JobKind::SketchMatmul,
     JobKind::TraceEstimate,
     JobKind::TriangleCount,
     JobKind::RandSvd,
     JobKind::LstsqSolve,
     JobKind::NystromApprox,
+    JobKind::HutchPP,
+    JobKind::AdaptiveSvd,
+    JobKind::LstsqPrecond,
 ];
 
 /// One job in a trace.

@@ -101,7 +101,7 @@ fn randsvd_optical_matches_optimal_within_slack() {
     let r = randsvd(
         &opu(k + 8, n, 5),
         &a,
-        RandSvdOpts { rank: k, oversample: 8, power_iters: 2 },
+        RandSvdOpts { rank: k, oversample: 8, power_iters: 2, ..Default::default() },
     );
     let rec = linalg::reconstruct(&r.u, &r.s, &r.vt);
     let got = rel_frobenius_error(&a, &rec);

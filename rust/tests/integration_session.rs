@@ -299,7 +299,7 @@ fn failing_plan_stage_frees_partial_handles() {
     plan.stage(JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 6 });
     // Undersized lstsq sketch: this stage fails at execution, after the
     // sketch stage already parked its output in the store.
-    plan.stage(JobSpec::Lstsq { a: OperandRef::Handle(id), b: vec![0.0; 24], m: 2 });
+    plan.stage(JobSpec::Lstsq { a: OperandRef::Handle(id), b: vec![0.0; 24], m: 2, refine: None });
     let err = c.run_plan(&plan, SubmitOptions::default()).unwrap_err();
     assert!(matches!(err, JobError::Failed(_)), "{err:?}");
     assert_eq!(c.store().bytes(), before, "failed plan leaked stage handles");

@@ -208,7 +208,8 @@ fn srht_randsvd_recovers_low_rank_within_seed_tolerance() {
     let n = 64;
     let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank: 8, noise: 1e-3 }, 1);
     let s = SrhtSketcher::new(24, n, 2);
-    let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+    let opts = RandSvdOpts { rank: 8, oversample: 8, power_iters: 2, ..Default::default() };
+    let r = randsvd(&s, &a, opts);
     let rec = photonic_randnla::randnla::randsvd::reconstruct(&r);
     let rel = rel_frobenius_error(&a, &rec);
     assert!(rel < 0.02, "srht randsvd recovery: {rel}");
@@ -219,7 +220,8 @@ fn sparse_randsvd_recovers_low_rank_within_seed_tolerance() {
     let n = 64;
     let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank: 8, noise: 1e-3 }, 3);
     let s = SparseSignSketcher::new(24, n, 8, 4);
-    let r = randsvd(&s, &a, RandSvdOpts { rank: 8, oversample: 8, power_iters: 2 });
+    let opts = RandSvdOpts { rank: 8, oversample: 8, power_iters: 2, ..Default::default() };
+    let r = randsvd(&s, &a, opts);
     let rec = photonic_randnla::randnla::randsvd::reconstruct(&r);
     let rel = rel_frobenius_error(&a, &rec);
     assert!(rel < 0.02, "sparse randsvd recovery: {rel}");
