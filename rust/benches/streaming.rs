@@ -1,0 +1,216 @@
+//! Bench: the streaming ingestion plane — one-pass randSVD memory
+//! footprint vs the resident-operand path.
+//!
+//! ```bash
+//! cargo bench --bench streaming [-- --quick]
+//! ```
+//!
+//! The subsystem's whole claim: a chunked operand is served at a small,
+//! fixed fraction of the resident footprint without giving up seeded
+//! accuracy. Two runs over the same low-rank-plus-noise target:
+//!
+//! - **resident** — upload the full n x n operand, run `RandSvd` against
+//!   the handle (peak store bytes = the operand);
+//! - **streaming** — `begin_stream` / chunked `append` / `seal`, then
+//!   the one-pass `RandSvd` over the stream handle (peak resident bytes
+//!   = the `stream_resident_bytes` gauge: chunk buffer + summaries).
+//!
+//! Acceptance gates (hard, both modes):
+//! 1. streaming peak resident bytes <= 25% of the resident operand;
+//! 2. equal seeded accuracy: streaming reconstruction error within
+//!    0.02 absolute of the resident run's.
+//!
+//! Emits BENCH_streaming.json.
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use photonic_randnla::bench::{self, Summary};
+use photonic_randnla::coordinator::{
+    mat_bytes, BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy,
+    PoolConfig, StreamOpts, SubmitOptions,
+};
+use photonic_randnla::linalg::{self, rel_frobenius_error, Mat};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::perfmodel::{stream_ingest_ms, SketchKind};
+use photonic_randnla::rng::Xoshiro256;
+
+fn coordinator(chunk_rows: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        stream_chunk_rows: chunk_rows,
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Low-rank-plus-noise target built in O(n^2 * rank) (no dense SVD of an
+/// n x n matrix at bench scale).
+fn low_rank_target(n: usize, rank: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    let l = Mat::gaussian(n, rank, 1.0, &mut rng);
+    let r = Mat::gaussian(rank, n, 1.0, &mut rng);
+    let mut a = linalg::matmul(&l, &r).scale(1.0 / (rank as f64).sqrt());
+    for v in a.data.iter_mut() {
+        *v += 1e-3 * rng.next_normal();
+    }
+    a
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 1024 } else { 4096 };
+    let chunk_rows = if quick { 64 } else { 256 };
+    let rank = if quick { 12 } else { 24 };
+    let oversample = 8usize;
+    let cap = rank + oversample;
+    let sketch_m = 4 * cap;
+    let fd_rank = 2 * rank;
+
+    let a = low_rank_target(n, rank, 1);
+    let operand_bytes = mat_bytes(&a);
+    println!(
+        "== streaming one-pass randSVD: n={n}, chunk={chunk_rows}, rank={rank} \
+         (operand {:.1} MiB) ==",
+        operand_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    // ---- resident path --------------------------------------------------
+    let c = coordinator(chunk_rows);
+    let t0 = Instant::now();
+    let id = c.upload(a.clone()).expect("upload");
+    let resident_peak = c.store().bytes();
+    let resp = c
+        .run_spec(
+            JobSpec::RandSvd {
+                a: OperandRef::Handle(id),
+                rank,
+                oversample,
+                power_iters: 0,
+                publish_q: false,
+                tol: None,
+            },
+            SubmitOptions::default(),
+        )
+        .expect("resident randsvd");
+    let resident_ns = t0.elapsed().as_nanos() as f64;
+    let (u, s, vt) = resp.payload.svd().expect("svd payload");
+    let resident_err = rel_frobenius_error(&a, &linalg::reconstruct(u, s, vt));
+    c.free_operand(id);
+    c.shutdown();
+
+    // ---- streaming path -------------------------------------------------
+    let c = coordinator(chunk_rows);
+    let t0 = Instant::now();
+    let sid = c
+        .begin_stream(
+            n,
+            n,
+            StreamOpts {
+                chunk_rows: None,
+                sketch_m,
+                fd_rank,
+                range_cap: cap,
+            },
+        )
+        .expect("begin stream");
+    // The stream's lifetime peak IS the gauge right after begin: the
+    // footprint is a constant (chunk buffer + summaries) that only
+    // shrinks at seal — this is the metric the acceptance gate bounds.
+    let open_peak = c.metrics.stream_resident_bytes.load(Ordering::Relaxed) as usize;
+    let mut r0 = 0usize;
+    while r0 < n {
+        let r1 = (r0 + chunk_rows).min(n);
+        let piece = Mat::from_fn(r1 - r0, n, |i, j| a.at(r0 + i, j));
+        c.append_stream(sid, &piece).expect("append");
+        r0 = r1;
+    }
+    c.seal_stream(sid).expect("seal");
+    let ingest_ns = t0.elapsed().as_nanos() as f64;
+    let stream_peak = c.store().bytes();
+    let stream_gauge = c.metrics.stream_resident_bytes.load(Ordering::Relaxed) as usize;
+    let expected_open = (chunk_rows * n + cap * n + sketch_m * n + 2 * fd_rank * n) * 8;
+    assert_eq!(open_peak, expected_open, "gauge drifted from the reserve formula");
+
+    let t0 = Instant::now();
+    let resp = c
+        .run_spec(
+            JobSpec::RandSvd {
+                a: OperandRef::Stream(sid),
+                rank,
+                oversample,
+                power_iters: 0,
+                publish_q: false,
+                tol: None,
+            },
+            SubmitOptions::default(),
+        )
+        .expect("streaming randsvd");
+    let svd_ns = t0.elapsed().as_nanos() as f64;
+    let (u, s, vt) = resp.payload.svd().expect("svd payload");
+    let stream_err = rel_frobenius_error(&a, &linalg::reconstruct(u, s, vt));
+    let chunks = c.metrics.stream_chunks.load(Ordering::Relaxed);
+    c.free_stream(sid);
+    assert_eq!(c.store().bytes(), 0, "freed stream leaked quota bytes");
+    c.shutdown();
+
+    let rows = vec![
+        Summary::flat(format!("resident randsvd n={n}"), 1, resident_ns),
+        // Per-chunk cost, matching the ns/op convention of every other
+        // bench artifact.
+        Summary::flat(
+            format!("stream ingest n={n} chunk={chunk_rows}"),
+            chunks,
+            ingest_ns / chunks.max(1) as f64,
+        ),
+        Summary::flat(format!("stream one-pass svd n={n}"), 1, svd_ns),
+    ];
+    bench::report("streaming ingestion plane", &rows);
+    if let Err(e) = bench::write_json("BENCH_streaming.json", &rows) {
+        eprintln!("(could not write BENCH_streaming.json: {e})");
+    }
+
+    let predicted = stream_ingest_ms(SketchKind::Dense, n, chunk_rows, sketch_m, n);
+    println!(
+        "\nfootprint: resident {:.1} MiB | stream open {:.1} MiB (sealed gauge {:.1} MiB, \
+         store {:.1} MiB) | {chunks} chunks (perfmodel co-range ingest ~{predicted:.1} ms)",
+        resident_peak as f64 / (1024.0 * 1024.0),
+        open_peak as f64 / (1024.0 * 1024.0),
+        stream_gauge as f64 / (1024.0 * 1024.0),
+        stream_peak as f64 / (1024.0 * 1024.0),
+    );
+    println!("accuracy: resident rel err {resident_err:.2e} | streaming rel err {stream_err:.2e}");
+
+    let mut ok = true;
+    // Gate 1: the bounded footprint — the open-stream constant (its
+    // lifetime peak) must sit at or under a quarter of the operand.
+    let frac = open_peak as f64 / operand_bytes as f64;
+    if frac > 0.25 {
+        eprintln!("FAIL: streaming peak {frac:.2} of resident footprint (gate <= 0.25)");
+        ok = false;
+    }
+    // Gate 2: equal seeded accuracy.
+    if stream_err > resident_err + 0.02 {
+        eprintln!(
+            "FAIL: streaming accuracy {stream_err:.3e} vs resident {resident_err:.3e} \
+             (gate: within 0.02)"
+        );
+        ok = false;
+    }
+    if !ok {
+        eprintln!("FAIL: streaming gates failed");
+        std::process::exit(1);
+    }
+    println!(
+        "\nheadline: one-pass streaming randSVD at {:.0}% of the resident footprint, \
+         equal seeded accuracy: PASS",
+        frac * 100.0
+    );
+}

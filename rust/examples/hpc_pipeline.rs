@@ -100,12 +100,16 @@ fn main() -> anyhow::Result<()> {
             }
             // Session-API-only kinds (handle-based JobSpec; exercised by
             // `photon serve` and tests/integration_session.rs) — this
-            // example sticks to the legacy owned-Mat surface.
+            // example sticks to the legacy owned-Mat surface. The
+            // streaming kinds additionally need the chunked-ingest
+            // protocol (see examples/streaming_pca.rs).
             JobKind::LstsqSolve
             | JobKind::NystromApprox
             | JobKind::HutchPP
             | JobKind::AdaptiveSvd
-            | JobKind::LstsqPrecond => session_only += 1,
+            | JobKind::LstsqPrecond
+            | JobKind::StreamIngest
+            | JobKind::StreamSvd => session_only += 1,
         }
     }
     if session_only > 0 {

@@ -1,0 +1,96 @@
+//! Streaming PCA: chunked ingest → seal → one-pass randomized SVD.
+//!
+//! ```bash
+//! cargo run --release --example streaming_pca
+//! ```
+//!
+//! A data matrix arrives as batches of samples (rows). The coordinator
+//! never holds it whole: each appended chunk updates three bounded
+//! summaries (range sketch, co-range sketch, Frequent Directions), and
+//! after `seal` a single `RandSvd` job over the stream handle yields the
+//! principal components — zero further passes over the data.
+
+use photonic_randnla::coordinator::{
+    Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy, StreamOpts, SubmitOptions,
+};
+use photonic_randnla::linalg::{self, rel_frobenius_error, Mat};
+use photonic_randnla::workload::{matrix_with_spectrum, Spectrum};
+
+fn main() {
+    let n = 256; // samples (rows) and features (cols)
+    let rank = 8; // principal components we want
+    let oversample = 8;
+    let chunk = 32; // samples per arriving batch
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        stream_chunk_rows: chunk,
+        ..Default::default()
+    })
+    .expect("start coordinator");
+
+    // The "sensor" producing sample batches (synthetic here: a noisy
+    // low-rank population, the classic PCA target).
+    let data = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank, noise: 1e-3 }, 7);
+
+    // 1. Open the stream: dimensions and summary budgets are declared up
+    //    front; the coordinator reserves the bounded footprint (and
+    //    nothing more, however many rows flow through).
+    let cap = rank + oversample;
+    let sid = coord
+        .begin_stream(
+            n,
+            n,
+            StreamOpts {
+                chunk_rows: None, // the coordinator's --stream-chunk-rows default
+                sketch_m: 4 * cap,
+                fd_rank: 2 * rank,
+                range_cap: cap,
+            },
+        )
+        .expect("begin stream");
+
+    // 2. Rows arrive in batches; each full chunk flushes through the
+    //    projection plane (shard planner, device pool) as it lands.
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + chunk).min(n);
+        let batch = Mat::from_fn(r1 - r0, n, |i, j| data.at(r0 + i, j));
+        coord.append_stream(sid, &batch).expect("append rows");
+        r0 = r1;
+    }
+    coord.seal_stream(sid).expect("seal stream");
+    println!(
+        "ingested {n} samples in {} chunks; resident stream bytes: {}",
+        coord.metrics.stream_chunks.load(std::sync::atomic::Ordering::Relaxed),
+        coord.metrics.stream_resident_bytes.load(std::sync::atomic::Ordering::Relaxed),
+    );
+
+    // 3. One-pass randomized SVD straight off the sealed summaries.
+    let resp = coord
+        .run_spec(
+            JobSpec::RandSvd {
+                a: OperandRef::Stream(sid),
+                rank,
+                oversample,
+                power_iters: 0,
+                publish_q: false,
+                tol: None,
+            },
+            SubmitOptions::default(),
+        )
+        .expect("one-pass randsvd");
+    let (u, s, vt) = resp.payload.svd().expect("svd payload");
+
+    let rec = linalg::reconstruct(u, s, vt);
+    let rel = rel_frobenius_error(&data, &rec);
+    println!("top-{rank} principal spectrum: {:?}", &s[..rank.min(s.len())]);
+    println!("rank-{rank} reconstruction rel error: {rel:.2e}");
+
+    coord.free_stream(sid);
+    assert!(rel < 0.05, "streaming PCA lost the signal ({rel})");
+    assert_eq!(coord.store().bytes(), 0, "freed stream must release its bytes");
+    println!("streaming PCA OK — the {n}x{n} operand was never resident");
+    coord.shutdown();
+}

@@ -26,7 +26,7 @@
 //! per cell coordinate, so the composite optical operator is equally
 //! reproducible.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::ops::Range;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
@@ -98,9 +98,19 @@ fn cell_seed(base: u64, (n, m): (usize, usize), out: &Range<usize>, inp: &Range<
 /// One projection request (n x k columns -> m x k). The payload is
 /// shared, never owned: handle-path submissions ride the store's `Arc`
 /// all the way to the shard executor.
+///
+/// A *chunk* request (streaming ingestion) contracts only rows
+/// `row0..row0 + data.rows` of a larger `(sig_n, m)` signature: the
+/// operator is still the signature's one logical G, addressed at the
+/// chunk's absolute row offsets. Ordinary requests have
+/// `sig_n == data.rows, row0 == 0`.
 struct ProjReq {
     data: Arc<Mat>,
     m: usize,
+    /// Input dimension of the logical signature operator.
+    sig_n: usize,
+    /// Absolute offset of `data`'s first row within the signature.
+    row0: usize,
     resp: mpsc::Sender<Result<ProjResp>>,
     enqueued: Instant,
 }
@@ -159,9 +169,53 @@ impl ProjectionService {
     /// A and B, Lstsq's A and b) so they ride one merged batch instead
     /// of two sequential flush round-trips.
     pub fn project_async(&self, data: impl Into<Arc<Mat>>, m: usize) -> Result<ProjPending> {
+        let data = data.into();
+        let sig_n = data.rows;
+        self.send(data, m, sig_n, 0)
+    }
+
+    /// Blocking chunk projection: apply columns `row0..row0 + data.rows`
+    /// of the `(sig_n, m)` signature operator to `data` — the streaming
+    /// ingestion plane's partial `S[:, chunk] · chunk`. See
+    /// [`project_rows_async`](Self::project_rows_async).
+    pub fn project_rows(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        sig_n: usize,
+        row0: usize,
+    ) -> Result<ProjResp> {
+        self.project_rows_async(data, m, sig_n, row0)?.wait()
+    }
+
+    /// Non-blocking chunk projection. The chunk rides the shard planner
+    /// and device pool like any batch, but every cell addresses the
+    /// `(sig_n, m)` signature operator at the chunk's *absolute* row
+    /// offsets — a fixed chunk schedule is therefore bit-reproducible
+    /// across pool sizes, and re-chunking only re-associates the f64
+    /// partial sums the consumer accumulates.
+    pub fn project_rows_async(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        sig_n: usize,
+        row0: usize,
+    ) -> Result<ProjPending> {
+        let data = data.into();
+        anyhow::ensure!(
+            row0 + data.rows <= sig_n,
+            "chunk rows {}..{} overrun the {}-row signature",
+            row0,
+            row0 + data.rows,
+            sig_n
+        );
+        self.send(data, m, sig_n, row0)
+    }
+
+    fn send(&self, data: Arc<Mat>, m: usize, sig_n: usize, row0: usize) -> Result<ProjPending> {
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(ProjReq { data: data.into(), m, resp: tx, enqueued: Instant::now() })
+            .send(ProjReq { data, m, sig_n, row0, resp: tx, enqueued: Instant::now() })
             .map_err(|_| anyhow::anyhow!("projection service is down"))?;
         Ok(ProjPending { rx })
     }
@@ -184,6 +238,11 @@ impl ProjectionService {
     }
 }
 
+/// Merge key: only requests with identical contracted rows, sketch dim,
+/// signature dim and absolute row offset may share a frame batch (their
+/// columns then see the exact same operator block).
+type GroupKey = (usize, usize, usize, usize);
+
 /// Pending group of same-signature requests.
 struct Group {
     reqs: Vec<ProjReq>,
@@ -200,7 +259,7 @@ fn batcher_loop(
     rx: mpsc::Receiver<ProjReq>,
 ) {
     let exec = Arc::new(DeviceExecutor::new(&cfg, pjrt));
-    let mut groups: HashMap<(usize, usize), Group> = HashMap::new();
+    let mut groups: HashMap<GroupKey, Group> = HashMap::new();
     loop {
         // Wait bounded by the earliest deadline among pending groups.
         let timeout = groups
@@ -214,7 +273,7 @@ fn batcher_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                let key = (req.data.rows, req.m);
+                let key = (req.data.rows, req.m, req.sig_n, req.row0);
                 let g = groups.entry(key).or_insert_with(|| Group {
                     reqs: Vec::new(),
                     cols: 0,
@@ -229,7 +288,7 @@ fn batcher_loop(
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                let due: Vec<(usize, usize)> = groups
+                let due: Vec<GroupKey> = groups
                     .iter()
                     .filter(|(_, g)| g.oldest.elapsed() >= cfg.max_wait)
                     .map(|(&k, _)| k)
@@ -241,7 +300,7 @@ fn batcher_loop(
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 // Drain whatever is left, then exit.
-                let keys: Vec<(usize, usize)> = groups.keys().copied().collect();
+                let keys: Vec<GroupKey> = groups.keys().copied().collect();
                 for key in keys {
                     let g = groups.remove(&key).unwrap();
                     flush(&router, &exec, &pool, &metrics, key, g);
@@ -262,7 +321,7 @@ fn flush(
     exec: &Arc<DeviceExecutor>,
     pool: &Arc<DevicePool>,
     metrics: &Arc<Metrics>,
-    (n, m): (usize, usize),
+    (n, m, sig_n, row0): GroupKey,
     group: Group,
 ) {
     let total_cols = group.cols;
@@ -295,10 +354,17 @@ fn flush(
     // first batch used while it remains viable. Each arm realises a
     // different operator G, and multi-pass estimators (Trace/Triangles)
     // project the same signature twice — flip-flopping arms between
-    // passes would silently corrupt the estimate.
-    let preferred = exec.preferred_kind(n, m);
-    let schedule = router.schedule_preferring(pool, m, n, total_cols, preferred);
-    exec.note_kind(n, m, schedule.kind);
+    // passes would silently corrupt the estimate. Affinity is keyed by
+    // the *logical* signature (sig_n, m), so every chunk of a stream —
+    // and any later full-input pass of the same signature — lands on one
+    // arm.
+    let preferred = exec.preferred_kind(sig_n, m);
+    // A signature that has seen partial chunks is stream-owned: its
+    // full-input passes must honor even a host affinity, or they would
+    // realise a different operator than the accumulated chunks.
+    let pin_host = exec.note_stream(sig_n, m, n != sig_n);
+    let schedule = router.schedule_chunk(pool, m, n, total_cols, preferred, sig_n, pin_host);
+    exec.note_kind(sig_n, m, schedule.kind);
     for a in &schedule.shards {
         pool.begin(a.device, a.predicted_ms);
     }
@@ -314,7 +380,8 @@ fn flush(
         pool: pool.clone(),
         metrics: metrics.clone(),
         schedule,
-        sig: (n, m),
+        sig: (sig_n, m),
+        row0,
         merged,
         reqs: group.reqs,
         total_cols,
@@ -343,7 +410,11 @@ struct FlushJob {
     pool: Arc<DevicePool>,
     metrics: Arc<Metrics>,
     schedule: Schedule,
+    /// Logical signature (sig_n, m) whose operator the cells address.
     sig: (usize, usize),
+    /// Absolute row offset of the batch within the signature (chunk
+    /// requests; 0 for ordinary batches).
+    row0: usize,
     /// Shared with shard threads and the PJRT engine thread — the
     /// request payload is never deep-copied on the serving path.
     merged: Arc<Mat>,
@@ -360,6 +431,7 @@ impl FlushJob {
             &self.metrics,
             &self.schedule,
             self.sig,
+            self.row0,
             &self.merged,
         );
         scatter(&self.metrics, self.sig, planned, self.total_cols, self.reqs, outcome);
@@ -375,18 +447,21 @@ fn execute_schedule(
     metrics: &Metrics,
     schedule: &Schedule,
     sig: (usize, usize),
+    row0: usize,
     merged: &Arc<Mat>,
 ) -> Result<(Mat, Device)> {
     let k = merged.cols;
     let sketch = schedule.host_sketch;
     let parts: Vec<Result<(Mat, DeviceId)>> = if schedule.shards.len() == 1 {
-        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, merged, sketch)]
+        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, row0, merged, sketch)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = schedule
                 .shards
                 .iter()
-                .map(|a| s.spawn(move || run_shard(exec, pool, metrics, a, sig, merged, sketch)))
+                .map(|a| {
+                    s.spawn(move || run_shard(exec, pool, metrics, a, sig, row0, merged, sketch))
+                })
                 .collect();
             handles
                 .into_iter()
@@ -429,12 +504,14 @@ fn execute_schedule(
 /// Execute one shard cell with reroute-on-failure: an execution error
 /// marks the replica dead and the cell moves to the least-loaded live
 /// replica of the same kind, then to the host arm, before giving up.
+#[allow(clippy::too_many_arguments)]
 fn run_shard(
     exec: &DeviceExecutor,
     pool: &DevicePool,
     metrics: &Metrics,
     a: &ShardAssignment,
     sig: (usize, usize),
+    row0: usize,
     merged: &Arc<Mat>,
     sketch: SketchKind,
 ) -> Result<(Mat, DeviceId)> {
@@ -445,6 +522,10 @@ fn run_shard(
     } else {
         Arc::new(Mat::from_fn(a.inp.len(), merged.cols, |i, j| merged.at(a.inp.start + i, j)))
     };
+    // Plan ranges are batch-relative; the operator is addressed at the
+    // cell's *absolute* input rows within the signature, so a chunk cell
+    // reads the exact block of the one logical G that its rows cover.
+    let abs_inp = (row0 + a.inp.start)..(row0 + a.inp.end);
 
     // Operator identity across reroutes: a *host-planned* cell realises
     // the schedule's chosen operator; an accelerator cell that falls
@@ -473,7 +554,7 @@ fn run_shard(
         let outcome = if poisoned {
             Err(anyhow::anyhow!("injected fault on {}", device.label()))
         } else {
-            exec.run_cell(device, sig, &a.out, &a.inp, &x, host_sketch)
+            exec.run_cell(device, sig, &a.out, &abs_inp, &x, host_sketch)
         };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         match outcome {
@@ -584,6 +665,17 @@ struct DeviceExecutor {
     sparses: Mutex<HashMap<(usize, usize), Arc<SparseSignSketcher>>>,
     /// Signature -> arm last scheduled, for kind affinity (see `flush`).
     affinity: Mutex<HashMap<(usize, usize), Device>>,
+    /// Signatures that have seen partial (offset) chunk batches — i.e.
+    /// stream-owned ones, whose later full-input passes must honor a
+    /// host affinity for operator coherence. Deliberately never
+    /// unmarked: the executor cannot see stream lifetimes, and a shape
+    /// that carried one stream may carry another — re-pinning it to an
+    /// accelerator between streams would reintroduce the mixed-operator
+    /// hazard. Growth is one flag per distinct streamed shape, the same
+    /// lifetime class as the `blocks`/`srhts`/`affinity` caches above;
+    /// the cost is that ordinary jobs reusing a previously-streamed
+    /// shape stay on the host arm for this coordinator's life.
+    stream_sigs: Mutex<HashSet<(usize, usize)>>,
 }
 
 impl DeviceExecutor {
@@ -599,11 +691,22 @@ impl DeviceExecutor {
             srhts: Mutex::new(HashMap::new()),
             sparses: Mutex::new(HashMap::new()),
             affinity: Mutex::new(HashMap::new()),
+            stream_sigs: Mutex::new(HashSet::new()),
         }
     }
 
     fn preferred_kind(&self, n: usize, m: usize) -> Option<Device> {
         self.affinity.lock().unwrap().get(&(n, m)).copied()
+    }
+
+    /// Mark (for partial batches) and report whether this signature is
+    /// stream-owned.
+    fn note_stream(&self, n: usize, m: usize, partial: bool) -> bool {
+        let mut sigs = self.stream_sigs.lock().unwrap();
+        if partial {
+            sigs.insert((n, m));
+        }
+        sigs.contains(&(n, m))
     }
 
     fn note_kind(&self, n: usize, m: usize, kind: Device) {
@@ -1071,6 +1174,85 @@ mod tests {
         let seed = signature_seed(BatchConfig::default().seed, n, m);
         let want = matmul(&CounterSketcher::new(m, n, seed).matrix(), &x);
         assert_eq!(got, want, "output-dim sharding must be bit-identical");
+    }
+
+    #[test]
+    fn chunked_offset_projections_sum_to_the_signature_projection() {
+        // The streaming plane's core identity: accumulating
+        // project_rows partials over a chunk schedule equals the plain
+        // signature projection up to f64 summation association — for the
+        // dense counter and both structured operators.
+        let (n, m, k) = (48usize, 12usize, 3usize);
+        let mut rng = Xoshiro256::new(31);
+        let a = Mat::gaussian(n, k, 1.0, &mut rng);
+        for (sketch, label) in [
+            (SketchKind::Dense, "dense"),
+            (SketchKind::Srht, "srht"),
+            (SketchKind::Sparse, "sparse"),
+        ] {
+            let (svc, _m, _p) = service_with_sketch(
+                Policy::ForceHost,
+                PoolConfig { pjrt_replicas: 0, ..Default::default() },
+                1024,
+                50,
+                HostSketch::Fixed(sketch),
+            );
+            let whole = svc.project(a.clone(), m).unwrap().result;
+            for chunk in [7usize, 16, 48] {
+                let mut acc = Mat::zeros(m, k);
+                let mut r0 = 0usize;
+                while r0 < n {
+                    let r1 = (r0 + chunk).min(n);
+                    let x = Mat::from_fn(r1 - r0, k, |i, j| a.at(r0 + i, j));
+                    let part = svc.project_rows(x, m, n, r0).unwrap();
+                    acc = acc.add(&part.result);
+                    r0 = r1;
+                }
+                let rel = rel_frobenius_error(&whole, &acc);
+                assert!(rel < 1e-12, "{label} chunk={chunk} drifted {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn offset_projection_is_bit_identical_across_worker_counts() {
+        // A fixed chunk schedule must give bit-identical partials
+        // whatever the pool size — cells address the signature operator
+        // by absolute coordinates, even when the host aperture shards
+        // the chunk itself.
+        let (n, m, k, chunk) = (64usize, 16usize, 2usize, 16usize);
+        let mut rng = Xoshiro256::new(32);
+        let a = Mat::gaussian(n, k, 1.0, &mut rng);
+        let run = |workers: usize| {
+            let (svc, _m, _p) = service(
+                Policy::ForceHost,
+                PoolConfig {
+                    pjrt_replicas: 0,
+                    host_workers: workers,
+                    host_aperture: Some((8, 8)),
+                    ..Default::default()
+                },
+                1024,
+                50,
+            );
+            let mut parts = Vec::new();
+            let mut r0 = 0usize;
+            while r0 < n {
+                let x = Mat::from_fn(chunk, k, |i, j| a.at(r0 + i, j));
+                parts.push(svc.project_rows(x, m, n, r0).unwrap().result);
+                r0 += chunk;
+            }
+            parts
+        };
+        assert_eq!(run(1), run(4), "chunk partials depend on the pool size");
+    }
+
+    #[test]
+    fn offset_projection_overrun_is_a_typed_error() {
+        let (svc, _m) = host_service(8, 50);
+        let x = Mat::zeros(16, 1);
+        let err = svc.project_rows(x, 4, 24, 16).unwrap_err();
+        assert!(err.to_string().contains("overrun"), "{err}");
     }
 
     #[test]

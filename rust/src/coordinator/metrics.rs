@@ -47,6 +47,16 @@ pub struct Metrics {
     /// batcher like any projection; this counter is the per-block pass
     /// count of `RandSvd { tol }` jobs — the adaptivity observable).
     pub adaptive_passes: AtomicU64,
+    /// Chunks flushed through the streaming ingestion plane (each chunk
+    /// is one pair of projection batches: range pass + offset S·A pass).
+    pub stream_chunks: AtomicU64,
+    /// Gauge: bytes resident across all open + sealed streams (chunk
+    /// buffers + bounded summaries) — the quantity the streaming bench
+    /// gate bounds against the resident-operand footprint.
+    pub stream_resident_bytes: AtomicU64,
+    /// Streams freed before they were sealed (client abort / drop); their
+    /// quota bytes were released deterministically.
+    pub streams_aborted: AtomicU64,
     latency_hist: LatencyHist,
 }
 
@@ -113,7 +123,8 @@ impl Metrics {
             "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
              devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
              qos: cancelled={} expired={} busy={} queue_i={} queue_b={} \
-             store_bytes={} copied_bytes={} adaptive_passes={} p50={}us p99={}us",
+             store_bytes={} copied_bytes={} adaptive_passes={} \
+             stream_chunks={} stream_bytes={} streams_aborted={} p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -133,6 +144,9 @@ impl Metrics {
             self.store_bytes.load(Ordering::Relaxed),
             self.operand_bytes_copied.load(Ordering::Relaxed),
             self.adaptive_passes.load(Ordering::Relaxed),
+            self.stream_chunks.load(Ordering::Relaxed),
+            self.stream_resident_bytes.load(Ordering::Relaxed),
+            self.streams_aborted.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
         )
@@ -188,6 +202,8 @@ mod tests {
         assert!(r.contains("queue_i="));
         assert!(r.contains("store_bytes="));
         assert!(r.contains("adaptive_passes="));
+        assert!(r.contains("stream_chunks="));
+        assert!(r.contains("streams_aborted="));
     }
 
     #[test]

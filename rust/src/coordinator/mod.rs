@@ -38,6 +38,9 @@
 //!   client and shard executor);
 //! - [`plan`]    — composable job plans: DAGs of [`JobSpec`] stages
 //!   whose matrix outputs land back in the store as fresh handles;
+//! - [`stream`]  — the streaming ingestion plane: chunked operands that
+//!   never materialize (bounded summaries, one-pass jobs via
+//!   [`OperandRef::Stream`](request::OperandRef::Stream));
 //! - [`queue`]   — bounded two-level (Interactive/Batch) admission queue
 //!   with cancellation: the QoS layer (deadlines, backpressure);
 //! - [`metrics`] — counters + latency percentiles + shard/reroute/QoS
@@ -57,6 +60,7 @@ pub mod router;
 pub mod server;
 pub mod shard;
 pub mod store;
+pub mod stream;
 
 pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use metrics::Metrics;
@@ -74,3 +78,4 @@ pub use server::{Coordinator, CoordinatorConfig, ADAPTIVE_RANGE_BLOCK};
 pub use crate::randnla::lstsq::LsqrOpts;
 pub use shard::{recombine, ShardCell, ShardPlan};
 pub use store::{mat_bytes, OperandId, OperandStore, StoreError};
+pub use stream::{SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry};

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::plan::PlanError;
 use crate::coordinator::queue::JobQueue;
 use crate::coordinator::store::OperandId;
+use crate::coordinator::stream::{SealedStream, StreamId};
 use crate::linalg::Mat;
 use crate::randnla::lstsq::LsqrOpts;
 
@@ -160,6 +161,13 @@ pub enum OperandRef {
     ///
     /// [`Plan`]: crate::coordinator::plan::Plan
     Stage(usize),
+    /// A sealed streamed operand: the full matrix was never resident —
+    /// the job runs one-pass from the stream's bounded summaries.
+    /// Supported by `RandSvd` (sketch-side single-pass), `Trace`
+    /// (streaming Hutchinson) and `Lstsq` (sketch-and-solve); any other
+    /// kind refuses typed with
+    /// [`SubmitError::StreamRefUnsupported`].
+    Stream(StreamId),
 }
 
 /// A RandNLA job in the session API: operands are references, never
@@ -277,6 +285,19 @@ pub(crate) enum ResolvedJob {
     },
     Lstsq { a: Arc<Mat>, b: Vec<f64>, m: usize, refine: Option<LsqrOpts> },
     Nystrom { a: Arc<Mat>, m: usize, rcond: f64 },
+    /// One-pass trace of a sealed stream (streaming Hutchinson).
+    StreamTrace { s: Arc<SealedStream>, m: usize, estimator: TraceEstimator },
+    /// Single-pass sketch-side randomized SVD of a sealed stream.
+    StreamRandSvd {
+        s: Arc<SealedStream>,
+        rank: usize,
+        oversample: usize,
+        power_iters: usize,
+        publish_q: bool,
+        tol: Option<f64>,
+    },
+    /// One-pass sketch-and-solve least squares over a sealed stream.
+    StreamLstsq { s: Arc<SealedStream>, b: Vec<f64>, m: usize, refine: Option<LsqrOpts> },
 }
 
 impl ResolvedJob {
@@ -284,13 +305,15 @@ impl ResolvedJob {
         match self {
             ResolvedJob::Projection { .. } => "projection",
             ResolvedJob::ApproxMatmul { .. } => "approx_matmul",
-            ResolvedJob::Trace { .. } => "trace",
+            // A streamed operand does not change what the job *is*: the
+            // response kind stays the estimator's.
+            ResolvedJob::Trace { .. } | ResolvedJob::StreamTrace { .. } => "trace",
             ResolvedJob::Triangles { .. } => "triangles",
             ResolvedJob::SymmetricSketch { .. } => "symmetric_sketch",
             ResolvedJob::TraceOf { .. } => "trace_of",
             ResolvedJob::TrianglesOf { .. } => "triangles_of",
-            ResolvedJob::RandSvd { .. } => "randsvd",
-            ResolvedJob::Lstsq { .. } => "lstsq",
+            ResolvedJob::RandSvd { .. } | ResolvedJob::StreamRandSvd { .. } => "randsvd",
+            ResolvedJob::Lstsq { .. } | ResolvedJob::StreamLstsq { .. } => "lstsq",
             ResolvedJob::Nystrom { .. } => "nystrom",
         }
     }
@@ -341,6 +364,14 @@ pub enum SubmitError {
     ///
     /// [`Plan`]: crate::coordinator::plan::Plan
     StageRefOutsidePlan(usize),
+    /// A `Stream` reference names no live stream (freed or never begun).
+    UnknownStream(StreamId),
+    /// A `Stream` reference names a stream still ingesting — seal it
+    /// before submitting jobs over it.
+    StreamNotSealed(StreamId),
+    /// The job kind has no one-pass execution over a stream (only
+    /// `randsvd`, `trace` and `lstsq` do).
+    StreamRefUnsupported { kind: &'static str },
 }
 
 impl fmt::Display for SubmitError {
@@ -355,6 +386,15 @@ impl fmt::Display for SubmitError {
             }
             SubmitError::StageRefOutsidePlan(i) => {
                 write!(f, "stage reference #{i} outside a plan")
+            }
+            SubmitError::UnknownStream(id) => {
+                write!(f, "unknown stream {id} (freed or never begun)")
+            }
+            SubmitError::StreamNotSealed(id) => {
+                write!(f, "{id} is still ingesting — seal it before submitting jobs")
+            }
+            SubmitError::StreamRefUnsupported { kind } => {
+                write!(f, "{kind} has no one-pass execution over a stream (randsvd, trace and lstsq do)")
             }
         }
     }
@@ -665,6 +705,14 @@ mod tests {
         let b = SubmitError::Busy { depth: 8, cap: 8 };
         assert!(b.to_string().contains("full"), "{b}");
         assert!(SubmitError::UnknownOperand(OperandId(3)).to_string().contains("op#3"));
+    }
+
+    #[test]
+    fn stream_submit_errors_are_actionable() {
+        assert!(SubmitError::UnknownStream(StreamId(4)).to_string().contains("stream#4"));
+        assert!(SubmitError::StreamNotSealed(StreamId(2)).to_string().contains("seal"));
+        let e = SubmitError::StreamRefUnsupported { kind: "nystrom" };
+        assert!(e.to_string().contains("nystrom"), "{e}");
     }
 
     #[test]

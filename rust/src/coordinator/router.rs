@@ -206,16 +206,58 @@ impl Router {
         k: usize,
         preferred: Option<Device>,
     ) -> Schedule {
+        self.schedule_chunk(pool, m, n, k, preferred, n, false)
+    }
+
+    /// [`schedule_preferring`](Self::schedule_preferring) for a *chunk*
+    /// batch of a larger logical signature: the batch contracts `n` rows
+    /// but addresses the `(sig_n, m)` signature operator (streaming
+    /// ingestion). The host operator kind and the SRHT cost model are
+    /// derived from the signature — a chunk must realise the same
+    /// digital operator as every other batch of its signature, and an
+    /// SRHT cell's FWHT always spans the signature's padded width
+    /// however few rows the chunk supplies. Ordinary batches pass
+    /// `sig_n == n` and this is exactly `schedule_preferring`.
+    ///
+    /// A *partial* chunk (`n < sig_n`) never plans on the OPU: optical
+    /// media are pinned per cell shape, so an offset chunk cell and the
+    /// signature's full-input cell would realise different media — the
+    /// operator incoherence the digital arms' counter addressing is
+    /// immune to. Chunks route to the PJRT/host arms instead (under
+    /// `ForceOpu` they degrade to host, the documented filter-not-pin
+    /// behaviour).
+    ///
+    /// `pin_host`: set for batches of a *stream-owned* signature (one
+    /// that has seen partial chunks) — a host affinity is then honored
+    /// even though host is never in the policy's kind filter, so the
+    /// stream's full-input passes realise the operator its chunks
+    /// accumulated. Ordinary signatures pass `false` and keep the
+    /// pre-existing behaviour (a host fallback does not pin; a revived
+    /// accelerator is reclaimed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn schedule_chunk(
+        &self,
+        pool: &DevicePool,
+        m: usize,
+        n: usize,
+        k: usize,
+        preferred: Option<Device>,
+        sig_n: usize,
+        pin_host: bool,
+    ) -> Schedule {
+        let partial = n != sig_n;
         let kinds: &[Device] = match self.policy {
+            Policy::Auto if partial => &[Device::Pjrt],
             Policy::Auto => &[Device::Opu, Device::Pjrt],
+            Policy::ForceOpu if partial => &[],
             Policy::ForceOpu => &[Device::Opu],
             Policy::ForcePjrt => &[Device::Pjrt],
             Policy::ForceHost => &[],
         };
         if let Some(p) = preferred {
-            if kinds.contains(&p) {
+            if kinds.contains(&p) || (pin_host && p == Device::Host) {
                 if let Some((_, plan, devs)) = self.kind_plan(pool, p, m, n, k) {
-                    return self.assign_cells(p, &plan, &devs, k);
+                    return self.assign_cells(p, &plan, &devs, k, sig_n);
                 }
             }
         }
@@ -229,7 +271,7 @@ impl Router {
             }
         }
         match best {
-            Some((_, kind, plan, devs)) => self.assign_cells(kind, &plan, &devs, k),
+            Some((_, kind, plan, devs)) => self.assign_cells(kind, &plan, &devs, k, sig_n),
             None => {
                 // Host fallback; if every host worker was marked dead, use
                 // them anyway — digital execution cannot actually fail.
@@ -246,7 +288,7 @@ impl Router {
                 let max_m = devs.iter().map(|d| d.max_m).min().unwrap_or(usize::MAX);
                 let max_n = devs.iter().map(|d| d.max_n).min().unwrap_or(usize::MAX);
                 let plan = ShardPlan::for_aperture(m, n, max_m, max_n);
-                self.assign_cells(Device::Host, &plan, &devs, k)
+                self.assign_cells(Device::Host, &plan, &devs, k, sig_n)
             }
         }
     }
@@ -296,10 +338,12 @@ impl Router {
         plan: &ShardPlan,
         devs: &[Arc<PoolDevice>],
         k: usize,
+        sig_n: usize,
     ) -> Schedule {
         // The host operator is chosen once from the *signature* dims, so
-        // cells are priced with the operator they will actually execute.
-        let host_sketch = self.digital_kind(plan.n, plan.m, k);
+        // cells are priced with the operator they will actually execute
+        // (`sig_n`, not the chunk's row count, for chunk batches).
+        let host_sketch = self.digital_kind(sig_n, plan.m, k);
         let mut local: Vec<f64> = devs.iter().map(|d| d.queue_delay_ms()).collect();
         let mut shards = Vec::with_capacity(plan.num_cells());
         for cell in plan.cells() {
@@ -307,7 +351,7 @@ impl Router {
                 // The SRHT transform always spans the signature's padded
                 // input dimension, whatever the cell's input slice.
                 (Device::Host, SketchKind::Srht) => perfmodel::srht_cell_projection_ms(
-                    plan.n,
+                    sig_n,
                     cell.inp.len(),
                     cell.out.len(),
                     k,
@@ -554,6 +598,42 @@ mod tests {
         pool.mark_dead(DeviceId { kind: Device::Opu, replica: 0 });
         let s = r.schedule_preferring(&pool, 8, 64, 1, Some(Device::Opu));
         assert_eq!(s.kind, Device::Pjrt);
+    }
+
+    #[test]
+    fn partial_chunks_never_plan_on_the_opu() {
+        // Optical media are pinned per cell shape: an offset chunk cell
+        // of a larger signature must route to a counter-addressable arm
+        // (here: the host fallback), while ordinary batches keep the
+        // forced OPU.
+        let pool = opu_pool(2, (64, 128));
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        assert_eq!(r.schedule(&pool, 16, 64, 2).kind, Device::Opu);
+        let s = r.schedule_chunk(&pool, 16, 64, 2, None, 256, true);
+        assert_eq!(s.kind, Device::Host, "offset chunk planned on cell-pinned OPU media");
+        let auto = Router::new(Policy::Auto, no_pjrt());
+        let s = auto.schedule_chunk(&pool, 16, 64, 2, None, 256, true);
+        assert_ne!(s.kind, Device::Opu, "auto policy sent a chunk to the OPU");
+    }
+
+    #[test]
+    fn host_affinity_pins_only_stream_owned_signatures() {
+        // A stream-owned signature whose chunks degraded to host keeps
+        // its full-input passes there (operator coherence); a signature
+        // that never streamed reclaims the accelerator as before — a
+        // degraded stream pins only its own shape (see the executor's
+        // `stream_sigs` note for the deliberate lifetime of that pin),
+        // never the rest of the serving plane.
+        let pool = opu_pool(1, (64, 128));
+        let r = Router::new(Policy::ForceOpu, Availability::default());
+        let pinned = r.schedule_chunk(&pool, 16, 64, 2, Some(Device::Host), 64, true);
+        assert_eq!(pinned.kind, Device::Host, "stream host affinity ignored");
+        let ordinary = r.schedule_preferring(&pool, 16, 64, 2, Some(Device::Host));
+        assert_eq!(ordinary.kind, Device::Opu, "ordinary signature pinned to host");
+    }
+
+    fn no_pjrt() -> Availability {
+        Availability { pjrt: false, ..Availability::default() }
     }
 
     #[test]

@@ -38,11 +38,15 @@ use crate::coordinator::request::{
 };
 use crate::coordinator::router::{Availability, HostSketch, Policy, Router};
 use crate::coordinator::store::{OperandId, OperandStore, StoreError};
+use crate::coordinator::stream::{
+    SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry,
+};
 use crate::linalg::{self, matmul_tn, Mat};
 use crate::perfmodel::SketchKind;
 use crate::randnla::adaptive::{rank_for_tol, IncrementalRange};
 use crate::randnla::hutchpp;
 use crate::randnla::lstsq::precond_refine;
+use crate::randnla::streaming::solve_corange;
 use crate::runtime::{PjrtEngine, PjrtHandle};
 
 /// Base block size of the serving plane's incremental rangefinder ladder
@@ -69,6 +73,10 @@ pub struct CoordinatorConfig {
     /// Operand-store byte quota (CLI `serve --store-mb`);
     /// `usize::MAX` = unbounded.
     pub store_quota: usize,
+    /// Default chunk size (rows) of the streaming ingestion plane (CLI
+    /// `serve --stream-chunk-rows`); per-stream
+    /// [`StreamOpts::chunk_rows`] overrides it.
+    pub stream_chunk_rows: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -82,6 +90,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: None,
             queue_cap: 1024,
             store_quota: usize::MAX,
+            stream_chunk_rows: 256,
         }
     }
 }
@@ -93,6 +102,8 @@ pub struct Coordinator {
     svc: ProjectionService,
     pool: Arc<DevicePool>,
     store: Arc<OperandStore>,
+    streams: Arc<StreamRegistry>,
+    stream_chunk_rows: usize,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     // Keep the engine alive for the coordinator's lifetime.
@@ -151,6 +162,7 @@ impl Coordinator {
         );
 
         let store = Arc::new(OperandStore::with_metrics(cfg.store_quota, metrics.clone()));
+        let streams = Arc::new(StreamRegistry::new(store.clone(), metrics.clone()));
         let queue = Arc::new(JobQueue::new(cfg.queue_cap, metrics.clone()));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
@@ -172,6 +184,8 @@ impl Coordinator {
             svc,
             pool,
             store,
+            streams,
+            stream_chunk_rows: cfg.stream_chunk_rows.max(1),
             metrics,
             next_id: AtomicU64::new(1),
             _engine: engine,
@@ -193,6 +207,45 @@ impl Coordinator {
     /// The operand store (byte accounting, direct `get`).
     pub fn store(&self) -> &OperandStore {
         &self.store
+    }
+
+    /// Open a streamed operand: a `rows × cols` matrix whose rows will
+    /// arrive via [`append_stream`](Self::append_stream) and which is
+    /// never fully resident — only a bounded chunk buffer plus the
+    /// stream's summaries (range sketch, co-range sketch, Frequent
+    /// Directions), all quota-accounted against the operand store.
+    pub fn begin_stream(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+    ) -> Result<StreamId, StreamError> {
+        self.streams.begin(rows, cols, opts, self.stream_chunk_rows)
+    }
+
+    /// Append rows to an open stream (any chunking; full buffers flush
+    /// through the shard planner/batcher before more rows are copied in).
+    pub fn append_stream(&self, id: StreamId, rows: &Mat) -> Result<(), StreamError> {
+        self.streams.append(id, rows, &self.svc)
+    }
+
+    /// Flush the tail chunk and freeze the stream's summaries; one-pass
+    /// jobs may now reference it via
+    /// [`OperandRef::Stream`](OperandRef::Stream).
+    pub fn seal_stream(&self, id: StreamId) -> Result<(), StreamError> {
+        self.streams.seal(id, &self.svc)
+    }
+
+    /// Drop a stream and release its quota bytes deterministically
+    /// (an unsealed stream counts as aborted). In-flight jobs holding
+    /// the sealed summaries finish unaffected.
+    pub fn free_stream(&self, id: StreamId) -> bool {
+        self.streams.free(id)
+    }
+
+    /// The stream registry (tests, diagnostics).
+    pub fn streams(&self) -> &StreamRegistry {
+        &self.streams
     }
 
     /// Submit a session-API job with QoS options. Typed refusal instead
@@ -384,9 +437,12 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Resolve every operand reference to a shared `Arc<Mat>` at submit
-    /// time (freeing a handle after submit cannot strand the job).
+    /// Resolve every operand reference to a shared `Arc<Mat>` (or, for
+    /// stream refs on the one-pass kinds, to the sealed stream's shared
+    /// summaries) at submit time — freeing a handle or a stream after
+    /// submit cannot strand the job.
     fn resolve(&self, spec: JobSpec) -> Result<ResolvedJob, SubmitError> {
+        let kind = spec.kind();
         let resolve_ref = |r: OperandRef| -> Result<Arc<Mat>, SubmitError> {
             match r {
                 OperandRef::Handle(id) => {
@@ -397,7 +453,17 @@ impl Coordinator {
                 // a copy) without entering the accounted store.
                 OperandRef::Inline(m) => Ok(Arc::new(m)),
                 OperandRef::Stage(i) => Err(SubmitError::StageRefOutsidePlan(i)),
+                // Stream refs are intercepted below for the kinds that
+                // execute one-pass; reaching here means the kind has no
+                // stream execution.
+                OperandRef::Stream(_) => Err(SubmitError::StreamRefUnsupported { kind }),
             }
+        };
+        let resolve_stream = |id: StreamId| -> Result<Arc<SealedStream>, SubmitError> {
+            self.streams.sealed(id).map_err(|e| match e {
+                StreamError::NotSealed(id) => SubmitError::StreamNotSealed(id),
+                _ => SubmitError::UnknownStream(id),
+            })
         };
         Ok(match spec {
             JobSpec::Projection { data, m } => {
@@ -405,6 +471,9 @@ impl Coordinator {
             }
             JobSpec::ApproxMatmul { a, b, m } => {
                 ResolvedJob::ApproxMatmul { a: resolve_ref(a)?, b: resolve_ref(b)?, m }
+            }
+            JobSpec::Trace { a: OperandRef::Stream(id), m, estimator } => {
+                ResolvedJob::StreamTrace { s: resolve_stream(id)?, m, estimator }
             }
             JobSpec::Trace { a, m, estimator } => {
                 ResolvedJob::Trace { a: resolve_ref(a)?, m, estimator }
@@ -417,9 +486,27 @@ impl Coordinator {
             }
             JobSpec::TraceOf { b } => ResolvedJob::TraceOf { b: resolve_ref(b)? },
             JobSpec::TrianglesOf { b } => ResolvedJob::TrianglesOf { b: resolve_ref(b)? },
+            JobSpec::RandSvd {
+                a: OperandRef::Stream(id),
+                rank,
+                oversample,
+                power_iters,
+                publish_q,
+                tol,
+            } => ResolvedJob::StreamRandSvd {
+                s: resolve_stream(id)?,
+                rank,
+                oversample,
+                power_iters,
+                publish_q,
+                tol,
+            },
             JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
                 let a = resolve_ref(a)?;
                 ResolvedJob::RandSvd { a, rank, oversample, power_iters, publish_q, tol }
+            }
+            JobSpec::Lstsq { a: OperandRef::Stream(id), b, m, refine } => {
+                ResolvedJob::StreamLstsq { s: resolve_stream(id)?, b, m, refine }
             }
             JobSpec::Lstsq { a, b, m, refine } => {
                 ResolvedJob::Lstsq { a: resolve_ref(a)?, b, m, refine }
@@ -751,6 +838,124 @@ fn execute_job(
                 Vec::new(),
             ))
         }
+        ResolvedJob::StreamTrace { s, m, estimator } => {
+            anyhow::ensure!(s.rows == s.cols, "streaming trace needs a square operand");
+            anyhow::ensure!(
+                matches!(estimator, TraceEstimator::Hutchinson),
+                "hutch++ re-projects the deflated operand — impossible one-pass; \
+                 use the hutchinson estimator for streams"
+            );
+            anyhow::ensure!(
+                *m == s.sketch_m,
+                "trace budget {m} != stream sketch width {} (fixed at begin_stream)",
+                s.sketch_m
+            );
+            let arm = stream_arm(s)?;
+            // Second half of the symmetric sketch B = (S A Sᵀ)/m: the
+            // accumulated S·A plays the resident path's first pass, and
+            // this projection addresses the same (rows, m) signature —
+            // kind affinity keeps it on the arm the chunks used.
+            let gst = svc.project(s.sa.transpose(), *m)?;
+            ensure_same_arm(arm, gst.planned, "trace(stream)")?;
+            let b = gst.result.transpose().scale(1.0 / *m as f64);
+            Ok((Payload::Scalar(b.trace()), gst.device, gst.batch_cols, Vec::new()))
+        }
+        ResolvedJob::StreamRandSvd { s, rank, oversample, power_iters, publish_q, tol } => {
+            anyhow::ensure!(
+                *power_iters == 0,
+                "power iterations re-project the operand — impossible one-pass; \
+                 resubmit with power_iters: 0"
+            );
+            anyhow::ensure!(
+                tol.is_none(),
+                "adaptive tol grows the range with extra passes over the operand — \
+                 impossible one-pass; pick the rank up front"
+            );
+            let cap = rank + oversample;
+            anyhow::ensure!(cap >= 1, "rank + oversample must be >= 1");
+            anyhow::ensure!(
+                cap <= s.range_cap,
+                "rank+oversample {cap} exceeds the stream's range budget {} \
+                 (fixed at begin_stream)",
+                s.range_cap
+            );
+            anyhow::ensure!(
+                s.sketch_m >= cap,
+                "stream sketch width {} < rank+oversample {cap} — the one-pass \
+                 co-range solve would be underdetermined",
+                s.sketch_m
+            );
+            let arm = stream_arm(s)?;
+            // Y coherence: every chunk's range batch must have realised
+            // the same Ω (no second Ω pass happens, but columns of one Y
+            // must come from one operator).
+            anyhow::ensure!(
+                s.y_arm.is_some(),
+                "stream range batches were planned on different arms (an arm died \
+                 mid-stream); Y mixes operators — free the stream and re-ingest"
+            );
+            // Range basis from the accumulated Y (its leading cap sketch
+            // rows; at cap == range_cap this is bit-identical to the
+            // resident randsvd's range pass).
+            let q = Arc::new(linalg::orthonormalize(&s.yt.crop(cap, s.yt.cols).transpose()));
+            // Co-range: X = argmin ‖(SQ)X − (S·A)‖ replaces B = QᵀA —
+            // same (rows, sketch_m) signature as the chunks, same arm.
+            let sq = svc.project(q.clone(), s.sketch_m)?;
+            ensure_same_arm(arm, sq.planned, "randsvd(stream)")?;
+            let x = solve_corange(&sq.result, &s.sa);
+            let linalg::Svd { u: ux, s: sv, vt } = linalg::svd(&x);
+            let u = linalg::matmul(&q, &ux);
+            let k = (*rank).min(sv.len());
+            let aux = if *publish_q {
+                vec![("q", store.insert(q)?)]
+            } else {
+                Vec::new()
+            };
+            Ok((
+                Payload::Svd {
+                    u: u.crop(u.rows, k),
+                    s: sv[..k].to_vec(),
+                    vt: vt.crop(k, vt.cols),
+                },
+                sq.device,
+                sq.batch_cols,
+                aux,
+            ))
+        }
+        ResolvedJob::StreamLstsq { s, b, m, refine } => {
+            anyhow::ensure!(
+                refine.is_none(),
+                "lstsq refinement runs LSQR over the full system — impossible \
+                 one-pass; streams serve sketch-and-solve (refine: None)"
+            );
+            anyhow::ensure!(
+                b.len() == s.rows,
+                "rhs length {} != stream rows {}",
+                b.len(),
+                s.rows
+            );
+            anyhow::ensure!(
+                *m == s.sketch_m,
+                "sketch dim {m} != stream sketch width {} (fixed at begin_stream)",
+                s.sketch_m
+            );
+            anyhow::ensure!(
+                *m >= s.cols,
+                "sketch dim {} < unknowns {} — system would be underdetermined",
+                m,
+                s.cols
+            );
+            let arm = stream_arm(s)?;
+            // The rhs is in hand, so its sketch is one ordinary pass of
+            // the chunks' (rows, m) signature — same operator S, so
+            // (S·A, S·b) is the fused sketch without A ever resident.
+            let rhs = Mat::from_fn(s.rows, 1, |i, _| b[i]);
+            let rb = svc.project(rhs, *m)?;
+            ensure_same_arm(arm, rb.planned, "lstsq(stream)")?;
+            let sb: Vec<f64> = (0..rb.result.rows).map(|i| rb.result.at(i, 0)).collect();
+            let x = linalg::lstsq(&s.sa, &sb);
+            Ok((Payload::Vector(x), rb.device, rb.batch_cols, Vec::new()))
+        }
         ResolvedJob::Nystrom { a, m, rcond } => {
             anyhow::ensure!(a.is_square(), "nystrom needs PSD (square) input");
             // (G A)^T = A G^T only holds for symmetric A; a non-symmetric
@@ -777,6 +982,20 @@ fn execute_job(
             ))
         }
     }
+}
+
+/// The one arm a sealed stream's co-range chunks were planned on. `None`
+/// means an arm died mid-stream and chunks flipped arms: the accumulated
+/// `S·A` then mixes operators, and any consumer that must realise S a
+/// second time (all of them) would silently compute garbage — fail typed
+/// instead.
+fn stream_arm(s: &SealedStream) -> Result<Device> {
+    s.arm.ok_or_else(|| {
+        anyhow::anyhow!(
+            "stream chunks were planned on different arms (an arm died mid-stream); \
+             the accumulated sketch mixes operators — free the stream and re-ingest"
+        )
+    })
 }
 
 /// Multi-pass estimator coherence: the passes of one job must realise
@@ -1539,6 +1758,315 @@ mod tests {
         let t = c.submit(Job::Projection { data: Mat::zeros(8, 1), m: 4 });
         let err = t.wait().unwrap_err();
         assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    use crate::coordinator::stream::StreamOpts;
+
+    /// Chunk a resident matrix through the streaming protocol in 16-row
+    /// chunks (test convenience — production clients never hold the
+    /// whole operand).
+    fn ingest(c: &Coordinator, a: &Mat, opts: StreamOpts) -> crate::coordinator::stream::StreamId {
+        let chunk = 16usize;
+        let opts = StreamOpts { chunk_rows: Some(chunk), ..opts };
+        let id = c.begin_stream(a.rows, a.cols, opts).unwrap();
+        let mut r0 = 0usize;
+        while r0 < a.rows {
+            let r1 = (r0 + chunk).min(a.rows);
+            let piece = Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j));
+            c.append_stream(id, &piece).unwrap();
+            r0 = r1;
+        }
+        c.seal_stream(id).unwrap();
+        id
+    }
+
+    #[test]
+    fn streaming_trace_matches_resident_trace_to_association() {
+        // One-pass streaming Hutchinson vs the resident job: the chunked
+        // S·A accumulation only re-associates f64 sums, so the two
+        // estimates agree to fp noise.
+        let c = host_coordinator(2);
+        let a = psd_matrix(48, 96, 2);
+        let resident = c
+            .run(Job::Trace { a: a.clone(), m: 40 })
+            .unwrap()
+            .payload
+            .scalar()
+            .unwrap();
+        let id = ingest(
+            &c,
+            &a,
+            StreamOpts { sketch_m: 40, fd_rank: 8, range_cap: 8, chunk_rows: None },
+        );
+        let streamed = c
+            .run_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Stream(id),
+                    m: 40,
+                    estimator: TraceEstimator::Hutchinson,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(streamed.kind, "trace");
+        let streamed = streamed.payload.scalar().unwrap();
+        let rel = (streamed - resident).abs() / resident.abs().max(1e-300);
+        assert!(rel < 1e-9, "streaming trace drifted: {streamed} vs {resident} ({rel})");
+        assert!(c.metrics.stream_chunks.load(Ordering::Relaxed) >= 3);
+        assert!(c.free_stream(id));
+        assert_eq!(c.store().bytes(), 0, "freed stream left quota bytes");
+        c.shutdown();
+    }
+
+    #[test]
+    fn streaming_randsvd_recovers_low_rank_one_pass() {
+        use crate::workload::{matrix_with_spectrum, Spectrum};
+        let c = host_coordinator(2);
+        let a = matrix_with_spectrum(48, Spectrum::LowRankPlusNoise { rank: 6, noise: 1e-3 }, 4);
+        let id = ingest(
+            &c,
+            &a,
+            StreamOpts { sketch_m: 48, fd_rank: 16, range_cap: 12, chunk_rows: None },
+        );
+        let resp = c
+            .run_spec(
+                JobSpec::RandSvd {
+                    a: OperandRef::Stream(id),
+                    rank: 6,
+                    oversample: 6,
+                    power_iters: 0,
+                    publish_q: true,
+                    tol: None,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(resp.kind, "randsvd");
+        let (u, s, vt) = resp.payload.svd().expect("svd payload");
+        let rec = linalg::reconstruct(u, s, vt);
+        let rel = crate::linalg::rel_frobenius_error(&a, &rec);
+        assert!(rel < 0.05, "one-pass randsvd rel {rel}");
+        // The published range basis is orthonormal and store-resident.
+        let (name, qid) = resp.aux[0];
+        assert_eq!(name, "q");
+        let q = c.store().get(qid).unwrap();
+        assert_eq!((q.rows, q.cols), (48, 12));
+        let qtq = matmul_tn(&q, &q);
+        assert!(crate::linalg::rel_frobenius_error(&Mat::eye(12), &qtq) < 1e-9);
+        assert!(c.free_operand(qid));
+        assert!(c.free_stream(id));
+        c.shutdown();
+    }
+
+    #[test]
+    fn streaming_lstsq_recovers_consistent_system() {
+        let c = host_coordinator(2);
+        let mut rng = Xoshiro256::new(13);
+        let a = Mat::gaussian(128, 6, 1.0, &mut rng);
+        let x_true: Vec<f64> = (0..6).map(|_| rng.next_normal()).collect();
+        let b = crate::linalg::matvec(&a, &x_true);
+        let id = ingest(
+            &c,
+            &a,
+            StreamOpts { sketch_m: 32, fd_rank: 8, range_cap: 8, chunk_rows: None },
+        );
+        let resp = c
+            .run_spec(
+                JobSpec::Lstsq { a: OperandRef::Stream(id), b, m: 32, refine: None },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        // Consistent system: the full-rank sketch solves it exactly.
+        let x = resp.payload.vector().unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+        c.free_stream(id);
+        c.shutdown();
+    }
+
+    #[test]
+    fn freeing_a_stream_after_submit_cannot_strand_the_job() {
+        let c = host_coordinator(1);
+        let a = psd_matrix(32, 16, 5);
+        let id = ingest(
+            &c,
+            &a,
+            StreamOpts { sketch_m: 16, fd_rank: 4, range_cap: 4, chunk_rows: None },
+        );
+        c.pause();
+        let t = c
+            .submit_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Stream(id),
+                    m: 16,
+                    estimator: TraceEstimator::Hutchinson,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        // The summaries ride an Arc: freeing the stream while the job is
+        // queued must not break it.
+        assert!(c.free_stream(id));
+        c.resume();
+        assert!(t.wait().is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_jobs_without_one_pass_execution_fail_typed() {
+        let c = host_coordinator(1);
+        let a = psd_matrix(32, 16, 6);
+        let id = ingest(
+            &c,
+            &a,
+            StreamOpts { sketch_m: 16, fd_rank: 4, range_cap: 8, chunk_rows: None },
+        );
+        // Unsupported kind refuses at submit.
+        let err = c
+            .submit_spec(
+                JobSpec::Nystrom { a: OperandRef::Stream(id), m: 8, rcond: 1e-8 },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::StreamRefUnsupported { kind: "nystrom" });
+        // Hutch++ needs a second pass over the operand.
+        let err = c
+            .run_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Stream(id),
+                    m: 16,
+                    estimator: TraceEstimator::HutchPP,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert!(matches!(&err, JobError::Failed(m) if m.contains("one-pass")), "{err}");
+        // A trace budget other than the stream's sketch width.
+        let err = c
+            .run_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Stream(id),
+                    m: 8,
+                    estimator: TraceEstimator::Hutchinson,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert!(matches!(&err, JobError::Failed(m) if m.contains("sketch width")), "{err}");
+        // Power iterations and adaptive tol both need extra passes.
+        let err = c
+            .run_spec(
+                JobSpec::RandSvd {
+                    a: OperandRef::Stream(id),
+                    rank: 4,
+                    oversample: 2,
+                    power_iters: 1,
+                    publish_q: false,
+                    tol: None,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert!(matches!(&err, JobError::Failed(m) if m.contains("one-pass")), "{err}");
+        // Refinement needs the full system.
+        let err = c
+            .run_spec(
+                JobSpec::Lstsq {
+                    a: OperandRef::Stream(id),
+                    b: vec![0.0; 32],
+                    m: 16,
+                    refine: Some(crate::randnla::lstsq::LsqrOpts::default()),
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert!(matches!(&err, JobError::Failed(m) if m.contains("one-pass")), "{err}");
+        c.free_stream(id);
+        c.shutdown();
+    }
+
+    #[test]
+    fn opu_policy_streams_degrade_to_the_host_arm_coherently() {
+        // OPU media are pinned per cell shape, so offset chunks cannot
+        // run there: under ForceOpu the whole stream (chunks + the
+        // consumer's full-input pass, via honored host affinity) must
+        // degrade to the host arm and produce exactly the ForceHost
+        // result — never a silent cross-operator estimate.
+        let a = psd_matrix(48, 24, 9);
+        let run = |policy: Policy| {
+            let c = Coordinator::start(CoordinatorConfig {
+                workers: 2,
+                policy,
+                batch: quiet_batch(),
+                pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap();
+            let id = ingest(
+                &c,
+                &a,
+                StreamOpts { sketch_m: 24, fd_rank: 8, range_cap: 8, chunk_rows: None },
+            );
+            let resp = c
+                .run_spec(
+                    JobSpec::Trace {
+                        a: OperandRef::Stream(id),
+                        m: 24,
+                        estimator: TraceEstimator::Hutchinson,
+                    },
+                    SubmitOptions::default(),
+                )
+                .unwrap();
+            let est = resp.payload.scalar().unwrap();
+            let device = resp.device;
+            c.free_stream(id);
+            c.shutdown();
+            (est, device)
+        };
+        let (host_est, host_dev) = run(Policy::ForceHost);
+        let (opu_est, opu_dev) = run(Policy::ForceOpu);
+        assert_eq!(host_dev, Device::Host);
+        assert_eq!(opu_dev, Device::Host, "streamed trace second pass left the host arm");
+        assert_eq!(
+            opu_est.to_bits(),
+            host_est.to_bits(),
+            "degraded OPU-policy stream diverged from the host result"
+        );
+    }
+
+    #[test]
+    fn unsealed_and_unknown_streams_are_typed_submit_errors() {
+        let c = host_coordinator(1);
+        let id = c
+            .begin_stream(
+                16,
+                8,
+                StreamOpts { sketch_m: 8, fd_rank: 4, range_cap: 4, chunk_rows: None },
+            )
+            .unwrap();
+        let err = c
+            .submit_spec(
+                JobSpec::Trace {
+                    a: OperandRef::Stream(id),
+                    m: 8,
+                    estimator: TraceEstimator::Hutchinson,
+                },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::StreamNotSealed(id));
+        assert!(c.free_stream(id));
+        assert_eq!(c.metrics.streams_aborted.load(Ordering::Relaxed), 1);
+        let stale = crate::coordinator::stream::StreamId(u64::MAX);
+        let err = c
+            .submit_spec(
+                JobSpec::Projection { data: OperandRef::Stream(stale), m: 4 },
+                SubmitOptions::default(),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::StreamRefUnsupported { kind: "projection" });
+        c.shutdown();
     }
 
     #[test]

@@ -140,6 +140,36 @@ impl OperandStore {
         }
     }
 
+    /// Reserve raw bytes against the quota without a backing entry.
+    ///
+    /// The streaming ingestion plane accounts its chunk buffers and
+    /// bounded summaries here, so `store_bytes` reflects *every*
+    /// resident operand byte the coordinator holds — and an over-quota
+    /// stream is refused with the same typed error an over-quota upload
+    /// gets. Every successful reserve must be paired with an eventual
+    /// [`release`](Self::release) (streams release deterministically on
+    /// seal and free/abort).
+    pub fn reserve(&self, bytes: usize) -> Result<(), StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.bytes.saturating_add(bytes) > self.quota {
+            return Err(StoreError::OverQuota {
+                needed: bytes,
+                used: inner.bytes,
+                quota: self.quota,
+            });
+        }
+        inner.bytes += bytes;
+        self.publish_gauge(inner.bytes);
+        Ok(())
+    }
+
+    /// Return bytes previously taken with [`reserve`](Self::reserve).
+    pub fn release(&self, bytes: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes = inner.bytes.saturating_sub(bytes);
+        self.publish_gauge(inner.bytes);
+    }
+
     /// Resident operand bytes (the quota-accounted quantity).
     pub fn bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
@@ -219,6 +249,24 @@ mod tests {
         // The job-side Arc still computes on the operand.
         assert_eq!(held.trace(), 3.0);
         assert_eq!(Arc::strong_count(&held), 1);
+    }
+
+    #[test]
+    fn reserve_release_share_the_quota_with_entries() {
+        // 4x4 = 128 B; quota fits one entry + 64 reserved bytes.
+        let s = OperandStore::new(192);
+        let id = s.upload(Mat::eye(4)).unwrap();
+        assert!(matches!(s.reserve(128), Err(StoreError::OverQuota { .. })));
+        s.reserve(64).unwrap();
+        assert_eq!(s.bytes(), 192);
+        // Reserved bytes block uploads exactly like entries do.
+        assert!(s.upload(Mat::eye(4)).is_err());
+        s.release(64);
+        s.free(id);
+        assert_eq!(s.bytes(), 0);
+        // Release never underflows.
+        s.release(1 << 20);
+        assert_eq!(s.bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,668 @@
+//! Streaming ingestion plane: chunked operands that never materialize.
+//!
+//! The session API (PR 3) made operands server-resident; this module
+//! removes the "fully resident" part. A client `begin`s a stream,
+//! `append`s rows in any chunking, and `seal`s it — the coordinator
+//! maintains three *bounded* summaries as chunks land, then serves
+//! one-pass jobs (`RandSvd` / `Trace` / `Lstsq` with
+//! `OperandRef::Stream`) from the summaries alone:
+//!
+//! - the range sketch `Yᵀ = Ω'·Aᵀ` (`range_cap × rows`) — each chunk's
+//!   transpose is an ordinary projection of the `(cols, range_cap)`
+//!   signature, so the accumulated Y is **bit-identical** to the
+//!   resident randsvd's range pass;
+//! - the co-range sketch `S·A` (`sketch_m × cols`) — accumulated through
+//!   [`ProjectionService::project_rows`], which addresses the
+//!   `(rows, sketch_m)` signature operator at each chunk's *absolute*
+//!   row offset: a fixed chunk schedule is bit-reproducible across pool
+//!   sizes, and re-chunking only re-associates f64 partial sums;
+//! - a rank-ℓ [`FrequentDirections`] sketch with its measured
+//!   `‖AᵀA − BᵀB‖₂` bound — the stream's accuracy certificate.
+//!
+//! Memory protocol: a stream's footprint is a *constant* fixed at
+//! `begin` (chunk buffer + summaries), reserved against the
+//! [`OperandStore`] quota like any upload, mirrored in the
+//! `stream_resident_bytes` gauge, and released deterministically — the
+//! buffer (and the FD slack half) at `seal`, everything at `free`.
+//! Freeing an unsealed stream is an abort (`streams_aborted` metric) and
+//! returns `store_bytes` to its baseline. See
+//! `docs/architecture.md` ("Streaming operands").
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::batcher::ProjectionService;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Device;
+use crate::coordinator::store::{OperandStore, StoreError};
+use crate::linalg::Mat;
+use crate::randnla::streaming::{ChunkSketch, FrequentDirections};
+
+/// Opaque handle to a streamed operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StreamId(pub u64);
+
+impl fmt::Display for StreamId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "stream#{}", self.0)
+    }
+}
+
+/// Per-stream summary sizing, fixed at [`begin`](StreamRegistry::begin).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOpts {
+    /// Rows buffered before a chunk flushes through the projection plane
+    /// (`None` = the coordinator's `stream_chunk_rows` default, CLI
+    /// `serve --stream-chunk-rows`).
+    pub chunk_rows: Option<usize>,
+    /// Width of the co-range sketch `S·A` — the budget one-pass `Trace`
+    /// and `Lstsq` jobs run at (their `m` must equal it), and the system
+    /// the one-pass randsvd solves its co-range against (must be ≥ its
+    /// `rank + oversample`).
+    pub sketch_m: usize,
+    /// Frequent Directions sketch rows ℓ.
+    pub fd_rank: usize,
+    /// Column budget of the range sketch `Y = A·Ω` — caps
+    /// `rank + oversample` of one-pass randsvd jobs; at equality the
+    /// stream's range pass is bit-identical to the resident one.
+    pub range_cap: usize,
+}
+
+impl Default for StreamOpts {
+    fn default() -> Self {
+        Self { chunk_rows: None, sketch_m: 64, fd_rank: 32, range_cap: 32 }
+    }
+}
+
+/// Typed streaming-protocol failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// The id names no live stream (freed or never begun).
+    UnknownStream(StreamId),
+    /// The operation needs a sealed stream (submit before `seal`).
+    NotSealed(StreamId),
+    /// `append` after `seal`.
+    AlreadySealed(StreamId),
+    /// A chunk's column count does not match the declared stream width.
+    ColsMismatch { expected: usize, got: usize },
+    /// More rows appended than declared at `begin`.
+    Overrun { declared: usize, got: usize },
+    /// `seal` before every declared row arrived (the stream stays open).
+    Short { declared: usize, got: usize },
+    /// Invalid sizing options at `begin`.
+    BadOpts(String),
+    /// Admitting the stream's bounded footprint would exceed the operand
+    /// store quota.
+    OverQuota(StoreError),
+    /// A chunk flush failed on the projection plane; the stream is
+    /// poisoned (free it and re-ingest).
+    Projection(String),
+    /// An earlier flush failed; only `free` is meaningful now.
+    Poisoned(StreamId),
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamError::UnknownStream(id) => write!(f, "unknown stream {id}"),
+            StreamError::NotSealed(id) => {
+                write!(f, "{id} is not sealed yet — seal it before submitting jobs")
+            }
+            StreamError::AlreadySealed(id) => write!(f, "{id} is sealed; no more rows"),
+            StreamError::ColsMismatch { expected, got } => {
+                write!(f, "chunk has {got} cols, stream declared {expected}")
+            }
+            StreamError::Overrun { declared, got } => {
+                write!(f, "stream overrun: {got} rows appended, {declared} declared")
+            }
+            StreamError::Short { declared, got } => {
+                write!(f, "cannot seal: {got}/{declared} declared rows arrived")
+            }
+            StreamError::BadOpts(msg) => write!(f, "bad stream options: {msg}"),
+            StreamError::OverQuota(e) => write!(f, "stream refused: {e}"),
+            StreamError::Projection(msg) => write!(f, "stream chunk flush failed: {msg}"),
+            StreamError::Poisoned(id) => {
+                write!(f, "{id} is poisoned by an earlier flush failure — free and re-ingest")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// The immutable summaries of a sealed stream — everything a one-pass
+/// job needs; the full operand was never resident.
+pub struct SealedStream {
+    /// Declared (and delivered) row count.
+    pub rows: usize,
+    pub cols: usize,
+    pub sketch_m: usize,
+    pub range_cap: usize,
+    /// Declared FD rows ℓ (the accounting constant; the realized sketch
+    /// may hold fewer rows).
+    pub fd_rank: usize,
+    /// `Yᵀ = Ω'·Aᵀ` (range_cap × rows): bit-identical to the resident
+    /// randsvd's projection of `Aᵀ` at the `(cols, range_cap)` signature.
+    pub yt: Mat,
+    /// `S·A` (sketch_m × cols), accumulated chunkwise at absolute row
+    /// offsets of the `(rows, sketch_m)` signature operator.
+    pub sa: Mat,
+    /// Frequent Directions sketch B (≤ fd_rank × cols).
+    pub fd: Mat,
+    /// Measured Σδ — bound on `‖AᵀA − BᵀB‖₂` (≤ `‖A‖²_F/(ℓ−k)`).
+    pub fd_bound: f64,
+    /// Accumulated `‖A‖²_F` (exact).
+    pub fro2: f64,
+    /// Arm every chunk's co-range batch was planned on; `None` when arms
+    /// flipped mid-stream (an arm died) — the accumulated sketch then
+    /// mixes operators and consumers needing a second same-operator pass
+    /// fail typed.
+    pub arm: Option<Device>,
+    /// Arm every chunk's *range* batch was planned on; `None` when they
+    /// flipped — Y's columns then come from different operators Ω and
+    /// the one-pass randsvd (Y's only consumer) fails typed. Tracked
+    /// separately from [`arm`](Self::arm): the two passes address
+    /// different signatures and may legitimately sit on different arms.
+    pub y_arm: Option<Device>,
+    /// Chunks flushed while ingesting.
+    pub chunks: u64,
+}
+
+impl fmt::Debug for SealedStream {
+    /// Compact: summary shapes, never the summary payloads.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SealedStream")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("sketch_m", &self.sketch_m)
+            .field("range_cap", &self.range_cap)
+            .field("fd_rank", &self.fd_rank)
+            .field("fd_bound", &self.fd_bound)
+            .field("arm", &self.arm)
+            .field("y_arm", &self.y_arm)
+            .field("chunks", &self.chunks)
+            .finish()
+    }
+}
+
+struct OpenStream {
+    rows: usize,
+    cols: usize,
+    chunk_rows: usize,
+    sketch_m: usize,
+    fd_rank: usize,
+    range_cap: usize,
+    /// Chunk buffer (≤ chunk_rows rows used) — the only place raw
+    /// operand rows ever sit.
+    buf: Mat,
+    buf_rows: usize,
+    yt: Mat,
+    sa: ChunkSketch,
+    fd: FrequentDirections,
+    arm: Option<Device>,
+    mixed_arms: bool,
+    y_arm: Option<Device>,
+    mixed_y_arms: bool,
+    failed: bool,
+    chunks: u64,
+}
+
+impl OpenStream {
+    fn rows_seen(&self) -> usize {
+        self.sa.rows_seen()
+    }
+}
+
+enum State {
+    Open(Box<OpenStream>),
+    Sealed(Arc<SealedStream>),
+    /// Terminal: bytes already released (guards double-release when a
+    /// free races a caller still holding the slot).
+    Freed,
+}
+
+/// Footprint of an open stream: chunk buffer + range sketch + co-range
+/// sketch + FD double buffer, in bytes. Constant for the stream's open
+/// life — what `begin` reserves.
+fn open_bytes(rows: usize, cols: usize, chunk: usize, m: usize, ell: usize, cap: usize) -> usize {
+    (chunk * cols + cap * rows + m * cols + 2 * ell * cols) * std::mem::size_of::<f64>()
+}
+
+/// Footprint after seal: the buffer and the FD slack half are gone.
+fn sealed_bytes(rows: usize, cols: usize, m: usize, ell: usize, cap: usize) -> usize {
+    (cap * rows + m * cols + ell * cols) * std::mem::size_of::<f64>()
+}
+
+/// Registry of live streams, shared by the coordinator front door and
+/// its tests. Quota-accounted against the operand store; per-stream
+/// locking so concurrent streams ingest independently.
+pub struct StreamRegistry {
+    slots: Mutex<HashMap<u64, Arc<Mutex<State>>>>,
+    next: AtomicU64,
+    store: Arc<OperandStore>,
+    metrics: Arc<Metrics>,
+}
+
+impl StreamRegistry {
+    pub fn new(store: Arc<OperandStore>, metrics: Arc<Metrics>) -> Self {
+        Self {
+            slots: Mutex::new(HashMap::new()),
+            next: AtomicU64::new(1),
+            store,
+            metrics,
+        }
+    }
+
+    /// Open a stream of a `rows × cols` operand whose rows will arrive
+    /// in chunks. The bounded footprint (buffer + summaries) is reserved
+    /// against the store quota here and never grows.
+    pub fn begin(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+        default_chunk_rows: usize,
+    ) -> Result<StreamId, StreamError> {
+        let chunk_rows = opts.chunk_rows.unwrap_or(default_chunk_rows);
+        if rows == 0 || cols == 0 {
+            return Err(StreamError::BadOpts(format!("empty stream ({rows}x{cols})")));
+        }
+        if chunk_rows == 0 {
+            return Err(StreamError::BadOpts("chunk_rows must be >= 1".into()));
+        }
+        // A buffer larger than the stream can never fill: clamp it so a
+        // short stream reserves (and allocates) only what it can use.
+        let chunk_rows = chunk_rows.min(rows);
+        if opts.sketch_m == 0 || opts.fd_rank == 0 || opts.range_cap == 0 {
+            return Err(StreamError::BadOpts(
+                "sketch_m, fd_rank and range_cap must be >= 1".into(),
+            ));
+        }
+        if opts.range_cap > rows {
+            return Err(StreamError::BadOpts(format!(
+                "range_cap {} exceeds the stream's {rows} rows",
+                opts.range_cap
+            )));
+        }
+        let bytes = open_bytes(rows, cols, chunk_rows, opts.sketch_m, opts.fd_rank, opts.range_cap);
+        self.store.reserve(bytes).map_err(StreamError::OverQuota)?;
+        self.metrics.stream_resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        let st = OpenStream {
+            rows,
+            cols,
+            chunk_rows,
+            sketch_m: opts.sketch_m,
+            fd_rank: opts.fd_rank,
+            range_cap: opts.range_cap,
+            buf: Mat::zeros(chunk_rows, cols),
+            buf_rows: 0,
+            yt: Mat::zeros(opts.range_cap, rows),
+            sa: ChunkSketch::new(opts.sketch_m, rows, cols),
+            fd: FrequentDirections::new(opts.fd_rank, cols),
+            arm: None,
+            mixed_arms: false,
+            y_arm: None,
+            mixed_y_arms: false,
+            failed: false,
+            chunks: 0,
+        };
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.slots
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(Mutex::new(State::Open(Box::new(st)))));
+        Ok(StreamId(id))
+    }
+
+    /// Append rows (any chunking — the buffer re-chunks to the stream's
+    /// `chunk_rows`; full buffers flush through the projection plane
+    /// before more rows are copied in, so at most `chunk_rows` raw rows
+    /// are ever resident).
+    pub fn append(
+        &self,
+        id: StreamId,
+        chunk: &Mat,
+        svc: &ProjectionService,
+    ) -> Result<(), StreamError> {
+        let slot = self.slot(id)?;
+        let mut state = slot.lock().unwrap();
+        let st = open_mut(&mut state, id)?;
+        if chunk.cols != st.cols {
+            return Err(StreamError::ColsMismatch { expected: st.cols, got: chunk.cols });
+        }
+        let got = st.rows_seen() + st.buf_rows + chunk.rows;
+        if got > st.rows {
+            return Err(StreamError::Overrun { declared: st.rows, got });
+        }
+        let mut at = 0usize;
+        while at < chunk.rows {
+            let take = (st.chunk_rows - st.buf_rows).min(chunk.rows - at);
+            for i in 0..take {
+                st.buf.row_mut(st.buf_rows + i).copy_from_slice(chunk.row(at + i));
+            }
+            st.buf_rows += take;
+            at += take;
+            if st.buf_rows == st.chunk_rows {
+                self.flush(st, svc)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush the tail chunk, verify every declared row arrived, compress
+    /// the FD sketch and freeze the summaries. Releases the chunk buffer
+    /// and FD slack bytes; the stream now serves one-pass jobs.
+    pub fn seal(&self, id: StreamId, svc: &ProjectionService) -> Result<(), StreamError> {
+        let slot = self.slot(id)?;
+        let mut state = slot.lock().unwrap();
+        let st = open_mut(&mut state, id)?;
+        if st.buf_rows > 0 {
+            self.flush(st, svc)?;
+        }
+        if st.rows_seen() < st.rows {
+            return Err(StreamError::Short { declared: st.rows, got: st.rows_seen() });
+        }
+        let State::Open(mut st) = std::mem::replace(&mut *state, State::Freed) else {
+            unreachable!("open_mut above guaranteed Open");
+        };
+        st.fd.compress();
+        let reserved =
+            open_bytes(st.rows, st.cols, st.chunk_rows, st.sketch_m, st.fd_rank, st.range_cap);
+        let released =
+            reserved - sealed_bytes(st.rows, st.cols, st.sketch_m, st.fd_rank, st.range_cap);
+        let arm = if st.mixed_arms { None } else { st.arm };
+        let y_arm = if st.mixed_y_arms { None } else { st.y_arm };
+        let sealed = SealedStream {
+            rows: st.rows,
+            cols: st.cols,
+            sketch_m: st.sketch_m,
+            range_cap: st.range_cap,
+            fd_rank: st.fd_rank,
+            yt: st.yt,
+            sa: st.sa.finish(),
+            fd: st.fd.sketch(),
+            fd_bound: st.fd.bound(),
+            fro2: st.fd.fro2(),
+            arm,
+            y_arm,
+            chunks: st.chunks,
+        };
+        *state = State::Sealed(Arc::new(sealed));
+        self.store.release(released);
+        self.metrics.stream_resident_bytes.fetch_sub(released as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The sealed summaries (what job submission resolves a
+    /// `OperandRef::Stream` to — an `Arc` clone, so freeing the stream
+    /// after submit cannot strand an in-flight job).
+    pub fn sealed(&self, id: StreamId) -> Result<Arc<SealedStream>, StreamError> {
+        let slot = self.slot(id)?;
+        let state = slot.lock().unwrap();
+        match &*state {
+            State::Sealed(s) => Ok(s.clone()),
+            State::Open(_) => Err(StreamError::NotSealed(id)),
+            State::Freed => Err(StreamError::UnknownStream(id)),
+        }
+    }
+
+    /// Drop a stream and release its quota bytes deterministically.
+    /// Freeing an unsealed stream is an abort (`streams_aborted`);
+    /// in-flight jobs holding the sealed `Arc` finish unaffected.
+    pub fn free(&self, id: StreamId) -> bool {
+        let Some(slot) = self.slots.lock().unwrap().remove(&id.0) else {
+            return false;
+        };
+        let mut state = slot.lock().unwrap();
+        let released = match std::mem::replace(&mut *state, State::Freed) {
+            State::Open(st) => {
+                self.metrics.streams_aborted.fetch_add(1, Ordering::Relaxed);
+                open_bytes(st.rows, st.cols, st.chunk_rows, st.sketch_m, st.fd_rank, st.range_cap)
+            }
+            State::Sealed(s) => sealed_bytes(s.rows, s.cols, s.sketch_m, s.fd_rank, s.range_cap),
+            State::Freed => return false,
+        };
+        self.store.release(released);
+        self.metrics.stream_resident_bytes.fetch_sub(released as u64, Ordering::Relaxed);
+        true
+    }
+
+    /// Live (open + sealed) streams.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn slot(&self, id: StreamId) -> Result<Arc<Mutex<State>>, StreamError> {
+        self.slots
+            .lock()
+            .unwrap()
+            .get(&id.0)
+            .cloned()
+            .ok_or(StreamError::UnknownStream(id))
+    }
+
+    /// One chunk through the projection plane: the range pass (ordinary
+    /// `(cols, range_cap)` projection of the chunk's transpose) and the
+    /// co-range pass (`(rows, sketch_m)` operator addressed at the
+    /// chunk's absolute offset) are submitted together, then folded into
+    /// the summaries.
+    fn flush(&self, st: &mut OpenStream, svc: &ProjectionService) -> Result<(), StreamError> {
+        let take = st.buf_rows;
+        let r0 = st.rows_seen();
+        let chunk = Arc::new(st.buf.crop(take, st.cols));
+        let run = (|| -> anyhow::Result<()> {
+            let p_sa = svc.project_rows_async(chunk.clone(), st.sketch_m, st.rows, r0)?;
+            let p_y = svc.project_async(chunk.transpose(), st.range_cap)?;
+            let ra = p_sa.wait()?;
+            let ry = p_y.wait()?;
+            for i in 0..st.range_cap {
+                st.yt.row_mut(i)[r0..r0 + take].copy_from_slice(ry.result.row(i));
+            }
+            st.sa.absorb_partial(&ra.result, take);
+            match st.arm {
+                None => st.arm = Some(ra.planned),
+                Some(a) if a != ra.planned => st.mixed_arms = true,
+                _ => {}
+            }
+            match st.y_arm {
+                None => st.y_arm = Some(ry.planned),
+                Some(a) if a != ry.planned => st.mixed_y_arms = true,
+                _ => {}
+            }
+            Ok(())
+        })();
+        if let Err(e) = run {
+            st.failed = true;
+            return Err(StreamError::Projection(e.to_string()));
+        }
+        st.fd.insert(&chunk);
+        st.buf_rows = 0;
+        st.chunks += 1;
+        self.metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+fn open_mut<'a>(state: &'a mut State, id: StreamId) -> Result<&'a mut OpenStream, StreamError> {
+    match state {
+        State::Open(st) if st.failed => Err(StreamError::Poisoned(id)),
+        State::Open(st) => Ok(st),
+        State::Sealed(_) => Err(StreamError::AlreadySealed(id)),
+        State::Freed => Err(StreamError::UnknownStream(id)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{signature_seed, BatchConfig};
+    use crate::coordinator::pool::{DevicePool, PoolConfig};
+    use crate::coordinator::router::{Availability, Policy, Router};
+    use crate::linalg::rel_frobenius_error;
+    use crate::opu::NoiseModel;
+    use crate::randnla::backend::{CounterSketcher, Sketcher};
+    use crate::rng::Xoshiro256;
+    use std::time::Duration;
+
+    fn setup(quota: usize) -> (StreamRegistry, ProjectionService, Arc<Metrics>, Arc<OperandStore>) {
+        let metrics = Arc::new(Metrics::new());
+        let store = Arc::new(OperandStore::with_metrics(quota, metrics.clone()));
+        let cfg = BatchConfig {
+            max_cols: 1024,
+            max_wait: Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        };
+        let avail = Availability { pjrt: false, ..Availability::default() };
+        let router = Router::new(Policy::ForceHost, avail);
+        let pool = Arc::new(DevicePool::build(
+            &PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            &avail,
+        ));
+        let (svc, _join) = ProjectionService::start(cfg, router, pool, None, metrics.clone());
+        (StreamRegistry::new(store.clone(), metrics.clone()), svc, metrics, store)
+    }
+
+    fn opts(sketch_m: usize, fd_rank: usize, range_cap: usize) -> StreamOpts {
+        StreamOpts { chunk_rows: None, sketch_m, fd_rank, range_cap }
+    }
+
+    #[test]
+    fn sealed_summaries_match_direct_signature_operators() {
+        let (reg, svc, metrics, _store) = setup(usize::MAX);
+        let (rows, cols) = (40usize, 24usize);
+        let mut rng = Xoshiro256::new(1);
+        let a = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        let id = reg.begin(rows, cols, opts(10, 8, 6), 16).unwrap();
+        // Irregular client chunking: the buffer re-chunks to 16.
+        let mut r0 = 0usize;
+        for take in [13usize, 13, 13, 1] {
+            let piece = Mat::from_fn(take, cols, |i, j| a.at(r0 + i, j));
+            reg.append(id, &piece, &svc).unwrap();
+            r0 += take;
+        }
+        reg.seal(id, &svc).unwrap();
+        let s = reg.sealed(id).unwrap();
+        assert_eq!(s.chunks, 3, "40 rows at chunk 16 = 2 full + 1 tail");
+        assert_eq!(metrics.stream_chunks.load(Ordering::Relaxed), 3);
+
+        // Co-range: S·A against the (rows, sketch_m) signature operator,
+        // exact up to chunk-sum association.
+        let base = BatchConfig::default().seed;
+        let s_op = CounterSketcher::new(10, rows, signature_seed(base, rows, 10));
+        let rel = rel_frobenius_error(&s_op.project(&a), &s.sa);
+        assert!(rel < 1e-12, "co-range sketch drifted {rel}");
+
+        // Range: bit-identical to the resident projection of Aᵀ at the
+        // (cols, range_cap) signature — column stacking re-associates
+        // nothing.
+        let omega = CounterSketcher::new(6, cols, signature_seed(base, cols, 6));
+        assert_eq!(s.yt, omega.project(&a.transpose()), "range sketch not bit-identical");
+
+        // FD certificate is self-consistent.
+        let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+        assert!((s.fro2 - fro2).abs() < 1e-9 * fro2);
+        assert!(s.fd_bound >= 0.0);
+        assert!(s.fd.rows <= 8);
+        assert_eq!(s.arm, Some(Device::Host));
+        assert_eq!(s.y_arm, Some(Device::Host));
+    }
+
+    #[test]
+    fn quota_accounting_is_deterministic_over_the_lifecycle() {
+        let (reg, svc, metrics, store) = setup(usize::MAX);
+        let (rows, cols, chunk, m, ell, cap) = (32usize, 12usize, 8usize, 6usize, 4usize, 4usize);
+        let expect_open = open_bytes(rows, cols, chunk, m, ell, cap);
+        let expect_sealed = sealed_bytes(rows, cols, m, ell, cap);
+        let id = reg
+            .begin(rows, cols, StreamOpts { chunk_rows: Some(chunk), ..opts(m, ell, cap) }, 999)
+            .unwrap();
+        assert_eq!(store.bytes(), expect_open);
+        assert_eq!(metrics.stream_resident_bytes.load(Ordering::Relaxed), expect_open as u64);
+        let mut rng = Xoshiro256::new(2);
+        reg.append(id, &Mat::gaussian(rows, cols, 1.0, &mut rng), &svc).unwrap();
+        assert_eq!(store.bytes(), expect_open, "footprint must not grow while ingesting");
+        reg.seal(id, &svc).unwrap();
+        assert_eq!(store.bytes(), expect_sealed);
+        assert!(reg.free(id));
+        assert_eq!(store.bytes(), 0, "freed stream must return store_bytes to baseline");
+        assert_eq!(metrics.stream_resident_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.streams_aborted.load(Ordering::Relaxed), 0);
+        assert!(!reg.free(id), "double free reports false");
+    }
+
+    #[test]
+    fn aborting_an_open_stream_releases_everything() {
+        let (reg, svc, metrics, store) = setup(usize::MAX);
+        let id = reg.begin(24, 8, opts(4, 4, 4), 8).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        reg.append(id, &Mat::gaussian(10, 8, 1.0, &mut rng), &svc).unwrap();
+        assert!(store.bytes() > 0);
+        assert!(reg.free(id));
+        assert_eq!(store.bytes(), 0, "aborted stream leaked quota bytes");
+        assert_eq!(metrics.stream_resident_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.streams_aborted.load(Ordering::Relaxed), 1);
+        assert!(matches!(reg.sealed(id), Err(StreamError::UnknownStream(_))));
+    }
+
+    #[test]
+    fn protocol_violations_are_typed() {
+        let (reg, svc, _metrics, _store) = setup(usize::MAX);
+        let id = reg.begin(16, 4, opts(4, 2, 2), 8).unwrap();
+        // Wrong width.
+        assert!(matches!(
+            reg.append(id, &Mat::zeros(2, 5), &svc),
+            Err(StreamError::ColsMismatch { expected: 4, got: 5 })
+        ));
+        // Too many rows.
+        assert!(matches!(
+            reg.append(id, &Mat::zeros(17, 4), &svc),
+            Err(StreamError::Overrun { declared: 16, got: 17 })
+        ));
+        // Seal before all rows arrive: stream stays open and usable.
+        reg.append(id, &Mat::zeros(10, 4), &svc).unwrap();
+        assert!(matches!(
+            reg.seal(id, &svc),
+            Err(StreamError::Short { declared: 16, got: 10 })
+        ));
+        assert!(matches!(reg.sealed(id), Err(StreamError::NotSealed(_))));
+        reg.append(id, &Mat::zeros(6, 4), &svc).unwrap();
+        reg.seal(id, &svc).unwrap();
+        // Appending after seal.
+        assert!(matches!(
+            reg.append(id, &Mat::zeros(1, 4), &svc),
+            Err(StreamError::AlreadySealed(_))
+        ));
+        // Unknown stream.
+        assert!(matches!(
+            reg.append(StreamId(999), &Mat::zeros(1, 4), &svc),
+            Err(StreamError::UnknownStream(_))
+        ));
+    }
+
+    #[test]
+    fn over_quota_and_bad_opts_are_refused_at_begin() {
+        let (reg, _svc, _metrics, store) = setup(128);
+        match reg.begin(64, 64, opts(8, 8, 8), 16) {
+            Err(StreamError::OverQuota(_)) => {}
+            other => panic!("expected OverQuota, got {other:?}"),
+        }
+        assert_eq!(store.bytes(), 0, "refused stream must not leave bytes behind");
+        let (reg, _svc, _m, _s) = setup(usize::MAX);
+        assert!(matches!(
+            reg.begin(8, 4, opts(4, 2, 16), 8),
+            Err(StreamError::BadOpts(_))
+        ));
+        assert!(matches!(reg.begin(0, 4, opts(4, 2, 2), 8), Err(StreamError::BadOpts(_))));
+        assert!(matches!(
+            reg.begin(8, 4, StreamOpts { chunk_rows: Some(0), ..opts(4, 2, 2) }, 8),
+            Err(StreamError::BadOpts(_))
+        ));
+    }
+}

@@ -12,7 +12,8 @@ use std::path::PathBuf;
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, OperandId,
-    OperandRef, Policy, PoolConfig, SubmitOptions, Ticket, TraceEstimator,
+    OperandRef, Policy, PoolConfig, StreamError, StreamId, StreamOpts, SubmitOptions, Ticket,
+    TraceEstimator,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
@@ -36,6 +37,7 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
          [--queue-cap 1024] (bounded admission queue; Busy beyond it)
          [--store-mb 1024] (operand-store quota; 0 = unbounded)
          [--adaptive-tol 0.05] (rel. error target of adaptive-svd jobs)
+         [--stream-chunk-rows 256] (streaming-ingest chunk size)
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
 
@@ -177,6 +179,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     if adaptive_tol <= 0.0 || adaptive_tol >= 1.0 {
         return Err(format!("--adaptive-tol must lie in (0, 1), got {adaptive_tol}"));
     }
+    let stream_chunk_rows = args.get_usize("stream-chunk-rows", 256)?;
+    if stream_chunk_rows == 0 {
+        return Err("--stream-chunk-rows must be >= 1".into());
+    }
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
@@ -186,6 +192,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         artifacts_dir: artifacts,
         queue_cap: args.get_usize("queue-cap", 1024)?,
         store_quota: if store_mb == 0 { usize::MAX } else { store_mb * 1024 * 1024 },
+        stream_chunk_rows,
     })
     .map_err(|e| e.to_string())?;
 
@@ -226,19 +233,23 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Jobs submitted but not yet waited on, with the handles they own.
-type InFlight = std::collections::VecDeque<(Ticket, Vec<OperandId>)>;
+/// Jobs submitted but not yet waited on, with the operand handles and
+/// streams they own.
+type InFlight = std::collections::VecDeque<(Ticket, Vec<OperandId>, Vec<StreamId>)>;
 
-/// Block on the oldest in-flight job and free its operands; false when
-/// nothing is in flight.
+/// Block on the oldest in-flight job and free its operands and streams;
+/// false when nothing is in flight.
 fn reap_front(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) -> bool {
     match in_flight.pop_front() {
-        Some((t, handles)) => {
+        Some((t, handles, streams)) => {
             if t.wait().is_ok() {
                 *ok += 1;
             }
             for h in handles {
                 coord.free_operand(h);
+            }
+            for s in streams {
+                coord.free_stream(s);
             }
             true
         }
@@ -247,21 +258,25 @@ fn reap_front(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) -> 
 }
 
 /// Non-blocking reap: retire every already-finished job at the front of
-/// the in-flight queue, freeing its operands.
+/// the in-flight queue, freeing its operands and streams.
 fn reap_finished(coord: &Coordinator, in_flight: &mut InFlight, ok: &mut usize) {
     loop {
         let done = match in_flight.front() {
-            Some((t, _)) => t.try_wait(),
+            Some((t, ..)) => t.try_wait(),
             None => None,
         };
         match done {
             Some(res) => {
-                let (_t, handles) = in_flight.pop_front().expect("front just observed");
+                let (_t, handles, streams) =
+                    in_flight.pop_front().expect("front just observed");
                 if res.is_ok() {
                     *ok += 1;
                 }
                 for h in handles {
                     coord.free_operand(h);
+                }
+                for s in streams {
+                    coord.free_stream(s);
                 }
             }
             None => break,
@@ -280,7 +295,12 @@ fn submit_trace_job(
     adaptive_tol: f64,
     in_flight: &mut InFlight,
     ok: &mut usize,
-) -> Result<(Ticket, Vec<OperandId>), String> {
+) -> Result<(Ticket, Vec<OperandId>, Vec<StreamId>), String> {
+    // Streaming kinds never upload the operand: rows are chunk-ingested
+    // through the streaming plane and the job runs one-pass.
+    if matches!(spec.kind, JobKind::StreamIngest | JobKind::StreamSvd) {
+        return submit_stream_job(coord, spec, in_flight, ok);
+    }
     let mut handles = Vec::new();
     let mut upload = |m: Mat| -> Result<OperandRef, String> {
         let arc = std::sync::Arc::new(m);
@@ -362,13 +382,98 @@ fn submit_trace_job(
             m: spec.m,
             rcond: 1e-8,
         },
+        JobKind::StreamIngest | JobKind::StreamSvd => unreachable!("handled above"),
     };
     // Blocking admission: the queue's space condvar replaces the old
     // 1 ms Busy sleep-poll loop.
     coord
         .submit_spec_wait(job, SubmitOptions::default())
-        .map(|t| (t, handles))
+        .map(|t| (t, handles, Vec::new()))
         .map_err(|e| e.to_string())
+}
+
+/// Streaming trace jobs: chunk-ingest the operand (the driver generates
+/// it whole as a synthetic client, but the coordinator only ever holds
+/// one chunk buffer plus the bounded summaries), seal, and run the
+/// one-pass consumer. An over-quota `begin` retires the oldest in-flight
+/// jobs until the stream's bounded footprint is admitted.
+fn submit_stream_job(
+    coord: &Coordinator,
+    spec: &traces::JobSpec,
+    in_flight: &mut InFlight,
+    ok: &mut usize,
+) -> Result<(Ticket, Vec<OperandId>, Vec<StreamId>), String> {
+    // Derived sizes, computed once: the StreamOpts and the JobSpec below
+    // must agree (trace's m == sketch_m; randsvd's rank + oversample ==
+    // range_cap) or the one-pass consumer fails its budget check. Every
+    // budget clamps to the stream's row count so tiny --sizes values
+    // still serve (range_cap > rows is a BadOpts refusal).
+    let trace_m = spec.m.max(4);
+    let svd_rank = spec.m.min(spec.n / 4).max(4).min(spec.n);
+    let svd_cap = (svd_rank + 8).min(spec.n);
+    let svd_oversample = svd_cap - svd_rank;
+    let (a, opts) = match spec.kind {
+        // Ingest-heavy: a square operand consumed by the streaming
+        // Hutchinson trace at the stream's sketch width.
+        JobKind::StreamIngest => (
+            psd_matrix(spec.n, spec.n / 2, spec.seed),
+            StreamOpts {
+                chunk_rows: None,
+                sketch_m: trace_m,
+                fd_rank: 16.min(spec.n),
+                range_cap: 8.min(spec.n),
+            },
+        ),
+        JobKind::StreamSvd => (
+            psd_matrix(spec.n, spec.n / 8, spec.seed),
+            StreamOpts {
+                chunk_rows: None,
+                sketch_m: 2 * svd_cap,
+                fd_rank: svd_rank.max(8).min(spec.n.max(1)),
+                range_cap: svd_cap,
+            },
+        ),
+        _ => unreachable!("not a streaming kind"),
+    };
+    let sid = loop {
+        match coord.begin_stream(a.rows, a.cols, opts) {
+            Ok(id) => break id,
+            // Store full: retire the oldest in-flight job and retry,
+            // mirroring the upload path's quota-retire loop.
+            Err(StreamError::OverQuota(_)) if reap_front(coord, in_flight, ok) => {}
+            Err(e) => return Err(e.to_string()),
+        }
+    };
+    let ingest = coord
+        .append_stream(sid, &a)
+        .and_then(|()| coord.seal_stream(sid));
+    if let Err(e) = ingest {
+        coord.free_stream(sid);
+        return Err(e.to_string());
+    }
+    let job = match spec.kind {
+        JobKind::StreamIngest => JobSpec::Trace {
+            a: OperandRef::Stream(sid),
+            m: trace_m,
+            estimator: TraceEstimator::Hutchinson,
+        },
+        JobKind::StreamSvd => JobSpec::RandSvd {
+            a: OperandRef::Stream(sid),
+            rank: svd_rank,
+            oversample: svd_oversample,
+            power_iters: 0,
+            publish_q: false,
+            tol: None,
+        },
+        _ => unreachable!("not a streaming kind"),
+    };
+    match coord.submit_spec_wait(job, SubmitOptions::default()) {
+        Ok(t) => Ok((t, Vec::new(), vec![sid])),
+        Err(e) => {
+            coord.free_stream(sid);
+            Err(e.to_string())
+        }
+    }
 }
 
 fn cmd_info(argv: &[String]) -> Result<(), String> {

@@ -219,6 +219,52 @@ pub fn adaptive_range_ms(kind: SketchKind, n: usize, block: usize, k: usize, pas
         .sum()
 }
 
+/// Predicted host cost of one streaming *chunk* batch: `chunk_rows`
+/// input rows of a `(sig_n, m)` signature, `k` data columns. Dense and
+/// sparse costs scale with the chunk's own extent; the SRHT cell always
+/// runs its FWHT over the signature's padded width (chunks embed their
+/// rows into the full zero-padded buffer), which is why per-chunk SRHT
+/// ingestion does not get cheaper as chunks shrink — the model the
+/// router prices chunk cells with (see `Router::schedule_chunk`).
+pub fn stream_chunk_ms(
+    kind: SketchKind,
+    sig_n: usize,
+    chunk_rows: usize,
+    m: usize,
+    k: usize,
+) -> f64 {
+    match kind {
+        SketchKind::Dense => host_projection_ms(chunk_rows, m, k),
+        SketchKind::Srht => srht_cell_projection_ms(sig_n, chunk_rows, m, k),
+        SketchKind::Sparse => sparse_projection_ms(chunk_rows, m, k, SPARSE_SKETCH_NNZ),
+    }
+}
+
+/// Aggregate ingestion cost of a whole stream: `rows` rows arriving in
+/// `ceil(rows / chunk_rows)` chunks, each priced as its own batch (the
+/// same per-batch model the router applies pass by pass, so the
+/// aggregate and the serving plane's chunk-by-chunk pricing agree by
+/// construction). On the dense arm chunking is free — the flops just
+/// split; on the SRHT arm every chunk pays the full-width FWHT, so the
+/// model makes the chunk-size/overhead trade-off visible.
+pub fn stream_ingest_ms(
+    kind: SketchKind,
+    rows: usize,
+    chunk_rows: usize,
+    m: usize,
+    k: usize,
+) -> f64 {
+    let chunk_rows = chunk_rows.max(1);
+    let mut total = 0.0;
+    let mut at = 0usize;
+    while at < rows {
+        let take = chunk_rows.min(rows - at);
+        total += stream_chunk_ms(kind, rows, take, m, k);
+        at += take;
+    }
+    total
+}
+
 /// Energy-efficiency comparison backing the §I claim (~2 orders of
 /// magnitude): effective random-projection OPS per joule.
 pub fn energy_ratio(opu: &OpuTimingModel, gpu: &GpuModel, n: usize) -> Option<f64> {
@@ -369,6 +415,33 @@ mod tests {
         let sparse_two = adaptive_range_ms(SketchKind::Sparse, n, 8, k, 2);
         let sparse_fixed = digital_sketch_ms(SketchKind::Sparse, n, 64, k);
         assert!(sparse_two > sparse_fixed, "{sparse_two} vs {sparse_fixed}");
+    }
+
+    #[test]
+    fn dense_stream_ingestion_costs_the_flops_plus_per_chunk_overhead() {
+        // Chunking a dense sketch splits the same flops across chunks:
+        // the aggregate exceeds the one-shot cost only by the per-chunk
+        // dispatch overhead.
+        let (rows, m, k) = (4096usize, 128usize, 16usize);
+        let whole = digital_sketch_ms(SketchKind::Dense, rows, m, k);
+        let chunks = rows.div_ceil(256);
+        let streamed = stream_ingest_ms(SketchKind::Dense, rows, 256, m, k);
+        let overhead = (chunks - 1) as f64 * 0.01;
+        assert!((streamed - whole - overhead).abs() < 1e-9, "{streamed} vs {whole}");
+    }
+
+    #[test]
+    fn srht_stream_chunks_pay_the_signature_width_transform() {
+        // Every SRHT chunk runs a full-width FWHT: halving the chunk
+        // size roughly doubles the ingestion cost — the model must show
+        // it so callers size chunks deliberately.
+        let (rows, m, k) = (4096usize, 128usize, 16usize);
+        let coarse = stream_ingest_ms(SketchKind::Srht, rows, 1024, m, k);
+        let fine = stream_ingest_ms(SketchKind::Srht, rows, 256, m, k);
+        assert!(fine > 2.0 * coarse, "fine {fine} vs coarse {coarse}");
+        // And one chunk covering everything is exactly the plain cost.
+        let one = stream_ingest_ms(SketchKind::Srht, rows, rows, m, k);
+        assert_eq!(one, srht_projection_ms(rows, m, k));
     }
 
     #[test]

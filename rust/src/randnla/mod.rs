@@ -13,6 +13,7 @@ pub mod matmul;
 pub mod nystrom;
 pub mod randsvd;
 pub mod sketch;
+pub mod streaming;
 pub mod structured;
 pub mod trace;
 pub mod triangles;
@@ -31,6 +32,10 @@ pub use matmul::{approx_matmul_tn, exact_matmul_tn};
 pub use nystrom::nystrom;
 pub use randsvd::{randsvd, RandSvd, RandSvdOpts};
 pub use sketch::{symmetric_sketch, OpuSketcher};
+pub use streaming::{
+    one_pass_randsvd_digital, solve_corange, ChunkSketch, FrequentDirections, OnePassSvd,
+    RowBlockSketcher,
+};
 pub use structured::{SparseSignSketcher, SrhtSketcher};
 pub use trace::{exact_trace, hutchinson};
 pub use triangles::{estimate_triangles, estimate_triangles_dense};

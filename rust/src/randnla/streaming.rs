@@ -1,0 +1,565 @@
+//! Streaming / one-pass RandNLA summaries: bounded-memory sketches of a
+//! matrix whose rows arrive in chunks and are never all resident.
+//!
+//! This is the algorithm half of the streaming ingestion plane (the
+//! protocol half — `StreamId` handles, chunk buffers, quota accounting —
+//! lives in `coordinator/stream.rs`). Two summaries cover the one-pass
+//! workload class:
+//!
+//! - [`ChunkSketch`] — the chunkwise left sketch `S·A`, accumulated one
+//!   block of rows at a time. The operator is addressed by *absolute row
+//!   offset* through [`RowBlockSketcher`], so the counter-seeded
+//!   signature operators the resident serving plane uses (dense
+//!   counter, SRHT, sparse-sign — the digital arms) serve streams: a
+//!   fixed chunk schedule is bit-reproducible, and changing the chunk
+//!   size only re-associates the f64 summation. (The OPU arm pins its
+//!   media per cell shape and cannot address offsets coherently — the
+//!   serving plane routes chunk batches to the digital arms, see
+//!   `Router::schedule_chunk`.)
+//! - [`FrequentDirections`] — Liberty's deterministic rank-ℓ row-space
+//!   maintainer (SVD shrinkage per flush). The classic guarantee
+//!   `‖AᵀA − BᵀB‖₂ ≤ ‖A‖²_F/(ℓ−k)` is surfaced as a *measured* bound:
+//!   the cumulative shrinkage Σδ ([`FrequentDirections::bound`]) always
+//!   dominates the true spectral error and is itself dominated by the
+//!   theoretical bound ([`FrequentDirections::guarantee`]).
+//!
+//! On top of the summaries, [`solve_corange`] turns the pair
+//! (range sketch `Y = A·Ω`, co-range sketch `S·A`) into the small matrix
+//! `X ≈ QᵀA` that a single-pass randomized SVD factorises — no second
+//! pass over A (Halko–Martinsson–Tropp §5.5 / Tropp et al. 2017). See
+//! `docs/algorithms.md` ("Streaming one-pass estimators") for the
+//! accuracy/cost discussion.
+
+use std::ops::Range;
+
+use crate::linalg::{self, matmul, thin_qr, Mat};
+use crate::randnla::backend::CounterSketcher;
+use crate::randnla::structured::{SparseSignSketcher, SrhtSketcher};
+
+/// An operator whose column blocks are addressable by absolute input-row
+/// offset: `project_rows(r0..r1, x)` computes `S[:, r0..r1] · x` for a
+/// chunk `x` holding exactly rows `r0..r1` of the streamed matrix.
+///
+/// Every counter-seeded digital operator in the repo satisfies this (the
+/// same property that makes aperture sharding exact); the OPU arm gets
+/// it through the serving plane's shard executor instead.
+pub trait RowBlockSketcher {
+    /// Output (sketch) dimension m.
+    fn m(&self) -> usize;
+    /// Input dimension n (the stream's declared total rows).
+    fn n(&self) -> usize;
+    /// `S[:, inp] · x` with `x.rows == inp.len()`.
+    fn project_rows(&self, inp: Range<usize>, x: &Mat) -> Mat;
+}
+
+impl RowBlockSketcher for CounterSketcher {
+    fn m(&self) -> usize {
+        crate::randnla::backend::Sketcher::m(self)
+    }
+
+    fn n(&self) -> usize {
+        crate::randnla::backend::Sketcher::n(self)
+    }
+
+    fn project_rows(&self, inp: Range<usize>, x: &Mat) -> Mat {
+        matmul(&self.block(0..RowBlockSketcher::m(self), inp), x)
+    }
+}
+
+impl RowBlockSketcher for SrhtSketcher {
+    fn m(&self) -> usize {
+        crate::randnla::backend::Sketcher::m(self)
+    }
+
+    fn n(&self) -> usize {
+        crate::randnla::backend::Sketcher::n(self)
+    }
+
+    fn project_rows(&self, inp: Range<usize>, x: &Mat) -> Mat {
+        self.project_block(0..RowBlockSketcher::m(self), inp, x)
+    }
+}
+
+impl RowBlockSketcher for SparseSignSketcher {
+    fn m(&self) -> usize {
+        crate::randnla::backend::Sketcher::m(self)
+    }
+
+    fn n(&self) -> usize {
+        crate::randnla::backend::Sketcher::n(self)
+    }
+
+    fn project_rows(&self, inp: Range<usize>, x: &Mat) -> Mat {
+        self.project_block(0..RowBlockSketcher::m(self), inp, x)
+    }
+}
+
+/// One-pass accumulator of the left sketch `S·A`: absorb row chunks in
+/// arrival order, each applied through a block of the one logical
+/// operator at its absolute offset, and read the finished `m × cols`
+/// sketch after the last row. Chunk-size changes only re-associate the
+/// per-entry f64 sums; the operator entries themselves never move.
+pub struct ChunkSketch {
+    acc: Mat,
+    n: usize,
+    next_row: usize,
+}
+
+impl ChunkSketch {
+    /// Accumulator for an `m × n`-operator sketch of an `n × cols` stream.
+    pub fn new(m: usize, n: usize, cols: usize) -> Self {
+        assert!(m > 0 && n > 0 && cols > 0, "chunk sketch needs positive dims");
+        Self { acc: Mat::zeros(m, cols), n, next_row: 0 }
+    }
+
+    /// Rows absorbed so far (the absolute offset of the next chunk).
+    pub fn rows_seen(&self) -> usize {
+        self.next_row
+    }
+
+    /// Every declared row has been absorbed.
+    pub fn done(&self) -> bool {
+        self.next_row == self.n
+    }
+
+    /// Absorb the next chunk of rows through `sk` and return the absolute
+    /// row range it covered.
+    pub fn absorb(&mut self, sk: &impl RowBlockSketcher, chunk: &Mat) -> Range<usize> {
+        assert_eq!(sk.m(), self.acc.rows, "operator m != accumulator m");
+        assert_eq!(sk.n(), self.n, "operator n != declared stream rows");
+        assert_eq!(chunk.cols, self.acc.cols, "chunk cols != stream cols");
+        let r0 = self.next_row;
+        let r1 = r0 + chunk.rows;
+        assert!(r1 <= self.n, "chunk overruns the declared {} rows", self.n);
+        self.add_partial(&sk.project_rows(r0..r1, chunk));
+        self.next_row = r1;
+        r0..r1
+    }
+
+    /// Accumulate an already-computed partial `S[:, r0..r1] · chunk` (the
+    /// serving plane computes partials through the batcher and feeds them
+    /// here; in-process callers use [`absorb`](Self::absorb)).
+    pub fn absorb_partial(&mut self, partial: &Mat, rows: usize) -> Range<usize> {
+        assert_eq!(
+            (partial.rows, partial.cols),
+            (self.acc.rows, self.acc.cols),
+            "partial shape mismatch"
+        );
+        let r0 = self.next_row;
+        let r1 = r0 + rows;
+        assert!(r1 <= self.n, "chunk overruns the declared {} rows", self.n);
+        self.add_partial(partial);
+        self.next_row = r1;
+        r0..r1
+    }
+
+    fn add_partial(&mut self, partial: &Mat) {
+        for (acc, v) in self.acc.data.iter_mut().zip(&partial.data) {
+            *acc += v;
+        }
+    }
+
+    /// The accumulated sketch (valid once [`done`](Self::done)).
+    pub fn sketch(&self) -> &Mat {
+        &self.acc
+    }
+
+    /// Consume into the finished sketch. Panics if rows are missing.
+    pub fn finish(self) -> Mat {
+        assert!(self.done(), "stream short: {}/{} rows absorbed", self.next_row, self.n);
+        self.acc
+    }
+}
+
+/// Frequent Directions (Liberty 2013 / Ghashami et al. 2016): a
+/// deterministic rank-ℓ sketch `B` of a row stream with
+/// `‖AᵀA − BᵀB‖₂ ≤ Σδ ≤ ‖A‖²_F/(ℓ−k)` for every `k < ℓ`, where δ is the
+/// squared singular value shrunk away at each flush. The buffer holds at
+/// most 2ℓ rows; a flush SVDs it and keeps the top ℓ directions shrunk
+/// by δ — bounded memory whatever the stream length.
+pub struct FrequentDirections {
+    ell: usize,
+    cols: usize,
+    /// Row buffer (≤ 2ℓ rows used); its used rows *are* the sketch B.
+    buf: Mat,
+    used: usize,
+    /// Σδ — the measured bound on `‖AᵀA − BᵀB‖₂`.
+    shrinkage: f64,
+    /// Accumulated `‖A‖²_F` (exact; each inserted row counted once).
+    fro2: f64,
+    flushes: u64,
+}
+
+impl FrequentDirections {
+    pub fn new(ell: usize, cols: usize) -> Self {
+        assert!(ell >= 1 && cols >= 1, "FD needs positive dims, got ℓ={ell} cols={cols}");
+        Self {
+            ell,
+            cols,
+            buf: Mat::zeros(2 * ell, cols),
+            used: 0,
+            shrinkage: 0.0,
+            fro2: 0.0,
+            flushes: 0,
+        }
+    }
+
+    /// Sketch rows ℓ.
+    pub fn ell(&self) -> usize {
+        self.ell
+    }
+
+    /// Rows currently in the sketch (≤ 2ℓ; ≤ ℓ after
+    /// [`compress`](Self::compress)).
+    pub fn rank(&self) -> usize {
+        self.used
+    }
+
+    /// SVD-shrinkage flushes performed so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// Measured bound: `‖AᵀA − BᵀB‖₂ ≤ Σδ` (each flush adds at most δ of
+    /// spectral error to the Gram, exactly the δ it shrank by).
+    pub fn bound(&self) -> f64 {
+        self.shrinkage
+    }
+
+    /// Accumulated `‖A‖²_F` of everything inserted.
+    pub fn fro2(&self) -> f64 {
+        self.fro2
+    }
+
+    /// The classic a-priori guarantee `‖A‖²_F/(ℓ−k)`; the measured
+    /// [`bound`](Self::bound) always sits at or below it.
+    pub fn guarantee(&self, k: usize) -> f64 {
+        assert!(k < self.ell, "guarantee needs k < ℓ ({k} >= {})", self.ell);
+        self.fro2 / (self.ell - k) as f64
+    }
+
+    /// Insert a chunk of rows, flushing (SVD shrinkage) whenever the
+    /// buffer fills.
+    pub fn insert(&mut self, rows: &Mat) {
+        assert_eq!(rows.cols, self.cols, "FD row width {} != {}", rows.cols, self.cols);
+        self.fro2 += rows.data.iter().map(|v| v * v).sum::<f64>();
+        let mut at = 0usize;
+        while at < rows.rows {
+            let take = (2 * self.ell - self.used).min(rows.rows - at);
+            for i in 0..take {
+                self.buf.row_mut(self.used + i).copy_from_slice(rows.row(at + i));
+            }
+            self.used += take;
+            at += take;
+            if self.used == 2 * self.ell {
+                self.flush();
+            }
+        }
+    }
+
+    /// Ensure the sketch holds at most ℓ rows (one extra flush if the
+    /// buffer sits in its slack half) — the sealed, bounded form.
+    pub fn compress(&mut self) {
+        if self.used > self.ell {
+            self.flush();
+        }
+    }
+
+    /// Copy of the current sketch B (rank() × cols).
+    pub fn sketch(&self) -> Mat {
+        Mat::from_fn(self.used, self.cols, |i, j| self.buf.at(i, j))
+    }
+
+    /// SVD shrinkage: keep the top ℓ directions, each shrunk by
+    /// δ = σ²_{ℓ+1} in the squared spectrum; discard the rest. Removes at
+    /// least ℓ·δ of Frobenius mass, which is what caps Σδ at
+    /// `‖A‖²_F/(ℓ−k)`.
+    fn flush(&mut self) {
+        if self.used <= self.ell {
+            return;
+        }
+        let b = self.sketch();
+        let linalg::Svd { s, vt, .. } = linalg::svd(&b);
+        self.flushes += 1;
+        if s.len() <= self.ell {
+            // Fewer directions than ℓ: rewrite exactly, no shrinkage.
+            for (i, &sv) in s.iter().enumerate() {
+                let row = self.buf.row_mut(i);
+                for (j, dst) in row.iter_mut().enumerate() {
+                    *dst = sv * vt.at(i, j);
+                }
+            }
+            self.used = s.len();
+            return;
+        }
+        let delta = s[self.ell] * s[self.ell];
+        self.shrinkage += delta;
+        for i in 0..self.ell {
+            let sv = (s[i] * s[i] - delta).max(0.0).sqrt();
+            let row = self.buf.row_mut(i);
+            for (j, dst) in row.iter_mut().enumerate() {
+                *dst = sv * vt.at(i, j);
+            }
+        }
+        self.used = self.ell;
+    }
+}
+
+/// The one-pass co-range solve: `X = argmin_X ‖(SQ)·X − (S·A)‖_F`,
+/// column by column through one thin QR of `SQ` — the single-pass
+/// substitute for `B = QᵀA` (which would need a second pass over A).
+/// Requires `sq.rows >= sq.cols` (the stream's sketch width must cover
+/// the range basis).
+pub fn solve_corange(sq: &Mat, sa: &Mat) -> Mat {
+    assert!(
+        sq.rows >= sq.cols,
+        "co-range solve underdetermined: sketch width {} < basis {}",
+        sq.rows,
+        sq.cols
+    );
+    assert_eq!(sq.rows, sa.rows, "SQ rows {} != SA rows {}", sq.rows, sa.rows);
+    let qr = thin_qr(sq);
+    // Qᵀ(SA), then back-substitute R X = Qᵀ(SA) one column at a time.
+    let qtsa = linalg::matmul_tn(&qr.q, sa);
+    let mut x = Mat::zeros(sq.cols, sa.cols);
+    for j in 0..sa.cols {
+        let col: Vec<f64> = (0..qtsa.rows).map(|i| qtsa.at(i, j)).collect();
+        let sol = linalg::solve_upper_triangular(&qr.r, &col);
+        for (i, v) in sol.into_iter().enumerate() {
+            *x.at_mut(i, j) = v;
+        }
+    }
+    x
+}
+
+/// What an in-process one-pass randomized SVD yields.
+pub struct OnePassSvd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+    /// Measured FD bound Σδ on `‖AᵀA − BᵀB‖₂` for the stream.
+    pub fd_bound: f64,
+    /// Accumulated `‖A‖²_F`.
+    pub fro2: f64,
+}
+
+/// In-process single-pass randomized SVD over a chunked row stream,
+/// with both operators drawn from counter sketchers (the host arm's
+/// dense signature family): the range sketch `Y = A·Ω` accumulates one
+/// chunk of rows at a time, the co-range `S·A` through [`ChunkSketch`],
+/// and a rank-ℓ [`FrequentDirections`] rides along to certify the
+/// stream. A is only ever touched chunk by chunk — the convenience
+/// driver for tests and benches; the serving plane's
+/// `JobSpec::RandSvd { a: OperandRef::Stream(..) }` is the production
+/// path (see `coordinator/stream.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn one_pass_randsvd_digital(
+    a: &Mat,
+    chunk_rows: usize,
+    rank: usize,
+    oversample: usize,
+    sketch_m: usize,
+    fd_rank: usize,
+    seed: u64,
+) -> OnePassSvd {
+    let cap = rank + oversample;
+    assert!(cap >= 1 && sketch_m >= cap, "need sketch_m >= rank+oversample");
+    let (rows, cols) = (a.rows, a.cols);
+    // Range operator Ω' (cap × cols) and left operator S (sketch_m × rows),
+    // both counter-seeded like the serving plane's signature operators.
+    let omega = CounterSketcher::new(cap, cols, seed);
+    let s_op = CounterSketcher::new(sketch_m, rows, seed ^ 0x5357_4541_4D5F_5341);
+    let mut yt = Mat::zeros(cap, rows);
+    let mut sa = ChunkSketch::new(sketch_m, rows, cols);
+    let mut fd = FrequentDirections::new(fd_rank, cols);
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = (r0 + chunk_rows.max(1)).min(rows);
+        let chunk = Mat::from_fn(r1 - r0, cols, |i, j| a.at(r0 + i, j));
+        // Y[r0..r1, :] = chunk · Ω, computed as Ω'·chunkᵀ — the same
+        // orientation the serving plane projects.
+        let y_block = crate::randnla::backend::Sketcher::project(&omega, &chunk.transpose());
+        for i in 0..cap {
+            yt.row_mut(i)[r0..r1].copy_from_slice(y_block.row(i));
+        }
+        sa.absorb(&s_op, &chunk);
+        fd.insert(&chunk);
+        r0 = r1;
+    }
+    fd.compress();
+    let q = linalg::orthonormalize(&yt.transpose());
+    let sq = crate::randnla::backend::Sketcher::project(&s_op, &q);
+    let x = solve_corange(&sq, sa.sketch());
+    let linalg::Svd { u: ux, s, vt } = linalg::svd(&x);
+    let u = matmul(&q, &ux);
+    let k = rank.min(s.len());
+    OnePassSvd {
+        u: u.crop(u.rows, k),
+        s: s[..k].to_vec(),
+        vt: vt.crop(k, vt.cols),
+        fd_bound: fd.bound(),
+        fro2: fd.fro2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_tn, rel_frobenius_error, spectral_norm};
+    use crate::randnla::backend::Sketcher;
+    use crate::rng::Xoshiro256;
+    use crate::workload::{matrix_with_spectrum, Spectrum};
+
+    /// Chunk `a` through the accumulator and compare against the plain
+    /// operator apply.
+    fn assert_chunked_matches(sk: &(impl RowBlockSketcher + Sketcher), a: &Mat, chunk: usize) {
+        let full = Sketcher::project(sk, a);
+        let mut acc = ChunkSketch::new(RowBlockSketcher::m(sk), a.rows, a.cols);
+        let mut r0 = 0usize;
+        while r0 < a.rows {
+            let r1 = (r0 + chunk).min(a.rows);
+            let x = Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j));
+            acc.absorb(sk, &x);
+            r0 = r1;
+        }
+        assert!(acc.done());
+        let rel = rel_frobenius_error(&full, acc.sketch());
+        assert!(rel < 1e-12, "{} chunk={chunk} drifted {rel}", Sketcher::label(sk));
+    }
+
+    #[test]
+    fn chunk_sketch_matches_whole_matrix_apply_for_every_arm() {
+        let (m, n, cols) = (12usize, 40usize, 6usize);
+        let mut rng = Xoshiro256::new(1);
+        let a = Mat::gaussian(n, cols, 1.0, &mut rng);
+        for chunk in [1usize, 7, 16, 40] {
+            assert_chunked_matches(&CounterSketcher::new(m, n, 9), &a, chunk);
+            assert_chunked_matches(&SrhtSketcher::new(m, n, 9), &a, chunk);
+            assert_chunked_matches(&SparseSignSketcher::new(m, n, 4, 9), &a, chunk);
+        }
+    }
+
+    #[test]
+    fn chunk_schedule_is_deterministic_and_unchunked_is_bitwise() {
+        // The same chunk schedule gives bit-identical accumulators; a
+        // single full-width chunk equals the plain operator apply bit
+        // for bit (no re-association at all).
+        let (m, n, cols) = (8usize, 24usize, 3usize);
+        let mut rng = Xoshiro256::new(2);
+        let a = Mat::gaussian(n, cols, 1.0, &mut rng);
+        let op = CounterSketcher::new(m, n, 5);
+        let run = |chunk: usize| {
+            let mut acc = ChunkSketch::new(m, n, cols);
+            let mut r0 = 0usize;
+            while r0 < n {
+                let r1 = (r0 + chunk).min(n);
+                let x = Mat::from_fn(r1 - r0, cols, |i, j| a.at(r0 + i, j));
+                acc.absorb(&op, &x);
+                r0 = r1;
+            }
+            acc.finish()
+        };
+        assert_eq!(run(5), run(5), "fixed schedule must be bit-stable");
+        assert_eq!(run(n), Sketcher::project(&op, &a), "one chunk = plain apply");
+    }
+
+    #[test]
+    fn fd_bound_dominates_true_gram_error_across_seeds_and_chunks() {
+        // Property: measured Σδ ≥ ‖AᵀA − BᵀB‖₂ ≥ 0, and Σδ stays under
+        // the classic ‖A‖²_F/(ℓ−k) guarantee — across seeds and chunk
+        // schedules.
+        let (n, cols, ell) = (48usize, 32usize, 12usize);
+        for seed in [3u64, 11, 29] {
+            let a = matrix_with_spectrum(n, Spectrum::Exponential { decay: 0.85 }, seed)
+                .crop(n, cols);
+            for chunk in [5usize, 16, 48] {
+                let mut fd = FrequentDirections::new(ell, cols);
+                let mut r0 = 0usize;
+                while r0 < n {
+                    let r1 = (r0 + chunk).min(n);
+                    fd.insert(&Mat::from_fn(r1 - r0, cols, |i, j| a.at(r0 + i, j)));
+                    r0 = r1;
+                }
+                fd.compress();
+                assert!(fd.rank() <= ell, "sealed FD must hold <= ℓ rows");
+                let b = fd.sketch();
+                let diff = matmul_tn(&a, &a).sub(&matmul_tn(&b, &b));
+                let direct = spectral_norm(&diff, 200, 7);
+                let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+                assert!((fd.fro2() - fro2).abs() < 1e-9 * fro2);
+                assert!(
+                    direct <= fd.bound() * (1.0 + 1e-9) + 1e-12,
+                    "seed {seed} chunk {chunk}: true {direct} > measured {}",
+                    fd.bound()
+                );
+                assert!(
+                    fd.bound() <= fd.guarantee(ell / 2) + 1e-12,
+                    "seed {seed} chunk {chunk}: measured {} > guarantee {}",
+                    fd.bound(),
+                    fd.guarantee(ell / 2)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fd_is_exact_below_capacity() {
+        // Fewer than ℓ rows: B is the stream itself (no shrinkage ever).
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(6, 20, 1.0, &mut rng);
+        let mut fd = FrequentDirections::new(8, 20);
+        fd.insert(&a);
+        fd.compress();
+        assert_eq!(fd.bound(), 0.0);
+        assert_eq!(fd.sketch(), a);
+    }
+
+    #[test]
+    fn corange_solve_recovers_qta_exactly_when_sketch_is_square() {
+        // With S square (m = rows), SQ is invertible and X = QᵀA exactly.
+        let mut rng = Xoshiro256::new(6);
+        let a = Mat::gaussian(20, 10, 1.0, &mut rng);
+        let q = linalg::orthonormalize(&Mat::gaussian(20, 4, 1.0, &mut rng));
+        let s = CounterSketcher::new(20, 20, 13);
+        let sq = Sketcher::project(&s, &q);
+        let sa = Sketcher::project(&s, &a);
+        let x = solve_corange(&sq, &sa);
+        let want = matmul_tn(&q, &a);
+        assert!(rel_frobenius_error(&want, &x) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "underdetermined")]
+    fn corange_solve_rejects_narrow_sketches() {
+        let sq = Mat::zeros(3, 5);
+        let sa = Mat::zeros(3, 4);
+        solve_corange(&sq, &sa);
+    }
+
+    #[test]
+    fn one_pass_randsvd_recovers_low_rank_streams() {
+        let n = 64;
+        let rank = 6;
+        let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank, noise: 1e-3 }, 7);
+        for chunk in [9usize, 16, 64] {
+            let r = one_pass_randsvd_digital(&a, chunk, rank, 6, 48, 24, 21);
+            let rec = linalg::reconstruct(&r.u, &r.s, &r.vt);
+            let rel = rel_frobenius_error(&a, &rec);
+            assert!(rel < 0.02, "chunk {chunk}: one-pass recovery {rel}");
+            assert!(r.fd_bound >= 0.0);
+            let fro2: f64 = a.data.iter().map(|v| v * v).sum();
+            assert!((r.fro2 - fro2).abs() < 1e-9 * fro2);
+        }
+    }
+
+    #[test]
+    fn one_pass_factors_are_orthonormal() {
+        let a = matrix_with_spectrum(40, Spectrum::Exponential { decay: 0.7 }, 8);
+        let r = one_pass_randsvd_digital(&a, 8, 6, 6, 36, 16, 23);
+        let utu = matmul_tn(&r.u, &r.u);
+        assert!(rel_frobenius_error(&Mat::eye(r.u.cols), &utu) < 1e-9);
+        for w in r.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "singular values not sorted: {:?}", r.s);
+        }
+    }
+}

@@ -30,9 +30,15 @@ pub enum JobKind {
     /// Sketch-and-precondition least squares (`Lstsq { refine }`): the
     /// sketched QR right-preconditions LSQR on the full system.
     LstsqPrecond,
+    /// Chunked ingestion of a streamed operand followed by a one-pass
+    /// streaming-Hutchinson trace (the ingest-heavy streaming workload).
+    StreamIngest,
+    /// Chunked ingestion followed by a one-pass sketch-side randomized
+    /// SVD over the sealed stream.
+    StreamSvd,
 }
 
-pub const ALL_KINDS: [JobKind; 9] = [
+pub const ALL_KINDS: [JobKind; 11] = [
     JobKind::SketchMatmul,
     JobKind::TraceEstimate,
     JobKind::TriangleCount,
@@ -42,6 +48,8 @@ pub const ALL_KINDS: [JobKind; 9] = [
     JobKind::HutchPP,
     JobKind::AdaptiveSvd,
     JobKind::LstsqPrecond,
+    JobKind::StreamIngest,
+    JobKind::StreamSvd,
 ];
 
 /// One job in a trace.
@@ -137,6 +145,23 @@ mod tests {
         let b = generate(&cfg);
         assert_eq!(a.len(), b.len());
         assert!(a.iter().zip(&b).all(|(x, y)| x.seed == y.seed && x.kind == y.kind));
+    }
+
+    #[test]
+    fn each_job_consumes_exactly_four_rng_draws() {
+        // The invariant new kinds must preserve: one kind draw, one size
+        // draw, one gap draw, one seed draw per job — adding kinds to
+        // ALL_KINDS must not change the draw count, so arrival times and
+        // seeds of seeded traces stay stable across kind additions.
+        let cfg = TraceConfig { jobs: 5, ..Default::default() };
+        let trace = generate(&cfg);
+        let mut rng = Xoshiro256::new(cfg.seed);
+        for job in &trace {
+            let _kind = rng.next_below(ALL_KINDS.len() as u64);
+            let _size = rng.next_below(cfg.sizes.len() as u64);
+            let _gap = rng.next_open_f64();
+            assert_eq!(job.seed, rng.next_u64(), "draw count drifted at job {}", job.id);
+        }
     }
 
     #[test]
