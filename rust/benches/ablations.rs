@@ -8,10 +8,15 @@
 //! A2  DMD bit depth (2..12) x linear-projection fidelity
 //! A3  anchor length x calibration yield + fidelity
 //! A4  dynamic batching (max_wait) x service throughput
+//!
+//! Emits BENCH_ablations.json (shared bench schema; no gates — the
+//! ablation grid is exploratory, the hard gates live in the other
+//! targets).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use photonic_randnla::bench::{self, Summary};
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, Job, Policy,
 };
@@ -23,14 +28,16 @@ use photonic_randnla::stats::Running;
 use photonic_randnla::workload::correlated_pair;
 
 fn main() {
-    ablation_noise();
-    ablation_bits();
-    ablation_anchor();
-    ablation_batching();
+    let mut rows = Vec::new();
+    ablation_noise(&mut rows);
+    ablation_bits(&mut rows);
+    ablation_anchor(&mut rows);
+    ablation_batching(&mut rows);
+    bench::finish("ablations", &rows, &[]);
 }
 
 /// A1: the "negligible precision loss" claim, quantified.
-fn ablation_noise() {
+fn ablation_noise(rows: &mut Vec<Summary>) {
     println!("\n== A1: noise chain vs sketch quality (n=128, m=64) ==");
     let n = 128;
     let (a, b) = correlated_pair(n, 0.5, 1);
@@ -42,17 +49,23 @@ fn ablation_noise() {
         ("harsh", NoiseModel::harsh()),
     ] {
         let mut r = Running::new();
+        let t0 = Instant::now();
         for t in 0..4u64 {
             let dev = OpuDevice::new(OpuConfig::new(50 + t, 64, n).with_noise(noise.clone()));
             let s = OpuSketcher::new(Arc::new(dev));
             r.push(rel_frobenius_error(&want, &approx_matmul_tn(&s, &a, &b)));
         }
+        rows.push(Summary::flat(
+            format!("A1 approx_matmul noise={name}"),
+            4,
+            t0.elapsed().as_nanos() as f64 / 4.0,
+        ));
         println!("{name:<12} {:>14.5} {:>14.5}", r.mean(), r.ci95());
     }
 }
 
 /// A2: bit-plane depth vs fidelity to the device's own linear oracle.
-fn ablation_bits() {
+fn ablation_bits(rows: &mut Vec<Summary>) {
     println!("\n== A2: DMD bit depth vs projection fidelity (ideal noise) ==");
     let n = 128;
     let mut rng = Xoshiro256::new(2);
@@ -62,7 +75,13 @@ fn ablation_bits() {
         let dev = OpuDevice::new(OpuConfig::ideal(9, 64, n).with_bits(bits));
         let g = dev.effective_matrix();
         let want = matmul(&g, &x);
+        let t0 = Instant::now();
         let got = dev.project(&x);
+        rows.push(Summary::flat(
+            format!("A2 opu.project bits={bits}"),
+            1,
+            t0.elapsed().as_nanos() as f64,
+        ));
         println!(
             "{bits:<8} {:>14.2e} {:>12}",
             rel_frobenius_error(&want, &got),
@@ -72,7 +91,7 @@ fn ablation_bits() {
 }
 
 /// A3: anchor length vs calibration health and fidelity.
-fn ablation_anchor() {
+fn ablation_anchor(rows: &mut Vec<Summary>) {
     println!("\n== A3: anchor length vs calibration yield / fidelity ==");
     let n = 128;
     let mut rng = Xoshiro256::new(3);
@@ -83,7 +102,13 @@ fn ablation_anchor() {
             anchor_len: anchor,
             ..OpuConfig::new(11, 64, n).with_noise(NoiseModel::realistic())
         };
+        let t0 = Instant::now();
         let dev = OpuDevice::new(cfg);
+        rows.push(Summary::flat(
+            format!("A3 calibrate anchor={anchor}"),
+            1,
+            t0.elapsed().as_nanos() as f64,
+        ));
         let g = dev.effective_matrix();
         let want = matmul(&g, &x);
         let got = dev.project(&x);
@@ -96,7 +121,7 @@ fn ablation_anchor() {
 }
 
 /// A4: dynamic batching vs service throughput (host arm, CPU-bound).
-fn ablation_batching() {
+fn ablation_batching(rows: &mut Vec<Summary>) {
     println!("\n== A4: batching deadline vs throughput (64 concurrent projections) ==");
     println!("{:<14} {:>12} {:>16}", "max_wait_us", "jobs/s", "mean batch cols");
     for wait_us in [0u64, 100, 500, 2000] {
@@ -123,6 +148,11 @@ fn ablation_batching() {
             t.wait().unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
+        rows.push(Summary::flat(
+            format!("A4 projection wait_us={wait_us}"),
+            64,
+            dt * 1e9 / 64.0,
+        ));
         println!(
             "{wait_us:<14} {:>12.1} {:>16.1}",
             64.0 / dt,

@@ -22,7 +22,7 @@
 
 use std::time::Instant;
 
-use photonic_randnla::bench::{self, Summary};
+use photonic_randnla::bench::{self, Gate, Summary};
 use photonic_randnla::linalg::{self, rel_frobenius_error, Mat};
 use photonic_randnla::perfmodel::{adaptive_range_ms, digital_sketch_ms, SketchKind};
 use photonic_randnla::randnla::backend::DigitalSketcher;
@@ -49,7 +49,7 @@ fn main() {
     let n = if quick { 64 } else { 128 };
     let trials = if quick { 8u64 } else { 16 };
     let mut rows = Vec::new();
-    let mut ok = true;
+    let mut gates: Vec<Gate> = Vec::new();
 
     // ---- 1. Hutch++ vs Hutchinson at equal error -----------------------
     let a = psd_with_spectrum(n, Spectrum::Exponential { decay: 0.85 }, 1);
@@ -77,10 +77,11 @@ fn main() {
         "trace: hutchinson rms {hutch_rms:.4} @ {m} cols | hutch++ rms {hpp_rms:.4} @ {} cols",
         m / 2
     );
-    if hpp_rms > hutch_rms {
-        eprintln!("FAIL: hutch++ at half budget lost to hutchinson ({hpp_rms} > {hutch_rms})");
-        ok = false;
-    }
+    gates.push(Gate::new(
+        "hutch++ at half budget matches hutchinson",
+        hpp_rms <= hutch_rms,
+        format!("hutch++ rms {hpp_rms:.4} @ {} cols vs hutchinson {hutch_rms:.4} @ {m}", m / 2),
+    ));
 
     // ---- 2. adaptive rangefinder / randsvd -----------------------------
     let rank = 8;
@@ -103,10 +104,11 @@ fn main() {
         "rangefinder: {} columns in {} passes (cap {cap}), gate rel err {:.2e}",
         range.q.cols, range.passes, range.rel_err
     );
-    if !range.converged || range.q.cols >= cap {
-        eprintln!("FAIL: rangefinder did not stop early (cols {}/{cap})", range.q.cols);
-        ok = false;
-    }
+    gates.push(Gate::new(
+        "rangefinder stops early",
+        range.converged && range.q.cols < cap,
+        format!("{} cols (cap {cap}), converged {}", range.q.cols, range.converged),
+    ));
 
     let s = DigitalSketcher::new(cap, n, 4);
     let t0 = Instant::now();
@@ -126,10 +128,11 @@ fn main() {
     let rec = linalg::reconstruct(&r.u, &r.s, &r.vt);
     let rel = rel_frobenius_error(&target, &rec);
     println!("adaptive randsvd: rank {} (cap {}), measured rel err {rel:.2e}", r.s.len(), cap - 8);
-    if rel > tol {
-        eprintln!("FAIL: adaptive randsvd missed its tolerance ({rel} > {tol})");
-        ok = false;
-    }
+    gates.push(Gate::new(
+        "adaptive randsvd meets tolerance",
+        rel <= tol,
+        format!("rel err {rel:.2e} (tol {tol})"),
+    ));
 
     // Model context: what the router would charge for those passes.
     let priced = adaptive_range_ms(SketchKind::Dense, n, rank / 2, 1, range.passes);
@@ -175,25 +178,19 @@ fn main() {
          (converged: {})",
         refined.iters, refined.converged, plain.iters, plain.converged
     );
-    if !refined.converged || (plain.converged && refined.iters * 2 > plain.iters) {
-        eprintln!(
-            "FAIL: sketch preconditioning gained nothing ({} vs {} iters)",
-            refined.iters, plain.iters
-        );
-        ok = false;
-    }
+    gates.push(Gate::new(
+        "sketch preconditioning halves lsqr iterations",
+        refined.converged && !(plain.converged && refined.iters * 2 > plain.iters),
+        format!(
+            "preconditioned {} iters (converged {}) vs plain {} (converged {})",
+            refined.iters, refined.converged, plain.iters, plain.converged
+        ),
+    ));
 
     bench::report("adaptive-accuracy drivers", &rows);
-    if let Err(e) = bench::write_json("BENCH_adaptive.json", &rows) {
-        eprintln!("(could not write BENCH_adaptive.json: {e})");
-    }
-
-    if !ok {
-        eprintln!("FAIL: adaptive-accuracy gates failed");
-        std::process::exit(1);
-    }
     println!(
         "\nheadline: accuracy is a knob — half-budget hutch++, early-stop rangefinder, \
-         residual-guaranteed lstsq: PASS"
+         residual-guaranteed lstsq"
     );
+    bench::finish("adaptive", &rows, &gates);
 }

@@ -22,7 +22,7 @@
 
 use std::time::Instant;
 
-use photonic_randnla::bench::{self, Summary};
+use photonic_randnla::bench::{self, Gate, Summary};
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, Job, JobSpec, OperandRef, Policy, PoolConfig,
     SubmitOptions,
@@ -114,9 +114,6 @@ fn main() {
         Summary::flat(format!("handle submit n={n} k={cols}"), k, handle_best),
     ];
     bench::report("client plane submit path", &rows);
-    if let Err(e) = bench::write_json("BENCH_client_plane.json", &rows) {
-        eprintln!("(could not write BENCH_client_plane.json: {e})");
-    }
 
     println!(
         "\nstore: {} operands resident, {} B",
@@ -127,13 +124,11 @@ fn main() {
 
     let speedup = inline_best / handle_best;
     let floor = if quick { 1.5 } else { 2.0 };
-    println!(
-        "\nheadline: handle-path submit is {speedup:.1}x the inline path \
-         (gate >= {floor}x): {}",
-        if speedup >= floor { "PASS" } else { "FAIL" }
-    );
-    if speedup < floor {
-        eprintln!("FAIL: handle-path speedup {speedup:.1}x below the {floor}x gate");
-        std::process::exit(1);
-    }
+    println!("\nheadline: handle-path submit is {speedup:.1}x the inline path");
+    let gates = vec![Gate::new(
+        "handle-path submit speedup over inline",
+        speedup >= floor,
+        format!("{speedup:.1}x (need >= {floor}x)"),
+    )];
+    bench::finish("client_plane", &rows, &gates);
 }

@@ -8,7 +8,10 @@
 //! This is the figure-regeneration harness: it prints the same
 //! (compression -> relative error) series the paper plots, for the optical
 //! and digital arms, and asserts the headline "optical == numerical".
+//! Emits BENCH_fig1_quality.json (shared bench schema) with the headline
+//! check as its gate.
 
+use photonic_randnla::bench::{self, Gate, Summary};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::reports::{fig1, print_rows};
 
@@ -28,14 +31,23 @@ fn main() {
 
     let t0 = std::time::Instant::now();
     let rows = fig1::all_panels(&cfg);
+    let sweep_ns = t0.elapsed().as_nanos() as f64;
     print_rows("Fig. 1 — optical vs numerical quality", &rows);
+    println!("(swept in {:.1}s)", sweep_ns / 1e9);
 
-    match fig1::optical_matches_numerical(&rows, 0.9) {
-        Ok(()) => println!("\nheadline: optical == numerical within tolerance: OK"),
-        Err(e) => {
-            println!("\nheadline check FAILED: {e}");
-            std::process::exit(1);
-        }
-    }
-    println!("(swept in {:.1}s)", t0.elapsed().as_secs_f64());
+    let headline = fig1::optical_matches_numerical(&rows, 0.9);
+    let gate = Gate::new(
+        "optical == numerical within tolerance",
+        headline.is_ok(),
+        match &headline {
+            Ok(()) => format!("{} series points, tolerance factor 0.9", rows.len()),
+            Err(e) => e.clone(),
+        },
+    );
+    let cases = vec![Summary::flat(
+        format!("fig1 sweep n={} trials={}", cfg.n, cfg.trials),
+        1,
+        sweep_ns,
+    )];
+    bench::finish("fig1_quality", &cases, &[gate]);
 }

@@ -11,8 +11,12 @@
 //!               reference only — the *simulator* is software)
 //!   model-*     the paper-constant models the router actually uses
 //! plus the crossover/OOM headline numbers.
+//!
+//! Emits BENCH_fig2_projection.json (shared bench schema; no gates —
+//! the measured series is descriptive, the modeled headline is pinned
+//! by unit tests in reports::fig2).
 
-use photonic_randnla::bench::{fmt_ns, run, Config};
+use photonic_randnla::bench::{finish, fmt_ns, run, Config};
 use photonic_randnla::linalg::{matmul, Mat};
 use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice};
 use photonic_randnla::reports::fig2;
@@ -103,4 +107,5 @@ fn main() {
         "\nfastest measured digital projection: {}",
         fmt_ns(rows.iter().map(|r| r.mean_ns).fold(f64::INFINITY, f64::min))
     );
+    finish("fig2_projection", &rows, &[]);
 }

@@ -7,12 +7,12 @@
 //!                                        # relaxed gate, same checks
 //! ```
 //!
-//! Emits BENCH_hotpath.json (name, iters, ns/op) for cross-PR tracking
-//! and exits non-zero when the packed GEMM regresses against the
-//! in-file seed (axpy) kernel — kernel regressions fail CI instead of
-//! landing silently.
+//! Emits BENCH_hotpath.json (shared bench schema: cases + gates) for
+//! cross-PR tracking and exits non-zero when the packed GEMM regresses
+//! against the in-file seed (axpy) kernel — kernel regressions fail CI
+//! instead of landing silently.
 
-use photonic_randnla::bench::{quick_mode, report, run, write_json, Config};
+use photonic_randnla::bench::{finish, quick_mode, report, run, Config, Gate};
 use photonic_randnla::linalg::{self, Mat};
 use photonic_randnla::opu::{NoiseModel, OpuConfig, OpuDevice, TransmissionMatrix};
 use photonic_randnla::parallel;
@@ -147,9 +147,6 @@ fn main() {
     for r in &rows {
         println!("{}", r.csv_row());
     }
-    if let Err(e) = write_json("BENCH_hotpath.json", &rows) {
-        eprintln!("(could not write BENCH_hotpath.json: {e})");
-    }
 
     // Regression gate: packed >= 2x over the seed kernel at 512^3
     // (>= 1.3x in --quick smoke runs, where budgets are tiny and CI
@@ -157,9 +154,10 @@ fn main() {
     let (seed_ns, packed_ns) = (seed_512.unwrap(), packed_512.unwrap());
     let speedup = seed_ns / packed_ns;
     let floor = if quick { 1.3 } else { 2.0 };
-    println!("\npacked GEMM speedup at 512^3: {speedup:.2}x (gate >= {floor}x)");
-    if speedup < floor {
-        eprintln!("FAIL: packed GEMM speedup {speedup:.2}x below the {floor}x gate");
-        std::process::exit(1);
-    }
+    let gates = vec![Gate::new(
+        "packed GEMM speedup at 512^3",
+        speedup >= floor,
+        format!("{speedup:.2}x (need >= {floor}x)"),
+    )];
+    finish("hotpath", &rows, &gates);
 }

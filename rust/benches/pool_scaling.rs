@@ -19,9 +19,11 @@
 //!   planner spreads the 2x2 grid, and the simulated makespan drops.
 //!
 //! Acceptance gate: >= 1.5x simulated throughput at 4 replicas vs 1.
+//! Emits BENCH_pool_scaling.json (shared bench schema) with that gate.
 
 use std::time::Instant;
 
+use photonic_randnla::bench::{self, Gate, Summary};
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, Device, Job, Policy, PoolConfig,
 };
@@ -85,10 +87,19 @@ fn main() {
     );
     let total_cols = (JOBS * K) as f64;
     let mut tput = Vec::new();
+    let mut cases = Vec::new();
     for replicas in [1usize, 2, 4] {
         let (makespan, wall) = run_workload(replicas);
         let cols_per_s = total_cols / (makespan / 1e3);
         tput.push((replicas, cols_per_s));
+        // ns/op = simulated device-timeline makespan per job, the
+        // quantity the replication claim scales (wall time measures the
+        // host simulator, not the modelled hardware).
+        cases.push(Summary::flat(
+            format!("replication r={replicas} sim makespan/job"),
+            JOBS as u64,
+            makespan * 1e6 / JOBS as f64,
+        ));
         println!(
             "{replicas:<10} {makespan:>16.2} {cols_per_s:>18.1} {:>12.1}",
             JOBS as f64 / wall
@@ -97,11 +108,12 @@ fn main() {
     let t1 = tput.iter().find(|(r, _)| *r == 1).unwrap().1;
     let t4 = tput.iter().find(|(r, _)| *r == 4).unwrap().1;
     let speedup = t4 / t1;
-    println!(
-        "\nheadline: 4-replica / 1-replica projection throughput = {speedup:.2}x \
-         (gate >= 1.5x): {}",
-        if speedup >= 1.5 { "PASS" } else { "FAIL" }
-    );
+    println!("\nheadline: 4-replica / 1-replica projection throughput = {speedup:.2}x");
+    let gates = vec![Gate::new(
+        "4-replica simulated throughput over 1-replica",
+        speedup >= 1.5,
+        format!("{speedup:.2}x (need >= 1.5x)"),
+    )];
 
     // Sharded oversized projection: (2*aperture) in both dims.
     let (am, an) = (M / 2, N / 2);
@@ -125,7 +137,13 @@ fn main() {
             .filter(|d| d.id.kind == Device::Opu)
             .map(|d| d.busy_ms())
             .fold(0.0, f64::max);
+        cases.push(Summary::flat(
+            format!("sharding r={replicas} sim makespan"),
+            1,
+            makespan * 1e6,
+        ));
         println!("{replicas:<10} {shards:>10} {makespan:>16.2}");
         c.shutdown();
     }
+    bench::finish("pool_scaling", &cases, &gates);
 }

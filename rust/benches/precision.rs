@@ -1,0 +1,160 @@
+//! Bench: mixed-precision projection arms — the tentpole's acceptance
+//! gates.
+//!
+//! ```bash
+//! cargo bench --bench precision            # full budgets, 2x gate
+//! cargo bench --bench precision -- --quick # CI smoke, 1.5x gate
+//! ```
+//!
+//! Two hard gates:
+//!
+//! 1. **f32 packed projection throughput** — at the paper's host-arm
+//!    scale (n = 4096, m = 512, k = 16) the packed compensated f32
+//!    kernel must project >= 2x faster than the f64 baseline (>= 1.5x
+//!    in `--quick` smoke runs, where budgets are tiny and CI runners
+//!    are noisy). Operands are packed once outside the timed loop: the
+//!    serving plane holds tier-resident operands, so packing is an
+//!    upload-time cost, not a per-projection one.
+//! 2. **bf16 RandSVD accuracy** — a seeded RandSVD through the
+//!    coordinator at the Bf16 tier (Ootomo split + compensated f32
+//!    accumulation) must keep its singular-value relative RMS error
+//!    within 1e-2 of the same seeded run at f64 — the documented
+//!    `Precision::Bf16.tier_tol()` bound, measured end to end.
+//!
+//! Emits BENCH_precision.json (shared bench schema) and exits non-zero
+//! on a gate miss — this target is part of the CI bench smoke list.
+
+use std::time::Instant;
+
+use photonic_randnla::bench::{finish, quick_mode, report, run, Config, Gate, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy, PoolConfig,
+    Precision, SubmitOptions,
+};
+use photonic_randnla::linalg::{self, Mat, MatF32};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::workload::{matrix_with_spectrum, Spectrum};
+
+const N: usize = 4096;
+const M: usize = 512;
+const K: usize = 16;
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Seeded RandSVD through the coordinator at one tier; returns the
+/// singular values and the wall time. Same handle + same spec => the
+/// operator draws are identical across tiers (operator identity is
+/// tier-independent), so the spectra differ only by arithmetic.
+fn seeded_svd(c: &Coordinator, a: &Mat, rank: usize, precision: Precision) -> (Vec<f64>, f64) {
+    let t0 = Instant::now();
+    let resp = c
+        .run_spec(
+            JobSpec::RandSvd {
+                a: OperandRef::Inline(a.clone()),
+                rank,
+                oversample: 8,
+                power_iters: 1,
+                publish_q: false,
+                tol: None,
+            },
+            SubmitOptions::default().with_precision(precision),
+        )
+        .expect("randsvd");
+    let ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(resp.precision, precision, "coordinator ran at the wrong tier");
+    let (_, s, _) = resp.payload.svd().expect("svd payload");
+    (s.to_vec(), ns)
+}
+
+fn main() {
+    let quick = quick_mode();
+    // The projection GEMM at this scale runs in milliseconds; moderate
+    // budgets give stable means in both modes.
+    let cfg = if quick {
+        Config {
+            warmup: std::time::Duration::from_millis(20),
+            measure: std::time::Duration::from_millis(200),
+            min_iters: 3,
+            max_iters: 1000,
+        }
+    } else {
+        Config::quick()
+    };
+
+    let mut rng = Xoshiro256::new(42);
+    // S is the m x n sketch operator, A the n x k operand block — the
+    // host arm's projection hot loop.
+    let s_op = Mat::gaussian(M, N, 1.0, &mut rng);
+    let a_op = Mat::gaussian(N, K, 1.0, &mut rng);
+    let s32 = MatF32::from_mat(&s_op);
+    let a32 = MatF32::from_mat(&a_op);
+
+    let mut rows = Vec::new();
+    let f64_row = run(&format!("f64 projection {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(linalg::matmul(&s_op, &a_op));
+    });
+    let f32_row = run(&format!("f32 packed projection {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(linalg::matmul_packed_f32(&s32, &a32));
+    });
+    // bf16 reference row (split + three compensated products); the
+    // accuracy gate below measures this tier end to end instead.
+    let bf16_row = run(&format!("bf16 split projection {M}x{N} k={K}"), cfg, || {
+        std::hint::black_box(linalg::matmul_bf16(&s_op, &a_op));
+    });
+    let (f64_ns, f32_ns) = (f64_row.mean_ns, f32_row.mean_ns);
+    rows.push(f64_row);
+    rows.push(f32_row);
+    rows.push(bf16_row);
+
+    // Gate 2 workload: seeded RandSVD spectra, Bf16 vs f64, through the
+    // whole serving plane (submit -> resolve -> batcher -> lowp kernel).
+    let n_svd = if quick { 160 } else { 256 };
+    let rank = 16;
+    let target = matrix_with_spectrum(n_svd, Spectrum::Exponential { decay: 0.85 }, 7);
+    let c = coordinator();
+    let (s_f64, f64_svd_ns) = seeded_svd(&c, &target, rank, Precision::F64);
+    let (s_bf16, bf16_svd_ns) = seeded_svd(&c, &target, rank, Precision::Bf16);
+    c.shutdown();
+    rows.push(Summary::flat(format!("randsvd n={n_svd} r={rank} f64"), 1, f64_svd_ns));
+    rows.push(Summary::flat(format!("randsvd n={n_svd} r={rank} bf16"), 1, bf16_svd_ns));
+    assert_eq!(s_f64.len(), s_bf16.len(), "tiers returned different ranks");
+    let num: f64 = s_f64.iter().zip(&s_bf16).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f64 = s_f64.iter().map(|x| x * x).sum();
+    let rms = (num / den).sqrt();
+
+    report("mixed-precision projection arms", &rows);
+
+    let speedup = f64_ns / f32_ns;
+    let floor = if quick { 1.5 } else { 2.0 };
+    println!(
+        "\nf32 packed speedup over f64 at n={N} m={M} k={K}: {speedup:.2}x | \
+         bf16 randsvd spectrum rel RMS vs f64: {rms:.2e}"
+    );
+    let gates = vec![
+        Gate::new(
+            "f32 packed projection speedup over f64",
+            speedup >= floor,
+            format!("{speedup:.2}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "bf16 randsvd singular-value RMS error vs f64",
+            rms <= Precision::Bf16.tier_tol(),
+            format!("rel RMS {rms:.2e} (need <= {:.0e})", Precision::Bf16.tier_tol()),
+        ),
+    ];
+    finish("precision", &rows, &gates);
+}

@@ -12,10 +12,10 @@
 //! estimator keeps its tolerances — the scale sanity check runs inline
 //! here, the statistical suite lives in tests/prop_sketch_stats.rs.
 //!
-//! Emits BENCH_sketch_ops.json (name, iters, ns/op) for cross-PR
-//! tracking and exits non-zero when a gate fails.
+//! Emits BENCH_sketch_ops.json (shared bench schema: cases + gates) for
+//! cross-PR tracking and exits non-zero when a gate fails.
 
-use photonic_randnla::bench::{quick_mode, report, run, write_json, Config};
+use photonic_randnla::bench::{finish, quick_mode, report, run, Config, Gate};
 use photonic_randnla::linalg::Mat;
 use photonic_randnla::randnla::backend::{DigitalSketcher, Sketcher};
 use photonic_randnla::randnla::structured::{SparseSignSketcher, SrhtSketcher};
@@ -74,9 +74,6 @@ fn main() {
     rows.insert(0, dense_row);
 
     report("sketch operators", &rows);
-    if let Err(e) = write_json("BENCH_sketch_ops.json", &rows) {
-        eprintln!("(could not write BENCH_sketch_ops.json: {e})");
-    }
 
     // JL-scale sanity: the structured sketches must sit on the same
     // E||Sx||^2 = m ||x||^2 convention the estimators divide by.
@@ -97,16 +94,17 @@ fn main() {
         "\nstructured speedup over dense at n={N} m={M} k={K}: \
          srht {srht_speedup:.1}x, sparse {sparse_speedup:.1}x (gate >= {floor}x)"
     );
-    let mut failed = false;
-    if srht_speedup < floor {
-        eprintln!("FAIL: srht speedup {srht_speedup:.1}x below the {floor}x gate");
-        failed = true;
-    }
-    if sparse_speedup < floor {
-        eprintln!("FAIL: sparse speedup {sparse_speedup:.1}x below the {floor}x gate");
-        failed = true;
-    }
-    if failed {
-        std::process::exit(1);
-    }
+    let gates = vec![
+        Gate::new(
+            "srht speedup over dense",
+            srht_speedup >= floor,
+            format!("{srht_speedup:.1}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "sparse-sign speedup over dense",
+            sparse_speedup >= floor,
+            format!("{sparse_speedup:.1}x (need >= {floor}x)"),
+        ),
+    ];
+    finish("sketch_ops", &rows, &gates);
 }

@@ -25,7 +25,7 @@
 use std::sync::atomic::Ordering;
 use std::time::Instant;
 
-use photonic_randnla::bench::{self, Summary};
+use photonic_randnla::bench::{self, Gate, Summary};
 use photonic_randnla::coordinator::{
     mat_bytes, BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy,
     PoolConfig, StreamOpts, SubmitOptions,
@@ -173,9 +173,6 @@ fn main() {
         Summary::flat(format!("stream one-pass svd n={n}"), 1, svd_ns),
     ];
     bench::report("streaming ingestion plane", &rows);
-    if let Err(e) = bench::write_json("BENCH_streaming.json", &rows) {
-        eprintln!("(could not write BENCH_streaming.json: {e})");
-    }
 
     let predicted = stream_ingest_ms(SketchKind::Dense, n, chunk_rows, sketch_m, n);
     println!(
@@ -188,29 +185,25 @@ fn main() {
     );
     println!("accuracy: resident rel err {resident_err:.2e} | streaming rel err {stream_err:.2e}");
 
-    let mut ok = true;
     // Gate 1: the bounded footprint — the open-stream constant (its
     // lifetime peak) must sit at or under a quarter of the operand.
-    let frac = open_peak as f64 / operand_bytes as f64;
-    if frac > 0.25 {
-        eprintln!("FAIL: streaming peak {frac:.2} of resident footprint (gate <= 0.25)");
-        ok = false;
-    }
     // Gate 2: equal seeded accuracy.
-    if stream_err > resident_err + 0.02 {
-        eprintln!(
-            "FAIL: streaming accuracy {stream_err:.3e} vs resident {resident_err:.3e} \
-             (gate: within 0.02)"
-        );
-        ok = false;
-    }
-    if !ok {
-        eprintln!("FAIL: streaming gates failed");
-        std::process::exit(1);
-    }
+    let frac = open_peak as f64 / operand_bytes as f64;
+    let gates = vec![
+        Gate::new(
+            "streaming footprint <= 25% of resident",
+            frac <= 0.25,
+            format!("{:.0}% of the resident operand", frac * 100.0),
+        ),
+        Gate::new(
+            "streaming accuracy within 0.02 of resident",
+            stream_err <= resident_err + 0.02,
+            format!("stream rel err {stream_err:.3e} vs resident {resident_err:.3e}"),
+        ),
+    ];
     println!(
-        "\nheadline: one-pass streaming randSVD at {:.0}% of the resident footprint, \
-         equal seeded accuracy: PASS",
+        "\nheadline: one-pass streaming randSVD at {:.0}% of the resident footprint",
         frac * 100.0
     );
+    bench::finish("streaming", &rows, &gates);
 }

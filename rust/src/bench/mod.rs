@@ -158,6 +158,83 @@ pub fn write_json(path: &str, rows: &[Summary]) -> std::io::Result<()> {
     Ok(())
 }
 
+/// One acceptance-gate verdict a bench target grades itself against
+/// (e.g. "f32 packed projection >= 2x f64"). Gates ride the same
+/// `BENCH_<target>.json` artifact as the timings, so CI smoke and the
+/// cross-PR trajectory see pass/fail next to the numbers they gate.
+#[derive(Clone, Debug)]
+pub struct Gate {
+    pub name: String,
+    pub passed: bool,
+    /// Human-readable measurement behind the verdict
+    /// (e.g. "speedup 2.31x (need >= 2.0)").
+    pub detail: String,
+}
+
+impl Gate {
+    pub fn new(name: impl Into<String>, passed: bool, detail: impl Into<String>) -> Self {
+        Self { name: name.into(), passed, detail: detail.into() }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write one bench target's machine-readable artifact,
+/// `BENCH_<bench>.json`, in the schema every target shares:
+/// `{"bench", "cases": [{"name", "iters", "ns_per_op"}],
+/// "gates": [{"name", "passed", "detail"}]}`. This is the single
+/// emission path for all `cargo bench` targets (the flat
+/// [`write_json`] array remains for ad-hoc dumps).
+pub fn emit_json(bench: &str, rows: &[Summary], gates: &[Gate]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"bench\": \"{}\",\n", json_escape(bench)));
+    out.push_str("  \"cases\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_op\": {:.1}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            r.mean_ns,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"gates\": [\n");
+    for (i, g) in gates.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"passed\": {}, \"detail\": \"{}\"}}{}\n",
+            json_escape(&g.name),
+            g.passed,
+            json_escape(&g.detail),
+            if i + 1 < gates.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = format!("BENCH_{bench}.json");
+    std::fs::write(&path, out)?;
+    println!("(wrote {path})");
+    Ok(())
+}
+
+/// Standard bench-target epilogue: emit the shared-schema JSON, print
+/// every gate verdict, and exit nonzero if any gate failed — what turns
+/// a `cargo bench` target into a CI smoke check.
+pub fn finish(bench: &str, rows: &[Summary], gates: &[Gate]) {
+    if let Err(e) = emit_json(bench, rows, gates) {
+        eprintln!("(could not write BENCH_{bench}.json: {e})");
+    }
+    let mut failed = false;
+    for g in gates {
+        let verdict = if g.passed { "PASS" } else { "FAIL" };
+        println!("gate {verdict}: {} — {}", g.name, g.detail);
+        failed |= !g.passed;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}
+
 /// Human-format nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -229,6 +306,34 @@ mod tests {
         assert!(s.contains("\\\"512^3\\\""), "{s}");
         assert!(s.contains("\"ns_per_op\": 1.5"), "{s}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_json_carries_cases_and_gate_verdicts() {
+        // emit_json writes BENCH_<name>.json into the working directory
+        // by construction (CI uploads from there); a selftest-named file
+        // keeps this test from colliding with real bench artifacts.
+        let bench = "harness_selftest";
+        let rows = vec![Summary::flat("case \"a\"".into(), 3, 2.5)];
+        let gates = vec![
+            Gate::new("speedup", true, "2.3x (need >= 2.0)"),
+            Gate::new("accuracy", false, "rms 0.5 \"bad\""),
+        ];
+        emit_json(bench, &rows, &gates).unwrap();
+        let path = format!("BENCH_{bench}.json");
+        let s = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(s.contains("\"bench\": \"harness_selftest\""), "{s}");
+        assert!(s.contains("\\\"a\\\""), "case names must be escaped: {s}");
+        assert!(s.contains("\"ns_per_op\": 2.5"), "{s}");
+        assert!(s.contains("\"passed\": true"), "{s}");
+        assert!(s.contains("\"passed\": false"), "{s}");
+        assert!(s.contains("\\\"bad\\\""), "gate details must be escaped: {s}");
+        // Braces/brackets balance — cheap well-formedness check without
+        // a JSON parser in the image.
+        let opens = s.matches('{').count() + s.matches('[').count();
+        let closes = s.matches('}').count() + s.matches(']').count();
+        assert_eq!(opens, closes, "{s}");
     }
 
     #[test]

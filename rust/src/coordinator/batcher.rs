@@ -40,7 +40,7 @@ use crate::coordinator::pool::{DeviceId, DevicePool};
 use crate::coordinator::request::Device;
 use crate::coordinator::router::{Router, Schedule, ShardAssignment};
 use crate::coordinator::shard;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{matmul_lowp, Mat, Precision};
 use crate::opu::{NoiseModel, OpuConfig, OpuDevice};
 use crate::perfmodel::{SketchKind, SPARSE_SKETCH_NNZ};
 use crate::randnla::backend::{CounterSketcher, PjrtSketcher};
@@ -111,6 +111,10 @@ struct ProjReq {
     sig_n: usize,
     /// Absolute offset of `data`'s first row within the signature.
     row0: usize,
+    /// Arithmetic tier the batch executes at (resolved by the worker
+    /// via [`Router::choose_precision`] before submission; part of the
+    /// merge key — tiers never share a frame batch).
+    precision: Precision,
     resp: mpsc::Sender<Result<ProjResp>>,
     enqueued: Instant,
 }
@@ -129,6 +133,8 @@ pub struct ProjResp {
     /// spliced next to OPU-medium cells) is the pre-existing documented
     /// degraded-reroute mode and is not visible here.
     pub planned: Device,
+    /// Arithmetic tier the batch executed at.
+    pub precision: Precision,
     /// Total columns in the merged batch this rode in.
     pub batch_cols: usize,
 }
@@ -164,14 +170,37 @@ impl ProjectionService {
         self.project_async(data, m)?.wait()
     }
 
+    /// [`project`](Self::project) at an explicit arithmetic tier.
+    /// `F64` is the plain path, bitwise.
+    pub fn project_at(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        precision: Precision,
+    ) -> Result<ProjResp> {
+        self.project_async_at(data, m, precision)?.wait()
+    }
+
     /// Non-blocking submit; the result arrives on the returned pending
     /// handle. Use for a job's *independent* projections (ApproxMatmul's
     /// A and B, Lstsq's A and b) so they ride one merged batch instead
     /// of two sequential flush round-trips.
     pub fn project_async(&self, data: impl Into<Arc<Mat>>, m: usize) -> Result<ProjPending> {
+        self.project_async_at(data, m, Precision::F64)
+    }
+
+    /// [`project_async`](Self::project_async) at an explicit tier. The
+    /// tier joins the merge key, so batches of one tier stay
+    /// bit-reproducible whatever other tiers are in flight.
+    pub fn project_async_at(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        precision: Precision,
+    ) -> Result<ProjPending> {
         let data = data.into();
         let sig_n = data.rows;
-        self.send(data, m, sig_n, 0)
+        self.send(data, m, sig_n, 0, precision)
     }
 
     /// Blocking chunk projection: apply columns `row0..row0 + data.rows`
@@ -188,6 +217,18 @@ impl ProjectionService {
         self.project_rows_async(data, m, sig_n, row0)?.wait()
     }
 
+    /// [`project_rows`](Self::project_rows) at an explicit tier.
+    pub fn project_rows_at(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        sig_n: usize,
+        row0: usize,
+        precision: Precision,
+    ) -> Result<ProjResp> {
+        self.project_rows_async_at(data, m, sig_n, row0, precision)?.wait()
+    }
+
     /// Non-blocking chunk projection. The chunk rides the shard planner
     /// and device pool like any batch, but every cell addresses the
     /// `(sig_n, m)` signature operator at the chunk's *absolute* row
@@ -201,6 +242,19 @@ impl ProjectionService {
         sig_n: usize,
         row0: usize,
     ) -> Result<ProjPending> {
+        self.project_rows_async_at(data, m, sig_n, row0, Precision::F64)
+    }
+
+    /// [`project_rows_async`](Self::project_rows_async) at an explicit
+    /// tier.
+    pub fn project_rows_async_at(
+        &self,
+        data: impl Into<Arc<Mat>>,
+        m: usize,
+        sig_n: usize,
+        row0: usize,
+        precision: Precision,
+    ) -> Result<ProjPending> {
         let data = data.into();
         anyhow::ensure!(
             row0 + data.rows <= sig_n,
@@ -209,13 +263,28 @@ impl ProjectionService {
             row0 + data.rows,
             sig_n
         );
-        self.send(data, m, sig_n, row0)
+        self.send(data, m, sig_n, row0, precision)
     }
 
-    fn send(&self, data: Arc<Mat>, m: usize, sig_n: usize, row0: usize) -> Result<ProjPending> {
+    fn send(
+        &self,
+        data: Arc<Mat>,
+        m: usize,
+        sig_n: usize,
+        row0: usize,
+        precision: Precision,
+    ) -> Result<ProjPending> {
         let (tx, rx) = mpsc::channel();
         self.tx
-            .send(ProjReq { data, m, sig_n, row0, resp: tx, enqueued: Instant::now() })
+            .send(ProjReq {
+                data,
+                m,
+                sig_n,
+                row0,
+                precision,
+                resp: tx,
+                enqueued: Instant::now(),
+            })
             .map_err(|_| anyhow::anyhow!("projection service is down"))?;
         Ok(ProjPending { rx })
     }
@@ -239,9 +308,11 @@ impl ProjectionService {
 }
 
 /// Merge key: only requests with identical contracted rows, sketch dim,
-/// signature dim and absolute row offset may share a frame batch (their
-/// columns then see the exact same operator block).
-type GroupKey = (usize, usize, usize, usize);
+/// signature dim, absolute row offset *and arithmetic tier* may share a
+/// frame batch (their columns then see the exact same operator block at
+/// the exact same arithmetic — merging tiers would change a request's
+/// rounding with pool load).
+type GroupKey = (usize, usize, usize, usize, Precision);
 
 /// Pending group of same-signature requests.
 struct Group {
@@ -273,7 +344,7 @@ fn batcher_loop(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                let key = (req.data.rows, req.m, req.sig_n, req.row0);
+                let key = (req.data.rows, req.m, req.sig_n, req.row0, req.precision);
                 let g = groups.entry(key).or_insert_with(|| Group {
                     reqs: Vec::new(),
                     cols: 0,
@@ -321,7 +392,7 @@ fn flush(
     exec: &Arc<DeviceExecutor>,
     pool: &Arc<DevicePool>,
     metrics: &Arc<Metrics>,
-    (n, m, sig_n, row0): GroupKey,
+    (n, m, sig_n, row0, precision): GroupKey,
     group: Group,
 ) {
     let total_cols = group.cols;
@@ -363,7 +434,8 @@ fn flush(
     // full-input passes must honor even a host affinity, or they would
     // realise a different operator than the accumulated chunks.
     let pin_host = exec.note_stream(sig_n, m, n != sig_n);
-    let schedule = router.schedule_chunk(pool, m, n, total_cols, preferred, sig_n, pin_host);
+    let schedule =
+        router.schedule_chunk_at(pool, m, n, total_cols, preferred, sig_n, pin_host, precision);
     exec.note_kind(sig_n, m, schedule.kind);
     for a in &schedule.shards {
         pool.begin(a.device, a.predicted_ms);
@@ -425,6 +497,7 @@ struct FlushJob {
 impl FlushJob {
     fn run(self) {
         let planned = self.schedule.kind;
+        let precision = self.schedule.precision;
         let outcome = execute_schedule(
             &self.exec,
             &self.pool,
@@ -434,7 +507,7 @@ impl FlushJob {
             self.row0,
             &self.merged,
         );
-        scatter(&self.metrics, self.sig, planned, self.total_cols, self.reqs, outcome);
+        scatter(&self.metrics, self.sig, planned, precision, self.total_cols, self.reqs, outcome);
     }
 }
 
@@ -452,15 +525,18 @@ fn execute_schedule(
 ) -> Result<(Mat, Device)> {
     let k = merged.cols;
     let sketch = schedule.host_sketch;
+    let prec = schedule.precision;
     let parts: Vec<Result<(Mat, DeviceId)>> = if schedule.shards.len() == 1 {
-        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, row0, merged, sketch)]
+        vec![run_shard(exec, pool, metrics, &schedule.shards[0], sig, row0, merged, sketch, prec)]
     } else {
         std::thread::scope(|s| {
             let handles: Vec<_> = schedule
                 .shards
                 .iter()
                 .map(|a| {
-                    s.spawn(move || run_shard(exec, pool, metrics, a, sig, row0, merged, sketch))
+                    s.spawn(move || {
+                        run_shard(exec, pool, metrics, a, sig, row0, merged, sketch, prec)
+                    })
                 })
                 .collect();
             handles
@@ -514,6 +590,7 @@ fn run_shard(
     row0: usize,
     merged: &Arc<Mat>,
     sketch: SketchKind,
+    precision: Precision,
 ) -> Result<(Mat, DeviceId)> {
     // Slice this cell's input rows (share the batch `Arc` when the cell
     // spans the full input — no copy on the unsharded fast path).
@@ -554,7 +631,7 @@ fn run_shard(
         let outcome = if poisoned {
             Err(anyhow::anyhow!("injected fault on {}", device.label()))
         } else {
-            exec.run_cell(device, sig, &a.out, &abs_inp, &x, host_sketch)
+            exec.run_cell(device, sig, &a.out, &abs_inp, &x, host_sketch, precision)
         };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         match outcome {
@@ -589,6 +666,7 @@ fn scatter(
     metrics: &Metrics,
     (_n, m): (usize, usize),
     planned: Device,
+    precision: Precision,
     total_cols: usize,
     reqs: Vec<ProjReq>,
     outcome: Result<(Mat, Device)>,
@@ -603,6 +681,7 @@ fn scatter(
                     result,
                     device,
                     planned,
+                    precision,
                     batch_cols: total_cols,
                 }));
                 return;
@@ -621,6 +700,7 @@ fn scatter(
                     result: slice,
                     device,
                     planned,
+                    precision,
                     batch_cols: total_cols,
                 }));
             }
@@ -719,10 +799,16 @@ impl DeviceExecutor {
 
     /// Execute one shard cell on one device. Returns the partial result
     /// and, for the OPU, the simulated device milliseconds consumed.
-    /// Host cells realise the schedule's digital operator: the dense
+    /// Host cells realise the schedule's digital operator — the dense
     /// counter-Gaussian block GEMM, or a structured fast path (SRHT /
     /// sparse-sign) addressing a block of the signature's one logical
-    /// structured operator.
+    /// structured operator — at the batch's arithmetic tier. Operator
+    /// *identity* is tier-independent (the same signature-seeded draws
+    /// at every tier; only the apply arithmetic changes), so the cached
+    /// operators are shared across tiers. The accelerator arms ignore
+    /// `precision`: the router pins non-F64 batches to host, so they
+    /// only ever see F64 cells.
+    #[allow(clippy::too_many_arguments)]
     fn run_cell(
         &self,
         device: DeviceId,
@@ -731,6 +817,7 @@ impl DeviceExecutor {
         inp: &Range<usize>,
         x: &Arc<Mat>,
         sketch: SketchKind,
+        precision: Precision,
     ) -> Result<(Mat, Option<f64>)> {
         match device.kind {
             Device::Opu => {
@@ -748,15 +835,15 @@ impl DeviceExecutor {
             Device::Host => match sketch {
                 SketchKind::Dense => {
                     let g = self.operator_block(sig, out, inp);
-                    Ok((matmul(&g, x), None))
+                    Ok((matmul_lowp(&g, x, precision), None))
                 }
                 SketchKind::Srht => {
                     let sk = self.srht_sketcher(sig);
-                    Ok((sk.project_block(out.clone(), inp.clone(), x), None))
+                    Ok((sk.project_block_lowp(out.clone(), inp.clone(), x, precision), None))
                 }
                 SketchKind::Sparse => {
                     let sk = self.sparse_sketcher(sig);
-                    Ok((sk.project_block(out.clone(), inp.clone(), x), None))
+                    Ok((sk.project_block_lowp(out.clone(), inp.clone(), x, precision), None))
                 }
             },
         }
@@ -850,7 +937,7 @@ mod tests {
     use super::*;
     use crate::coordinator::pool::PoolConfig;
     use crate::coordinator::router::{Availability, HostSketch, Policy};
-    use crate::linalg::rel_frobenius_error;
+    use crate::linalg::{matmul, rel_frobenius_error};
     use crate::randnla::backend::Sketcher;
     use crate::rng::Xoshiro256;
 
@@ -1253,6 +1340,140 @@ mod tests {
         let x = Mat::zeros(16, 1);
         let err = svc.project_rows(x, 4, 24, 16).unwrap_err();
         assert!(err.to_string().contains("overrun"), "{err}");
+    }
+
+    #[test]
+    fn f64_tier_request_is_bitwise_the_plain_path() {
+        // project_at(F64) must ride the exact legacy path: same merge
+        // key shape, same schedule, same kernel — bitwise.
+        let (svc, _m) = host_service(8, 50);
+        let mut rng = Xoshiro256::new(41);
+        let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+        let plain = svc.project(x.clone(), 8).unwrap();
+        let tiered = svc.project_at(x, 8, Precision::F64).unwrap();
+        assert_eq!(plain.result, tiered.result);
+        assert_eq!(tiered.precision, Precision::F64);
+    }
+
+    #[test]
+    fn lowp_dense_arm_applies_the_tier_kernel_exactly() {
+        // A low-tier batch on the dense host arm must compute exactly
+        // the documented tier kernel over the *same* signature operator
+        // the f64 path uses (operator identity is tier-independent).
+        let (svc, _m) = host_service(8, 50);
+        let mut rng = Xoshiro256::new(42);
+        let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let g = CounterSketcher::new(8, 24, seed).matrix();
+        for prec in [Precision::F32, Precision::Bf16] {
+            let r = svc.project_at(x.clone(), 8, prec).unwrap();
+            assert_eq!(r.device, Device::Host);
+            assert_eq!(r.precision, prec);
+            assert_eq!(r.result, matmul_lowp(&g, &x, prec), "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn lowp_structured_arms_apply_the_tier_fast_path_exactly() {
+        for (sketch, label) in
+            [(SketchKind::Srht, "srht"), (SketchKind::Sparse, "sparse")]
+        {
+            let (svc, _m, _p) = service_with_sketch(
+                Policy::ForceHost,
+                PoolConfig { pjrt_replicas: 0, ..Default::default() },
+                8,
+                50,
+                HostSketch::Fixed(sketch),
+            );
+            let mut rng = Xoshiro256::new(43);
+            let x = Mat::gaussian(24, 3, 1.0, &mut rng);
+            let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+            let got = svc.project_at(x.clone(), 8, Precision::F32).unwrap().result;
+            let want = match sketch {
+                SketchKind::Srht => SrhtSketcher::new(8, 24, seed)
+                    .project_block_lowp(0..8, 0..24, &x, Precision::F32),
+                _ => SparseSignSketcher::new(8, 24, SPARSE_SKETCH_NNZ.min(8), seed)
+                    .project_block_lowp(0..8, 0..24, &x, Precision::F32),
+            };
+            assert_eq!(got, want, "{label} low-tier fast path drifted");
+        }
+    }
+
+    #[test]
+    fn lowp_accelerator_policies_pin_to_host() {
+        // A bf16 request against an OPU-forced pool must land on the
+        // host arm (the OPU cannot realise the tier semantics) and
+        // still equal the host tier kernel exactly.
+        let (svc, _metrics, _pool) = service(
+            Policy::ForceOpu,
+            PoolConfig { pjrt_replicas: 0, ..Default::default() },
+            8,
+            50,
+        );
+        let mut rng = Xoshiro256::new(44);
+        let x = Mat::gaussian(24, 2, 1.0, &mut rng);
+        let r = svc.project_at(x.clone(), 8, Precision::Bf16).unwrap();
+        assert_eq!(r.planned, Device::Host);
+        assert_eq!(r.device, Device::Host);
+        let seed = signature_seed(BatchConfig::default().seed, 24, 8);
+        let g = CounterSketcher::new(8, 24, seed).matrix();
+        assert_eq!(r.result, matmul_lowp(&g, &x, Precision::Bf16));
+        // And the same pool still serves F64 work on the OPU.
+        let r64 = svc.project(x, 8).unwrap();
+        assert_eq!(r64.device, Device::Opu);
+    }
+
+    #[test]
+    fn lowp_sharded_projection_is_bit_identical_across_worker_counts() {
+        // The tier-reproducibility contract: shard cells of one tier
+        // reproduce the same bits whatever the pool size, exactly like
+        // the f64 plane.
+        let (n, m, k) = (32usize, 16usize, 3usize);
+        for prec in [Precision::F32, Precision::Bf16] {
+            let run = |workers: usize| {
+                let (svc, metrics, _pool) = service(
+                    Policy::ForceHost,
+                    PoolConfig {
+                        pjrt_replicas: 0,
+                        host_workers: workers,
+                        host_aperture: Some((8, usize::MAX)),
+                        ..Default::default()
+                    },
+                    4,
+                    50,
+                );
+                let mut rng = Xoshiro256::new(45);
+                let x = Mat::gaussian(n, k, 1.0, &mut rng);
+                let y = svc.project_at(x, m, prec).unwrap().result;
+                assert!(metrics.sharded_jobs.load(Ordering::Relaxed) >= 1);
+                y
+            };
+            assert_eq!(run(1), run(4), "{prec:?} shards depend on the pool size");
+        }
+    }
+
+    #[test]
+    fn lowp_chunked_offset_projections_track_the_whole_projection() {
+        // Chunk partials accumulate in f64 even at a low tier, so the
+        // re-associated sum stays within tier distance of the one-shot
+        // tier projection.
+        let (n, m, k) = (48usize, 12usize, 3usize);
+        let mut rng = Xoshiro256::new(46);
+        let a = Mat::gaussian(n, k, 1.0, &mut rng);
+        let (svc, _metrics) = host_service(1024, 50);
+        let whole = svc.project_at(a.clone(), m, Precision::F32).unwrap().result;
+        let mut acc = Mat::zeros(m, k);
+        let mut r0 = 0usize;
+        while r0 < n {
+            let r1 = (r0 + 16).min(n);
+            let x = Mat::from_fn(r1 - r0, k, |i, j| a.at(r0 + i, j));
+            let part = svc.project_rows_at(x, m, n, r0, Precision::F32).unwrap();
+            assert_eq!(part.precision, Precision::F32);
+            acc = acc.add(&part.result);
+            r0 = r1;
+        }
+        let rel = rel_frobenius_error(&whole, &acc);
+        assert!(rel < Precision::F32.tier_tol() * 40.0, "chunked f32 drifted {rel}");
     }
 
     #[test]

@@ -70,8 +70,14 @@ pub use request::{
     Device, Job, JobError, JobResponse, JobSpec, OperandRef, Payload, Priority, SubmitError,
     SubmitOptions, Ticket, TraceEstimator,
 };
-pub use router::{Availability, HostSketch, Policy, Route, Router, Schedule, ShardAssignment};
+pub use router::{
+    Availability, HostSketch, Policy, PrecisionPolicy, Route, Router, Schedule, ShardAssignment,
+};
 pub use server::{Coordinator, CoordinatorConfig, ADAPTIVE_RANGE_BLOCK};
+
+// Re-exported so client code can name arithmetic tiers without reaching
+// into the linalg layer (`SubmitOptions::with_precision` takes it).
+pub use crate::linalg::Precision;
 
 // Re-exported for client convenience: `Lstsq { refine }` takes the same
 // options type the algorithm layer uses.

@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{JobError, JobResponse, Priority, ResolvedJob, SubmitError};
+use crate::linalg::Precision;
 
 /// One admitted job: resolved operands + QoS envelope + response channel.
 pub(crate) struct QueuedJob {
@@ -42,6 +43,10 @@ pub(crate) struct QueuedJob {
     pub deadline: Option<Duration>,
     pub cancelled: Arc<AtomicBool>,
     pub priority: Priority,
+    /// Effective arithmetic tier, resolved against the server's
+    /// [`PrecisionPolicy`](crate::coordinator::PrecisionPolicy) at
+    /// submit time — what the worker hands the projection service.
+    pub precision: Precision,
 }
 
 struct State {
@@ -251,6 +256,7 @@ mod tests {
                 deadline: None,
                 cancelled: Arc::new(AtomicBool::new(false)),
                 priority,
+                precision: Precision::F64,
             },
             rx,
         )

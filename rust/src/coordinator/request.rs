@@ -24,7 +24,7 @@ use crate::coordinator::plan::PlanError;
 use crate::coordinator::queue::JobQueue;
 use crate::coordinator::store::OperandId;
 use crate::coordinator::stream::{SealedStream, StreamId};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Precision};
 use crate::randnla::lstsq::LsqrOpts;
 
 /// Which estimator a `Trace` job runs (the accuracy/cost knob of the
@@ -337,15 +337,29 @@ pub struct SubmitOptions {
     /// queued this long after submit — expired work never touches a
     /// device.
     pub deadline: Option<Duration>,
+    /// Arithmetic tier the projection arms may run at (default
+    /// [`Precision::F64`] — full precision, bitwise the legacy path).
+    /// The router treats this as the *requested* tier: it may downgrade
+    /// only under a [`crate::coordinator::PrecisionPolicy::Auto`] policy
+    /// AND an explicit accuracy contract (e.g. a `RandSvd { tol }`)
+    /// loose enough for the cheaper tier; exact-contract jobs never
+    /// move.
+    pub precision: Precision,
 }
 
 impl SubmitOptions {
     pub fn interactive() -> Self {
-        Self { priority: Priority::Interactive, deadline: None }
+        Self { priority: Priority::Interactive, ..Self::default() }
     }
 
     pub fn with_deadline(mut self, d: Duration) -> Self {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Request a specific arithmetic tier for this submission.
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
         self
     }
 }
@@ -527,6 +541,12 @@ pub struct JobResponse {
     pub payload: Payload,
     /// Device that performed the randomization step.
     pub device: Device,
+    /// Arithmetic tier the job's projections executed at — the
+    /// requested [`SubmitOptions::precision`] after the server's
+    /// [`PrecisionPolicy`](crate::coordinator::PrecisionPolicy) resolved
+    /// it (so an `Auto` downgrade or a `Fixed` override is visible to
+    /// the client, never silent).
+    pub precision: Precision,
     /// End-to-end wall latency (queue + compute), microseconds — stamped
     /// from the same submit instant the client's [`Ticket`] holds.
     pub latency_us: u64,
@@ -723,5 +743,19 @@ mod tests {
         let i = SubmitOptions::interactive().with_deadline(Duration::from_millis(3));
         assert_eq!(i.priority, Priority::Interactive);
         assert_eq!(i.deadline, Some(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn default_precision_is_full_and_builder_rides_along() {
+        // The compat contract: untouched submissions run at f64, bitwise
+        // the pre-tier serving plane.
+        assert_eq!(SubmitOptions::default().precision, Precision::F64);
+        assert_eq!(SubmitOptions::interactive().precision, Precision::F64);
+        let o = SubmitOptions::interactive()
+            .with_precision(Precision::Bf16)
+            .with_deadline(Duration::from_millis(3));
+        assert_eq!(o.precision, Precision::Bf16);
+        assert_eq!(o.priority, Priority::Interactive);
+        assert_eq!(o.deadline, Some(Duration::from_millis(3)));
     }
 }

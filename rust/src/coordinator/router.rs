@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::coordinator::pool::{DeviceId, DevicePool, PoolDevice};
 use crate::coordinator::request::Device;
 use crate::coordinator::shard::ShardPlan;
-use crate::perfmodel::{self, GpuModel, OpuTimingModel, SketchKind};
+use crate::perfmodel::{self, GpuModel, OpuTimingModel, Precision, SketchKind};
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +51,52 @@ pub enum HostSketch {
     Fixed(SketchKind),
 }
 
+/// How the router resolves each job's arithmetic tier (CLI
+/// `serve --precision`). Orthogonal to [`Policy`]: the device policy
+/// picks *where* a projection runs, this picks *what arithmetic* the
+/// digital arms use once it lands there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// Honor each submission's requested tier verbatim (the default).
+    /// Submissions default to [`Precision::F64`], so an untouched
+    /// client sees the bitwise pre-tier serving plane.
+    Requested,
+    /// Operator override: force every projection to one tier,
+    /// whatever the submission asked (explicit server configuration —
+    /// the one sanctioned way an exact-contract job changes tier).
+    Fixed(Precision),
+    /// Contract-driven: a job carrying an accuracy contract (e.g.
+    /// `RandSvd { tol }`) runs at the cheapest tier whose documented
+    /// tolerance still meets the contract; a job with *no* contract is
+    /// never moved off its requested tier — no silent downgrades.
+    Auto,
+}
+
+impl PrecisionPolicy {
+    /// Resolve the arithmetic tier one job runs at: `requested` is the
+    /// submission's tier, `tol` its accuracy contract when it carries
+    /// one (e.g. `RandSvd { tol }`). Under [`PrecisionPolicy::Auto`] a
+    /// contract buys the cheapest tier whose documented
+    /// [`Precision::tier_tol`] still meets it (tiers scanned in
+    /// descending [`crate::perfmodel::precision_speedup`] order, so a
+    /// loose contract lands on f32 and a tight one climbs back to f64);
+    /// without a contract the request is honored verbatim — the policy
+    /// never downgrades an exact-contract job on its own.
+    pub fn resolve(self, requested: Precision, tol: Option<f64>) -> Precision {
+        match self {
+            PrecisionPolicy::Requested => requested,
+            PrecisionPolicy::Fixed(p) => p,
+            PrecisionPolicy::Auto => match tol {
+                None => requested,
+                Some(t) => [Precision::F32, Precision::Bf16, Precision::F64]
+                    .into_iter()
+                    .find(|p| p.tier_tol() <= t)
+                    .unwrap_or(Precision::F64),
+            },
+        }
+    }
+}
+
 /// Device availability as seen by the router.
 #[derive(Clone, Copy, Debug)]
 pub struct Availability {
@@ -72,6 +118,8 @@ pub struct Router {
     pub avail: Availability,
     /// Digital operator selection for the host arm.
     pub host_sketch: HostSketch,
+    /// Arithmetic-tier resolution for the projection arms.
+    pub precision: PrecisionPolicy,
 }
 
 /// A routing decision with its predicted cost.
@@ -105,6 +153,10 @@ pub struct Schedule {
     /// operator a reroute-to-host fallback must use). Chosen once per
     /// signature — it never varies with batch width or pool load.
     pub host_sketch: SketchKind,
+    /// Arithmetic tier every cell of this batch executes at (resolved
+    /// *before* scheduling by [`Router::choose_precision`] — the
+    /// schedule only records and prices it).
+    pub precision: Precision,
     /// Predicted makespan (max over replicas of queue delay + assigned work).
     pub predicted_ms: f64,
 }
@@ -117,6 +169,7 @@ impl Router {
             gpu_model: crate::perfmodel::P100,
             avail,
             host_sketch: HostSketch::Fixed(SketchKind::Dense),
+            precision: PrecisionPolicy::Requested,
         }
     }
 
@@ -124,6 +177,20 @@ impl Router {
     pub fn with_host_sketch(mut self, host_sketch: HostSketch) -> Self {
         self.host_sketch = host_sketch;
         self
+    }
+
+    /// Builder: select the arithmetic-tier resolution policy.
+    pub fn with_precision(mut self, precision: PrecisionPolicy) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Resolve the arithmetic tier one job runs at (see
+    /// [`PrecisionPolicy::resolve`] — the coordinator front door uses
+    /// the policy form directly at submit time, before any router state
+    /// exists for the job).
+    pub fn choose_precision(&self, requested: Precision, tol: Option<f64>) -> Precision {
+        self.precision.resolve(requested, tol)
     }
 
     /// The digital operator the host arm uses for a (n, m) signature.
@@ -245,8 +312,35 @@ impl Router {
         sig_n: usize,
         pin_host: bool,
     ) -> Schedule {
+        self.schedule_chunk_at(pool, m, n, k, preferred, sig_n, pin_host, Precision::F64)
+    }
+
+    /// [`schedule_chunk`](Self::schedule_chunk) at a resolved arithmetic
+    /// tier. `F64` is exactly `schedule_chunk` — the legacy path,
+    /// decision for decision. A lower tier *pins the batch to the host
+    /// arm*: the OPU is an analog ~4–8-bit device with its own native
+    /// quantisation and the PJRT artifacts are compiled at fixed
+    /// precision, so neither can realise the documented f32/bf16
+    /// compensated semantics — only the host kernels can. Pinning also
+    /// keeps every F64 routing decision byte-identical to the base
+    /// serving plane: the accelerator arms never see a tier they cannot
+    /// execute.
+    #[allow(clippy::too_many_arguments)]
+    pub fn schedule_chunk_at(
+        &self,
+        pool: &DevicePool,
+        m: usize,
+        n: usize,
+        k: usize,
+        preferred: Option<Device>,
+        sig_n: usize,
+        pin_host: bool,
+        precision: Precision,
+    ) -> Schedule {
         let partial = n != sig_n;
+        let lowp = precision != Precision::F64;
         let kinds: &[Device] = match self.policy {
+            _ if lowp => &[],
             Policy::Auto if partial => &[Device::Pjrt],
             Policy::Auto => &[Device::Opu, Device::Pjrt],
             Policy::ForceOpu if partial => &[],
@@ -255,9 +349,9 @@ impl Router {
             Policy::ForceHost => &[],
         };
         if let Some(p) = preferred {
-            if kinds.contains(&p) || (pin_host && p == Device::Host) {
+            if kinds.contains(&p) || ((pin_host || lowp) && p == Device::Host) {
                 if let Some((_, plan, devs)) = self.kind_plan(pool, p, m, n, k) {
-                    return self.assign_cells(p, &plan, &devs, k, sig_n);
+                    return self.assign_cells(p, &plan, &devs, k, sig_n, precision);
                 }
             }
         }
@@ -271,7 +365,9 @@ impl Router {
             }
         }
         match best {
-            Some((_, kind, plan, devs)) => self.assign_cells(kind, &plan, &devs, k, sig_n),
+            Some((_, kind, plan, devs)) => {
+                self.assign_cells(kind, &plan, &devs, k, sig_n, precision)
+            }
             None => {
                 // Host fallback; if every host worker was marked dead, use
                 // them anyway — digital execution cannot actually fail.
@@ -288,7 +384,7 @@ impl Router {
                 let max_m = devs.iter().map(|d| d.max_m).min().unwrap_or(usize::MAX);
                 let max_n = devs.iter().map(|d| d.max_n).min().unwrap_or(usize::MAX);
                 let plan = ShardPlan::for_aperture(m, n, max_m, max_n);
-                self.assign_cells(Device::Host, &plan, &devs, k, sig_n)
+                self.assign_cells(Device::Host, &plan, &devs, k, sig_n, precision)
             }
         }
     }
@@ -339,10 +435,13 @@ impl Router {
         devs: &[Arc<PoolDevice>],
         k: usize,
         sig_n: usize,
+        precision: Precision,
     ) -> Schedule {
         // The host operator is chosen once from the *signature* dims, so
         // cells are priced with the operator they will actually execute
-        // (`sig_n`, not the chunk's row count, for chunk batches).
+        // (`sig_n`, not the chunk's row count, for chunk batches). Host
+        // cells are priced at the batch's tier; accelerator cells only
+        // exist at F64 (lower tiers pin to host in `schedule_chunk_at`).
         let host_sketch = self.digital_kind(sig_n, plan.m, k);
         let mut local: Vec<f64> = devs.iter().map(|d| d.queue_delay_ms()).collect();
         let mut shards = Vec::with_capacity(plan.num_cells());
@@ -350,14 +449,16 @@ impl Router {
             let per = match (kind, host_sketch) {
                 // The SRHT transform always spans the signature's padded
                 // input dimension, whatever the cell's input slice.
-                (Device::Host, SketchKind::Srht) => perfmodel::srht_cell_projection_ms(
+                (Device::Host, SketchKind::Srht) => perfmodel::srht_cell_projection_ms_at(
+                    precision,
                     sig_n,
                     cell.inp.len(),
                     cell.out.len(),
                     k,
                 ),
-                (Device::Host, _) => perfmodel::digital_sketch_ms(
+                (Device::Host, _) => perfmodel::digital_sketch_ms_at(
                     host_sketch,
+                    precision,
                     cell.inp.len(),
                     cell.out.len(),
                     k,
@@ -381,7 +482,7 @@ impl Router {
             });
         }
         let predicted_ms = local.iter().copied().fold(0.0, f64::max);
-        Schedule { kind, plan: plan.clone(), shards, host_sketch, predicted_ms }
+        Schedule { kind, plan: plan.clone(), shards, host_sketch, precision, predicted_ms }
     }
 
     fn opu_ms(&self, m: usize, n: usize, k: usize) -> f64 {
@@ -683,5 +784,84 @@ mod tests {
         let s = r.schedule(&pool, 48, 96, 2);
         assert!(s.predicted_ms > 0.0);
         assert!(s.shards.iter().all(|a| a.predicted_ms > 0.0));
+    }
+
+    // ---- precision tiers ----
+
+    #[test]
+    fn precision_defaults_honor_the_request() {
+        let r = auto_router();
+        assert_eq!(r.precision, PrecisionPolicy::Requested);
+        assert_eq!(r.choose_precision(Precision::F64, None), Precision::F64);
+        assert_eq!(r.choose_precision(Precision::Bf16, None), Precision::Bf16);
+        // Default policy never second-guesses, contract or not.
+        assert_eq!(r.choose_precision(Precision::F64, Some(1e-2)), Precision::F64);
+    }
+
+    #[test]
+    fn fixed_precision_is_an_operator_override() {
+        let r = auto_router().with_precision(PrecisionPolicy::Fixed(Precision::F32));
+        assert_eq!(r.choose_precision(Precision::F64, None), Precision::F32);
+        assert_eq!(r.choose_precision(Precision::Bf16, Some(1e-1)), Precision::F32);
+    }
+
+    #[test]
+    fn auto_precision_downgrades_only_under_a_contract() {
+        let r = auto_router().with_precision(PrecisionPolicy::Auto);
+        // No accuracy contract -> the request stands, never cheaper.
+        assert_eq!(r.choose_precision(Precision::F64, None), Precision::F64);
+        assert_eq!(r.choose_precision(Precision::F32, None), Precision::F32);
+        // A loose contract buys the cheapest admissible tier...
+        assert_eq!(r.choose_precision(Precision::F64, Some(1e-3)), Precision::F32);
+        // ...and a tight one climbs back to full precision even if the
+        // submission asked for less.
+        assert_eq!(r.choose_precision(Precision::Bf16, Some(1e-8)), Precision::F64);
+    }
+
+    #[test]
+    fn f64_tier_schedules_are_byte_identical_to_the_legacy_path() {
+        let pool = DevicePool::build(&PoolConfig::default(), &Availability::default());
+        let r = Router::new(Policy::Auto, Availability::default());
+        let base = r.schedule(&pool, 512, 4096, 16);
+        let tiered =
+            r.schedule_chunk_at(&pool, 512, 4096, 16, None, 4096, false, Precision::F64);
+        assert_eq!(tiered.kind, base.kind);
+        assert_eq!(tiered.host_sketch, base.host_sketch);
+        assert_eq!(tiered.precision, Precision::F64);
+        assert_eq!(tiered.predicted_ms, base.predicted_ms);
+        assert_eq!(tiered.shards.len(), base.shards.len());
+        for (a, b) in tiered.shards.iter().zip(&base.shards) {
+            assert_eq!((a.device, a.out.clone(), a.inp.clone()), (b.device, b.out.clone(), b.inp.clone()));
+            assert_eq!(a.predicted_ms, b.predicted_ms);
+        }
+    }
+
+    #[test]
+    fn low_tiers_pin_to_the_host_arm() {
+        // Neither the analog OPU nor the fixed-precision PJRT artifacts
+        // can realise the documented f32/bf16 compensated semantics —
+        // a low-tier batch must land on host under every policy.
+        let pool = DevicePool::build(&PoolConfig::default(), &Availability::default());
+        for policy in [Policy::Auto, Policy::ForceOpu, Policy::ForcePjrt, Policy::ForceHost] {
+            let r = Router::new(policy, Availability::default());
+            for prec in [Precision::F32, Precision::Bf16] {
+                let s = r.schedule_chunk_at(&pool, 64, 256, 4, None, 256, false, prec);
+                assert_eq!(s.kind, Device::Host, "{policy:?} {prec:?}");
+                assert_eq!(s.precision, prec);
+            }
+        }
+    }
+
+    #[test]
+    fn low_tier_host_cells_price_below_f64() {
+        let pool = opu_pool(1, (64, 128));
+        let r = Router::new(Policy::ForceHost, Availability::default());
+        let f64_ms =
+            r.schedule_chunk_at(&pool, 32, 64, 8, None, 64, false, Precision::F64).predicted_ms;
+        let f32_ms =
+            r.schedule_chunk_at(&pool, 32, 64, 8, None, 64, false, Precision::F32).predicted_ms;
+        let bf16_ms =
+            r.schedule_chunk_at(&pool, 32, 64, 8, None, 64, false, Precision::Bf16).predicted_ms;
+        assert!(f32_ms < bf16_ms && bf16_ms < f64_ms, "{f32_ms} {bf16_ms} {f64_ms}");
     }
 }

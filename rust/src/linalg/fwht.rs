@@ -60,6 +60,45 @@ pub fn fwht_rows(buf: &mut Mat) {
     parallel::par_chunks_mut(&mut buf.data, len, |_, row| fwht_inplace(row));
 }
 
+/// In-place unnormalised FWHT of one length-2^p f32 slice — the
+/// low-precision tier's butterfly (see [`crate::linalg::lowp`]). Same
+/// network and semantics as [`fwht_inplace`]; every add rounds at f32.
+/// Butterfly additions are +-1-weighted sums, so no product rounding is
+/// introduced — the transform of a tier-rounded input carries the
+/// tier's input error amplified by at most sqrt(len) in the 2-norm.
+pub fn fwht_inplace_f32(v: &mut [f32]) {
+    let n = v.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} is not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// f32 mirror of [`fwht_rows`]: transform every `row_len`-length row of
+/// the flat buffer in place, parallelised over rows. Each row's
+/// butterfly network is sequential and self-contained, so results are
+/// bit-reproducible for any thread count — the property the
+/// low-precision SRHT fast path needs for per-tier shard determinism.
+pub fn fwht_rows_f32(data: &mut [f32], row_len: usize) {
+    if row_len <= 1 {
+        return;
+    }
+    assert!(row_len.is_power_of_two(), "FWHT row length {row_len} is not a power of two");
+    assert_eq!(data.len() % row_len, 0, "buffer is not a whole number of rows");
+    parallel::par_chunks_mut(data, row_len, |_, row| fwht_inplace_f32(row));
+}
+
 /// Hadamard-matrix entry sign as +-1.0: `H[i, j] = (-1)^{popcount(i & j)}`.
 /// Random access used when a shard cell materialises an operator block.
 #[inline]
@@ -174,5 +213,40 @@ mod tests {
     fn rejects_non_pow2() {
         let mut v = vec![0.0; 6];
         fwht_inplace(&mut v);
+    }
+
+    #[test]
+    fn f32_butterfly_tracks_f64_transform() {
+        let mut rng = Xoshiro256::new(6);
+        let n = 256;
+        let v: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut want = v.clone();
+        fwht_inplace(&mut want);
+        let mut got: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        fwht_inplace_f32(&mut got);
+        let scale = (n as f64).sqrt();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-4 * scale * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn f32_rows_variant_is_bit_identical_per_row() {
+        // The parallel rows variant must match the sequential per-row
+        // transform bitwise — thread-count independence per tier.
+        let mut rng = Xoshiro256::new(7);
+        let (rows, len) = (5usize, 64usize);
+        let mut buf: Vec<f32> = (0..rows * len).map(|_| rng.next_normal() as f32).collect();
+        let want: Vec<Vec<f32>> = (0..rows)
+            .map(|i| {
+                let mut r = buf[i * len..(i + 1) * len].to_vec();
+                fwht_inplace_f32(&mut r);
+                r
+            })
+            .collect();
+        fwht_rows_f32(&mut buf, len);
+        for i in 0..rows {
+            assert_eq!(&buf[i * len..(i + 1) * len], &want[i][..], "row {i}");
+        }
     }
 }

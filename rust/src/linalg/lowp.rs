@@ -1,0 +1,583 @@
+//! Mixed-precision projection arithmetic: packed f32 / bf16 sketch
+//! kernels with compensated accumulation.
+//!
+//! The OPU is itself a low-precision analog device (~4–8 effective bits
+//! per transmission-matrix entry), yet the digital arms of this repo
+//! sketched in full f64. Following "Mixed-Precision Random Projection
+//! for RandNLA on Tensor Cores" (Ootomo & Yokota 2023, PAPERS.md), this
+//! module adds two digital tiers below f64:
+//!
+//! - [`Precision::F32`] — operands packed as f32 (half the memory
+//!   traffic of f64, twice the SIMD lanes) run through an f32 mirror of
+//!   the 4x8 register-tile microkernel in [`super::matmul`]. The k-loop
+//!   is *compensated*: products accumulate in an f32 register tile for
+//!   at most [`KC`] steps, then the block partial is promoted into an
+//!   f64 accumulator — so rounding error grows with the KC block length
+//!   (~KC * eps_f32), not with the full inner dimension k.
+//! - [`Precision::Bf16`] — operands stored as bf16 bit-truncations of
+//!   f32 in `u16` ([`MatBf16`]), applied Ootomo-style as a *split*
+//!   product: `x ~= hi + lo` with `hi = bf16(x)` and `lo = bf16(x - hi)`,
+//!   and `A B ~= Ahi Bhi + Ahi Blo + Alo Bhi` (the `Alo Blo` term is
+//!   below bf16 resolution and is dropped). Each term runs through the
+//!   compensated f32 kernel and the three partials sum in f64.
+//!
+//! Determinism contract (mirrors [`super::matmul`]): element (i, j)
+//! accumulates over k in ascending order with no FMA contraction, the
+//! KC block boundaries are fixed by k alone, and band/tile/thread
+//! choices never reorder the sum — so row-sharded low-precision GEMMs
+//! are bit-identical to the matching rows of the full product, per
+//! tier. The serving plane relies on this for per-tier bit-reproducible
+//! shard cells (see rust/src/coordinator/batcher.rs).
+
+use super::mat::Mat;
+use crate::parallel;
+
+/// Register-tile height, mirroring [`super::matmul`].
+const MR: usize = 4;
+/// Register-tile width.
+const NR: usize = 8;
+/// Upper bound for rows per parallel band.
+const MC: usize = 64;
+/// k-steps accumulated in the f32 register tile before the partial is
+/// promoted into the f64 accumulator. Error per element is bounded by
+/// the *block* length, not the full inner dimension: ~KC * eps_f32
+/// relative to the block partial's magnitude.
+const KC: usize = 64;
+
+/// Arithmetic tier of a digital projection arm. `F64` is the exact
+/// baseline every estimator is judged against; the lower tiers trade a
+/// documented accuracy bound ([`Precision::tier_tol`]) for throughput
+/// (see `perfmodel::precision_speedup`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f64 (the exact-contract tier; never auto-selected away).
+    #[default]
+    F64,
+    /// Packed f32 with KC-blocked f64 promotion.
+    F32,
+    /// bf16 split storage with error-corrected f32 accumulation.
+    Bf16,
+}
+
+impl Precision {
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Documented relative-accuracy bound of the tier's projection
+    /// arithmetic (Frobenius-relative vs. the f64 path, on
+    /// sketching-scale operands; property-tested with wide margin in
+    /// tests/prop_precision.rs). The router only auto-downgrades a job
+    /// to a tier whose bound fits inside the job's accuracy contract
+    /// (`tol`). `F64` is the exact contract: bound 0.
+    pub fn tier_tol(self) -> f64 {
+        match self {
+            Precision::F64 => 0.0,
+            Precision::F32 => 1e-5,
+            Precision::Bf16 => 1e-2,
+        }
+    }
+
+    /// Parse a CLI tier name (`f64`, `f32`, `bf16`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+/// Truncate an f32 to bf16 (upper 16 bits of the IEEE-754 encoding)
+/// with round-to-nearest-even, returning the 16 stored bits.
+#[inline]
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the payload's top bits but force a quiet NaN.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFFu32 + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Decode stored bf16 bits back to f32 (exact: bf16 is a prefix of f32).
+#[inline]
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 to the nearest bf16-representable value.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_decode(bf16_encode(x))
+}
+
+/// Dense row-major f32 matrix: the packed storage of the f32 tier
+/// (half the bytes of [`Mat`], twice the SIMD lanes per load).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Truncate an f64 matrix to f32 storage.
+    pub fn from_mat(m: &Mat) -> Self {
+        Self { rows: m.rows, cols: m.cols, data: m.data.iter().map(|&v| v as f32).collect() }
+    }
+
+    /// Truncate an f64 matrix through the bf16 grid (the *values* an
+    /// [`MatBf16`] stores, kept in f32 for arithmetic).
+    pub fn from_mat_bf16(m: &Mat) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| bf16_round(v as f32)).collect(),
+        }
+    }
+
+    /// Widen back to the f64 substrate.
+    pub fn to_mat(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// Dense row-major bf16 matrix, stored as the upper 16 bits of f32 in
+/// `u16` — the bit-truncation repr of the bf16 tier (quarter the bytes
+/// of [`Mat`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatBf16 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u16>,
+}
+
+impl MatBf16 {
+    /// Round an f64 matrix into bf16 storage.
+    pub fn from_mat(m: &Mat) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| bf16_encode(v as f32)).collect(),
+        }
+    }
+
+    /// Decode into f32 storage for arithmetic.
+    pub fn to_f32(&self) -> MatF32 {
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&b| bf16_decode(b)).collect(),
+        }
+    }
+
+    /// Widen to the f64 substrate.
+    pub fn to_mat(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&b| bf16_decode(b) as f64).collect(),
+        }
+    }
+}
+
+/// Ootomo split of an f64 matrix into bf16 hi/lo parts:
+/// `hi = bf16(x)`, `lo = bf16(f32(x) - hi)`. `hi + lo` carries ~16
+/// mantissa bits of the f32 truncation of x.
+pub fn split_bf16(x: &Mat) -> (MatBf16, MatBf16) {
+    let mut hi = Vec::with_capacity(x.data.len());
+    let mut lo = Vec::with_capacity(x.data.len());
+    for &v in &x.data {
+        let v32 = v as f32;
+        let h = bf16_encode(v32);
+        hi.push(h);
+        lo.push(bf16_encode(v32 - bf16_decode(h)));
+    }
+    (
+        MatBf16 { rows: x.rows, cols: x.cols, data: hi },
+        MatBf16 { rows: x.rows, cols: x.cols, data: lo },
+    )
+}
+
+/// Rows per parallel band (same shape as the f64 kernel's choice).
+fn band_rows(m: usize) -> usize {
+    let t = parallel::num_threads();
+    let raw = (m / (4 * t).max(1)).clamp(4, MC).max(1);
+    raw.div_ceil(MR) * MR
+}
+
+/// Pack B into NR-wide k-major column panels (f32 mirror of the f64
+/// packing; zero-padded on the right edge).
+fn pack_b_panels(b: &MatF32) -> Vec<f32> {
+    let (k, n) = (b.rows, b.cols);
+    let panels = n.div_ceil(NR);
+    let mut out = vec![0.0f32; panels * k * NR];
+    for s in 0..panels {
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut out[s * k * NR..(s + 1) * k * NR];
+        for kk in 0..k {
+            panel[kk * NR..kk * NR + w].copy_from_slice(&b.row(kk)[j0..j0 + w]);
+        }
+    }
+    out
+}
+
+/// Pack `rows` rows of A starting at `i0` into MR-tall k-major panels.
+fn pack_a_band(a: &MatF32, i0: usize, rows: usize) -> Vec<f32> {
+    let k = a.cols;
+    let panels = rows.div_ceil(MR);
+    let mut out = vec![0.0f32; panels * k * MR];
+    for s in 0..panels {
+        let r0 = s * MR;
+        let h = MR.min(rows - r0);
+        let panel = &mut out[s * k * MR..(s + 1) * k * MR];
+        for r in 0..h {
+            let arow = a.row(i0 + r0 + r);
+            for (kk, &v) in arow.iter().enumerate() {
+                panel[kk * MR + r] = v;
+            }
+        }
+    }
+    out
+}
+
+/// The compensated f32 microkernel: one MR x NR tile accumulated over
+/// the full k range. Products accumulate in an f32 register tile for at
+/// most KC steps, then the block partial is promoted into the f64 tile
+/// — the inner loop stays pure f32 (the throughput win), the growth of
+/// rounding error is cut off at the KC boundary (the accuracy win).
+/// Per element the sum runs over k ascending; block boundaries depend
+/// only on k, so the result is band/thread-count independent.
+#[inline(always)]
+fn microkernel(a_panel: &[f32], b_panel: &[f32]) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    let mut blk = [[0.0f32; NR]; MR];
+    let mut steps = 0usize;
+    for (av, bv) in a_panel.chunks_exact(MR).zip(b_panel.chunks_exact(NR)) {
+        let av: &[f32; MR] = av.try_into().unwrap();
+        let bv: &[f32; NR] = bv.try_into().unwrap();
+        for r in 0..MR {
+            let a = av[r];
+            for c in 0..NR {
+                blk[r][c] += a * bv[c];
+            }
+        }
+        steps += 1;
+        if steps == KC {
+            for r in 0..MR {
+                for c in 0..NR {
+                    acc[r][c] += blk[r][c] as f64;
+                    blk[r][c] = 0.0;
+                }
+            }
+            steps = 0;
+        }
+    }
+    if steps > 0 {
+        for r in 0..MR {
+            for c in 0..NR {
+                acc[r][c] += blk[r][c] as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// C = A @ B from packed f32 operands, compensated accumulation, f64
+/// result. The banded parallel structure mirrors [`super::matmul`].
+pub fn matmul_packed_f32(a: &MatF32, b: &MatF32) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let bp = pack_b_panels(b);
+    let n_panels = n.div_ceil(NR);
+    parallel::par_chunks_mut(&mut c.data, band_rows(m) * n, |start, band| {
+        let i0 = start / n;
+        let rows = band.len() / n;
+        let ap = pack_a_band(a, i0, rows);
+        let m_panels = rows.div_ceil(MR);
+        for si in 0..m_panels {
+            let r0 = si * MR;
+            let h = MR.min(rows - r0);
+            let a_panel = &ap[si * k * MR..(si + 1) * k * MR];
+            for sj in 0..n_panels {
+                let j0 = sj * NR;
+                let w = NR.min(n - j0);
+                let b_panel = &bp[sj * k * NR..(sj + 1) * k * NR];
+                let acc = microkernel(a_panel, b_panel);
+                for r in 0..h {
+                    let at = (r0 + r) * n + j0;
+                    band[at..at + w].copy_from_slice(&acc[r][..w]);
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A @ B at the f32 tier: truncate, run the compensated packed
+/// kernel, widen.
+pub fn matmul_f32(a: &Mat, b: &Mat) -> Mat {
+    matmul_packed_f32(&MatF32::from_mat(a), &MatF32::from_mat(b))
+}
+
+/// Uncompensated f32 reference: the whole k-loop accumulates in one f32
+/// register, so rounding error grows with k and large partial sums
+/// absorb small terms. Kept as the ablation baseline the property tests
+/// compare the compensated kernel against — not used on any serving
+/// path.
+pub fn matmul_f32_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims (naive f32)");
+    let af = MatF32::from_mat(a);
+    let bf = MatF32::from_mat(b);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    parallel::par_chunks_mut(&mut c.data, n.max(1), |start, row| {
+        let i = start / n.max(1);
+        if row.is_empty() {
+            return;
+        }
+        for (j, dst) in row.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += af.row(i)[kk] * bf.data[kk * n + j];
+            }
+            *dst = s as f64;
+        }
+    });
+    c
+}
+
+/// C ~= A @ B at the bf16 tier, Ootomo split with error correction:
+/// `Ahi Bhi + Ahi Blo + Alo Bhi`, each term through the compensated f32
+/// kernel, the three partials summed in f64 in a fixed order. The
+/// dropped `Alo Blo` term is quadratically below bf16 resolution.
+pub fn matmul_bf16(a: &Mat, b: &Mat) -> Mat {
+    let (ah, al) = split_bf16(a);
+    let (bh, bl) = split_bf16(b);
+    let (ah, al) = (ah.to_f32(), al.to_f32());
+    let (bh, bl) = (bh.to_f32(), bl.to_f32());
+    let mut c = matmul_packed_f32(&ah, &bh);
+    let hi_lo = matmul_packed_f32(&ah, &bl);
+    let lo_hi = matmul_packed_f32(&al, &bh);
+    for ((cv, x), y) in c.data.iter_mut().zip(&hi_lo.data).zip(&lo_hi.data) {
+        *cv += x + y;
+    }
+    c
+}
+
+/// C = A @ B at the given tier. `F64` is exactly [`super::matmul`] —
+/// bitwise, not approximately: the F64 tier must never perturb the
+/// baseline path.
+pub fn matmul_lowp(a: &Mat, b: &Mat, precision: Precision) -> Mat {
+    match precision {
+        Precision::F64 => super::matmul::matmul(a, b),
+        Precision::F32 => matmul_f32(a, b),
+        Precision::Bf16 => matmul_bf16(a, b),
+    }
+}
+
+/// Round every entry of an f64 matrix through the tier's grid (the
+/// value-level effect of storing the operand at that tier). `F64` is
+/// the identity.
+pub fn round_to_tier(x: &Mat, precision: Precision) -> Mat {
+    match precision {
+        Precision::F64 => x.clone(),
+        Precision::F32 => MatF32::from_mat(x).to_mat(),
+        Precision::Bf16 => MatF32::from_mat_bf16(x).to_mat(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::linalg::rel_frobenius_error;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn bf16_codec_roundtrips_exact_values() {
+        // Powers of two and small integers are exactly representable.
+        for v in [0.0f32, 1.0, -2.0, 0.5, 96.0, -0.25] {
+            assert_eq!(bf16_round(v), v, "{v}");
+        }
+        // Rounding is to nearest: 1 + 2^-9 is closer to 1 than to the
+        // next bf16 step (2^-7 above 1).
+        assert_eq!(bf16_round(1.0 + 1.0 / 512.0), 1.0);
+        // Relative error of one rounding stays within the bf16 eps.
+        for v in [3.1415927f32, -1234.567, 1e-3, 7.77e8] {
+            let r = bf16_round(v);
+            assert!(((r - v) / v).abs() < 1.0 / 128.0, "{v} -> {r}");
+        }
+        // NaN stays NaN, infinities are preserved.
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn split_recovers_f32_truncation_closely() {
+        let mut rng = Xoshiro256::new(1);
+        let x = Mat::gaussian(8, 8, 1.0, &mut rng);
+        let (hi, lo) = split_bf16(&x);
+        let (hi, lo) = (hi.to_f32(), lo.to_f32());
+        for (i, &v) in x.data.iter().enumerate() {
+            let rec = hi.data[i] + lo.data[i];
+            let v32 = v as f32;
+            // hi + lo carries ~16 mantissa bits of the f32 value.
+            assert!(
+                (rec - v32).abs() <= v32.abs() * 1e-4 + 1e-30,
+                "entry {i}: {rec} vs {v32}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_kernel_matches_f64_within_tier_tol() {
+        let mut rng = Xoshiro256::new(2);
+        // Edge tiles straddling MR/NR and a k spanning several KC blocks.
+        for (m, k, n) in [(1, 1, 1), (4, 9, 8), (5, 3, 9), (13, 2, 17), (33, 200, 21)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            let exact = matmul(&a, &b);
+            let got = matmul_f32(&a, &b);
+            let rel = rel_frobenius_error(&exact, &got);
+            assert!(rel < Precision::F32.tier_tol(), "({m},{k},{n}): {rel}");
+        }
+    }
+
+    #[test]
+    fn bf16_kernel_matches_f64_within_tier_tol() {
+        let mut rng = Xoshiro256::new(3);
+        for (m, k, n) in [(4, 9, 8), (16, 64, 12), (9, 130, 7)] {
+            let a = Mat::gaussian(m, k, 1.0, &mut rng);
+            let b = Mat::gaussian(k, n, 1.0, &mut rng);
+            let exact = matmul(&a, &b);
+            let got = matmul_bf16(&a, &b);
+            let rel = rel_frobenius_error(&exact, &got);
+            assert!(rel < Precision::Bf16.tier_tol(), "({m},{k},{n}): {rel}");
+        }
+    }
+
+    #[test]
+    fn split_correction_beats_plain_bf16_product() {
+        // The error-corrected split product must land much closer to
+        // f64 than multiplying the rounded bf16 values alone.
+        let mut rng = Xoshiro256::new(4);
+        let a = Mat::gaussian(12, 96, 1.0, &mut rng);
+        let b = Mat::gaussian(96, 10, 1.0, &mut rng);
+        let exact = matmul(&a, &b);
+        let split = matmul_bf16(&a, &b);
+        let plain = matmul(&round_to_tier(&a, Precision::Bf16), &round_to_tier(&b, Precision::Bf16));
+        let split_err = rel_frobenius_error(&exact, &split);
+        let plain_err = rel_frobenius_error(&exact, &plain);
+        assert!(split_err < plain_err, "split {split_err} vs plain {plain_err}");
+    }
+
+    #[test]
+    fn compensated_f32_beats_naive_f32_on_ill_conditioned_sums() {
+        // Ill-conditioned accumulation: entries spanning four orders of
+        // magnitude over a long k. The naive all-f32 k-loop lets the
+        // running sum absorb small terms; the KC-blocked promotion
+        // restarts the f32 partial every KC steps, so its error stays
+        // bounded by the block length.
+        let k = 4096;
+        let mut rng = Xoshiro256::new(42);
+        let mut a = Mat::gaussian(3, k, 1.0, &mut rng);
+        for i in 0..a.rows {
+            for j in 0..k {
+                *a.at_mut(i, j) *= 10f64.powi((j % 5) as i32);
+            }
+        }
+        let b = Mat::gaussian(k, 4, 1.0, &mut rng);
+        let exact = matmul(&a, &b);
+        let comp_err = rel_frobenius_error(&exact, &matmul_f32(&a, &b));
+        let naive_err = rel_frobenius_error(&exact, &matmul_f32_naive(&a, &b));
+        assert!(
+            comp_err * 2.0 < naive_err,
+            "compensated {comp_err} not clearly below naive {naive_err}"
+        );
+        assert!(comp_err < 1e-4, "compensated err {comp_err}");
+    }
+
+    #[test]
+    fn row_blocks_are_bit_identical_to_full_per_tier() {
+        // The shard planner's exactness contract, per tier: a GEMM over
+        // a row subset of A matches those rows of the full product
+        // bitwise, whatever bands/tiles either call used internally.
+        let mut rng = Xoshiro256::new(5);
+        let a = Mat::gaussian(37, 129, 1.0, &mut rng);
+        let b = Mat::gaussian(129, 31, 1.0, &mut rng);
+        for prec in [Precision::F64, Precision::F32, Precision::Bf16] {
+            let full = matmul_lowp(&a, &b, prec);
+            let (lo, hi) = (5usize, 22usize);
+            let a_sub = Mat::from_fn(hi - lo, a.cols, |i, j| a.at(lo + i, j));
+            let sub = matmul_lowp(&a_sub, &b, prec);
+            for i in 0..hi - lo {
+                assert_eq!(sub.row(i), full.row(lo + i), "{} row {i}", prec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn f64_tier_is_bitwise_the_baseline_kernel() {
+        let mut rng = Xoshiro256::new(6);
+        let a = Mat::gaussian(17, 23, 1.0, &mut rng);
+        let b = Mat::gaussian(23, 9, 1.0, &mut rng);
+        assert_eq!(matmul_lowp(&a, &b, Precision::F64), matmul(&a, &b));
+        assert_eq!(round_to_tier(&a, Precision::F64), a);
+    }
+
+    #[test]
+    fn empty_dims_are_zero() {
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        for prec in [Precision::F32, Precision::Bf16] {
+            let c = matmul_lowp(&a, &b, prec);
+            assert_eq!((c.rows, c.cols), (3, 4));
+            assert!(c.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn precision_labels_parse_and_order_tols() {
+        for p in [Precision::F64, Precision::F32, Precision::Bf16] {
+            assert_eq!(Precision::parse(p.label()), Some(p));
+        }
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(Precision::F64.tier_tol() < Precision::F32.tier_tol());
+        assert!(Precision::F32.tier_tol() < Precision::Bf16.tier_tol());
+    }
+
+    #[test]
+    fn storage_types_roundtrip_their_grids() {
+        let mut rng = Xoshiro256::new(7);
+        let x = Mat::gaussian(6, 5, 1.0, &mut rng);
+        let f = MatF32::from_mat(&x);
+        assert_eq!(f.to_mat(), round_to_tier(&x, Precision::F32));
+        let h = MatBf16::from_mat(&x);
+        assert_eq!(h.to_mat(), round_to_tier(&x, Precision::Bf16));
+        // Re-encoding an already-rounded matrix is the identity.
+        assert_eq!(MatBf16::from_mat(&h.to_mat()), h);
+    }
+}

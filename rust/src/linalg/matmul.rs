@@ -235,19 +235,32 @@ pub fn trace_of_product(a: &Mat, b: &Mat) -> f64 {
     )
 }
 
-/// Tr(B^3) for square B in O(n^2) memory-free form: Tr(B^2 * B) using
-/// sum_ij (B^2)_ij * B_ji. The contraction runs under
-/// [`crate::parallel::par_fold`] like [`trace_of_product`].
+/// Tr(B^3) for square B without materialising B^2: Tr(B^2 * B) via
+/// sum_ij (B^2)_ij * B_ji, computing each row of B^2 on the fly inside
+/// the [`crate::parallel::par_fold`] ranges. Every worker keeps one
+/// length-n scratch row (axpy accumulation of row_i(B) against the rows
+/// of B), so peak extra memory is O(workers * n) — the O(n^2) working
+/// set is B itself, never a second product matrix.
 pub fn trace_cubed(b: &Mat) -> f64 {
     assert!(b.is_square());
-    let b2 = matmul(b, b);
+    let n = b.rows;
     parallel::par_fold(
-        b.rows,
+        n,
         |range| {
+            let mut scratch = vec![0.0f64; n];
             let mut tr = 0.0;
             for i in range {
-                let row = b2.row(i);
-                for (j, v) in row.iter().enumerate() {
+                // row_i(B^2) = sum_k B[i, k] * row_k(B).
+                scratch.fill(0.0);
+                for (k, &bik) in b.row(i).iter().enumerate() {
+                    if bik == 0.0 {
+                        continue;
+                    }
+                    for (s, &bv) in scratch.iter_mut().zip(b.row(k)) {
+                        *s += bik * bv;
+                    }
+                }
+                for (j, &v) in scratch.iter().enumerate() {
                     tr += v * b.at(j, i);
                 }
             }
@@ -399,6 +412,23 @@ mod tests {
         let b = Mat::gaussian(18, 18, 1.0, &mut rng);
         let wanted = matmul(&matmul(&b, &b), &b).trace();
         assert!((trace_cubed(&b) - wanted).abs() < 1e-8);
+    }
+
+    #[test]
+    fn trace_cubed_banded_matches_explicit_product_at_scale() {
+        // Sizes that split unevenly across par_fold workers: the
+        // band-at-a-time contraction must agree with the materialised
+        // B^2 reference within f64 association noise.
+        let mut rng = Xoshiro256::new(10);
+        for n in [1usize, 7, 65, 130] {
+            let b = Mat::gaussian(n, n, 1.0, &mut rng);
+            let wanted = matmul(&matmul(&b, &b), &b).trace();
+            let got = trace_cubed(&b);
+            assert!(
+                (got - wanted).abs() < 1e-7 * (1.0 + wanted.abs()),
+                "n={n}: {got} vs {wanted}"
+            );
+        }
     }
 
     #[test]

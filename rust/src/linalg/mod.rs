@@ -6,13 +6,20 @@
 //! module is the reference the sketches are judged by.
 
 pub mod fwht;
+pub mod lowp;
 pub mod mat;
 pub mod matmul;
 pub mod norms;
 pub mod qr;
 pub mod svd;
 
-pub use fwht::{fwht_inplace, fwht_rows, hadamard_sign, padded_pow2};
+pub use fwht::{
+    fwht_inplace, fwht_inplace_f32, fwht_rows, fwht_rows_f32, hadamard_sign, padded_pow2,
+};
+pub use lowp::{
+    bf16_decode, bf16_encode, bf16_round, matmul_bf16, matmul_f32, matmul_f32_naive,
+    matmul_lowp, matmul_packed_f32, round_to_tier, split_bf16, MatBf16, MatF32, Precision,
+};
 pub use mat::Mat;
 pub use matmul::{matmul, matmul_nt, matmul_tn, matvec, trace_cubed, trace_of_product};
 pub use norms::{

@@ -12,8 +12,8 @@ use std::path::PathBuf;
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, OperandId,
-    OperandRef, Policy, PoolConfig, StreamError, StreamId, StreamOpts, SubmitOptions, Ticket,
-    TraceEstimator,
+    OperandRef, Policy, PoolConfig, Precision, PrecisionPolicy, StreamError, StreamId,
+    StreamOpts, SubmitOptions, Ticket, TraceEstimator,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
@@ -37,6 +37,9 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
          [--queue-cap 1024] (bounded admission queue; Busy beyond it)
          [--store-mb 1024] (operand-store quota; 0 = unbounded)
          [--adaptive-tol 0.05] (rel. error target of adaptive-svd jobs)
+         [--precision requested|f64|f32|bf16|auto] (arithmetic tier:
+           requested honors each job, f64/f32/bf16 force one tier,
+           auto lets accuracy contracts buy cheaper tiers)
          [--stream-chunk-rows 256] (streaming-ingest chunk size)
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
   info   [--artifacts DIR]";
@@ -183,6 +186,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     if stream_chunk_rows == 0 {
         return Err("--stream-chunk-rows must be >= 1".into());
     }
+    // Arithmetic-tier policy. The trace driver submits with default
+    // options (requested tier f64), so `requested` keeps the seeded
+    // behaviour bit for bit; a named tier is a server-wide override;
+    // `auto` lets the adaptive-svd jobs' --adaptive-tol contract buy a
+    // cheaper tier. Operator draws are tier-independent either way, so
+    // seeded draw counts never change with this flag.
+    let precision = match args.get_or("precision", "requested").as_str() {
+        "requested" => PrecisionPolicy::Requested,
+        "auto" => PrecisionPolicy::Auto,
+        tier => match Precision::parse(tier) {
+            Some(p) => PrecisionPolicy::Fixed(p),
+            None => return Err(format!("unknown precision tier {tier}")),
+        },
+    };
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
@@ -193,12 +210,14 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         queue_cap: args.get_usize("queue-cap", 1024)?,
         store_quota: if store_mb == 0 { usize::MAX } else { store_mb * 1024 * 1024 },
         stream_chunk_rows,
+        precision,
     })
     .map_err(|e| e.to_string())?;
 
     let trace = traces::generate(&trace_cfg);
     println!(
-        "serving {} jobs (policy {policy:?}, host sketch {host_sketch:?})...",
+        "serving {} jobs (policy {policy:?}, host sketch {host_sketch:?}, \
+         precision {precision:?})...",
         trace.len()
     );
     // Session-API driver: every operand is uploaded once and submitted

@@ -9,6 +9,7 @@
 pub mod gpu;
 pub mod opu;
 
+pub use crate::linalg::lowp::Precision;
 pub use gpu::{GpuModel, P100};
 pub use opu::OpuTimingModel;
 
@@ -180,6 +181,73 @@ pub fn cheapest_digital_sketch(n: usize, m: usize, k: usize) -> (SketchKind, f64
         }
     }
     best
+}
+
+/// Throughput multiplier of a precision tier on the host projection
+/// arm, relative to the f64 baseline. f32 halves the memory traffic and
+/// doubles SIMD lane count, so the packed kernel targets ~2x (the gate
+/// `benches/precision.rs` enforces). Bf16 stores half again but pays
+/// the split/correction passes (three f32-rate products of half-width
+/// operands), landing between f32 and f64. The multiplier is
+/// deliberately *kind-independent*: every sketch family moves its
+/// arithmetic through the same tier, so the argmin over kinds — and the
+/// k-invariance of that argmin — is preserved within each tier.
+pub fn precision_speedup(precision: Precision) -> f64 {
+    match precision {
+        Precision::F64 => 1.0,
+        Precision::F32 => 2.0,
+        Precision::Bf16 => 1.6,
+    }
+}
+
+/// Scale the arithmetic slope of a host cost by a tier's throughput
+/// multiplier, leaving the fixed dispatch overhead alone — tiers make
+/// flops cheaper, not syscalls. F64 returns the base price *bitwise*
+/// (the subtract/re-add round trip can lose a ulp, and a ulp is enough
+/// to flip a scheduling tie-break — the F64 path must price exactly
+/// like the pre-tier router).
+fn at_tier(base_ms: f64, precision: Precision) -> f64 {
+    if precision == Precision::F64 {
+        return base_ms;
+    }
+    HOST_SKETCH_OVERHEAD_MS + (base_ms - HOST_SKETCH_OVERHEAD_MS) / precision_speedup(precision)
+}
+
+/// Predicted host cost of one (m x n) x k projection with the given
+/// digital operator at a precision tier. `F64` is exactly
+/// [`digital_sketch_ms`].
+pub fn digital_sketch_ms_at(
+    kind: SketchKind,
+    precision: Precision,
+    n: usize,
+    m: usize,
+    k: usize,
+) -> f64 {
+    at_tier(digital_sketch_ms(kind, n, m, k), precision)
+}
+
+/// Tier-priced variant of [`cheapest_digital_sketch`]. The tier scales
+/// every kind's slope by the same factor, so the winning kind matches
+/// the f64 argmin — only the price changes.
+pub fn cheapest_digital_sketch_at(
+    precision: Precision,
+    n: usize,
+    m: usize,
+    k: usize,
+) -> (SketchKind, f64) {
+    let (kind, ms) = cheapest_digital_sketch(n, m, k);
+    (kind, at_tier(ms, precision))
+}
+
+/// Tier-priced variant of [`srht_cell_projection_ms`] for shard cells.
+pub fn srht_cell_projection_ms_at(
+    precision: Precision,
+    sig_n: usize,
+    cell_n: usize,
+    cell_m: usize,
+    k: usize,
+) -> f64 {
+    at_tier(srht_cell_projection_ms(sig_n, cell_n, cell_m, k), precision)
 }
 
 /// Column widths of the incremental rangefinder ladder up to a rank
@@ -442,6 +510,64 @@ mod tests {
         // And one chunk covering everything is exactly the plain cost.
         let one = stream_ingest_ms(SketchKind::Srht, rows, rows, m, k);
         assert_eq!(one, srht_projection_ms(rows, m, k));
+    }
+
+    #[test]
+    fn f64_tier_prices_are_exactly_the_base_model() {
+        for kind in [SketchKind::Dense, SketchKind::Srht, SketchKind::Sparse] {
+            assert_eq!(
+                digital_sketch_ms_at(kind, Precision::F64, 2048, 256, 8),
+                digital_sketch_ms(kind, 2048, 256, 8),
+                "{kind:?}"
+            );
+        }
+        assert_eq!(
+            cheapest_digital_sketch_at(Precision::F64, 4096, 512, 16),
+            cheapest_digital_sketch(4096, 512, 16)
+        );
+        assert_eq!(
+            srht_cell_projection_ms_at(Precision::F64, 4096, 2048, 512, 4),
+            srht_cell_projection_ms(4096, 2048, 512, 4)
+        );
+    }
+
+    #[test]
+    fn lower_tiers_are_strictly_cheaper_and_ordered() {
+        for kind in [SketchKind::Dense, SketchKind::Srht, SketchKind::Sparse] {
+            let f64_ms = digital_sketch_ms_at(kind, Precision::F64, 2048, 256, 8);
+            let bf16_ms = digital_sketch_ms_at(kind, Precision::Bf16, 2048, 256, 8);
+            let f32_ms = digital_sketch_ms_at(kind, Precision::F32, 2048, 256, 8);
+            assert!(f32_ms < bf16_ms && bf16_ms < f64_ms, "{kind:?}: {f32_ms} {bf16_ms} {f64_ms}");
+        }
+    }
+
+    #[test]
+    fn tier_scaling_keeps_k_linearity_and_kind_argmin() {
+        for prec in [Precision::F32, Precision::Bf16] {
+            // Slopes stay linear in k within the tier (shared overhead).
+            for kind in [SketchKind::Dense, SketchKind::Srht, SketchKind::Sparse] {
+                let c1 = digital_sketch_ms_at(kind, prec, 2048, 256, 1);
+                let c4 = digital_sketch_ms_at(kind, prec, 2048, 256, 4);
+                let ratio = (c4 - 0.01) / (c1 - 0.01);
+                assert!((ratio - 4.0).abs() < 1e-9, "{kind:?} {prec:?} not linear in k");
+            }
+            // The winning kind never flips with the tier.
+            for &(n, m) in &[(64usize, 32usize), (1024, 8), (4096, 512), (300, 300)] {
+                let (base_kind, _) = cheapest_digital_sketch(n, m, 16);
+                let (tier_kind, _) = cheapest_digital_sketch_at(prec, n, m, 16);
+                assert_eq!(base_kind, tier_kind, "kind flipped at {prec:?} n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_tols_order_with_speedups() {
+        // Cheaper tiers trade accuracy: speedup and tolerance both grow
+        // away from f64 (the router's downgrade rule relies on this).
+        assert_eq!(precision_speedup(Precision::F64), 1.0);
+        assert!(precision_speedup(Precision::F32) > precision_speedup(Precision::F64));
+        assert!(Precision::F64.tier_tol() < Precision::F32.tier_tol());
+        assert!(Precision::F32.tier_tol() < Precision::Bf16.tier_tol());
     }
 
     #[test]

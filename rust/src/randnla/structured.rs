@@ -33,7 +33,8 @@
 
 use std::ops::Range;
 
-use crate::linalg::{fwht_rows, hadamard_sign, padded_pow2, Mat};
+use crate::linalg::lowp::{bf16_round, Precision};
+use crate::linalg::{fwht_rows, fwht_rows_f32, hadamard_sign, padded_pow2, Mat};
 use crate::parallel;
 use crate::randnla::backend::Sketcher;
 use crate::rng::philox::Philox4x32;
@@ -185,6 +186,57 @@ impl SrhtSketcher {
             let yrow = y.row_mut(oi);
             for (c, dst) in yrow.iter_mut().enumerate() {
                 *dst = buf.at(c, r);
+            }
+        }
+        y
+    }
+
+    /// Low-precision fast apply of one shard cell: the input rows are
+    /// rounded through the tier's grid (f32, or the bf16 grid for
+    /// `Bf16`), the butterfly network runs in f32
+    /// ([`fwht_rows_f32`] — signs and Hadamard entries are +-1, exact
+    /// in every tier), and the sampled rows widen back to f64.
+    ///
+    /// `F64` is exactly [`Self::project_block`] — bitwise. The lower
+    /// tiers keep the same shard-determinism classes per tier: the
+    /// embedding uses global coordinates and each row's butterfly is
+    /// sequential, so output-dim shards are bit-identical to the
+    /// unsharded tier apply and input-dim shards recombine in f64.
+    pub fn project_block_lowp(
+        &self,
+        out: Range<usize>,
+        inp: Range<usize>,
+        x: &Mat,
+        precision: Precision,
+    ) -> Mat {
+        if precision == Precision::F64 {
+            return self.project_block(out, inp, x);
+        }
+        debug_assert!(out.end <= self.m && inp.end <= self.n);
+        assert_eq!(x.rows, inp.len(), "cell input rows {} != range {:?}", x.rows, inp);
+        let k = x.cols;
+        if k == 0 {
+            return Mat::zeros(out.len(), 0);
+        }
+        let mut buf = vec![0.0f32; k * self.n_pad];
+        for (li, j) in inp.clone().enumerate() {
+            let s = self.signs[j] as f32;
+            let xrow = x.row(li);
+            for (c, &xv) in xrow.iter().enumerate() {
+                let v = match precision {
+                    Precision::Bf16 => bf16_round(xv as f32),
+                    _ => xv as f32,
+                };
+                buf[c * self.n_pad + j] = s * v;
+            }
+        }
+        fwht_rows_f32(&mut buf, self.n_pad);
+        let mut y = Mat::zeros(out.len(), k);
+        for (oi, i) in out.clone().enumerate() {
+            let r = self.rows[i] as usize;
+            let yrow = y.row_mut(oi);
+            for (c, dst) in yrow.iter_mut().enumerate() {
+                *dst = buf[c * self.n_pad + r] as f64;
             }
         }
         y
@@ -351,6 +403,61 @@ impl SparseSignSketcher {
                     let xrow = x.row(j - inp.start);
                     for (acc, xv) in yrow.iter_mut().zip(xrow) {
                         *acc += v * xv;
+                    }
+                }
+            }
+        });
+        y
+    }
+
+    /// Low-precision apply of one shard cell: operand entries are
+    /// rounded through the tier's grid, each product is computed in f32
+    /// (operator values are +-1/sqrt(s) — f32-representable scale), and
+    /// the per-row accumulation stays in f64 exactly like
+    /// [`Self::project_block`], in the same ascending-column order.
+    ///
+    /// `F64` delegates to [`Self::project_block`] bitwise. Per tier,
+    /// the output-dim shard-determinism class is preserved: each output
+    /// row's f32 products round identically regardless of banding, and
+    /// the f64 accumulation order is fixed.
+    pub fn project_block_lowp(
+        &self,
+        out: Range<usize>,
+        inp: Range<usize>,
+        x: &Mat,
+        precision: Precision,
+    ) -> Mat {
+        if precision == Precision::F64 {
+            return self.project_block(out, inp, x);
+        }
+        debug_assert!(out.end <= self.m && inp.end <= self.n);
+        assert_eq!(x.rows, inp.len(), "cell input rows {} != range {:?}", x.rows, inp);
+        let k = x.cols;
+        let mut y = Mat::zeros(out.len(), k);
+        if k == 0 || out.is_empty() {
+            return y;
+        }
+        const ROWS_PER_TASK: usize = 64;
+        let out0 = out.start;
+        parallel::par_chunks_mut(&mut y.data, ROWS_PER_TASK * k, |start, band| {
+            let first = out0 + start / k;
+            let rows_here = band.len() / k;
+            for li in 0..rows_here {
+                let gi = first + li;
+                let yrow = &mut band[li * k..(li + 1) * k];
+                for idx in self.row_ptr[gi]..self.row_ptr[gi + 1] {
+                    let j = self.cols[idx] as usize;
+                    if !inp.contains(&j) {
+                        continue;
+                    }
+                    let v = self.vals[idx] as f32;
+                    let xrow = x.row(j - inp.start);
+                    for (acc, &xv) in yrow.iter_mut().zip(xrow) {
+                        let xt = match precision {
+                            Precision::Bf16 => bf16_round(xv as f32),
+                            _ => xv as f32,
+                        };
+                        *acc += (v * xt) as f64;
                     }
                 }
             }
@@ -607,5 +714,69 @@ mod tests {
         let sparse_mean = sparse_acc / trials as f64;
         assert!((srht_mean - x2).abs() / x2 < 0.15, "srht JL: {srht_mean} vs {x2}");
         assert!((sparse_mean - x2).abs() / x2 < 0.15, "sparse JL: {sparse_mean} vs {x2}");
+    }
+
+    #[test]
+    fn lowp_f64_tier_is_bitwise_the_full_precision_apply() {
+        let mut rng = Xoshiro256::new(11);
+        let x = Mat::gaussian(37, 4, 1.0, &mut rng);
+        let sr = SrhtSketcher::new(12, 37, 7);
+        assert_eq!(
+            sr.project_block(0..12, 0..37, &x),
+            sr.project_block_lowp(0..12, 0..37, &x, Precision::F64)
+        );
+        let sp = SparseSignSketcher::new(12, 37, 4, 7);
+        assert_eq!(
+            sp.project_block(0..12, 0..37, &x),
+            sp.project_block_lowp(0..12, 0..37, &x, Precision::F64)
+        );
+    }
+
+    #[test]
+    fn lowp_tiers_track_f64_within_tier_tolerance() {
+        let mut rng = Xoshiro256::new(12);
+        let x = Mat::gaussian(100, 6, 1.0, &mut rng);
+        let sr = SrhtSketcher::new(24, 100, 5);
+        let sp = SparseSignSketcher::new(24, 100, 6, 5);
+        for prec in [Precision::F32, Precision::Bf16] {
+            // Sketching-scale relative error budget: tier unit roundoff
+            // amplified by the transform length / nnz depth.
+            let budget = prec.tier_tol() * 40.0;
+            let sr_rel = rel_frobenius_error(
+                &sr.project_block(0..24, 0..100, &x),
+                &sr.project_block_lowp(0..24, 0..100, &x, prec),
+            );
+            assert!(sr_rel < budget, "srht {prec:?}: {sr_rel} vs {budget}");
+            let sp_rel = rel_frobenius_error(
+                &sp.project_block(0..24, 0..100, &x),
+                &sp.project_block_lowp(0..24, 0..100, &x, prec),
+            );
+            assert!(sp_rel < budget, "sparse {prec:?}: {sp_rel} vs {budget}");
+        }
+    }
+
+    #[test]
+    fn lowp_output_shards_are_bit_identical_per_tier() {
+        // The batcher splits the output dimension into shard cells; a
+        // tier's cells must reproduce the unsharded tier apply bitwise
+        // so pool size never changes results.
+        let mut rng = Xoshiro256::new(13);
+        let x = Mat::gaussian(70, 3, 1.0, &mut rng);
+        let sr = SrhtSketcher::new(20, 70, 8);
+        let sp = SparseSignSketcher::new(20, 70, 4, 8);
+        for prec in [Precision::F32, Precision::Bf16] {
+            let sr_full = sr.project_block_lowp(0..20, 0..70, &x, prec);
+            let sp_full = sp.project_block_lowp(0..20, 0..70, &x, prec);
+            for cells in 1..=4usize {
+                for r in split_ranges(20, cells) {
+                    let sr_cell = sr.project_block_lowp(r.clone(), 0..70, &x, prec);
+                    let sp_cell = sp.project_block_lowp(r.clone(), 0..70, &x, prec);
+                    for (li, gi) in r.clone().enumerate() {
+                        assert_eq!(sr_cell.row(li), sr_full.row(gi), "srht {prec:?} {r:?}");
+                        assert_eq!(sp_cell.row(li), sp_full.row(gi), "sparse {prec:?} {r:?}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,229 @@
+//! Property tests for the mixed-precision projection arms (testkit, our
+//! proptest-lite), mirroring tests/prop_sketch_stats.rs:
+//!
+//! - per-tier JL distortion: E[||Sx||^2 / m] = ||x||^2 over Philox
+//!   seeds at every arithmetic tier (the statistical contract survives
+//!   f32/bf16 rounding);
+//! - per-tier operator scale: E[S^T S] = m I over seeds, measured on
+//!   the tier's own arithmetic (S applied to the identity);
+//! - compensated f32 beats the naive all-f32 k-loop on ill-conditioned
+//!   accumulations (the KC-blocked promotion is what buys the tier its
+//!   documented bound);
+//! - seeded RandSVD spectra at Bf16 through the coordinator stay within
+//!   the documented `Precision::Bf16.tier_tol()` of the f64 run;
+//! - shard cells are bit-identical to the unsharded apply at every
+//!   tier, for 1-4 output shards (the batcher's per-tier
+//!   bit-reproducibility contract).
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy, PoolConfig,
+    SubmitOptions,
+};
+use photonic_randnla::linalg::{
+    matmul, matmul_f32, matmul_f32_naive, matmul_tn, rel_frobenius_error, Mat, Precision,
+};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::parallel::split_ranges;
+use photonic_randnla::randnla::structured::{SparseSignSketcher, SrhtSketcher};
+use photonic_randnla::testkit::check;
+use photonic_randnla::workload::{matrix_with_spectrum, Spectrum};
+
+const TIERS: [Precision; 3] = [Precision::F64, Precision::F32, Precision::Bf16];
+
+#[test]
+fn prop_srht_jl_norm_preservation_per_tier() {
+    // JL over Philox seeds at every tier: tier rounding (<= 1e-2
+    // relative per product) is far inside the 0.25 statistical band the
+    // f64 suite already allows.
+    check("SRHT JL norm preservation per tier", 8, |g| {
+        let n = g.usize(8, 120);
+        let m = g.usize(8, 64);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, 1, 1.0, &mut rng);
+        let x2: f64 = x.data.iter().map(|v| v * v).sum();
+        let trials = 64u64;
+        let base = g.u64(0..=u64::MAX / 2);
+        for tier in TIERS {
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let s = SrhtSketcher::new(m, n, base + t);
+                let y = s.project_block_lowp(0..m, 0..n, &x, tier);
+                acc += y.data.iter().map(|v| v * v).sum::<f64>() / m as f64;
+            }
+            let mean = acc / trials as f64;
+            let rel = (mean - x2).abs() / x2;
+            if rel > 0.25 {
+                return Err(format!(
+                    "JL violated at n={n} m={m} tier={}: {mean} vs {x2} ({rel})",
+                    tier.label()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_expected_sts_is_m_identity_per_tier() {
+    // E[S^T S] = m I, measured on the tier's own arithmetic: apply S to
+    // the identity at the tier, form S^T S in f64, average over seeds.
+    check("E[S^T S] = m I per tier", 6, |g| {
+        let n = g.usize(6, 24);
+        let m = g.usize(8, 48);
+        let trials = 64u64;
+        let base = g.u64(0..=u64::MAX / 2);
+        let eye = Mat::eye(n);
+        for tier in TIERS {
+            let mut acc = Mat::zeros(n, n);
+            for t in 0..trials {
+                let s = SrhtSketcher::new(m, n, base + t);
+                let y = s.project_block_lowp(0..m, 0..n, &eye, tier);
+                acc = acc.add(&matmul_tn(&y, &y));
+            }
+            let mean = acc.scale(1.0 / trials as f64);
+            let want = eye.scale(m as f64);
+            let rel = rel_frobenius_error(&want, &mean);
+            if rel > 0.35 {
+                return Err(format!(
+                    "E[S^T S] off m*I at n={n} m={m} tier={}: rel {rel}",
+                    tier.label()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compensated_f32_beats_naive_on_ill_conditioned_operands() {
+    // Entries spanning four orders of magnitude over a long k: the
+    // naive all-f32 running sum absorbs small terms, the KC-blocked
+    // promotion restarts the f32 partial and keeps the error bounded by
+    // the block length.
+    check("compensated f32 beats naive f32", 8, |g| {
+        let k = g.usize(1024, 4096);
+        let rows = g.usize(2, 4);
+        let cols = g.usize(2, 5);
+        let mut rng = g.rng();
+        let mut a = Mat::gaussian(rows, k, 1.0, &mut rng);
+        for i in 0..rows {
+            for j in 0..k {
+                *a.at_mut(i, j) *= 10f64.powi((j % 5) as i32);
+            }
+        }
+        let b = Mat::gaussian(k, cols, 1.0, &mut rng);
+        let exact = matmul(&a, &b);
+        let comp_err = rel_frobenius_error(&exact, &matmul_f32(&a, &b));
+        let naive_err = rel_frobenius_error(&exact, &matmul_f32_naive(&a, &b));
+        if comp_err > naive_err {
+            return Err(format!(
+                "compensated {comp_err} worse than naive {naive_err} at k={k}"
+            ));
+        }
+        if comp_err > Precision::F32.tier_tol() * 40.0 {
+            return Err(format!("compensated err {comp_err} outside the tier budget at k={k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_cells_bit_identical_per_tier() {
+    // The batcher's per-tier reproducibility contract, at the operator:
+    // 1-4 output-dim shard cells must match the matching rows of the
+    // unsharded tier apply bitwise, whatever the pool size implied.
+    check("1-4 shard cells == unsharded apply per tier, bitwise", 16, |g| {
+        let m = g.usize(4, 40);
+        let n = g.usize(4, 60);
+        let k = g.usize(1, 6);
+        let shards = g.usize(1, 4.min(m));
+        let seed = g.u64(0..=u64::MAX);
+        let mut rng = g.rng();
+        let x = Mat::gaussian(n, k, 1.0, &mut rng);
+        let srht = SrhtSketcher::new(m, n, seed);
+        let sparse = SparseSignSketcher::new(m, n, g.usize(1, 4.min(m)), seed);
+        for tier in TIERS {
+            let srht_full = srht.project_block_lowp(0..m, 0..n, &x, tier);
+            let sparse_full = sparse.project_block_lowp(0..m, 0..n, &x, tier);
+            for r in split_ranges(m, shards) {
+                let cell = srht.project_block_lowp(r.clone(), 0..n, &x, tier);
+                let scell = sparse.project_block_lowp(r.clone(), 0..n, &x, tier);
+                for (bi, i) in r.enumerate() {
+                    if cell.row(bi) != srht_full.row(i) {
+                        return Err(format!(
+                            "srht cell row {i} not bit-identical at tier={} m={m} n={n} \
+                             shards={shards}",
+                            tier.label()
+                        ));
+                    }
+                    if scell.row(bi) != sparse_full.row(i) {
+                        return Err(format!(
+                            "sparse cell row {i} not bit-identical at tier={} m={m} n={n} \
+                             shards={shards}",
+                            tier.label()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn host_coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+#[test]
+fn bf16_randsvd_spectra_within_documented_tier_tolerance_of_f64() {
+    // Seeded end-to-end: the same RandSvd spec through the coordinator
+    // at Bf16 and at f64 (operator identity is tier-independent, so the
+    // draws match) — the spectra may differ only by tier arithmetic,
+    // bounded by the documented Bf16 tolerance.
+    let c = host_coordinator();
+    for seed in [3u64, 11] {
+        let target =
+            matrix_with_spectrum(96, Spectrum::Exponential { decay: 0.85 }, seed);
+        let spectrum_at = |precision: Precision| {
+            let resp = c
+                .run_spec(
+                    JobSpec::RandSvd {
+                        a: OperandRef::Inline(target.clone()),
+                        rank: 12,
+                        oversample: 8,
+                        power_iters: 1,
+                        publish_q: false,
+                        tol: None,
+                    },
+                    SubmitOptions::default().with_precision(precision),
+                )
+                .expect("randsvd");
+            assert_eq!(resp.precision, precision);
+            let (_, s, _) = resp.payload.svd().expect("svd payload");
+            s.to_vec()
+        };
+        let s64 = spectrum_at(Precision::F64);
+        let s16 = spectrum_at(Precision::Bf16);
+        assert_eq!(s64.len(), s16.len(), "tiers returned different ranks");
+        let num: f64 = s64.iter().zip(&s16).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f64 = s64.iter().map(|x| x * x).sum();
+        let rms = (num / den).sqrt();
+        assert!(
+            rms <= Precision::Bf16.tier_tol(),
+            "seed {seed}: bf16 spectrum rel RMS {rms:.3e} exceeds tier tol {}",
+            Precision::Bf16.tier_tol()
+        );
+    }
+    c.shutdown();
+}
