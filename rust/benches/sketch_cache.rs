@@ -1,0 +1,206 @@
+//! Bench: the result plane's content-addressed sketch cache under a
+//! zipfian repeated-submit workload.
+//!
+//! ```bash
+//! cargo bench --bench sketch_cache [-- --quick]
+//! ```
+//!
+//! The serving-shaped claim behind ISSUE 7: production RandNLA traffic
+//! is heavy-tailed — a few hot operands absorb most submissions — so a
+//! content-addressed cache in front of the projection plane converts
+//! the tail's device passes into O(1) lookups. Two series over the
+//! *same* zipf(1.1) trace of Hutchinson-trace jobs on a pool of
+//! operands:
+//!
+//! - **cache on**  — `cache_quota` sized to hold every hot sketch;
+//!   first touch of a key computes and parks, repeats serve from the
+//!   store without a single batcher flush;
+//! - **cache off** — `cache_quota: 0`, the seed behavior: every submit
+//!   takes the full projection path.
+//!
+//! Acceptance gates (ISSUE 7):
+//! - hit rate over the zipf trace >= 60%;
+//! - served throughput >= 2x the cache-off baseline (1.5x in --quick);
+//! - a pure-hit phase executes **zero** device projections, asserted
+//!   against the batcher's `projections_executed` counter;
+//! - cached results are bit-identical to a `bypass_cache` cold run at
+//!   every precision tier (f64 / f32 / bf16).
+//!
+//! Emits BENCH_sketch_cache.json.
+
+use std::time::Instant;
+
+use photonic_randnla::bench::{self, Gate, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandId, OperandRef, Policy,
+    Precision, SubmitOptions, TraceEstimator,
+};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::workload::psd_matrix;
+
+fn coordinator(cache_quota: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        cache_quota,
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Zipf(s) CDF over ranks 1..=k.
+fn zipf_cdf(k: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=k).map(|i| 1.0 / (i as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for v in &mut w {
+        acc += *v / total;
+        *v = acc;
+    }
+    w
+}
+
+fn zipf_trace(k: usize, s: f64, len: usize, seed: u64) -> Vec<usize> {
+    let cdf = zipf_cdf(k, s);
+    let mut rng = Xoshiro256::new(seed);
+    (0..len)
+        .map(|_| {
+            let u = rng.next_f64();
+            cdf.iter().position(|&c| u < c).unwrap_or(k - 1)
+        })
+        .collect()
+}
+
+fn trace_spec(id: OperandId, m: usize) -> JobSpec {
+    JobSpec::Trace { a: OperandRef::Handle(id), m, estimator: TraceEstimator::Hutchinson }
+}
+
+/// Submit the whole trace, then drain: served throughput is jobs over
+/// the full submit+drain window (what a saturated client observes).
+fn run_trace(c: &Coordinator, ids: &[OperandId], trace: &[usize], m: usize) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let tickets: Vec<_> = trace
+        .iter()
+        .map(|&i| c.submit_spec(trace_spec(ids[i], m), SubmitOptions::default()).expect("submit"))
+        .collect();
+    let scalars: Vec<f64> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("trace job").payload.scalar().unwrap())
+        .collect();
+    let dt = t0.elapsed().as_nanos() as f64;
+    (dt / trace.len() as f64, scalars)
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 256 } else { 512 };
+    let ops = 16usize; // operand pool (zipf ranks)
+    let m = 64usize; // sketch width => two m x n passes per miss
+    let submits = if quick { 120 } else { 400 };
+
+    println!(
+        "== sketch cache: zipf(1.1) x {submits} trace submits over {ops} {n} x {n} operands, m = {m} =="
+    );
+
+    let trace = zipf_trace(ops, 1.1, submits, 42);
+    let mats: Vec<_> = (0..ops).map(|i| psd_matrix(n, 64, 1_000 + i as u64)).collect();
+
+    // -- cache on ----------------------------------------------------
+    let c = coordinator(64 * 1024 * 1024);
+    let ids: Vec<OperandId> = mats.iter().map(|a| c.upload(a.clone()).expect("upload")).collect();
+    let (on_ns, on_vals) = run_trace(&c, &ids, &trace, m);
+    let hits = c.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+    let misses = c.metrics.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+    let hit_rate = hits as f64 / (hits + misses) as f64;
+    println!(
+        "cache on : {:.1}us/job  hits={hits} misses={misses} ({:.0}% hit rate), {} B parked",
+        on_ns / 1e3,
+        hit_rate * 100.0,
+        c.cache().bytes()
+    );
+
+    // Pure-hit phase: every key is warm, so the projection counter must
+    // not move — the "hits run zero device passes" guarantee, measured
+    // at the batcher (ground truth), not inferred from cache counters.
+    let proj_before = c.metrics.projections_executed.load(std::sync::atomic::Ordering::Relaxed);
+    let hit_phase = if quick { 30 } else { 100 };
+    let (_, _) = run_trace(&c, &ids, &trace[..hit_phase.min(trace.len())], m);
+    let proj_delta = c.metrics.projections_executed.load(std::sync::atomic::Ordering::Relaxed)
+        - proj_before;
+    println!("pure-hit phase: {proj_delta} device projections (want 0)");
+
+    // Per-tier bit-identity: cached vs bypass cold path.
+    let mut tiers_identical = true;
+    for tier in [Precision::F64, Precision::F32, Precision::Bf16] {
+        let opts = SubmitOptions::default().with_precision(tier);
+        let warm = c.run_spec(trace_spec(ids[0], m), opts).expect("warm").payload;
+        let hit = c.run_spec(trace_spec(ids[0], m), opts).expect("hit").payload;
+        let cold = c
+            .run_spec(trace_spec(ids[0], m), opts.bypass_cache())
+            .expect("cold")
+            .payload;
+        let (w, h, b) = (
+            warm.scalar().unwrap().to_bits(),
+            hit.scalar().unwrap().to_bits(),
+            cold.scalar().unwrap().to_bits(),
+        );
+        let same = w == h && w == b;
+        println!("tier {tier:?}: warm/hit/cold bits identical = {same}");
+        tiers_identical &= same;
+    }
+    c.shutdown();
+
+    // -- cache off (seed behavior) -----------------------------------
+    let c0 = coordinator(0);
+    let ids0: Vec<OperandId> =
+        mats.iter().map(|a| c0.upload(a.clone()).expect("upload")).collect();
+    let (off_ns, off_vals) = run_trace(&c0, &ids0, &trace, m);
+    println!("cache off: {:.1}us/job", off_ns / 1e3);
+    c0.shutdown();
+
+    // Same operands, same operator seeds: the two series must agree
+    // bitwise job-for-job, cached or not.
+    assert_eq!(on_vals.len(), off_vals.len());
+    for (i, (a, b)) in on_vals.iter().zip(&off_vals).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "job {i}: cached series diverged from seed behavior");
+    }
+
+    let rows = vec![
+        Summary::flat(format!("cache on  zipf(1.1) n={n} m={m}"), submits as u64, on_ns),
+        Summary::flat(format!("cache off zipf(1.1) n={n} m={m}"), submits as u64, off_ns),
+    ];
+    bench::report("sketch cache serving", &rows);
+
+    let speedup = off_ns / on_ns;
+    let floor = if quick { 1.5 } else { 2.0 };
+    println!("\nheadline: cache-on serves the zipf trace at {speedup:.1}x the cache-off baseline");
+    let gates = vec![
+        Gate::new(
+            "zipf(1.1) hit rate",
+            hit_rate >= 0.60,
+            format!("{:.0}% (need >= 60%)", hit_rate * 100.0),
+        ),
+        Gate::new(
+            "served throughput over cache-off baseline",
+            speedup >= floor,
+            format!("{speedup:.1}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "pure-hit phase device projections",
+            proj_delta == 0,
+            format!("{proj_delta} (need 0)"),
+        ),
+        Gate::new(
+            "per-tier bit-identity vs cold path",
+            tiers_identical,
+            format!("f64/f32/bf16 identical = {tiers_identical}"),
+        ),
+    ];
+    bench::finish("sketch_cache", &rows, &gates);
+}

@@ -37,6 +37,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{DeviceId, DevicePool};
+use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::request::Device;
 use crate::coordinator::router::{Router, Schedule, ShardAssignment};
 use crate::coordinator::shard;
@@ -290,18 +291,21 @@ impl ProjectionService {
     }
 
     /// Start the service; returns (client, join-handle). Dropping every
-    /// client shuts the batcher down.
+    /// client shuts the batcher down. `events` (when the coordinator
+    /// runs a result plane) receives one [`Event::Resolved`] per
+    /// flushed group — the scheduling decision, journaled.
     pub fn start(
         cfg: BatchConfig,
         router: Router,
         pool: Arc<DevicePool>,
         pjrt: Option<PjrtHandle>,
         metrics: Arc<Metrics>,
+        events: Option<Arc<EventLog>>,
     ) -> (Self, JoinHandle<()>) {
         let (tx, rx) = mpsc::channel::<ProjReq>();
         let join = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || batcher_loop(cfg, router, pool, pjrt, metrics, rx))
+            .spawn(move || batcher_loop(cfg, router, pool, pjrt, metrics, events, rx))
             .expect("spawn batcher");
         (Self { tx }, join)
     }
@@ -327,6 +331,7 @@ fn batcher_loop(
     pool: Arc<DevicePool>,
     pjrt: Option<PjrtHandle>,
     metrics: Arc<Metrics>,
+    events: Option<Arc<EventLog>>,
     rx: mpsc::Receiver<ProjReq>,
 ) {
     let exec = Arc::new(DeviceExecutor::new(&cfg, pjrt));
@@ -355,7 +360,7 @@ fn batcher_loop(
                 g.reqs.push(req);
                 if g.cols >= cfg.max_cols {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &exec, &pool, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, &events, key, g);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -366,7 +371,7 @@ fn batcher_loop(
                     .collect();
                 for key in due {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &exec, &pool, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, &events, key, g);
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -374,7 +379,7 @@ fn batcher_loop(
                 let keys: Vec<GroupKey> = groups.keys().copied().collect();
                 for key in keys {
                     let g = groups.remove(&key).unwrap();
-                    flush(&router, &exec, &pool, &metrics, key, g);
+                    flush(&router, &exec, &pool, &metrics, &events, key, g);
                 }
                 return;
             }
@@ -392,12 +397,19 @@ fn flush(
     exec: &Arc<DeviceExecutor>,
     pool: &Arc<DevicePool>,
     metrics: &Arc<Metrics>,
+    events: &Option<Arc<EventLog>>,
     (n, m, sig_n, row0, precision): GroupKey,
     group: Group,
 ) {
     let total_cols = group.cols;
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_cols.fetch_add(total_cols as u64, Ordering::Relaxed);
+    // The ground truth the sketch cache's "hits run zero device passes"
+    // guarantee is asserted against: every projection request that
+    // reaches a flush executed on a device arm.
+    metrics
+        .projections_executed
+        .fetch_add(group.reqs.len() as u64, Ordering::Relaxed);
 
     // Single-request batches (the handle-path fast case) share the
     // request's `Arc` outright — zero operand copies between client and
@@ -437,6 +449,10 @@ fn flush(
     let schedule =
         router.schedule_chunk_at(pool, m, n, total_cols, preferred, sig_n, pin_host, precision);
     exec.note_kind(sig_n, m, schedule.kind);
+    // Journal the scheduling decision: planned arm, tier, merged width.
+    if let Some(ev) = events {
+        ev.append(Event::Resolved { tier: precision, arm: schedule.kind, cols: total_cols });
+    }
     for a in &schedule.shards {
         pool.begin(a.device, a.predicted_ms);
     }
@@ -963,7 +979,7 @@ mod tests {
         let router = Router::new(policy, avail).with_host_sketch(host_sketch);
         let pool = Arc::new(DevicePool::build(&pool_cfg, &avail));
         let (svc, _join) =
-            ProjectionService::start(cfg, router, pool.clone(), None, metrics.clone());
+            ProjectionService::start(cfg, router, pool.clone(), None, metrics.clone(), None);
         (svc, metrics, pool)
     }
 

@@ -1,0 +1,570 @@
+//! Content-addressed sketch cache: the result plane's flagship
+//! projector.
+//!
+//! Under repeated-submit traffic (the zipfian shape real serving
+//! sees), most device passes recompute a sketch the plane already
+//! produced: the same operand, projected through the same
+//! signature-seeded operator, at the same width, tier and row offset,
+//! is the *same bytes* — operator identity is deterministic
+//! (`signature_seed`), operands are immutable behind their handles,
+//! and handles are never reissued. This cache addresses those
+//! artifacts by content key and serves them without touching a device:
+//!
+//! - **keys** ([`SketchKey`]): operand/stream id + projection
+//!   signature dims + artifact kind + operator base seed + precision
+//!   tier + row offset (stream chunks) + a secondary dim for derived
+//!   artifacts;
+//! - **values**: the device-pass outputs (range sketch `Y = G·Aᵀ`,
+//!   symmetric sketch `B = (G·A·Gᵀ)/m`, Nyström `(G·A, G·A·Gᵀ)` pair,
+//!   stream co-range passes), parked as [`OperandStore`] handles so
+//!   they ride the existing byte-quota/insert/free machinery, plus the
+//!   planned arm for response attribution;
+//! - **eviction**: LRU under the cache's own byte budget
+//!   (`cache_quota`, CLI `serve --cache-mb`), and immediate
+//!   invalidation when the source operand/stream is freed;
+//! - **coalescing**: a miss installs a pending slot; concurrent
+//!   lookups of the same key park on it and are served by the first
+//!   requester's single computation ([`Lookup::Miss`] leader +
+//!   `cache_coalesced` waiters).
+//!
+//! Every mutation is journaled to the [`EventLog`](super::events):
+//! [`Event::SketchComputed`] on publish, [`Event::Evicted`] on LRU
+//! pressure or invalidation — the cache is a synchronous materialised
+//! view (lookups gate the hot path; quota return must be prompt), with
+//! its state changes event-sourced for the other projectors.
+//!
+//! Correctness note: a cached value can never be *wrong*, only
+//! memory-stale. [`OperandId`]s/[`StreamId`]s are never reused, an
+//! operand is immutable while resident, and submission validates
+//! handles — so a key either names exactly the bytes that were
+//! computed, or the source is gone and no job can present the key
+//! again. Invalidation exists to return reserved bytes, not to guard
+//! results.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::events::{Event, EventLog};
+use super::metrics::Metrics;
+use super::request::Device;
+use super::store::{mat_bytes, OperandId, OperandStore};
+use super::stream::StreamId;
+use crate::linalg::{Mat, Precision};
+
+/// What a cache entry's source is: a resident operand handle or a
+/// sealed stream. Both id spaces are monotonic (never reissued), which
+/// is what makes id-keyed content addressing sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Source {
+    Operand(OperandId),
+    Stream(StreamId),
+}
+
+/// Which device-pass artifact a key names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Artifact {
+    /// Range sketch `Y = G·Aᵀ` (randsvd's range pass; Hutch++ shares
+    /// the keyspace at its range-split width).
+    Range,
+    /// Symmetric sketch `B = (G·A·Gᵀ)/m` (Hutchinson trace, triangles,
+    /// `SymmetricSketch` jobs).
+    Symmetric,
+    /// Nyström's `(G·A, G·(G·A)ᵀ)` projection pair, cached raw so the
+    /// `rcond`-dependent pinv stays outside the key.
+    Nystrom,
+    /// A sealed stream's symmetric completion `G·(S·A)ᵀ` (one-pass
+    /// Hutchinson).
+    StreamSym,
+    /// A sealed stream's co-range pass `G·Q` (one-pass randsvd); `aux`
+    /// carries the basis crop width.
+    StreamCorange,
+}
+
+/// Content address of one sketch artifact. Copyable; rides
+/// [`Event::SketchComputed`] / [`Event::Evicted`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SketchKey {
+    pub source: Source,
+    pub artifact: Artifact,
+    /// Projection input dimension (the operator signature's n).
+    pub n: usize,
+    /// Sketch width (the operator signature's m).
+    pub m: usize,
+    /// Operator base seed (`BatchConfig::seed`).
+    pub seed: u64,
+    /// Arithmetic tier the passes ran at.
+    pub tier: Precision,
+    /// Absolute row offset for stream-chunk passes; 0 for resident
+    /// operands and whole-stream artifacts.
+    pub row0: usize,
+    /// Secondary dimension for derived artifacts (e.g. the basis crop
+    /// width of [`Artifact::StreamCorange`]); 0 where unused.
+    pub aux: usize,
+}
+
+/// A served cache entry: the parked artifact matrices (in the order
+/// the compute path produced them) and the arm attribution recorded at
+/// compute time.
+#[derive(Clone)]
+pub struct Hit {
+    pub vals: Vec<Arc<Mat>>,
+    /// Arm the scheduler planned for the original passes (reported in
+    /// the response so hit/miss attribution stays comparable).
+    pub device: Device,
+}
+
+/// Outcome of [`SketchCache::lookup`].
+pub enum Lookup {
+    /// Served from cache — the caller skips its device passes.
+    Hit(Hit),
+    /// Not cached. `Some(guard)` makes the caller the computation
+    /// leader: it must [`MissGuard::publish`] the artifact (or drop
+    /// the guard to abort, waking coalesced waiters to recompute).
+    /// `None` means the cache is disabled, bypassed, or the job has no
+    /// cacheable source — compute without publishing.
+    Miss(Option<MissGuard>),
+}
+
+/// Leader token for an in-flight computation (the pending slot other
+/// requesters coalesce on). Dropping it unpublished aborts the slot.
+pub struct MissGuard {
+    cache: Arc<SketchCache>,
+    key: SketchKey,
+    done: bool,
+}
+
+impl MissGuard {
+    /// Park the computed artifact and wake coalesced waiters.
+    pub fn publish(mut self, vals: Vec<Arc<Mat>>, device: Device) {
+        self.done = true;
+        self.cache.publish(self.key, vals, device);
+    }
+}
+
+impl Drop for MissGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            self.cache.abort(self.key);
+        }
+    }
+}
+
+struct Entry {
+    vals: Vec<Arc<Mat>>,
+    ids: Vec<OperandId>,
+    device: Device,
+    bytes: usize,
+    /// Monotonic recency stamp (LRU victim = minimum).
+    tick: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: HashMap<SketchKey, Entry>,
+    /// Keys with a computation in flight (coalescing slots).
+    pending: std::collections::HashSet<SketchKey>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// The cache proper. Shared by workers (lookup/publish) and the
+/// session API (invalidation on free).
+pub struct SketchCache {
+    state: Mutex<CacheState>,
+    /// Signalled when a pending slot resolves or aborts.
+    resolved: Condvar,
+    /// Byte budget; 0 disables the cache entirely (every lookup is a
+    /// publish-free `Miss(None)` — the seed hot path, untouched).
+    quota: usize,
+    /// Operator base seed baked into every key.
+    seed: u64,
+    store: Arc<OperandStore>,
+    metrics: Arc<Metrics>,
+    events: Arc<EventLog>,
+}
+
+impl SketchCache {
+    pub fn new(
+        quota: usize,
+        seed: u64,
+        store: Arc<OperandStore>,
+        metrics: Arc<Metrics>,
+        events: Arc<EventLog>,
+    ) -> Self {
+        Self {
+            state: Mutex::new(CacheState::default()),
+            resolved: Condvar::new(),
+            quota,
+            seed,
+            store,
+            metrics,
+            events,
+        }
+    }
+
+    /// True when a byte budget was configured.
+    pub fn enabled(&self) -> bool {
+        self.quota > 0
+    }
+
+    /// Build a key for a resident/stream artifact at this server's
+    /// operator seed.
+    pub fn key(
+        &self,
+        source: Source,
+        artifact: Artifact,
+        n: usize,
+        m: usize,
+        tier: Precision,
+    ) -> SketchKey {
+        SketchKey { source, artifact, n, m, seed: self.seed, tier, row0: 0, aux: 0 }
+    }
+
+    /// Bytes currently parked.
+    pub fn bytes(&self) -> usize {
+        self.state.lock().unwrap().bytes
+    }
+
+    /// Number of parked entries.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `key`. `None` key or `bypass` short-circuits to an
+    /// unpublished miss. A lookup that finds a pending slot blocks
+    /// until the leader publishes (coalesced hit) or aborts (this
+    /// caller becomes the new leader).
+    pub fn lookup(self: &Arc<Self>, key: Option<SketchKey>, bypass: bool) -> Lookup {
+        let key = match key {
+            Some(k) if self.enabled() && !bypass => k,
+            _ => return Lookup::Miss(None),
+        };
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.entries.contains_key(&key) {
+                st.tick += 1;
+                let tick = st.tick;
+                let e = st.entries.get_mut(&key).expect("entry just observed");
+                e.tick = tick;
+                self.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Hit(Hit { vals: e.vals.clone(), device: e.device });
+            }
+            if st.pending.insert(key) {
+                self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Miss(Some(MissGuard {
+                    cache: Arc::clone(self),
+                    key,
+                    done: false,
+                }));
+            }
+            // A leader is computing this key: park until it resolves.
+            self.metrics.cache_coalesced.fetch_add(1, Ordering::Relaxed);
+            st = self.resolved.wait(st).unwrap();
+        }
+    }
+
+    /// Park a computed artifact (leader path; called via
+    /// [`MissGuard::publish`]). Values are inserted into the operand
+    /// store (byte-quota accounted, content-deduped); an over-quota
+    /// store or an artifact larger than the cache budget skips parking
+    /// — caching is an optimisation, never a correctness dependency.
+    fn publish(self: &Arc<Self>, key: SketchKey, vals: Vec<Arc<Mat>>, device: Device) {
+        let bytes: usize = vals.iter().map(|m| mat_bytes(m)).sum();
+        // The source may have been freed while we computed; parking a
+        // dead key would strand bytes until LRU pressure finds them.
+        let source_live = match key.source {
+            Source::Operand(id) => self.store.get(id).is_some(),
+            Source::Stream(_) => true,
+        };
+        if bytes == 0 || bytes > self.quota || !source_live {
+            self.abort(key);
+            return;
+        }
+        let mut ids = Vec::with_capacity(vals.len());
+        for v in &vals {
+            match self.store.insert(Arc::clone(v)) {
+                Ok(id) => ids.push(id),
+                Err(_) => {
+                    // Over-quota store: un-park what we inserted and
+                    // serve this one uncached.
+                    for id in ids {
+                        self.store.free(id);
+                    }
+                    self.abort(key);
+                    return;
+                }
+            }
+        }
+        let evicted = {
+            let mut st = self.state.lock().unwrap();
+            let evicted = self.evict_for(&mut st, bytes);
+            st.tick += 1;
+            let tick = st.tick;
+            st.bytes += bytes;
+            st.entries.insert(key, Entry { vals, ids, device, bytes, tick });
+            st.pending.remove(&key);
+            self.metrics.cache_bytes.store(st.bytes as u64, Ordering::Relaxed);
+            evicted
+        };
+        self.resolved.notify_all();
+        self.retire(evicted);
+        self.events.append(Event::SketchComputed { key, bytes });
+    }
+
+    /// Abort a pending slot (failed or abandoned computation): waiters
+    /// wake and the first to re-lookup becomes the new leader.
+    fn abort(&self, key: SketchKey) {
+        let mut st = self.state.lock().unwrap();
+        st.pending.remove(&key);
+        drop(st);
+        self.resolved.notify_all();
+    }
+
+    /// Pop LRU entries until `incoming` fits under the budget. Must be
+    /// called with the state lock held; returns the victims for
+    /// lock-free retirement.
+    fn evict_for(&self, st: &mut CacheState, incoming: usize) -> Vec<(SketchKey, Entry)> {
+        let mut out = Vec::new();
+        while st.bytes + incoming > self.quota && !st.entries.is_empty() {
+            let victim = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k)
+                .expect("non-empty map has a minimum");
+            let entry = st.entries.remove(&victim).expect("victim just observed");
+            st.bytes -= entry.bytes;
+            out.push((victim, entry));
+        }
+        self.metrics.cache_bytes.store(st.bytes as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Free victims' store handles and journal the evictions (outside
+    /// the cache lock — store/event hops don't belong under it).
+    fn retire(&self, victims: Vec<(SketchKey, Entry)>) {
+        for (key, entry) in victims {
+            for id in &entry.ids {
+                self.store.free(*id);
+            }
+            self.metrics.cache_evictions.fetch_add(1, Ordering::Relaxed);
+            self.events.append(Event::Evicted { key, bytes: entry.bytes });
+        }
+    }
+
+    /// Drop every entry derived from `source` and return its reserved
+    /// bytes — called synchronously from `free_operand`/`free_stream`
+    /// so quota return is prompt and deterministic.
+    pub fn invalidate(&self, source: Source) {
+        if !self.enabled() {
+            return;
+        }
+        let victims = {
+            let mut st = self.state.lock().unwrap();
+            let keys: Vec<SketchKey> =
+                st.entries.keys().filter(|k| k.source == source).copied().collect();
+            let mut victims = Vec::with_capacity(keys.len());
+            for k in keys {
+                let e = st.entries.remove(&k).expect("key just collected");
+                st.bytes -= e.bytes;
+                victims.push((k, e));
+            }
+            self.metrics.cache_bytes.store(st.bytes as u64, Ordering::Relaxed);
+            victims
+        };
+        self.retire(victims);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn harness(quota: usize) -> (Arc<SketchCache>, Arc<OperandStore>, Arc<EventLog>) {
+        let metrics = Arc::new(Metrics::default());
+        let store = Arc::new(OperandStore::with_metrics(usize::MAX, metrics.clone()));
+        let events = Arc::new(EventLog::new(256));
+        let cache = Arc::new(SketchCache::new(
+            quota,
+            0x9E37_79B9_7F4A_7C15,
+            store.clone(),
+            metrics,
+            events.clone(),
+        ));
+        (cache, store, events)
+    }
+
+    fn mat(seed: u64, n: usize) -> Arc<Mat> {
+        let data: Vec<f64> = (0..n * n).map(|i| ((seed * 31 + i as u64) % 97) as f64).collect();
+        Arc::new(Mat { rows: n, cols: n, data })
+    }
+
+    fn key_for(cache: &SketchCache, op: u64, m: usize) -> SketchKey {
+        cache.key(
+            Source::Operand(OperandId(op)),
+            Artifact::Symmetric,
+            16,
+            m,
+            Precision::F64,
+        )
+    }
+
+    #[test]
+    fn miss_publish_hit_roundtrip_parks_bytes_in_the_store() {
+        let (cache, store, _ev) = harness(1 << 20);
+        let k = key_for(&cache, 1, 8);
+        // Keys address live operands in production; park one under the id.
+        let src = store.insert(mat(42, 4)).unwrap();
+        let k = SketchKey { source: Source::Operand(src), ..k };
+        let guard = match cache.lookup(Some(k), false) {
+            Lookup::Miss(Some(g)) => g,
+            _ => panic!("cold lookup must lead"),
+        };
+        let v = mat(7, 8);
+        let bytes = mat_bytes(&v);
+        guard.publish(vec![v.clone()], Device::Host);
+        assert_eq!(cache.bytes(), bytes);
+        assert!(store.bytes() >= bytes, "values park as store handles");
+        match cache.lookup(Some(k), false) {
+            Lookup::Hit(h) => {
+                assert_eq!(h.device, Device::Host);
+                assert_eq!(h.vals[0].data, v.data);
+            }
+            _ => panic!("published key must hit"),
+        }
+        // Bypass forces the cold path even when the entry exists.
+        assert!(matches!(cache.lookup(Some(k), true), Lookup::Miss(None)));
+    }
+
+    #[test]
+    fn zero_quota_disables_every_path() {
+        let (cache, _store, ev) = harness(0);
+        let k = key_for(&cache, 1, 8);
+        assert!(!cache.enabled());
+        assert!(matches!(cache.lookup(Some(k), false), Lookup::Miss(None)));
+        cache.invalidate(Source::Operand(OperandId(1)));
+        assert_eq!(cache.bytes(), 0);
+        assert!(ev.is_empty(), "a disabled cache journals nothing");
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry_and_returns_store_bytes() {
+        let n = 8usize;
+        let one = n * n * std::mem::size_of::<f64>();
+        let (cache, store, ev) = harness(2 * one);
+        let srcs: Vec<OperandId> =
+            (0..3).map(|i| store.insert(mat(100 + i, 4)).unwrap()).collect();
+        let baseline = store.bytes();
+        for (i, src) in srcs.iter().enumerate() {
+            let k = SketchKey {
+                source: Source::Operand(*src),
+                ..key_for(&cache, 0, 8 + i)
+            };
+            match cache.lookup(Some(k), false) {
+                Lookup::Miss(Some(g)) => g.publish(vec![mat(i as u64, n)], Device::Host),
+                _ => panic!("cold lookup must lead"),
+            }
+        }
+        // Budget fits two entries: the first (coldest) was evicted.
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.bytes(), 2 * one);
+        assert_eq!(store.bytes(), baseline + 2 * one, "evicted bytes returned");
+        let k0 = SketchKey { source: Source::Operand(srcs[0]), ..key_for(&cache, 0, 8) };
+        assert!(matches!(cache.lookup(Some(k0), false), Lookup::Miss(Some(_))));
+        ev.sync();
+        assert!(ev.len() >= 4, "3 SketchComputed + 1 Evicted journaled");
+    }
+
+    #[test]
+    fn invalidate_drops_only_the_sources_entries() {
+        let (cache, store, _ev) = harness(1 << 20);
+        let a = store.insert(mat(1, 4)).unwrap();
+        let b = store.insert(mat(2, 4)).unwrap();
+        let baseline = store.bytes();
+        for (i, src) in [a, b].iter().enumerate() {
+            let k = SketchKey {
+                source: Source::Operand(*src),
+                ..key_for(&cache, 0, 8 + i)
+            };
+            match cache.lookup(Some(k), false) {
+                Lookup::Miss(Some(g)) => g.publish(vec![mat(i as u64, 8)], Device::Host),
+                _ => panic!(),
+            }
+        }
+        let parked = cache.bytes();
+        cache.invalidate(Source::Operand(a));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.bytes(), parked / 2);
+        assert_eq!(store.bytes(), baseline + parked / 2);
+        let ka = SketchKey { source: Source::Operand(a), ..key_for(&cache, 0, 8) };
+        assert!(
+            matches!(cache.lookup(Some(ka), false), Lookup::Miss(Some(_))),
+            "invalidated key never hits again"
+        );
+    }
+
+    #[test]
+    fn dropped_guard_aborts_so_the_next_lookup_leads() {
+        let (cache, store, _ev) = harness(1 << 20);
+        let src = store.insert(mat(3, 4)).unwrap();
+        let k = SketchKey { source: Source::Operand(src), ..key_for(&cache, 0, 8) };
+        match cache.lookup(Some(k), false) {
+            Lookup::Miss(Some(g)) => drop(g), // simulated compute failure
+            _ => panic!(),
+        }
+        assert!(
+            matches!(cache.lookup(Some(k), false), Lookup::Miss(Some(_))),
+            "aborted slot must not wedge the key"
+        );
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_identical_misses_coalesce_on_one_leader() {
+        let (cache, store, _ev) = harness(1 << 20);
+        let src = store.insert(mat(4, 4)).unwrap();
+        let k = SketchKey { source: Source::Operand(src), ..key_for(&cache, 0, 8) };
+        let leader = match cache.lookup(Some(k), false) {
+            Lookup::Miss(Some(g)) => g,
+            _ => panic!(),
+        };
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || match cache.lookup(Some(k), false) {
+                    Lookup::Hit(h) => h.vals[0].data.len(),
+                    _ => panic!("waiter must be served by the leader"),
+                })
+            })
+            .collect();
+        // Give the waiters time to park on the pending slot, then
+        // publish once.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        leader.publish(vec![mat(9, 8)], Device::Host);
+        for w in waiters {
+            assert_eq!(w.join().unwrap(), 64);
+        }
+        assert_eq!(cache.len(), 1, "one computation served every requester");
+    }
+
+    #[test]
+    fn publish_against_a_freed_source_is_skipped() {
+        let (cache, store, _ev) = harness(1 << 20);
+        let src = store.insert(mat(5, 4)).unwrap();
+        let k = SketchKey { source: Source::Operand(src), ..key_for(&cache, 0, 8) };
+        let guard = match cache.lookup(Some(k), false) {
+            Lookup::Miss(Some(g)) => g,
+            _ => panic!(),
+        };
+        store.free(src); // freed mid-computation
+        guard.publish(vec![mat(6, 8)], Device::Host);
+        assert_eq!(cache.len(), 0, "dead keys are not parked");
+        assert_eq!(cache.bytes(), 0);
+        assert_eq!(store.bytes(), 0, "no stranded value handles");
+    }
+}

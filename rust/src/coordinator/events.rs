@@ -1,0 +1,462 @@
+//! Event-sourced result plane: an append-only, seq-numbered log of
+//! job-lifecycle events with bounded-buffer fan-out to async
+//! *projectors* (the angzarr pattern).
+//!
+//! Every state change of the serving plane is journaled as an
+//! [`Event`]: submission ([`Event::Submitted`]), batch scheduling
+//! ([`Event::Resolved`], emitted by the batcher per flushed group),
+//! cache population/eviction ([`Event::SketchComputed`] /
+//! [`Event::Evicted`], emitted by the sketch cache in
+//! [`cache`](super::cache)), and terminal outcomes
+//! ([`Event::Completed`] / [`Event::Failed`] / [`Event::Cancelled`]).
+//!
+//! Projectors are independent consumers: each runs on its own thread,
+//! tracks its own cursor into the log, and materialises whatever view
+//! it wants from the ordered stream. The log's ring buffer is bounded
+//! (`cap`); an appender blocks only when the *slowest* projector is a
+//! full buffer behind — backpressure instead of unbounded growth or
+//! silent loss, so every projector observes every event exactly once
+//! and in sequence order. Two views ship here:
+//!
+//! - [`ArmTierView`] — live per-(arm, tier) scheduling counts built
+//!   from `Resolved` events (what the ad-hoc device counters showed,
+//!   now derived from the journal);
+//! - [`JobTrace`] — a replayable per-job event trail for postmortems
+//!   ([`JobTrace::replay`]).
+//!
+//! The flagship projector — the content-addressed sketch cache — lives
+//! in [`cache`](super::cache); its lookups and invalidations are
+//! synchronous (they gate the hot path and quota accounting) but every
+//! mutation it makes is journaled here, so the other views see cache
+//! activity through the same ordered stream.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::cache::SketchKey;
+use super::request::{Device, Priority};
+use crate::linalg::Precision;
+
+/// One journaled job-lifecycle event. Events are cheap to clone: the
+/// largest payload is a copyable [`SketchKey`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A job was admitted to the queue.
+    Submitted { job: u64, kind: &'static str, priority: Priority, tier: Precision },
+    /// The batcher flushed a merged group to an arm: the scheduling
+    /// decision (planned arm, arithmetic tier, merged width) that the
+    /// group's requests will ride.
+    Resolved { tier: Precision, arm: Device, cols: usize },
+    /// The sketch cache parked a freshly computed artifact.
+    SketchComputed { key: SketchKey, bytes: usize },
+    /// A job completed and its response was delivered (or dropped).
+    Completed { job: u64, latency_us: u64 },
+    /// A job failed (execution error or expired deadline).
+    Failed { job: u64 },
+    /// A job was cancelled before or at dequeue.
+    Cancelled { job: u64 },
+    /// The sketch cache dropped an artifact (LRU pressure or
+    /// operand/stream invalidation) and returned its bytes.
+    Evicted { key: SketchKey, bytes: usize },
+}
+
+struct LogState {
+    /// Retained events, oldest first; `ring[i].0` is its seq number.
+    ring: VecDeque<(u64, Event)>,
+    /// Seq number the next append receives.
+    next: u64,
+    closed: bool,
+}
+
+struct ProjectorSlot {
+    /// Next seq this projector will consume.
+    cursor: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The append-only event log. Cheap to share (`Arc`); appending takes
+/// one mutex hop, and blocks only when the ring is full *and* some
+/// projector still needs the oldest entry.
+pub struct EventLog {
+    state: Mutex<LogState>,
+    /// Signalled on append and on close (consumers wait here).
+    arrived: Condvar,
+    /// Signalled when a projector advances its cursor (appenders and
+    /// [`EventLog::sync`] wait here).
+    advanced: Condvar,
+    cap: usize,
+    projectors: Mutex<Vec<ProjectorSlot>>,
+}
+
+/// A materialised view over the event stream. `apply` is called once
+/// per event, in seq order, from the projector's own thread.
+pub trait Projector: Send + Sync + 'static {
+    fn apply(&self, seq: u64, event: &Event);
+}
+
+impl EventLog {
+    /// A log retaining at most `cap` unconsumed events (minimum 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(LogState { ring: VecDeque::new(), next: 0, closed: false }),
+            arrived: Condvar::new(),
+            advanced: Condvar::new(),
+            cap: cap.max(1),
+            projectors: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn min_cursor(&self) -> u64 {
+        let slots = self.projectors.lock().unwrap();
+        slots
+            .iter()
+            .map(|s| s.cursor.load(Ordering::Acquire))
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Append one event; returns its seq number. Blocks while the ring
+    /// is full and the slowest projector still needs its oldest entry
+    /// (bounded-buffer backpressure). After `close`, events are
+    /// journaled but no longer retained for projectors.
+    pub fn append(&self, event: Event) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // Retire the consumed prefix.
+            let min = self.min_cursor();
+            loop {
+                match st.ring.front() {
+                    Some((seq, _)) if *seq < min => {
+                        st.ring.pop_front();
+                    }
+                    _ => break,
+                }
+            }
+            if st.ring.len() < self.cap || st.closed {
+                break;
+            }
+            st = self.advanced.wait(st).unwrap();
+        }
+        let seq = st.next;
+        st.next += 1;
+        if !st.closed {
+            st.ring.push_back((seq, event));
+        }
+        drop(st);
+        self.arrived.notify_all();
+        seq
+    }
+
+    /// Seq number the next append will receive (= events journaled so
+    /// far).
+    pub fn len(&self) -> u64 {
+        self.state.lock().unwrap().next
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until every registered projector has consumed every event
+    /// journaled before this call — the determinism hook for tests and
+    /// shutdown.
+    pub fn sync(&self) {
+        let target = self.state.lock().unwrap().next;
+        let mut st = self.state.lock().unwrap();
+        while self.min_cursor() < target {
+            let (guard, timeout) = self
+                .advanced
+                .wait_timeout(st, std::time::Duration::from_millis(50))
+                .unwrap();
+            st = guard;
+            if timeout.timed_out() && st.closed {
+                break;
+            }
+        }
+    }
+
+    /// Spawn a projector thread that follows the log from seq 0 with
+    /// its own cursor. Must be called before events start flowing if
+    /// the projector is to see the full stream.
+    pub fn spawn(self: &Arc<Self>, name: &str, proj: Arc<dyn Projector>) {
+        let cursor = Arc::new(AtomicU64::new(0));
+        let log = Arc::clone(self);
+        let cur = Arc::clone(&cursor);
+        let handle = std::thread::Builder::new()
+            .name(format!("projector-{name}"))
+            .spawn(move || loop {
+                let batch = {
+                    let mut st = log.state.lock().unwrap();
+                    loop {
+                        let from = cur.load(Ordering::Acquire);
+                        let pending: Vec<(u64, Event)> = st
+                            .ring
+                            .iter()
+                            .filter(|(seq, _)| *seq >= from)
+                            .cloned()
+                            .collect();
+                        if !pending.is_empty() {
+                            break pending;
+                        }
+                        if st.closed {
+                            return;
+                        }
+                        st = log.arrived.wait(st).unwrap();
+                    }
+                };
+                for (seq, ev) in &batch {
+                    proj.apply(*seq, ev);
+                }
+                let last = batch.last().map(|(seq, _)| *seq).unwrap_or(0);
+                cur.store(last + 1, Ordering::Release);
+                log.advanced.notify_all();
+            })
+            .expect("spawn projector thread");
+        self.projectors
+            .lock()
+            .unwrap()
+            .push(ProjectorSlot { cursor, handle: Some(handle) });
+    }
+
+    /// Close the log: projector threads drain what they have and exit;
+    /// later appends are seq-numbered but not retained. Joins every
+    /// projector thread.
+    pub fn close(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.arrived.notify_all();
+        self.advanced.notify_all();
+        let mut slots = self.projectors.lock().unwrap();
+        for slot in slots.iter_mut() {
+            if let Some(h) = slot.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Live per-(arm, tier) scheduling view derived from `Resolved`
+/// events: how many merged groups (and how many total columns) each
+/// arm served at each arithmetic tier.
+#[derive(Default)]
+pub struct ArmTierView {
+    counts: Mutex<HashMap<(Device, Precision), (u64, u64)>>,
+}
+
+impl ArmTierView {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (groups, total columns) resolved to `(arm, tier)` so far.
+    pub fn resolved(&self, arm: Device, tier: Precision) -> (u64, u64) {
+        self.counts
+            .lock()
+            .unwrap()
+            .get(&(arm, tier))
+            .copied()
+            .unwrap_or((0, 0))
+    }
+
+    /// Snapshot of every (arm, tier) bucket, sorted by arm name then
+    /// tier for stable output.
+    pub fn snapshot(&self) -> Vec<((Device, Precision), (u64, u64))> {
+        let mut rows: Vec<_> =
+            self.counts.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect();
+        rows.sort_by_key(|((d, t), _)| (d.name(), format!("{t:?}")));
+        rows
+    }
+}
+
+impl Projector for ArmTierView {
+    fn apply(&self, _seq: u64, event: &Event) {
+        if let Event::Resolved { tier, arm, cols } = event {
+            let mut counts = self.counts.lock().unwrap();
+            let slot = counts.entry((*arm, *tier)).or_insert((0, 0));
+            slot.0 += 1;
+            slot.1 += *cols as u64;
+        }
+    }
+}
+
+/// How many jobs' trails [`JobTrace`] retains before forgetting the
+/// oldest (postmortems want recent history, not unbounded growth).
+const TRACE_JOBS: usize = 256;
+
+/// Replayable per-job event trail: every `Submitted` / `Completed` /
+/// `Failed` / `Cancelled` event of the last [`TRACE_JOBS`] jobs, in
+/// seq order.
+#[derive(Default)]
+pub struct JobTrace {
+    inner: Mutex<TraceState>,
+}
+
+#[derive(Default)]
+struct TraceState {
+    trails: HashMap<u64, Vec<(u64, Event)>>,
+    order: VecDeque<u64>,
+}
+
+impl JobTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The job's journaled trail (seq, event), oldest first; `None` if
+    /// the job is unknown or already aged out.
+    pub fn replay(&self, job: u64) -> Option<Vec<(u64, Event)>> {
+        self.inner.lock().unwrap().trails.get(&job).cloned()
+    }
+}
+
+impl Projector for JobTrace {
+    fn apply(&self, seq: u64, event: &Event) {
+        let job = match event {
+            Event::Submitted { job, .. }
+            | Event::Completed { job, .. }
+            | Event::Failed { job }
+            | Event::Cancelled { job } => *job,
+            _ => return,
+        };
+        let mut st = self.inner.lock().unwrap();
+        if !st.trails.contains_key(&job) {
+            st.order.push_back(job);
+            if st.order.len() > TRACE_JOBS {
+                if let Some(old) = st.order.pop_front() {
+                    st.trails.remove(&old);
+                }
+            }
+        }
+        st.trails.entry(job).or_default().push((seq, event.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn submitted(job: u64) -> Event {
+        Event::Submitted {
+            job,
+            kind: "trace",
+            priority: Priority::Batch,
+            tier: Precision::F64,
+        }
+    }
+
+    /// A projector that records every (seq, event) it sees.
+    #[derive(Default)]
+    struct Recorder {
+        seen: Mutex<Vec<(u64, Event)>>,
+    }
+
+    impl Projector for Recorder {
+        fn apply(&self, seq: u64, event: &Event) {
+            self.seen.lock().unwrap().push((seq, event.clone()));
+        }
+    }
+
+    #[test]
+    fn events_are_seq_numbered_and_delivered_in_order() {
+        let log = Arc::new(EventLog::new(64));
+        let rec = Arc::new(Recorder::default());
+        log.spawn("rec", rec.clone() as Arc<dyn Projector>);
+        for job in 0..10 {
+            let seq = log.append(submitted(job));
+            assert_eq!(seq, job);
+        }
+        log.sync();
+        let seen = rec.seen.lock().unwrap();
+        assert_eq!(seen.len(), 10);
+        for (i, (seq, ev)) in seen.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(*ev, submitted(i as u64));
+        }
+        drop(seen);
+        log.close();
+    }
+
+    #[test]
+    fn every_projector_sees_every_event_despite_a_tiny_ring() {
+        // cap 2 forces appenders to block on the slowest cursor; both
+        // projectors must still observe the full stream exactly once.
+        let log = Arc::new(EventLog::new(2));
+        let a = Arc::new(Recorder::default());
+        let b = Arc::new(Recorder::default());
+        log.spawn("a", a.clone() as Arc<dyn Projector>);
+        log.spawn("b", b.clone() as Arc<dyn Projector>);
+        let writer = {
+            let log = Arc::clone(&log);
+            std::thread::spawn(move || {
+                for job in 0..200 {
+                    log.append(submitted(job));
+                }
+            })
+        };
+        writer.join().unwrap();
+        log.sync();
+        for rec in [&a, &b] {
+            let seen = rec.seen.lock().unwrap();
+            assert_eq!(seen.len(), 200);
+            assert!(seen.windows(2).all(|w| w[0].0 + 1 == w[1].0), "gap in stream");
+        }
+        log.close();
+    }
+
+    #[test]
+    fn arm_tier_view_materializes_resolved_counts() {
+        let log = Arc::new(EventLog::new(64));
+        let view = Arc::new(ArmTierView::new());
+        log.spawn("view", view.clone() as Arc<dyn Projector>);
+        log.append(Event::Resolved { tier: Precision::F64, arm: Device::Host, cols: 8 });
+        log.append(Event::Resolved { tier: Precision::F64, arm: Device::Host, cols: 4 });
+        log.append(Event::Resolved { tier: Precision::F32, arm: Device::Opu, cols: 2 });
+        log.sync();
+        assert_eq!(view.resolved(Device::Host, Precision::F64), (2, 12));
+        assert_eq!(view.resolved(Device::Opu, Precision::F32), (1, 2));
+        assert_eq!(view.resolved(Device::Pjrt, Precision::F64), (0, 0));
+        assert_eq!(view.snapshot().len(), 2);
+        log.close();
+    }
+
+    #[test]
+    fn job_trace_replays_a_jobs_lifecycle_and_ages_out() {
+        let log = Arc::new(EventLog::new(64));
+        let trace = Arc::new(JobTrace::new());
+        log.spawn("trace", trace.clone() as Arc<dyn Projector>);
+        log.append(submitted(7));
+        log.append(Event::Resolved { tier: Precision::F64, arm: Device::Host, cols: 1 });
+        log.append(Event::Completed { job: 7, latency_us: 123 });
+        log.append(submitted(8));
+        log.append(Event::Failed { job: 8 });
+        log.sync();
+        let trail = trace.replay(7).expect("job 7 journaled");
+        assert_eq!(trail.len(), 2, "jobless Resolved must not ride a trail");
+        assert!(matches!(trail[0].1, Event::Submitted { job: 7, .. }));
+        assert!(matches!(trail[1].1, Event::Completed { job: 7, latency_us: 123 }));
+        assert!(trail[0].0 < trail[1].0, "trail keeps seq order");
+        let trail8 = trace.replay(8).expect("job 8 journaled");
+        assert!(matches!(trail8.last().unwrap().1, Event::Failed { job: 8 }));
+        assert!(trace.replay(99).is_none());
+        log.close();
+    }
+
+    #[test]
+    fn close_joins_projectors_and_sync_does_not_hang() {
+        let log = Arc::new(EventLog::new(4));
+        let rec = Arc::new(Recorder::default());
+        log.spawn("rec", rec.clone() as Arc<dyn Projector>);
+        log.append(submitted(1));
+        log.close();
+        // Appending after close is journaled (seq advances) but not
+        // retained; sync must not deadlock on it.
+        let seq = log.append(submitted(2));
+        assert_eq!(seq, 1);
+        log.sync();
+        assert_eq!(rec.seen.lock().unwrap().len(), 1);
+    }
+}

@@ -3,7 +3,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::request::Device;
+use crate::coordinator::request::{Device, Priority};
 
 /// Exponential latency histogram (microseconds, powers of two).
 const BUCKETS: usize = 32;
@@ -57,13 +57,57 @@ pub struct Metrics {
     /// Streams freed before they were sealed (client abort / drop); their
     /// quota bytes were released deterministically.
     pub streams_aborted: AtomicU64,
+    /// Gauge: bytes parked in the content-addressed sketch cache
+    /// (subset of `store_bytes` — cached artifacts live in the store).
+    pub cache_bytes: AtomicU64,
+    /// Sketch-cache lookups served without device passes (includes
+    /// coalesced waiters served by a leader's computation).
+    pub cache_hits: AtomicU64,
+    /// Sketch-cache lookups that led a fresh computation.
+    pub cache_misses: AtomicU64,
+    /// Lookups that parked on another requester's in-flight
+    /// computation instead of recomputing.
+    pub cache_coalesced: AtomicU64,
+    /// Cache entries dropped (LRU pressure or operand/stream
+    /// invalidation); their bytes returned to the store quota.
+    pub cache_evictions: AtomicU64,
+    /// Uploads that matched a resident operand byte-for-byte and were
+    /// served as a refcount bump on the existing handle.
+    pub operands_deduped: AtomicU64,
+    /// Projection requests that actually reached a batcher flush —
+    /// the ground truth for "a cache hit executed 0 device passes".
+    pub projections_executed: AtomicU64,
     latency_hist: LatencyHist,
+    /// Submit→pop wait of Interactive-class jobs (µs), stamped at pop.
+    wait_interactive: LatencyHist,
+    /// Submit→pop wait of Batch-class jobs (µs), stamped at pop.
+    wait_batch: LatencyHist,
 }
 
 #[derive(Default)]
 struct LatencyHist {
     buckets: [AtomicU64; BUCKETS],
     samples: Mutex<Vec<u64>>,
+}
+
+impl LatencyHist {
+    fn record(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < 100_000 {
+            s.push(us);
+        }
+    }
+
+    fn percentile(&self, p: f64) -> Option<f64> {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = s.iter().map(|&x| x as f64).collect();
+        Some(crate::stats::percentile(&mut v, p))
+    }
 }
 
 impl Metrics {
@@ -81,22 +125,32 @@ impl Metrics {
     }
 
     pub fn record_latency_us(&self, us: u64) {
-        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
-        self.latency_hist.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        let mut s = self.latency_hist.samples.lock().unwrap();
-        if s.len() < 100_000 {
-            s.push(us);
-        }
+        self.latency_hist.record(us);
     }
 
     /// Latency percentile over retained samples (None if empty).
     pub fn latency_percentile_us(&self, p: f64) -> Option<f64> {
-        let s = self.latency_hist.samples.lock().unwrap();
-        if s.is_empty() {
-            return None;
+        self.latency_hist.percentile(p)
+    }
+
+    /// Record one job's admission-queue wait (submit → pop), stamped
+    /// by the queue at pop so served-latency improvements are
+    /// attributable: skipped device time moves `latency_us` without
+    /// moving `queue_wait`; scheduling luck moves both.
+    pub fn record_queue_wait_us(&self, class: Priority, us: u64) {
+        match class {
+            Priority::Interactive => self.wait_interactive.record(us),
+            Priority::Batch => self.wait_batch.record(us),
         }
-        let mut v: Vec<f64> = s.iter().map(|&x| x as f64).collect();
-        Some(crate::stats::percentile(&mut v, p))
+    }
+
+    /// Queue-wait percentile of one scheduling class (None if that
+    /// class never popped).
+    pub fn queue_wait_percentile_us(&self, class: Priority, p: f64) -> Option<f64> {
+        match class {
+            Priority::Interactive => self.wait_interactive.percentile(p),
+            Priority::Batch => self.wait_batch.percentile(p),
+        }
     }
 
     pub fn device_counts(&self) -> (u64, u64, u64) {
@@ -124,7 +178,10 @@ impl Metrics {
              devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
              qos: cancelled={} expired={} busy={} queue_i={} queue_b={} \
              store_bytes={} copied_bytes={} adaptive_passes={} \
-             stream_chunks={} stream_bytes={} streams_aborted={} p50={}us p99={}us",
+             stream_chunks={} stream_bytes={} streams_aborted={} \
+             cache: bytes={} hits={} misses={} coalesced={} evictions={} \
+             deduped={} proj_exec={} \
+             wait_i_p50={}us wait_b_p50={}us p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -147,6 +204,15 @@ impl Metrics {
             self.stream_chunks.load(Ordering::Relaxed),
             self.stream_resident_bytes.load(Ordering::Relaxed),
             self.streams_aborted.load(Ordering::Relaxed),
+            self.cache_bytes.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.cache_coalesced.load(Ordering::Relaxed),
+            self.cache_evictions.load(Ordering::Relaxed),
+            self.operands_deduped.load(Ordering::Relaxed),
+            self.projections_executed.load(Ordering::Relaxed),
+            self.queue_wait_percentile_us(Priority::Interactive, 50.0).unwrap_or(0.0) as u64,
+            self.queue_wait_percentile_us(Priority::Batch, 50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
         )
@@ -204,6 +270,15 @@ mod tests {
         assert!(r.contains("adaptive_passes="));
         assert!(r.contains("stream_chunks="));
         assert!(r.contains("streams_aborted="));
+        assert!(r.contains("cache: bytes="));
+        assert!(r.contains("hits="));
+        assert!(r.contains("misses="));
+        assert!(r.contains("coalesced="));
+        assert!(r.contains("evictions="));
+        assert!(r.contains("deduped="));
+        assert!(r.contains("proj_exec="));
+        assert!(r.contains("wait_i_p50="));
+        assert!(r.contains("wait_b_p50="));
     }
 
     #[test]
@@ -218,5 +293,36 @@ mod tests {
         assert!(r.contains("busy=1"), "{r}");
         assert!(r.contains("queue_i=3"), "{r}");
         assert!(r.contains("store_bytes=4096"), "{r}");
+    }
+
+    #[test]
+    fn cache_counters_and_gauge_report() {
+        let m = Metrics::new();
+        m.cache_bytes.store(2048, Ordering::Relaxed);
+        m.cache_hits.fetch_add(7, Ordering::Relaxed);
+        m.cache_misses.fetch_add(2, Ordering::Relaxed);
+        m.cache_coalesced.fetch_add(3, Ordering::Relaxed);
+        m.cache_evictions.fetch_add(1, Ordering::Relaxed);
+        m.operands_deduped.fetch_add(4, Ordering::Relaxed);
+        m.projections_executed.fetch_add(9, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("cache: bytes=2048 hits=7 misses=2 coalesced=3 evictions=1"), "{r}");
+        assert!(r.contains("deduped=4"), "{r}");
+        assert!(r.contains("proj_exec=9"), "{r}");
+    }
+
+    #[test]
+    fn queue_wait_histograms_are_per_class() {
+        let m = Metrics::new();
+        assert!(m.queue_wait_percentile_us(Priority::Batch, 50.0).is_none());
+        m.record_queue_wait_us(Priority::Interactive, 10);
+        m.record_queue_wait_us(Priority::Interactive, 30);
+        m.record_queue_wait_us(Priority::Batch, 500);
+        let pi = m.queue_wait_percentile_us(Priority::Interactive, 99.0).unwrap();
+        let pb = m.queue_wait_percentile_us(Priority::Batch, 50.0).unwrap();
+        assert!(pi <= 30.0 + 1.0, "{pi}");
+        assert!((pb - 500.0).abs() < 1.0, "{pb}");
+        let r = m.report();
+        assert!(r.contains("wait_b_p50=500us"), "{r}");
     }
 }

@@ -44,13 +44,21 @@
 //! - [`queue`]   — bounded two-level (Interactive/Batch) admission queue
 //!   with cancellation: the QoS layer (deadlines, backpressure);
 //! - [`metrics`] — counters + latency percentiles + shard/reroute/QoS
-//!   stats and store/queue gauges;
-//! - [`request`] — job/response/QoS types (legacy [`Job`] shim included).
+//!   stats and store/queue/cache gauges;
+//! - [`request`] — job/response/QoS types (legacy [`Job`] shim included);
+//! - [`events`]  — the result plane's append-only job-lifecycle log with
+//!   bounded fan-out to async projectors (per-arm/tier view, job trace);
+//! - [`cache`]   — the flagship projector: a content-addressed
+//!   sketch/range-basis cache that serves repeated submissions without
+//!   device passes (LRU under `--cache-mb`, invalidated on free,
+//!   coalescing concurrent identical misses).
 //!
 //! See `docs/architecture.md` for the full request-path walkthrough and
 //! the "Sessions, handles, and plans" migration guide.
 
 pub mod batcher;
+pub mod cache;
+pub mod events;
 pub mod metrics;
 pub mod plan;
 pub mod pool;
@@ -63,6 +71,8 @@ pub mod store;
 pub mod stream;
 
 pub use batcher::{signature_seed, BatchConfig, ProjectionService};
+pub use cache::{Artifact, SketchCache, SketchKey, Source};
+pub use events::{ArmTierView, Event, EventLog, JobTrace, Projector};
 pub use metrics::Metrics;
 pub use plan::{Plan, PlanError, PlanResult};
 pub use pool::{DeviceId, DevicePool, PoolConfig, PoolDevice};

@@ -36,6 +36,14 @@
 //! operands; an svd/scalar/vector stage has no stage handle, so wire Q
 //! into a second plan (or plain `submit_spec`) via its aux handle.
 //!
+//! Plans ride the result plane's sketch cache like any other
+//! submission: each stage resolves its `Stage(i)` refs to store handles
+//! *before* execution, so a handle-addressed stage both consults the
+//! content-addressed cache and seeds it for later plans or direct
+//! submits of the same (operand, sketch, tier). Pass
+//! [`SubmitOptions::bypass_cache`](crate::coordinator::SubmitOptions::bypass_cache)
+//! to force every stage down the compute path.
+//!
 //! [`OperandStore`]: crate::coordinator::store::OperandStore
 //! [`JobResponse::aux`]: crate::coordinator::request::JobResponse
 

@@ -28,6 +28,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::cache::Source;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{JobError, JobResponse, Priority, ResolvedJob, SubmitError};
 use crate::linalg::Precision;
@@ -47,6 +48,13 @@ pub(crate) struct QueuedJob {
     /// [`PrecisionPolicy`](crate::coordinator::PrecisionPolicy) at
     /// submit time — what the worker hands the projection service.
     pub precision: Precision,
+    /// Identity of the job's primary operand/stream, captured at
+    /// submit for sketch-cache keying (`None` for inline operands and
+    /// uncacheable kinds — those always take the compute path).
+    pub source: Option<Source>,
+    /// Per-job cache opt-out (`SubmitOptions::bypass_cache`): neither
+    /// serve from nor publish to the sketch cache.
+    pub bypass_cache: bool,
 }
 
 struct State {
@@ -160,11 +168,13 @@ impl JobQueue {
             if drainable {
                 if let Some(job) = s.interactive.pop_front() {
                     self.metrics.queue_interactive.fetch_sub(1, Ordering::Relaxed);
+                    self.stamp_wait(&job);
                     self.space.notify_all();
                     return Some(job);
                 }
                 if let Some(job) = s.batch.pop_front() {
                     self.metrics.queue_batch.fetch_sub(1, Ordering::Relaxed);
+                    self.stamp_wait(&job);
                     self.space.notify_all();
                     return Some(job);
                 }
@@ -174,6 +184,16 @@ impl JobQueue {
             }
             s = self.cond.wait(s).unwrap();
         }
+    }
+
+    /// Record the popped job's admission wait into the per-class
+    /// queue-wait histogram. Stamped *at pop* so the measurement is
+    /// pure scheduling delay — it cannot absorb any execution time,
+    /// which keeps cache-hit latency wins attributable to skipped
+    /// device passes rather than queue luck.
+    fn stamp_wait(&self, job: &QueuedJob) {
+        let us = job.submitted.elapsed().as_micros() as u64;
+        self.metrics.record_queue_wait_us(job.priority, us);
     }
 
     /// Remove a still-queued job by id. The job's ticket resolves to
@@ -257,6 +277,8 @@ mod tests {
                 cancelled: Arc::new(AtomicBool::new(false)),
                 priority,
                 precision: Precision::F64,
+                source: None,
+                bypass_cache: false,
             },
             rx,
         )
@@ -382,6 +404,23 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.resume();
         assert_eq!(h.join().unwrap(), Some(1));
+    }
+
+    #[test]
+    fn pop_stamps_per_class_queue_wait() {
+        let m = Arc::new(Metrics::new());
+        let q = JobQueue::new(4, m.clone());
+        q.push(job(1, Priority::Batch).0).unwrap();
+        q.push(job(2, Priority::Interactive).0).unwrap();
+        assert!(
+            m.queue_wait_percentile_us(Priority::Batch, 50.0).is_none(),
+            "wait is stamped at pop, not push"
+        );
+        assert_eq!(q.pop().unwrap().priority, Priority::Interactive);
+        assert!(m.queue_wait_percentile_us(Priority::Interactive, 50.0).is_some());
+        assert!(m.queue_wait_percentile_us(Priority::Batch, 50.0).is_none());
+        q.pop();
+        assert!(m.queue_wait_percentile_us(Priority::Batch, 50.0).is_some());
     }
 
     #[test]

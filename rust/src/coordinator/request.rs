@@ -345,6 +345,11 @@ pub struct SubmitOptions {
     /// loose enough for the cheaper tier; exact-contract jobs never
     /// move.
     pub precision: Precision,
+    /// Opt this submission out of the content-addressed sketch cache:
+    /// neither serve from nor publish to it (default `false` — cache
+    /// allowed). The forced-cold-path knob for measurement and for
+    /// jobs whose artifacts should not occupy cache bytes.
+    pub bypass_cache: bool,
 }
 
 impl SubmitOptions {
@@ -360,6 +365,13 @@ impl SubmitOptions {
     /// Request a specific arithmetic tier for this submission.
     pub fn with_precision(mut self, p: Precision) -> Self {
         self.precision = p;
+        self
+    }
+
+    /// Force the cold path: skip sketch-cache lookup *and* publication
+    /// for this submission.
+    pub fn bypass_cache(mut self) -> Self {
+        self.bypass_cache = true;
         self
     }
 }
@@ -757,5 +769,16 @@ mod tests {
         assert_eq!(o.precision, Precision::Bf16);
         assert_eq!(o.priority, Priority::Interactive);
         assert_eq!(o.deadline, Some(Duration::from_millis(3)));
+    }
+
+    #[test]
+    fn default_options_allow_the_cache_and_bypass_rides_along() {
+        assert!(!SubmitOptions::default().bypass_cache, "cache allowed by default");
+        let o = SubmitOptions::interactive()
+            .bypass_cache()
+            .with_precision(Precision::F32);
+        assert!(o.bypass_cache);
+        assert_eq!(o.priority, Priority::Interactive);
+        assert_eq!(o.precision, Precision::F32);
     }
 }

@@ -28,6 +28,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::batcher::{BatchConfig, ProjectionService};
+use crate::coordinator::cache::{Artifact, Lookup, SketchCache, SketchKey, Source};
+use crate::coordinator::events::{ArmTierView, Event, EventLog, JobTrace, Projector};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::plan::{resolve_stage_refs, Plan, PlanResult};
 use crate::coordinator::pool::{DeviceId, DevicePool, PoolConfig};
@@ -53,6 +55,10 @@ use crate::runtime::{PjrtEngine, PjrtHandle};
 /// (`RandSvd { tol: Some(_) }` jobs; see
 /// [`crate::randnla::adaptive::block_width`]).
 pub const ADAPTIVE_RANGE_BLOCK: usize = 8;
+
+/// Ring capacity of the result plane's event log: appenders block only
+/// when the slowest projector trails by this many events.
+const EVENT_LOG_CAP: usize = 4096;
 
 /// Coordinator configuration.
 pub struct CoordinatorConfig {
@@ -82,6 +88,11 @@ pub struct CoordinatorConfig {
     /// (default), force one tier server-wide, or let accuracy contracts
     /// buy cheaper tiers. See [`PrecisionPolicy`].
     pub precision: PrecisionPolicy,
+    /// Byte budget of the content-addressed sketch cache (CLI
+    /// `serve --cache-mb`). 0 — the default — disables the cache
+    /// entirely: every submission takes the compute path, bit-for-bit
+    /// the pre-cache behavior. See [`crate::coordinator::cache`].
+    pub cache_quota: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +108,7 @@ impl Default for CoordinatorConfig {
             store_quota: usize::MAX,
             stream_chunk_rows: 256,
             precision: PrecisionPolicy::Requested,
+            cache_quota: 0,
         }
     }
 }
@@ -115,6 +127,16 @@ pub struct Coordinator {
     /// with the job and rides back in [`JobResponse::precision`]).
     precision: PrecisionPolicy,
     pub metrics: Arc<Metrics>,
+    /// The result plane: append-only job-lifecycle journal fanned out
+    /// to async projectors.
+    events: Arc<EventLog>,
+    /// Flagship projector: content-addressed sketch cache (disabled at
+    /// `cache_quota: 0`).
+    cache: Arc<SketchCache>,
+    /// Live per-(arm, tier) scheduling view (projector).
+    arm_tier: Arc<ArmTierView>,
+    /// Replayable per-job event trail (projector).
+    job_trace: Arc<JobTrace>,
     next_id: AtomicU64,
     // Keep the engine alive for the coordinator's lifetime.
     _engine: Option<PjrtEngine>,
@@ -165,16 +187,33 @@ impl Coordinator {
         let router = Router::new(cfg.policy, avail)
             .with_host_sketch(cfg.host_sketch)
             .with_precision(cfg.precision);
+
+        // The result plane comes up before any event source: projectors
+        // registered here observe the journal from seq 0.
+        let events = Arc::new(EventLog::new(EVENT_LOG_CAP));
+        let arm_tier = Arc::new(ArmTierView::new());
+        let job_trace = Arc::new(JobTrace::new());
+        events.spawn("arm-tier", arm_tier.clone() as Arc<dyn Projector>);
+        events.spawn("job-trace", job_trace.clone() as Arc<dyn Projector>);
+
         let (svc, _batcher_join) = ProjectionService::start(
             cfg.batch.clone(),
             router,
             pool.clone(),
             handle,
             metrics.clone(),
+            Some(events.clone()),
         );
 
         let store = Arc::new(OperandStore::with_metrics(cfg.store_quota, metrics.clone()));
         let streams = Arc::new(StreamRegistry::new(store.clone(), metrics.clone()));
+        let cache = Arc::new(SketchCache::new(
+            cfg.cache_quota,
+            cfg.batch.seed,
+            store.clone(),
+            metrics.clone(),
+            events.clone(),
+        ));
         let queue = Arc::new(JobQueue::new(cfg.queue_cap, metrics.clone()));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
@@ -182,10 +221,12 @@ impl Coordinator {
             let svc = svc.clone();
             let store = store.clone();
             let metrics = metrics.clone();
+            let cache = cache.clone();
+            let events = events.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{w}"))
-                    .spawn(move || worker_loop(queue, svc, store, metrics))
+                    .spawn(move || worker_loop(queue, svc, store, metrics, cache, events))
                     .expect("spawn worker"),
             );
         }
@@ -200,6 +241,10 @@ impl Coordinator {
             stream_chunk_rows: cfg.stream_chunk_rows.max(1),
             precision: cfg.precision,
             metrics,
+            events,
+            cache,
+            arm_tier,
+            job_trace,
             next_id: AtomicU64::new(1),
             _engine: engine,
         })
@@ -212,9 +257,16 @@ impl Coordinator {
     }
 
     /// Drop the store's reference to an operand (in-flight jobs holding
-    /// the `Arc` finish unaffected).
+    /// the `Arc` finish unaffected). When the last reference goes (a
+    /// content-deduped upload may hold more), every sketch-cache entry
+    /// derived from the operand is evicted synchronously — its reserved
+    /// bytes return before this call does.
     pub fn free_operand(&self, id: OperandId) -> bool {
-        self.store.free(id)
+        let freed = self.store.free(id);
+        if freed && self.store.get(id).is_none() {
+            self.cache.invalidate(Source::Operand(id));
+        }
+        freed
     }
 
     /// The operand store (byte accounting, direct `get`).
@@ -251,9 +303,14 @@ impl Coordinator {
 
     /// Drop a stream and release its quota bytes deterministically
     /// (an unsealed stream counts as aborted). In-flight jobs holding
-    /// the sealed summaries finish unaffected.
+    /// the sealed summaries finish unaffected. Sketch-cache entries
+    /// derived from the stream are evicted synchronously.
     pub fn free_stream(&self, id: StreamId) -> bool {
-        self.streams.free(id)
+        let freed = self.streams.free(id);
+        if freed {
+            self.cache.invalidate(Source::Stream(id));
+        }
+        freed
     }
 
     /// The stream registry (tests, diagnostics).
@@ -265,8 +322,9 @@ impl Coordinator {
     /// of unbounded queueing: [`SubmitError::Busy`] is the backpressure
     /// signal, [`SubmitError::UnknownOperand`] a stale handle.
     pub fn submit_spec(&self, spec: JobSpec, opts: SubmitOptions) -> Result<Ticket, SubmitError> {
+        let source = cache_source(&spec);
         let job = self.resolve(spec)?;
-        self.submit_resolved(job, opts)
+        self.submit_resolved(job, source, opts)
     }
 
     /// Submit with *blocking* admission: instead of refusing with
@@ -280,17 +338,19 @@ impl Coordinator {
         spec: JobSpec,
         opts: SubmitOptions,
     ) -> Result<Ticket, SubmitError> {
+        let source = cache_source(&spec);
         let job = self.resolve(spec)?;
-        self.submit_resolved_with(job, opts, true)
+        self.submit_resolved_with(job, source, opts, true)
     }
 
     /// Queue an already-resolved job, refusing with `Busy` when full.
     fn submit_resolved(
         &self,
         job: ResolvedJob,
+        source: Option<Source>,
         opts: SubmitOptions,
     ) -> Result<Ticket, SubmitError> {
-        self.submit_resolved_with(job, opts, false)
+        self.submit_resolved_with(job, source, opts, false)
     }
 
     /// Shared enqueue: `wait` picks between bounded-refusal `push` and
@@ -298,6 +358,7 @@ impl Coordinator {
     fn submit_resolved_with(
         &self,
         job: ResolvedJob,
+        source: Option<Source>,
         opts: SubmitOptions,
         wait: bool,
     ) -> Result<Ticket, SubmitError> {
@@ -311,6 +372,7 @@ impl Coordinator {
         // with its *effective* tier, so workers never re-consult policy
         // (and the response reports exactly what ran).
         let precision = self.precision.resolve(opts.precision, tol_contract(&job));
+        let kind = job.kind();
         let queued = QueuedJob {
             id,
             job,
@@ -320,7 +382,18 @@ impl Coordinator {
             cancelled: cancelled.clone(),
             priority: opts.priority,
             precision,
+            source,
+            bypass_cache: opts.bypass_cache,
         };
+        // Journaled before the push so a fast worker can never journal
+        // the job's completion ahead of its submission; a refused push
+        // closes the trail with `Failed` below.
+        self.events.append(Event::Submitted {
+            job: id,
+            kind,
+            priority: opts.priority,
+            tier: precision,
+        });
         let pushed = if wait { self.queue.push_wait(queued) } else { self.queue.push(queued) };
         match pushed {
             Ok(()) => {
@@ -339,6 +412,8 @@ impl Coordinator {
                 if matches!(e, SubmitError::Busy { .. }) {
                     self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
                 }
+                // Close the journaled trail: the job never ran.
+                self.events.append(Event::Failed { job: id });
                 Err(e)
             }
         }
@@ -362,11 +437,13 @@ impl Coordinator {
     /// queue's space condvar (bounded memory, same eventual completion)
     /// rather than failing jobs a legacy caller has no way to retry.
     pub fn submit(&self, job: Job) -> Ticket {
-        let resolved = match self.resolve(job.into_spec()) {
+        let spec = job.into_spec();
+        let source = cache_source(&spec);
+        let resolved = match self.resolve(spec) {
             Ok(r) => r,
             Err(e) => return Self::rejected_ticket(e),
         };
-        match self.submit_resolved_with(resolved, SubmitOptions::default(), true) {
+        match self.submit_resolved_with(resolved, source, SubmitOptions::default(), true) {
             Ok(t) => t,
             Err(e) => Self::rejected_ticket(e),
         }
@@ -419,6 +496,11 @@ impl Coordinator {
         for (idx, spec) in plan.stages().iter().enumerate() {
             let spec = resolve_stage_refs(idx, spec.clone(), stage_handles)
                 .map_err(JobError::Plan)?;
+            // Stage refs resolved to store handles above, so plan
+            // stages participate in the sketch cache like any
+            // handle-path submission (and a stage output that dedups
+            // onto an existing operand inherits its cached artifacts).
+            let source = cache_source(&spec);
             let job = match self.resolve(spec) {
                 Ok(job) => job,
                 Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
@@ -429,7 +511,7 @@ impl Coordinator {
             // stages. The executor runs on the submitter's thread (not
             // a worker), so blocking on the queue's space condvar is
             // safe (and poll-free).
-            let resp = match self.submit_resolved_with(job, opts, true) {
+            let resp = match self.submit_resolved_with(job, source, opts, true) {
                 Ok(t) => t.wait()?,
                 Err(SubmitError::Closed) => return Err(JobError::QueueClosed),
                 Err(other) => return Err(JobError::Rejected(other)),
@@ -555,6 +637,28 @@ impl Coordinator {
         self.svc.clone()
     }
 
+    /// The result plane's event log (diagnostics; `sync()` is the
+    /// determinism hook for tests that assert on projector views).
+    pub fn events(&self) -> &Arc<EventLog> {
+        &self.events
+    }
+
+    /// The content-addressed sketch cache (gauges, tests).
+    pub fn cache(&self) -> &SketchCache {
+        &self.cache
+    }
+
+    /// Live per-(arm, tier) scheduling view, materialised from
+    /// `Resolved` events.
+    pub fn arm_tier_view(&self) -> &ArmTierView {
+        &self.arm_tier
+    }
+
+    /// Replayable per-job event trail for postmortems.
+    pub fn job_trace(&self) -> &JobTrace {
+        &self.job_trace
+    }
+
     /// The execution plane's device pool (metrics, chaos testing).
     pub fn pool(&self) -> &DevicePool {
         &self.pool
@@ -576,12 +680,16 @@ impl Coordinator {
         format!("{}\n{}", self.metrics.report(), self.pool.report())
     }
 
-    /// Drain and stop all workers.
+    /// Drain and stop all workers, then close the result plane (every
+    /// event the workers journaled is delivered before projector
+    /// threads join).
     pub fn shutdown(mut self) {
         self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.events.sync();
+        self.events.close();
     }
 }
 
@@ -593,6 +701,10 @@ impl Drop for Coordinator {
     /// proper `shutdown`.
     fn drop(&mut self) {
         self.queue.close();
+        // Idempotent after `shutdown`; for a dropped-without-shutdown
+        // coordinator it unparks and joins the projector threads (late
+        // worker appends are journaled but not retained).
+        self.events.close();
     }
 }
 
@@ -612,16 +724,38 @@ fn tol_contract(job: &ResolvedJob) -> Option<f64> {
     }
 }
 
+/// The cache identity a spec addresses: its primary operand when that
+/// is a store handle or a sealed stream. Inline payloads and
+/// sketch-domain inputs (`TraceOf`/`TrianglesOf`) have no stable
+/// identity to key on; `Lstsq`/`ApproxMatmul` carry client-side data
+/// (the rhs / second factor) outside any handle, so a source id would
+/// not content-address their passes.
+fn cache_source(spec: &JobSpec) -> Option<Source> {
+    match spec {
+        JobSpec::Trace { a: OperandRef::Handle(id), .. }
+        | JobSpec::Triangles { adjacency: OperandRef::Handle(id), .. }
+        | JobSpec::SymmetricSketch { a: OperandRef::Handle(id), .. }
+        | JobSpec::RandSvd { a: OperandRef::Handle(id), .. }
+        | JobSpec::Nystrom { a: OperandRef::Handle(id), .. } => Some(Source::Operand(*id)),
+        JobSpec::Trace { a: OperandRef::Stream(id), .. }
+        | JobSpec::RandSvd { a: OperandRef::Stream(id), .. } => Some(Source::Stream(*id)),
+        _ => None,
+    }
+}
+
 fn worker_loop(
     queue: Arc<JobQueue>,
     svc: ProjectionService,
     store: Arc<OperandStore>,
     metrics: Arc<Metrics>,
+    cache: Arc<SketchCache>,
+    events: Arc<EventLog>,
 ) {
     while let Some(q) = queue.pop() {
         // QoS gates, checked before any device is touched.
         if q.cancelled.load(Ordering::SeqCst) {
             metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            events.append(Event::Cancelled { job: q.id });
             let _ = q.resp.send(Err(JobError::Cancelled));
             continue;
         }
@@ -629,17 +763,29 @@ fn worker_loop(
             let waited = q.submitted.elapsed();
             if waited > deadline {
                 metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                events.append(Event::Failed { job: q.id });
                 let _ = q.resp.send(Err(JobError::DeadlineExceeded { deadline, waited }));
                 continue;
             }
         }
-        match execute_job(&svc, &store, &metrics, &q.job, q.precision) {
+        let outcome = execute_job(
+            &svc,
+            &store,
+            &metrics,
+            &cache,
+            &q.job,
+            q.precision,
+            q.source,
+            q.bypass_cache,
+        );
+        match outcome {
             Ok((payload, device, batched_cols, aux)) => {
                 // fetch_add returns the prior count: a coordinator-wide
                 // completion sequence number (QoS ordering observable).
                 let seq = metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let latency_us = q.submitted.elapsed().as_micros() as u64;
                 metrics.record_latency_us(latency_us);
+                events.append(Event::Completed { job: q.id, latency_us });
                 let published: Vec<OperandId> = aux.iter().map(|(_, id)| *id).collect();
                 let delivered = q.resp.send(Ok(JobResponse {
                     id: q.id,
@@ -663,6 +809,7 @@ fn worker_loop(
             }
             Err(e) => {
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                events.append(Event::Failed { job: q.id });
                 let _ = q.resp.send(Err(JobError::Failed(e.to_string())));
             }
         }
@@ -682,12 +829,24 @@ type ExecOutcome = (Payload, Device, usize, Vec<(&'static str, OperandId)>);
 /// (f64 today), so the consumer's second pass stays on that tier —
 /// mixing tiers across the two halves of one estimator would change
 /// the arithmetic mid-estimate.
+///
+/// `source`/`bypass` drive the sketch cache: when the job's primary
+/// operand has a stable identity and the cache is enabled, the device
+/// passes of the cacheable kinds (symmetric sketches, range passes,
+/// Nyström pairs, stream completions) are looked up first — a hit
+/// skips the projection service entirely (`projections_executed`
+/// stands still) and the deterministic host algebra downstream
+/// reproduces the cold-path result bit for bit.
+#[allow(clippy::too_many_arguments)]
 fn execute_job(
     svc: &ProjectionService,
     store: &OperandStore,
     metrics: &Metrics,
+    cache: &Arc<SketchCache>,
     job: &ResolvedJob,
     precision: Precision,
+    source: Option<Source>,
+    bypass: bool,
 ) -> Result<ExecOutcome> {
     match job {
         ResolvedJob::Projection { data, m } => {
@@ -717,7 +876,8 @@ fn execute_job(
         }
         ResolvedJob::Trace { a, m, estimator } => match estimator {
             TraceEstimator::Hutchinson => {
-                let (b, device, cols) = symmetric_sketch_via(svc, a, *m, precision)?;
+                let (b, device, cols) =
+                    symmetric_sketch_cached(svc, cache, source, bypass, 0, a, *m, precision)?;
                 Ok((Payload::Scalar(b.trace()), device, cols, Vec::new()))
             }
             TraceEstimator::HutchPP => {
@@ -731,33 +891,51 @@ fn execute_job(
                     split.range,
                     a.rows
                 );
-                // Range pass: Y = A Omega^T through the service. The
-                // residual pass below addresses the *different*
-                // (n, split.resid) signature, so its probes realise an
-                // operator independent of the range columns — the
-                // unbiasedness requirement. (No same-arm constraint
+                // Range pass: Y = A Omega^T through the service — the
+                // same cached keyspace as randsvd's range pass, at the
+                // split's width. The residual pass below addresses the
+                // *different* (n, split.resid) signature, so its probes
+                // realise an operator independent of the range columns —
+                // the unbiasedness requirement. (No same-arm constraint
                 // between the two: independent operators are the point.)
-                let yr = svc.project_at(a.transpose(), split.range, precision)?;
-                let q = linalg::orthonormalize(&yr.result.transpose());
+                // The residual sketch is cacheable too: the deflated
+                // operand is a deterministic function of (operand,
+                // split.range, operator), which the key's `aux` field
+                // pins (aux > 0 keeps it apart from plain symmetric
+                // sketches of the undeflated operand).
+                let (yr, _yr_device, yr_cols) =
+                    range_pass_cached(svc, cache, source, bypass, a, split.range, precision)?;
+                let q = linalg::orthonormalize(&yr.transpose());
                 let head = matmul_tn(&q, &linalg::matmul(a, &q)).trace();
                 let a_def = Arc::new(hutchpp::deflate(a, &q));
-                let (b, device, cols) = symmetric_sketch_via(svc, &a_def, split.resid, precision)?;
+                let (b, device, cols) = symmetric_sketch_cached(
+                    svc,
+                    cache,
+                    source,
+                    bypass,
+                    split.range,
+                    &a_def,
+                    split.resid,
+                    precision,
+                )?;
                 Ok((
                     Payload::Scalar(head + b.trace()),
                     device,
-                    yr.batch_cols.max(cols),
+                    yr_cols.max(cols),
                     Vec::new(),
                 ))
             }
         },
         ResolvedJob::Triangles { adjacency, m } => {
-            let (b, device, cols) = symmetric_sketch_via(svc, adjacency, *m, precision)?;
+            let (b, device, cols) =
+                symmetric_sketch_cached(svc, cache, source, bypass, 0, adjacency, *m, precision)?;
             let t = linalg::trace_cubed(&b) / 6.0;
             Ok((Payload::Scalar(t), device, cols, Vec::new()))
         }
         ResolvedJob::SymmetricSketch { a, m } => {
-            let (b, device, cols) = symmetric_sketch_via(svc, a, *m, precision)?;
-            Ok((Payload::Matrix(b), device, cols, Vec::new()))
+            let (b, device, cols) =
+                symmetric_sketch_cached(svc, cache, source, bypass, 0, a, *m, precision)?;
+            Ok((Payload::Matrix(b.as_ref().clone()), device, cols, Vec::new()))
         }
         ResolvedJob::TraceOf { b } => {
             anyhow::ensure!(b.is_square(), "trace_of needs a square sketch");
@@ -780,10 +958,18 @@ fn execute_job(
             // readings so rank selection never rescans the operand.
             let (mut q, mut b, device, batch_cols, gate) = match tol {
                 None => {
-                    // Randomization step: Y^T = G A^T through the service.
-                    let r = svc.project_at(a.transpose(), cap, precision)?;
-                    let q = linalg::orthonormalize(&r.result.transpose());
-                    (q, None, r.device, r.batch_cols, None)
+                    // Randomization step: Y^T = G A^T through the
+                    // service, served from the sketch cache when this
+                    // (operand, cap, tier) was projected before. The
+                    // key is the raw pass (not Q): power iterations,
+                    // rank/oversample splits of equal cap and publish_q
+                    // all share one cached artifact, and the
+                    // deterministic host algebra below reproduces the
+                    // cold path bit for bit.
+                    let (y, device, cols) =
+                        range_pass_cached(svc, cache, source, bypass, a, cap, precision)?;
+                    let q = linalg::orthonormalize(&y.transpose());
+                    (q, None, device, cols, None)
                 }
                 Some(t) => {
                     let (res, device, cols) = adaptive_range_via(
@@ -894,14 +1080,30 @@ fn execute_job(
                 s.sketch_m
             );
             let arm = stream_arm(s)?;
-            // Second half of the symmetric sketch B = (S A Sᵀ)/m: the
-            // accumulated S·A plays the resident path's first pass, and
-            // this projection addresses the same (rows, m) signature —
-            // kind affinity keeps it on the arm the chunks used.
-            let gst = svc.project(s.sa.transpose(), *m)?;
-            ensure_same_arm(arm, gst.planned, "trace(stream)")?;
-            let b = gst.result.transpose().scale(1.0 / *m as f64);
-            Ok((Payload::Scalar(b.trace()), gst.device, gst.batch_cols, Vec::new()))
+            // Stream completions run at the ingestion tier (f64 today;
+            // see the module note on tier coherence), so that is the
+            // tier the cache key pins — not the submission's.
+            let key = source
+                .map(|src| cache.key(src, Artifact::StreamSym, s.rows, *m, Precision::F64));
+            match cache.lookup(key, bypass) {
+                Lookup::Hit(h) => {
+                    Ok((Payload::Scalar(h.vals[0].trace()), h.device, 0, Vec::new()))
+                }
+                Lookup::Miss(guard) => {
+                    // Second half of the symmetric sketch B = (S A Sᵀ)/m:
+                    // the accumulated S·A plays the resident path's first
+                    // pass, and this projection addresses the same
+                    // (rows, m) signature — kind affinity keeps it on
+                    // the arm the chunks used.
+                    let gst = svc.project(s.sa.transpose(), *m)?;
+                    ensure_same_arm(arm, gst.planned, "trace(stream)")?;
+                    let b = Arc::new(gst.result.transpose().scale(1.0 / *m as f64));
+                    if let Some(g) = guard {
+                        g.publish(vec![b.clone()], gst.device);
+                    }
+                    Ok((Payload::Scalar(b.trace()), gst.device, gst.batch_cols, Vec::new()))
+                }
+            }
         }
         ResolvedJob::StreamRandSvd { s, rank, oversample, power_iters, publish_q, tol } => {
             anyhow::ensure!(
@@ -943,9 +1145,26 @@ fn execute_job(
             let q = Arc::new(linalg::orthonormalize(&s.yt.crop(cap, s.yt.cols).transpose()));
             // Co-range: X = argmin ‖(SQ)X − (S·A)‖ replaces B = QᵀA —
             // same (rows, sketch_m) signature as the chunks, same arm.
-            let sq = svc.project(q.clone(), s.sketch_m)?;
-            ensure_same_arm(arm, sq.planned, "randsvd(stream)")?;
-            let x = solve_corange(&sq.result, &s.sa);
+            // The cached artifact is the raw S·Q pass; `aux` pins the
+            // basis crop width cap (Q depends on it), and the key's
+            // tier is the ingestion tier the pass runs at (f64 today).
+            let key = source.map(|src| SketchKey {
+                aux: cap,
+                ..cache.key(src, Artifact::StreamCorange, s.rows, s.sketch_m, Precision::F64)
+            });
+            let (sq_res, device, batch_cols) = match cache.lookup(key, bypass) {
+                Lookup::Hit(h) => (h.vals[0].clone(), h.device, 0),
+                Lookup::Miss(guard) => {
+                    let sq = svc.project(q.clone(), s.sketch_m)?;
+                    ensure_same_arm(arm, sq.planned, "randsvd(stream)")?;
+                    let res = Arc::new(sq.result);
+                    if let Some(g) = guard {
+                        g.publish(vec![res.clone()], sq.device);
+                    }
+                    (res, sq.device, sq.batch_cols)
+                }
+            };
+            let x = solve_corange(&sq_res, &s.sa);
             let linalg::Svd { u: ux, s: sv, vt } = linalg::svd(&x);
             let u = linalg::matmul(&q, &ux);
             let k = (*rank).min(sv.len());
@@ -960,8 +1179,8 @@ fn execute_job(
                     s: sv[..k].to_vec(),
                     vt: vt.crop(k, vt.cols),
                 },
-                sq.device,
-                sq.batch_cols,
+                device,
+                batch_cols,
                 aux,
             ))
         }
@@ -1001,28 +1220,52 @@ fn execute_job(
         }
         ResolvedJob::Nystrom { a, m, rcond } => {
             anyhow::ensure!(a.is_square(), "nystrom needs PSD (square) input");
-            // (G A)^T = A G^T only holds for symmetric A; a non-symmetric
-            // input would complete Ok with a meaningless approximation.
-            let asym = (0..a.rows)
-                .flat_map(|i| (0..i).map(move |j| (a.at(i, j) - a.at(j, i)).abs()))
-                .fold(0.0f64, f64::max);
-            let tol = 1e-9 * linalg::max_abs(a).max(f64::MIN_POSITIVE);
-            anyhow::ensure!(
-                asym <= tol,
-                "nystrom needs symmetric PSD input (max |A - A^T| = {asym:e})"
-            );
-            let ga = svc.project_at(a.clone(), *m, precision)?; // G A (m x n)
-            let agt = Arc::new(ga.result.transpose()); // A G^T for symmetric A
-            let core = svc.project_at(agt.clone(), *m, precision)?; // G A G^T (m x m)
-            ensure_same_arm(ga.planned, core.planned, "nystrom")?;
-            let core_pinv = crate::randnla::nystrom::pinv(&core.result.symmetrized(), *rcond);
-            let approx = linalg::matmul(&linalg::matmul(&agt, &core_pinv), &ga.result);
-            Ok((
-                Payload::Matrix(approx),
-                ga.device,
-                ga.batch_cols.max(core.batch_cols),
-                Vec::new(),
-            ))
+            // The cache parks the raw projection pair (G·A, G·A·Gᵀ);
+            // the rcond-dependent pinv stays host-side and outside the
+            // key, so hits across rcond values share one artifact.
+            let key = source.map(|s| cache.key(s, Artifact::Nystrom, a.rows, *m, precision));
+            match cache.lookup(key, bypass) {
+                Lookup::Hit(h) => {
+                    let (ga, core) = (&h.vals[0], &h.vals[1]);
+                    let agt = ga.transpose();
+                    let core_pinv = crate::randnla::nystrom::pinv(&core.symmetrized(), *rcond);
+                    let approx = linalg::matmul(&linalg::matmul(&agt, &core_pinv), ga);
+                    Ok((Payload::Matrix(approx), h.device, 0, Vec::new()))
+                }
+                Lookup::Miss(guard) => {
+                    // (G A)^T = A G^T only holds for symmetric A; a
+                    // non-symmetric input would complete Ok with a
+                    // meaningless approximation. (A cache hit skipped
+                    // this scan: the entry was validated against the
+                    // same immutable operand when it was computed.)
+                    let asym = (0..a.rows)
+                        .flat_map(|i| (0..i).map(move |j| (a.at(i, j) - a.at(j, i)).abs()))
+                        .fold(0.0f64, f64::max);
+                    let tol = 1e-9 * linalg::max_abs(a).max(f64::MIN_POSITIVE);
+                    anyhow::ensure!(
+                        asym <= tol,
+                        "nystrom needs symmetric PSD input (max |A - A^T| = {asym:e})"
+                    );
+                    let ga = svc.project_at(a.clone(), *m, precision)?; // G A (m x n)
+                    let agt = Arc::new(ga.result.transpose()); // A G^T for symmetric A
+                    let core = svc.project_at(agt.clone(), *m, precision)?; // G A G^T (m x m)
+                    ensure_same_arm(ga.planned, core.planned, "nystrom")?;
+                    let ga_res = Arc::new(ga.result);
+                    let core_res = Arc::new(core.result);
+                    if let Some(g) = guard {
+                        g.publish(vec![ga_res.clone(), core_res.clone()], ga.device);
+                    }
+                    let core_pinv =
+                        crate::randnla::nystrom::pinv(&core_res.symmetrized(), *rcond);
+                    let approx = linalg::matmul(&linalg::matmul(&agt, &core_pinv), &ga_res);
+                    Ok((
+                        Payload::Matrix(approx),
+                        ga.device,
+                        ga.batch_cols.max(core.batch_cols),
+                        Vec::new(),
+                    ))
+                }
+            }
         }
     }
 }
@@ -1082,6 +1325,67 @@ fn symmetric_sketch_via(
         s.device,
         s.batch_cols.max(gst.batch_cols),
     ))
+}
+
+/// [`symmetric_sketch_via`] behind the sketch cache: a hit returns the
+/// parked `B` without touching a device (batch_cols 0 — nothing was
+/// batched); a leading miss computes, publishes and wakes coalesced
+/// waiters. `aux` disambiguates derived operands sharing the source id
+/// (Hutch++'s deflated residual sketch at `aux = split.range`; plain
+/// sketches use 0). A compute failure drops the guard, which aborts
+/// the pending slot so a waiter can lead the retry.
+#[allow(clippy::too_many_arguments)]
+fn symmetric_sketch_cached(
+    svc: &ProjectionService,
+    cache: &Arc<SketchCache>,
+    source: Option<Source>,
+    bypass: bool,
+    aux: usize,
+    a: &Arc<Mat>,
+    m: usize,
+    precision: Precision,
+) -> Result<(Arc<Mat>, Device, usize)> {
+    let key = source
+        .map(|s| SketchKey { aux, ..cache.key(s, Artifact::Symmetric, a.rows, m, precision) });
+    match cache.lookup(key, bypass) {
+        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0)),
+        Lookup::Miss(guard) => {
+            let (b, device, cols) = symmetric_sketch_via(svc, a, m, precision)?;
+            let b = Arc::new(b);
+            if let Some(g) = guard {
+                g.publish(vec![b.clone()], device);
+            }
+            Ok((b, device, cols))
+        }
+    }
+}
+
+/// The randomization pass `Yᵀ = G·Aᵀ` behind the sketch cache (randsvd
+/// fixed-rank range finding; Hutch++'s range split shares the keyspace
+/// at its own width). The cached value is the *raw* pass output — the
+/// orthonormalization and everything downstream is deterministic host
+/// algebra, so a hit reproduces the cold path bit for bit.
+fn range_pass_cached(
+    svc: &ProjectionService,
+    cache: &Arc<SketchCache>,
+    source: Option<Source>,
+    bypass: bool,
+    a: &Arc<Mat>,
+    width: usize,
+    precision: Precision,
+) -> Result<(Arc<Mat>, Device, usize)> {
+    let key = source.map(|s| cache.key(s, Artifact::Range, a.cols, width, precision));
+    match cache.lookup(key, bypass) {
+        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0)),
+        Lookup::Miss(guard) => {
+            let r = svc.project_at(a.transpose(), width, precision)?;
+            let y = Arc::new(r.result);
+            if let Some(g) = guard {
+                g.publish(vec![y.clone()], r.device);
+            }
+            Ok((y, r.device, r.batch_cols))
+        }
+    }
 }
 
 /// Incremental rangefinder on the serving plane (blocked randQB with the
@@ -2265,6 +2569,302 @@ mod tests {
         let rec = linalg::reconstruct(u, s, vt);
         let rel = crate::linalg::rel_frobenius_error(&a, &rec);
         assert!(rel <= tol, "downgraded adaptive randsvd rel {rel} > tol {tol}");
+        c.shutdown();
+    }
+
+    // ---- result plane: events, projectors, sketch cache ---------------
+
+    fn cached_coordinator(workers: usize, cache_mb: usize) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            workers,
+            policy: Policy::ForceHost,
+            batch: quiet_batch(),
+            cache_quota: cache_mb * 1024 * 1024,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn svd_bits(p: &Payload) -> Vec<u64> {
+        match p {
+            Payload::Svd { u, s, vt } => u
+                .data
+                .iter()
+                .chain(vt.data.iter())
+                .chain(s.iter())
+                .map(|v| v.to_bits())
+                .collect(),
+            _ => panic!("svd payload expected"),
+        }
+    }
+
+    #[test]
+    fn cache_hit_serves_trace_without_device_passes_bit_identically() {
+        let c = cached_coordinator(2, 64);
+        let a = psd_matrix(32, 64, 11);
+        let id = c.upload(a).unwrap();
+        let spec = || JobSpec::Trace {
+            a: OperandRef::Handle(id),
+            m: 16,
+            estimator: TraceEstimator::Hutchinson,
+        };
+        let cold = c.run_spec(spec(), SubmitOptions::default()).unwrap();
+        let p_cold = c.metrics.projections_executed.load(Ordering::Relaxed);
+        assert!(p_cold > 0, "cold path must project");
+        assert_eq!(c.metrics.cache_misses.load(Ordering::Relaxed), 1);
+        let hit = c.run_spec(spec(), SubmitOptions::default()).unwrap();
+        assert_eq!(
+            c.metrics.projections_executed.load(Ordering::Relaxed),
+            p_cold,
+            "a cache hit must execute zero device projections"
+        );
+        assert_eq!(c.metrics.cache_hits.load(Ordering::Relaxed), 1);
+        // Bit identity against both the computing run and a forced
+        // cold-path (bypass) run.
+        let bypass = c.run_spec(spec(), SubmitOptions::default().bypass_cache()).unwrap();
+        assert!(
+            c.metrics.projections_executed.load(Ordering::Relaxed) > p_cold,
+            "bypass must take the compute path"
+        );
+        let (w, h, b) = (
+            cold.payload.scalar().unwrap(),
+            hit.payload.scalar().unwrap(),
+            bypass.payload.scalar().unwrap(),
+        );
+        assert_eq!(w.to_bits(), h.to_bits(), "hit differs from computing run");
+        assert_eq!(w.to_bits(), b.to_bits(), "hit differs from cold path");
+        c.shutdown();
+    }
+
+    #[test]
+    fn randsvd_cache_hits_are_bit_identical_at_every_tier() {
+        let c = cached_coordinator(2, 64);
+        let mut rng = Xoshiro256::new(13);
+        let a = Mat::gaussian(40, 24, 1.0, &mut rng);
+        let id = c.upload(a).unwrap();
+        let spec = || JobSpec::RandSvd {
+            a: OperandRef::Handle(id),
+            rank: 6,
+            oversample: 4,
+            power_iters: 1,
+            publish_q: false,
+            tol: None,
+        };
+        for tier in [Precision::F64, Precision::F32, Precision::Bf16] {
+            let opts = SubmitOptions::default().with_precision(tier);
+            let cold = c.run_spec(spec(), opts).unwrap();
+            let p = c.metrics.projections_executed.load(Ordering::Relaxed);
+            let hit = c.run_spec(spec(), opts).unwrap();
+            assert_eq!(
+                c.metrics.projections_executed.load(Ordering::Relaxed),
+                p,
+                "{tier:?}: hit ran a device pass"
+            );
+            let bypass = c.run_spec(spec(), opts.bypass_cache()).unwrap();
+            assert_eq!(
+                svd_bits(&cold.payload),
+                svd_bits(&hit.payload),
+                "{tier:?}: hit not bit-identical to computing run"
+            );
+            assert_eq!(
+                svd_bits(&cold.payload),
+                svd_bits(&bypass.payload),
+                "{tier:?}: hit not bit-identical to cold path"
+            );
+        }
+        // Three tiers = three distinct keys: no cross-tier aliasing.
+        assert_eq!(c.metrics.cache_misses.load(Ordering::Relaxed), 3);
+        assert_eq!(c.cache().len(), 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_identical_submits_coalesce_on_one_computation() {
+        let c = cached_coordinator(4, 64);
+        let a = psd_matrix(24, 48, 3);
+        let id = c.upload(a).unwrap();
+        c.pause();
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| {
+                c.submit_spec(
+                    JobSpec::Trace {
+                        a: OperandRef::Handle(id),
+                        m: 12,
+                        estimator: TraceEstimator::Hutchinson,
+                    },
+                    SubmitOptions::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        c.resume();
+        let vals: Vec<f64> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().payload.scalar().unwrap())
+            .collect();
+        assert!(
+            vals.windows(2).all(|w| w[0].to_bits() == w[1].to_bits()),
+            "every requester must see the one computed value"
+        );
+        assert_eq!(c.metrics.cache_misses.load(Ordering::Relaxed), 1, "one leader");
+        assert_eq!(c.metrics.cache_hits.load(Ordering::Relaxed), 7, "seven served");
+        assert_eq!(
+            c.metrics.projections_executed.load(Ordering::Relaxed),
+            2,
+            "exactly the leader's two symmetric-sketch passes ran"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn freeing_an_operand_evicts_its_cache_entries_and_returns_bytes() {
+        let c = cached_coordinator(2, 64);
+        let a = psd_matrix(24, 48, 5);
+        let id = c.upload(a).unwrap();
+        let baseline = c.store().bytes();
+        c.run_spec(
+            JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 12 },
+            SubmitOptions::default(),
+        )
+        .unwrap();
+        assert!(c.cache().bytes() > 0, "sketch parked");
+        assert!(c.store().bytes() > baseline, "parked bytes are store-accounted");
+        assert!(c.free_operand(id));
+        assert_eq!(c.cache().bytes(), 0, "invalidation is synchronous");
+        assert_eq!(c.store().bytes(), 0, "operand and parked artifacts all returned");
+        assert!(c.metrics.cache_evictions.load(Ordering::Relaxed) >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn plan_stage_sketch_seeds_the_cache_for_later_submissions() {
+        let c = cached_coordinator(2, 64);
+        let a = psd_matrix(24, 48, 7);
+        let id = c.upload(a).unwrap();
+        let mut plan = Plan::new();
+        let s0 = plan.stage(JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 12 });
+        plan.stage(JobSpec::TraceOf { b: OperandRef::Stage(s0) });
+        let res = c.run_plan(&plan, SubmitOptions::default()).unwrap();
+        assert_eq!(
+            c.metrics.cache_misses.load(Ordering::Relaxed),
+            1,
+            "only the sketch stage computes (TraceOf is sketch-domain)"
+        );
+        let p = c.metrics.projections_executed.load(Ordering::Relaxed);
+        // The same sketch submitted directly now hits the plan-seeded
+        // entry: the plan executed once, everyone shares.
+        let direct = c
+            .run_spec(
+                JobSpec::SymmetricSketch { a: OperandRef::Handle(id), m: 12 },
+                SubmitOptions::default(),
+            )
+            .unwrap();
+        assert_eq!(c.metrics.projections_executed.load(Ordering::Relaxed), p);
+        assert_eq!(c.metrics.cache_hits.load(Ordering::Relaxed), 1);
+        let want = res.responses[1].payload.scalar().unwrap();
+        let got = direct.payload.matrix().unwrap().trace();
+        assert_eq!(got.to_bits(), want.to_bits());
+        res.free_stage_handles(c.store());
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_trace_and_randsvd_ride_the_cache() {
+        let c = cached_coordinator(2, 64);
+        let (rows, cols) = (24usize, 24usize);
+        let sid = c
+            .begin_stream(
+                rows,
+                cols,
+                StreamOpts { chunk_rows: None, sketch_m: 12, fd_rank: 4, range_cap: 8 },
+            )
+            .unwrap();
+        let mut rng = Xoshiro256::new(21);
+        let data = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        c.append_stream(sid, &data).unwrap();
+        c.seal_stream(sid).unwrap();
+        let trace_spec = || JobSpec::Trace {
+            a: OperandRef::Stream(sid),
+            m: 12,
+            estimator: TraceEstimator::Hutchinson,
+        };
+        let cold = c.run_spec(trace_spec(), SubmitOptions::default()).unwrap();
+        let p = c.metrics.projections_executed.load(Ordering::Relaxed);
+        let hit = c.run_spec(trace_spec(), SubmitOptions::default()).unwrap();
+        assert_eq!(c.metrics.projections_executed.load(Ordering::Relaxed), p);
+        assert_eq!(
+            cold.payload.scalar().unwrap().to_bits(),
+            hit.payload.scalar().unwrap().to_bits()
+        );
+        let svd_spec = || JobSpec::RandSvd {
+            a: OperandRef::Stream(sid),
+            rank: 4,
+            oversample: 2,
+            power_iters: 0,
+            publish_q: false,
+            tol: None,
+        };
+        let s1 = c.run_spec(svd_spec(), SubmitOptions::default()).unwrap();
+        let p2 = c.metrics.projections_executed.load(Ordering::Relaxed);
+        let s2 = c.run_spec(svd_spec(), SubmitOptions::default()).unwrap();
+        assert_eq!(
+            c.metrics.projections_executed.load(Ordering::Relaxed),
+            p2,
+            "stream co-range hit ran a device pass"
+        );
+        assert_eq!(svd_bits(&s1.payload), svd_bits(&s2.payload));
+        assert_eq!(c.cache().len(), 2, "one StreamSym + one StreamCorange entry");
+        assert!(c.free_stream(sid));
+        assert_eq!(c.cache().len(), 0, "stream invalidation drops both");
+        assert_eq!(c.cache().bytes(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn result_plane_views_materialize_submissions_and_scheduling() {
+        // Cache off: the event plane journals regardless.
+        let c = cached_coordinator(2, 0);
+        let mut rng = Xoshiro256::new(9);
+        let x = Mat::gaussian(32, 4, 1.0, &mut rng);
+        let resp = c.run(Job::Projection { data: x, m: 8 }).unwrap();
+        c.events().sync();
+        let (groups, cols) = c.arm_tier_view().resolved(Device::Host, Precision::F64);
+        assert!(groups >= 1, "batcher journaled its flush");
+        assert!(cols >= 4, "merged width rides the event");
+        let trail = c.job_trace().replay(resp.id).expect("recent job trail retained");
+        assert!(matches!(trail.first().unwrap().1, Event::Submitted { .. }));
+        assert!(matches!(trail.last().unwrap().1, Event::Completed { .. }));
+        assert!(
+            trail.first().unwrap().0 < trail.last().unwrap().0,
+            "journal order is causal"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_cache_quota_is_the_seed_behavior() {
+        let c = cached_coordinator(2, 0);
+        let a = psd_matrix(24, 48, 17);
+        let id = c.upload(a).unwrap();
+        let spec = || JobSpec::Trace {
+            a: OperandRef::Handle(id),
+            m: 12,
+            estimator: TraceEstimator::Hutchinson,
+        };
+        let r1 = c.run_spec(spec(), SubmitOptions::default()).unwrap();
+        let p1 = c.metrics.projections_executed.load(Ordering::Relaxed);
+        let r2 = c.run_spec(spec(), SubmitOptions::default()).unwrap();
+        assert!(
+            c.metrics.projections_executed.load(Ordering::Relaxed) > p1,
+            "disabled cache must recompute"
+        );
+        assert_eq!(c.metrics.cache_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.cache_misses.load(Ordering::Relaxed), 0);
+        // Deterministic operators: recomputation is still bit-identical.
+        assert_eq!(
+            r1.payload.scalar().unwrap().to_bits(),
+            r2.payload.scalar().unwrap().to_bits()
+        );
         c.shutdown();
     }
 }

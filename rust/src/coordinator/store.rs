@@ -10,6 +10,15 @@
 //! reference; jobs already holding the `Arc` keep computing on it
 //! (refcounted lifetime, no use-after-free possible).
 //!
+//! Uploads are content-deduplicated: admitting a matrix byte-identical
+//! to a resident entry returns the *existing* handle with a bumped
+//! store refcount instead of double-charging the quota (repeated-submit
+//! traffic re-ships the same payload; the `operands_deduped` counter
+//! shows how often). A candidate is found by 64-bit content hash and
+//! confirmed by full byte comparison, so a hash collision can never
+//! alias two different operands. Each `free` of a deduped handle drops
+//! one reference; bytes return when the last reference goes.
+//!
 //! [`JobSpec`]: crate::coordinator::request::JobSpec
 //! [`Plan`]: crate::coordinator::plan::Plan
 
@@ -56,8 +65,35 @@ pub fn mat_bytes(m: &Mat) -> usize {
     m.data.len() * std::mem::size_of::<f64>()
 }
 
+/// FNV-1a over the matrix dims and f64 bit patterns (u64 granularity —
+/// candidates are confirmed by full byte comparison, so the hash only
+/// has to be cheap and well-spread, not collision-free).
+fn content_hash(m: &Mat) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(m.rows as u64);
+    mix(m.cols as u64);
+    for &v in &m.data {
+        mix(v.to_bits());
+    }
+    h
+}
+
+struct Entry {
+    mat: Arc<Mat>,
+    /// Handles outstanding on this entry (dedup bumps, free drops).
+    refs: usize,
+    hash: u64,
+}
+
 struct Inner {
-    entries: HashMap<OperandId, Arc<Mat>>,
+    entries: HashMap<OperandId, Entry>,
+    /// Content-hash index for dedup candidate lookup.
+    by_hash: HashMap<u64, Vec<OperandId>>,
     bytes: usize,
 }
 
@@ -83,7 +119,11 @@ impl OperandStore {
 
     fn build(quota: usize, metrics: Option<Arc<Metrics>>) -> Self {
         Self {
-            inner: Mutex::new(Inner { entries: HashMap::new(), bytes: 0 }),
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                by_hash: HashMap::new(),
+                bytes: 0,
+            }),
             quota,
             next: AtomicU64::new(1),
             metrics,
@@ -102,10 +142,31 @@ impl OperandStore {
         self.insert(Arc::new(m))
     }
 
-    /// Admit an already-shared operand without copying it.
+    /// Admit an already-shared operand without copying it. A matrix
+    /// byte-identical to a resident entry dedups: the existing handle
+    /// comes back with a bumped refcount and no quota charge.
     pub fn insert(&self, m: Arc<Mat>) -> Result<OperandId, StoreError> {
         let needed = mat_bytes(&m);
+        let hash = content_hash(&m);
         let mut inner = self.inner.lock().unwrap();
+        let dup = inner.by_hash.get(&hash).and_then(|ids| {
+            ids.iter().copied().find(|id| {
+                let e = &inner.entries[id];
+                e.mat.rows == m.rows
+                    && e.mat.cols == m.cols
+                    && e.mat.data.len() == m.data.len()
+                    // Bit comparison, not f64 ==: NaNs dedup, ±0.0 don't
+                    // alias — "byte-identical" means exactly that.
+                    && e.mat.data.iter().zip(&m.data).all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+        });
+        if let Some(id) = dup {
+            inner.entries.get_mut(&id).expect("dedup candidate resident").refs += 1;
+            if let Some(ms) = &self.metrics {
+                ms.operands_deduped.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(id);
+        }
         if inner.bytes.saturating_add(needed) > self.quota {
             return Err(StoreError::OverQuota {
                 needed,
@@ -115,29 +176,51 @@ impl OperandStore {
         }
         let id = OperandId(self.next.fetch_add(1, Ordering::Relaxed));
         inner.bytes += needed;
-        inner.entries.insert(id, m);
+        inner.entries.insert(id, Entry { mat: m, refs: 1, hash });
+        inner.by_hash.entry(hash).or_default().push(id);
         self.publish_gauge(inner.bytes);
         Ok(id)
     }
 
     /// Shared reference to an operand (cheap; `None` for unknown/freed ids).
     pub fn get(&self, id: OperandId) -> Option<Arc<Mat>> {
-        self.inner.lock().unwrap().entries.get(&id).cloned()
+        self.inner.lock().unwrap().entries.get(&id).map(|e| Arc::clone(&e.mat))
     }
 
-    /// Drop the store's reference. In-flight jobs holding the `Arc` are
-    /// unaffected; their copy dies with the last clone.
+    /// Outstanding store references on a handle (`None` for
+    /// unknown/freed ids) — the dedup observable.
+    pub fn refcount(&self, id: OperandId) -> Option<usize> {
+        self.inner.lock().unwrap().entries.get(&id).map(|e| e.refs)
+    }
+
+    /// Drop one store reference. In-flight jobs holding the `Arc` are
+    /// unaffected; their copy dies with the last clone. Bytes return
+    /// when the last reference on a (possibly deduped) entry goes.
     pub fn free(&self, id: OperandId) -> bool {
         let mut inner = self.inner.lock().unwrap();
-        match inner.entries.remove(&id) {
-            Some(m) => {
-                inner.bytes -= mat_bytes(&m);
-                let bytes = inner.bytes;
-                self.publish_gauge(bytes);
-                true
+        match inner.entries.get_mut(&id) {
+            Some(e) if e.refs > 1 => {
+                e.refs -= 1;
+                return true;
+            }
+            Some(_) => {}
+            None => return false,
+        }
+        let e = inner.entries.remove(&id).expect("entry just observed");
+        inner.bytes -= mat_bytes(&e.mat);
+        let empty = match inner.by_hash.get_mut(&e.hash) {
+            Some(ids) => {
+                ids.retain(|x| *x != id);
+                ids.is_empty()
             }
             None => false,
+        };
+        if empty {
+            inner.by_hash.remove(&e.hash);
         }
+        let bytes = inner.bytes;
+        self.publish_gauge(bytes);
+        true
     }
 
     /// Reserve raw bytes against the quota without a backing entry.
@@ -226,10 +309,12 @@ mod tests {
 
     #[test]
     fn quota_enforced_with_typed_error() {
-        // Quota fits exactly one 4x4 (128 B).
+        // Quota fits exactly one 4x4 (128 B). The second operand must
+        // differ in content — a byte-identical upload would dedup
+        // against the resident entry instead of hitting the quota.
         let s = OperandStore::new(128);
         let id = s.upload(Mat::eye(4)).unwrap();
-        let err = s.upload(Mat::eye(4)).unwrap_err();
+        let err = s.upload(Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64)).unwrap_err();
         match err {
             StoreError::OverQuota { needed, used, quota } => {
                 assert_eq!((needed, used, quota), (128, 128, 128));
@@ -238,6 +323,45 @@ mod tests {
         // Freeing makes room again.
         s.free(id);
         assert!(s.upload(Mat::eye(4)).is_ok());
+    }
+
+    #[test]
+    fn byte_identical_uploads_dedup_onto_one_entry() {
+        let metrics = Arc::new(Metrics::new());
+        // Quota fits exactly one 4x4: dedup must not double-charge.
+        let s = OperandStore::with_metrics(128, metrics.clone());
+        let a = s.upload(Mat::eye(4)).unwrap();
+        let b = s.upload(Mat::eye(4)).unwrap();
+        assert_eq!(a, b, "identical payloads share one handle");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 128, "one quota charge for k identical uploads");
+        assert_eq!(s.refcount(a), Some(2));
+        assert_eq!(metrics.operands_deduped.load(Ordering::Relaxed), 1);
+        // Each free drops one reference; bytes return with the last.
+        assert!(s.free(a));
+        assert_eq!(s.bytes(), 128);
+        assert_eq!(s.refcount(a), Some(1));
+        assert!(s.free(b));
+        assert_eq!(s.bytes(), 0);
+        assert!(s.get(a).is_none());
+        assert!(!s.free(a), "fully-freed handle reports false");
+    }
+
+    #[test]
+    fn near_identical_payloads_do_not_alias() {
+        let s = OperandStore::new(usize::MAX);
+        let a = s.upload(Mat::eye(4)).unwrap();
+        let mut tweaked = Mat::eye(4);
+        tweaked.data[5] += 1e-300; // one bit of difference is enough
+        let b = s.upload(tweaked).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        // ±0.0 differ bitwise, so they must not dedup either.
+        let z = s.upload(Mat::zeros(2, 2)).unwrap();
+        let mut negz = Mat::zeros(2, 2);
+        negz.data.iter_mut().for_each(|v| *v = -0.0);
+        let nz = s.upload(negz).unwrap();
+        assert_ne!(z, nz);
     }
 
     #[test]

@@ -525,7 +525,8 @@ mod tests {
             &PoolConfig { pjrt_replicas: 0, ..Default::default() },
             &avail,
         ));
-        let (svc, _join) = ProjectionService::start(cfg, router, pool, None, metrics.clone());
+        let (svc, _join) =
+            ProjectionService::start(cfg, router, pool, None, metrics.clone(), None);
         (StreamRegistry::new(store.clone(), metrics.clone()), svc, metrics, store)
     }
 

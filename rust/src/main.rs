@@ -36,6 +36,8 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
          [--opu-replicas 1] [--pjrt-replicas 1] [--host-workers 1]
          [--queue-cap 1024] (bounded admission queue; Busy beyond it)
          [--store-mb 1024] (operand-store quota; 0 = unbounded)
+         [--cache-mb 0] (content-addressed sketch-cache budget;
+           0 = cache off — every submission takes the compute path)
          [--adaptive-tol 0.05] (rel. error target of adaptive-svd jobs)
          [--precision requested|f64|f32|bf16|auto] (arithmetic tier:
            requested honors each job, f64/f32/bf16 force one tier,
@@ -178,6 +180,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         ..Default::default()
     };
     let store_mb = args.get_usize("store-mb", 1024)?;
+    let cache_mb = args.get_usize("cache-mb", 0)?;
     let adaptive_tol = args.get_f64("adaptive-tol", 0.05)?;
     if adaptive_tol <= 0.0 || adaptive_tol >= 1.0 {
         return Err(format!("--adaptive-tol must lie in (0, 1), got {adaptive_tol}"));
@@ -211,6 +214,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         store_quota: if store_mb == 0 { usize::MAX } else { store_mb * 1024 * 1024 },
         stream_chunk_rows,
         precision,
+        cache_quota: cache_mb * 1024 * 1024,
     })
     .map_err(|e| e.to_string())?;
 

@@ -1,0 +1,182 @@
+//! Invalidation coverage for the result plane's content-addressed
+//! sketch cache (ISSUE 7 satellite):
+//!
+//! - **free returns bytes**: freeing an operand synchronously evicts
+//!   every cache entry derived from it and hands the parked bytes back
+//!   to the store quota — no deferred/async reclamation to race with;
+//! - **no stale service**: a fresh operand uploaded after a free never
+//!   observes the freed operand's sketches (ids are never reused, so a
+//!   stale hit would be a key-schema bug, not a data race);
+//! - **stream invalidation**: `free_stream` drops the stream-derived
+//!   entries (`StreamSym`, `StreamCorange`) the same way;
+//! - **property-style interleavings**: a seeded random walk over
+//!   upload / submit / bypass-submit / free keeps the cache within
+//!   quota at every step, serves bit-identical results on hit and
+//!   compute paths throughout, and drains to zero bytes when the last
+//!   operand dies.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy, StreamOpts,
+    SubmitOptions, TraceEstimator,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::workload::psd_matrix;
+
+fn cached_coordinator(workers: usize, cache_quota: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            noise: NoiseModel::ideal(),
+            max_wait: std::time::Duration::from_micros(50),
+            ..Default::default()
+        },
+        cache_quota,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn trace_spec(id: photonic_randnla::coordinator::OperandId, m: usize) -> JobSpec {
+    JobSpec::Trace { a: OperandRef::Handle(id), m, estimator: TraceEstimator::Hutchinson }
+}
+
+#[test]
+fn free_returns_parked_bytes_and_blocks_stale_hits() {
+    let c = cached_coordinator(2, 1 << 20);
+    let id = c.upload(psd_matrix(24, 48, 1)).unwrap();
+    let store_baseline = c.store().bytes();
+
+    c.run_spec(trace_spec(id, 12), SubmitOptions::default()).unwrap();
+    let parked = c.cache().bytes();
+    assert!(parked > 0, "miss must park the sketch");
+    assert_eq!(
+        c.store().bytes(),
+        store_baseline + parked,
+        "parked artifacts are store-quota-accounted"
+    );
+
+    assert!(c.free_operand(id));
+    assert_eq!(c.cache().bytes(), 0, "invalidation is synchronous");
+    assert_eq!(c.cache().len(), 0);
+    assert_eq!(c.store().bytes(), 0, "operand + parked bytes all returned");
+
+    // A different operand with identical dims gets a fresh id: the
+    // submit below must MISS (and recompute), never resurrect the
+    // freed operand's sketch.
+    let id2 = c.upload(psd_matrix(24, 48, 2)).unwrap();
+    c.run_spec(trace_spec(id2, 12), SubmitOptions::default()).unwrap();
+    assert_eq!(c.metrics.cache_misses.load(Ordering::Relaxed), 2);
+    assert_eq!(c.metrics.cache_hits.load(Ordering::Relaxed), 0, "stale hit served");
+    c.shutdown();
+}
+
+#[test]
+fn free_stream_drops_stream_derived_entries() {
+    let c = cached_coordinator(2, 1 << 20);
+    let sid = c
+        .begin_stream(24, 24, StreamOpts { chunk_rows: None, sketch_m: 12, fd_rank: 4, range_cap: 8 })
+        .unwrap();
+    let mut rng = Xoshiro256::new(7);
+    c.append_stream(sid, &Mat::gaussian(24, 24, 1.0, &mut rng)).unwrap();
+    c.seal_stream(sid).unwrap();
+
+    let spec = JobSpec::Trace {
+        a: OperandRef::Stream(sid),
+        m: 12,
+        estimator: TraceEstimator::Hutchinson,
+    };
+    let cold = c.run_spec(spec.clone(), SubmitOptions::default()).unwrap();
+    let hit = c.run_spec(spec, SubmitOptions::default()).unwrap();
+    assert_eq!(
+        cold.payload.scalar().unwrap().to_bits(),
+        hit.payload.scalar().unwrap().to_bits()
+    );
+    assert_eq!(c.cache().len(), 1);
+
+    assert!(c.free_stream(sid));
+    assert_eq!(c.cache().len(), 0, "stream invalidation is synchronous");
+    assert_eq!(c.cache().bytes(), 0);
+    assert!(c.metrics.cache_evictions.load(Ordering::Relaxed) >= 1);
+    c.shutdown();
+}
+
+/// Seeded random walk over the cache's whole external surface. The
+/// quota is sized to hold only ~3 sketches so LRU eviction interleaves
+/// with explicit invalidation; every submitted job is immediately
+/// cross-checked against a `bypass_cache` run of the same spec, which
+/// is the strongest "no stale service" oracle available: the compute
+/// path re-projects from the live operand, so any cache entry surviving
+/// past its operand (or aliased across operands) diverges bit-wise.
+#[test]
+fn random_interleavings_hold_quota_and_bit_identity_invariants() {
+    let quota = 4 * 1024; // ~3 parked 12x12 f64 sketches
+    for walk in 0..4u64 {
+        let c = cached_coordinator(2, quota);
+        let mut rng = Xoshiro256::new(0xCAFE + walk);
+        let mut live: Vec<photonic_randnla::coordinator::OperandId> = Vec::new();
+        let mut next_seed = 10 * (walk + 1);
+        let mut first_bits: HashMap<(u64, usize), u64> = HashMap::new();
+
+        for _step in 0..40 {
+            match rng.next_u64() % 4 {
+                // Upload a fresh operand (bounded population).
+                0 if live.len() < 5 => {
+                    next_seed += 1;
+                    live.push(c.upload(psd_matrix(24, 48, next_seed)).unwrap());
+                }
+                // Free a random live operand: its entries must vanish.
+                1 if !live.is_empty() => {
+                    let idx = (rng.next_u64() as usize) % live.len();
+                    let id = live.swap_remove(idx);
+                    assert!(c.free_operand(id));
+                }
+                // Submit on a random live operand; cross-check bypass.
+                _ if !live.is_empty() => {
+                    let id = live[(rng.next_u64() as usize) % live.len()];
+                    let m = if rng.next_u64() % 2 == 0 { 8 } else { 12 };
+                    let served = c
+                        .run_spec(trace_spec(id, m), SubmitOptions::default())
+                        .unwrap()
+                        .payload
+                        .scalar()
+                        .unwrap();
+                    let computed = c
+                        .run_spec(trace_spec(id, m), SubmitOptions::default().bypass_cache())
+                        .unwrap()
+                        .payload
+                        .scalar()
+                        .unwrap();
+                    assert_eq!(
+                        served.to_bits(),
+                        computed.to_bits(),
+                        "walk {walk}: cached path diverged from compute path"
+                    );
+                    // Deterministic operators: the value for (id, m) is
+                    // fixed the first time we see it, hit or miss.
+                    let prev = *first_bits.entry((id.0, m)).or_insert_with(|| served.to_bits());
+                    assert_eq!(prev, served.to_bits(), "walk {walk}: value drifted");
+                }
+                _ => {}
+            }
+            assert!(
+                c.cache().bytes() <= quota,
+                "walk {walk}: cache {} bytes exceeds quota {quota}",
+                c.cache().bytes()
+            );
+        }
+
+        for id in live.drain(..) {
+            assert!(c.free_operand(id));
+        }
+        assert_eq!(c.cache().bytes(), 0, "walk {walk}: bytes leaked past the last free");
+        assert_eq!(c.cache().len(), 0);
+        assert_eq!(c.store().bytes(), 0);
+        c.shutdown();
+    }
+}
