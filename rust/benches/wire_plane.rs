@@ -1,0 +1,169 @@
+//! Bench: the network front door — loopback remote submits vs the
+//! in-process session API.
+//!
+//! ```bash
+//! cargo bench --bench wire_plane [-- --quick]
+//! ```
+//!
+//! Two engines with identical configs serve the same handle-based
+//! projection workload (one n x 64 operand, k pipelined jobs per rep):
+//!
+//! - **in-process** — `submit_spec` against an embedded coordinator
+//!   (the client_plane handle path, end to end: submit + wait);
+//! - **remote** — the same submissions through `WireClient` over a
+//!   loopback TCP connection to a `WireServer` fronting the second
+//!   engine (frame encode + syscall + decode + waiter round trip).
+//!
+//! Both paths force the host arm with ideal noise, so the seeded
+//! operator draws match and results must agree bitwise across the wire.
+//!
+//! Acceptance gates: remote end-to-end throughput >= 0.5x in-process
+//! (0.3x in --quick smoke mode), and the p50 per-job wire overhead
+//! (sequential remote p50 minus in-process p50) <= 1 ms. Emits
+//! BENCH_wire_plane.json.
+
+use std::time::Instant;
+
+use photonic_randnla::bench::{self, Gate, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandId, OperandRef, Policy,
+    PoolConfig, QosClass, SubmitOptions, TenantRegistry,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::net::{WireClient, WireServer};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::stats;
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+fn spec(id: OperandId, m: usize) -> JobSpec {
+    JobSpec::Projection { data: OperandRef::Handle(id), m }
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let n = if quick { 512 } else { 2048 };
+    let cols = 64usize;
+    let m = 16usize;
+    let k = if quick { 16u64 } else { 32 };
+    let reps = if quick { 3 } else { 5 };
+    let singles = if quick { 20 } else { 60 };
+    let mib = (n * cols * 8) as f64 / (1024.0 * 1024.0);
+
+    println!(
+        "== wire plane: {k} pipelined jobs on one {n} x {cols} operand ({mib:.1} MiB), m = {m} =="
+    );
+
+    let mut rng = Xoshiro256::new(1);
+    let x = Mat::gaussian(n, cols, 1.0, &mut rng);
+
+    // ---- in-process baseline --------------------------------------
+    let local = coordinator();
+    let id = local.upload(x.clone()).expect("upload");
+    let mut local_best = f64::INFINITY;
+    let mut local_result: Option<Mat> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..k)
+            .map(|_| local.submit_spec(spec(id, m), SubmitOptions::default()).expect("submit"))
+            .collect();
+        for t in tickets {
+            let r = t.wait().expect("local job");
+            local_result.get_or_insert_with(|| r.payload.matrix().unwrap().clone());
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        local_best = local_best.min(dt / k as f64);
+    }
+    let mut local_lat: Vec<f64> = Vec::with_capacity(singles);
+    for _ in 0..singles {
+        let t0 = Instant::now();
+        local.run_spec(spec(id, m), SubmitOptions::default()).expect("local single");
+        local_lat.push(t0.elapsed().as_nanos() as f64);
+    }
+    local.shutdown();
+
+    // ---- remote over loopback -------------------------------------
+    let tenants =
+        TenantRegistry::new().add("bench", "bench-token", usize::MAX, QosClass::Interactive);
+    let server =
+        WireServer::start(coordinator(), "127.0.0.1:0", tenants).expect("server start");
+    let client =
+        WireClient::connect(server.addr(), "bench-token").expect("client connect");
+    let rid = client.upload(&x).expect("remote upload");
+    let mut remote_best = f64::INFINITY;
+    let mut remote_result: Option<Mat> = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..k)
+            .map(|_| client.submit(&spec(rid, m), SubmitOptions::default()).expect("submit"))
+            .collect();
+        for t in tickets {
+            let r = t.wait().expect("remote job");
+            remote_result.get_or_insert_with(|| r.payload.matrix().unwrap().clone());
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        remote_best = remote_best.min(dt / k as f64);
+    }
+    let mut remote_lat: Vec<f64> = Vec::with_capacity(singles);
+    for _ in 0..singles {
+        let t0 = Instant::now();
+        client.run(&spec(rid, m), SubmitOptions::default()).expect("remote single");
+        remote_lat.push(t0.elapsed().as_nanos() as f64);
+    }
+
+    // Same seeded operator on both engines: the wire must be lossless.
+    assert_eq!(
+        local_result.unwrap(),
+        remote_result.unwrap(),
+        "remote projection diverged bitwise from the in-process result"
+    );
+    drop(client);
+    server.shutdown();
+
+    let rows = vec![
+        Summary::flat(format!("in-process e2e n={n} m={m}"), k, local_best),
+        Summary::flat(format!("remote e2e n={n} m={m}"), k, remote_best),
+    ];
+    bench::report("wire plane end-to-end submit+wait", &rows);
+
+    let throughput = local_best / remote_best;
+    let local_p50 = stats::percentile(&mut local_lat, 50.0);
+    let remote_p50 = stats::percentile(&mut remote_lat, 50.0);
+    let overhead_ms = (remote_p50 - local_p50) / 1e6;
+    println!(
+        "\nheadline: remote throughput {throughput:.2}x in-process, \
+         p50 wire overhead {overhead_ms:.3} ms \
+         (p50 in-process {:.3} ms, remote {:.3} ms)",
+        local_p50 / 1e6,
+        remote_p50 / 1e6
+    );
+
+    let floor = if quick { 0.3 } else { 0.5 };
+    let gates = vec![
+        Gate::new(
+            "remote throughput vs in-process",
+            throughput >= floor,
+            format!("{throughput:.2}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "p50 wire overhead per job",
+            overhead_ms <= 1.0,
+            format!("{overhead_ms:.3} ms (need <= 1.000 ms)"),
+        ),
+    ];
+    bench::finish("wire_plane", &rows, &gates);
+}

@@ -60,6 +60,14 @@ pub enum Event {
     /// The sketch cache dropped an artifact (LRU pressure or
     /// operand/stream invalidation) and returned its bytes.
     Evicted { key: SketchKey, bytes: usize },
+    /// A tenant authenticated on the network front door.
+    TenantConnected { tenant: String },
+    /// A tenant's connection closed (its session resources were freed).
+    TenantDisconnected { tenant: String },
+    /// A front-door submission was admitted on behalf of `tenant`
+    /// (journaled right after the job's `Submitted` event, so per-job
+    /// trails carry the owning tenant).
+    TenantSubmitted { job: u64, tenant: String },
 }
 
 struct LogState {
@@ -319,7 +327,8 @@ impl Projector for JobTrace {
             Event::Submitted { job, .. }
             | Event::Completed { job, .. }
             | Event::Failed { job }
-            | Event::Cancelled { job } => *job,
+            | Event::Cancelled { job }
+            | Event::TenantSubmitted { job, .. } => *job,
             _ => return,
         };
         let mut st = self.inner.lock().unwrap();

@@ -1,5 +1,6 @@
 //! Coordinator metrics: lock-free counters + a latency histogram.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -82,6 +83,20 @@ pub struct Metrics {
     wait_interactive: LatencyHist,
     /// Submit→pop wait of Batch-class jobs (µs), stamped at pop.
     wait_batch: LatencyHist,
+    /// Per-tenant accounting for the network front door (BTreeMap so
+    /// `report()` lists tenants in a stable sorted order).
+    tenants: Mutex<BTreeMap<String, TenantStats>>,
+}
+
+/// Per-tenant counters fed by the wire server and the queue.
+#[derive(Default)]
+struct TenantStats {
+    submits: u64,
+    operand_bytes: u64,
+    busy: u64,
+    quota: u64,
+    /// Queue waits (µs), stamped at pop like the per-class histograms.
+    waits: Vec<u64>,
 }
 
 #[derive(Default)]
@@ -153,6 +168,52 @@ impl Metrics {
         }
     }
 
+    fn tenant_mut<R>(&self, tenant: &str, f: impl FnOnce(&mut TenantStats) -> R) -> R {
+        let mut map = self.tenants.lock().unwrap();
+        f(map.entry(tenant.to_string()).or_default())
+    }
+
+    /// One accepted submission from `tenant` (front-door path).
+    pub fn tenant_submit(&self, tenant: &str) {
+        self.tenant_mut(tenant, |t| t.submits += 1);
+    }
+
+    /// Operand/stream bytes charged to `tenant`'s quota ledger.
+    pub fn tenant_operand_bytes(&self, tenant: &str, bytes: u64) {
+        self.tenant_mut(tenant, |t| t.operand_bytes += bytes);
+    }
+
+    /// One `Busy` backpressure refusal issued to `tenant`.
+    pub fn tenant_busy(&self, tenant: &str) {
+        self.tenant_mut(tenant, |t| t.busy += 1);
+    }
+
+    /// One `OverQuota` refusal issued to `tenant`.
+    pub fn tenant_quota_rejected(&self, tenant: &str) {
+        self.tenant_mut(tenant, |t| t.quota += 1);
+    }
+
+    /// Queue wait of one of `tenant`'s jobs, stamped by the queue at
+    /// pop (same instant as the per-class histograms).
+    pub fn record_tenant_wait_us(&self, tenant: &str, us: u64) {
+        self.tenant_mut(tenant, |t| {
+            if t.waits.len() < 100_000 {
+                t.waits.push(us);
+            }
+        });
+    }
+
+    /// Queue-wait percentile of one tenant (None if it never popped).
+    pub fn tenant_wait_percentile_us(&self, tenant: &str, p: f64) -> Option<f64> {
+        let map = self.tenants.lock().unwrap();
+        let waits = &map.get(tenant)?.waits;
+        if waits.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = waits.iter().map(|&x| x as f64).collect();
+        Some(crate::stats::percentile(&mut v, p))
+    }
+
     pub fn device_counts(&self) -> (u64, u64, u64) {
         (
             self.opu_jobs.load(Ordering::Relaxed),
@@ -170,10 +231,11 @@ impl Metrics {
         self.batched_cols.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// One-line text report.
+    /// One-line text report (plus one `tenant[...]` line per tenant the
+    /// front door has seen, sorted by name).
     pub fn report(&self) -> String {
         let (opu, pjrt, host) = self.device_counts();
-        format!(
+        let mut out = format!(
             "submitted={} completed={} failed={} batches={} mean_batch_cols={:.1} \
              devices: opu={} pjrt={} host={} sharded={} shards={} rerouted={} \
              qos: cancelled={} expired={} busy={} queue_i={} queue_b={} \
@@ -215,7 +277,21 @@ impl Metrics {
             self.queue_wait_percentile_us(Priority::Batch, 50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(99.0).unwrap_or(0.0) as u64,
-        )
+        );
+        let map = self.tenants.lock().unwrap();
+        for (name, t) in map.iter() {
+            let p50 = if t.waits.is_empty() {
+                0
+            } else {
+                let mut v: Vec<f64> = t.waits.iter().map(|&x| x as f64).collect();
+                crate::stats::percentile(&mut v, 50.0) as u64
+            };
+            out.push_str(&format!(
+                "\ntenant[{name}]: submits={} operand_bytes={} busy={} quota={} wait_p50={p50}us",
+                t.submits, t.operand_bytes, t.busy, t.quota
+            ));
+        }
+        out
     }
 }
 
@@ -309,6 +385,37 @@ mod tests {
         assert!(r.contains("cache: bytes=2048 hits=7 misses=2 coalesced=3 evictions=1"), "{r}");
         assert!(r.contains("deduped=4"), "{r}");
         assert!(r.contains("proj_exec=9"), "{r}");
+    }
+
+    #[test]
+    fn tenant_stats_report_sorted_and_keyed() {
+        let m = Metrics::new();
+        let r = m.report();
+        assert!(!r.contains("tenant["), "no tenant lines before any tenant traffic: {r}");
+        m.tenant_submit("zeta");
+        m.tenant_submit("zeta");
+        m.tenant_operand_bytes("zeta", 4096);
+        m.tenant_busy("zeta");
+        m.tenant_submit("acme");
+        m.tenant_quota_rejected("acme");
+        m.record_tenant_wait_us("acme", 200);
+        m.record_tenant_wait_us("acme", 400);
+        let r = m.report();
+        assert!(
+            r.contains("tenant[zeta]: submits=2 operand_bytes=4096 busy=1 quota=0 wait_p50=0us"),
+            "{r}"
+        );
+        assert!(
+            r.contains("tenant[acme]: submits=1 operand_bytes=0 busy=0 quota=1 wait_p50=300us"),
+            "{r}"
+        );
+        let acme_at = r.find("tenant[acme]").unwrap();
+        let zeta_at = r.find("tenant[zeta]").unwrap();
+        assert!(acme_at < zeta_at, "tenant lines sorted by name: {r}");
+        let p = m.tenant_wait_percentile_us("acme", 50.0).unwrap();
+        assert!((p - 300.0).abs() < 1.0, "{p}");
+        assert!(m.tenant_wait_percentile_us("zeta", 50.0).is_none());
+        assert!(m.tenant_wait_percentile_us("nobody", 50.0).is_none());
     }
 
     #[test]

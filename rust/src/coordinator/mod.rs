@@ -51,7 +51,13 @@
 //! - [`cache`]   — the flagship projector: a content-addressed
 //!   sketch/range-basis cache that serves repeated submissions without
 //!   device passes (LRU under `--cache-mb`, invalidated on free,
-//!   coalescing concurrent identical misses).
+//!   coalescing concurrent identical misses);
+//! - [`wire`]    — the network front door's framed binary protocol:
+//!   every session call and every typed refusal as a length-prefixed
+//!   frame over TCP (see [`crate::net`] for the listener and client);
+//! - [`tenant`]  — multi-tenant identity for the front door: bearer
+//!   tokens, per-tenant store-quota ledgers, QoS classes clamped onto
+//!   the [`Priority`](request::Priority) queue.
 //!
 //! See `docs/architecture.md` for the full request-path walkthrough and
 //! the "Sessions, handles, and plans" migration guide.
@@ -69,6 +75,8 @@ pub mod server;
 pub mod shard;
 pub mod store;
 pub mod stream;
+pub mod tenant;
+pub mod wire;
 
 pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use cache::{Artifact, SketchCache, SketchKey, Source};
@@ -95,3 +103,5 @@ pub use crate::randnla::lstsq::LsqrOpts;
 pub use shard::{recombine, ShardCell, ShardPlan};
 pub use store::{mat_bytes, OperandId, OperandStore, StoreError};
 pub use stream::{SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry};
+pub use tenant::{QosClass, Tenant, TenantRegistry};
+pub use wire::{Frame, StatusCode, WireError, WireStatus, WIRE_VERSION};

@@ -55,6 +55,10 @@ pub(crate) struct QueuedJob {
     /// Per-job cache opt-out (`SubmitOptions::bypass_cache`): neither
     /// serve from nor publish to the sketch cache.
     pub bypass_cache: bool,
+    /// Submitting tenant when the job arrived through the network front
+    /// door (`None` for in-process submissions) — keys the per-tenant
+    /// queue-wait histogram in [`Metrics`].
+    pub tenant: Option<Arc<str>>,
 }
 
 struct State {
@@ -194,6 +198,9 @@ impl JobQueue {
     fn stamp_wait(&self, job: &QueuedJob) {
         let us = job.submitted.elapsed().as_micros() as u64;
         self.metrics.record_queue_wait_us(job.priority, us);
+        if let Some(t) = &job.tenant {
+            self.metrics.record_tenant_wait_us(t, us);
+        }
     }
 
     /// Remove a still-queued job by id. The job's ticket resolves to
@@ -279,6 +286,7 @@ mod tests {
                 precision: Precision::F64,
                 source: None,
                 bypass_cache: false,
+                tenant: None,
             },
             rx,
         )

@@ -574,6 +574,9 @@ pub struct JobResponse {
 }
 
 /// How a ticket reaches back into the admission queue to cancel.
+/// Cloneable so the network front door can hold a cancel path per
+/// in-flight job while a waiter thread owns the [`Ticket`] itself.
+#[derive(Clone)]
 pub(crate) struct CancelHandle {
     pub(crate) flag: Arc<AtomicBool>,
     pub(crate) queue: Weak<JobQueue>,
@@ -583,6 +586,15 @@ impl CancelHandle {
     /// Handle for tickets that never made it into a queue (shim errors).
     pub(crate) fn detached() -> Self {
         Self { flag: Arc::new(AtomicBool::new(false)), queue: Weak::new() }
+    }
+
+    /// Best-effort cancellation of job `id` (see [`Ticket::cancel`]).
+    pub(crate) fn fire(&self, id: u64) -> bool {
+        self.flag.store(true, Ordering::SeqCst);
+        match self.queue.upgrade() {
+            Some(q) => q.cancel(id),
+            None => false,
+        }
     }
 }
 
@@ -611,11 +623,13 @@ impl Ticket {
     /// finished) — a started job runs to completion, but a worker that
     /// dequeues a flagged job drops it without touching a device.
     pub fn cancel(&self) -> bool {
-        self.cancel.flag.store(true, Ordering::SeqCst);
-        match self.cancel.queue.upgrade() {
-            Some(q) => q.cancel(self.id),
-            None => false,
-        }
+        self.cancel.fire(self.id)
+    }
+
+    /// A detachable cancel path for this job (the front door's
+    /// cancel-by-id map holds one per in-flight remote job).
+    pub(crate) fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
     }
 
     /// Wall time since submission — measured from the same instant the

@@ -327,6 +327,23 @@ impl Coordinator {
         self.submit_resolved(job, source, opts)
     }
 
+    /// [`submit_spec`](Self::submit_spec) on behalf of a tenant (the
+    /// network front door's path): the job's queue wait lands in the
+    /// tenant's metrics bucket and a
+    /// [`Event::TenantSubmitted`] trails its `Submitted` journal entry,
+    /// so per-job traces carry the owning tenant. `None` behaves
+    /// exactly like `submit_spec`.
+    pub fn submit_spec_as(
+        &self,
+        tenant: Option<Arc<str>>,
+        spec: JobSpec,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, SubmitError> {
+        let source = cache_source(&spec);
+        let job = self.resolve(spec)?;
+        self.submit_resolved_as(job, source, opts, false, tenant)
+    }
+
     /// Submit with *blocking* admission: instead of refusing with
     /// [`SubmitError::Busy`], the caller parks on the queue's space
     /// condvar until a slot frees (no sleep polling) or the queue
@@ -362,6 +379,19 @@ impl Coordinator {
         opts: SubmitOptions,
         wait: bool,
     ) -> Result<Ticket, SubmitError> {
+        self.submit_resolved_as(job, source, opts, wait, None)
+    }
+
+    /// The enqueue core, optionally on behalf of a tenant (per-tenant
+    /// metrics + journal trail).
+    fn submit_resolved_as(
+        &self,
+        job: ResolvedJob,
+        source: Option<Source>,
+        opts: SubmitOptions,
+        wait: bool,
+        tenant: Option<Arc<str>>,
+    ) -> Result<Ticket, SubmitError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // The single submit timestamp: client ticket and server latency
         // stamp both derive from it, so the two views always agree.
@@ -384,6 +414,7 @@ impl Coordinator {
             precision,
             source,
             bypass_cache: opts.bypass_cache,
+            tenant: tenant.clone(),
         };
         // Journaled before the push so a fast worker can never journal
         // the job's completion ahead of its submission; a refused push
@@ -394,10 +425,16 @@ impl Coordinator {
             priority: opts.priority,
             tier: precision,
         });
+        if let Some(t) = &tenant {
+            self.events.append(Event::TenantSubmitted { job: id, tenant: t.to_string() });
+        }
         let pushed = if wait { self.queue.push_wait(queued) } else { self.queue.push(queued) };
         match pushed {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = &tenant {
+                    self.metrics.tenant_submit(t);
+                }
                 Ok(Ticket {
                     id,
                     rx,
@@ -411,6 +448,9 @@ impl Coordinator {
             Err((_job, e)) => {
                 if matches!(e, SubmitError::Busy { .. }) {
                     self.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = &tenant {
+                        self.metrics.tenant_busy(t);
+                    }
                 }
                 // Close the journaled trail: the job never ran.
                 self.events.append(Event::Failed { job: id });

@@ -447,6 +447,29 @@ impl StreamRegistry {
             .ok_or(StreamError::UnknownStream(id))
     }
 
+    /// The stream's current quota-accounted footprint in bytes (`None`
+    /// for unknown or freed streams). The network front door charges
+    /// this against the owning tenant's ledger at `begin` and releases
+    /// the seal-time shrink, so tenant accounting tracks the store's.
+    pub fn footprint(&self, id: StreamId) -> Option<usize> {
+        let slot = self.slot(id).ok()?;
+        let st = slot.lock().unwrap();
+        match &*st {
+            State::Open(s) => Some(open_bytes(
+                s.rows,
+                s.cols,
+                s.chunk_rows,
+                s.sketch_m,
+                s.fd_rank,
+                s.range_cap,
+            )),
+            State::Sealed(s) => {
+                Some(sealed_bytes(s.rows, s.cols, s.sketch_m, s.fd_rank, s.range_cap))
+            }
+            State::Freed => None,
+        }
+    }
+
     /// One chunk through the projection plane: the range pass (ordinary
     /// `(cols, range_cap)` projection of the chunk's transpose) and the
     /// co-range pass (`(rows, sketch_m)` operator addressed at the

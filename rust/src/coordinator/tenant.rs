@@ -1,0 +1,303 @@
+//! Multi-tenant identity, quota and QoS for the network front door.
+//!
+//! A tenant is a named principal with a bearer token, a byte quota over
+//! the shared [`OperandStore`](crate::coordinator::OperandStore), and a
+//! QoS class that bounds which [`Priority`] its submissions may claim.
+//! The registry is loaded from a flat file (`serve --tenants FILE`):
+//!
+//! ```text
+//! # name:token:quota_mb:qos        (quota_mb 0 = unbounded)
+//! acme:s3cret:512:interactive
+//! batchcorp:hunter2:2048:batch
+//! ```
+//!
+//! Quota is a *ledger over the shared store*, not a second store: each
+//! connection charges its tenant for the bytes its uploads and streams
+//! pin (post-dedup re-uploads of content the same session already owns
+//! still charge — the handle multiplicity is what the tenant pins), and
+//! releases them on free/disconnect. Exhausting one tenant's ledger
+//! refuses *that tenant's* admissions with the same typed
+//! [`StoreError::OverQuota`] the store itself issues, while other
+//! tenants are untouched — the isolation the loopback tests pin.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::request::Priority;
+use crate::coordinator::store::StoreError;
+
+/// Scheduling class a tenant is entitled to.
+///
+/// Mapped onto the existing two-class [`Priority`] queue: an
+/// `Interactive` tenant may use both classes (its requested priority
+/// passes through); a `Batch` tenant is clamped to [`Priority::Batch`]
+/// whatever its submissions request, so a throughput tenant cannot buy
+/// latency it was not provisioned for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QosClass {
+    /// May submit at either priority.
+    Interactive,
+    /// Every submission runs at [`Priority::Batch`] (the default class).
+    #[default]
+    Batch,
+}
+
+impl QosClass {
+    /// Bound a requested priority by this class's entitlement.
+    pub fn clamp(self, requested: Priority) -> Priority {
+        match self {
+            QosClass::Interactive => requested,
+            QosClass::Batch => Priority::Batch,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "interactive" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Wire discriminant (rides in `HelloOk`).
+    pub fn code(self) -> u8 {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Batch => 1,
+        }
+    }
+
+    pub fn from_code(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(QosClass::Interactive),
+            1 => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// One provisioned principal: token, byte quota, QoS class, and the
+/// live byte ledger shared by every connection the tenant holds.
+#[derive(Debug)]
+pub struct Tenant {
+    pub name: Arc<str>,
+    token: String,
+    /// Byte quota (`usize::MAX` = unbounded).
+    quota: usize,
+    pub qos: QosClass,
+    used: Mutex<usize>,
+}
+
+impl Tenant {
+    pub fn new(name: &str, token: &str, quota: usize, qos: QosClass) -> Self {
+        Self {
+            name: Arc::from(name),
+            token: token.to_string(),
+            quota,
+            qos,
+            used: Mutex::new(0),
+        }
+    }
+
+    /// Charge `bytes` against the ledger, refusing typed if it would
+    /// cross the quota (nothing is charged on refusal).
+    pub fn reserve(&self, bytes: usize) -> Result<(), StoreError> {
+        let mut used = self.used.lock().unwrap();
+        let after = used.saturating_add(bytes);
+        if after > self.quota {
+            return Err(StoreError::OverQuota { needed: bytes, used: *used, quota: self.quota });
+        }
+        *used = after;
+        Ok(())
+    }
+
+    /// Return `bytes` to the ledger (saturating — a double release of
+    /// rolled-back charges can never underflow).
+    pub fn release(&self, bytes: usize) {
+        let mut used = self.used.lock().unwrap();
+        *used = used.saturating_sub(bytes);
+    }
+
+    /// Bytes currently charged.
+    pub fn used(&self) -> usize {
+        *self.used.lock().unwrap()
+    }
+
+    /// Byte quota (`usize::MAX` = unbounded).
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+}
+
+/// The set of provisioned tenants, indexed by bearer token.
+#[derive(Debug, Default)]
+pub struct TenantRegistry {
+    by_token: HashMap<String, Arc<Tenant>>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one tenant (test/builder path; `quota` in bytes,
+    /// `usize::MAX` = unbounded).
+    pub fn add(mut self, name: &str, token: &str, quota: usize, qos: QosClass) -> Self {
+        self.by_token
+            .insert(token.to_string(), Arc::new(Tenant::new(name, token, quota, qos)));
+        self
+    }
+
+    /// Parse the `name:token:quota_mb:qos` flat format. Blank lines and
+    /// `#` comments are skipped; duplicate names or tokens are errors
+    /// (a duplicate token would make authentication ambiguous).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut reg = Self::default();
+        let mut names: Vec<String> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(':').collect();
+            if parts.len() != 4 {
+                return Err(format!(
+                    "tenants line {}: expected name:token:quota_mb:qos, got {:?}",
+                    lineno + 1,
+                    line
+                ));
+            }
+            let (name, token) = (parts[0].trim(), parts[1].trim());
+            if name.is_empty() || token.is_empty() {
+                return Err(format!("tenants line {}: empty name or token", lineno + 1));
+            }
+            if names.iter().any(|n| n == name) {
+                return Err(format!("tenants line {}: duplicate tenant {name:?}", lineno + 1));
+            }
+            if reg.by_token.contains_key(token) {
+                return Err(format!(
+                    "tenants line {}: token for {name:?} already assigned",
+                    lineno + 1
+                ));
+            }
+            let quota_mb: usize = parts[2]
+                .trim()
+                .parse()
+                .map_err(|_| format!("tenants line {}: bad quota_mb {:?}", lineno + 1, parts[2]))?;
+            let quota = if quota_mb == 0 { usize::MAX } else { quota_mb << 20 };
+            let qos = QosClass::parse(parts[3].trim()).ok_or_else(|| {
+                format!("tenants line {}: bad qos {:?} (interactive|batch)", lineno + 1, parts[3])
+            })?;
+            names.push(name.to_string());
+            reg = reg.add(name, token, quota, qos);
+        }
+        if reg.by_token.is_empty() {
+            return Err("tenants file provisions no tenants".to_string());
+        }
+        Ok(reg)
+    }
+
+    /// Load and parse a tenants file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read tenants file {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Resolve a bearer token to its tenant (constant lookup — the
+    /// registry is immutable after load).
+    pub fn authenticate(&self, token: &str) -> Option<Arc<Tenant>> {
+        self.by_token.get(token).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_token.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_token.is_empty()
+    }
+}
+
+impl fmt::Display for TenantRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut names: Vec<&str> = self.by_token.values().map(|t| &*t.name).collect();
+        names.sort_unstable();
+        write!(f, "{} tenant(s): {}", names.len(), names.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_comments_blanks_and_unbounded_quota() {
+        let reg = TenantRegistry::parse(
+            "# fleet\n\nacme:s3cret:512:interactive\nbatchcorp:hunter2:0:batch\n",
+        )
+        .unwrap();
+        assert_eq!(reg.len(), 2);
+        let acme = reg.authenticate("s3cret").unwrap();
+        assert_eq!(&*acme.name, "acme");
+        assert_eq!(acme.quota(), 512 << 20);
+        assert_eq!(acme.qos, QosClass::Interactive);
+        let bc = reg.authenticate("hunter2").unwrap();
+        assert_eq!(bc.quota(), usize::MAX);
+        assert_eq!(bc.qos, QosClass::Batch);
+        assert!(reg.authenticate("wrong").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(TenantRegistry::parse("acme:tok:512").is_err(), "missing qos");
+        assert!(TenantRegistry::parse("acme:tok:many:batch").is_err(), "bad quota");
+        assert!(TenantRegistry::parse("acme:tok:1:turbo").is_err(), "bad qos");
+        assert!(TenantRegistry::parse(":tok:1:batch").is_err(), "empty name");
+        assert!(TenantRegistry::parse("").is_err(), "no tenants");
+        assert!(
+            TenantRegistry::parse("a:tok:1:batch\na:tok2:1:batch").is_err(),
+            "duplicate name"
+        );
+        assert!(
+            TenantRegistry::parse("a:tok:1:batch\nb:tok:1:batch").is_err(),
+            "duplicate token"
+        );
+    }
+
+    #[test]
+    fn ledger_charges_refuses_typed_and_releases() {
+        let t = Tenant::new("acme", "tok", 100, QosClass::Batch);
+        t.reserve(60).unwrap();
+        t.reserve(40).unwrap();
+        let err = t.reserve(1).unwrap_err();
+        assert_eq!(err, StoreError::OverQuota { needed: 1, used: 100, quota: 100 });
+        assert_eq!(t.used(), 100, "refusal charges nothing");
+        t.release(40);
+        t.reserve(30).unwrap();
+        assert_eq!(t.used(), 90);
+        t.release(1000);
+        assert_eq!(t.used(), 0, "release saturates");
+    }
+
+    #[test]
+    fn qos_clamps_batch_tenants_only() {
+        assert_eq!(QosClass::Interactive.clamp(Priority::Interactive), Priority::Interactive);
+        assert_eq!(QosClass::Interactive.clamp(Priority::Batch), Priority::Batch);
+        assert_eq!(QosClass::Batch.clamp(Priority::Interactive), Priority::Batch);
+        assert_eq!(QosClass::Batch.clamp(Priority::Batch), Priority::Batch);
+        for qos in [QosClass::Interactive, QosClass::Batch] {
+            assert_eq!(QosClass::from_code(qos.code()), Some(qos));
+            assert_eq!(QosClass::parse(qos.label()), Some(qos));
+        }
+        assert_eq!(QosClass::from_code(9), None);
+    }
+}

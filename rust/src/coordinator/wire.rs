@@ -1,0 +1,1653 @@
+//! Hand-written framed binary protocol for the network front door.
+//!
+//! The offline image carries no registry crates, so the wire layer is a
+//! from-scratch length-prefixed codec over `std::net::TcpStream` —
+//! message shapes mirror what prost would generate for a tonic service
+//! (plain structs with numbered fields and `#[repr]`-style enums; see
+//! SNIPPETS.md §2), so the future `grpc` feature swap (`net::grpc`) is
+//! a transport change, not a schema redesign.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! [ len: u32 LE ][ req_id: u64 LE ][ tag: u16 LE ][ payload ... ]
+//!   `len` counts req_id + tag + payload (not itself);
+//!   len <= MAX_FRAME_BYTES, len >= 10.
+//! ```
+//!
+//! `req_id` is a client-chosen correlation id: every server frame
+//! echoes the request's id so one connection multiplexes concurrent
+//! calls. Exactly one frame answers each request, except `Submit`,
+//! which is answered by `Submitted` (ack) and later exactly one
+//! terminal `JobDone`/`Status` — the server-streamed result.
+//!
+//! Integers are little-endian; `f64` travels as IEEE-754 bits in a
+//! `u64` (bit-exact round trips, NaN-safe equality in tests). Decoding
+//! is total: truncated, oversized or corrupt frames return a typed
+//! [`WireError`] — never a panic, and allocation is bounded by the
+//! frame's actual byte count before any `Vec` is reserved. An unknown
+//! tag decodes to [`Frame::Unknown`] with its payload consumed, so a
+//! newer peer can speak extra frame types without killing the
+//! connection (forward compatibility).
+//!
+//! Every typed refusal of the embedded engine maps onto a
+//! [`StatusCode`] and back ([`WireStatus::try_submit_error`] &c.), so
+//! `Busy` backpressure, `OverQuota` and cancellation survive the wire
+//! as the same typed errors the in-process API returns.
+
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::request::{
+    Device, JobError, JobResponse, JobSpec, OperandRef, Payload, Priority, SubmitError,
+    SubmitOptions, TraceEstimator,
+};
+use crate::coordinator::store::{OperandId, StoreError};
+use crate::coordinator::stream::{StreamError, StreamId};
+use crate::linalg::{Mat, Precision};
+use crate::randnla::lstsq::LsqrOpts;
+
+/// Protocol version carried in `Hello`; bumped on incompatible change.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard ceiling on one frame's body (req_id + tag + payload). A larger
+/// announced length is refused before any allocation.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Ceiling on one encoded string (tokens, details, kinds).
+const MAX_STR_BYTES: usize = 1 << 20;
+
+/// Smallest valid body: req_id (8) + tag (2).
+const MIN_BODY: usize = 10;
+
+/// Typed codec/transport failure. Decoding never panics: every malformed
+/// input lands on one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Peer closed the connection at a frame boundary (clean EOF), or a
+    /// shutdown flag aborted a read.
+    Closed,
+    /// Ran out of bytes mid-field (or mid-frame on the transport).
+    Truncated { need: usize, have: usize },
+    /// Announced frame length exceeds [`MAX_FRAME_BYTES`].
+    Oversized { len: usize, max: usize },
+    /// A frame decoded fully but left unconsumed payload bytes.
+    Trailing { extra: usize },
+    /// A length field is inconsistent with its container.
+    BadLength { what: &'static str, claimed: u64 },
+    /// An enum discriminant has no mapping.
+    BadEnum { what: &'static str, value: u64 },
+    /// A string field is not UTF-8.
+    BadUtf8,
+    /// Transport-level I/O failure.
+    Io(ErrorKind),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes announced (max {max})")
+            }
+            WireError::Trailing { extra } => {
+                write!(f, "frame decoded with {extra} trailing bytes")
+            }
+            WireError::BadLength { what, claimed } => {
+                write!(f, "bad {what} length {claimed}")
+            }
+            WireError::BadEnum { what, value } => {
+                write!(f, "bad {what} discriminant {value}")
+            }
+            WireError::BadUtf8 => write!(f, "string field is not UTF-8"),
+            WireError::Io(kind) => write!(f, "transport error: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e.kind())
+    }
+}
+
+/// Dense f64 matrix on the wire: data travels as IEEE-754 bit patterns
+/// so round trips are bit-exact (NaN payloads included). Invariant:
+/// `data.len() == rows * cols` (enforced by [`WireMat::from_mat`] and
+/// checked by [`WireMat::to_mat`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireMat {
+    pub rows: u32,
+    pub cols: u32,
+    pub data: Vec<u64>,
+}
+
+impl WireMat {
+    pub fn from_mat(m: &Mat) -> Self {
+        Self {
+            rows: m.rows as u32,
+            cols: m.cols as u32,
+            data: m.data.iter().map(|v| v.to_bits()).collect(),
+        }
+    }
+
+    pub fn to_mat(&self) -> Result<Mat, WireError> {
+        let count = (self.rows as usize)
+            .checked_mul(self.cols as usize)
+            .ok_or(WireError::BadLength { what: "matrix", claimed: u64::MAX })?;
+        if self.data.len() != count {
+            return Err(WireError::BadLength { what: "matrix", claimed: self.data.len() as u64 });
+        }
+        Ok(Mat {
+            rows: self.rows as usize,
+            cols: self.cols as usize,
+            data: self.data.iter().map(|&b| f64::from_bits(b)).collect(),
+        })
+    }
+}
+
+/// [`OperandRef`] on the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireRef {
+    Handle(u64),
+    Inline(WireMat),
+    Stage(u64),
+    Stream(u64),
+}
+
+impl WireRef {
+    pub fn from_ref(r: &OperandRef) -> Self {
+        match r {
+            OperandRef::Handle(id) => WireRef::Handle(id.0),
+            OperandRef::Inline(m) => WireRef::Inline(WireMat::from_mat(m)),
+            OperandRef::Stage(i) => WireRef::Stage(*i as u64),
+            OperandRef::Stream(id) => WireRef::Stream(id.0),
+        }
+    }
+
+    pub fn to_ref(&self) -> Result<OperandRef, WireError> {
+        Ok(match self {
+            WireRef::Handle(id) => OperandRef::Handle(OperandId(*id)),
+            WireRef::Inline(m) => OperandRef::Inline(m.to_mat()?),
+            WireRef::Stage(i) => OperandRef::Stage(*i as usize),
+            WireRef::Stream(id) => OperandRef::Stream(StreamId(*id)),
+        })
+    }
+}
+
+/// LSQR refinement options on the wire (`tol` as f64 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireLsqr {
+    pub tol: u64,
+    pub max_iters: u64,
+}
+
+/// [`JobSpec`] on the wire — one numbered variant per kind, mirroring
+/// the in-process enum field for field.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireSpec {
+    Projection { data: WireRef, m: u64 },
+    ApproxMatmul { a: WireRef, b: WireRef, m: u64 },
+    Trace { a: WireRef, m: u64, estimator: u8 },
+    Triangles { adjacency: WireRef, m: u64 },
+    SymmetricSketch { a: WireRef, m: u64 },
+    TraceOf { b: WireRef },
+    TrianglesOf { b: WireRef },
+    RandSvd {
+        a: WireRef,
+        rank: u64,
+        oversample: u64,
+        power_iters: u64,
+        publish_q: bool,
+        tol: Option<u64>,
+    },
+    Lstsq { a: WireRef, b: Vec<u64>, m: u64, refine: Option<WireLsqr> },
+    Nystrom { a: WireRef, m: u64, rcond: u64 },
+}
+
+impl WireSpec {
+    pub fn from_spec(spec: &JobSpec) -> Self {
+        match spec {
+            JobSpec::Projection { data, m } => {
+                WireSpec::Projection { data: WireRef::from_ref(data), m: *m as u64 }
+            }
+            JobSpec::ApproxMatmul { a, b, m } => WireSpec::ApproxMatmul {
+                a: WireRef::from_ref(a),
+                b: WireRef::from_ref(b),
+                m: *m as u64,
+            },
+            JobSpec::Trace { a, m, estimator } => WireSpec::Trace {
+                a: WireRef::from_ref(a),
+                m: *m as u64,
+                estimator: estimator_code(*estimator),
+            },
+            JobSpec::Triangles { adjacency, m } => WireSpec::Triangles {
+                adjacency: WireRef::from_ref(adjacency),
+                m: *m as u64,
+            },
+            JobSpec::SymmetricSketch { a, m } => {
+                WireSpec::SymmetricSketch { a: WireRef::from_ref(a), m: *m as u64 }
+            }
+            JobSpec::TraceOf { b } => WireSpec::TraceOf { b: WireRef::from_ref(b) },
+            JobSpec::TrianglesOf { b } => WireSpec::TrianglesOf { b: WireRef::from_ref(b) },
+            JobSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
+                WireSpec::RandSvd {
+                    a: WireRef::from_ref(a),
+                    rank: *rank as u64,
+                    oversample: *oversample as u64,
+                    power_iters: *power_iters as u64,
+                    publish_q: *publish_q,
+                    tol: tol.map(f64::to_bits),
+                }
+            }
+            JobSpec::Lstsq { a, b, m, refine } => WireSpec::Lstsq {
+                a: WireRef::from_ref(a),
+                b: b.iter().map(|v| v.to_bits()).collect(),
+                m: *m as u64,
+                refine: refine.map(|o| WireLsqr {
+                    tol: o.tol.to_bits(),
+                    max_iters: o.max_iters as u64,
+                }),
+            },
+            JobSpec::Nystrom { a, m, rcond } => WireSpec::Nystrom {
+                a: WireRef::from_ref(a),
+                m: *m as u64,
+                rcond: rcond.to_bits(),
+            },
+        }
+    }
+
+    pub fn to_spec(&self) -> Result<JobSpec, WireError> {
+        Ok(match self {
+            WireSpec::Projection { data, m } => {
+                JobSpec::Projection { data: data.to_ref()?, m: *m as usize }
+            }
+            WireSpec::ApproxMatmul { a, b, m } => {
+                JobSpec::ApproxMatmul { a: a.to_ref()?, b: b.to_ref()?, m: *m as usize }
+            }
+            WireSpec::Trace { a, m, estimator } => JobSpec::Trace {
+                a: a.to_ref()?,
+                m: *m as usize,
+                estimator: estimator_from(*estimator)?,
+            },
+            WireSpec::Triangles { adjacency, m } => {
+                JobSpec::Triangles { adjacency: adjacency.to_ref()?, m: *m as usize }
+            }
+            WireSpec::SymmetricSketch { a, m } => {
+                JobSpec::SymmetricSketch { a: a.to_ref()?, m: *m as usize }
+            }
+            WireSpec::TraceOf { b } => JobSpec::TraceOf { b: b.to_ref()? },
+            WireSpec::TrianglesOf { b } => JobSpec::TrianglesOf { b: b.to_ref()? },
+            WireSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
+                JobSpec::RandSvd {
+                    a: a.to_ref()?,
+                    rank: *rank as usize,
+                    oversample: *oversample as usize,
+                    power_iters: *power_iters as usize,
+                    publish_q: *publish_q,
+                    tol: tol.map(f64::from_bits),
+                }
+            }
+            WireSpec::Lstsq { a, b, m, refine } => JobSpec::Lstsq {
+                a: a.to_ref()?,
+                b: b.iter().map(|&v| f64::from_bits(v)).collect(),
+                m: *m as usize,
+                refine: refine.map(|o| LsqrOpts {
+                    tol: f64::from_bits(o.tol),
+                    max_iters: o.max_iters as usize,
+                }),
+            },
+            WireSpec::Nystrom { a, m, rcond } => JobSpec::Nystrom {
+                a: a.to_ref()?,
+                m: *m as usize,
+                rcond: f64::from_bits(*rcond),
+            },
+        })
+    }
+}
+
+/// [`SubmitOptions`] on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireOptions {
+    pub priority: u8,
+    pub deadline_us: Option<u64>,
+    pub precision: u8,
+    pub bypass_cache: bool,
+}
+
+impl WireOptions {
+    pub fn from_opts(o: &SubmitOptions) -> Self {
+        Self {
+            priority: priority_code(o.priority),
+            deadline_us: o.deadline.map(|d| d.as_micros() as u64),
+            precision: precision_code(o.precision),
+            bypass_cache: o.bypass_cache,
+        }
+    }
+
+    pub fn to_opts(&self) -> Result<SubmitOptions, WireError> {
+        Ok(SubmitOptions {
+            priority: priority_from(self.priority)?,
+            deadline: self.deadline_us.map(Duration::from_micros),
+            precision: precision_from(self.precision)?,
+            bypass_cache: self.bypass_cache,
+        })
+    }
+}
+
+/// [`Payload`] on the wire (scalars/vectors as f64 bits).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WirePayload {
+    Matrix(WireMat),
+    Scalar(u64),
+    Vector(Vec<u64>),
+    Svd { u: WireMat, s: Vec<u64>, vt: WireMat },
+}
+
+/// [`JobResponse`] on the wire. `kind` and aux keys travel as strings
+/// and are interned back to the engine's static tables on decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub kind: String,
+    pub payload: WirePayload,
+    pub device: u8,
+    pub precision: u8,
+    pub latency_us: u64,
+    pub batched_cols: u64,
+    pub aux: Vec<(String, u64)>,
+    pub seq: u64,
+}
+
+impl WireResponse {
+    pub fn from_response(r: &JobResponse) -> Self {
+        let payload = match &r.payload {
+            Payload::Matrix(m) => WirePayload::Matrix(WireMat::from_mat(m)),
+            Payload::Scalar(s) => WirePayload::Scalar(s.to_bits()),
+            Payload::Vector(v) => WirePayload::Vector(v.iter().map(|x| x.to_bits()).collect()),
+            Payload::Svd { u, s, vt } => WirePayload::Svd {
+                u: WireMat::from_mat(u),
+                s: s.iter().map(|x| x.to_bits()).collect(),
+                vt: WireMat::from_mat(vt),
+            },
+        };
+        Self {
+            id: r.id,
+            kind: r.kind.to_string(),
+            payload,
+            device: device_code(r.device),
+            precision: precision_code(r.precision),
+            latency_us: r.latency_us,
+            batched_cols: r.batched_cols as u64,
+            aux: r.aux.iter().map(|(k, id)| (k.to_string(), id.0)).collect(),
+            seq: r.seq,
+        }
+    }
+
+    pub fn to_response(&self) -> Result<JobResponse, WireError> {
+        let payload = match &self.payload {
+            WirePayload::Matrix(m) => Payload::Matrix(m.to_mat()?),
+            WirePayload::Scalar(b) => Payload::Scalar(f64::from_bits(*b)),
+            WirePayload::Vector(v) => {
+                Payload::Vector(v.iter().map(|&b| f64::from_bits(b)).collect())
+            }
+            WirePayload::Svd { u, s, vt } => Payload::Svd {
+                u: u.to_mat()?,
+                s: s.iter().map(|&b| f64::from_bits(b)).collect(),
+                vt: vt.to_mat()?,
+            },
+        };
+        Ok(JobResponse {
+            id: self.id,
+            kind: static_kind(&self.kind),
+            payload,
+            device: device_from(self.device)?,
+            precision: precision_from(self.precision)?,
+            latency_us: self.latency_us,
+            batched_cols: self.batched_cols as usize,
+            aux: self
+                .aux
+                .iter()
+                .map(|(k, id)| (static_aux_key(k), OperandId(*id)))
+                .collect(),
+            seq: self.seq,
+        })
+    }
+}
+
+/// Wire status codes — the union of every typed refusal the embedded
+/// engine can issue, plus protocol-level codes. Mirrors a gRPC status
+/// enum; numbered explicitly so the values are part of the protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatusCode {
+    Ok,
+    AuthFailed,
+    Busy,
+    Closed,
+    UnknownOperand,
+    StageRefOutsidePlan,
+    UnknownStream,
+    StreamNotSealed,
+    StreamRefUnsupported,
+    StreamInvalid,
+    OverQuota,
+    Cancelled,
+    DeadlineExceeded,
+    Dropped,
+    PlanInvalid,
+    Failed,
+    BadFrame,
+    UnknownTag,
+    ShuttingDown,
+}
+
+impl StatusCode {
+    pub fn code(self) -> u16 {
+        match self {
+            StatusCode::Ok => 0,
+            StatusCode::AuthFailed => 1,
+            StatusCode::Busy => 2,
+            StatusCode::Closed => 3,
+            StatusCode::UnknownOperand => 4,
+            StatusCode::StageRefOutsidePlan => 5,
+            StatusCode::UnknownStream => 6,
+            StatusCode::StreamNotSealed => 7,
+            StatusCode::StreamRefUnsupported => 8,
+            StatusCode::StreamInvalid => 9,
+            StatusCode::OverQuota => 10,
+            StatusCode::Cancelled => 11,
+            StatusCode::DeadlineExceeded => 12,
+            StatusCode::Dropped => 13,
+            StatusCode::PlanInvalid => 14,
+            StatusCode::Failed => 15,
+            StatusCode::BadFrame => 16,
+            StatusCode::UnknownTag => 17,
+            StatusCode::ShuttingDown => 18,
+        }
+    }
+
+    pub fn from_code(v: u16) -> Result<Self, WireError> {
+        Ok(match v {
+            0 => StatusCode::Ok,
+            1 => StatusCode::AuthFailed,
+            2 => StatusCode::Busy,
+            3 => StatusCode::Closed,
+            4 => StatusCode::UnknownOperand,
+            5 => StatusCode::StageRefOutsidePlan,
+            6 => StatusCode::UnknownStream,
+            7 => StatusCode::StreamNotSealed,
+            8 => StatusCode::StreamRefUnsupported,
+            9 => StatusCode::StreamInvalid,
+            10 => StatusCode::OverQuota,
+            11 => StatusCode::Cancelled,
+            12 => StatusCode::DeadlineExceeded,
+            13 => StatusCode::Dropped,
+            14 => StatusCode::PlanInvalid,
+            15 => StatusCode::Failed,
+            16 => StatusCode::BadFrame,
+            17 => StatusCode::UnknownTag,
+            18 => StatusCode::ShuttingDown,
+            other => return Err(WireError::BadEnum { what: "status", value: other as u64 }),
+        })
+    }
+}
+
+/// One typed refusal on the wire: a code plus a human detail plus three
+/// structured numbers whose meaning the code fixes (e.g. `Busy` carries
+/// depth/cap, `OverQuota` carries needed/used/quota) — so the client
+/// reconstructs the exact in-process error, not a string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireStatus {
+    pub code: StatusCode,
+    pub detail: String,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+impl WireStatus {
+    pub fn new(code: StatusCode) -> Self {
+        Self { code, detail: String::new(), a: 0, b: 0, c: 0 }
+    }
+
+    pub fn with_detail(code: StatusCode, detail: impl Into<String>) -> Self {
+        Self { code, detail: detail.into(), a: 0, b: 0, c: 0 }
+    }
+
+    pub fn from_submit(e: &SubmitError) -> Self {
+        match e {
+            SubmitError::Busy { depth, cap } => Self {
+                a: *depth as u64,
+                b: *cap as u64,
+                ..Self::with_detail(StatusCode::Busy, e.to_string())
+            },
+            SubmitError::Closed => Self::with_detail(StatusCode::Closed, e.to_string()),
+            SubmitError::UnknownOperand(id) => Self {
+                a: id.0,
+                ..Self::with_detail(StatusCode::UnknownOperand, e.to_string())
+            },
+            SubmitError::StageRefOutsidePlan(i) => Self {
+                a: *i as u64,
+                ..Self::with_detail(StatusCode::StageRefOutsidePlan, e.to_string())
+            },
+            SubmitError::UnknownStream(id) => Self {
+                a: id.0,
+                ..Self::with_detail(StatusCode::UnknownStream, e.to_string())
+            },
+            SubmitError::StreamNotSealed(id) => Self {
+                a: id.0,
+                ..Self::with_detail(StatusCode::StreamNotSealed, e.to_string())
+            },
+            SubmitError::StreamRefUnsupported { kind } => {
+                Self::with_detail(StatusCode::StreamRefUnsupported, *kind)
+            }
+        }
+    }
+
+    pub fn from_job(e: &JobError) -> Self {
+        match e {
+            JobError::Cancelled => Self::with_detail(StatusCode::Cancelled, e.to_string()),
+            JobError::DeadlineExceeded { deadline, waited } => Self {
+                a: deadline.as_micros() as u64,
+                b: waited.as_micros() as u64,
+                ..Self::with_detail(StatusCode::DeadlineExceeded, e.to_string())
+            },
+            JobError::QueueClosed => Self::with_detail(StatusCode::Closed, e.to_string()),
+            JobError::Dropped => Self::with_detail(StatusCode::Dropped, e.to_string()),
+            JobError::Rejected(se) => Self::from_submit(se),
+            JobError::Plan(pe) => Self::with_detail(StatusCode::PlanInvalid, pe.to_string()),
+            JobError::Failed(msg) => Self::with_detail(StatusCode::Failed, msg.clone()),
+        }
+    }
+
+    pub fn from_store(e: &StoreError) -> Self {
+        match e {
+            StoreError::OverQuota { needed, used, quota } => Self {
+                a: *needed as u64,
+                b: *used as u64,
+                c: *quota as u64,
+                ..Self::with_detail(StatusCode::OverQuota, e.to_string())
+            },
+        }
+    }
+
+    pub fn from_stream(e: &StreamError) -> Self {
+        match e {
+            StreamError::UnknownStream(id) => Self {
+                a: id.0,
+                ..Self::with_detail(StatusCode::UnknownStream, e.to_string())
+            },
+            StreamError::NotSealed(id) => Self {
+                a: id.0,
+                ..Self::with_detail(StatusCode::StreamNotSealed, e.to_string())
+            },
+            StreamError::OverQuota(se) => Self::from_store(se),
+            other => Self::with_detail(StatusCode::StreamInvalid, other.to_string()),
+        }
+    }
+
+    /// Reconstruct the in-process submit refusal, if this status is one.
+    pub fn try_submit_error(&self) -> Option<SubmitError> {
+        Some(match self.code {
+            StatusCode::Busy => {
+                SubmitError::Busy { depth: self.a as usize, cap: self.b as usize }
+            }
+            StatusCode::Closed | StatusCode::ShuttingDown => SubmitError::Closed,
+            StatusCode::UnknownOperand => SubmitError::UnknownOperand(OperandId(self.a)),
+            StatusCode::StageRefOutsidePlan => {
+                SubmitError::StageRefOutsidePlan(self.a as usize)
+            }
+            StatusCode::UnknownStream => SubmitError::UnknownStream(StreamId(self.a)),
+            StatusCode::StreamNotSealed => SubmitError::StreamNotSealed(StreamId(self.a)),
+            StatusCode::StreamRefUnsupported => {
+                SubmitError::StreamRefUnsupported { kind: static_kind(&self.detail) }
+            }
+            _ => return None,
+        })
+    }
+
+    /// Reconstruct a terminal job failure, if this status is one.
+    pub fn try_job_error(&self) -> Option<JobError> {
+        Some(match self.code {
+            StatusCode::Cancelled => JobError::Cancelled,
+            StatusCode::DeadlineExceeded => JobError::DeadlineExceeded {
+                deadline: Duration::from_micros(self.a),
+                waited: Duration::from_micros(self.b),
+            },
+            StatusCode::Closed | StatusCode::ShuttingDown => JobError::QueueClosed,
+            StatusCode::Dropped => JobError::Dropped,
+            // Plan structure does not cross the wire; the detail does.
+            StatusCode::PlanInvalid | StatusCode::Failed => {
+                JobError::Failed(self.detail.clone())
+            }
+            _ => return Some(JobError::Rejected(self.try_submit_error()?)),
+        })
+    }
+
+    /// Reconstruct the store refusal, if this status is one.
+    pub fn try_store_error(&self) -> Option<StoreError> {
+        match self.code {
+            StatusCode::OverQuota => Some(StoreError::OverQuota {
+                needed: self.a as usize,
+                used: self.b as usize,
+                quota: self.c as usize,
+            }),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for WireStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.code)?;
+        if !self.detail.is_empty() {
+            write!(f, ": {}", self.detail)?;
+        }
+        Ok(())
+    }
+}
+
+/// Every frame of the protocol. Tags 1..=11 travel client → server,
+/// 32..=42 server → client; [`Frame::Unknown`] is the decoded shape of
+/// any unassigned tag (payload consumed, connection survives).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    // client -> server
+    Hello { version: u16, token: String },
+    Upload { mat: WireMat },
+    FreeOperand { id: u64 },
+    /// `chunk_rows == 0` means "server default".
+    BeginStream {
+        rows: u64,
+        cols: u64,
+        chunk_rows: u64,
+        sketch_m: u64,
+        fd_rank: u64,
+        range_cap: u64,
+    },
+    AppendStream { id: u64, rows: WireMat },
+    SealStream { id: u64 },
+    FreeStream { id: u64 },
+    Submit { spec: WireSpec, opts: WireOptions },
+    Cancel { job: u64 },
+    Report,
+    Goodbye,
+    // server -> client
+    HelloOk { tenant: String, qos: u8, quota: u64 },
+    Status(WireStatus),
+    OperandOk { id: u64, bytes: u64 },
+    Freed { existed: bool },
+    StreamOk { id: u64 },
+    Ack,
+    Submitted { job: u64 },
+    JobDone(WireResponse),
+    CancelOk { cancelled: bool },
+    ReportText { text: String },
+    ShuttingDown,
+    /// Forward compatibility: an unassigned tag whose payload was
+    /// consumed and discarded.
+    Unknown { tag: u16 },
+}
+
+impl Frame {
+    pub fn tag(&self) -> u16 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::Upload { .. } => 2,
+            Frame::FreeOperand { .. } => 3,
+            Frame::BeginStream { .. } => 4,
+            Frame::AppendStream { .. } => 5,
+            Frame::SealStream { .. } => 6,
+            Frame::FreeStream { .. } => 7,
+            Frame::Submit { .. } => 8,
+            Frame::Cancel { .. } => 9,
+            Frame::Report => 10,
+            Frame::Goodbye => 11,
+            Frame::HelloOk { .. } => 32,
+            Frame::Status(_) => 33,
+            Frame::OperandOk { .. } => 34,
+            Frame::Freed { .. } => 35,
+            Frame::StreamOk { .. } => 36,
+            Frame::Ack => 37,
+            Frame::Submitted { .. } => 38,
+            Frame::JobDone(_) => 39,
+            Frame::CancelOk { .. } => 40,
+            Frame::ReportText { .. } => 41,
+            Frame::ShuttingDown => 42,
+            Frame::Unknown { tag } => *tag,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive encoder/decoder
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn bits(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+        }
+    }
+
+    fn mat(&mut self, m: &WireMat) {
+        self.u32(m.rows);
+        self.u32(m.cols);
+        for &x in &m.data {
+            self.u64(x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, at: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn boolean(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(WireError::BadEnum { what: "bool", value: other as u64 }),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        if n > MAX_STR_BYTES {
+            return Err(WireError::BadLength { what: "string", claimed: n as u64 });
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    /// A `u64`-bits vector; the count is validated against the bytes
+    /// actually present before any allocation.
+    fn bits(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(8) > self.remaining() {
+            return Err(WireError::Truncated { need: n * 8, have: self.remaining() });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            other => Err(WireError::BadEnum { what: "option", value: other as u64 }),
+        }
+    }
+
+    fn mat(&mut self) -> Result<WireMat, WireError> {
+        let rows = self.u32()?;
+        let cols = self.u32()?;
+        let count = (rows as usize)
+            .checked_mul(cols as usize)
+            .ok_or(WireError::BadLength { what: "matrix", claimed: u64::MAX })?;
+        if count.saturating_mul(8) > self.remaining() {
+            return Err(WireError::Truncated { need: count * 8, have: self.remaining() });
+        }
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.u64()?);
+        }
+        Ok(WireMat { rows, cols, data })
+    }
+
+    fn done(self) -> Result<(), WireError> {
+        if self.at != self.buf.len() {
+            return Err(WireError::Trailing { extra: self.buf.len() - self.at });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Enum code tables
+// ---------------------------------------------------------------------
+
+pub fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::Interactive => 0,
+        Priority::Batch => 1,
+    }
+}
+
+pub fn priority_from(v: u8) -> Result<Priority, WireError> {
+    match v {
+        0 => Ok(Priority::Interactive),
+        1 => Ok(Priority::Batch),
+        other => Err(WireError::BadEnum { what: "priority", value: other as u64 }),
+    }
+}
+
+pub fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+        Precision::Bf16 => 2,
+    }
+}
+
+pub fn precision_from(v: u8) -> Result<Precision, WireError> {
+    match v {
+        0 => Ok(Precision::F64),
+        1 => Ok(Precision::F32),
+        2 => Ok(Precision::Bf16),
+        other => Err(WireError::BadEnum { what: "precision", value: other as u64 }),
+    }
+}
+
+pub fn device_code(d: Device) -> u8 {
+    match d {
+        Device::Opu => 0,
+        Device::Pjrt => 1,
+        Device::Host => 2,
+    }
+}
+
+pub fn device_from(v: u8) -> Result<Device, WireError> {
+    match v {
+        0 => Ok(Device::Opu),
+        1 => Ok(Device::Pjrt),
+        2 => Ok(Device::Host),
+        other => Err(WireError::BadEnum { what: "device", value: other as u64 }),
+    }
+}
+
+pub fn estimator_code(e: TraceEstimator) -> u8 {
+    match e {
+        TraceEstimator::Hutchinson => 0,
+        TraceEstimator::HutchPP => 1,
+    }
+}
+
+pub fn estimator_from(v: u8) -> Result<TraceEstimator, WireError> {
+    match v {
+        0 => Ok(TraceEstimator::Hutchinson),
+        1 => Ok(TraceEstimator::HutchPP),
+        other => Err(WireError::BadEnum { what: "estimator", value: other as u64 }),
+    }
+}
+
+/// Intern a wire `kind` string back to the engine's static kind table
+/// (response kinds and `StreamRefUnsupported` kinds are `&'static str`
+/// in-process). Unlisted strings intern to `"unknown"`.
+pub fn static_kind(s: &str) -> &'static str {
+    const KINDS: [&str; 10] = [
+        "projection",
+        "approx_matmul",
+        "trace",
+        "triangles",
+        "symmetric_sketch",
+        "trace_of",
+        "triangles_of",
+        "randsvd",
+        "lstsq",
+        "nystrom",
+    ];
+    KINDS.iter().find(|&&k| k == s).copied().unwrap_or("unknown")
+}
+
+/// Intern an aux-handle key (today only the published range basis).
+fn static_aux_key(s: &str) -> &'static str {
+    if s == "q" {
+        "q"
+    } else {
+        "aux"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encode/decode
+// ---------------------------------------------------------------------
+
+fn encode_spec(e: &mut Enc, spec: &WireSpec) {
+    match spec {
+        WireSpec::Projection { data, m } => {
+            e.u8(0);
+            encode_ref(e, data);
+            e.u64(*m);
+        }
+        WireSpec::ApproxMatmul { a, b, m } => {
+            e.u8(1);
+            encode_ref(e, a);
+            encode_ref(e, b);
+            e.u64(*m);
+        }
+        WireSpec::Trace { a, m, estimator } => {
+            e.u8(2);
+            encode_ref(e, a);
+            e.u64(*m);
+            e.u8(*estimator);
+        }
+        WireSpec::Triangles { adjacency, m } => {
+            e.u8(3);
+            encode_ref(e, adjacency);
+            e.u64(*m);
+        }
+        WireSpec::SymmetricSketch { a, m } => {
+            e.u8(4);
+            encode_ref(e, a);
+            e.u64(*m);
+        }
+        WireSpec::TraceOf { b } => {
+            e.u8(5);
+            encode_ref(e, b);
+        }
+        WireSpec::TrianglesOf { b } => {
+            e.u8(6);
+            encode_ref(e, b);
+        }
+        WireSpec::RandSvd { a, rank, oversample, power_iters, publish_q, tol } => {
+            e.u8(7);
+            encode_ref(e, a);
+            e.u64(*rank);
+            e.u64(*oversample);
+            e.u64(*power_iters);
+            e.boolean(*publish_q);
+            e.opt_u64(*tol);
+        }
+        WireSpec::Lstsq { a, b, m, refine } => {
+            e.u8(8);
+            encode_ref(e, a);
+            e.bits(b);
+            e.u64(*m);
+            match refine {
+                None => e.u8(0),
+                Some(o) => {
+                    e.u8(1);
+                    e.u64(o.tol);
+                    e.u64(o.max_iters);
+                }
+            }
+        }
+        WireSpec::Nystrom { a, m, rcond } => {
+            e.u8(9);
+            encode_ref(e, a);
+            e.u64(*m);
+            e.u64(*rcond);
+        }
+    }
+}
+
+fn decode_spec(d: &mut Dec<'_>) -> Result<WireSpec, WireError> {
+    Ok(match d.u8()? {
+        0 => WireSpec::Projection { data: decode_ref(d)?, m: d.u64()? },
+        1 => WireSpec::ApproxMatmul { a: decode_ref(d)?, b: decode_ref(d)?, m: d.u64()? },
+        2 => WireSpec::Trace { a: decode_ref(d)?, m: d.u64()?, estimator: d.u8()? },
+        3 => WireSpec::Triangles { adjacency: decode_ref(d)?, m: d.u64()? },
+        4 => WireSpec::SymmetricSketch { a: decode_ref(d)?, m: d.u64()? },
+        5 => WireSpec::TraceOf { b: decode_ref(d)? },
+        6 => WireSpec::TrianglesOf { b: decode_ref(d)? },
+        7 => WireSpec::RandSvd {
+            a: decode_ref(d)?,
+            rank: d.u64()?,
+            oversample: d.u64()?,
+            power_iters: d.u64()?,
+            publish_q: d.boolean()?,
+            tol: d.opt_u64()?,
+        },
+        8 => WireSpec::Lstsq {
+            a: decode_ref(d)?,
+            b: d.bits()?,
+            m: d.u64()?,
+            refine: match d.u8()? {
+                0 => None,
+                1 => Some(WireLsqr { tol: d.u64()?, max_iters: d.u64()? }),
+                other => {
+                    return Err(WireError::BadEnum { what: "refine", value: other as u64 })
+                }
+            },
+        },
+        9 => WireSpec::Nystrom { a: decode_ref(d)?, m: d.u64()?, rcond: d.u64()? },
+        other => return Err(WireError::BadEnum { what: "spec", value: other as u64 }),
+    })
+}
+
+fn encode_ref(e: &mut Enc, r: &WireRef) {
+    match r {
+        WireRef::Handle(id) => {
+            e.u8(0);
+            e.u64(*id);
+        }
+        WireRef::Inline(m) => {
+            e.u8(1);
+            e.mat(m);
+        }
+        WireRef::Stage(i) => {
+            e.u8(2);
+            e.u64(*i);
+        }
+        WireRef::Stream(id) => {
+            e.u8(3);
+            e.u64(*id);
+        }
+    }
+}
+
+fn decode_ref(d: &mut Dec<'_>) -> Result<WireRef, WireError> {
+    Ok(match d.u8()? {
+        0 => WireRef::Handle(d.u64()?),
+        1 => WireRef::Inline(d.mat()?),
+        2 => WireRef::Stage(d.u64()?),
+        3 => WireRef::Stream(d.u64()?),
+        other => return Err(WireError::BadEnum { what: "operand ref", value: other as u64 }),
+    })
+}
+
+fn encode_status(e: &mut Enc, s: &WireStatus) {
+    e.u16(s.code.code());
+    e.str(&s.detail);
+    e.u64(s.a);
+    e.u64(s.b);
+    e.u64(s.c);
+}
+
+fn decode_status(d: &mut Dec<'_>) -> Result<WireStatus, WireError> {
+    Ok(WireStatus {
+        code: StatusCode::from_code(d.u16()?)?,
+        detail: d.str()?,
+        a: d.u64()?,
+        b: d.u64()?,
+        c: d.u64()?,
+    })
+}
+
+fn encode_payload(e: &mut Enc, p: &WirePayload) {
+    match p {
+        WirePayload::Matrix(m) => {
+            e.u8(0);
+            e.mat(m);
+        }
+        WirePayload::Scalar(s) => {
+            e.u8(1);
+            e.u64(*s);
+        }
+        WirePayload::Vector(v) => {
+            e.u8(2);
+            e.bits(v);
+        }
+        WirePayload::Svd { u, s, vt } => {
+            e.u8(3);
+            e.mat(u);
+            e.bits(s);
+            e.mat(vt);
+        }
+    }
+}
+
+fn decode_payload(d: &mut Dec<'_>) -> Result<WirePayload, WireError> {
+    Ok(match d.u8()? {
+        0 => WirePayload::Matrix(d.mat()?),
+        1 => WirePayload::Scalar(d.u64()?),
+        2 => WirePayload::Vector(d.bits()?),
+        3 => WirePayload::Svd { u: d.mat()?, s: d.bits()?, vt: d.mat()? },
+        other => return Err(WireError::BadEnum { what: "payload", value: other as u64 }),
+    })
+}
+
+fn encode_response(e: &mut Enc, r: &WireResponse) {
+    e.u64(r.id);
+    e.str(&r.kind);
+    encode_payload(e, &r.payload);
+    e.u8(r.device);
+    e.u8(r.precision);
+    e.u64(r.latency_us);
+    e.u64(r.batched_cols);
+    e.u32(r.aux.len() as u32);
+    for (k, id) in &r.aux {
+        e.str(k);
+        e.u64(*id);
+    }
+    e.u64(r.seq);
+}
+
+fn decode_response(d: &mut Dec<'_>) -> Result<WireResponse, WireError> {
+    let id = d.u64()?;
+    let kind = d.str()?;
+    let payload = decode_payload(d)?;
+    let device = d.u8()?;
+    let precision = d.u8()?;
+    let latency_us = d.u64()?;
+    let batched_cols = d.u64()?;
+    let naux = d.u32()? as usize;
+    // Each aux entry is at least 12 bytes (empty key + id).
+    if naux.saturating_mul(12) > d.remaining() {
+        return Err(WireError::Truncated { need: naux * 12, have: d.remaining() });
+    }
+    let mut aux = Vec::with_capacity(naux);
+    for _ in 0..naux {
+        let k = d.str()?;
+        let v = d.u64()?;
+        aux.push((k, v));
+    }
+    let seq = d.u64()?;
+    Ok(WireResponse { id, kind, payload, device, precision, latency_us, batched_cols, aux, seq })
+}
+
+fn encode_frame_body(e: &mut Enc, frame: &Frame) {
+    match frame {
+        Frame::Hello { version, token } => {
+            e.u16(*version);
+            e.str(token);
+        }
+        Frame::Upload { mat } => e.mat(mat),
+        Frame::FreeOperand { id } => e.u64(*id),
+        Frame::BeginStream { rows, cols, chunk_rows, sketch_m, fd_rank, range_cap } => {
+            e.u64(*rows);
+            e.u64(*cols);
+            e.u64(*chunk_rows);
+            e.u64(*sketch_m);
+            e.u64(*fd_rank);
+            e.u64(*range_cap);
+        }
+        Frame::AppendStream { id, rows } => {
+            e.u64(*id);
+            e.mat(rows);
+        }
+        Frame::SealStream { id } => e.u64(*id),
+        Frame::FreeStream { id } => e.u64(*id),
+        Frame::Submit { spec, opts } => {
+            encode_spec(e, spec);
+            e.u8(opts.priority);
+            e.opt_u64(opts.deadline_us);
+            e.u8(opts.precision);
+            e.boolean(opts.bypass_cache);
+        }
+        Frame::Cancel { job } => e.u64(*job),
+        Frame::Report | Frame::Goodbye | Frame::Ack | Frame::ShuttingDown => {}
+        Frame::HelloOk { tenant, qos, quota } => {
+            e.str(tenant);
+            e.u8(*qos);
+            e.u64(*quota);
+        }
+        Frame::Status(s) => encode_status(e, s),
+        Frame::OperandOk { id, bytes } => {
+            e.u64(*id);
+            e.u64(*bytes);
+        }
+        Frame::Freed { existed } => e.boolean(*existed),
+        Frame::StreamOk { id } => e.u64(*id),
+        Frame::Submitted { job } => e.u64(*job),
+        Frame::JobDone(r) => encode_response(e, r),
+        Frame::CancelOk { cancelled } => e.boolean(*cancelled),
+        Frame::ReportText { text } => e.str(text),
+        Frame::Unknown { .. } => {}
+    }
+}
+
+/// Encode one complete frame (length prefix included).
+pub fn encode_frame(req_id: u64, frame: &Frame) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u64(req_id);
+    e.u16(frame.tag());
+    encode_frame_body(&mut e, frame);
+    let body = e.buf;
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode one frame body (everything after the length prefix).
+pub fn decode_body(body: &[u8]) -> Result<(u64, Frame), WireError> {
+    let mut d = Dec::new(body);
+    let req_id = d.u64()?;
+    let tag = d.u16()?;
+    let frame = match tag {
+        1 => Frame::Hello { version: d.u16()?, token: d.str()? },
+        2 => Frame::Upload { mat: d.mat()? },
+        3 => Frame::FreeOperand { id: d.u64()? },
+        4 => Frame::BeginStream {
+            rows: d.u64()?,
+            cols: d.u64()?,
+            chunk_rows: d.u64()?,
+            sketch_m: d.u64()?,
+            fd_rank: d.u64()?,
+            range_cap: d.u64()?,
+        },
+        5 => Frame::AppendStream { id: d.u64()?, rows: d.mat()? },
+        6 => Frame::SealStream { id: d.u64()? },
+        7 => Frame::FreeStream { id: d.u64()? },
+        8 => Frame::Submit {
+            spec: decode_spec(&mut d)?,
+            opts: WireOptions {
+                priority: d.u8()?,
+                deadline_us: d.opt_u64()?,
+                precision: d.u8()?,
+                bypass_cache: d.boolean()?,
+            },
+        },
+        9 => Frame::Cancel { job: d.u64()? },
+        10 => Frame::Report,
+        11 => Frame::Goodbye,
+        32 => Frame::HelloOk { tenant: d.str()?, qos: d.u8()?, quota: d.u64()? },
+        33 => Frame::Status(decode_status(&mut d)?),
+        34 => Frame::OperandOk { id: d.u64()?, bytes: d.u64()? },
+        35 => Frame::Freed { existed: d.boolean()? },
+        36 => Frame::StreamOk { id: d.u64()? },
+        37 => Frame::Ack,
+        38 => Frame::Submitted { job: d.u64()? },
+        39 => Frame::JobDone(decode_response(&mut d)?),
+        40 => Frame::CancelOk { cancelled: d.boolean()? },
+        41 => Frame::ReportText { text: d.str()? },
+        42 => Frame::ShuttingDown,
+        other => {
+            // Forward compatibility: consume the payload, keep the
+            // connection. The caller decides whether to answer with
+            // `StatusCode::UnknownTag`.
+            let n = d.remaining();
+            let _ = d.take(n);
+            Frame::Unknown { tag: other }
+        }
+    };
+    d.done()?;
+    Ok((req_id, frame))
+}
+
+/// Write one frame (single `write_all` of the encoded bytes, so
+/// concurrent writers serialised by a mutex never interleave frames).
+pub fn write_frame<W: Write>(w: &mut W, req_id: u64, frame: &Frame) -> Result<(), WireError> {
+    let bytes = encode_frame(req_id, frame);
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn header_len(len4: [u8; 4]) -> Result<usize, WireError> {
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES });
+    }
+    if len < MIN_BODY {
+        return Err(WireError::Truncated { need: MIN_BODY, have: len });
+    }
+    Ok(len)
+}
+
+/// Blocking read of one frame. EOF at a frame boundary is
+/// [`WireError::Closed`]; EOF mid-frame is [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u64, Frame), WireError> {
+    let mut len4 = [0u8; 4];
+    read_full(r, &mut len4, true, None)?;
+    let len = header_len(len4)?;
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body, false, None)?;
+    decode_body(&body)
+}
+
+/// Polling read for sockets with a read timeout: a timeout at a frame
+/// boundary returns `Ok(None)` (idle tick — the caller checks its
+/// shutdown flag and calls again); a timeout mid-frame keeps reading
+/// unless `stop` is set, so split frames survive slow senders without
+/// corrupting the stream.
+pub fn read_frame_poll<R: Read>(
+    r: &mut R,
+    stop: &AtomicBool,
+) -> Result<Option<(u64, Frame)>, WireError> {
+    let mut len4 = [0u8; 4];
+    match read_full(r, &mut len4, true, Some(stop)) {
+        Ok(()) => {}
+        Err(WireError::Io(ErrorKind::WouldBlock)) => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = header_len(len4)?;
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body, false, Some(stop))?;
+    decode_body(&body).map(Some)
+}
+
+/// Fill `buf` from `r`. With `stop` set (polling mode), a timeout with
+/// zero bytes read at a frame boundary surfaces as
+/// `Io(ErrorKind::WouldBlock)`; a timeout mid-read retries until the
+/// stop flag aborts with [`WireError::Closed`].
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    boundary: bool,
+    stop: Option<&AtomicBool>,
+) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if boundary && got == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated { need: buf.len(), have: got }
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+                    && stop.is_some() =>
+            {
+                if boundary && got == 0 {
+                    return Err(WireError::Io(ErrorKind::WouldBlock));
+                }
+                if stop.is_some_and(|s| s.load(Ordering::SeqCst)) {
+                    return Err(WireError::Closed);
+                }
+            }
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let bytes = encode_frame(7, frame);
+        let mut cursor = &bytes[..];
+        let (req, decoded) = read_frame(&mut cursor).expect("decode");
+        assert_eq!(req, 7);
+        assert_eq!(&decoded, frame, "value round trip");
+        assert_eq!(encode_frame(7, &decoded), bytes, "byte round trip");
+        decoded
+    }
+
+    #[test]
+    fn simple_frames_round_trip() {
+        roundtrip(&Frame::Hello { version: WIRE_VERSION, token: "secret".into() });
+        roundtrip(&Frame::Report);
+        roundtrip(&Frame::Goodbye);
+        roundtrip(&Frame::Ack);
+        roundtrip(&Frame::ShuttingDown);
+        roundtrip(&Frame::HelloOk { tenant: "acme".into(), qos: 1, quota: 1 << 20 });
+        roundtrip(&Frame::OperandOk { id: 3, bytes: 4096 });
+        roundtrip(&Frame::Freed { existed: true });
+        roundtrip(&Frame::StreamOk { id: 9 });
+        roundtrip(&Frame::Submitted { job: 42 });
+        roundtrip(&Frame::CancelOk { cancelled: false });
+        roundtrip(&Frame::ReportText { text: "submitted=1".into() });
+        roundtrip(&Frame::Cancel { job: 5 });
+        roundtrip(&Frame::FreeOperand { id: 11 });
+        roundtrip(&Frame::SealStream { id: 2 });
+    }
+
+    #[test]
+    fn mat_round_trip_is_bit_exact_including_nan() {
+        let mut m = Mat::eye(3);
+        m.data[1] = f64::NAN;
+        m.data[2] = -0.0;
+        let wm = WireMat::from_mat(&m);
+        let decoded = roundtrip(&Frame::Upload { mat: wm.clone() });
+        let Frame::Upload { mat } = decoded else { panic!("wrong frame") };
+        let back = mat.to_mat().unwrap();
+        assert_eq!(back.rows, 3);
+        // Bit-exact: NaN and -0.0 preserved.
+        assert_eq!(back.data[1].to_bits(), f64::NAN.to_bits());
+        assert_eq!(back.data[2].to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn submit_frame_round_trips_every_field() {
+        let spec = JobSpec::Lstsq {
+            a: OperandRef::Handle(OperandId(4)),
+            b: vec![1.5, -2.5, 0.0],
+            m: 8,
+            refine: Some(LsqrOpts { tol: 1e-7, max_iters: 13 }),
+        };
+        let opts = SubmitOptions::interactive()
+            .with_deadline(Duration::from_millis(5))
+            .with_precision(Precision::Bf16)
+            .bypass_cache();
+        let frame = Frame::Submit {
+            spec: WireSpec::from_spec(&spec),
+            opts: WireOptions::from_opts(&opts),
+        };
+        let decoded = roundtrip(&frame);
+        let Frame::Submit { spec: wspec, opts: wopts } = decoded else {
+            panic!("wrong frame");
+        };
+        match wspec.to_spec().unwrap() {
+            JobSpec::Lstsq { a: OperandRef::Handle(id), b, m: 8, refine: Some(o) } => {
+                assert_eq!(id, OperandId(4));
+                assert_eq!(b, vec![1.5, -2.5, 0.0]);
+                assert_eq!(o.max_iters, 13);
+            }
+            other => panic!("wrong spec: {other:?}"),
+        }
+        let back = wopts.to_opts().unwrap();
+        assert_eq!(back.priority, Priority::Interactive);
+        assert_eq!(back.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(back.precision, Precision::Bf16);
+        assert!(back.bypass_cache);
+    }
+
+    #[test]
+    fn unknown_tag_skips_cleanly() {
+        let mut e = Enc::default();
+        e.u64(3); // req id
+        e.u16(999); // unassigned tag
+        e.u32(0xdeadbeef); // opaque payload
+        let mut out = (e.buf.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&e.buf);
+        let (req, frame) = read_frame(&mut &out[..]).unwrap();
+        assert_eq!(req, 3);
+        assert_eq!(frame, Frame::Unknown { tag: 999 });
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_are_typed_errors() {
+        let bytes = encode_frame(1, &Frame::Submitted { job: 7 });
+        for cut in 0..bytes.len() {
+            let err = read_frame(&mut &bytes[..cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes decoded");
+        }
+        // Empty input: clean close at a boundary.
+        assert_eq!(read_frame(&mut &[][..]).unwrap_err(), WireError::Closed);
+        // Oversized announced length is refused before allocation.
+        let huge = (u32::MAX).to_le_bytes();
+        match read_frame(&mut &huge[..]) {
+            Err(WireError::Oversized { .. }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // A length below the body minimum is refused.
+        let tiny = 4u32.to_le_bytes();
+        match read_frame(&mut &tiny[..]) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_enum_discriminants_are_typed_errors() {
+        let mut bytes = encode_frame(1, &Frame::Status(WireStatus::new(StatusCode::Ok)));
+        // Corrupt the status code field (first payload bytes after the
+        // 4-byte length + 8-byte req id + 2-byte tag).
+        bytes[14] = 0xff;
+        bytes[15] = 0xff;
+        match read_frame(&mut &bytes[..]) {
+            Err(WireError::BadEnum { what: "status", .. }) => {}
+            other => panic!("expected BadEnum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_typed_error() {
+        let mut e = Enc::default();
+        e.u64(1);
+        e.u16(37); // Ack takes no payload
+        e.u8(0xaa); // ...but one byte rides along
+        let mut out = (e.buf.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&e.buf);
+        assert_eq!(read_frame(&mut &out[..]).unwrap_err(), WireError::Trailing { extra: 1 });
+    }
+
+    #[test]
+    fn status_codes_round_trip_and_reconstruct_typed_errors() {
+        let busy = SubmitError::Busy { depth: 8, cap: 8 };
+        let s = WireStatus::from_submit(&busy);
+        assert_eq!(s.try_submit_error(), Some(busy.clone()));
+        assert_eq!(s.try_job_error(), Some(JobError::Rejected(busy)));
+
+        let quota = StoreError::OverQuota { needed: 100, used: 900, quota: 1000 };
+        let s = WireStatus::from_store(&quota);
+        assert_eq!(s.code, StatusCode::OverQuota);
+        assert_eq!(s.try_store_error(), Some(quota));
+
+        let s = WireStatus::from_job(&JobError::Cancelled);
+        assert_eq!(s.try_job_error(), Some(JobError::Cancelled));
+
+        let dl = JobError::DeadlineExceeded {
+            deadline: Duration::from_micros(1000),
+            waited: Duration::from_micros(5000),
+        };
+        assert_eq!(WireStatus::from_job(&dl).try_job_error(), Some(dl));
+
+        let unsup = SubmitError::StreamRefUnsupported { kind: "nystrom" };
+        let s = WireStatus::from_submit(&unsup);
+        assert_eq!(s.try_submit_error(), Some(unsup));
+
+        // Stream refusals map too (OverQuota inside a StreamError
+        // surfaces as the store's code, so quota handling is uniform).
+        let se = StreamError::OverQuota(StoreError::OverQuota { needed: 1, used: 2, quota: 3 });
+        assert_eq!(WireStatus::from_stream(&se).code, StatusCode::OverQuota);
+        assert_eq!(WireStatus::from_stream(&StreamError::NotSealed(StreamId(2))).a, 2);
+
+        // Auth/protocol codes are not submit/job/store errors.
+        let auth = WireStatus::new(StatusCode::AuthFailed);
+        assert_eq!(auth.try_submit_error(), None);
+        assert_eq!(auth.try_store_error(), None);
+        for v in 0..19u16 {
+            assert_eq!(StatusCode::from_code(v).unwrap().code(), v);
+        }
+        assert!(StatusCode::from_code(19).is_err());
+    }
+
+    #[test]
+    fn kind_interning_covers_the_engine_table() {
+        assert_eq!(static_kind("randsvd"), "randsvd");
+        assert_eq!(static_kind("lstsq"), "lstsq");
+        assert_eq!(static_kind("no-such-kind"), "unknown");
+        assert_eq!(static_aux_key("q"), "q");
+        assert_eq!(static_aux_key("future"), "aux");
+    }
+
+    #[test]
+    fn response_round_trip_preserves_payload_bits() {
+        let resp = JobResponse {
+            id: 9,
+            kind: "randsvd",
+            payload: Payload::Svd {
+                u: Mat::eye(2),
+                s: vec![3.5, 0.25],
+                vt: Mat::eye(2),
+            },
+            device: Device::Host,
+            precision: Precision::F32,
+            latency_us: 777,
+            batched_cols: 4,
+            aux: vec![("q", OperandId(12))],
+            seq: 3,
+        };
+        let frame = Frame::JobDone(WireResponse::from_response(&resp));
+        let Frame::JobDone(wr) = roundtrip(&frame) else { panic!("wrong frame") };
+        let back = wr.to_response().unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.kind, "randsvd");
+        assert_eq!(back.device, Device::Host);
+        assert_eq!(back.precision, Precision::F32);
+        assert_eq!(back.aux, vec![("q", OperandId(12))]);
+        let (u, s, vt) = back.payload.svd().unwrap();
+        assert_eq!(u.data, Mat::eye(2).data);
+        assert_eq!(s, &[3.5, 0.25]);
+        assert_eq!(vt.rows, 2);
+    }
+}

@@ -23,6 +23,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod graph;
 pub mod linalg;
+pub mod net;
 pub mod opu;
 pub mod parallel;
 pub mod perfmodel;

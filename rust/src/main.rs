@@ -4,19 +4,23 @@
 //!   fig1    regenerate Fig. 1 (quality: matmul/trace/triangles/randsvd)
 //!   fig2    regenerate Fig. 2 (projection time vs dimension)
 //!   claims  check the §I/§III scalar claims against the models
-//!   serve   run the coordinator over a synthetic job trace (E2E demo)
+//!   serve   run the coordinator over a synthetic job trace (E2E demo),
+//!           or front it over TCP with --listen/--tenants
+//!   remote  drive a remote coordinator over the wire protocol
 //!   info    artifact + device inventory
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
     BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, OperandId,
-    OperandRef, Policy, PoolConfig, Precision, PrecisionPolicy, StreamError, StreamId,
-    StreamOpts, SubmitOptions, Ticket, TraceEstimator,
+    OperandRef, Payload, Policy, PoolConfig, Precision, PrecisionPolicy, StreamError, StreamId,
+    StreamOpts, SubmitOptions, TenantRegistry, Ticket, TraceEstimator,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
+use photonic_randnla::net::{WireClient, WireServer};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::perfmodel::SketchKind;
 use photonic_randnla::reports::{claims, fig1, fig2, print_rows, Row};
@@ -25,7 +29,7 @@ use photonic_randnla::runtime::PjrtEngine;
 use photonic_randnla::workload::traces::{self, JobKind, TraceConfig};
 use photonic_randnla::workload::{correlated_pair, psd_matrix};
 
-const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
+const USAGE: &str = "photon <fig1|fig2|claims|serve|remote|info> [options]
 
   fig1   [--panel matmul|trace|triangles|randsvd|all] [--n 256]
          [--trials 3] [--noise ideal|realistic|harsh] [--seed 7]
@@ -44,7 +48,38 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|info> [options]
            auto lets accuracy contracts buy cheaper tiers)
          [--stream-chunk-rows 256] (streaming-ingest chunk size)
          [--artifacts DIR] [--compression 0.25] [--sizes 128,256,512]
+         [--listen ADDR] [--tenants FILE] (network front door: serve
+           the session API over framed TCP instead of the synthetic
+           trace; FILE has one name:token:quota_mb:qos per line,
+           quota_mb 0 = unbounded, qos interactive|batch;
+           Ctrl-C drains in-flight jobs and syncs the event log)
+  remote --connect HOST:PORT --token TOKEN
+         [--op trace|projection|randsvd|nystrom] [--n 256] [--m 64]
+         [--jobs 8] [--seed 7] [--report] (print the server's
+           metrics report, including per-tenant counters)
   info   [--artifacts DIR]";
+
+/// Set by the SIGINT handler; `serve --listen` polls it to begin a
+/// graceful shutdown.
+static CTRL_C: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_sigint(_sig: i32) {
+    CTRL_C.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+fn install_sigint() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    // SIGINT = 2 everywhere POSIX; std exposes no signal API.
+    unsafe {
+        signal(2, on_sigint);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint() {}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,6 +88,7 @@ fn main() {
         Some("fig2") => cmd_fig2(&argv[1..]),
         Some("claims") => cmd_claims(),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("remote") => cmd_remote(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
         _ => {
             eprintln!("{USAGE}");
@@ -217,6 +253,33 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         cache_quota: cache_mb * 1024 * 1024,
     })
     .map_err(|e| e.to_string())?;
+
+    // Network front door: hand the engine to the TCP serving plane and
+    // run until SIGINT, then drain gracefully (no synthetic trace).
+    if let Some(listen) = args.get("listen") {
+        let tenants_path = args.get("tenants").ok_or_else(|| {
+            "--listen requires --tenants FILE (one name:token:quota_mb:qos per line)"
+                .to_string()
+        })?;
+        let tenants = TenantRegistry::load(tenants_path)?;
+        let provisioned = tenants.len();
+        let server = WireServer::start(coord, listen, tenants).map_err(|e| e.to_string())?;
+        println!(
+            "front door listening on {} ({provisioned} tenant(s) provisioned; \
+             policy {policy:?}, precision {precision:?})",
+            server.addr()
+        );
+        println!("Ctrl-C to shut down: drains in-flight jobs, then syncs the event log");
+        install_sigint();
+        while !CTRL_C.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        println!("\nshutting down: draining in-flight jobs...");
+        let report = server.coordinator().report();
+        server.shutdown();
+        println!("{report}");
+        return Ok(());
+    }
 
     let trace = traces::generate(&trace_cfg);
     println!(
@@ -497,6 +560,87 @@ fn submit_stream_job(
             Err(e.to_string())
         }
     }
+}
+
+/// Drive a remote coordinator over the wire protocol: authenticate,
+/// upload one operand, submit `--jobs` handle-based jobs, wait for all
+/// of them, and free the handle — the network twin of the `serve`
+/// trace driver's session lifecycle.
+fn cmd_remote(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["report"])?;
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| "--connect HOST:PORT is required".to_string())?;
+    let token = args.get("token").ok_or_else(|| "--token TOKEN is required".to_string())?;
+    let n = args.get_usize("n", 256)?;
+    let m = args.get_usize("m", 64)?;
+    let jobs = args.get_usize("jobs", 8)?;
+    let seed = args.get_u64("seed", 7)?;
+
+    let client = WireClient::connect(addr, token).map_err(|e| e.to_string())?;
+    let quota = match client.quota() {
+        usize::MAX => "unbounded".to_string(),
+        q => format!("{:.1} MiB", q as f64 / (1024.0 * 1024.0)),
+    };
+    println!(
+        "connected to {addr} as tenant {} (qos {}, quota {quota})",
+        client.tenant(),
+        client.qos().label()
+    );
+
+    let id = client.upload(&psd_matrix(n, n / 2, seed)).map_err(|e| e.to_string())?;
+    println!("uploaded {n}x{n} operand as {id}");
+    let spec = match args.get_or("op", "trace").as_str() {
+        "trace" => JobSpec::Trace {
+            a: OperandRef::Handle(id),
+            m,
+            estimator: TraceEstimator::Hutchinson,
+        },
+        "projection" => JobSpec::Projection { data: OperandRef::Handle(id), m },
+        "randsvd" => JobSpec::RandSvd {
+            a: OperandRef::Handle(id),
+            rank: m.min(n / 4).max(4),
+            oversample: 8,
+            power_iters: 1,
+            publish_q: false,
+            tol: None,
+        },
+        "nystrom" => JobSpec::Nystrom { a: OperandRef::Handle(id), m, rcond: 1e-8 },
+        other => return Err(format!("unknown --op {other}")),
+    };
+
+    // Pipelined: all submissions are acked before the first wait, so
+    // the server batches across them exactly as it would in-process.
+    let t0 = std::time::Instant::now();
+    let tickets = (0..jobs)
+        .map(|_| client.submit(&spec, SubmitOptions::default()))
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| e.to_string())?;
+    let mut ok = 0usize;
+    for t in tickets {
+        let r = t.wait().map_err(|e| e.to_string())?;
+        let desc = match &r.payload {
+            Payload::Scalar(v) => format!("scalar {v:.6}"),
+            Payload::Matrix(mat) => format!("{}x{} matrix", mat.rows, mat.cols),
+            Payload::Vector(v) => format!("vector[{}]", v.len()),
+            Payload::Svd { s, .. } => format!("svd rank {}", s.len()),
+        };
+        println!(
+            "  job {}: {} on {} ({} us) -> {desc}",
+            r.id,
+            r.kind,
+            r.device.name(),
+            r.latency_us
+        );
+        ok += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{jobs} jobs in {wall:.2}s ({:.1} jobs/s)", ok as f64 / wall);
+    client.free_operand(id).map_err(|e| e.to_string())?;
+    if args.has("report") {
+        println!("{}", client.report().map_err(|e| e.to_string())?);
+    }
+    Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> Result<(), String> {

@@ -1,0 +1,428 @@
+//! [`WireClient`]: the library client of the network front door.
+//!
+//! One TCP connection, many concurrent calls: every request carries a
+//! client-chosen `req_id`, a dedicated reader thread routes response
+//! frames back to the waiting caller by that id, and submissions hand
+//! back a [`RemoteTicket`] whose `wait`/`try_wait`/`cancel` mirror the
+//! in-process [`Ticket`](crate::coordinator::Ticket) — including the
+//! same *typed* errors: a refused admission surfaces as the identical
+//! [`SubmitError`] the embedded engine raised, reconstructed from the
+//! wire status.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::request::{JobError, JobResponse, JobSpec, SubmitError, SubmitOptions};
+use crate::coordinator::store::{OperandId, StoreError};
+use crate::coordinator::stream::{StreamId, StreamOpts};
+use crate::coordinator::wire::{
+    encode_frame, read_frame, Frame, StatusCode, WireError, WireMat, WireOptions, WireSpec,
+    WireStatus, WIRE_VERSION,
+};
+use crate::coordinator::QosClass;
+use crate::linalg::Mat;
+
+/// Typed client-side failure of a remote call.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientError {
+    /// Socket-level failure (connect, read, write, or a codec error on
+    /// a received frame).
+    Transport(String),
+    /// The server refused the token (or the protocol version).
+    Auth(String),
+    /// The server refused with a store error — the same typed
+    /// [`StoreError`] an in-process `upload` raises (per-tenant quota
+    /// refusals arrive here too).
+    Store(StoreError),
+    /// The server refused a submission — the same typed
+    /// [`SubmitError`] an in-process `submit_spec` raises.
+    Submit(SubmitError),
+    /// Any other refusal, with its wire status (stream sizing errors,
+    /// unknown-tag notices, shutdown).
+    Denied(WireStatus),
+    /// The server answered with a frame the protocol does not allow
+    /// for this request.
+    Protocol(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Transport(m) => write!(f, "transport: {m}"),
+            ClientError::Auth(m) => write!(f, "authentication refused: {m}"),
+            ClientError::Store(e) => write!(f, "{e}"),
+            ClientError::Submit(e) => write!(f, "{e}"),
+            ClientError::Denied(s) => write!(f, "refused: {s}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Map a refusal status to the most specific typed error it encodes.
+fn denied(s: WireStatus) -> ClientError {
+    if s.code == StatusCode::AuthFailed {
+        return ClientError::Auth(s.detail);
+    }
+    if let Some(e) = s.try_store_error() {
+        return ClientError::Store(e);
+    }
+    if let Some(e) = s.try_submit_error() {
+        return ClientError::Submit(e);
+    }
+    ClientError::Denied(s)
+}
+
+struct Inner {
+    writer: Mutex<TcpStream>,
+    /// In-flight requests: req_id → the caller's response channel. The
+    /// reader thread removes an entry when it delivers a terminal
+    /// frame; `Submitted` is the one non-terminal response (the entry
+    /// stays armed for the job's later `JobDone`/`Status`).
+    pending: Mutex<HashMap<u64, mpsc::Sender<Frame>>>,
+    next_req: AtomicU64,
+    /// Set when the server announced shutdown or the reader died;
+    /// subsequent calls fail fast instead of writing into a dead pipe.
+    closed: AtomicBool,
+}
+
+impl Inner {
+    fn send(&self, req: u64, frame: &Frame) -> Result<(), ClientError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(ClientError::Transport("connection closed".into()));
+        }
+        let bytes = encode_frame(req, frame);
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&bytes)
+            .and_then(|()| w.flush())
+            .map_err(|e| ClientError::Transport(e.to_string()))
+    }
+
+    /// Register a request and write its frame; the returned receiver
+    /// yields that request's response frames.
+    fn call(&self, frame: &Frame) -> Result<(u64, mpsc::Receiver<Frame>), ClientError> {
+        let req = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(req, tx);
+        if let Err(e) = self.send(req, frame) {
+            self.pending.lock().unwrap().remove(&req);
+            return Err(e);
+        }
+        Ok((req, rx))
+    }
+
+    /// One-shot request: write, then block for the single response.
+    fn request(&self, frame: &Frame) -> Result<Frame, ClientError> {
+        let (_req, rx) = self.call(frame)?;
+        rx.recv().map_err(|_| ClientError::Transport("connection lost".into()))
+    }
+
+    fn drop_pending(&self) {
+        // Dropping the senders disconnects every waiting receiver.
+        self.pending.lock().unwrap().clear();
+    }
+}
+
+/// A connected, authenticated session with a remote coordinator.
+pub struct WireClient {
+    inner: Arc<Inner>,
+    reader: Option<JoinHandle<()>>,
+    tenant: String,
+    qos: QosClass,
+    quota: usize,
+}
+
+impl WireClient {
+    /// Connect and authenticate. The `Hello` exchange is synchronous —
+    /// on return the session is live and every typed server refusal
+    /// maps back to the matching [`ClientError`].
+    pub fn connect(addr: impl ToSocketAddrs, token: &str) -> Result<Self, ClientError> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| ClientError::Transport(e.to_string()))?;
+        stream.set_nodelay(true).ok();
+        let mut rd = stream.try_clone().map_err(|e| ClientError::Transport(e.to_string()))?;
+
+        // Authenticate before spawning the reader: a refused token must
+        // surface from `connect`, not from a background thread.
+        let hello = encode_frame(1, &Frame::Hello { version: WIRE_VERSION, token: token.into() });
+        {
+            let mut w = &stream;
+            w.write_all(&hello)
+                .and_then(|()| w.flush())
+                .map_err(|e| ClientError::Transport(e.to_string()))?;
+        }
+        let (tenant, qos, quota) = match read_frame(&mut rd) {
+            Ok((_, Frame::HelloOk { tenant, qos, quota })) => {
+                let qos = QosClass::from_code(qos)
+                    .ok_or_else(|| ClientError::Protocol(format!("bad qos code {qos}")))?;
+                (tenant, qos, quota as usize)
+            }
+            Ok((_, Frame::Status(s))) => return Err(denied(s)),
+            Ok((_, other)) => {
+                return Err(ClientError::Protocol(format!(
+                    "expected HelloOk, got tag {}",
+                    other.tag()
+                )))
+            }
+            Err(e) => return Err(ClientError::Transport(e.to_string())),
+        };
+
+        let inner = Arc::new(Inner {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(HashMap::new()),
+            next_req: AtomicU64::new(2),
+            closed: AtomicBool::new(false),
+        });
+        let reader = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("wire-client-reader".into())
+                .spawn(move || reader_loop(&inner, &mut rd))
+                .map_err(|e| ClientError::Transport(e.to_string()))?
+        };
+        Ok(Self { inner, reader: Some(reader), tenant, qos, quota })
+    }
+
+    /// Tenant name the server authenticated this session as.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// QoS class the session's submissions are clamped to.
+    pub fn qos(&self) -> QosClass {
+        self.qos
+    }
+
+    /// The tenant's byte quota (`usize::MAX` = unbounded).
+    pub fn quota(&self) -> usize {
+        self.quota
+    }
+
+    /// Upload an operand; the handle is valid for this session's
+    /// submissions (content-dedup happens server-side).
+    pub fn upload(&self, m: &Mat) -> Result<OperandId, ClientError> {
+        match self.inner.request(&Frame::Upload { mat: WireMat::from_mat(m) })? {
+            Frame::OperandOk { id, .. } => Ok(OperandId(id)),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Drop the session's reference to an uploaded operand.
+    pub fn free_operand(&self, id: OperandId) -> Result<bool, ClientError> {
+        match self.inner.request(&Frame::FreeOperand { id: id.0 })? {
+            Frame::Freed { existed } => Ok(existed),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Open a streamed operand (see
+    /// [`Coordinator::begin_stream`](crate::coordinator::Coordinator::begin_stream)).
+    pub fn begin_stream(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+    ) -> Result<StreamId, ClientError> {
+        let frame = Frame::BeginStream {
+            rows: rows as u64,
+            cols: cols as u64,
+            chunk_rows: opts.chunk_rows.unwrap_or(0) as u64,
+            sketch_m: opts.sketch_m as u64,
+            fd_rank: opts.fd_rank as u64,
+            range_cap: opts.range_cap as u64,
+        };
+        match self.inner.request(&frame)? {
+            Frame::StreamOk { id } => Ok(StreamId(id)),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Append rows to an open stream.
+    pub fn append_stream(&self, id: StreamId, rows: &Mat) -> Result<(), ClientError> {
+        let frame = Frame::AppendStream { id: id.0, rows: WireMat::from_mat(rows) };
+        match self.inner.request(&frame)? {
+            Frame::Ack => Ok(()),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Seal a stream; one-pass jobs may now reference it.
+    pub fn seal_stream(&self, id: StreamId) -> Result<(), ClientError> {
+        match self.inner.request(&Frame::SealStream { id: id.0 })? {
+            Frame::Ack => Ok(()),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Free a stream (sealed or not).
+    pub fn free_stream(&self, id: StreamId) -> Result<bool, ClientError> {
+        match self.inner.request(&Frame::FreeStream { id: id.0 })? {
+            Frame::Freed { existed } => Ok(existed),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// Submit a job. Returns as soon as the server acknowledges
+    /// admission; the result streams back later through the ticket. A
+    /// typed refusal ([`SubmitError::Busy`] backpressure, quota, stale
+    /// handles) surfaces here, exactly as in-process.
+    pub fn submit(
+        &self,
+        spec: &JobSpec,
+        opts: SubmitOptions,
+    ) -> Result<RemoteTicket, ClientError> {
+        let frame = Frame::Submit {
+            spec: WireSpec::from_spec(spec),
+            opts: WireOptions::from_opts(&opts),
+        };
+        let (_req, rx) = self.inner.call(&frame)?;
+        match rx.recv() {
+            Ok(Frame::Submitted { job }) => Ok(RemoteTicket { job, rx }),
+            Ok(Frame::Status(s)) => Err(denied(s)),
+            Ok(other) => Err(Self::unexpected(&other)),
+            Err(_) => Err(ClientError::Transport("connection lost".into())),
+        }
+    }
+
+    /// Submit and block for the result (the remote `run_spec`).
+    pub fn run(&self, spec: &JobSpec, opts: SubmitOptions) -> Result<JobResponse, JobError> {
+        let ticket = self.submit(spec, opts).map_err(|e| match e {
+            ClientError::Submit(SubmitError::Closed) => JobError::QueueClosed,
+            ClientError::Submit(se) => JobError::Rejected(se),
+            other => JobError::Failed(other.to_string()),
+        })?;
+        ticket.wait()
+    }
+
+    /// Best-effort remote cancel of a job this session submitted.
+    /// `true` means the job was still queued and will never run.
+    pub fn cancel(&self, job: u64) -> Result<bool, ClientError> {
+        match self.inner.request(&Frame::Cancel { job })? {
+            Frame::CancelOk { cancelled } => Ok(cancelled),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// The server's metrics report (includes the per-tenant lines).
+    pub fn report(&self) -> Result<String, ClientError> {
+        match self.inner.request(&Frame::Report)? {
+            Frame::ReportText { text } => Ok(text),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    fn unexpected(frame: &Frame) -> ClientError {
+        ClientError::Protocol(format!("unexpected response frame tag {}", frame.tag()))
+    }
+}
+
+impl Drop for WireClient {
+    fn drop(&mut self) {
+        // Best-effort goodbye, then unblock the reader and join it.
+        let _ = self.inner.send(0, &Frame::Goodbye);
+        self.inner.closed.store(true, Ordering::SeqCst);
+        if let Ok(w) = self.inner.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Routes incoming frames to their waiting callers until the socket
+/// closes. `Submitted` keeps its request armed (the job's terminal
+/// `JobDone`/`Status` arrives later on the same req id); everything
+/// else completes its request.
+fn reader_loop(inner: &Inner, rd: &mut TcpStream) {
+    loop {
+        match read_frame(rd) {
+            Ok((req, frame)) => {
+                if req == 0 {
+                    // Unsolicited server notice (ShuttingDown): flag the
+                    // session; in-flight waiters resolve when the
+                    // server closes the socket after its drain.
+                    if frame == Frame::ShuttingDown {
+                        inner.closed.store(true, Ordering::SeqCst);
+                    }
+                    continue;
+                }
+                let keep = matches!(frame, Frame::Submitted { .. });
+                let mut pending = inner.pending.lock().unwrap();
+                let sender = if keep {
+                    pending.get(&req).cloned()
+                } else {
+                    pending.remove(&req)
+                };
+                drop(pending);
+                if let Some(tx) = sender {
+                    let _ = tx.send(frame);
+                }
+            }
+            Err(WireError::Closed) | Err(WireError::Io(_)) => break,
+            Err(_) => break, // framing corruption: the session is unusable
+        }
+    }
+    inner.closed.store(true, Ordering::SeqCst);
+    inner.drop_pending();
+}
+
+/// In-flight handle for a remotely submitted job — the wire twin of
+/// [`Ticket`](crate::coordinator::Ticket).
+pub struct RemoteTicket {
+    job: u64,
+    rx: mpsc::Receiver<Frame>,
+}
+
+impl RemoteTicket {
+    /// Server-assigned job id (valid for [`WireClient::cancel`]).
+    pub fn id(&self) -> u64 {
+        self.job
+    }
+
+    /// Block until the job completes, with the same typed outcomes as
+    /// the in-process ticket: a cancelled job resolves to
+    /// [`JobError::Cancelled`], a lost connection to
+    /// [`JobError::Dropped`].
+    pub fn wait(self) -> Result<JobResponse, JobError> {
+        match self.rx.recv() {
+            Ok(frame) => Self::terminal(frame),
+            Err(_) => Err(JobError::Dropped),
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<JobResponse, JobError>> {
+        match self.rx.try_recv() {
+            Ok(frame) => Some(Self::terminal(frame)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(JobError::Dropped)),
+        }
+    }
+
+    fn terminal(frame: Frame) -> Result<JobResponse, JobError> {
+        match frame {
+            Frame::JobDone(r) => {
+                r.to_response().map_err(|e| JobError::Failed(format!("bad response frame: {e}")))
+            }
+            Frame::Status(s) => {
+                Err(s.try_job_error().unwrap_or_else(|| JobError::Failed(s.to_string())))
+            }
+            other => Err(JobError::Failed(format!("unexpected frame tag {}", other.tag()))),
+        }
+    }
+}

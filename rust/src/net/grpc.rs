@@ -1,0 +1,26 @@
+//! Placeholder for the gRPC transport (cargo feature `grpc`).
+//!
+//! The hand-written frame codec in [`crate::coordinator::wire`] exists
+//! because this build is offline and std-only; its message shapes were
+//! deliberately laid out like prost-generated structs (one numbered
+//! variant per `oneof` arm, scalar fields in declaration order) so the
+//! eventual swap is mechanical:
+//!
+//! 1. describe the [`Frame`](crate::coordinator::wire::Frame) grammar
+//!    as a `photon.v1` proto package (one rpc per client frame, a
+//!    server-streamed `Submit` for job results);
+//! 2. generate with `tonic-build`; the generated types replace
+//!    `WireSpec`/`WireResponse`/`WireStatus` one for one;
+//! 3. keep [`StatusCode`](crate::coordinator::wire::StatusCode) as the
+//!    `google.rpc.Status.code` domain so typed refusals survive the
+//!    transport swap unchanged;
+//! 4. the tenant boundary ([`crate::coordinator::tenant`]) moves into a
+//!    tonic interceptor reading the token from request metadata.
+//!
+//! Until tonic/prost are vendored, this module intentionally exports
+//! nothing: enabling the feature must compile (CI checks it) but the
+//! TCP framing in [`crate::net::server`] remains the only transport.
+//! This mirrors how the `xla` feature gates the PJRT runtime arm.
+
+/// Proto package the generated service will land in.
+pub const PROTO_PACKAGE: &str = "photon.v1";

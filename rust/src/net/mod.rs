@@ -1,0 +1,35 @@
+//! The network front door: a framed TCP serving plane over the session
+//! API, with multi-tenant auth, quotas, and QoS.
+//!
+//! ```text
+//!  WireClient ──TCP──▶ WireServer ──▶ Coordinator (embedded engine)
+//!   upload/stream       per-conn        store / streams / queue /
+//!   submit/cancel       thread, auth,   batcher / pool / events
+//!   RemoteTicket        tenant ledger
+//! ```
+//!
+//! - [`server`] — the listener (`photon serve --listen ADDR --tenants
+//!   FILE`): one thread per connection, first frame must authenticate,
+//!   every session resource (operand handles, streams, in-flight jobs)
+//!   is owned by the connection and freed on disconnect; per-tenant
+//!   quota ledgers and QoS clamping sit in front of the embedded
+//!   [`Coordinator`](crate::coordinator::Coordinator);
+//! - [`client`] — [`WireClient`]: a synchronous session handle
+//!   multiplexing concurrent calls over one socket (a reader thread
+//!   routes frames by request id), with [`RemoteTicket`] mirroring the
+//!   in-process `Ticket` (`wait`/`try_wait`/`cancel`);
+//! - [`grpc`] — stub documenting the future tonic/prost swap (cargo
+//!   feature `grpc`, mirroring the `xla` gate).
+//!
+//! The frame grammar and status-code mapping live in
+//! [`crate::coordinator::wire`]; tenants in
+//! [`crate::coordinator::tenant`]. See docs/architecture.md §"The
+//! network front door".
+
+pub mod client;
+#[cfg(feature = "grpc")]
+pub mod grpc;
+pub mod server;
+
+pub use client::{ClientError, RemoteTicket, WireClient};
+pub use server::WireServer;

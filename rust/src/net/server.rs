@@ -1,0 +1,595 @@
+//! [`WireServer`]: the listener side of the network front door.
+//!
+//! One thread per connection; the first frame must be a `Hello` whose
+//! token resolves in the [`TenantRegistry`]. After that the session
+//! owns everything it creates — operand handles, streams, in-flight
+//! jobs — and the server enforces three tenant boundaries on every
+//! frame:
+//!
+//! - **auth**: unknown tokens (and wrong protocol versions) are
+//!   refused with [`StatusCode::AuthFailed`] before anything else runs;
+//! - **quota**: uploads and stream footprints charge the tenant's byte
+//!   ledger *before* touching the shared
+//!   [`OperandStore`](crate::coordinator::OperandStore); a refusal
+//!   is the same typed [`StoreError::OverQuota`] an in-process client
+//!   sees, and rolls back cleanly;
+//! - **QoS**: the tenant's [`QosClass`](crate::coordinator::QosClass) clamps the requested
+//!   [`Priority`](crate::coordinator::Priority), so a batch-class
+//!   tenant cannot jump the interactive lane.
+//!
+//! Isolation is by construction: a session can only reference, free,
+//! or cancel ids it created (a foreign handle is
+//! [`SubmitError::UnknownOperand`], exactly like a stale one), and
+//! disconnect releases every session resource deterministically.
+//!
+//! Graceful shutdown ([`WireServer::shutdown`]) stops accepting,
+//! notifies every connection (`ShuttingDown`), lets in-flight jobs
+//! drain so each acked submission gets exactly one terminal frame,
+//! then closes the engine: queue closed, workers joined, event log
+//! synced.
+
+use std::collections::HashMap;
+use std::io::{self, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::ControlFlow;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::events::Event;
+use crate::coordinator::request::{CancelHandle, OperandRef, SubmitError};
+use crate::coordinator::store::{mat_bytes, OperandId, StoreError};
+use crate::coordinator::stream::{StreamError, StreamId, StreamOpts};
+use crate::coordinator::tenant::{Tenant, TenantRegistry};
+use crate::coordinator::wire::{
+    read_frame_poll, write_frame, Frame, StatusCode, WireError, WireMat, WireOptions,
+    WireResponse, WireSpec, WireStatus, WIRE_VERSION,
+};
+use crate::coordinator::Coordinator;
+
+/// How long a blocked socket read waits before the connection thread
+/// re-checks the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// A running front door: listener + accept thread + one thread per
+/// live connection, all fronting one embedded [`Coordinator`].
+pub struct WireServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    coord: Option<Arc<Coordinator>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving. The server takes ownership of the coordinator; it is
+    /// shut down with the server.
+    pub fn start(
+        coord: Coordinator,
+        addr: &str,
+        tenants: TenantRegistry,
+    ) -> io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let coord = Arc::new(coord);
+        let tenants = Arc::new(tenants);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let coord = Arc::clone(&coord);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new().name("wire-accept".into()).spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let coord = Arc::clone(&coord);
+                            let tenants = Arc::clone(&tenants);
+                            let stop = Arc::clone(&stop);
+                            let spawned = std::thread::Builder::new()
+                                .name("wire-conn".into())
+                                .spawn(move || serve_conn(&coord, &tenants, stream, &stop));
+                            if let Ok(h) = spawned {
+                                conns.lock().unwrap().push(h);
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })?
+        };
+        Ok(WireServer { addr, stop, accept: Some(accept), conns, coord: Some(coord) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The embedded engine (metrics, events, store gauges — tests and
+    /// diagnostics).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        self.coord.as_ref().expect("server is live")
+    }
+
+    /// Graceful shutdown: stop accepting, notify and drain every
+    /// connection (in-flight jobs resolve; each acked submission gets
+    /// exactly one terminal frame), then shut the engine down — queue
+    /// closed, workers joined, event log synced.
+    pub fn shutdown(mut self) {
+        self.stop_and_drain();
+    }
+
+    fn stop_and_drain(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(coord) = self.coord.take() {
+            match Arc::try_unwrap(coord) {
+                Ok(c) => c.shutdown(),
+                Err(shared) => {
+                    // A test still holds the engine; flush the journal
+                    // and let the last Arc close the queue on drop.
+                    shared.events().sync();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop_and_drain();
+    }
+}
+
+/// One tenant-charged reference to a store operand. `charges` holds the
+/// tenant-ledger bytes of each session reference (uploads charge the
+/// matrix size; aux grants from job results charge 0), so frees release
+/// exactly what was reserved, in any order.
+struct SessionOperand {
+    charges: Vec<usize>,
+}
+
+/// Per-connection state: the authenticated tenant plus everything the
+/// session owns. Shared pieces (`writer`, `handles`, `jobs`) are also
+/// held by waiter threads delivering job results.
+struct Session {
+    coord: Arc<Coordinator>,
+    tenant: Arc<Tenant>,
+    writer: Arc<Mutex<TcpStream>>,
+    handles: Arc<Mutex<HashMap<u64, SessionOperand>>>,
+    /// Stream id → bytes currently charged to the tenant for it.
+    streams: HashMap<u64, usize>,
+    jobs: Arc<Mutex<HashMap<u64, CancelHandle>>>,
+    waiters: Vec<JoinHandle<()>>,
+}
+
+fn send(writer: &Mutex<TcpStream>, req: u64, frame: &Frame) -> bool {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, req, frame).is_ok()
+}
+
+fn serve_conn(
+    coord: &Arc<Coordinator>,
+    tenants: &TenantRegistry,
+    stream: TcpStream,
+    stop: &AtomicBool,
+) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err() {
+        return;
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut rd = stream;
+
+    let Some(tenant) = authenticate(&mut rd, &writer, tenants, stop) else {
+        return;
+    };
+    coord.events().append(Event::TenantConnected { tenant: tenant.name.to_string() });
+
+    let mut session = Session {
+        coord: Arc::clone(coord),
+        tenant,
+        writer,
+        handles: Arc::new(Mutex::new(HashMap::new())),
+        streams: HashMap::new(),
+        jobs: Arc::new(Mutex::new(HashMap::new())),
+        waiters: Vec::new(),
+    };
+
+    while !stop.load(Ordering::SeqCst) {
+        let (req, frame) = match read_frame_poll(&mut rd, stop) {
+            Ok(None) => continue,
+            Ok(Some(x)) => x,
+            Err(WireError::Closed) | Err(WireError::Io(_)) => break,
+            Err(e) => {
+                // Codec-level corruption: refuse typed, then drop the
+                // connection (the byte stream may be desynced).
+                let status = WireStatus::with_detail(StatusCode::BadFrame, e.to_string());
+                send(&session.writer, 0, &Frame::Status(status));
+                break;
+            }
+        };
+        if session.handle(req, frame).is_break() {
+            break;
+        }
+    }
+
+    // Shutdown notice first so the client stops submitting, then drain:
+    // every acked job still delivers exactly one JobDone/Status.
+    if stop.load(Ordering::SeqCst) {
+        send(&session.writer, 0, &Frame::ShuttingDown);
+    }
+    for w in session.waiters.drain(..) {
+        let _ = w.join();
+    }
+    session.release_all();
+    session
+        .coord
+        .events()
+        .append(Event::TenantDisconnected { tenant: session.tenant.name.to_string() });
+}
+
+/// Pre-session handshake: the first frame must be a `Hello` with the
+/// right protocol version and a known token.
+fn authenticate(
+    rd: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    tenants: &TenantRegistry,
+    stop: &AtomicBool,
+) -> Option<Arc<Tenant>> {
+    loop {
+        let (req, frame) = match read_frame_poll(rd, stop) {
+            Ok(None) => {
+                if stop.load(Ordering::SeqCst) {
+                    return None;
+                }
+                continue;
+            }
+            Ok(Some(x)) => x,
+            Err(_) => return None,
+        };
+        let refuse = |detail: String| {
+            let status = WireStatus::with_detail(StatusCode::AuthFailed, detail);
+            send(writer, req, &Frame::Status(status));
+            None
+        };
+        return match frame {
+            Frame::Hello { version, token } => {
+                if version != WIRE_VERSION {
+                    return refuse(format!(
+                        "protocol version {version} (server speaks {WIRE_VERSION})"
+                    ));
+                }
+                match tenants.authenticate(&token) {
+                    Some(t) => {
+                        let hello = Frame::HelloOk {
+                            tenant: t.name.to_string(),
+                            qos: t.qos.code(),
+                            quota: t.quota() as u64,
+                        };
+                        if !send(writer, req, &hello) {
+                            return None;
+                        }
+                        Some(t)
+                    }
+                    None => refuse("unknown token".into()),
+                }
+            }
+            _ => refuse("first frame must be Hello".into()),
+        };
+    }
+}
+
+impl Session {
+    fn handle(&mut self, req: u64, frame: Frame) -> ControlFlow<()> {
+        match frame {
+            Frame::Upload { mat } => self.upload(req, &mat),
+            Frame::FreeOperand { id } => self.free_operand(req, id),
+            Frame::BeginStream { rows, cols, chunk_rows, sketch_m, fd_rank, range_cap } => {
+                let opts = StreamOpts {
+                    chunk_rows: (chunk_rows != 0).then_some(chunk_rows as usize),
+                    sketch_m: sketch_m as usize,
+                    fd_rank: fd_rank as usize,
+                    range_cap: range_cap as usize,
+                };
+                self.begin_stream(req, rows as usize, cols as usize, opts);
+            }
+            Frame::AppendStream { id, rows } => self.append_stream(req, id, &rows),
+            Frame::SealStream { id } => self.seal_stream(req, id),
+            Frame::FreeStream { id } => self.free_stream(req, id),
+            Frame::Submit { spec, opts } => self.submit(req, &spec, &opts),
+            Frame::Cancel { job } => {
+                let handle = self.jobs.lock().unwrap().get(&job).cloned();
+                let cancelled = match handle {
+                    Some(h) => h.fire(job),
+                    None => false, // finished, foreign, or never acked
+                };
+                self.send(req, &Frame::CancelOk { cancelled });
+            }
+            Frame::Report => {
+                let text = self.coord.metrics.report();
+                self.send(req, &Frame::ReportText { text });
+            }
+            Frame::Goodbye => return ControlFlow::Break(()),
+            Frame::Hello { .. } => {
+                self.refuse(req, StatusCode::BadFrame, "already authenticated");
+            }
+            Frame::Unknown { tag } => {
+                let mut status =
+                    WireStatus::with_detail(StatusCode::UnknownTag, "unassigned frame tag");
+                status.a = u64::from(tag);
+                self.send(req, &Frame::Status(status));
+            }
+            _ => {
+                self.refuse(req, StatusCode::BadFrame, "server-role frame from client");
+            }
+        }
+        ControlFlow::Continue(())
+    }
+
+    fn send(&self, req: u64, frame: &Frame) -> bool {
+        send(&self.writer, req, frame)
+    }
+
+    fn refuse(&self, req: u64, code: StatusCode, detail: &str) {
+        self.send(req, &Frame::Status(WireStatus::with_detail(code, detail)));
+    }
+
+    fn quota_refused(&self, req: u64, e: &StoreError) {
+        self.coord.metrics.tenant_quota_rejected(&self.tenant.name);
+        self.send(req, &Frame::Status(WireStatus::from_store(e)));
+    }
+
+    fn upload(&mut self, req: u64, mat: &WireMat) {
+        let m = match mat.to_mat() {
+            Ok(m) => m,
+            Err(e) => return self.refuse(req, StatusCode::BadFrame, &e.to_string()),
+        };
+        let bytes = mat_bytes(&m);
+        // Tenant ledger first: the shared store is never touched past a
+        // tenant's quota, so one tenant at its cap cannot evict or
+        // crowd another (see the isolation test).
+        if let Err(e) = self.tenant.reserve(bytes) {
+            return self.quota_refused(req, &e);
+        }
+        match self.coord.store().insert(Arc::new(m)) {
+            Ok(id) => {
+                self.coord.metrics.tenant_operand_bytes(&self.tenant.name, bytes as u64);
+                let mut h = self.handles.lock().unwrap();
+                h.entry(id.0)
+                    .or_insert_with(|| SessionOperand { charges: Vec::new() })
+                    .charges
+                    .push(bytes);
+                drop(h);
+                self.send(req, &Frame::OperandOk { id: id.0, bytes: bytes as u64 });
+            }
+            Err(e) => {
+                // Global store quota: roll the tenant charge back.
+                self.tenant.release(bytes);
+                self.quota_refused(req, &e);
+            }
+        }
+    }
+
+    fn free_operand(&mut self, req: u64, id: u64) {
+        let charge = {
+            let mut h = self.handles.lock().unwrap();
+            match h.get_mut(&id) {
+                None => {
+                    drop(h);
+                    let e = SubmitError::UnknownOperand(OperandId(id));
+                    self.send(req, &Frame::Status(WireStatus::from_submit(&e)));
+                    return;
+                }
+                Some(so) => {
+                    let charge = so.charges.pop().unwrap_or(0);
+                    if so.charges.is_empty() {
+                        h.remove(&id);
+                    }
+                    charge
+                }
+            }
+        };
+        let existed = self.coord.free_operand(OperandId(id));
+        self.tenant.release(charge);
+        self.send(req, &Frame::Freed { existed });
+    }
+
+    fn begin_stream(&mut self, req: u64, rows: usize, cols: usize, opts: StreamOpts) {
+        let sid = match self.coord.begin_stream(rows, cols, opts) {
+            Ok(sid) => sid,
+            Err(e) => {
+                self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+                return;
+            }
+        };
+        let footprint = self.coord.streams().footprint(sid).unwrap_or(0);
+        if let Err(e) = self.tenant.reserve(footprint) {
+            self.coord.free_stream(sid);
+            return self.quota_refused(req, &e);
+        }
+        self.coord.metrics.tenant_operand_bytes(&self.tenant.name, footprint as u64);
+        self.streams.insert(sid.0, footprint);
+        self.send(req, &Frame::StreamOk { id: sid.0 });
+    }
+
+    fn append_stream(&mut self, req: u64, id: u64, rows: &WireMat) {
+        if !self.streams.contains_key(&id) {
+            let e = StreamError::UnknownStream(StreamId(id));
+            self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+            return;
+        }
+        let m = match rows.to_mat() {
+            Ok(m) => m,
+            Err(e) => return self.refuse(req, StatusCode::BadFrame, &e.to_string()),
+        };
+        match self.coord.append_stream(StreamId(id), &m) {
+            Ok(()) => {
+                self.send(req, &Frame::Ack);
+            }
+            Err(e) => {
+                self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+            }
+        }
+    }
+
+    fn seal_stream(&mut self, req: u64, id: u64) {
+        if !self.streams.contains_key(&id) {
+            let e = StreamError::UnknownStream(StreamId(id));
+            self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+            return;
+        }
+        match self.coord.seal_stream(StreamId(id)) {
+            Ok(()) => {
+                // Sealing usually shrinks the footprint (chunk buffer
+                // dropped); give the difference back to the ledger.
+                let now = self.coord.streams().footprint(StreamId(id)).unwrap_or(0);
+                if let Some(charged) = self.streams.get_mut(&id) {
+                    if now < *charged {
+                        self.tenant.release(*charged - now);
+                        *charged = now;
+                    } else if now > *charged && self.tenant.reserve(now - *charged).is_ok() {
+                        *charged = now;
+                    }
+                }
+                self.send(req, &Frame::Ack);
+            }
+            Err(e) => {
+                self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+            }
+        }
+    }
+
+    fn free_stream(&mut self, req: u64, id: u64) {
+        let Some(charged) = self.streams.remove(&id) else {
+            let e = StreamError::UnknownStream(StreamId(id));
+            self.send(req, &Frame::Status(WireStatus::from_stream(&e)));
+            return;
+        };
+        let existed = self.coord.free_stream(StreamId(id));
+        self.tenant.release(charged);
+        self.send(req, &Frame::Freed { existed });
+    }
+
+    fn submit(&mut self, req: u64, spec: &WireSpec, opts: &WireOptions) {
+        let spec = match spec.to_spec() {
+            Ok(s) => s,
+            Err(e) => return self.refuse(req, StatusCode::BadFrame, &e.to_string()),
+        };
+        let mut opts = match opts.to_opts() {
+            Ok(o) => o,
+            Err(e) => return self.refuse(req, StatusCode::BadFrame, &e.to_string()),
+        };
+        // A session may only reference ids it owns: a foreign (or
+        // stale) handle is indistinguishable from an unknown one.
+        let spec = {
+            let h = self.handles.lock().unwrap();
+            let streams = &self.streams;
+            let checked = spec.try_map_refs(&mut |r| {
+                match &r {
+                    OperandRef::Handle(id) if !h.contains_key(&id.0) => {
+                        return Err(SubmitError::UnknownOperand(*id));
+                    }
+                    OperandRef::Stream(id) if !streams.contains_key(&id.0) => {
+                        return Err(SubmitError::UnknownStream(*id));
+                    }
+                    OperandRef::Stage(i) => {
+                        // Plans are not part of the wire surface yet.
+                        return Err(SubmitError::StageRefOutsidePlan(*i));
+                    }
+                    _ => {}
+                }
+                Ok(r)
+            });
+            match checked {
+                Ok(s) => s,
+                Err(e) => {
+                    self.send(req, &Frame::Status(WireStatus::from_submit(&e)));
+                    return;
+                }
+            }
+        };
+        opts.priority = self.tenant.qos.clamp(opts.priority);
+        let tenant_name = Arc::clone(&self.tenant.name);
+        match self.coord.submit_spec_as(Some(tenant_name), spec, opts) {
+            Err(e) => {
+                self.send(req, &Frame::Status(WireStatus::from_submit(&e)));
+            }
+            Ok(ticket) => {
+                let job = ticket.id;
+                self.jobs.lock().unwrap().insert(job, ticket.cancel_handle());
+                self.send(req, &Frame::Submitted { job });
+                // The waiter owns the ticket: exactly one terminal
+                // frame per acked job, even across shutdown.
+                let writer = Arc::clone(&self.writer);
+                let jobs = Arc::clone(&self.jobs);
+                let handles = Arc::clone(&self.handles);
+                let spawned = std::thread::Builder::new().name("wire-wait".into()).spawn(
+                    move || {
+                        let outcome = ticket.wait();
+                        jobs.lock().unwrap().remove(&job);
+                        let frame = match outcome {
+                            Ok(resp) => {
+                                // Published aux operands (e.g. a range
+                                // basis) become session-owned handles,
+                                // uncharged: they are engine results,
+                                // not tenant uploads.
+                                let mut h = handles.lock().unwrap();
+                                for (_, id) in &resp.aux {
+                                    h.entry(id.0)
+                                        .or_insert_with(|| SessionOperand {
+                                            charges: Vec::new(),
+                                        })
+                                        .charges
+                                        .push(0);
+                                }
+                                drop(h);
+                                Frame::JobDone(WireResponse::from_response(&resp))
+                            }
+                            Err(e) => Frame::Status(WireStatus::from_job(&e)),
+                        };
+                        send(&writer, req, &frame);
+                    },
+                );
+                if let Ok(h) = spawned {
+                    self.waiters.push(h);
+                }
+            }
+        }
+    }
+
+    /// Disconnect cleanup: drop every session reference and return the
+    /// charged bytes to the tenant's ledger.
+    fn release_all(&mut self) {
+        let drained: Vec<(u64, SessionOperand)> =
+            self.handles.lock().unwrap().drain().collect();
+        for (id, so) in drained {
+            for charge in so.charges {
+                self.coord.free_operand(OperandId(id));
+                self.tenant.release(charge);
+            }
+        }
+        for (id, charged) in self.streams.drain() {
+            self.coord.free_stream(StreamId(id));
+            self.tenant.release(charged);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Property tests: the framed wire codec never lies and never panics.
+//!
+//! Seeded random frames (every variant, hostile floats, non-ASCII
+//! strings) must round-trip bit-exactly through encode/decode; every
+//! malformed input — truncated prefixes, corrupt bytes, oversized
+//! length headers, trailing garbage — must come back as a typed
+//! [`WireError`], never a panic; and an unassigned tag must be skipped
+//! cleanly so the stream keeps decoding behind it.
+//!
+//! Replay a failing case with `PHOTON_PROPTEST_SEED=<seed>`.
+
+use std::io::Cursor;
+
+use photonic_randnla::coordinator::wire::{
+    decode_body, encode_frame, read_frame, Frame, StatusCode, WireError, WireLsqr, WireMat,
+    WireOptions, WirePayload, WireRef, WireResponse, WireSpec, WireStatus, MAX_FRAME_BYTES,
+};
+use photonic_randnla::testkit::{check, Gen};
+
+// ---------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------
+
+/// f64 bit patterns including the hostile corners a lossy codec would
+/// flatten: NaN payloads, infinities, signed zero, subnormals.
+fn bits(g: &mut Gen) -> u64 {
+    match g.usize(0, 5) {
+        0 => f64::NAN.to_bits() | 0xDEAD,
+        1 => f64::INFINITY.to_bits(),
+        2 => f64::NEG_INFINITY.to_bits(),
+        3 => (-0.0f64).to_bits(),
+        4 => 0x0000_0000_0000_0001, // smallest subnormal
+        _ => g.u64(0..=u64::MAX),
+    }
+}
+
+fn gmat(g: &mut Gen) -> WireMat {
+    let rows = g.u64(0..=4) as u32;
+    let cols = g.u64(0..=4) as u32;
+    let data = (0..rows as usize * cols as usize).map(|_| bits(g)).collect();
+    WireMat { rows, cols, data }
+}
+
+fn gstr(g: &mut Gen) -> String {
+    const ALPHABET: &[char] = &['a', 'Z', '0', '-', '_', ' ', 'µ', '✓'];
+    let len = g.usize(0, 12);
+    (0..len).map(|_| *g.pick(ALPHABET)).collect()
+}
+
+fn gref(g: &mut Gen) -> WireRef {
+    match g.usize(0, 3) {
+        0 => WireRef::Handle(g.u64(0..=u64::MAX)),
+        1 => WireRef::Inline(gmat(g)),
+        2 => WireRef::Stage(g.u64(0..=1 << 20)),
+        _ => WireRef::Stream(g.u64(0..=u64::MAX)),
+    }
+}
+
+fn gspec(g: &mut Gen) -> WireSpec {
+    match g.usize(0, 9) {
+        0 => WireSpec::Projection { data: gref(g), m: g.u64(1..=1 << 16) },
+        1 => WireSpec::ApproxMatmul { a: gref(g), b: gref(g), m: g.u64(1..=1 << 16) },
+        2 => WireSpec::Trace { a: gref(g), m: g.u64(1..=1 << 16), estimator: g.u64(0..=1) as u8 },
+        3 => WireSpec::Triangles { adjacency: gref(g), m: g.u64(1..=1 << 16) },
+        4 => WireSpec::SymmetricSketch { a: gref(g), m: g.u64(1..=1 << 16) },
+        5 => WireSpec::TraceOf { b: gref(g) },
+        6 => WireSpec::TrianglesOf { b: gref(g) },
+        7 => WireSpec::RandSvd {
+            a: gref(g),
+            rank: g.u64(1..=256),
+            oversample: g.u64(0..=32),
+            power_iters: g.u64(0..=4),
+            publish_q: g.bool(),
+            tol: g.bool().then(|| bits(g)),
+        },
+        8 => WireSpec::Lstsq {
+            a: gref(g),
+            b: (0..g.usize(0, 8)).map(|_| bits(g)).collect(),
+            m: g.u64(1..=1 << 16),
+            refine: g
+                .bool()
+                .then(|| WireLsqr { tol: bits(g), max_iters: g.u64(1..=1 << 12) }),
+        },
+        _ => WireSpec::Nystrom { a: gref(g), m: g.u64(1..=1 << 16), rcond: bits(g) },
+    }
+}
+
+fn gopts(g: &mut Gen) -> WireOptions {
+    WireOptions {
+        priority: g.u64(0..=1) as u8,
+        deadline_us: g.bool().then(|| g.u64(0..=1 << 40)),
+        precision: g.u64(0..=2) as u8,
+        bypass_cache: g.bool(),
+    }
+}
+
+fn gstatus(g: &mut Gen) -> WireStatus {
+    WireStatus {
+        code: StatusCode::from_code(g.usize(0, 18) as u8).expect("all 19 codes assigned"),
+        detail: gstr(g),
+        a: g.u64(0..=u64::MAX),
+        b: g.u64(0..=u64::MAX),
+        c: g.u64(0..=u64::MAX),
+    }
+}
+
+fn gpayload(g: &mut Gen) -> WirePayload {
+    match g.usize(0, 3) {
+        0 => WirePayload::Matrix(gmat(g)),
+        1 => WirePayload::Scalar(bits(g)),
+        2 => WirePayload::Vector((0..g.usize(0, 8)).map(|_| bits(g)).collect()),
+        _ => WirePayload::Svd {
+            u: gmat(g),
+            s: (0..g.usize(0, 4)).map(|_| bits(g)).collect(),
+            vt: gmat(g),
+        },
+    }
+}
+
+fn gresponse(g: &mut Gen) -> WireResponse {
+    WireResponse {
+        id: g.u64(0..=u64::MAX),
+        kind: gstr(g),
+        payload: gpayload(g),
+        device: g.u64(0..=2) as u8,
+        precision: g.u64(0..=2) as u8,
+        latency_us: g.u64(0..=u64::MAX),
+        batched_cols: g.u64(0..=1 << 20),
+        aux: (0..g.usize(0, 3)).map(|_| (gstr(g), g.u64(0..=u64::MAX))).collect(),
+        seq: g.u64(0..=u64::MAX),
+    }
+}
+
+/// A tag the protocol has not assigned (client 1–11, server 32–42).
+fn unassigned_tag(g: &mut Gen) -> u16 {
+    loop {
+        let t = g.u64(0..=u16::MAX as u64) as u16;
+        if !(1..=11).contains(&t) && !(32..=42).contains(&t) {
+            return t;
+        }
+    }
+}
+
+/// Every Frame variant, weighted uniformly.
+fn gframe(g: &mut Gen) -> Frame {
+    match g.usize(0, 22) {
+        0 => Frame::Hello { version: g.u64(0..=u16::MAX as u64) as u16, token: gstr(g) },
+        1 => Frame::Upload { mat: gmat(g) },
+        2 => Frame::FreeOperand { id: g.u64(0..=u64::MAX) },
+        3 => Frame::BeginStream {
+            rows: g.u64(0..=1 << 24),
+            cols: g.u64(0..=1 << 24),
+            chunk_rows: g.u64(0..=1 << 16),
+            sketch_m: g.u64(0..=1 << 16),
+            fd_rank: g.u64(0..=1 << 16),
+            range_cap: g.u64(0..=1 << 16),
+        },
+        4 => Frame::AppendStream { id: g.u64(0..=u64::MAX), rows: gmat(g) },
+        5 => Frame::SealStream { id: g.u64(0..=u64::MAX) },
+        6 => Frame::FreeStream { id: g.u64(0..=u64::MAX) },
+        7 => Frame::Submit { spec: gspec(g), opts: gopts(g) },
+        8 => Frame::Cancel { job: g.u64(0..=u64::MAX) },
+        9 => Frame::Report,
+        10 => Frame::Goodbye,
+        11 => {
+            Frame::HelloOk { tenant: gstr(g), qos: g.u64(0..=1) as u8, quota: g.u64(0..=u64::MAX) }
+        }
+        12 => Frame::Status(gstatus(g)),
+        13 => Frame::OperandOk { id: g.u64(0..=u64::MAX), bytes: g.u64(0..=u64::MAX) },
+        14 => Frame::Freed { existed: g.bool() },
+        15 => Frame::StreamOk { id: g.u64(0..=u64::MAX) },
+        16 => Frame::Ack,
+        17 => Frame::Submitted { job: g.u64(0..=u64::MAX) },
+        18 => Frame::JobDone(gresponse(g)),
+        19 => Frame::CancelOk { cancelled: g.bool() },
+        20 => Frame::ReportText { text: gstr(g) },
+        21 => Frame::ShuttingDown,
+        _ => Frame::Unknown { tag: unassigned_tag(g) },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_frame_round_trips_bit_exactly() {
+    check("wire round trip", 300, |g| {
+        let req = g.u64(0..=u64::MAX);
+        let frame = gframe(g);
+        let bytes = encode_frame(req, &frame);
+        let (got_req, got) = read_frame(&mut Cursor::new(&bytes))
+            .map_err(|e| format!("decode of {frame:?} failed: {e}"))?;
+        if got_req != req || got != frame {
+            return Err(format!("round trip mutated: {frame:?} -> {got:?}"));
+        }
+        // Deterministic wire image: re-encoding the decoded frame must
+        // reproduce the original bytes (no float/string normalisation).
+        let again = encode_frame(got_req, &got);
+        if again != bytes {
+            return Err(format!("re-encode diverged for {frame:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_truncated_prefix_is_a_typed_error() {
+    check("truncation sweep", 120, |g| {
+        let bytes = encode_frame(g.u64(0..=u64::MAX), &gframe(g));
+        for cut in 0..bytes.len() {
+            match read_frame(&mut Cursor::new(&bytes[..cut])) {
+                Ok((_, frame)) => {
+                    return Err(format!("prefix {cut}/{} decoded as {frame:?}", bytes.len()))
+                }
+                // Cut at the very start is a clean EOF; anywhere else a
+                // typed truncation/decode error. Panics fail the test
+                // harness on their own.
+                Err(WireError::Closed) if cut == 0 => {}
+                Err(_) => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupt_bytes_never_panic_the_decoder() {
+    check("corruption fuzz", 300, |g| {
+        let mut bytes = encode_frame(g.u64(0..=u64::MAX), &gframe(g));
+        let at = g.usize(0, bytes.len() - 1);
+        let flip = g.u64(1..=255) as u8;
+        bytes[at] ^= flip;
+        // Any outcome but a panic is acceptable: a flipped byte may
+        // still decode (e.g. inside string payload bytes) or surface
+        // any typed WireError.
+        let _ = read_frame(&mut Cursor::new(&bytes));
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_tags_are_skipped_and_the_stream_continues() {
+    check("unknown tag skip", 200, |g| {
+        let tag = unassigned_tag(g);
+        let req = g.u64(0..=u64::MAX);
+        let junk = g.vec(0..=255, 0, 64);
+
+        // Hand-craft the foreign frame: [len][req][tag][opaque payload].
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&((8 + 2 + junk.len()) as u32).to_le_bytes());
+        stream.extend_from_slice(&req.to_le_bytes());
+        stream.extend_from_slice(&tag.to_le_bytes());
+        stream.extend(junk.iter().map(|&b| b as u8));
+
+        // A known frame rides right behind it on the same stream.
+        let next = gframe(g);
+        let next_req = g.u64(0..=u64::MAX);
+        stream.extend_from_slice(&encode_frame(next_req, &next));
+
+        let mut cur = Cursor::new(&stream);
+        match read_frame(&mut cur) {
+            Ok((r, Frame::Unknown { tag: t })) if r == req && t == tag => {}
+            other => return Err(format!("foreign frame misread: {other:?}")),
+        }
+        // The opaque payload was fully consumed: the next frame decodes.
+        match read_frame(&mut cur) {
+            Ok((r, f)) if r == next_req && f == next => Ok(()),
+            other => Err(format!("stream desynced after skip: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn oversized_and_trailing_frames_are_refused() {
+    check("oversized header", 100, |g| {
+        // An announced length above the ceiling is refused before any
+        // payload allocation.
+        let len = g.u64(MAX_FRAME_BYTES as u64 + 1..=u32::MAX as u64) as u32;
+        let mut bytes = len.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Err(WireError::Oversized { len: got, max }) => {
+                if got != len as usize || max != MAX_FRAME_BYTES {
+                    return Err(format!("wrong oversize report: len {got}, max {max}"));
+                }
+            }
+            other => return Err(format!("oversized frame not refused: {other:?}")),
+        }
+
+        // A well-formed body followed by covered-but-unconsumed bytes is
+        // a typed Trailing error, not silent acceptance.
+        let frame = gframe(g);
+        if matches!(frame, Frame::Unknown { .. }) {
+            return Ok(()); // Unknown consumes everything by design.
+        }
+        let full = encode_frame(g.u64(0..=u64::MAX), &frame);
+        let extra = g.usize(1, 8);
+        let mut body = full[4..].to_vec();
+        body.extend(vec![0xEEu8; extra]);
+        match decode_body(&body) {
+            Err(WireError::Trailing { extra: got }) if got == extra => Ok(()),
+            other => Err(format!("trailing bytes not refused for {frame:?}: {other:?}")),
+        }
+    });
+}
