@@ -1,0 +1,175 @@
+//! Bench: the scale-out plane — partitioned stream ingest across
+//! loopback map workers vs a single worker.
+//!
+//! ```bash
+//! cargo bench --bench cluster_scaling [-- --quick]
+//! ```
+//!
+//! One coordinator front door per configuration; 1 and 4 loopback
+//! `WorkerNode`s ingest the same seeded dense stream (begin → chunked
+//! append → seal, timed end to end including the summary reduction).
+//! The merge-slot grid hands each worker an interleaved quarter of the
+//! chunks, so flush compute parallelizes while the coordinator's
+//! forwarding stays serial.
+//!
+//! Acceptance gates: 4-worker ingest throughput >= 1.5x the 1-worker
+//! run (1.2x in --quick smoke mode), and the merged Frequent Directions
+//! summary is *accurate within its own composed certificate*: the
+//! directly measured `‖AᵀA − BᵀB‖₂` sits under the merged Σδ bound,
+//! which sits under the classic `‖A‖²_F/(ℓ−k)` guarantee. The merged
+//! `S·A` must also be bit-identical across the two worker counts.
+//! Emits BENCH_cluster_scaling.json.
+
+use std::time::Instant;
+
+use photonic_randnla::bench::{self, Gate, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Policy, PoolConfig, QosClass, StreamOpts,
+    TenantRegistry,
+};
+use photonic_randnla::linalg::{matmul_tn, spectral_norm, Mat};
+use photonic_randnla::net::{WireServer, WorkerConfig, WorkerNode};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::ephemeral_loopback;
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: std::time::Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Timed begin → append → seal of `a` through `n_workers` loopback
+/// nodes; returns (wall ns, merged sa, fd sketch, fd_bound, fro2).
+fn ingest_with_workers(
+    a: &Mat,
+    n_workers: usize,
+    chunk: usize,
+    opts: StreamOpts,
+) -> (f64, Mat, Mat, f64, f64) {
+    let tenants = TenantRegistry::new().add("w", "wtok", usize::MAX, QosClass::Batch);
+    let srv =
+        WireServer::start(coordinator(), &ephemeral_loopback(), tenants).expect("server start");
+    let workers: Vec<WorkerNode> = (0..n_workers)
+        .map(|_| {
+            WorkerNode::connect(&srv.addr().to_string(), "wtok", WorkerConfig::default())
+                .expect("worker join")
+        })
+        .collect();
+    while srv.coordinator().cluster().worker_count() < n_workers {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let c = srv.coordinator();
+    let t0 = Instant::now();
+    let id = c.begin_stream(a.rows, a.cols, opts).expect("begin");
+    let mut r0 = 0usize;
+    while r0 < a.rows {
+        let r1 = (r0 + chunk).min(a.rows);
+        c.append_stream(id, &Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j)))
+            .expect("append");
+        r0 = r1;
+    }
+    c.seal_stream(id).expect("seal");
+    let wall = t0.elapsed().as_nanos() as f64;
+    let sealed = c.streams().sealed(id).expect("sealed");
+    let out = (wall, sealed.sa.clone(), sealed.fd.clone(), sealed.fd_bound, sealed.fro2);
+    drop(sealed);
+    assert!(c.free_stream(id));
+    drop(workers);
+    srv.shutdown();
+    out
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let rows = if quick { 2048usize } else { 8192 };
+    let cols = 64usize;
+    let chunk = rows / 16; // 16 whole-chunk merge slots, 4 per worker at 4
+    let ell = 64usize;
+    let opts = StreamOpts { chunk_rows: Some(chunk), sketch_m: 256, fd_rank: ell, range_cap: 16 };
+    let reps = if quick { 2 } else { 3 };
+    let mib = (rows * cols * 8) as f64 / (1024.0 * 1024.0);
+
+    println!(
+        "== cluster scaling: {rows} x {cols} stream ({mib:.1} MiB), \
+         chunk {chunk}, sketch_m 256, fd ℓ {ell} =="
+    );
+
+    let mut rng = Xoshiro256::new(3);
+    let a = Mat::gaussian(rows, cols, 1.0, &mut rng);
+
+    let mut best_one = f64::INFINITY;
+    let mut best_four = f64::INFINITY;
+    let mut one_sa: Option<Mat> = None;
+    let mut four: Option<(Mat, Mat, f64, f64)> = None;
+    for _ in 0..reps {
+        let (wall, sa, _, _, _) = ingest_with_workers(&a, 1, chunk, opts);
+        best_one = best_one.min(wall);
+        one_sa.get_or_insert(sa);
+        let (wall, sa, fd, bound, fro2) = ingest_with_workers(&a, 4, chunk, opts);
+        best_four = best_four.min(wall);
+        four.get_or_insert((sa, fd, bound, fro2));
+    }
+    let (four_sa, fd, fd_bound, fro2) = four.unwrap();
+
+    let rows_summary = vec![
+        Summary::flat(format!("ingest 1 worker {rows}x{cols}"), rows as u64, best_one / rows as f64),
+        Summary::flat(
+            format!("ingest 4 workers {rows}x{cols}"),
+            rows as u64,
+            best_four / rows as f64,
+        ),
+    ];
+    bench::report("cluster ingest (begin + append + seal + reduce)", &rows_summary);
+
+    let speedup = best_one / best_four;
+    println!(
+        "\nheadline: 4-worker ingest {speedup:.2}x the 1-worker run \
+         ({:.1} ms vs {:.1} ms)",
+        best_four / 1e6,
+        best_one / 1e6
+    );
+
+    // Accuracy of the merged summary against its own composed
+    // certificate (the reduction carries Σδ through the tree).
+    let gram_err = spectral_norm(&matmul_tn(&a, &a).sub(&matmul_tn(&fd, &fd)), 300, 7);
+    let guarantee = fro2 / (ell - ell / 2) as f64;
+    let within_bound = gram_err <= fd_bound * (1.0 + 1e-9) + 1e-9 * fro2;
+    let bound_under_guarantee = fd_bound <= guarantee + 1e-9 * fro2;
+    println!(
+        "merged FD: gram error {gram_err:.3e} <= composed Σδ {fd_bound:.3e} \
+         <= ‖A‖²_F/(ℓ−k) {guarantee:.3e}"
+    );
+    let sa_identical = one_sa.unwrap() == four_sa;
+
+    let floor = if quick { 1.2 } else { 1.5 };
+    let gates = vec![
+        Gate::new(
+            "4-worker ingest throughput vs 1 worker",
+            speedup >= floor,
+            format!("{speedup:.2}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "merged accuracy within the composed FD bound",
+            within_bound && bound_under_guarantee,
+            format!(
+                "gram err {gram_err:.3e}, Σδ {fd_bound:.3e}, guarantee {guarantee:.3e}"
+            ),
+        ),
+        Gate::new(
+            "merged S·A bit-identical across worker counts",
+            sa_identical,
+            if sa_identical { "1-worker == 4-worker" } else { "bits moved" },
+        ),
+    ];
+    bench::finish("cluster_scaling", &rows_summary, &gates);
+}

@@ -34,6 +34,7 @@ use photonic_randnla::net::{WireClient, WireServer};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::rng::Xoshiro256;
 use photonic_randnla::stats;
+use photonic_randnla::testkit::ephemeral_loopback;
 
 fn coordinator() -> Coordinator {
     Coordinator::start(CoordinatorConfig {
@@ -100,7 +101,7 @@ fn main() {
     let tenants =
         TenantRegistry::new().add("bench", "bench-token", usize::MAX, QosClass::Interactive);
     let server =
-        WireServer::start(coordinator(), "127.0.0.1:0", tenants).expect("server start");
+        WireServer::start(coordinator(), &ephemeral_loopback(), tenants).expect("server start");
     let client =
         WireClient::connect(server.addr(), "bench-token").expect("client connect");
     let rid = client.upload(&x).expect("remote upload");

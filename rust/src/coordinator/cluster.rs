@@ -1,0 +1,950 @@
+//! Map/reduce scale-out plane: partitioned stream ingest across
+//! `photon worker` nodes, merged back into one servable summary.
+//!
+//! The streaming plane (PR 5) made every one-pass summary *mergeable by
+//! construction*: the co-range accumulator `S·A` is a sum of
+//! disjoint-row partials of one counter-seeded operator, the range
+//! sketch `Yᵀ` is a column concatenation, and Frequent Directions
+//! carries the classic merge theorem (stack + shrink, bounds compose).
+//! This module is the protocol that exploits it:
+//!
+//! - the coordinator cuts a stream's row space into **merge slots** —
+//!   whole-chunk runs, at most [`MERGE_SLOTS`] of them, fixed by
+//!   `(rows, chunk_rows)` alone and *independent of worker count*;
+//! - registered workers own slots round-robin and ingest forwarded row
+//!   blocks against the shared signature operators at absolute offsets
+//!   (`Frame::AssignPartition` / `Frame::PartitionRows`);
+//! - `seal` raises an epoch barrier (`Frame::SealPartition`); workers
+//!   push one [`Frame::SlotSummary`] per owned slot plus a
+//!   [`Frame::PartitionSealed`] FD part, and the coordinator
+//!   tree-reduces the parts into a [`SealedStream`] that the existing
+//!   `OperandRef::Stream` path serves unchanged.
+//!
+//! **Bit-identity contract.** Per-slot `S·A` partials are sums over the
+//! slot's fixed chunk schedule — identical whichever worker computes
+//! them — and [`reduce_parts`] folds slot partials in ascending offset
+//! order (a canonical f64 association) *regardless of the reduction
+//! tree's arity*. Merged accumulators are therefore bit-identical
+//! across 1/2/4-worker partitions and across 2-way vs 4-way reductions.
+//! Only the FD part of the reduction is tree-shaped (stack + shrink per
+//! group); its result varies in bits but the composed Σδ bound travels
+//! with it and still sits under `‖A‖²_F/(ℓ−k)`.
+//!
+//! **Failure semantics.** A worker death mid-ingest poisons every
+//! stream holding one of its slots with a typed [`ClusterError`];
+//! appends, seals and submits then fail typed (never hang — the seal
+//! barrier also carries a timeout), and `free` releases coordinator- and
+//! worker-side bytes (`Frame::FreePartition`). See
+//! `docs/architecture.md` ("Scale-out: map workers and summary
+//! reduction").
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt;
+use std::net::TcpStream;
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Device;
+use crate::coordinator::stream::{
+    SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry,
+};
+use crate::coordinator::wire::{arm_from, write_frame, Frame, WireMat};
+use crate::linalg::Mat;
+use crate::perfmodel;
+use crate::randnla::streaming::{fold_partials, FrequentDirections};
+
+/// Upper bound on merge slots per stream. The slot grid — not the
+/// worker list — is the unit of summary merging, so growing or
+/// shrinking the worker pool between streams never moves a partial's
+/// f64 association.
+pub const MERGE_SLOTS: usize = 16;
+
+/// How long `seal` waits on the summary barrier before failing typed.
+/// Worker deaths short-circuit the wait; the timeout is the hang-proof
+/// backstop for a stalled-but-connected worker.
+pub const BARRIER_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Typed scale-out failures. Streams poisoned with one of these fail
+/// every subsequent append/seal/submit with
+/// [`StreamError::Cluster`] — degraded, typed, never a hang.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterError {
+    /// No registered workers (the coordinator routes locally instead;
+    /// hitting this means a worker died between begin and now).
+    NoWorkers,
+    /// A worker connection died while holding live partitions.
+    WorkerLost { worker: u64 },
+    /// The seal barrier timed out with summaries still missing.
+    Barrier { stream: u64, missing: usize },
+    /// A frame could not be written to a worker.
+    Transport { worker: u64, detail: String },
+    /// A worker reported a partition failure (its flush path errored).
+    Worker { worker: u64, detail: String },
+    /// A summary arrived malformed (shape/coverage mismatch).
+    Protocol(String),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::NoWorkers => write!(f, "no map workers registered"),
+            ClusterError::WorkerLost { worker } => {
+                write!(f, "worker#{worker} lost with partitions in flight")
+            }
+            ClusterError::Barrier { stream, missing } => {
+                write!(f, "summary barrier for stream#{stream} timed out ({missing} parts missing)")
+            }
+            ClusterError::Transport { worker, detail } => {
+                write!(f, "transport to worker#{worker} failed: {detail}")
+            }
+            ClusterError::Worker { worker, detail } => {
+                write!(f, "worker#{worker} failed its partition: {detail}")
+            }
+            ClusterError::Protocol(msg) => write!(f, "cluster protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Cut `rows` into at most [`MERGE_SLOTS`] contiguous runs of whole
+/// `chunk_rows` chunks (the final slot absorbs the ragged tail). The
+/// grid depends only on `(rows, chunk_rows)` — the invariant every
+/// bit-identity claim of this plane rests on.
+pub fn plan_slots(rows: usize, chunk_rows: usize) -> Vec<Range<usize>> {
+    let chunk = chunk_rows.max(1).min(rows.max(1));
+    let chunks_total = rows.div_ceil(chunk);
+    let per_slot = chunks_total.div_ceil(MERGE_SLOTS);
+    let slot_rows = per_slot * chunk;
+    let mut out = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = (r0 + slot_rows).min(rows);
+        out.push(r0..r1);
+        r0 = r1;
+    }
+    out
+}
+
+/// One merge slot's summaries, as pushed by its owning worker.
+#[derive(Clone, Debug)]
+pub struct PartSummary {
+    pub r0: usize,
+    pub r1: usize,
+    /// `S[:, r0..r1] · A[r0..r1, :]` (sketch_m × cols), summed over the
+    /// slot's chunks in ascending offset order.
+    pub sa: Mat,
+    /// The slot's columns of `Yᵀ` (range_cap × (r1−r0)).
+    pub yt: Mat,
+    /// Exact `‖A[r0..r1, :]‖²_F`.
+    pub fro2: f64,
+    pub chunks: u64,
+    pub arm: Option<Device>,
+    pub y_arm: Option<Device>,
+}
+
+/// One worker's Frequent Directions part: its sketch plus the measured
+/// Σδ bound and Frobenius mass needed to compose the merge bound.
+#[derive(Clone, Debug)]
+pub struct FdPart {
+    /// First absolute row the worker owned (fixes the reduction order).
+    pub r0: usize,
+    pub fd: Mat,
+    pub bound: f64,
+    pub fro2: f64,
+}
+
+/// Tree-reduce worker FD parts with the given arity: each group of
+/// `arity` consecutive parts stacks into one rank-ℓ sketch (shrinkage
+/// composes the group's bounds), levels repeat until one part remains.
+/// Any arity yields a valid sketch whose composed bound dominates the
+/// true Gram error; the shape only moves *which* δs get added where.
+pub fn tree_reduce_fd(parts: &[FdPart], ell: usize, cols: usize, arity: usize) -> FrequentDirections {
+    assert!(arity >= 2, "reduction arity must be >= 2");
+    assert!(!parts.is_empty(), "FD reduction needs at least one part");
+    let mut level: Vec<(Mat, f64, f64)> =
+        parts.iter().map(|p| (p.fd.clone(), p.bound, p.fro2)).collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(arity));
+        for group in level.chunks(arity) {
+            let mut fd = FrequentDirections::new(ell, cols);
+            for (sk, bound, fro2) in group {
+                fd.merge(sk, *bound, *fro2);
+            }
+            fd.compress();
+            next.push((fd.sketch(), fd.bound(), fd.fro2()));
+        }
+        level = next;
+    }
+    // Rebuild the final FD from the root triple. A ≤ ℓ-row sketch
+    // merges into an empty FD without flushing, so this is exact.
+    let (sk, bound, fro2) = &level[0];
+    let mut fd = FrequentDirections::new(ell, cols);
+    fd.merge(sk, *bound, *fro2);
+    fd.compress();
+    fd
+}
+
+fn coherent_arm(parts: impl Iterator<Item = Option<Device>>) -> Option<Device> {
+    let mut out: Option<Device> = None;
+    for (i, arm) in parts.enumerate() {
+        match (i, arm) {
+            (_, None) => return None,
+            (0, a) => out = a,
+            (_, a) if a != out => return None,
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Reduce slot summaries + worker FD parts into the stream's sealed
+/// summaries. The `S·A` accumulator and `fro2` fold in ascending slot
+/// order (canonical — arity-independent, see module docs), `Yᵀ` spans
+/// concatenate, and the FD parts tree-reduce at the given arity with
+/// the composed Σδ bound carried through.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_parts(
+    rows: usize,
+    cols: usize,
+    sketch_m: usize,
+    range_cap: usize,
+    fd_rank: usize,
+    mut slots: Vec<PartSummary>,
+    mut fds: Vec<FdPart>,
+    arity: usize,
+) -> Result<SealedStream, ClusterError> {
+    slots.sort_by_key(|p| p.r0);
+    fds.sort_by_key(|p| p.r0);
+    let mut expect = 0usize;
+    for p in &slots {
+        if p.r0 != expect || p.r1 <= p.r0 || p.r1 > rows {
+            return Err(ClusterError::Protocol(format!(
+                "slot coverage broken at rows {}..{} (expected start {expect})",
+                p.r0, p.r1
+            )));
+        }
+        if (p.sa.rows, p.sa.cols) != (sketch_m, cols)
+            || (p.yt.rows, p.yt.cols) != (range_cap, p.r1 - p.r0)
+        {
+            return Err(ClusterError::Protocol(format!(
+                "slot {}..{} summary shapes {}x{} / {}x{} do not match the stream",
+                p.r0, p.r1, p.sa.rows, p.sa.cols, p.yt.rows, p.yt.cols
+            )));
+        }
+        expect = p.r1;
+    }
+    if expect != rows {
+        return Err(ClusterError::Protocol(format!(
+            "slot coverage ends at row {expect}, stream declared {rows}"
+        )));
+    }
+    if fds.is_empty() {
+        return Err(ClusterError::Protocol("no FD parts in the reduction".into()));
+    }
+
+    let sa_parts: Vec<Mat> = slots.iter().map(|p| p.sa.clone()).collect();
+    let sa = fold_partials(&sa_parts);
+    let mut yt = Mat::zeros(range_cap, rows);
+    for p in &slots {
+        for i in 0..range_cap {
+            yt.row_mut(i)[p.r0..p.r1].copy_from_slice(p.yt.row(i));
+        }
+    }
+    let mut fro2 = 0.0f64;
+    for p in &slots {
+        fro2 += p.fro2;
+    }
+    let chunks = slots.iter().map(|p| p.chunks).sum();
+    let arm = coherent_arm(slots.iter().map(|p| p.arm));
+    let y_arm = coherent_arm(slots.iter().map(|p| p.y_arm));
+    let fd = tree_reduce_fd(&fds, fd_rank, cols, arity);
+    Ok(SealedStream {
+        rows,
+        cols,
+        sketch_m,
+        range_cap,
+        fd_rank,
+        yt,
+        sa,
+        fd: fd.sketch(),
+        fd_bound: fd.bound(),
+        fro2,
+        arm,
+        y_arm,
+        chunks,
+    })
+}
+
+struct WorkerLink {
+    name: String,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+struct SlotAssign {
+    slot: usize,
+    r0: usize,
+    r1: usize,
+    worker: u64,
+}
+
+struct ClusterStream {
+    rows: usize,
+    cols: usize,
+    chunk_rows: usize,
+    sketch_m: usize,
+    fd_rank: usize,
+    range_cap: usize,
+    epoch: u64,
+    slots: Vec<SlotAssign>,
+    next_row: usize,
+    collected: BTreeMap<usize, PartSummary>,
+    fd_parts: BTreeMap<u64, FdPart>,
+    sealed_acks: HashSet<u64>,
+    failed: Option<ClusterError>,
+}
+
+impl ClusterStream {
+    fn owners(&self) -> HashSet<u64> {
+        self.slots.iter().map(|s| s.worker).collect()
+    }
+
+    fn barrier_done(&self) -> bool {
+        self.collected.len() == self.slots.len()
+            && self.sealed_acks.len() == self.owners().len()
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    workers: BTreeMap<u64, WorkerLink>,
+    next_worker: u64,
+    streams: HashMap<u64, ClusterStream>,
+}
+
+/// Coordinator-side cluster state: the worker registry, per-stream
+/// partition assignments, and the seal-time summary barrier.
+pub struct ClusterPlane {
+    inner: Mutex<Inner>,
+    barrier: Condvar,
+    streams: Arc<StreamRegistry>,
+    metrics: Arc<Metrics>,
+    events: Arc<EventLog>,
+    /// Signature operator base seed every node draws from.
+    seed: u64,
+    default_chunk_rows: usize,
+}
+
+impl ClusterPlane {
+    pub fn new(
+        streams: Arc<StreamRegistry>,
+        metrics: Arc<Metrics>,
+        events: Arc<EventLog>,
+        seed: u64,
+        default_chunk_rows: usize,
+    ) -> Self {
+        Self {
+            inner: Mutex::new(Inner { next_worker: 1, ..Inner::default() }),
+            barrier: Condvar::new(),
+            streams,
+            metrics,
+            events,
+            seed,
+            default_chunk_rows: default_chunk_rows.max(1),
+        }
+    }
+
+    /// Register a dialed-in worker connection. Returns the worker id
+    /// plus the engine constants it must adopt (operator base seed,
+    /// default chunk size).
+    pub fn register_worker(
+        &self,
+        name: impl Into<String>,
+        writer: Arc<Mutex<TcpStream>>,
+    ) -> (u64, u64, usize) {
+        let name = name.into();
+        let id = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.next_worker;
+            inner.next_worker += 1;
+            inner.workers.insert(id, WorkerLink { name: name.clone(), writer });
+            id
+        };
+        self.metrics.workers_connected.fetch_add(1, Ordering::Relaxed);
+        self.events.append(Event::WorkerJoined { worker: name });
+        (id, self.seed, self.default_chunk_rows)
+    }
+
+    /// A worker connection died. Every stream holding one of its slots
+    /// is poisoned typed; seal waiters wake immediately.
+    pub fn worker_lost(&self, worker: u64) {
+        let name = {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(link) = inner.workers.remove(&worker) else {
+                return;
+            };
+            let mut poisoned = Vec::new();
+            for (id, st) in inner.streams.iter_mut() {
+                if st.slots.iter().any(|s| s.worker == worker) && st.failed.is_none() {
+                    st.failed = Some(ClusterError::WorkerLost { worker });
+                    poisoned.push(*id);
+                }
+            }
+            for id in &poisoned {
+                self.streams
+                    .fail_deferred(StreamId(*id), ClusterError::WorkerLost { worker });
+            }
+            link.name
+        };
+        self.metrics.workers_connected.fetch_sub(1, Ordering::Relaxed);
+        self.events.append(Event::WorkerLost { worker: name });
+        self.barrier.notify_all();
+    }
+
+    /// Live registered workers.
+    pub fn worker_count(&self) -> usize {
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    /// Registered worker names (peer addresses), in id order.
+    pub fn worker_names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().workers.values().map(|w| w.name.clone()).collect()
+    }
+
+    /// Whether this stream ingests through the cluster plane.
+    pub fn owns(&self, id: StreamId) -> bool {
+        self.inner.lock().unwrap().streams.contains_key(&id.0)
+    }
+
+    /// Open a cluster-partitioned stream: reserve the deferred slot in
+    /// the registry (same quota discipline as a local stream), cut the
+    /// merge-slot grid, assign slots to workers round-robin and send
+    /// the partition assignments.
+    pub fn begin(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+        default_chunk_rows: usize,
+    ) -> Result<StreamId, StreamError> {
+        let id = self.streams.begin_deferred(rows, cols, opts, default_chunk_rows)?;
+        let chunk_rows = opts.chunk_rows.unwrap_or(default_chunk_rows).max(1).min(rows);
+        let ranges = plan_slots(rows, chunk_rows);
+        let mut sends: Vec<(u64, Arc<Mutex<TcpStream>>, Frame)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.workers.is_empty() {
+                drop(inner);
+                self.streams.free(id);
+                return Err(StreamError::Cluster(ClusterError::NoWorkers));
+            }
+            let ids: Vec<u64> = inner.workers.keys().copied().collect();
+            let slots: Vec<SlotAssign> = ranges
+                .iter()
+                .enumerate()
+                .map(|(i, r)| SlotAssign {
+                    slot: i,
+                    r0: r.start,
+                    r1: r.end,
+                    worker: ids[i % ids.len()],
+                })
+                .collect();
+            for s in &slots {
+                let link = &inner.workers[&s.worker];
+                sends.push((
+                    s.worker,
+                    link.writer.clone(),
+                    Frame::AssignPartition {
+                        stream: id.0,
+                        epoch: 0,
+                        slot: s.slot as u64,
+                        r0: s.r0 as u64,
+                        r1: s.r1 as u64,
+                        total_rows: rows as u64,
+                        cols: cols as u64,
+                        chunk_rows: chunk_rows as u64,
+                        sketch_m: opts.sketch_m as u64,
+                        fd_rank: opts.fd_rank as u64,
+                        range_cap: opts.range_cap as u64,
+                    },
+                ));
+            }
+            inner.streams.insert(
+                id.0,
+                ClusterStream {
+                    rows,
+                    cols,
+                    chunk_rows,
+                    sketch_m: opts.sketch_m,
+                    fd_rank: opts.fd_rank,
+                    range_cap: opts.range_cap,
+                    epoch: 0,
+                    slots,
+                    next_row: 0,
+                    collected: BTreeMap::new(),
+                    fd_parts: BTreeMap::new(),
+                    sealed_acks: HashSet::new(),
+                    failed: None,
+                },
+            );
+        }
+        self.metrics.cluster_streams.fetch_add(1, Ordering::Relaxed);
+        for (worker, writer, frame) in sends {
+            if let Err(e) = send_to(&writer, &frame) {
+                // Nothing merged yet: unwind fully (drop cluster entry,
+                // tell live workers, release the registry reservation).
+                let err = ClusterError::Transport { worker, detail: e };
+                self.free(id);
+                self.streams.free(id);
+                return Err(StreamError::Cluster(err));
+            }
+        }
+        Ok(id)
+    }
+
+    /// Forward a block of rows, split at slot boundaries, to the owning
+    /// workers. Rows must arrive in order (the wire session guarantees
+    /// it); the worker re-chunks to the stream's chunk schedule.
+    pub fn append(&self, id: StreamId, rows: &Mat) -> Result<(), StreamError> {
+        let mut sends: Vec<(u64, String, Arc<Mutex<TcpStream>>, Frame, usize)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let Inner { workers, streams, .. } = &mut *inner;
+            let st = streams
+                .get_mut(&id.0)
+                .ok_or(StreamError::UnknownStream(id))?;
+            if let Some(e) = &st.failed {
+                return Err(StreamError::Cluster(e.clone()));
+            }
+            if rows.cols != st.cols {
+                return Err(StreamError::ColsMismatch { expected: st.cols, got: rows.cols });
+            }
+            if st.next_row + rows.rows > st.rows {
+                return Err(StreamError::Overrun {
+                    declared: st.rows,
+                    got: st.next_row + rows.rows,
+                });
+            }
+            let mut at = 0usize;
+            while at < rows.rows {
+                let abs = st.next_row + at;
+                let slot = st
+                    .slots
+                    .iter()
+                    .find(|s| s.r0 <= abs && abs < s.r1)
+                    .expect("slot grid covers every row");
+                let take = (slot.r1 - abs).min(rows.rows - at);
+                let block = Mat::from_fn(take, rows.cols, |i, j| rows.at(at + i, j));
+                let link = workers.get(&slot.worker).ok_or_else(|| {
+                    StreamError::Cluster(ClusterError::WorkerLost { worker: slot.worker })
+                })?;
+                sends.push((
+                    slot.worker,
+                    link.name.clone(),
+                    link.writer.clone(),
+                    Frame::PartitionRows {
+                        stream: id.0,
+                        slot: slot.slot as u64,
+                        rows: WireMat::from_mat(&block),
+                    },
+                    take,
+                ));
+                at += take;
+            }
+            st.next_row += rows.rows;
+        }
+        for (worker, name, writer, frame, take) in sends {
+            if let Err(e) = send_to(&writer, &frame) {
+                self.poison(id, ClusterError::Transport { worker, detail: e });
+                return Err(self.failure(id));
+            }
+            self.metrics.cluster_rows_forwarded.fetch_add(take as u64, Ordering::Relaxed);
+            self.metrics.worker_ingest(&name, take as u64);
+        }
+        Ok(())
+    }
+
+    /// Raise the epoch barrier: every owner flushes tails and pushes
+    /// its slot summaries + FD part; when the last part lands the
+    /// reduction runs and the registry slot is fulfilled. Failures and
+    /// the barrier timeout surface typed — never a hang.
+    pub fn seal(&self, id: StreamId) -> Result<(), StreamError> {
+        let mut sends: Vec<(u64, Arc<Mutex<TcpStream>>, Frame)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let Inner { workers, streams, .. } = &mut *inner;
+            let st = streams
+                .get_mut(&id.0)
+                .ok_or(StreamError::UnknownStream(id))?;
+            if let Some(e) = &st.failed {
+                return Err(StreamError::Cluster(e.clone()));
+            }
+            if st.next_row < st.rows {
+                return Err(StreamError::Short { declared: st.rows, got: st.next_row });
+            }
+            st.epoch += 1;
+            let epoch = st.epoch;
+            for worker in st.owners() {
+                let link = workers.get(&worker).ok_or_else(|| {
+                    StreamError::Cluster(ClusterError::WorkerLost { worker })
+                })?;
+                sends.push((
+                    worker,
+                    link.writer.clone(),
+                    Frame::SealPartition { stream: id.0, epoch },
+                ));
+            }
+        }
+        for (worker, writer, frame) in sends {
+            if let Err(e) = send_to(&writer, &frame) {
+                self.poison(id, ClusterError::Transport { worker, detail: e });
+                return Err(self.failure(id));
+            }
+        }
+
+        // Wait for the barrier: every slot summary + every owner ack.
+        enum Step {
+            Fail(ClusterError),
+            Done,
+            Missing(usize),
+        }
+        let deadline = Instant::now() + BARRIER_TIMEOUT;
+        let mut inner = self.inner.lock().unwrap();
+        let st = loop {
+            let step = match inner.streams.get(&id.0) {
+                None => return Err(StreamError::UnknownStream(id)),
+                Some(st) => {
+                    if let Some(e) = &st.failed {
+                        Step::Fail(e.clone())
+                    } else if st.barrier_done() {
+                        Step::Done
+                    } else {
+                        Step::Missing(st.slots.len() - st.collected.len())
+                    }
+                }
+            };
+            match step {
+                Step::Fail(e) => {
+                    drop(inner);
+                    self.streams.fail_deferred(id, e.clone());
+                    return Err(StreamError::Cluster(e));
+                }
+                Step::Done => break inner.streams.remove(&id.0).unwrap(),
+                Step::Missing(missing) => {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        let e = ClusterError::Barrier { stream: id.0, missing };
+                        if let Some(st) = inner.streams.get_mut(&id.0) {
+                            st.failed = Some(e.clone());
+                        }
+                        drop(inner);
+                        self.streams.fail_deferred(id, e.clone());
+                        return Err(StreamError::Cluster(e));
+                    }
+                    let (g, _t) = self.barrier.wait_timeout(inner, left).unwrap();
+                    inner = g;
+                }
+            }
+        };
+        drop(inner);
+
+        // Reduce outside the lock: canonical SA/Yᵀ/fro2 fold + FD tree
+        // at the perfmodel-chosen arity.
+        let arity = perfmodel::merge_tree_arity(st.fd_parts.len());
+        let slots: Vec<PartSummary> = st.collected.into_values().collect();
+        let fds: Vec<FdPart> = st.fd_parts.into_values().collect();
+        let sealed = reduce_parts(
+            st.rows,
+            st.cols,
+            st.sketch_m,
+            st.range_cap,
+            st.fd_rank,
+            slots,
+            fds,
+            arity,
+        )
+        .map_err(|e| {
+            self.streams.fail_deferred(id, e.clone());
+            StreamError::Cluster(e)
+        })?;
+        self.metrics.summary_merges.fetch_add(1, Ordering::Relaxed);
+        self.streams.fulfill_deferred(id, sealed)
+    }
+
+    /// Drop the stream's partition state on every node: workers release
+    /// their reserved bytes (`Frame::FreePartition`), the coordinator
+    /// forgets the assignment. The registry slot itself is freed by the
+    /// caller (`Coordinator::free_stream`).
+    pub fn free(&self, id: StreamId) -> bool {
+        let sends: Vec<(Arc<Mutex<TcpStream>>, Frame)> = {
+            let mut inner = self.inner.lock().unwrap();
+            let Some(st) = inner.streams.remove(&id.0) else {
+                return false;
+            };
+            st.owners()
+                .into_iter()
+                .filter_map(|w| inner.workers.get(&w))
+                .map(|link| (link.writer.clone(), Frame::FreePartition { stream: id.0 }))
+                .collect()
+        };
+        for (writer, frame) in sends {
+            // Best-effort: a dead worker holds no bytes worth chasing.
+            let _ = send_to(&writer, &frame);
+        }
+        self.barrier.notify_all();
+        true
+    }
+
+    /// Route one worker-role frame from a connection's read loop.
+    pub fn worker_frame(&self, worker: u64, frame: Frame) {
+        match frame {
+            Frame::SlotSummary { stream, slot, r0, r1, chunks, fro2, arm, y_arm, sa, yt } => {
+                let parsed = (|| -> Result<PartSummary, ClusterError> {
+                    Ok(PartSummary {
+                        r0: r0 as usize,
+                        r1: r1 as usize,
+                        sa: sa.to_mat().map_err(|e| ClusterError::Protocol(e.to_string()))?,
+                        yt: yt.to_mat().map_err(|e| ClusterError::Protocol(e.to_string()))?,
+                        fro2: f64::from_bits(fro2),
+                        chunks,
+                        arm: arm_from(arm).map_err(|e| ClusterError::Protocol(e.to_string()))?,
+                        y_arm: arm_from(y_arm)
+                            .map_err(|e| ClusterError::Protocol(e.to_string()))?,
+                    })
+                })();
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(st) = inner.streams.get_mut(&stream) {
+                    match parsed {
+                        Ok(p) => {
+                            st.collected.insert(slot as usize, p);
+                        }
+                        Err(e) => {
+                            st.failed = Some(e.clone());
+                            drop(inner);
+                            self.streams.fail_deferred(StreamId(stream), e);
+                            self.barrier.notify_all();
+                            return;
+                        }
+                    }
+                }
+                drop(inner);
+                self.barrier.notify_all();
+            }
+            Frame::PartitionSealed { stream, epoch: _, fd_bound, fd } => {
+                let fd_mat = fd.to_mat();
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(st) = inner.streams.get_mut(&stream) {
+                    match fd_mat {
+                        Ok(mat) => {
+                            let r0 = st
+                                .slots
+                                .iter()
+                                .filter(|s| s.worker == worker)
+                                .map(|s| s.r0)
+                                .min()
+                                .unwrap_or(0);
+                            st.fd_parts.insert(
+                                worker,
+                                FdPart {
+                                    r0,
+                                    fd: mat,
+                                    bound: f64::from_bits(fd_bound),
+                                    fro2: st
+                                        .slots
+                                        .iter()
+                                        .filter(|s| s.worker == worker)
+                                        .filter_map(|s| st.collected.get(&s.slot))
+                                        .map(|p| p.fro2)
+                                        .sum(),
+                                },
+                            );
+                            st.sealed_acks.insert(worker);
+                        }
+                        Err(e) => {
+                            let err = ClusterError::Protocol(e.to_string());
+                            st.failed = Some(err.clone());
+                            drop(inner);
+                            self.streams.fail_deferred(StreamId(stream), err);
+                            self.barrier.notify_all();
+                            return;
+                        }
+                    }
+                }
+                drop(inner);
+                self.barrier.notify_all();
+            }
+            Frame::PartitionFreed { .. } => {
+                // Informational ack; worker-side gauges are the test's
+                // source of truth.
+            }
+            Frame::Status(s) => {
+                // A worker reporting a partition failure poisons the
+                // stream it names in `a`.
+                let id = StreamId(s.a);
+                self.poison(id, ClusterError::Worker { worker, detail: s.detail });
+            }
+            _ => {}
+        }
+    }
+
+    fn poison(&self, id: StreamId, e: ClusterError) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(st) = inner.streams.get_mut(&id.0) {
+                if st.failed.is_none() {
+                    st.failed = Some(e.clone());
+                }
+            }
+        }
+        self.streams.fail_deferred(id, e);
+        self.barrier.notify_all();
+    }
+
+    fn failure(&self, id: StreamId) -> StreamError {
+        let inner = self.inner.lock().unwrap();
+        match inner.streams.get(&id.0).and_then(|s| s.failed.clone()) {
+            Some(e) => StreamError::Cluster(e),
+            None => StreamError::UnknownStream(id),
+        }
+    }
+}
+
+fn send_to(writer: &Arc<Mutex<TcpStream>>, frame: &Frame) -> Result<(), String> {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, 0, frame).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_tn, rel_frobenius_error, spectral_norm};
+    use crate::randnla::backend::{CounterSketcher, Sketcher};
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn slot_grid_is_chunk_aligned_and_worker_independent() {
+        for (rows, chunk) in [(40usize, 16usize), (1000, 64), (7, 16), (16, 1), (257, 16)] {
+            let slots = plan_slots(rows, chunk);
+            assert!(slots.len() <= MERGE_SLOTS);
+            assert_eq!(slots.first().unwrap().start, 0);
+            assert_eq!(slots.last().unwrap().end, rows);
+            for w in slots.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "grid must be contiguous");
+                assert_eq!(w[0].len() % chunk.min(rows), 0, "interior slots are whole chunks");
+            }
+        }
+    }
+
+    /// Build per-slot summaries of `a` the way a worker would: chunked
+    /// absolute-offset partials per slot, exact per-slot fro2.
+    fn slot_parts(a: &Mat, chunk: usize, m: usize, cap: usize, seed: u64) -> Vec<PartSummary> {
+        let s_op = CounterSketcher::new(m, a.rows, seed);
+        let omega = CounterSketcher::new(cap, a.cols, seed ^ 1);
+        plan_slots(a.rows, chunk)
+            .into_iter()
+            .map(|r| {
+                let mut sa = Mat::zeros(m, a.cols);
+                let mut yt = Mat::zeros(cap, r.len());
+                let mut fro2 = 0.0f64;
+                let mut chunks = 0u64;
+                let mut r0 = r.start;
+                while r0 < r.end {
+                    let r1 = (r0 + chunk).min(r.end);
+                    let block = Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j));
+                    let partial = crate::randnla::streaming::RowBlockSketcher::project_rows(
+                        &s_op,
+                        r0..r1,
+                        &block,
+                    );
+                    for (dst, v) in sa.data.iter_mut().zip(&partial.data) {
+                        *dst += v;
+                    }
+                    let y = Sketcher::project(&omega, &block.transpose());
+                    for i in 0..cap {
+                        yt.row_mut(i)[r0 - r.start..r1 - r.start].copy_from_slice(y.row(i));
+                    }
+                    fro2 += block.data.iter().map(|v| v * v).sum::<f64>();
+                    chunks += 1;
+                    r0 = r1;
+                }
+                PartSummary {
+                    r0: r.start,
+                    r1: r.end,
+                    sa,
+                    yt,
+                    fro2,
+                    chunks,
+                    arm: Some(Device::Host),
+                    y_arm: Some(Device::Host),
+                }
+            })
+            .collect()
+    }
+
+    fn fd_parts(a: &Mat, splits: &[Range<usize>], ell: usize) -> Vec<FdPart> {
+        splits
+            .iter()
+            .map(|r| {
+                let mut fd = FrequentDirections::new(ell, a.cols);
+                fd.insert(&Mat::from_fn(r.len(), a.cols, |i, j| a.at(r.start + i, j)));
+                fd.compress();
+                FdPart { r0: r.start, fd: fd.sketch(), bound: fd.bound(), fro2: fd.fro2() }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reduction_is_bit_identical_across_tree_arity_and_split() {
+        let mut rng = Xoshiro256::new(9);
+        let a = Mat::gaussian(96, 12, 1.0, &mut rng);
+        let (m, cap, ell, chunk) = (10usize, 4usize, 8usize, 8usize);
+        let parts = slot_parts(&a, chunk, m, cap, 77);
+        let halves = fd_parts(&a, &[0..48, 48..96], ell);
+        let quarters = fd_parts(&a, &[0..24, 24..48, 48..72, 72..96], ell);
+        let r2 =
+            reduce_parts(96, 12, m, cap, ell, parts.clone(), halves, 2).unwrap();
+        let r4 = reduce_parts(96, 12, m, cap, ell, parts, quarters, 4).unwrap();
+        assert_eq!(r2.sa, r4.sa, "S·A fold must be arity-invariant bit for bit");
+        assert_eq!(r2.yt, r4.yt, "Yᵀ concatenation must be arity-invariant");
+        assert_eq!(r2.fro2.to_bits(), r4.fro2.to_bits());
+        // Both composed FD bounds dominate the true Gram error.
+        for r in [&r2, &r4] {
+            let diff = matmul_tn(&a, &a).sub(&matmul_tn(&r.fd, &r.fd));
+            let direct = spectral_norm(&diff, 200, 5);
+            assert!(direct <= r.fd_bound * (1.0 + 1e-9) + 1e-12);
+            assert!(r.fd_bound <= r.fro2 / (ell - ell / 2) as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn merged_sa_matches_the_unpartitioned_operator_apply() {
+        let mut rng = Xoshiro256::new(10);
+        let a = Mat::gaussian(64, 8, 1.0, &mut rng);
+        let (m, cap, ell) = (6usize, 3usize, 6usize);
+        let parts = slot_parts(&a, 16, m, cap, 5);
+        let fds = fd_parts(&a, &[0..64], ell);
+        let r = reduce_parts(64, 8, m, cap, ell, parts, fds, 2).unwrap();
+        let s_op = CounterSketcher::new(m, 64, 5);
+        let rel = rel_frobenius_error(&Sketcher::project(&s_op, &a), &r.sa);
+        assert!(rel < 1e-12, "merged S·A drifted {rel}");
+        let omega = CounterSketcher::new(cap, 8, 5 ^ 1);
+        assert_eq!(r.yt, Sketcher::project(&omega, &a.transpose()), "Yᵀ must be bit-exact");
+    }
+
+    #[test]
+    fn broken_coverage_is_a_typed_protocol_error() {
+        let mut rng = Xoshiro256::new(11);
+        let a = Mat::gaussian(32, 4, 1.0, &mut rng);
+        let mut parts = slot_parts(&a, 8, 4, 2, 3);
+        parts.remove(1);
+        let fds = fd_parts(&a, &[0..32], 4);
+        match reduce_parts(32, 4, 4, 2, 4, parts, fds, 2) {
+            Err(ClusterError::Protocol(_)) => {}
+            other => panic!("expected Protocol error, got {other:?}"),
+        }
+    }
+}

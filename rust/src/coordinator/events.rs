@@ -68,6 +68,11 @@ pub enum Event {
     /// (journaled right after the job's `Submitted` event, so per-job
     /// trails carry the owning tenant).
     TenantSubmitted { job: u64, tenant: String },
+    /// A map worker registered on the cluster plane (scale-out ingest).
+    WorkerJoined { worker: String },
+    /// A map worker's connection died; streams holding its partitions
+    /// were poisoned with a typed [`ClusterError`](super::ClusterError).
+    WorkerLost { worker: String },
 }
 
 struct LogState {

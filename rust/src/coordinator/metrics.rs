@@ -78,6 +78,15 @@ pub struct Metrics {
     /// Projection requests that actually reached a batcher flush —
     /// the ground truth for "a cache hit executed 0 device passes".
     pub projections_executed: AtomicU64,
+    /// Gauge: map workers registered on the cluster plane right now.
+    pub workers_connected: AtomicU64,
+    /// Streams opened cluster-partitioned (ingest through workers).
+    pub cluster_streams: AtomicU64,
+    /// Rows forwarded to workers over the partition wire.
+    pub cluster_rows_forwarded: AtomicU64,
+    /// Seal-time summary-merge reductions executed (the cluster plane's
+    /// "summary_merge" job kind).
+    pub summary_merges: AtomicU64,
     latency_hist: LatencyHist,
     /// Submit→pop wait of Interactive-class jobs (µs), stamped at pop.
     wait_interactive: LatencyHist,
@@ -86,6 +95,8 @@ pub struct Metrics {
     /// Per-tenant accounting for the network front door (BTreeMap so
     /// `report()` lists tenants in a stable sorted order).
     tenants: Mutex<BTreeMap<String, TenantStats>>,
+    /// Per-worker ingest rows (cluster plane), keyed by worker name.
+    workers: Mutex<BTreeMap<String, u64>>,
 }
 
 /// Per-tenant counters fed by the wire server and the queue.
@@ -214,6 +225,18 @@ impl Metrics {
         Some(crate::stats::percentile(&mut v, p))
     }
 
+    /// Rows forwarded to (and acknowledged as ingested by) one worker —
+    /// the per-worker ingest gauge behind the `worker[...]` report lines.
+    pub fn worker_ingest(&self, worker: &str, rows: u64) {
+        let mut map = self.workers.lock().unwrap();
+        *map.entry(worker.to_string()).or_default() += rows;
+    }
+
+    /// Per-worker ingest rows, sorted by worker name.
+    pub fn worker_rows(&self) -> Vec<(String, u64)> {
+        self.workers.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
     pub fn device_counts(&self) -> (u64, u64, u64) {
         (
             self.opu_jobs.load(Ordering::Relaxed),
@@ -243,6 +266,7 @@ impl Metrics {
              stream_chunks={} stream_bytes={} streams_aborted={} \
              cache: bytes={} hits={} misses={} coalesced={} evictions={} \
              deduped={} proj_exec={} \
+             cluster: workers={} streams={} rows_fwd={} merges={} \
              wait_i_p50={}us wait_b_p50={}us p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -273,6 +297,10 @@ impl Metrics {
             self.cache_evictions.load(Ordering::Relaxed),
             self.operands_deduped.load(Ordering::Relaxed),
             self.projections_executed.load(Ordering::Relaxed),
+            self.workers_connected.load(Ordering::Relaxed),
+            self.cluster_streams.load(Ordering::Relaxed),
+            self.cluster_rows_forwarded.load(Ordering::Relaxed),
+            self.summary_merges.load(Ordering::Relaxed),
             self.queue_wait_percentile_us(Priority::Interactive, 50.0).unwrap_or(0.0) as u64,
             self.queue_wait_percentile_us(Priority::Batch, 50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
@@ -290,6 +318,11 @@ impl Metrics {
                 "\ntenant[{name}]: submits={} operand_bytes={} busy={} quota={} wait_p50={p50}us",
                 t.submits, t.operand_bytes, t.busy, t.quota
             ));
+        }
+        drop(map);
+        let workers = self.workers.lock().unwrap();
+        for (name, rows) in workers.iter() {
+            out.push_str(&format!("\nworker[{name}]: ingest_rows={rows}"));
         }
         out
     }
@@ -416,6 +449,29 @@ mod tests {
         assert!((p - 300.0).abs() < 1.0, "{p}");
         assert!(m.tenant_wait_percentile_us("zeta", 50.0).is_none());
         assert!(m.tenant_wait_percentile_us("nobody", 50.0).is_none());
+    }
+
+    #[test]
+    fn cluster_counters_and_worker_lines_report() {
+        let m = Metrics::new();
+        let r = m.report();
+        assert!(r.contains("cluster: workers=0 streams=0 rows_fwd=0 merges=0"), "{r}");
+        assert!(!r.contains("worker["), "no worker lines before any ingest: {r}");
+        m.workers_connected.fetch_add(2, Ordering::Relaxed);
+        m.cluster_streams.fetch_add(1, Ordering::Relaxed);
+        m.cluster_rows_forwarded.fetch_add(512, Ordering::Relaxed);
+        m.summary_merges.fetch_add(1, Ordering::Relaxed);
+        m.worker_ingest("127.0.0.1:9001", 256);
+        m.worker_ingest("127.0.0.1:9001", 128);
+        m.worker_ingest("127.0.0.1:9002", 128);
+        let r = m.report();
+        assert!(r.contains("cluster: workers=2 streams=1 rows_fwd=512 merges=1"), "{r}");
+        assert!(r.contains("worker[127.0.0.1:9001]: ingest_rows=384"), "{r}");
+        assert!(r.contains("worker[127.0.0.1:9002]: ingest_rows=128"), "{r}");
+        assert_eq!(
+            m.worker_rows(),
+            vec![("127.0.0.1:9001".into(), 384), ("127.0.0.1:9002".into(), 128)]
+        );
     }
 
     #[test]

@@ -57,13 +57,18 @@
 //!   frame over TCP (see [`crate::net`] for the listener and client);
 //! - [`tenant`]  — multi-tenant identity for the front door: bearer
 //!   tokens, per-tenant store-quota ledgers, QoS classes clamped onto
-//!   the [`Priority`](request::Priority) queue.
+//!   the [`Priority`](request::Priority) queue;
+//! - [`cluster`] — the map/reduce scale-out plane: merge-slot stream
+//!   partitioning across `photon worker` nodes, the seal-time summary
+//!   barrier, and the FD/sketch tree reduction that folds worker parts
+//!   into one servable [`SealedStream`](stream::SealedStream).
 //!
 //! See `docs/architecture.md` for the full request-path walkthrough and
 //! the "Sessions, handles, and plans" migration guide.
 
 pub mod batcher;
 pub mod cache;
+pub mod cluster;
 pub mod events;
 pub mod metrics;
 pub mod plan;
@@ -80,6 +85,10 @@ pub mod wire;
 
 pub use batcher::{signature_seed, BatchConfig, ProjectionService};
 pub use cache::{Artifact, SketchCache, SketchKey, Source};
+pub use cluster::{
+    plan_slots, reduce_parts, tree_reduce_fd, ClusterError, ClusterPlane, FdPart, PartSummary,
+    MERGE_SLOTS,
+};
 pub use events::{ArmTierView, Event, EventLog, JobTrace, Projector};
 pub use metrics::Metrics;
 pub use plan::{Plan, PlanError, PlanResult};

@@ -29,6 +29,7 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::{BatchConfig, ProjectionService};
 use crate::coordinator::cache::{Artifact, Lookup, SketchCache, SketchKey, Source};
+use crate::coordinator::cluster::ClusterPlane;
 use crate::coordinator::events::{ArmTierView, Event, EventLog, JobTrace, Projector};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::plan::{resolve_stage_refs, Plan, PlanResult};
@@ -121,6 +122,9 @@ pub struct Coordinator {
     pool: Arc<DevicePool>,
     store: Arc<OperandStore>,
     streams: Arc<StreamRegistry>,
+    /// Scale-out plane: worker registry + merge-slot stream partitioning.
+    /// Streams begun while workers are registered ingest through it.
+    cluster: Arc<ClusterPlane>,
     stream_chunk_rows: usize,
     /// Submit-time arithmetic-tier resolution (mirrors the router's
     /// policy — resolved here so the effective tier travels the queue
@@ -207,6 +211,13 @@ impl Coordinator {
 
         let store = Arc::new(OperandStore::with_metrics(cfg.store_quota, metrics.clone()));
         let streams = Arc::new(StreamRegistry::new(store.clone(), metrics.clone()));
+        let cluster = Arc::new(ClusterPlane::new(
+            streams.clone(),
+            metrics.clone(),
+            events.clone(),
+            cfg.batch.seed,
+            cfg.stream_chunk_rows.max(1),
+        ));
         let cache = Arc::new(SketchCache::new(
             cfg.cache_quota,
             cfg.batch.seed,
@@ -238,6 +249,7 @@ impl Coordinator {
             pool,
             store,
             streams,
+            cluster,
             stream_chunk_rows: cfg.stream_chunk_rows.max(1),
             precision: cfg.precision,
             metrics,
@@ -279,33 +291,50 @@ impl Coordinator {
     /// never fully resident — only a bounded chunk buffer plus the
     /// stream's summaries (range sketch, co-range sketch, Frequent
     /// Directions), all quota-accounted against the operand store.
+    /// With map workers registered on the [`cluster`](Self::cluster)
+    /// plane, ingest is partitioned across them instead (the sealed
+    /// summaries are bit-compatible either way — same operators at the
+    /// same absolute offsets).
     pub fn begin_stream(
         &self,
         rows: usize,
         cols: usize,
         opts: StreamOpts,
     ) -> Result<StreamId, StreamError> {
+        if self.cluster.worker_count() > 0 {
+            return self.cluster.begin(rows, cols, opts, self.stream_chunk_rows);
+        }
         self.streams.begin(rows, cols, opts, self.stream_chunk_rows)
     }
 
     /// Append rows to an open stream (any chunking; full buffers flush
     /// through the shard planner/batcher before more rows are copied in).
+    /// Cluster-partitioned streams forward rows to their slot owners.
     pub fn append_stream(&self, id: StreamId, rows: &Mat) -> Result<(), StreamError> {
+        if self.cluster.owns(id) {
+            return self.cluster.append(id, rows);
+        }
         self.streams.append(id, rows, &self.svc)
     }
 
     /// Flush the tail chunk and freeze the stream's summaries; one-pass
     /// jobs may now reference it via
-    /// [`OperandRef::Stream`](OperandRef::Stream).
+    /// [`OperandRef::Stream`](OperandRef::Stream). Cluster-partitioned
+    /// streams run the epoch barrier + summary reduction here.
     pub fn seal_stream(&self, id: StreamId) -> Result<(), StreamError> {
+        if self.cluster.owns(id) {
+            return self.cluster.seal(id);
+        }
         self.streams.seal(id, &self.svc)
     }
 
     /// Drop a stream and release its quota bytes deterministically
     /// (an unsealed stream counts as aborted). In-flight jobs holding
     /// the sealed summaries finish unaffected. Sketch-cache entries
-    /// derived from the stream are evicted synchronously.
+    /// derived from the stream are evicted synchronously. A stream with
+    /// a cluster partition in flight releases worker-side bytes too.
     pub fn free_stream(&self, id: StreamId) -> bool {
+        self.cluster.free(id);
         let freed = self.streams.free(id);
         if freed {
             self.cache.invalidate(Source::Stream(id));
@@ -316,6 +345,11 @@ impl Coordinator {
     /// The stream registry (tests, diagnostics).
     pub fn streams(&self) -> &StreamRegistry {
         &self.streams
+    }
+
+    /// The scale-out plane (worker registration, partition routing).
+    pub fn cluster(&self) -> &Arc<ClusterPlane> {
+        &self.cluster
     }
 
     /// Submit a session-API job with QoS options. Typed refusal instead

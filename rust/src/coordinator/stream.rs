@@ -34,6 +34,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::batcher::ProjectionService;
+use crate::coordinator::cluster::ClusterError;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Device;
 use crate::coordinator::store::{OperandStore, StoreError};
@@ -101,6 +102,13 @@ pub enum StreamError {
     Projection(String),
     /// An earlier flush failed; only `free` is meaningful now.
     Poisoned(StreamId),
+    /// The scale-out plane failed this stream (a worker died mid-ingest,
+    /// a summary barrier broke); only `free` is meaningful now.
+    Cluster(ClusterError),
+    /// The stream is cluster-partitioned: its rows live on map workers
+    /// and ingest must route through the scale-out plane, not the local
+    /// flush path.
+    Clustered(StreamId),
 }
 
 impl fmt::Display for StreamError {
@@ -125,6 +133,10 @@ impl fmt::Display for StreamError {
             StreamError::Projection(msg) => write!(f, "stream chunk flush failed: {msg}"),
             StreamError::Poisoned(id) => {
                 write!(f, "{id} is poisoned by an earlier flush failure — free and re-ingest")
+            }
+            StreamError::Cluster(e) => write!(f, "cluster stream failed: {e}"),
+            StreamError::Clustered(id) => {
+                write!(f, "{id} is cluster-partitioned; rows route through the worker plane")
             }
         }
     }
@@ -215,8 +227,26 @@ impl OpenStream {
     }
 }
 
+/// A stream whose rows live on cluster map workers: the coordinator
+/// holds only the sizing constants (for quota accounting) until the
+/// scale-out plane delivers the merged summaries at seal.
+struct DeferredStream {
+    rows: usize,
+    cols: usize,
+    chunk_rows: usize,
+    sketch_m: usize,
+    fd_rank: usize,
+    range_cap: usize,
+    /// Set when the cluster plane poisons the stream (worker death,
+    /// broken barrier); surfaces typed from [`StreamRegistry::sealed`].
+    failed: Option<ClusterError>,
+}
+
 enum State {
     Open(Box<OpenStream>),
+    /// Cluster-partitioned: summaries accumulate worker-side; the slot
+    /// is fulfilled with the merged [`SealedStream`] at seal.
+    Deferred(Box<DeferredStream>),
     Sealed(Arc<SealedStream>),
     /// Terminal: bytes already released (guards double-release when a
     /// free races a caller still holding the slot).
@@ -265,30 +295,7 @@ impl StreamRegistry {
         opts: StreamOpts,
         default_chunk_rows: usize,
     ) -> Result<StreamId, StreamError> {
-        let chunk_rows = opts.chunk_rows.unwrap_or(default_chunk_rows);
-        if rows == 0 || cols == 0 {
-            return Err(StreamError::BadOpts(format!("empty stream ({rows}x{cols})")));
-        }
-        if chunk_rows == 0 {
-            return Err(StreamError::BadOpts("chunk_rows must be >= 1".into()));
-        }
-        // A buffer larger than the stream can never fill: clamp it so a
-        // short stream reserves (and allocates) only what it can use.
-        let chunk_rows = chunk_rows.min(rows);
-        if opts.sketch_m == 0 || opts.fd_rank == 0 || opts.range_cap == 0 {
-            return Err(StreamError::BadOpts(
-                "sketch_m, fd_rank and range_cap must be >= 1".into(),
-            ));
-        }
-        if opts.range_cap > rows {
-            return Err(StreamError::BadOpts(format!(
-                "range_cap {} exceeds the stream's {rows} rows",
-                opts.range_cap
-            )));
-        }
-        let bytes = open_bytes(rows, cols, chunk_rows, opts.sketch_m, opts.fd_rank, opts.range_cap);
-        self.store.reserve(bytes).map_err(StreamError::OverQuota)?;
-        self.metrics.stream_resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        let chunk_rows = self.admit(rows, cols, opts, default_chunk_rows)?;
         let st = OpenStream {
             rows,
             cols,
@@ -314,6 +321,117 @@ impl StreamRegistry {
             .unwrap()
             .insert(id, Arc::new(Mutex::new(State::Open(Box::new(st)))));
         Ok(StreamId(id))
+    }
+
+    /// Validate sizing, reserve the stream's constant open footprint and
+    /// mirror it in the gauge — the shared admission step of
+    /// [`begin`](Self::begin) and [`begin_deferred`](Self::begin_deferred).
+    /// Returns the effective (clamped) chunk size.
+    fn admit(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+        default_chunk_rows: usize,
+    ) -> Result<usize, StreamError> {
+        let chunk_rows = opts.chunk_rows.unwrap_or(default_chunk_rows);
+        if rows == 0 || cols == 0 {
+            return Err(StreamError::BadOpts(format!("empty stream ({rows}x{cols})")));
+        }
+        if chunk_rows == 0 {
+            return Err(StreamError::BadOpts("chunk_rows must be >= 1".into()));
+        }
+        // A buffer larger than the stream can never fill: clamp it so a
+        // short stream reserves (and allocates) only what it can use.
+        let chunk_rows = chunk_rows.min(rows);
+        if opts.sketch_m == 0 || opts.fd_rank == 0 || opts.range_cap == 0 {
+            return Err(StreamError::BadOpts(
+                "sketch_m, fd_rank and range_cap must be >= 1".into(),
+            ));
+        }
+        if opts.range_cap > rows {
+            return Err(StreamError::BadOpts(format!(
+                "range_cap {} exceeds the stream's {rows} rows",
+                opts.range_cap
+            )));
+        }
+        let bytes = open_bytes(rows, cols, chunk_rows, opts.sketch_m, opts.fd_rank, opts.range_cap);
+        self.store.reserve(bytes).map_err(StreamError::OverQuota)?;
+        self.metrics.stream_resident_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        Ok(chunk_rows)
+    }
+
+    /// Open a cluster-partitioned stream: same admission (validation,
+    /// quota reservation, gauge) as [`begin`](Self::begin) so tenant
+    /// accounting is identical whichever plane ingests, but the slot
+    /// holds no local summaries — the scale-out plane forwards rows to
+    /// map workers and [`fulfill_deferred`](Self::fulfill_deferred)s the
+    /// slot with the merged summaries at seal.
+    pub fn begin_deferred(
+        &self,
+        rows: usize,
+        cols: usize,
+        opts: StreamOpts,
+        default_chunk_rows: usize,
+    ) -> Result<StreamId, StreamError> {
+        let chunk_rows = self.admit(rows, cols, opts, default_chunk_rows)?;
+        let st = DeferredStream {
+            rows,
+            cols,
+            chunk_rows,
+            sketch_m: opts.sketch_m,
+            fd_rank: opts.fd_rank,
+            range_cap: opts.range_cap,
+            failed: None,
+        };
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.slots
+            .lock()
+            .unwrap()
+            .insert(id, Arc::new(Mutex::new(State::Deferred(Box::new(st)))));
+        Ok(StreamId(id))
+    }
+
+    /// Install the cluster-merged summaries into a deferred slot and
+    /// release the seal-time footprint shrink — the scale-out analogue of
+    /// [`seal`](Self::seal). One-pass jobs may now resolve the stream.
+    pub fn fulfill_deferred(
+        &self,
+        id: StreamId,
+        sealed: SealedStream,
+    ) -> Result<(), StreamError> {
+        let slot = self.slot(id)?;
+        let mut state = slot.lock().unwrap();
+        let d = match &mut *state {
+            State::Deferred(d) => d,
+            State::Open(_) => return Err(StreamError::Clustered(id)),
+            State::Sealed(_) => return Err(StreamError::AlreadySealed(id)),
+            State::Freed => return Err(StreamError::UnknownStream(id)),
+        };
+        if let Some(e) = &d.failed {
+            return Err(StreamError::Cluster(e.clone()));
+        }
+        let reserved =
+            open_bytes(d.rows, d.cols, d.chunk_rows, d.sketch_m, d.fd_rank, d.range_cap);
+        let released =
+            reserved - sealed_bytes(d.rows, d.cols, d.sketch_m, d.fd_rank, d.range_cap);
+        *state = State::Sealed(Arc::new(sealed));
+        self.store.release(released);
+        self.metrics.stream_resident_bytes.fetch_sub(released as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Poison a deferred slot with a typed cluster failure (worker death
+    /// mid-ingest, broken barrier). The bytes stay reserved until `free`;
+    /// [`sealed`](Self::sealed) surfaces the error to submitters.
+    pub fn fail_deferred(&self, id: StreamId, err: ClusterError) {
+        if let Ok(slot) = self.slot(id) {
+            if let State::Deferred(d) = &mut *slot.lock().unwrap() {
+                if d.failed.is_none() {
+                    d.failed = Some(err);
+                }
+            }
+        }
     }
 
     /// Append rows (any chunking — the buffer re-chunks to the stream's
@@ -404,6 +522,10 @@ impl StreamRegistry {
         match &*state {
             State::Sealed(s) => Ok(s.clone()),
             State::Open(_) => Err(StreamError::NotSealed(id)),
+            State::Deferred(d) => match &d.failed {
+                Some(e) => Err(StreamError::Cluster(e.clone())),
+                None => Err(StreamError::NotSealed(id)),
+            },
             State::Freed => Err(StreamError::UnknownStream(id)),
         }
     }
@@ -420,6 +542,10 @@ impl StreamRegistry {
             State::Open(st) => {
                 self.metrics.streams_aborted.fetch_add(1, Ordering::Relaxed);
                 open_bytes(st.rows, st.cols, st.chunk_rows, st.sketch_m, st.fd_rank, st.range_cap)
+            }
+            State::Deferred(d) => {
+                self.metrics.streams_aborted.fetch_add(1, Ordering::Relaxed);
+                open_bytes(d.rows, d.cols, d.chunk_rows, d.sketch_m, d.fd_rank, d.range_cap)
             }
             State::Sealed(s) => sealed_bytes(s.rows, s.cols, s.sketch_m, s.fd_rank, s.range_cap),
             State::Freed => return false,
@@ -462,6 +588,14 @@ impl StreamRegistry {
                 s.sketch_m,
                 s.fd_rank,
                 s.range_cap,
+            )),
+            State::Deferred(d) => Some(open_bytes(
+                d.rows,
+                d.cols,
+                d.chunk_rows,
+                d.sketch_m,
+                d.fd_rank,
+                d.range_cap,
             )),
             State::Sealed(s) => {
                 Some(sealed_bytes(s.rows, s.cols, s.sketch_m, s.fd_rank, s.range_cap))
@@ -516,6 +650,10 @@ fn open_mut<'a>(state: &'a mut State, id: StreamId) -> Result<&'a mut OpenStream
     match state {
         State::Open(st) if st.failed => Err(StreamError::Poisoned(id)),
         State::Open(st) => Ok(st),
+        State::Deferred(d) => match &d.failed {
+            Some(e) => Err(StreamError::Cluster(e.clone())),
+            None => Err(StreamError::Clustered(id)),
+        },
         State::Sealed(_) => Err(StreamError::AlreadySealed(id)),
         State::Freed => Err(StreamError::UnknownStream(id)),
     }

@@ -446,6 +446,10 @@ pub enum StatusCode {
     BadFrame,
     UnknownTag,
     ShuttingDown,
+    /// The scale-out plane failed the stream (worker death mid-ingest,
+    /// broken summary barrier); the detail carries the typed
+    /// `ClusterError` rendering.
+    ClusterFailed,
 }
 
 impl StatusCode {
@@ -470,6 +474,7 @@ impl StatusCode {
             StatusCode::BadFrame => 16,
             StatusCode::UnknownTag => 17,
             StatusCode::ShuttingDown => 18,
+            StatusCode::ClusterFailed => 19,
         }
     }
 
@@ -494,6 +499,7 @@ impl StatusCode {
             16 => StatusCode::BadFrame,
             17 => StatusCode::UnknownTag,
             18 => StatusCode::ShuttingDown,
+            19 => StatusCode::ClusterFailed,
             other => return Err(WireError::BadEnum { what: "status", value: other as u64 }),
         })
     }
@@ -589,6 +595,9 @@ impl WireStatus {
                 ..Self::with_detail(StatusCode::StreamNotSealed, e.to_string())
             },
             StreamError::OverQuota(se) => Self::from_store(se),
+            StreamError::Cluster(e) => {
+                Self::with_detail(StatusCode::ClusterFailed, e.to_string())
+            }
             other => Self::with_detail(StatusCode::StreamInvalid, other.to_string()),
         }
     }
@@ -654,9 +663,12 @@ impl fmt::Display for WireStatus {
     }
 }
 
-/// Every frame of the protocol. Tags 1..=11 travel client → server,
-/// 32..=42 server → client; [`Frame::Unknown`] is the decoded shape of
-/// any unassigned tag (payload consumed, connection survives).
+/// Every frame of the protocol. Tags 1..=15 travel client → server
+/// (1..=11 the tenant session API, 12..=15 the worker role of the
+/// scale-out plane), 32..=47 server → client (32..=42 the session
+/// replies, 43..=47 the coordinator → worker partition protocol);
+/// [`Frame::Unknown`] is the decoded shape of any unassigned tag
+/// (payload consumed, connection survives).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Frame {
     // client -> server
@@ -679,6 +691,34 @@ pub enum Frame {
     Cancel { job: u64 },
     Report,
     Goodbye,
+    // worker -> coordinator (the map side of the scale-out plane)
+    /// Register this connection as a map worker instead of a tenant
+    /// session. Same token discipline as [`Frame::Hello`].
+    WorkerHello { version: u16, token: String },
+    /// One merge slot's finished summaries: the `S·A` partial (summed
+    /// over the slot's chunks in ascending offset order — the canonical
+    /// association the coordinator's fold preserves), the slot's columns
+    /// of `Yᵀ`, its exact `‖A_slot‖²_F` (f64 bits) and chunk count, and
+    /// the arms its batches planned on (3 = mixed/none).
+    SlotSummary {
+        stream: u64,
+        slot: u64,
+        r0: u64,
+        r1: u64,
+        chunks: u64,
+        fro2: u64,
+        arm: u8,
+        y_arm: u8,
+        sa: WireMat,
+        yt: WireMat,
+    },
+    /// Epoch-barrier ack: every owned slot's [`Frame::SlotSummary`] has
+    /// been pushed; the worker's Frequent Directions sketch and its
+    /// measured Σδ bound (f64 bits) ride along for the merge reduction.
+    PartitionSealed { stream: u64, epoch: u64, fd_bound: u64, fd: WireMat },
+    /// Ack of [`Frame::FreePartition`]: worker-side reserved bytes for
+    /// the stream are back to baseline.
+    PartitionFreed { stream: u64 },
     // server -> client
     HelloOk { tenant: String, qos: u8, quota: u64 },
     Status(WireStatus),
@@ -691,6 +731,37 @@ pub enum Frame {
     CancelOk { cancelled: bool },
     ReportText { text: String },
     ShuttingDown,
+    // coordinator -> worker (the partition protocol)
+    /// Reply to [`Frame::WorkerHello`]: the worker's id, the signature
+    /// operator base seed it must draw from (so its partials come off
+    /// the *same* operators as every other node), and the default chunk
+    /// size.
+    WorkerOk { worker: u64, seed: u64, chunk_rows: u64 },
+    /// Assign one merge slot (absolute rows `r0..r1` of a
+    /// `total_rows × cols` stream) to this worker, with the stream's
+    /// summary sizing. Slot boundaries are whole multiples of
+    /// `chunk_rows`, fixed by the plan independent of worker count.
+    AssignPartition {
+        stream: u64,
+        epoch: u64,
+        slot: u64,
+        r0: u64,
+        r1: u64,
+        total_rows: u64,
+        cols: u64,
+        chunk_rows: u64,
+        sketch_m: u64,
+        fd_rank: u64,
+        range_cap: u64,
+    },
+    /// Forward a block of rows for one assigned slot (in row order).
+    PartitionRows { stream: u64, slot: u64, rows: WireMat },
+    /// Epoch barrier: flush tails and push every owned slot's
+    /// [`Frame::SlotSummary`], then [`Frame::PartitionSealed`].
+    SealPartition { stream: u64, epoch: u64 },
+    /// Drop the stream's partition state and release worker-side
+    /// reserved bytes; ack with [`Frame::PartitionFreed`].
+    FreePartition { stream: u64 },
     /// Forward compatibility: an unassigned tag whose payload was
     /// consumed and discarded.
     Unknown { tag: u16 },
@@ -710,6 +781,10 @@ impl Frame {
             Frame::Cancel { .. } => 9,
             Frame::Report => 10,
             Frame::Goodbye => 11,
+            Frame::WorkerHello { .. } => 12,
+            Frame::SlotSummary { .. } => 13,
+            Frame::PartitionSealed { .. } => 14,
+            Frame::PartitionFreed { .. } => 15,
             Frame::HelloOk { .. } => 32,
             Frame::Status(_) => 33,
             Frame::OperandOk { .. } => 34,
@@ -721,6 +796,11 @@ impl Frame {
             Frame::CancelOk { .. } => 40,
             Frame::ReportText { .. } => 41,
             Frame::ShuttingDown => 42,
+            Frame::WorkerOk { .. } => 43,
+            Frame::AssignPartition { .. } => 44,
+            Frame::PartitionRows { .. } => 45,
+            Frame::SealPartition { .. } => 46,
+            Frame::FreePartition { .. } => 47,
             Frame::Unknown { tag } => *tag,
         }
     }
@@ -942,6 +1022,23 @@ pub fn device_from(v: u8) -> Result<Device, WireError> {
         1 => Ok(Device::Pjrt),
         2 => Ok(Device::Host),
         other => Err(WireError::BadEnum { what: "device", value: other as u64 }),
+    }
+}
+
+/// A stream summary's arm on the wire: a [`Device`] code, or 3 for
+/// "mixed/none" — arms flipped mid-stream and same-operator consumers
+/// must fail typed (see `SealedStream::arm`).
+pub fn arm_code(d: Option<Device>) -> u8 {
+    match d {
+        Some(d) => device_code(d),
+        None => 3,
+    }
+}
+
+pub fn arm_from(v: u8) -> Result<Option<Device>, WireError> {
+    match v {
+        3 => Ok(None),
+        other => device_from(other).map(Some),
     }
 }
 
@@ -1247,6 +1344,69 @@ fn encode_frame_body(e: &mut Enc, frame: &Frame) {
         }
         Frame::Cancel { job } => e.u64(*job),
         Frame::Report | Frame::Goodbye | Frame::Ack | Frame::ShuttingDown => {}
+        Frame::WorkerHello { version, token } => {
+            e.u16(*version);
+            e.str(token);
+        }
+        Frame::SlotSummary { stream, slot, r0, r1, chunks, fro2, arm, y_arm, sa, yt } => {
+            e.u64(*stream);
+            e.u64(*slot);
+            e.u64(*r0);
+            e.u64(*r1);
+            e.u64(*chunks);
+            e.u64(*fro2);
+            e.u8(*arm);
+            e.u8(*y_arm);
+            e.mat(sa);
+            e.mat(yt);
+        }
+        Frame::PartitionSealed { stream, epoch, fd_bound, fd } => {
+            e.u64(*stream);
+            e.u64(*epoch);
+            e.u64(*fd_bound);
+            e.mat(fd);
+        }
+        Frame::PartitionFreed { stream } => e.u64(*stream),
+        Frame::WorkerOk { worker, seed, chunk_rows } => {
+            e.u64(*worker);
+            e.u64(*seed);
+            e.u64(*chunk_rows);
+        }
+        Frame::AssignPartition {
+            stream,
+            epoch,
+            slot,
+            r0,
+            r1,
+            total_rows,
+            cols,
+            chunk_rows,
+            sketch_m,
+            fd_rank,
+            range_cap,
+        } => {
+            e.u64(*stream);
+            e.u64(*epoch);
+            e.u64(*slot);
+            e.u64(*r0);
+            e.u64(*r1);
+            e.u64(*total_rows);
+            e.u64(*cols);
+            e.u64(*chunk_rows);
+            e.u64(*sketch_m);
+            e.u64(*fd_rank);
+            e.u64(*range_cap);
+        }
+        Frame::PartitionRows { stream, slot, rows } => {
+            e.u64(*stream);
+            e.u64(*slot);
+            e.mat(rows);
+        }
+        Frame::SealPartition { stream, epoch } => {
+            e.u64(*stream);
+            e.u64(*epoch);
+        }
+        Frame::FreePartition { stream } => e.u64(*stream),
         Frame::HelloOk { tenant, qos, quota } => {
             e.str(tenant);
             e.u8(*qos);
@@ -1312,6 +1472,26 @@ pub fn decode_body(body: &[u8]) -> Result<(u64, Frame), WireError> {
         9 => Frame::Cancel { job: d.u64()? },
         10 => Frame::Report,
         11 => Frame::Goodbye,
+        12 => Frame::WorkerHello { version: d.u16()?, token: d.str()? },
+        13 => Frame::SlotSummary {
+            stream: d.u64()?,
+            slot: d.u64()?,
+            r0: d.u64()?,
+            r1: d.u64()?,
+            chunks: d.u64()?,
+            fro2: d.u64()?,
+            arm: d.u8()?,
+            y_arm: d.u8()?,
+            sa: d.mat()?,
+            yt: d.mat()?,
+        },
+        14 => Frame::PartitionSealed {
+            stream: d.u64()?,
+            epoch: d.u64()?,
+            fd_bound: d.u64()?,
+            fd: d.mat()?,
+        },
+        15 => Frame::PartitionFreed { stream: d.u64()? },
         32 => Frame::HelloOk { tenant: d.str()?, qos: d.u8()?, quota: d.u64()? },
         33 => Frame::Status(decode_status(&mut d)?),
         34 => Frame::OperandOk { id: d.u64()?, bytes: d.u64()? },
@@ -1323,6 +1503,23 @@ pub fn decode_body(body: &[u8]) -> Result<(u64, Frame), WireError> {
         40 => Frame::CancelOk { cancelled: d.boolean()? },
         41 => Frame::ReportText { text: d.str()? },
         42 => Frame::ShuttingDown,
+        43 => Frame::WorkerOk { worker: d.u64()?, seed: d.u64()?, chunk_rows: d.u64()? },
+        44 => Frame::AssignPartition {
+            stream: d.u64()?,
+            epoch: d.u64()?,
+            slot: d.u64()?,
+            r0: d.u64()?,
+            r1: d.u64()?,
+            total_rows: d.u64()?,
+            cols: d.u64()?,
+            chunk_rows: d.u64()?,
+            sketch_m: d.u64()?,
+            fd_rank: d.u64()?,
+            range_cap: d.u64()?,
+        },
+        45 => Frame::PartitionRows { stream: d.u64()?, slot: d.u64()?, rows: d.mat()? },
+        46 => Frame::SealPartition { stream: d.u64()?, epoch: d.u64()? },
+        47 => Frame::FreePartition { stream: d.u64()? },
         other => {
             // Forward compatibility: consume the payload, keep the
             // connection. The caller decides whether to answer with
@@ -1605,10 +1802,10 @@ mod tests {
         let auth = WireStatus::new(StatusCode::AuthFailed);
         assert_eq!(auth.try_submit_error(), None);
         assert_eq!(auth.try_store_error(), None);
-        for v in 0..19u16 {
+        for v in 0..20u16 {
             assert_eq!(StatusCode::from_code(v).unwrap().code(), v);
         }
-        assert!(StatusCode::from_code(19).is_err());
+        assert!(StatusCode::from_code(20).is_err());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!   claims  check the §I/§III scalar claims against the models
 //!   serve   run the coordinator over a synthetic job trace (E2E demo),
 //!           or front it over TCP with --listen/--tenants
+//!   worker  join a coordinator's front door as a map worker for the
+//!           scale-out plane (partitioned stream ingest)
 //!   remote  drive a remote coordinator over the wire protocol
 //!   info    artifact + device inventory
 
@@ -20,7 +22,7 @@ use photonic_randnla::coordinator::{
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
-use photonic_randnla::net::{WireClient, WireServer};
+use photonic_randnla::net::{WireClient, WireServer, WorkerConfig, WorkerNode};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::perfmodel::SketchKind;
 use photonic_randnla::reports::{claims, fig1, fig2, print_rows, Row};
@@ -29,7 +31,7 @@ use photonic_randnla::runtime::PjrtEngine;
 use photonic_randnla::workload::traces::{self, JobKind, TraceConfig};
 use photonic_randnla::workload::{correlated_pair, psd_matrix};
 
-const USAGE: &str = "photon <fig1|fig2|claims|serve|remote|info> [options]
+const USAGE: &str = "photon <fig1|fig2|claims|serve|worker|remote|info> [options]
 
   fig1   [--panel matmul|trace|triangles|randsvd|all] [--n 256]
          [--trials 3] [--noise ideal|realistic|harsh] [--seed 7]
@@ -53,6 +55,14 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|remote|info> [options]
            trace; FILE has one name:token:quota_mb:qos per line,
            quota_mb 0 = unbounded, qos interactive|batch;
            Ctrl-C drains in-flight jobs and syncs the event log)
+         [--expect-workers N] (with --listen: wait for N map workers
+           to join before announcing readiness; streams opened while
+           workers are connected are partitioned across them)
+  worker --connect HOST:PORT --token TOKEN
+         [--policy host|auto] [--noise ideal|realistic|harsh]
+           (join the coordinator as a map worker: ingest forwarded
+           stream partitions and push mergeable FD/sketch summaries;
+           Ctrl-C leaves the cluster)
   remote --connect HOST:PORT --token TOKEN
          [--op trace|projection|randsvd|nystrom] [--n 256] [--m 64]
          [--jobs 8] [--seed 7] [--report] (print the server's
@@ -88,6 +98,7 @@ fn main() {
         Some("fig2") => cmd_fig2(&argv[1..]),
         Some("claims") => cmd_claims(),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("worker") => cmd_worker(&argv[1..]),
         Some("remote") => cmd_remote(&argv[1..]),
         Some("info") => cmd_info(&argv[1..]),
         _ => {
@@ -263,6 +274,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         })?;
         let tenants = TenantRegistry::load(tenants_path)?;
         let provisioned = tenants.len();
+        let expect_workers = args.get_usize("expect-workers", 0)?;
         let server = WireServer::start(coord, listen, tenants).map_err(|e| e.to_string())?;
         println!(
             "front door listening on {} ({provisioned} tenant(s) provisioned; \
@@ -271,6 +283,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         );
         println!("Ctrl-C to shut down: drains in-flight jobs, then syncs the event log");
         install_sigint();
+        if expect_workers > 0 {
+            println!("waiting for {expect_workers} map worker(s) to join...");
+            while server.coordinator().cluster().worker_count() < expect_workers
+                && !CTRL_C.load(Ordering::SeqCst)
+            {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            let names = server.coordinator().cluster().worker_names();
+            println!(
+                "scale-out plane ready: {} worker(s) joined ({})",
+                names.len(),
+                names.join(", ")
+            );
+        }
         while !CTRL_C.load(Ordering::SeqCst) {
             std::thread::sleep(std::time::Duration::from_millis(50));
         }
@@ -316,6 +342,38 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     );
     println!("{}", coord.report());
     coord.shutdown();
+    Ok(())
+}
+
+fn cmd_worker(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &[])?;
+    let addr = args.get("connect").ok_or("worker requires --connect HOST:PORT")?;
+    let token = args.get("token").ok_or("worker requires --token TOKEN")?;
+    let mut cfg = WorkerConfig::default();
+    cfg.policy = match args.get_or("policy", "host").as_str() {
+        "host" => Policy::ForceHost,
+        "auto" => Policy::Auto,
+        other => return Err(format!("unknown worker policy {other}")),
+    };
+    cfg.batch.noise = noise_from(&args.get_or("noise", "ideal"))?;
+    let node = WorkerNode::connect(&addr, &token, cfg).map_err(|e| e.to_string())?;
+    println!(
+        "worker {} joined coordinator {} (Ctrl-C to leave the cluster)",
+        node.worker_id(),
+        node.addr()
+    );
+    install_sigint();
+    while !CTRL_C.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("\nleaving the cluster...");
+    let metrics = node.metrics();
+    node.shutdown();
+    println!(
+        "worker done: {} chunk(s) ingested, {} B resident",
+        metrics.stream_chunks.load(Ordering::Relaxed),
+        metrics.stream_resident_bytes.load(Ordering::Relaxed)
+    );
     Ok(())
 }
 

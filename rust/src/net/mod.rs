@@ -18,6 +18,12 @@
 //!   multiplexing concurrent calls over one socket (a reader thread
 //!   routes frames by request id), with [`RemoteTicket`] mirroring the
 //!   in-process `Ticket` (`wait`/`try_wait`/`cancel`);
+//! - [`worker`] — [`WorkerNode`] (`photon worker --connect ADDR`): a
+//!   map worker that authenticates with `WorkerHello`, adopts the
+//!   coordinator's signature seed, ingests forwarded partition rows
+//!   against its own embedded engine and pushes mergeable FD/sketch
+//!   summaries back for the coordinator's tree reduction (see
+//!   [`crate::coordinator::cluster`]);
 //! - [`grpc`] — stub documenting the future tonic/prost swap (cargo
 //!   feature `grpc`, mirroring the `xla` gate).
 //!
@@ -30,6 +36,8 @@ pub mod client;
 #[cfg(feature = "grpc")]
 pub mod grpc;
 pub mod server;
+pub mod worker;
 
 pub use client::{ClientError, RemoteTicket, WireClient};
 pub use server::WireServer;
+pub use worker::{WorkerConfig, WorkerNode};

@@ -199,8 +199,16 @@ fn serve_conn(
     };
     let mut rd = stream;
 
-    let Some(tenant) = authenticate(&mut rd, &writer, tenants, stop) else {
-        return;
+    let tenant = match authenticate(&mut rd, &writer, tenants, stop) {
+        None => return,
+        Some(Authed::Worker { req }) => {
+            // The connection is a map worker dialing in, not a client:
+            // it joins the cluster plane and speaks the partition
+            // protocol until it disconnects.
+            serve_worker(coord, rd, &writer, req, stop);
+            return;
+        }
+        Some(Authed::Client(t)) => t,
     };
     coord.events().append(Event::TenantConnected { tenant: tenant.name.to_string() });
 
@@ -247,14 +255,24 @@ fn serve_conn(
         .append(Event::TenantDisconnected { tenant: session.tenant.name.to_string() });
 }
 
-/// Pre-session handshake: the first frame must be a `Hello` with the
-/// right protocol version and a known token.
+/// What a successful handshake produced: a tenant-bound client session,
+/// or a map worker joining the cluster plane (`req` echoes its
+/// `WorkerHello` so `WorkerOk` lands on the waiting request).
+enum Authed {
+    Client(Arc<Tenant>),
+    Worker { req: u64 },
+}
+
+/// Pre-session handshake: the first frame must be a `Hello` (client) or
+/// `WorkerHello` (map worker) with the right protocol version and a
+/// known token — workers authenticate against the same registry, so an
+/// open port cannot be joined by an unauthenticated node.
 fn authenticate(
     rd: &mut TcpStream,
     writer: &Mutex<TcpStream>,
     tenants: &TenantRegistry,
     stop: &AtomicBool,
-) -> Option<Arc<Tenant>> {
+) -> Option<Authed> {
     loop {
         let (req, frame) = match read_frame_poll(rd, stop) {
             Ok(None) => {
@@ -288,14 +306,56 @@ fn authenticate(
                         if !send(writer, req, &hello) {
                             return None;
                         }
-                        Some(t)
+                        Some(Authed::Client(t))
                     }
+                    None => refuse("unknown token".into()),
+                }
+            }
+            Frame::WorkerHello { version, token } => {
+                if version != WIRE_VERSION {
+                    return refuse(format!(
+                        "protocol version {version} (server speaks {WIRE_VERSION})"
+                    ));
+                }
+                match tenants.authenticate(&token) {
+                    Some(_) => Some(Authed::Worker { req }),
                     None => refuse("unknown token".into()),
                 }
             }
             _ => refuse("first frame must be Hello".into()),
         };
     }
+}
+
+/// A registered map worker's connection loop: hand every partition
+/// frame to the cluster plane; on any exit path the plane is told the
+/// worker is gone so in-flight streams fail typed instead of hanging.
+fn serve_worker(
+    coord: &Arc<Coordinator>,
+    mut rd: TcpStream,
+    writer: &Arc<Mutex<TcpStream>>,
+    hello_req: u64,
+    stop: &AtomicBool,
+) {
+    let peer = rd.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "worker".into());
+    let (id, seed, chunk_rows) = coord.cluster().register_worker(peer, Arc::clone(writer));
+    let ok = Frame::WorkerOk { worker: id, seed, chunk_rows: chunk_rows as u64 };
+    if !send(writer, hello_req, &ok) {
+        coord.cluster().worker_lost(id);
+        return;
+    }
+    while !stop.load(Ordering::SeqCst) {
+        match read_frame_poll(&mut rd, stop) {
+            Ok(None) => continue,
+            Ok(Some((_req, Frame::Goodbye))) => break,
+            Ok(Some((_req, frame))) => coord.cluster().worker_frame(id, frame),
+            Err(_) => break,
+        }
+    }
+    if stop.load(Ordering::SeqCst) {
+        send(writer, 0, &Frame::ShuttingDown);
+    }
+    coord.cluster().worker_lost(id);
 }
 
 impl Session {
@@ -329,8 +389,13 @@ impl Session {
                 self.send(req, &Frame::ReportText { text });
             }
             Frame::Goodbye => return ControlFlow::Break(()),
-            Frame::Hello { .. } => {
+            Frame::Hello { .. } | Frame::WorkerHello { .. } => {
                 self.refuse(req, StatusCode::BadFrame, "already authenticated");
+            }
+            Frame::SlotSummary { .. }
+            | Frame::PartitionSealed { .. }
+            | Frame::PartitionFreed { .. } => {
+                self.refuse(req, StatusCode::BadFrame, "worker-role frame on a client session");
             }
             Frame::Unknown { tag } => {
                 let mut status =

@@ -1,0 +1,472 @@
+//! [`WorkerNode`]: a map worker for the scale-out plane.
+//!
+//! `photon worker --connect ADDR --token TOK` dials a coordinator's
+//! front door, authenticates with [`Frame::WorkerHello`] (same tenant
+//! registry as clients — no anonymous joins) and receives the engine
+//! constants every node must share: the signature-operator base seed
+//! and the default chunk size. From then on it ingests forwarded
+//! partition rows against its own embedded projection engine:
+//!
+//! - [`Frame::AssignPartition`] opens one merge slot: a contiguous
+//!   whole-chunk row range of a stream, with the stream's sizing
+//!   (`sketch_m`, `fd_rank`, `range_cap`, declared `total_rows`);
+//! - [`Frame::PartitionRows`] buffers rows and flushes full chunks
+//!   exactly like the local streaming plane — `S·A` partials at
+//!   *absolute* row offsets of the `(total_rows, sketch_m)` signature,
+//!   the range pass at the `(cols, range_cap)` signature, one FD insert
+//!   per flushed chunk — so a slot's summaries are bit-identical to any
+//!   other node computing the same slot;
+//! - [`Frame::SealPartition`] flushes tails and pushes one
+//!   [`Frame::SlotSummary`] per owned slot (ascending slot order) plus
+//!   a [`Frame::PartitionSealed`] FD part, then drops the partition
+//!   state and releases its reserved bytes;
+//! - [`Frame::FreePartition`] drops the state early (client abort) —
+//!   the worker-side `stream_resident_bytes` gauge returns to baseline.
+//!
+//! A flush failure is reported typed (`StatusCode::ClusterFailed`
+//! naming the stream) so the coordinator poisons the stream instead of
+//! waiting on a summary that will never come.
+
+use std::collections::BTreeMap;
+use std::io::{self, ErrorKind};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::batcher::{BatchConfig, ProjectionService};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{DevicePool, PoolConfig};
+use crate::coordinator::request::Device;
+use crate::coordinator::router::{Availability, Policy, Router};
+use crate::coordinator::wire::{
+    arm_code, read_frame, read_frame_poll, write_frame, Frame, StatusCode, WireError, WireMat,
+    WireStatus, WIRE_VERSION,
+};
+use crate::linalg::Mat;
+use crate::opu::NoiseModel;
+use crate::randnla::streaming::FrequentDirections;
+
+/// How long a blocked socket read waits before the worker re-checks its
+/// shutdown flag (mirrors the server's poll interval).
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Engine knobs for a worker node. The signature-operator seed always
+/// comes from the coordinator's `WorkerOk` (all nodes must draw the
+/// same operators); everything else defaults to the deterministic host
+/// arm so slot summaries are bit-reproducible across nodes.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    /// Batcher config; `seed` is overridden by the coordinator's.
+    pub batch: BatchConfig,
+    /// Offload policy of the worker's embedded engine.
+    pub policy: Policy,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            batch: BatchConfig {
+                max_cols: 1024,
+                max_wait: Duration::from_micros(50),
+                noise: NoiseModel::ideal(),
+                ..BatchConfig::default()
+            },
+            policy: Policy::ForceHost,
+        }
+    }
+}
+
+/// One merge slot's ingest state on this worker.
+struct Partition {
+    r0: usize,
+    r1: usize,
+    chunk_rows: usize,
+    total_rows: usize,
+    cols: usize,
+    sketch_m: usize,
+    range_cap: usize,
+    /// Chunk-ordered fold of the slot's `S·A` partials.
+    sa: Mat,
+    /// The slot's columns of `Yᵀ` (range_cap × (r1−r0)).
+    yt: Mat,
+    fro2: f64,
+    chunks: u64,
+    buf: Mat,
+    buf_rows: usize,
+    /// Next absolute row this slot ingests.
+    next: usize,
+    arm: Option<Device>,
+    mixed_arms: bool,
+    y_arm: Option<Device>,
+    mixed_y_arms: bool,
+}
+
+impl Partition {
+    fn reserved_bytes(&self) -> usize {
+        (self.chunk_rows * self.cols
+            + self.sketch_m * self.cols
+            + self.range_cap * (self.r1 - self.r0))
+            * std::mem::size_of::<f64>()
+    }
+}
+
+/// Per-stream worker state: the owned slots plus one FD sketch fed by
+/// every chunk this worker flushes (FD is mergeable, so per-worker
+/// sketches reduce at the coordinator).
+struct StreamState {
+    fd: FrequentDirections,
+    fd_rank: usize,
+    cols: usize,
+    slots: BTreeMap<u64, Partition>,
+}
+
+impl StreamState {
+    fn reserved_bytes(&self) -> usize {
+        2 * self.fd_rank * self.cols * std::mem::size_of::<f64>()
+            + self.slots.values().map(Partition::reserved_bytes).sum::<usize>()
+    }
+}
+
+/// A connected map worker: socket + embedded engine + ingest loop.
+pub struct WorkerNode {
+    addr: SocketAddr,
+    worker_id: u64,
+    stop: Arc<AtomicBool>,
+    writer: Arc<Mutex<TcpStream>>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl WorkerNode {
+    /// Dial `addr`, authenticate with `token`, adopt the coordinator's
+    /// engine constants and start ingesting. Returns once the handshake
+    /// completed — partition work runs on a background thread.
+    pub fn connect(addr: &str, token: &str, cfg: WorkerConfig) -> io::Result<WorkerNode> {
+        let mut sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true).ok();
+        let hello = Frame::WorkerHello { version: WIRE_VERSION, token: token.to_string() };
+        write_frame(&mut sock, 1, &hello).map_err(wire_io)?;
+        let (_req, reply) = read_frame(&mut sock).map_err(wire_io)?;
+        let (worker_id, seed) = match reply {
+            Frame::WorkerOk { worker, seed, .. } => (worker, seed),
+            Frame::Status(s) => {
+                return Err(io::Error::new(
+                    ErrorKind::PermissionDenied,
+                    format!("coordinator refused the worker: {}", s.detail),
+                ));
+            }
+            other => {
+                return Err(io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("expected WorkerOk, got {other:?}"),
+                ));
+            }
+        };
+        sock.set_read_timeout(Some(POLL_INTERVAL))?;
+        let writer = Arc::new(Mutex::new(sock.try_clone()?));
+        let peer = sock.peer_addr()?;
+
+        // The embedded engine: same batcher/router/pool stack as the
+        // coordinator's serving plane, seeded with the coordinator's
+        // base seed so every node draws identical signature operators.
+        let metrics = Arc::new(Metrics::new());
+        let batch = BatchConfig { seed, ..cfg.batch };
+        let avail = Availability { pjrt: false, ..Availability::default() };
+        let router = Router::new(cfg.policy, avail);
+        let pool = Arc::new(DevicePool::build(
+            &PoolConfig { pjrt_replicas: 0, ..PoolConfig::default() },
+            &avail,
+        ));
+        let (svc, _batcher_join) =
+            ProjectionService::start(batch, router, pool, None, metrics.clone(), None);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let writer = Arc::clone(&writer);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new().name("worker-ingest".into()).spawn(move || {
+                run_loop(sock, &writer, svc, &metrics, &stop);
+                drop(_batcher_join);
+            })?
+        };
+        Ok(WorkerNode { addr: peer, worker_id, stop, writer, handle: Some(handle), metrics })
+    }
+
+    /// The coordinator address this worker serves.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The id the coordinator registered this worker under.
+    pub fn worker_id(&self) -> u64 {
+        self.worker_id
+    }
+
+    /// The worker's own engine metrics (`stream_resident_bytes`,
+    /// `stream_chunks`, …) — the regression tests' source of truth for
+    /// "worker-side bytes returned to baseline".
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Leave the cluster: best-effort `Goodbye`, stop the ingest loop,
+    /// join the thread. The coordinator sees the disconnect and poisons
+    /// any streams still holding this worker's slots.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        {
+            let mut w = self.writer.lock().unwrap();
+            let _ = write_frame(&mut *w, 0, &Frame::Goodbye);
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerNode {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn wire_io(e: WireError) -> io::Error {
+    io::Error::new(ErrorKind::InvalidData, e.to_string())
+}
+
+fn send(writer: &Mutex<TcpStream>, frame: &Frame) -> bool {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, 0, frame).is_ok()
+}
+
+fn run_loop(
+    mut rd: TcpStream,
+    writer: &Arc<Mutex<TcpStream>>,
+    svc: ProjectionService,
+    metrics: &Arc<Metrics>,
+    stop: &AtomicBool,
+) {
+    let mut streams: BTreeMap<u64, StreamState> = BTreeMap::new();
+    while !stop.load(Ordering::SeqCst) {
+        let frame = match read_frame_poll(&mut rd, stop) {
+            Ok(None) => continue,
+            Ok(Some((_req, f))) => f,
+            Err(_) => break,
+        };
+        match frame {
+            Frame::AssignPartition {
+                stream,
+                epoch: _,
+                slot,
+                r0,
+                r1,
+                total_rows,
+                cols,
+                chunk_rows,
+                sketch_m,
+                fd_rank,
+                range_cap,
+            } => {
+                let st = streams.entry(stream).or_insert_with(|| StreamState {
+                    fd: FrequentDirections::new((fd_rank as usize).max(1), (cols as usize).max(1)),
+                    fd_rank: fd_rank as usize,
+                    cols: cols as usize,
+                    slots: BTreeMap::new(),
+                });
+                let (r0, r1) = (r0 as usize, r1 as usize);
+                let cols = cols as usize;
+                let chunk = (chunk_rows as usize).max(1).min(r1.saturating_sub(r0).max(1));
+                let p = Partition {
+                    r0,
+                    r1,
+                    chunk_rows: chunk,
+                    total_rows: total_rows as usize,
+                    cols,
+                    sketch_m: sketch_m as usize,
+                    range_cap: range_cap as usize,
+                    sa: Mat::zeros(sketch_m as usize, cols),
+                    yt: Mat::zeros(range_cap as usize, r1 - r0),
+                    fro2: 0.0,
+                    chunks: 0,
+                    buf: Mat::zeros(chunk, cols),
+                    buf_rows: 0,
+                    next: r0,
+                    arm: None,
+                    mixed_arms: false,
+                    y_arm: None,
+                    mixed_y_arms: false,
+                };
+                let bytes = p.reserved_bytes() as u64;
+                st.slots.insert(slot, p);
+                // FD buffer counts once per stream; charge it with the
+                // first slot so the gauge mirrors what is allocated.
+                let fd_bytes = if st.slots.len() == 1 {
+                    (2 * st.fd_rank * st.cols * std::mem::size_of::<f64>()) as u64
+                } else {
+                    0
+                };
+                metrics.stream_resident_bytes.fetch_add(bytes + fd_bytes, Ordering::Relaxed);
+            }
+            Frame::PartitionRows { stream, slot, rows } => {
+                let Some(st) = streams.get_mut(&stream) else { continue };
+                let block = match rows.to_mat() {
+                    Ok(m) => m,
+                    Err(e) => {
+                        fail_stream(&mut streams, stream, metrics, writer, &e.to_string());
+                        continue;
+                    }
+                };
+                let Some(p) = st.slots.get_mut(&slot) else { continue };
+                let mut at = 0usize;
+                let mut err: Option<String> = None;
+                while at < block.rows {
+                    let take = (p.chunk_rows - p.buf_rows).min(block.rows - at);
+                    for i in 0..take {
+                        p.buf.row_mut(p.buf_rows + i).copy_from_slice(block.row(at + i));
+                    }
+                    p.buf_rows += take;
+                    at += take;
+                    if p.buf_rows == p.chunk_rows {
+                        if let Err(e) = flush(p, &mut st.fd, &svc, metrics) {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                if let Some(e) = err {
+                    fail_stream(&mut streams, stream, metrics, writer, &e);
+                }
+            }
+            Frame::SealPartition { stream, epoch } => {
+                let Some(mut st) = streams.remove(&stream) else { continue };
+                let mut failed: Option<String> = None;
+                // Flush tails and push summaries in ascending slot
+                // order (the canonical order the reduction folds in).
+                for (slot, p) in st.slots.iter_mut() {
+                    if p.buf_rows > 0 {
+                        if let Err(e) = flush(p, &mut st.fd, &svc, metrics) {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                    let summary = Frame::SlotSummary {
+                        stream,
+                        slot: *slot,
+                        r0: p.r0 as u64,
+                        r1: p.r1 as u64,
+                        chunks: p.chunks,
+                        fro2: p.fro2.to_bits(),
+                        arm: arm_code(if p.mixed_arms { None } else { p.arm }),
+                        y_arm: arm_code(if p.mixed_y_arms { None } else { p.y_arm }),
+                        sa: WireMat::from_mat(&p.sa),
+                        yt: WireMat::from_mat(&p.yt),
+                    };
+                    if !send(writer, &summary) {
+                        failed = Some("summary push failed".into());
+                        break;
+                    }
+                }
+                let released = st.reserved_bytes() as u64;
+                if let Some(e) = failed {
+                    metrics.stream_resident_bytes.fetch_sub(released, Ordering::Relaxed);
+                    report_failure(writer, stream, &e);
+                    continue;
+                }
+                st.fd.compress();
+                let sealed = Frame::PartitionSealed {
+                    stream,
+                    epoch,
+                    fd_bound: st.fd.bound().to_bits(),
+                    fd: WireMat::from_mat(&st.fd.sketch()),
+                };
+                send(writer, &sealed);
+                metrics.stream_resident_bytes.fetch_sub(released, Ordering::Relaxed);
+            }
+            Frame::FreePartition { stream } => {
+                if let Some(st) = streams.remove(&stream) {
+                    metrics
+                        .stream_resident_bytes
+                        .fetch_sub(st.reserved_bytes() as u64, Ordering::Relaxed);
+                }
+                send(writer, &Frame::PartitionFreed { stream });
+            }
+            Frame::ShuttingDown | Frame::Goodbye => break,
+            _ => {}
+        }
+    }
+}
+
+/// One chunk through the worker's projection plane — the same two
+/// batches the local streaming plane runs per chunk, at the same
+/// absolute offsets, folded into the slot summaries in chunk order.
+fn flush(
+    p: &mut Partition,
+    fd: &mut FrequentDirections,
+    svc: &ProjectionService,
+    metrics: &Arc<Metrics>,
+) -> Result<(), String> {
+    let take = p.buf_rows;
+    let r0 = p.next;
+    let chunk = Arc::new(p.buf.crop(take, p.cols));
+    let run = (|| -> anyhow::Result<()> {
+        let p_sa = svc.project_rows_async(chunk.clone(), p.sketch_m, p.total_rows, r0)?;
+        let p_y = svc.project_async(chunk.transpose(), p.range_cap)?;
+        let ra = p_sa.wait()?;
+        let ry = p_y.wait()?;
+        let off = r0 - p.r0;
+        for i in 0..p.range_cap {
+            p.yt.row_mut(i)[off..off + take].copy_from_slice(ry.result.row(i));
+        }
+        for (dst, v) in p.sa.data.iter_mut().zip(&ra.result.data) {
+            *dst += v;
+        }
+        match p.arm {
+            None => p.arm = Some(ra.planned),
+            Some(a) if a != ra.planned => p.mixed_arms = true,
+            _ => {}
+        }
+        match p.y_arm {
+            None => p.y_arm = Some(ry.planned),
+            Some(a) if a != ry.planned => p.mixed_y_arms = true,
+            _ => {}
+        }
+        Ok(())
+    })();
+    run.map_err(|e| e.to_string())?;
+    p.fro2 += chunk.data.iter().map(|v| v * v).sum::<f64>();
+    fd.insert(&chunk);
+    p.next += take;
+    p.buf_rows = 0;
+    p.chunks += 1;
+    metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Drop a failed stream's state, release its gauge bytes and tell the
+/// coordinator which stream broke (it poisons the deferred slot typed).
+fn fail_stream(
+    streams: &mut BTreeMap<u64, StreamState>,
+    stream: u64,
+    metrics: &Arc<Metrics>,
+    writer: &Arc<Mutex<TcpStream>>,
+    detail: &str,
+) {
+    if let Some(st) = streams.remove(&stream) {
+        metrics.stream_resident_bytes.fetch_sub(st.reserved_bytes() as u64, Ordering::Relaxed);
+    }
+    report_failure(writer, stream, detail);
+}
+
+fn report_failure(writer: &Arc<Mutex<TcpStream>>, stream: u64, detail: &str) {
+    let mut status = WireStatus::with_detail(StatusCode::ClusterFailed, detail);
+    status.a = stream;
+    send(writer, &Frame::Status(status));
+}

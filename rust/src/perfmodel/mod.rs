@@ -333,6 +333,77 @@ pub fn stream_ingest_ms(
     total
 }
 
+/// Loopback/LAN wire throughput the cluster cost terms assume. Kept
+/// deliberately conservative (≈2 GB/s) so the model never talks the
+/// planner into shipping rows that would be cheaper to project locally.
+pub const WIRE_BYTES_PER_MS: f64 = 2.0e6;
+
+/// Predicted time to move `bytes` over the cluster wire (framing
+/// overhead folded into the dispatch constant).
+pub fn wire_transfer_ms(bytes: usize) -> f64 {
+    DISPATCH_OVERHEAD_MS + bytes as f64 / WIRE_BYTES_PER_MS
+}
+
+/// Predicted cost of merging `parts` worker FD summaries of shape
+/// (ℓ × k) with an `arity`-way tree: every merge level stacks up to
+/// `arity` sketches and pays one shrink (an O(ℓ'²k) SVD flush on the
+/// stacked buffer, ℓ' = arity·ℓ). Wider trees run fewer levels but
+/// each flush works a taller buffer — [`merge_tree_arity`] picks the
+/// bend (the same svd-flush pricing `host_projection_ms` leans on).
+pub fn summary_merge_ms(parts: usize, arity: usize, ell: usize, k: usize) -> f64 {
+    let arity = arity.max(2);
+    let flush = |rows: usize| host_projection_ms(rows, rows, k) * 6.0; // svd ≈ 6 gemm
+    let mut level = parts.max(1);
+    let mut total = 0.0;
+    while level > 1 {
+        let groups = level.div_ceil(arity);
+        total += groups as f64 * flush(arity * ell);
+        level = groups;
+    }
+    total
+}
+
+/// Tree arity the seal-time reduction uses: cheapest modeled cost over
+/// the practical range, ties to the narrower tree (tighter composed
+/// bound). With the flush model above, small part counts collapse to
+/// one wide merge and large counts prefer binary levels.
+pub fn merge_tree_arity(parts: usize) -> usize {
+    if parts <= 2 {
+        return 2;
+    }
+    // Model with a representative sketch shape; the argmin is driven by
+    // the level structure, not by ℓ and k themselves.
+    let (ell, k) = (64usize, 64usize);
+    (2..=parts.min(8))
+        .min_by(|&a, &b| {
+            summary_merge_ms(parts, a, ell, k)
+                .partial_cmp(&summary_merge_ms(parts, b, ell, k))
+                .unwrap()
+        })
+        .unwrap_or(2)
+}
+
+/// Aggregate modeled cost of ingesting a `rows × k` stream through
+/// `workers` map nodes: rows ship over the wire once, workers project
+/// their partitions concurrently (the per-worker ingest divides), and
+/// the seal pays one summary push per worker plus the FD tree
+/// reduction over ℓ-row parts.
+pub fn cluster_ingest_ms(
+    kind: SketchKind,
+    rows: usize,
+    chunk_rows: usize,
+    m: usize,
+    ell: usize,
+    k: usize,
+    workers: usize,
+) -> f64 {
+    let workers = workers.max(1);
+    let ship = wire_transfer_ms(rows * k * 8);
+    let project = stream_ingest_ms(kind, rows, chunk_rows, m, k) / workers as f64;
+    let push = workers as f64 * wire_transfer_ms(m * k * 8);
+    ship + project + push + summary_merge_ms(workers, merge_tree_arity(workers), ell, k)
+}
+
 /// Energy-efficiency comparison backing the §I claim (~2 orders of
 /// magnitude): effective random-projection OPS per joule.
 pub fn energy_ratio(opu: &OpuTimingModel, gpu: &GpuModel, n: usize) -> Option<f64> {
@@ -384,6 +455,31 @@ mod tests {
         assert_eq!(queue_delay_ms(-5.0, 0), 0.0);
         assert!(queue_delay_ms(1.0, 2) > queue_delay_ms(1.0, 1));
         assert!(queue_delay_ms(2.0, 1) > queue_delay_ms(1.0, 1));
+    }
+
+    #[test]
+    fn cluster_cost_terms_behave() {
+        // Wire transfer is affine in bytes with the dispatch floor.
+        assert!(wire_transfer_ms(0) >= DISPATCH_OVERHEAD_MS);
+        assert!(wire_transfer_ms(1 << 20) > wire_transfer_ms(1 << 10));
+        // Merging more parts costs more at fixed arity.
+        assert!(summary_merge_ms(8, 2, 64, 64) > summary_merge_ms(2, 2, 64, 64));
+        // One part needs no merge work.
+        assert_eq!(summary_merge_ms(1, 2, 64, 64), 0.0);
+        // The chosen arity is in-range and no worse than binary.
+        for parts in 1..=16usize {
+            let a = merge_tree_arity(parts);
+            assert!((2..=8).contains(&a), "arity {a} for {parts} parts");
+            assert!(
+                summary_merge_ms(parts, a, 64, 64)
+                    <= summary_merge_ms(parts, 2, 64, 64) + 1e-12
+            );
+        }
+        // Scale-out pays off once projection dominates the wire: a big
+        // dense stream models faster through 4 workers than 1.
+        let one = cluster_ingest_ms(SketchKind::Dense, 1 << 15, 256, 512, 64, 64, 1);
+        let four = cluster_ingest_ms(SketchKind::Dense, 1 << 15, 256, 512, 64, 64, 4);
+        assert!(four < one, "4-worker {four}ms vs 1-worker {one}ms");
     }
 
     #[test]

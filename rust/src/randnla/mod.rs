@@ -33,8 +33,8 @@ pub use nystrom::nystrom;
 pub use randsvd::{randsvd, RandSvd, RandSvdOpts};
 pub use sketch::{symmetric_sketch, OpuSketcher};
 pub use streaming::{
-    one_pass_randsvd_digital, solve_corange, ChunkSketch, FrequentDirections, OnePassSvd,
-    RowBlockSketcher,
+    fold_partials, one_pass_randsvd_digital, solve_corange, ChunkSketch, FrequentDirections,
+    OnePassSvd, RowBlockSketcher,
 };
 pub use structured::{SparseSignSketcher, SrhtSketcher};
 pub use trace::{exact_trace, hutchinson};

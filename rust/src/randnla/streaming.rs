@@ -243,6 +243,31 @@ impl FrequentDirections {
     pub fn insert(&mut self, rows: &Mat) {
         assert_eq!(rows.cols, self.cols, "FD row width {} != {}", rows.cols, self.cols);
         self.fro2 += rows.data.iter().map(|v| v * v).sum::<f64>();
+        self.insert_rows(rows);
+    }
+
+    /// Merge another FD summary into this one: stack the part's sketch
+    /// rows (they enter the same flush machinery as data rows) and carry
+    /// its error accounting across. The classic mergeability result
+    /// (Ghashami et al. 2016, Thm. 1.2) is exactly this operation: for
+    /// parts `B_1..B_p` of a row-partitioned `A`, the merged sketch
+    /// satisfies `‖AᵀA − BᵀB‖₂ ≤ Σᵢ δᵢ + δ_merge`, the *composed* bound,
+    /// which still sits under `‖A‖²_F/(ℓ−k)`.
+    ///
+    /// `bound` and `fro2` are the part's measured Σδ and exact `‖A_i‖²_F`
+    /// — they must come from the part's own accounting, because the
+    /// sketch rows alone under-count Frobenius mass already shrunk away.
+    pub fn merge(&mut self, sketch: &Mat, bound: f64, fro2: f64) {
+        assert_eq!(sketch.cols, self.cols, "FD merge width {} != {}", sketch.cols, self.cols);
+        self.shrinkage += bound;
+        self.fro2 += fro2;
+        self.insert_rows(sketch);
+    }
+
+    /// The row-buffer/flush loop shared by [`insert`](Self::insert)
+    /// (data rows, Frobenius-counted) and [`merge`](Self::merge)
+    /// (sketch rows, accounting carried by the caller).
+    fn insert_rows(&mut self, rows: &Mat) {
         let mut at = 0usize;
         while at < rows.rows {
             let take = (2 * self.ell - self.used).min(rows.rows - at);
@@ -303,6 +328,26 @@ impl FrequentDirections {
         }
         self.used = self.ell;
     }
+}
+
+/// Canonical left-fold of per-partition `S·A` accumulators covering
+/// disjoint row ranges of one stream: `((p₀ + p₁) + p₂) + …` in the
+/// caller-supplied order. The cluster plane always passes partials in
+/// ascending row-offset order, which makes the merged accumulator a
+/// *fixed* f64 association — independent of how many workers produced
+/// the partials and of the reduction tree's arity. (Summing in tree
+/// order instead would re-associate the sums and move last bits.)
+pub fn fold_partials(parts: &[Mat]) -> Mat {
+    assert!(!parts.is_empty(), "fold_partials needs at least one partial");
+    let (m, cols) = (parts[0].rows, parts[0].cols);
+    let mut acc = Mat::zeros(m, cols);
+    for p in parts {
+        assert_eq!((p.rows, p.cols), (m, cols), "partial shape mismatch");
+        for (a, v) in acc.data.iter_mut().zip(&p.data) {
+            *a += v;
+        }
+    }
+    acc
 }
 
 /// The one-pass co-range solve: `X = argmin_X ‖(SQ)·X − (S·A)‖_F`,

@@ -18,6 +18,15 @@
 
 use crate::rng::Xoshiro256;
 
+/// Bind spec for wire tests: loopback with an OS-assigned ephemeral
+/// port. Every test server binds this and reads the *actual* address
+/// back from the bound socket (`WireServer::addr()`), so concurrently
+/// running test binaries can never collide on a hardcoded port — the
+/// kernel hands each `bind(":0")` a distinct free port.
+pub fn ephemeral_loopback() -> String {
+    "127.0.0.1:0".to_string()
+}
+
 /// Random-value source handed to properties.
 pub struct Gen {
     rng: Xoshiro256,
@@ -88,6 +97,16 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ephemeral_loopback_yields_distinct_free_ports() {
+        let a = std::net::TcpListener::bind(ephemeral_loopback()).expect("bind a");
+        let b = std::net::TcpListener::bind(ephemeral_loopback()).expect("bind b");
+        let (pa, pb) = (a.local_addr().unwrap().port(), b.local_addr().unwrap().port());
+        assert_ne!(pa, 0);
+        assert_ne!(pb, 0);
+        assert_ne!(pa, pb, "the kernel must hand each bind its own port");
+    }
 
     #[test]
     fn passes_trivial_property() {

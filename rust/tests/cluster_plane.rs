@@ -1,0 +1,324 @@
+//! Distributed-correctness suite for the scale-out plane.
+//!
+//! Loopback map workers join a coordinator's front door and the
+//! coordinator partitions every stream across them; these tests pin the
+//! plane's contract:
+//!
+//! - **accuracy**: 4-worker merged-summary one-pass RandSVD / Trace /
+//!   Lstsq match the single-node one-pass path within the FD-derived
+//!   tolerance (the summaries differ only by f64 association and the
+//!   FD reduction tree, both covered by the composed certificate);
+//! - **bit-identity**: the merged `S·A`, `Yᵀ`, and `‖A‖²_F` of a sealed
+//!   cluster stream are bit-identical across 1-, 2-, and 4-worker
+//!   partitions — the merge-slot grid and canonical ascending fold make
+//!   the result independent of worker count;
+//! - **failure**: a worker dying mid-ingest degrades to a typed
+//!   `StreamError::Cluster` on the next stream call, never a hang;
+//! - **memory**: `free_stream` on a cluster-partitioned stream releases
+//!   the *worker-side* reserved bytes too — every node's
+//!   `stream_resident_bytes` returns to baseline.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, JobSpec, OperandRef, Policy, PoolConfig,
+    QosClass, StreamError, StreamId, StreamOpts, SubmitOptions, TenantRegistry, TraceEstimator,
+};
+use photonic_randnla::linalg::{self, matvec, rel_frobenius_error, Mat};
+use photonic_randnla::net::{WireServer, WorkerConfig, WorkerNode};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::ephemeral_loopback;
+use photonic_randnla::workload::{matrix_with_spectrum, psd_with_spectrum, Spectrum};
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            noise: NoiseModel::ideal(),
+            max_wait: Duration::from_micros(50),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Front door plus `n` loopback map workers, all deterministic-host.
+fn cluster(n: usize) -> (WireServer, Vec<WorkerNode>) {
+    let tenants = TenantRegistry::new().add("w", "wtok", usize::MAX, QosClass::Batch);
+    let srv =
+        WireServer::start(coordinator(), &ephemeral_loopback(), tenants).expect("server start");
+    let workers: Vec<WorkerNode> = (0..n)
+        .map(|i| {
+            WorkerNode::connect(&srv.addr().to_string(), "wtok", WorkerConfig::default())
+                .unwrap_or_else(|e| panic!("worker {i} join: {e}"))
+        })
+        .collect();
+    let t0 = Instant::now();
+    while srv.coordinator().cluster().worker_count() < n {
+        assert!(t0.elapsed() < Duration::from_secs(10), "workers never registered");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    (srv, workers)
+}
+
+/// Chunked ingest of `a` (the same driver the single-node suite uses;
+/// on a cluster coordinator the rows route through the wire plane).
+fn ingest(c: &Coordinator, a: &Mat, opts: StreamOpts, chunk: usize) -> StreamId {
+    let id = c.begin_stream(a.rows, a.cols, opts).unwrap();
+    let mut r0 = 0usize;
+    while r0 < a.rows {
+        let r1 = (r0 + chunk).min(a.rows);
+        c.append_stream(id, &Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j))).unwrap();
+        r0 = r1;
+    }
+    c.seal_stream(id).unwrap();
+    id
+}
+
+#[test]
+fn four_workers_match_single_node_within_fd_tolerance() {
+    let (srv, workers) = cluster(4);
+    let remote = srv.coordinator();
+    let local = coordinator();
+
+    // --- one-pass randSVD --------------------------------------------
+    let (n, rank, oversample) = (96usize, 8usize, 8usize);
+    let cap = rank + oversample;
+    let a = matrix_with_spectrum(n, Spectrum::LowRankPlusNoise { rank, noise: 1e-3 }, 5);
+    let opts = StreamOpts {
+        chunk_rows: Some(16),
+        sketch_m: 4 * cap,
+        fd_rank: 2 * rank,
+        range_cap: cap,
+    };
+    let svd_spec = |id: StreamId| JobSpec::RandSvd {
+        a: OperandRef::Stream(id),
+        rank,
+        oversample,
+        power_iters: 0,
+        publish_q: false,
+        tol: None,
+    };
+    let id_l = ingest(&local, &a, opts.clone(), 16);
+    let id_r = ingest(remote, &a, opts, 16);
+    let fdb_l = local.streams().sealed(id_l).unwrap().fd_bound;
+    let fdb_r = remote.streams().sealed(id_r).unwrap().fd_bound;
+    let (ul, sl, vtl) = {
+        let r = local.run_spec(svd_spec(id_l), SubmitOptions::default()).unwrap();
+        let (u, s, vt) = r.payload.svd().map(|(u, s, vt)| (u.clone(), s.to_vec(), vt.clone())).unwrap();
+        (u, s, vt)
+    };
+    let (ur, sr, vtr) = {
+        let r = remote.run_spec(svd_spec(id_r), SubmitOptions::default()).unwrap();
+        let (u, s, vt) = r.payload.svd().map(|(u, s, vt)| (u.clone(), s.to_vec(), vt.clone())).unwrap();
+        (u, s, vt)
+    };
+    let rec_l = linalg::reconstruct(&ul, &sl, &vtl);
+    let rec_r = linalg::reconstruct(&ur, &sr, &vtr);
+    // The two one-pass runs share every operator draw; they differ only
+    // through the summaries, whose deviation the FD certificates bound.
+    let fro = a.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let tolerance = ((rank as f64) * (fdb_l + fdb_r)).sqrt() / fro + 1e-9;
+    let drift = rel_frobenius_error(&rec_l, &rec_r);
+    assert!(
+        drift <= tolerance,
+        "cluster randsvd drifted {drift} from single-node (tolerance {tolerance})"
+    );
+    assert!(rel_frobenius_error(&a, &rec_r) < 0.05, "cluster factorization off target");
+    assert!(local.free_stream(id_l));
+    assert!(remote.free_stream(id_r));
+
+    // --- one-pass trace ----------------------------------------------
+    let p = psd_with_spectrum(64, Spectrum::Exponential { decay: 0.8 }, 11);
+    let topts = StreamOpts { chunk_rows: Some(16), sketch_m: 32, fd_rank: 8, range_cap: 8 };
+    let tr_spec = |id: StreamId| JobSpec::Trace {
+        a: OperandRef::Stream(id),
+        m: 32,
+        estimator: TraceEstimator::Hutchinson,
+    };
+    let id_l = ingest(&local, &p, topts.clone(), 16);
+    let id_r = ingest(remote, &p, topts, 16);
+    let t_l = local.run_spec(tr_spec(id_l), SubmitOptions::default()).unwrap();
+    let t_r = remote.run_spec(tr_spec(id_r), SubmitOptions::default()).unwrap();
+    let (t_l, t_r) = (t_l.payload.scalar().unwrap(), t_r.payload.scalar().unwrap());
+    assert!(
+        (t_l - t_r).abs() <= 1e-9 * t_l.abs().max(1.0),
+        "cluster trace {t_r} drifted from single-node {t_l}"
+    );
+    assert!(local.free_stream(id_l));
+    assert!(remote.free_stream(id_r));
+
+    // --- one-pass lstsq ----------------------------------------------
+    let mut rng = Xoshiro256::new(19);
+    let g = Mat::gaussian(160, 8, 1.0, &mut rng);
+    let x_true: Vec<f64> = (0..8).map(|_| rng.next_normal()).collect();
+    let b = matvec(&g, &x_true);
+    let lopts = StreamOpts { chunk_rows: Some(32), sketch_m: 40, fd_rank: 8, range_cap: 8 };
+    let ls_spec = |id: StreamId, b: Vec<f64>| JobSpec::Lstsq {
+        a: OperandRef::Stream(id),
+        b,
+        m: 40,
+        refine: None,
+    };
+    let id_l = ingest(&local, &g, lopts.clone(), 32);
+    let id_r = ingest(remote, &g, lopts, 32);
+    let x_l = local
+        .run_spec(ls_spec(id_l, b.clone()), SubmitOptions::default())
+        .unwrap()
+        .payload
+        .vector()
+        .unwrap()
+        .to_vec();
+    let x_r = remote
+        .run_spec(ls_spec(id_r, b), SubmitOptions::default())
+        .unwrap()
+        .payload
+        .vector()
+        .unwrap()
+        .to_vec();
+    for (l, r) in x_l.iter().zip(&x_r) {
+        assert!((l - r).abs() < 1e-8, "cluster lstsq {r} drifted from single-node {l}");
+    }
+    for (r, t) in x_r.iter().zip(&x_true) {
+        assert!((r - t).abs() < 1e-5, "cluster lstsq {r} off the true solution {t}");
+    }
+    assert!(local.free_stream(id_l));
+    assert!(remote.free_stream(id_r));
+
+    local.shutdown();
+    drop(workers);
+    srv.shutdown();
+}
+
+#[test]
+fn merged_accumulators_are_bit_identical_across_worker_counts() {
+    let mut rng = Xoshiro256::new(23);
+    let a = Mat::gaussian(64, 12, 1.0, &mut rng);
+    let opts = StreamOpts { chunk_rows: Some(8), sketch_m: 16, fd_rank: 8, range_cap: 4 };
+    let summarize = |n_workers: usize| {
+        let (srv, workers) = cluster(n_workers);
+        let c = srv.coordinator();
+        let id = ingest(c, &a, opts.clone(), 8);
+        let sealed = c.streams().sealed(id).unwrap();
+        let out = (sealed.sa.clone(), sealed.yt.clone(), sealed.fro2.to_bits());
+        drop(sealed);
+        assert!(c.free_stream(id));
+        drop(workers);
+        srv.shutdown();
+        out
+    };
+    let one = summarize(1);
+    let two = summarize(2);
+    let four = summarize(4);
+    assert_eq!(one.0, two.0, "S·A moved bits between 1 and 2 workers");
+    assert_eq!(one.0, four.0, "S·A moved bits between 1 and 4 workers");
+    assert_eq!(one.1, two.1, "Yᵀ moved bits between 1 and 2 workers");
+    assert_eq!(one.1, four.1, "Yᵀ moved bits between 1 and 4 workers");
+    assert_eq!(one.2, two.2, "fro2 moved bits between 1 and 2 workers");
+    assert_eq!(one.2, four.2, "fro2 moved bits between 1 and 4 workers");
+}
+
+#[test]
+fn worker_death_mid_ingest_degrades_typed_never_hangs() {
+    let (srv, mut workers) = cluster(2);
+    let c = srv.coordinator().clone();
+    let a = {
+        let mut rng = Xoshiro256::new(31);
+        Mat::gaussian(64, 8, 1.0, &mut rng)
+    };
+    let opts = StreamOpts { chunk_rows: Some(8), sketch_m: 16, fd_rank: 8, range_cap: 4 };
+    let id = c.begin_stream(64, 8, opts).unwrap();
+    // Half the rows land before the failure.
+    c.append_stream(id, &Mat::from_fn(32, 8, |i, j| a.at(i, j))).unwrap();
+
+    // Kill one worker mid-ingest and wait for the coordinator to see
+    // the disconnect (it poisons every stream holding that worker's
+    // slots under the same lock that drops the registration).
+    workers.remove(0).shutdown();
+    let t0 = Instant::now();
+    while c.cluster().worker_count() != 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker loss never observed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Every subsequent stream call fails typed, immediately.
+    match c.append_stream(id, &Mat::from_fn(32, 8, |i, j| a.at(32 + i, j))) {
+        Err(StreamError::Cluster(e)) => {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+        }
+        other => panic!("append after worker death: expected Cluster error, got {other:?}"),
+    }
+    match c.seal_stream(id) {
+        Err(StreamError::Cluster(_)) => {}
+        other => panic!("seal after worker death: expected Cluster error, got {other:?}"),
+    }
+    // Submitting against the never-sealed stream is the usual typed
+    // refusal, and free still reclaims everything.
+    assert!(c.free_stream(id));
+    drop(workers);
+    srv.shutdown();
+}
+
+#[test]
+fn free_stream_releases_worker_side_bytes_on_every_node() {
+    let (srv, workers) = cluster(2);
+    let c = srv.coordinator();
+    let coord_baseline = c.metrics.stream_resident_bytes.load(Ordering::Relaxed);
+    let store_baseline = c.store().bytes();
+    let worker_baselines: Vec<u64> = workers
+        .iter()
+        .map(|w| w.metrics().stream_resident_bytes.load(Ordering::Relaxed))
+        .collect();
+
+    let a = {
+        let mut rng = Xoshiro256::new(37);
+        Mat::gaussian(64, 8, 1.0, &mut rng)
+    };
+    let opts = StreamOpts { chunk_rows: Some(8), sketch_m: 16, fd_rank: 8, range_cap: 4 };
+    let id = c.begin_stream(64, 8, opts).unwrap();
+    c.append_stream(id, &Mat::from_fn(24, 8, |i, j| a.at(i, j))).unwrap();
+
+    // The partition assignments reserve bytes on the workers (async —
+    // wait for at least one node to show them).
+    let t0 = Instant::now();
+    while workers
+        .iter()
+        .zip(&worker_baselines)
+        .all(|(w, b)| w.metrics().stream_resident_bytes.load(Ordering::Relaxed) == *b)
+    {
+        assert!(t0.elapsed() < Duration::from_secs(10), "no worker ever reserved bytes");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Free with the partition in flight: coordinator-side bytes release
+    // synchronously, worker-side on the FreePartition round trip.
+    assert!(c.free_stream(id));
+    assert_eq!(
+        c.metrics.stream_resident_bytes.load(Ordering::Relaxed),
+        coord_baseline,
+        "coordinator-side stream bytes leaked"
+    );
+    assert_eq!(c.store().bytes(), store_baseline, "store quota bytes leaked");
+    let t0 = Instant::now();
+    loop {
+        let clean = workers.iter().zip(&worker_baselines).all(|(w, b)| {
+            w.metrics().stream_resident_bytes.load(Ordering::Relaxed) == *b
+        });
+        if clean {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "worker-side stream bytes never returned to baseline"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(workers);
+    srv.shutdown();
+}

@@ -1,0 +1,216 @@
+//! Properties of the scale-out plane's summary algebra.
+//!
+//! The cluster plane only works because its summaries are mergeable by
+//! construction; these properties pin the algebra down over random
+//! shapes, seeds, splits, and chunk sizes:
+//!
+//! 1. Frequent Directions merging is order-insensitive *within the
+//!    composed bound*: however a row-partition's FD parts are merged,
+//!    the merged sketch's measured Σδ dominates the true Gram error and
+//!    stays under the a-priori `‖A‖²_F/(ℓ−k)` guarantee with the
+//!    *composed* δ accounting (Ghashami et al. 2016, Thm. 1.2).
+//! 2. The same composed guarantee survives the tree-shaped reduction
+//!    (`tree_reduce_fd`) at any arity.
+//! 3. Counter-sketch accumulators (`S·A`, `Yᵀ`, `‖A‖²_F`) reduce
+//!    bit-identically whatever the reduction tree's arity and however
+//!    the FD side was split — the canonical ascending-slot fold is a
+//!    fixed f64 association, so 2-way and 4-way trees cannot move a bit.
+
+use std::ops::Range;
+
+use photonic_randnla::coordinator::{
+    plan_slots, reduce_parts, tree_reduce_fd, Device, FdPart, PartSummary,
+};
+use photonic_randnla::linalg::{matmul_tn, spectral_norm, Mat};
+use photonic_randnla::randnla::{CounterSketcher, FrequentDirections, RowBlockSketcher, Sketcher};
+use photonic_randnla::testkit::{check, Gen};
+
+/// Random contiguous partition of `0..rows` into `parts` nonempty ranges.
+fn random_splits(g: &mut Gen, rows: usize, parts: usize) -> Vec<Range<usize>> {
+    let mut cuts = vec![0usize, rows];
+    while cuts.len() < parts + 1 {
+        let c = g.usize(1, rows - 1);
+        if !cuts.contains(&c) {
+            cuts.push(c);
+        }
+    }
+    cuts.sort_unstable();
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Per-partition FD summaries of `a`, each fed row ranges in chunks.
+fn fd_parts(a: &Mat, splits: &[Range<usize>], ell: usize, chunk: usize) -> Vec<FdPart> {
+    splits
+        .iter()
+        .map(|r| {
+            let mut fd = FrequentDirections::new(ell, a.cols);
+            let mut r0 = r.start;
+            while r0 < r.end {
+                let r1 = (r0 + chunk).min(r.end);
+                fd.insert(&Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j)));
+                r0 = r1;
+            }
+            fd.compress();
+            FdPart { r0: r.start, fd: fd.sketch(), bound: fd.bound(), fro2: fd.fro2() }
+        })
+        .collect()
+}
+
+/// `‖AᵀA − BᵀB‖₂` by power iteration.
+fn gram_error(a: &Mat, b: &Mat) -> f64 {
+    spectral_norm(&matmul_tn(a, a).sub(&matmul_tn(b, b)), 300, 7)
+}
+
+/// Per-slot counter-sketch summaries of `a`, the way a worker computes
+/// them: chunk-ordered absolute-offset partials, exact per-slot fro2.
+fn slot_parts(a: &Mat, chunk: usize, m: usize, cap: usize, seed: u64) -> Vec<PartSummary> {
+    let s_op = CounterSketcher::new(m, a.rows, seed);
+    let omega = CounterSketcher::new(cap, a.cols, seed ^ 1);
+    plan_slots(a.rows, chunk)
+        .into_iter()
+        .map(|r| {
+            let mut sa = Mat::zeros(m, a.cols);
+            let mut yt = Mat::zeros(cap, r.len());
+            let mut fro2 = 0.0f64;
+            let mut chunks = 0u64;
+            let mut r0 = r.start;
+            while r0 < r.end {
+                let r1 = (r0 + chunk).min(r.end);
+                let block = Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j));
+                let partial = RowBlockSketcher::project_rows(&s_op, r0..r1, &block);
+                for (dst, v) in sa.data.iter_mut().zip(&partial.data) {
+                    *dst += v;
+                }
+                let y = Sketcher::project(&omega, &block.transpose());
+                for i in 0..cap {
+                    yt.row_mut(i)[r0 - r.start..r1 - r.start].copy_from_slice(y.row(i));
+                }
+                fro2 += block.data.iter().map(|v| v * v).sum::<f64>();
+                chunks += 1;
+                r0 = r1;
+            }
+            PartSummary {
+                r0: r.start,
+                r1: r.end,
+                sa,
+                yt,
+                fro2,
+                chunks,
+                arm: Some(Device::Host),
+                y_arm: Some(Device::Host),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fd_merge_is_order_insensitive_within_the_composed_bound() {
+    check("fd merge order-insensitive", 40, |g| {
+        let rows = g.usize(24, 80);
+        let cols = g.usize(3, 10);
+        let ell = g.usize(cols.min(6), 10);
+        let k = ell / 2;
+        let chunk = g.usize(1, rows);
+        let nparts = g.usize(2, 5.min(rows - 1));
+        let mut rng = g.rng();
+        let a = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        let parts = fd_parts(&a, &random_splits(g, rows, nparts), ell, chunk);
+
+        // Merge ascending, then in a rotated order: both must satisfy
+        // the composed accounting.
+        let rot = g.usize(0, parts.len() - 1);
+        for (label, order) in [
+            ("ascending", (0..parts.len()).collect::<Vec<_>>()),
+            ("rotated", (0..parts.len()).map(|i| (i + rot) % parts.len()).collect()),
+        ] {
+            let mut fd = FrequentDirections::new(ell, cols);
+            for &i in &order {
+                fd.merge(&parts[i].fd, parts[i].bound, parts[i].fro2);
+            }
+            fd.compress();
+            let err = gram_error(&a, &fd.sketch());
+            let bound = fd.bound();
+            if err > bound * (1.0 + 1e-9) + 1e-12 {
+                return Err(format!("{label}: gram error {err} above composed bound {bound}"));
+            }
+            if bound > fd.fro2() / (ell - k) as f64 + 1e-12 {
+                return Err(format!(
+                    "{label}: composed bound {bound} above guarantee {}",
+                    fd.fro2() / (ell - k) as f64
+                ));
+            }
+            let fro2_true: f64 = a.data.iter().map(|v| v * v).sum();
+            if (fd.fro2() - fro2_true).abs() > 1e-6 * fro2_true.max(1.0) {
+                return Err(format!("{label}: merged fro2 {} != {fro2_true}", fd.fro2()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tree_reduction_keeps_the_composed_guarantee_at_any_arity() {
+    check("tree reduce composed guarantee", 30, |g| {
+        let rows = g.usize(24, 80);
+        let cols = g.usize(3, 8);
+        let ell = g.usize(cols.min(5), 9);
+        let k = ell / 2;
+        let nparts = g.usize(2, 6.min(rows - 1));
+        let arity = g.usize(2, 4);
+        let mut rng = g.rng();
+        let a = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        let parts = fd_parts(&a, &random_splits(g, rows, nparts), ell, g.usize(1, rows));
+        let fd = tree_reduce_fd(&parts, ell, cols, arity);
+        let err = gram_error(&a, &fd.sketch());
+        if err > fd.bound() * (1.0 + 1e-9) + 1e-12 {
+            return Err(format!("arity {arity}: error {err} above bound {}", fd.bound()));
+        }
+        if fd.bound() > fd.fro2() / (ell - k) as f64 + 1e-12 {
+            return Err(format!("arity {arity}: bound {} above guarantee", fd.bound()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn counter_sketch_reduction_is_bit_identical_across_tree_arity() {
+    check("accumulator reduction arity-invariant", 30, |g| {
+        let chunk = *g.pick(&[4usize, 8, 16]);
+        let rows = chunk * g.usize(2, 10);
+        let cols = g.usize(3, 8);
+        let (m, cap, ell) = (g.usize(4, 8), g.usize(2, 4), g.usize(cols.min(4), 8));
+        let seed = g.u64(0..=u64::MAX);
+        let mut rng = g.rng();
+        let a = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        let parts = slot_parts(&a, chunk, m, cap, seed);
+        let half = rows / 2 / chunk * chunk;
+        let halves = fd_parts(&a, &[0..half.max(chunk), half.max(chunk)..rows], ell, chunk);
+        let quarters = fd_parts(&a, &random_splits(g, rows, 4.min(rows - 1)), ell, chunk);
+        let r2 = reduce_parts(rows, cols, m, cap, ell, parts.clone(), halves, 2)
+            .map_err(|e| e.to_string())?;
+        let r4 = reduce_parts(rows, cols, m, cap, ell, parts, quarters, 4)
+            .map_err(|e| e.to_string())?;
+        if r2.sa != r4.sa {
+            return Err("S·A moved bits across tree arity".into());
+        }
+        if r2.yt != r4.yt {
+            return Err("Yᵀ moved bits across tree arity".into());
+        }
+        if r2.fro2.to_bits() != r4.fro2.to_bits() {
+            return Err(format!("fro2 bits differ: {} vs {}", r2.fro2, r4.fro2));
+        }
+        // And the merged accumulator is the unpartitioned operator apply.
+        let s_op = CounterSketcher::new(m, rows, seed);
+        let truth = Sketcher::project(&s_op, &a);
+        let drift: f64 = truth
+            .data
+            .iter()
+            .zip(&r2.sa.data)
+            .map(|(t, s)| (t - s).abs())
+            .fold(0.0, f64::max);
+        if drift > 1e-9 {
+            return Err(format!("merged S·A drifted {drift} from the direct apply"));
+        }
+        Ok(())
+    });
+}

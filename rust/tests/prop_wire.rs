@@ -96,7 +96,7 @@ fn gopts(g: &mut Gen) -> WireOptions {
 
 fn gstatus(g: &mut Gen) -> WireStatus {
     WireStatus {
-        code: StatusCode::from_code(g.usize(0, 18) as u8).expect("all 19 codes assigned"),
+        code: StatusCode::from_code(g.usize(0, 19) as u16).expect("all 20 codes assigned"),
         detail: gstr(g),
         a: g.u64(0..=u64::MAX),
         b: g.u64(0..=u64::MAX),
@@ -131,11 +131,12 @@ fn gresponse(g: &mut Gen) -> WireResponse {
     }
 }
 
-/// A tag the protocol has not assigned (client 1–11, server 32–42).
+/// A tag the protocol has not assigned (client/worker 1–15, server/
+/// coordinator 32–47).
 fn unassigned_tag(g: &mut Gen) -> u16 {
     loop {
         let t = g.u64(0..=u16::MAX as u64) as u16;
-        if !(1..=11).contains(&t) && !(32..=42).contains(&t) {
+        if !(1..=15).contains(&t) && !(32..=47).contains(&t) {
             return t;
         }
     }
@@ -143,7 +144,7 @@ fn unassigned_tag(g: &mut Gen) -> u16 {
 
 /// Every Frame variant, weighted uniformly.
 fn gframe(g: &mut Gen) -> Frame {
-    match g.usize(0, 22) {
+    match g.usize(0, 31) {
         0 => Frame::Hello { version: g.u64(0..=u16::MAX as u64) as u16, token: gstr(g) },
         1 => Frame::Upload { mat: gmat(g) },
         2 => Frame::FreeOperand { id: g.u64(0..=u64::MAX) },
@@ -175,6 +176,48 @@ fn gframe(g: &mut Gen) -> Frame {
         19 => Frame::CancelOk { cancelled: g.bool() },
         20 => Frame::ReportText { text: gstr(g) },
         21 => Frame::ShuttingDown,
+        // The scale-out plane's worker/coordinator frames.
+        22 => Frame::WorkerHello { version: g.u64(0..=u16::MAX as u64) as u16, token: gstr(g) },
+        23 => Frame::SlotSummary {
+            stream: g.u64(0..=u64::MAX),
+            slot: g.u64(0..=1 << 8),
+            r0: g.u64(0..=1 << 24),
+            r1: g.u64(0..=1 << 24),
+            chunks: g.u64(0..=1 << 16),
+            fro2: bits(g),
+            arm: g.u64(0..=3) as u8,
+            y_arm: g.u64(0..=3) as u8,
+            sa: gmat(g),
+            yt: gmat(g),
+        },
+        24 => Frame::PartitionSealed {
+            stream: g.u64(0..=u64::MAX),
+            epoch: g.u64(0..=1 << 16),
+            fd_bound: bits(g),
+            fd: gmat(g),
+        },
+        25 => Frame::PartitionFreed { stream: g.u64(0..=u64::MAX) },
+        26 => Frame::WorkerOk {
+            worker: g.u64(0..=u64::MAX),
+            seed: g.u64(0..=u64::MAX),
+            chunk_rows: g.u64(0..=1 << 16),
+        },
+        27 => Frame::AssignPartition {
+            stream: g.u64(0..=u64::MAX),
+            epoch: g.u64(0..=1 << 16),
+            slot: g.u64(0..=1 << 8),
+            r0: g.u64(0..=1 << 24),
+            r1: g.u64(0..=1 << 24),
+            total_rows: g.u64(0..=1 << 24),
+            cols: g.u64(0..=1 << 24),
+            chunk_rows: g.u64(0..=1 << 16),
+            sketch_m: g.u64(0..=1 << 16),
+            fd_rank: g.u64(0..=1 << 16),
+            range_cap: g.u64(0..=1 << 16),
+        },
+        28 => Frame::PartitionRows { stream: g.u64(0..=u64::MAX), slot: g.u64(0..=1 << 8), rows: gmat(g) },
+        29 => Frame::SealPartition { stream: g.u64(0..=u64::MAX), epoch: g.u64(0..=1 << 16) },
+        30 => Frame::FreePartition { stream: g.u64(0..=u64::MAX) },
         _ => Frame::Unknown { tag: unassigned_tag(g) },
     }
 }

@@ -33,6 +33,7 @@ use photonic_randnla::linalg::Mat;
 use photonic_randnla::net::{ClientError, WireClient, WireServer};
 use photonic_randnla::opu::NoiseModel;
 use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::ephemeral_loopback;
 
 fn coordinator(queue_cap: usize, workers: usize) -> Coordinator {
     Coordinator::start(CoordinatorConfig {
@@ -52,7 +53,7 @@ fn coordinator(queue_cap: usize, workers: usize) -> Coordinator {
 }
 
 fn server(queue_cap: usize, workers: usize, tenants: TenantRegistry) -> WireServer {
-    WireServer::start(coordinator(queue_cap, workers), "127.0.0.1:0", tenants)
+    WireServer::start(coordinator(queue_cap, workers), &ephemeral_loopback(), tenants)
         .expect("server start")
 }
 
