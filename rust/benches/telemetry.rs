@@ -1,0 +1,183 @@
+//! Bench: telemetry-plane overhead and scrape responsiveness under a
+//! saturated submit workload.
+//!
+//! ```bash
+//! cargo bench --bench telemetry [-- --quick]
+//! ```
+//!
+//! The observability plane (ISSUE 10) only earns its keep if it is
+//! close to free: span assembly, stage histograms and drift auditing
+//! ride the existing event journal, so arming them must not dent the
+//! serving plane. Two series over the *same* seeded projection burst:
+//!
+//! - **telemetry off** — the seed serving plane: no stage event is
+//!   constructed, no registry projector runs;
+//! - **telemetry on**  — spans + histograms + drift auditor armed and a
+//!   live Prometheus scrape endpoint bound on loopback.
+//!
+//! Acceptance gates (ISSUE 10):
+//! - telemetry-on sustained submit throughput >= 0.9x telemetry-off
+//!   (0.85x in --quick, where the short burst amplifies timer noise);
+//! - results are bit-identical between the two series job-for-job
+//!   (telemetry never touches the data path);
+//! - `GET /metrics` answers 200 with a parseable body while the burst
+//!   is in flight;
+//! - every job of the on-series assembles a span (the overhead number
+//!   is measuring a live plane, not a disarmed one).
+//!
+//! Emits BENCH_telemetry.json.
+
+use std::io::{Read, Write};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use photonic_randnla::bench::{self, Gate, Summary};
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Job, MetricsServer, Policy, PoolConfig,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::ephemeral_loopback;
+
+fn coordinator(telemetry: bool) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            max_wait: Duration::from_micros(50),
+            noise: NoiseModel::ideal(),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        telemetry,
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// The seeded burst both series share: `submits` small dense
+/// projections (batcher-merge-friendly, so the per-job cost is
+/// coordination — exactly where telemetry overhead would show).
+fn burst(seed: u64, submits: usize) -> Vec<Mat> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..submits).map(|_| Mat::gaussian(64, 2, 1.0, &mut rng)).collect()
+}
+
+/// Submit the whole burst, then drain; returns (ns/job, result bits).
+fn run_burst(c: &Coordinator, jobs: &[Mat], m: usize) -> (f64, Vec<u64>) {
+    let t0 = Instant::now();
+    let tickets: Vec<_> = jobs
+        .iter()
+        .map(|x| c.submit(Job::Projection { data: x.clone(), m }))
+        .collect();
+    let bits: Vec<u64> = tickets
+        .into_iter()
+        .map(|t| {
+            let p = t.wait().expect("projection").payload;
+            let m = p.matrix().unwrap();
+            m.data.iter().fold(0u64, |acc, v| acc.wrapping_mul(0x100000001b3).wrapping_add(v.to_bits()))
+        })
+        .collect();
+    (t0.elapsed().as_nanos() as f64 / jobs.len() as f64, bits)
+}
+
+/// One blocking HTTP/1.1 scrape against the metrics endpoint.
+fn scrape(addr: &std::net::SocketAddr) -> (Duration, String) {
+    let t0 = Instant::now();
+    let mut s = std::net::TcpStream::connect_timeout(addr, Duration::from_secs(5))
+        .expect("connect scrape endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n")
+        .expect("send scrape");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read scrape");
+    (t0.elapsed(), resp)
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let submits = if quick { 160 } else { 480 };
+    let m = 24usize;
+    let jobs = burst(71, submits);
+
+    println!("== telemetry overhead: {submits} x (64 x 2, m = {m}) projection submits ==");
+
+    // -- telemetry off (seed serving plane) ---------------------------
+    let c_off = coordinator(false);
+    let (off_ns, off_bits) = run_burst(&c_off, &jobs, m);
+    println!("telemetry off: {:.1}us/job", off_ns / 1e3);
+    c_off.shutdown();
+
+    // -- telemetry on, scrape endpoint live ---------------------------
+    let c_on = coordinator(true);
+    let registry = c_on.telemetry().expect("telemetry armed").clone();
+    let render = {
+        let registry = registry.clone();
+        std::sync::Arc::new(move || registry.render())
+    };
+    let srv = MetricsServer::start(&ephemeral_loopback(), render).expect("metrics endpoint");
+    let addr = srv.addr();
+
+    let (on_ns, on_bits) = run_burst(&c_on, &jobs, m);
+    println!("telemetry on : {:.1}us/job (scrape endpoint at http://{addr}/metrics)", on_ns / 1e3);
+
+    // Scrape while a second (untimed) burst is in flight: the endpoint
+    // must answer from under load, not just at rest.
+    let inflight: Vec<_> = jobs
+        .iter()
+        .take(submits / 2)
+        .map(|x| c_on.submit(Job::Projection { data: x.clone(), m }))
+        .collect();
+    let (scrape_dt, resp) = scrape(&addr);
+    let scrape_ok = resp.starts_with("HTTP/1.1 200")
+        && resp.contains("photon_jobs_submitted_total")
+        && resp.contains("photon_stage_duration_us_bucket");
+    println!("scrape under load: {:.1}ms, 200 + families present = {scrape_ok}", scrape_dt.as_secs_f64() * 1e3);
+    for t in inflight {
+        t.wait().expect("inflight projection");
+    }
+
+    c_on.events().sync();
+    let spans = registry.spans_completed();
+    let jobs_run = c_on.metrics.completed.load(Ordering::Relaxed);
+    println!("spans assembled: {spans} / {jobs_run} completed jobs");
+    srv.shutdown();
+    c_on.shutdown();
+
+    // Identical seeds and operators: telemetry must never perturb data.
+    let bits_identical = off_bits == on_bits;
+
+    let rows = vec![
+        Summary::flat(format!("telemetry off submit+drain m={m}"), submits as u64, off_ns),
+        Summary::flat(format!("telemetry on  submit+drain m={m}"), submits as u64, on_ns),
+    ];
+    bench::report("telemetry plane overhead", &rows);
+
+    let ratio = off_ns / on_ns; // throughput_on / throughput_off
+    let floor = if quick { 0.85 } else { 0.90 };
+    println!("\nheadline: telemetry-on serves at {ratio:.2}x the telemetry-off throughput");
+    let gates = vec![
+        Gate::new(
+            "telemetry-on throughput vs off",
+            ratio >= floor,
+            format!("{ratio:.2}x (need >= {floor}x)"),
+        ),
+        Gate::new(
+            "data path untouched (bitwise)",
+            bits_identical,
+            format!("job-for-job result bits identical = {bits_identical}"),
+        ),
+        Gate::new(
+            "scrape responds under load",
+            scrape_ok,
+            format!("{:.1}ms round trip", scrape_dt.as_secs_f64() * 1e3),
+        ),
+        Gate::new(
+            "spans assembled for the whole burst",
+            spans >= jobs_run,
+            format!("{spans} spans / {jobs_run} jobs"),
+        ),
+    ];
+    bench::finish("telemetry", &rows, &gates);
+}

@@ -42,7 +42,7 @@
 //! results.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::events::{Event, EventLog};
@@ -182,6 +182,10 @@ pub struct SketchCache {
     store: Arc<OperandStore>,
     metrics: Arc<Metrics>,
     events: Arc<EventLog>,
+    /// Telemetry switch: when set, [`SketchCache::lookup_for`] journals
+    /// a [`Event::CacheProbe`] per consulted lookup for the span plane.
+    /// Off (the default), probes journal nothing.
+    telemetry: AtomicBool,
 }
 
 impl SketchCache {
@@ -200,7 +204,13 @@ impl SketchCache {
             store,
             metrics,
             events,
+            telemetry: AtomicBool::new(false),
         }
+    }
+
+    /// Enable/disable cache-probe telemetry events.
+    pub fn set_telemetry(&self, on: bool) {
+        self.telemetry.store(on, Ordering::Relaxed);
     }
 
     /// True when a byte budget was configured.
@@ -266,6 +276,21 @@ impl SketchCache {
             self.metrics.cache_coalesced.fetch_add(1, Ordering::Relaxed);
             st = self.resolved.wait(st).unwrap();
         }
+    }
+
+    /// [`SketchCache::lookup`] attributed to a job: when telemetry is
+    /// on and the cache was actually consulted (enabled, keyed, not
+    /// bypassed), journals the verdict as [`Event::CacheProbe`] so the
+    /// job's span carries its cache stage. Identical to `lookup`
+    /// otherwise.
+    pub fn lookup_for(self: &Arc<Self>, job: u64, key: Option<SketchKey>, bypass: bool) -> Lookup {
+        let consulted = key.is_some() && self.enabled() && !bypass;
+        let out = self.lookup(key, bypass);
+        if consulted && self.telemetry.load(Ordering::Relaxed) {
+            let hit = matches!(out, Lookup::Hit(_));
+            self.events.append(Event::CacheProbe { job, hit });
+        }
+        out
     }
 
     /// Park a computed artifact (leader path; called via
@@ -550,6 +575,24 @@ mod tests {
             assert_eq!(w.join().unwrap(), 64);
         }
         assert_eq!(cache.len(), 1, "one computation served every requester");
+    }
+
+    #[test]
+    fn lookup_for_journals_probes_only_when_telemetry_is_on() {
+        let (cache, store, ev) = harness(1 << 20);
+        let src = store.insert(mat(8, 4)).unwrap();
+        let k = SketchKey { source: Source::Operand(src), ..key_for(&cache, 0, 8) };
+        // Telemetry off: the lookup behaves exactly like `lookup`.
+        match cache.lookup_for(1, Some(k), false) {
+            Lookup::Miss(Some(g)) => g.publish(vec![mat(9, 8)], Device::Host),
+            _ => panic!("cold lookup must lead"),
+        }
+        let before = ev.len(); // SketchComputed only — no probe event
+        cache.set_telemetry(true);
+        assert!(matches!(cache.lookup_for(2, Some(k), false), Lookup::Hit(_)));
+        assert_eq!(ev.len(), before + 1, "consulted lookup journals one probe");
+        assert!(matches!(cache.lookup_for(3, None, false), Lookup::Miss(None)));
+        assert_eq!(ev.len(), before + 1, "keyless lookups never consult the cache");
     }
 
     #[test]

@@ -42,7 +42,7 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt;
 use std::net::TcpStream;
 use std::ops::Range;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -337,6 +337,9 @@ pub struct ClusterPlane {
     /// Signature operator base seed every node draws from.
     seed: u64,
     default_chunk_rows: usize,
+    /// Telemetry gate: off (the default) journals no worker-side stage
+    /// events — the pre-telemetry plane, bitwise.
+    telemetry: AtomicBool,
 }
 
 impl ClusterPlane {
@@ -355,7 +358,15 @@ impl ClusterPlane {
             events,
             seed,
             default_chunk_rows: default_chunk_rows.max(1),
+            telemetry: AtomicBool::new(false),
         }
+    }
+
+    /// Arm worker-side stage journaling (`WorkerSlot`, `WorkerSealed`,
+    /// cluster-stream `StreamSealed`). Off by default so the disabled
+    /// plane matches the pre-telemetry behaviour bit-for-bit.
+    pub fn set_telemetry(&self, on: bool) {
+        self.telemetry.store(on, Ordering::Relaxed);
     }
 
     /// Register a dialed-in worker connection. Returns the worker id
@@ -573,6 +584,10 @@ impl ClusterPlane {
     /// reduction runs and the registry slot is fulfilled. Failures and
     /// the barrier timeout surface typed — never a hang.
     pub fn seal(&self, id: StreamId) -> Result<(), StreamError> {
+        let clock = self
+            .telemetry
+            .load(Ordering::Relaxed)
+            .then(Instant::now);
         let mut sends: Vec<(u64, Arc<Mutex<TcpStream>>, Frame)> = Vec::new();
         {
             let mut inner = self.inner.lock().unwrap();
@@ -672,6 +687,12 @@ impl ClusterPlane {
             StreamError::Cluster(e)
         })?;
         self.metrics.summary_merges.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = clock {
+            self.events.append(Event::StreamSealed {
+                stream: id.0,
+                dur_us: t0.elapsed().as_micros() as u64,
+            });
+        }
         self.streams.fulfill_deferred(id, sealed)
     }
 
@@ -702,7 +723,19 @@ impl ClusterPlane {
     /// Route one worker-role frame from a connection's read loop.
     pub fn worker_frame(&self, worker: u64, frame: Frame) {
         match frame {
-            Frame::SlotSummary { stream, slot, r0, r1, chunks, fro2, arm, y_arm, sa, yt } => {
+            Frame::SlotSummary {
+                stream,
+                slot,
+                r0,
+                r1,
+                chunks,
+                fro2,
+                arm,
+                y_arm,
+                sa,
+                yt,
+                ingest_us,
+            } => {
                 let parsed = (|| -> Result<PartSummary, ClusterError> {
                     Ok(PartSummary {
                         r0: r0 as usize,
@@ -717,10 +750,19 @@ impl ClusterPlane {
                     })
                 })();
                 let mut inner = self.inner.lock().unwrap();
+                // Resolve the worker's display name before the stream
+                // borrow; the journal itself happens after the lock drops.
+                let tele_name = self
+                    .telemetry
+                    .load(Ordering::Relaxed)
+                    .then(|| inner.workers.get(&worker).map(|l| l.name.clone()))
+                    .flatten();
+                let mut journal = None;
                 if let Some(st) = inner.streams.get_mut(&stream) {
                     match parsed {
                         Ok(p) => {
                             st.collected.insert(slot as usize, p);
+                            journal = tele_name;
                         }
                         Err(e) => {
                             st.failed = Some(e.clone());
@@ -732,11 +774,26 @@ impl ClusterPlane {
                     }
                 }
                 drop(inner);
+                if let Some(name) = journal {
+                    self.events.append(Event::WorkerSlot {
+                        stream,
+                        worker: name,
+                        slot,
+                        rows: (r1.saturating_sub(r0)) as usize,
+                        ingest_us,
+                    });
+                }
                 self.barrier.notify_all();
             }
-            Frame::PartitionSealed { stream, epoch: _, fd_bound, fd } => {
+            Frame::PartitionSealed { stream, epoch: _, fd_bound, fd, seal_us } => {
                 let fd_mat = fd.to_mat();
                 let mut inner = self.inner.lock().unwrap();
+                let tele_name = self
+                    .telemetry
+                    .load(Ordering::Relaxed)
+                    .then(|| inner.workers.get(&worker).map(|l| l.name.clone()))
+                    .flatten();
+                let mut journal = None;
                 if let Some(st) = inner.streams.get_mut(&stream) {
                     match fd_mat {
                         Ok(mat) => {
@@ -763,6 +820,7 @@ impl ClusterPlane {
                                 },
                             );
                             st.sealed_acks.insert(worker);
+                            journal = tele_name;
                         }
                         Err(e) => {
                             let err = ClusterError::Protocol(e.to_string());
@@ -775,6 +833,9 @@ impl ClusterPlane {
                     }
                 }
                 drop(inner);
+                if let Some(name) = journal {
+                    self.events.append(Event::WorkerSealed { stream, worker: name, seal_us });
+                }
                 self.barrier.notify_all();
             }
             Frame::PartitionFreed { .. } => {

@@ -32,12 +32,15 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::cache::SketchKey;
+use super::metrics::Metrics;
 use super::request::{Device, Priority};
 use crate::linalg::Precision;
+use crate::perfmodel::SketchKind;
 
 /// One journaled job-lifecycle event. Events are cheap to clone: the
 /// largest payload is a copyable [`SketchKey`].
@@ -73,6 +76,45 @@ pub enum Event {
     /// A map worker's connection died; streams holding its partitions
     /// were poisoned with a typed [`ClusterError`](super::ClusterError).
     WorkerLost { worker: String },
+    // --- telemetry stage events -------------------------------------
+    // Journaled only when the telemetry plane is enabled
+    // (`serve --metrics-listen` / `--trace-out`); with telemetry off,
+    // none of these are ever constructed and the journal is bit-for-bit
+    // the pre-telemetry stream.
+    /// A job left the queue for a worker thread; `wait_us` is its
+    /// queue residency.
+    Dequeued { job: u64, wait_us: u64 },
+    /// The sketch cache answered a job's lookup.
+    CacheProbe { job: u64, hit: bool },
+    /// A job's merged batch came back from a device arm: the measured
+    /// device wall time attributed to this job.
+    Projected { job: u64, arm: Device, tier: Precision, cols: usize, device_us: u64 },
+    /// A flushed batch finished executing: the scheduler's predicted
+    /// latency vs measured wall time, keyed by (arm, tier, sketch kind)
+    /// for the perfmodel drift auditor.
+    BatchExecuted {
+        arm: Device,
+        tier: Precision,
+        sketch: SketchKind,
+        cols: usize,
+        shards: usize,
+        predicted_us: u64,
+        measured_us: u64,
+    },
+    /// A streamed chunk was ingested and its projection passes folded.
+    StreamIngest { stream: u64, rows: usize, dur_us: u64 },
+    /// A stream was sealed: summaries compressed (or cluster-reduced)
+    /// into a servable `SealedStream`.
+    StreamSealed { stream: u64, dur_us: u64 },
+    /// A map worker pushed one merge slot's summaries; `ingest_us` is
+    /// the worker-side wall time it reported for the slot.
+    WorkerSlot { stream: u64, worker: String, slot: u64, rows: usize, ingest_us: u64 },
+    /// A map worker sealed its partition; `seal_us` is the worker-side
+    /// seal wall time it reported.
+    WorkerSealed { stream: u64, worker: String, seal_us: u64 },
+    /// The network front door handled one client frame:
+    /// receive-to-reply wall time by frame kind.
+    WireHandled { tenant: String, kind: &'static str, dur_us: u64 },
 }
 
 struct LogState {
@@ -101,6 +143,12 @@ pub struct EventLog {
     advanced: Condvar,
     cap: usize,
     projectors: Mutex<Vec<ProjectorSlot>>,
+    /// Optional metrics sink: when attached, append stalls (ring full,
+    /// slowest projector a full buffer behind) bump
+    /// `event_log_blocked` / `event_log_block_us` so a lagging
+    /// projector is observable instead of silently throttling the
+    /// serving plane.
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 /// A materialised view over the event stream. `apply` is called once
@@ -118,7 +166,15 @@ impl EventLog {
             advanced: Condvar::new(),
             cap: cap.max(1),
             projectors: Mutex::new(Vec::new()),
+            metrics: OnceLock::new(),
         }
+    }
+
+    /// Attach the serving plane's metrics so append stalls are counted
+    /// (`event_log_blocked` / `event_log_block_us`). Idempotent — the
+    /// first attachment wins.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
     }
 
     fn min_cursor(&self) -> u64 {
@@ -150,7 +206,17 @@ impl EventLog {
             if st.ring.len() < self.cap || st.closed {
                 break;
             }
+            // The ring is full and the slowest projector still needs
+            // the oldest entry: this append stalls. Count the stall and
+            // its duration so backpressure from a slow projector shows
+            // up in `Metrics::report` instead of staying silent.
+            let stalled = Instant::now();
             st = self.advanced.wait(st).unwrap();
+            if let Some(m) = self.metrics.get() {
+                m.event_log_blocked.fetch_add(1, Ordering::Relaxed);
+                m.event_log_block_us
+                    .fetch_add(stalled.elapsed().as_micros() as u64, Ordering::Relaxed);
+            }
         }
         let seq = st.next;
         st.next += 1;
@@ -472,5 +538,30 @@ mod tests {
         assert_eq!(seq, 1);
         log.sync();
         assert_eq!(rec.seen.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn append_stalls_on_a_slow_projector_are_counted() {
+        /// A projector slow enough that a cap-1 ring must stall the
+        /// appender at least once over 8 events.
+        struct Slow;
+        impl Projector for Slow {
+            fn apply(&self, _seq: u64, _event: &Event) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+        let log = Arc::new(EventLog::new(1));
+        let metrics = Arc::new(Metrics::new());
+        log.attach_metrics(metrics.clone());
+        log.spawn("slow", Arc::new(Slow) as Arc<dyn Projector>);
+        for job in 0..8 {
+            log.append(submitted(job));
+        }
+        log.sync();
+        log.close();
+        assert!(
+            metrics.event_log_blocked.load(Ordering::Relaxed) > 0,
+            "a full ring behind a slow projector must count its stalls"
+        );
     }
 }

@@ -9,6 +9,55 @@ use crate::coordinator::request::{Device, Priority};
 /// Exponential latency histogram (microseconds, powers of two).
 const BUCKETS: usize = 32;
 
+/// Cap on retained percentile samples per histogram/tenant. Below it
+/// every sample is kept (exact percentiles); beyond it a deterministic
+/// sampling reservoir keeps memory fixed under sustained traffic.
+const RESERVOIR_CAP: usize = 4096;
+
+/// SplitMix64 finaliser — the deterministic "coin" the reservoir flips
+/// per sample, so admission under load is reproducible run to run.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Fixed-size sampling reservoir (Vitter's Algorithm R, derandomised
+/// through [`splitmix64`] of the sample counter). Below
+/// [`RESERVOIR_CAP`] it retains every sample, so small-run percentiles
+/// are exact — the regime the latency tests pin; at capacity the i-th
+/// sample replaces a pseudo-uniform slot with probability cap/i, so the
+/// retained set stays a uniform sample of the full stream at O(1)
+/// memory.
+#[derive(Default)]
+struct Reservoir {
+    seen: u64,
+    slots: Vec<u64>,
+}
+
+impl Reservoir {
+    fn push(&mut self, us: u64) {
+        self.seen += 1;
+        if self.slots.len() < RESERVOIR_CAP {
+            self.slots.push(us);
+            return;
+        }
+        let j = (splitmix64(self.seen) % self.seen) as usize;
+        if j < RESERVOIR_CAP {
+            self.slots[j] = us;
+        }
+    }
+
+    fn percentile(&self, p: f64) -> Option<f64> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.slots.iter().map(|&x| x as f64).collect();
+        Some(crate::stats::percentile(&mut v, p))
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
@@ -87,6 +136,11 @@ pub struct Metrics {
     /// Seal-time summary-merge reductions executed (the cluster plane's
     /// "summary_merge" job kind).
     pub summary_merges: AtomicU64,
+    /// Appends that blocked on the event-log ring being full (a slow
+    /// projector stalling producers — previously silent).
+    pub event_log_blocked: AtomicU64,
+    /// Total microseconds producers spent blocked in event-log appends.
+    pub event_log_block_us: AtomicU64,
     latency_hist: LatencyHist,
     /// Submit→pop wait of Interactive-class jobs (µs), stamped at pop.
     wait_interactive: LatencyHist,
@@ -107,32 +161,40 @@ struct TenantStats {
     busy: u64,
     quota: u64,
     /// Queue waits (µs), stamped at pop like the per-class histograms.
-    waits: Vec<u64>,
+    waits: Reservoir,
 }
 
 #[derive(Default)]
 struct LatencyHist {
     buckets: [AtomicU64; BUCKETS],
-    samples: Mutex<Vec<u64>>,
+    /// Running sum of recorded values (µs) — the `_sum` series of the
+    /// Prometheus histogram rendered by the telemetry plane.
+    sum_us: AtomicU64,
+    samples: Mutex<Reservoir>,
 }
 
 impl LatencyHist {
     fn record(&self, us: u64) {
         let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        let mut s = self.samples.lock().unwrap();
-        if s.len() < 100_000 {
-            s.push(us);
-        }
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.samples.lock().unwrap().push(us);
     }
 
     fn percentile(&self, p: f64) -> Option<f64> {
-        let s = self.samples.lock().unwrap();
-        if s.is_empty() {
-            return None;
+        self.samples.lock().unwrap().percentile(p)
+    }
+
+    /// Per-bucket counts (bucket i holds samples with MSB position i,
+    /// i.e. values in [2^(i-1), 2^i)) plus the running value sum —
+    /// everything the exposition renderer needs for a cumulative
+    /// Prometheus histogram.
+    fn snapshot(&self) -> ([u64; BUCKETS], u64) {
+        let mut b = [0u64; BUCKETS];
+        for (i, slot) in self.buckets.iter().enumerate() {
+            b[i] = slot.load(Ordering::Relaxed);
         }
-        let mut v: Vec<f64> = s.iter().map(|&x| x as f64).collect();
-        Some(crate::stats::percentile(&mut v, p))
+        (b, self.sum_us.load(Ordering::Relaxed))
     }
 }
 
@@ -207,22 +269,13 @@ impl Metrics {
     /// Queue wait of one of `tenant`'s jobs, stamped by the queue at
     /// pop (same instant as the per-class histograms).
     pub fn record_tenant_wait_us(&self, tenant: &str, us: u64) {
-        self.tenant_mut(tenant, |t| {
-            if t.waits.len() < 100_000 {
-                t.waits.push(us);
-            }
-        });
+        self.tenant_mut(tenant, |t| t.waits.push(us));
     }
 
     /// Queue-wait percentile of one tenant (None if it never popped).
     pub fn tenant_wait_percentile_us(&self, tenant: &str, p: f64) -> Option<f64> {
         let map = self.tenants.lock().unwrap();
-        let waits = &map.get(tenant)?.waits;
-        if waits.is_empty() {
-            return None;
-        }
-        let mut v: Vec<f64> = waits.iter().map(|&x| x as f64).collect();
-        Some(crate::stats::percentile(&mut v, p))
+        map.get(tenant)?.waits.percentile(p)
     }
 
     /// Rows forwarded to (and acknowledged as ingested by) one worker —
@@ -235,6 +288,34 @@ impl Metrics {
     /// Per-worker ingest rows, sorted by worker name.
     pub fn worker_rows(&self) -> Vec<(String, u64)> {
         self.workers.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Served-latency histogram snapshot: per-power-of-two bucket
+    /// counts (bucket i covers [2^(i-1), 2^i) µs) and the value sum —
+    /// consumed by the telemetry plane's Prometheus renderer.
+    pub fn latency_snapshot(&self) -> ([u64; 32], u64) {
+        self.latency_hist.snapshot()
+    }
+
+    /// Queue-wait histogram snapshot of one scheduling class (same
+    /// layout as [`Metrics::latency_snapshot`]).
+    pub fn queue_wait_snapshot(&self, class: Priority) -> ([u64; 32], u64) {
+        match class {
+            Priority::Interactive => self.wait_interactive.snapshot(),
+            Priority::Batch => self.wait_batch.snapshot(),
+        }
+    }
+
+    /// Per-tenant counter snapshot, sorted by tenant name:
+    /// `(name, submits, operand_bytes, busy, quota)` — the labelled
+    /// series behind the `tenant[...]` report lines.
+    pub fn tenant_counts(&self) -> Vec<(String, u64, u64, u64, u64)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, t)| (k.clone(), t.submits, t.operand_bytes, t.busy, t.quota))
+            .collect()
     }
 
     pub fn device_counts(&self) -> (u64, u64, u64) {
@@ -267,6 +348,7 @@ impl Metrics {
              cache: bytes={} hits={} misses={} coalesced={} evictions={} \
              deduped={} proj_exec={} \
              cluster: workers={} streams={} rows_fwd={} merges={} \
+             events: log_blocked={} log_block_us={} \
              wait_i_p50={}us wait_b_p50={}us p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -301,6 +383,8 @@ impl Metrics {
             self.cluster_streams.load(Ordering::Relaxed),
             self.cluster_rows_forwarded.load(Ordering::Relaxed),
             self.summary_merges.load(Ordering::Relaxed),
+            self.event_log_blocked.load(Ordering::Relaxed),
+            self.event_log_block_us.load(Ordering::Relaxed),
             self.queue_wait_percentile_us(Priority::Interactive, 50.0).unwrap_or(0.0) as u64,
             self.queue_wait_percentile_us(Priority::Batch, 50.0).unwrap_or(0.0) as u64,
             self.latency_percentile_us(50.0).unwrap_or(0.0) as u64,
@@ -308,12 +392,7 @@ impl Metrics {
         );
         let map = self.tenants.lock().unwrap();
         for (name, t) in map.iter() {
-            let p50 = if t.waits.is_empty() {
-                0
-            } else {
-                let mut v: Vec<f64> = t.waits.iter().map(|&x| x as f64).collect();
-                crate::stats::percentile(&mut v, 50.0) as u64
-            };
+            let p50 = t.waits.percentile(50.0).unwrap_or(0.0) as u64;
             out.push_str(&format!(
                 "\ntenant[{name}]: submits={} operand_bytes={} busy={} quota={} wait_p50={p50}us",
                 t.submits, t.operand_bytes, t.busy, t.quota
@@ -471,6 +550,79 @@ mod tests {
         assert_eq!(
             m.worker_rows(),
             vec![("127.0.0.1:9001".into(), 384), ("127.0.0.1:9002".into(), 128)]
+        );
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_exact_below_capacity() {
+        // Below capacity: every sample retained, percentiles exact.
+        let mut r = Reservoir::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            r.push(us);
+        }
+        assert_eq!(r.slots.len(), 5);
+        assert!((r.percentile(50.0).unwrap() - 300.0).abs() < 1.0);
+        // Far past capacity: memory stays capped and percentiles keep
+        // tracking the stream (uniform values -> p50 within the range).
+        for us in 0..(3 * RESERVOIR_CAP as u64) {
+            r.push(us);
+        }
+        assert_eq!(r.slots.len(), RESERVOIR_CAP);
+        let p50 = r.percentile(50.0).unwrap();
+        assert!(p50 < 3.0 * RESERVOIR_CAP as f64, "{p50}");
+    }
+
+    #[test]
+    fn latency_percentiles_survive_sustained_traffic() {
+        let m = Metrics::new();
+        for us in 0..(2 * RESERVOIR_CAP as u64) {
+            m.record_latency_us(us);
+        }
+        // Reservoir keeps a uniform sample: p50 lands mid-stream, not
+        // pinned to the oldest prefix like the old first-N cap.
+        let p50 = m.latency_percentile_us(50.0).unwrap();
+        assert!(p50 > 0.1 * RESERVOIR_CAP as f64, "{p50}");
+        assert!(p50 < 1.9 * RESERVOIR_CAP as f64, "{p50}");
+    }
+
+    #[test]
+    fn event_log_stall_counters_report() {
+        let m = Metrics::new();
+        let r = m.report();
+        assert!(r.contains("events: log_blocked=0 log_block_us=0"), "{r}");
+        m.event_log_blocked.fetch_add(3, Ordering::Relaxed);
+        m.event_log_block_us.fetch_add(1500, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("events: log_blocked=3 log_block_us=1500"), "{r}");
+    }
+
+    #[test]
+    fn histogram_snapshots_expose_buckets_and_sums() {
+        let m = Metrics::new();
+        m.record_latency_us(100);
+        m.record_latency_us(200);
+        let (buckets, sum) = m.latency_snapshot();
+        assert_eq!(buckets.iter().sum::<u64>(), 2);
+        assert_eq!(sum, 300);
+        m.record_queue_wait_us(Priority::Batch, 7);
+        let (wb, ws) = m.queue_wait_snapshot(Priority::Batch);
+        assert_eq!(wb.iter().sum::<u64>(), 1);
+        assert_eq!(ws, 7);
+        let (wi, _) = m.queue_wait_snapshot(Priority::Interactive);
+        assert_eq!(wi.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn tenant_counts_snapshot_sorted() {
+        let m = Metrics::new();
+        m.tenant_submit("zeta");
+        m.tenant_operand_bytes("zeta", 64);
+        m.tenant_submit("acme");
+        m.tenant_busy("acme");
+        m.tenant_quota_rejected("acme");
+        assert_eq!(
+            m.tenant_counts(),
+            vec![("acme".into(), 1, 0, 1, 1), ("zeta".into(), 1, 64, 0, 0)]
         );
     }
 

@@ -61,7 +61,11 @@
 //! - [`cluster`] — the map/reduce scale-out plane: merge-slot stream
 //!   partitioning across `photon worker` nodes, the seal-time summary
 //!   barrier, and the FD/sketch tree reduction that folds worker parts
-//!   into one servable [`SealedStream`](stream::SealedStream).
+//!   into one servable [`SealedStream`](stream::SealedStream);
+//! - [`telemetry`] — the observability plane: per-job span assembly
+//!   from the event log, Prometheus text exposition (scraped over a
+//!   std-only `GET /metrics` responder or the wire `Metrics` frame),
+//!   Chrome `trace_event` output, and perfmodel drift auditing.
 //!
 //! See `docs/architecture.md` for the full request-path walkthrough and
 //! the "Sessions, handles, and plans" migration guide.
@@ -80,6 +84,7 @@ pub mod server;
 pub mod shard;
 pub mod store;
 pub mod stream;
+pub mod telemetry;
 pub mod tenant;
 pub mod wire;
 
@@ -112,5 +117,8 @@ pub use crate::randnla::lstsq::LsqrOpts;
 pub use shard::{recombine, ShardCell, ShardPlan};
 pub use store::{mat_bytes, OperandId, OperandStore, StoreError};
 pub use stream::{SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry};
+pub use telemetry::{
+    render_metrics_text, DriftAuditor, JobSpan, MetricsServer, TelemetryRegistry,
+};
 pub use tenant::{QosClass, Tenant, TenantRegistry};
 pub use wire::{Frame, StatusCode, WireError, WireStatus, WIRE_VERSION};

@@ -25,10 +25,11 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::cache::Source;
+use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{JobError, JobResponse, Priority, ResolvedJob, SubmitError};
 use crate::linalg::Precision;
@@ -80,6 +81,11 @@ pub(crate) struct JobQueue {
     space: Condvar,
     cap: usize,
     metrics: Arc<Metrics>,
+    /// Telemetry journal: when attached, every pop journals a
+    /// [`Event::Dequeued`] stage event (queue residency) for the span
+    /// plane. Unset (the default), pops journal nothing — zero extra
+    /// work or allocation on the pre-telemetry path.
+    events: OnceLock<Arc<EventLog>>,
 }
 
 impl JobQueue {
@@ -95,7 +101,14 @@ impl JobQueue {
             space: Condvar::new(),
             cap: cap.max(1),
             metrics,
+            events: OnceLock::new(),
         }
+    }
+
+    /// Enable telemetry: journal a `Dequeued` stage event per pop into
+    /// `events`. First call wins; idempotent.
+    pub fn enable_telemetry(&self, events: Arc<EventLog>) {
+        let _ = self.events.set(events);
     }
 
     /// Admit a job, or refuse with typed backpressure. On refusal the
@@ -200,6 +213,9 @@ impl JobQueue {
         self.metrics.record_queue_wait_us(job.priority, us);
         if let Some(t) = &job.tenant {
             self.metrics.record_tenant_wait_us(t, us);
+        }
+        if let Some(events) = self.events.get() {
+            events.append(Event::Dequeued { job: job.id, wait_us: us });
         }
     }
 
@@ -429,6 +445,19 @@ mod tests {
         assert!(m.queue_wait_percentile_us(Priority::Batch, 50.0).is_none());
         q.pop();
         assert!(m.queue_wait_percentile_us(Priority::Batch, 50.0).is_some());
+    }
+
+    #[test]
+    fn telemetry_pop_journals_dequeued() {
+        let q = queue(4);
+        let log = Arc::new(EventLog::new(8));
+        q.push(job(1, Priority::Batch).0).unwrap();
+        q.pop().unwrap();
+        assert!(log.is_empty(), "no journal before telemetry is enabled");
+        q.enable_telemetry(log.clone());
+        q.push(job(2, Priority::Batch).0).unwrap();
+        q.pop().unwrap();
+        assert_eq!(log.len(), 1, "each pop journals exactly one Dequeued");
     }
 
     #[test]

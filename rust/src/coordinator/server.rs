@@ -44,6 +44,7 @@ use crate::coordinator::store::{OperandId, OperandStore, StoreError};
 use crate::coordinator::stream::{
     SealedStream, StreamError, StreamId, StreamOpts, StreamRegistry,
 };
+use crate::coordinator::telemetry::TelemetryRegistry;
 use crate::linalg::{self, matmul_tn, Mat, Precision};
 use crate::perfmodel::SketchKind;
 use crate::randnla::adaptive::{rank_for_tol, IncrementalRange};
@@ -94,6 +95,19 @@ pub struct CoordinatorConfig {
     /// entirely: every submission takes the compute path, bit-for-bit
     /// the pre-cache behavior. See [`crate::coordinator::cache`].
     pub cache_quota: usize,
+    /// Master switch of the telemetry plane (CLI `serve
+    /// --metrics-listen` / `--trace-out` turn it on). Enables stage-
+    /// event journaling across the queue, cache, batcher, stream and
+    /// cluster planes and spawns a [`TelemetryRegistry`] projector that
+    /// assembles per-job spans, per-stage histograms and perfmodel
+    /// drift gauges. Off — the default — no stage event is constructed
+    /// anywhere: the serving plane is bit-for-bit and allocation-
+    /// neutral with the pre-telemetry coordinator.
+    pub telemetry: bool,
+    /// Stream completed job spans to this file as Chrome `trace_event`
+    /// JSON (CLI `serve --trace-out FILE`). Implies nothing by itself:
+    /// only honored when `telemetry` is on.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -110,6 +124,8 @@ impl Default for CoordinatorConfig {
             stream_chunk_rows: 256,
             precision: PrecisionPolicy::Requested,
             cache_quota: 0,
+            telemetry: false,
+            trace_out: None,
         }
     }
 }
@@ -141,6 +157,10 @@ pub struct Coordinator {
     arm_tier: Arc<ArmTierView>,
     /// Replayable per-job event trail (projector).
     job_trace: Arc<JobTrace>,
+    /// The telemetry plane (projector): span assembly, stage
+    /// histograms, drift auditing, Prometheus rendering. `None` when
+    /// the plane is disabled.
+    telemetry: Option<Arc<TelemetryRegistry>>,
     next_id: AtomicU64,
     // Keep the engine alive for the coordinator's lifetime.
     _engine: Option<PjrtEngine>,
@@ -195,13 +215,21 @@ impl Coordinator {
         // The result plane comes up before any event source: projectors
         // registered here observe the journal from seq 0.
         let events = Arc::new(EventLog::new(EVENT_LOG_CAP));
+        // Stall accounting (appenders blocked on a slow projector) is
+        // always on: it observes the log itself, not the serving plane.
+        events.attach_metrics(metrics.clone());
         let arm_tier = Arc::new(ArmTierView::new());
         let job_trace = Arc::new(JobTrace::new());
         events.spawn("arm-tier", arm_tier.clone() as Arc<dyn Projector>);
         events.spawn("job-trace", job_trace.clone() as Arc<dyn Projector>);
 
+        // The telemetry master switch also arms the batcher's
+        // per-flush timing (BatchExecuted journal entries).
+        let mut batch = cfg.batch.clone();
+        batch.telemetry |= cfg.telemetry;
+
         let (svc, _batcher_join) = ProjectionService::start(
-            cfg.batch.clone(),
+            batch,
             router,
             pool.clone(),
             handle,
@@ -226,6 +254,27 @@ impl Coordinator {
             events.clone(),
         ));
         let queue = Arc::new(JobQueue::new(cfg.queue_cap, metrics.clone()));
+
+        // Arm the span plane: every event source flips its gate, then
+        // the registry projector joins the journal (from seq 0 — no
+        // span is ever half-observed). The whole block is skipped when
+        // telemetry is off, leaving every gate at its bitwise-identical
+        // disabled default.
+        let telemetry = if cfg.telemetry {
+            queue.enable_telemetry(events.clone());
+            cache.set_telemetry(true);
+            cluster.set_telemetry(true);
+            streams.enable_telemetry(events.clone());
+            let registry = Arc::new(TelemetryRegistry::new(metrics.clone()));
+            if let Some(path) = &cfg.trace_out {
+                registry.trace_to(path)?;
+            }
+            events.spawn("telemetry", registry.clone() as Arc<dyn Projector>);
+            Some(registry)
+        } else {
+            None
+        };
+
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers.max(1) {
             let queue = queue.clone();
@@ -234,10 +283,13 @@ impl Coordinator {
             let metrics = metrics.clone();
             let cache = cache.clone();
             let events = events.clone();
+            let telemetry_on = cfg.telemetry;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{w}"))
-                    .spawn(move || worker_loop(queue, svc, store, metrics, cache, events))
+                    .spawn(move || {
+                        worker_loop(queue, svc, store, metrics, cache, events, telemetry_on)
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -257,6 +309,7 @@ impl Coordinator {
             cache,
             arm_tier,
             job_trace,
+            telemetry,
             next_id: AtomicU64::new(1),
             _engine: engine,
         })
@@ -733,6 +786,13 @@ impl Coordinator {
         &self.job_trace
     }
 
+    /// The telemetry plane's registry (span assembly, Prometheus
+    /// rendering, drift gauges). `None` unless the coordinator was
+    /// started with [`CoordinatorConfig::telemetry`].
+    pub fn telemetry(&self) -> Option<&Arc<TelemetryRegistry>> {
+        self.telemetry.as_ref()
+    }
+
     /// The execution plane's device pool (metrics, chaos testing).
     pub fn pool(&self) -> &DevicePool {
         &self.pool
@@ -764,6 +824,11 @@ impl Coordinator {
         }
         self.events.sync();
         self.events.close();
+        // Every span the workers produced has been projected (the sync
+        // above); close the trace array so the file loads as-is.
+        if let Some(t) = &self.telemetry {
+            t.finish_trace();
+        }
     }
 }
 
@@ -824,6 +889,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     cache: Arc<SketchCache>,
     events: Arc<EventLog>,
+    telemetry: bool,
 ) {
     while let Some(q) = queue.pop() {
         // QoS gates, checked before any device is touched.
@@ -847,18 +913,32 @@ fn worker_loop(
             &store,
             &metrics,
             &cache,
+            q.id,
             &q.job,
             q.precision,
             q.source,
             q.bypass_cache,
         );
         match outcome {
-            Ok((payload, device, batched_cols, aux)) => {
+            Ok((payload, device, batched_cols, device_us, aux)) => {
                 // fetch_add returns the prior count: a coordinator-wide
                 // completion sequence number (QoS ordering observable).
                 let seq = metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let latency_us = q.submitted.elapsed().as_micros() as u64;
                 metrics.record_latency_us(latency_us);
+                // Span-plane stage event: the job touched a device.
+                // Cache-hit jobs report batched_cols 0 and journal no
+                // `Projected` — their span carries zero device stages
+                // (the "hits run zero device passes" observable).
+                if telemetry && batched_cols > 0 {
+                    events.append(Event::Projected {
+                        job: q.id,
+                        arm: device,
+                        tier: q.precision,
+                        cols: batched_cols,
+                        device_us,
+                    });
+                }
                 events.append(Event::Completed { job: q.id, latency_us });
                 let published: Vec<OperandId> = aux.iter().map(|(_, id)| *id).collect();
                 let delivered = q.resp.send(Ok(JobResponse {
@@ -890,9 +970,12 @@ fn worker_loop(
     }
 }
 
-/// What executing one job yields: payload, device, batched columns, and
-/// any auxiliary store handles the job published.
-type ExecOutcome = (Payload, Device, usize, Vec<(&'static str, OperandId)>);
+/// What executing one job yields: payload, device, batched columns,
+/// measured device wall time (µs, summed over sequential passes and
+/// max'd over merged concurrent ones; 0 on cache hits and when
+/// telemetry is off), and any auxiliary store handles the job
+/// published.
+type ExecOutcome = (Payload, Device, usize, u64, Vec<(&'static str, OperandId)>);
 
 /// Decompose one job into projections + host algebra. Operands arrive as
 /// shared `Arc<Mat>`s and stay shared through the projection service —
@@ -917,6 +1000,7 @@ fn execute_job(
     store: &OperandStore,
     metrics: &Metrics,
     cache: &Arc<SketchCache>,
+    id: u64,
     job: &ResolvedJob,
     precision: Precision,
     source: Option<Source>,
@@ -925,7 +1009,7 @@ fn execute_job(
     match job {
         ResolvedJob::Projection { data, m } => {
             let r = svc.project_at(data.clone(), *m, precision)?;
-            Ok((Payload::Matrix(r.result), r.device, r.batch_cols, Vec::new()))
+            Ok((Payload::Matrix(r.result), r.device, r.batch_cols, r.device_us, Vec::new()))
         }
         ResolvedJob::ApproxMatmul { a, b, m } => {
             anyhow::ensure!(a.rows == b.rows, "A and B row mismatch");
@@ -945,14 +1029,18 @@ fn execute_job(
                 Payload::Matrix(approx),
                 ra.device,
                 ra.batch_cols.max(rb.batch_cols),
+                // Both passes merged into one frame batch (or ran
+                // concurrently): max, not sum — the wall time the job
+                // actually spent on devices.
+                ra.device_us.max(rb.device_us),
                 Vec::new(),
             ))
         }
         ResolvedJob::Trace { a, m, estimator } => match estimator {
             TraceEstimator::Hutchinson => {
-                let (b, device, cols) =
-                    symmetric_sketch_cached(svc, cache, source, bypass, 0, a, *m, precision)?;
-                Ok((Payload::Scalar(b.trace()), device, cols, Vec::new()))
+                let (b, device, cols, us) =
+                    symmetric_sketch_cached(svc, cache, id, source, bypass, 0, a, *m, precision)?;
+                Ok((Payload::Scalar(b.trace()), device, cols, us, Vec::new()))
             }
             TraceEstimator::HutchPP => {
                 anyhow::ensure!(a.is_square(), "hutch++ trace needs square input");
@@ -977,14 +1065,15 @@ fn execute_job(
                 // split.range, operator), which the key's `aux` field
                 // pins (aux > 0 keeps it apart from plain symmetric
                 // sketches of the undeflated operand).
-                let (yr, _yr_device, yr_cols) =
-                    range_pass_cached(svc, cache, source, bypass, a, split.range, precision)?;
+                let (yr, _yr_device, yr_cols, yr_us) =
+                    range_pass_cached(svc, cache, id, source, bypass, a, split.range, precision)?;
                 let q = linalg::orthonormalize(&yr.transpose());
                 let head = matmul_tn(&q, &linalg::matmul(a, &q)).trace();
                 let a_def = Arc::new(hutchpp::deflate(a, &q));
-                let (b, device, cols) = symmetric_sketch_cached(
+                let (b, device, cols, resid_us) = symmetric_sketch_cached(
                     svc,
                     cache,
+                    id,
                     source,
                     bypass,
                     split.range,
@@ -996,30 +1085,35 @@ fn execute_job(
                     Payload::Scalar(head + b.trace()),
                     device,
                     yr_cols.max(cols),
+                    // Sequential passes (the residual operand depends
+                    // on the range pass): device time sums.
+                    yr_us + resid_us,
                     Vec::new(),
                 ))
             }
         },
         ResolvedJob::Triangles { adjacency, m } => {
-            let (b, device, cols) =
-                symmetric_sketch_cached(svc, cache, source, bypass, 0, adjacency, *m, precision)?;
+            let (b, device, cols, us) = symmetric_sketch_cached(
+                svc, cache, id, source, bypass, 0, adjacency, *m, precision,
+            )?;
             let t = linalg::trace_cubed(&b) / 6.0;
-            Ok((Payload::Scalar(t), device, cols, Vec::new()))
+            Ok((Payload::Scalar(t), device, cols, us, Vec::new()))
         }
         ResolvedJob::SymmetricSketch { a, m } => {
-            let (b, device, cols) =
-                symmetric_sketch_cached(svc, cache, source, bypass, 0, a, *m, precision)?;
-            Ok((Payload::Matrix(b.as_ref().clone()), device, cols, Vec::new()))
+            let (b, device, cols, us) =
+                symmetric_sketch_cached(svc, cache, id, source, bypass, 0, a, *m, precision)?;
+            Ok((Payload::Matrix(b.as_ref().clone()), device, cols, us, Vec::new()))
         }
         ResolvedJob::TraceOf { b } => {
             anyhow::ensure!(b.is_square(), "trace_of needs a square sketch");
-            Ok((Payload::Scalar(b.trace()), Device::Host, 0, Vec::new()))
+            Ok((Payload::Scalar(b.trace()), Device::Host, 0, 0, Vec::new()))
         }
         ResolvedJob::TrianglesOf { b } => {
             anyhow::ensure!(b.is_square(), "triangles_of needs a square sketch");
             Ok((
                 Payload::Scalar(linalg::trace_cubed(b) / 6.0),
                 Device::Host,
+                0,
                 0,
                 Vec::new(),
             ))
@@ -1030,7 +1124,7 @@ fn execute_job(
             // drives rank selection — the incremental rangefinder.
             // `gate` carries the rangefinder's (tol, ||A||^2, resid^2)
             // readings so rank selection never rescans the operand.
-            let (mut q, mut b, device, batch_cols, gate) = match tol {
+            let (mut q, mut b, device, batch_cols, device_us, gate) = match tol {
                 None => {
                     // Randomization step: Y^T = G A^T through the
                     // service, served from the sketch cache when this
@@ -1040,17 +1134,17 @@ fn execute_job(
                     // all share one cached artifact, and the
                     // deterministic host algebra below reproduces the
                     // cold path bit for bit.
-                    let (y, device, cols) =
-                        range_pass_cached(svc, cache, source, bypass, a, cap, precision)?;
+                    let (y, device, cols, us) =
+                        range_pass_cached(svc, cache, id, source, bypass, a, cap, precision)?;
                     let q = linalg::orthonormalize(&y.transpose());
-                    (q, None, device, cols, None)
+                    (q, None, device, cols, us, None)
                 }
                 Some(t) => {
-                    let (res, device, cols) = adaptive_range_via(
+                    let (res, device, cols, us) = adaptive_range_via(
                         svc, store, metrics, a, ADAPTIVE_RANGE_BLOCK, cap, *t, precision,
                     )?;
                     let gate = Some((*t, res.fro2, res.resid2));
-                    (res.q, Some(res.b), device, cols, gate)
+                    (res.q, Some(res.b), device, cols, us, gate)
                 }
             };
             for _ in 0..*power_iters {
@@ -1102,6 +1196,7 @@ fn execute_job(
                 },
                 device,
                 batch_cols,
+                device_us,
                 aux,
             ))
         }
@@ -1138,6 +1233,7 @@ fn execute_job(
                 Payload::Vector(x),
                 ra.device,
                 ra.batch_cols.max(rb.batch_cols),
+                ra.device_us.max(rb.device_us),
                 Vec::new(),
             ))
         }
@@ -1159,9 +1255,9 @@ fn execute_job(
             // tier the cache key pins — not the submission's.
             let key = source
                 .map(|src| cache.key(src, Artifact::StreamSym, s.rows, *m, Precision::F64));
-            match cache.lookup(key, bypass) {
+            match cache.lookup_for(id, key, bypass) {
                 Lookup::Hit(h) => {
-                    Ok((Payload::Scalar(h.vals[0].trace()), h.device, 0, Vec::new()))
+                    Ok((Payload::Scalar(h.vals[0].trace()), h.device, 0, 0, Vec::new()))
                 }
                 Lookup::Miss(guard) => {
                     // Second half of the symmetric sketch B = (S A Sᵀ)/m:
@@ -1175,7 +1271,13 @@ fn execute_job(
                     if let Some(g) = guard {
                         g.publish(vec![b.clone()], gst.device);
                     }
-                    Ok((Payload::Scalar(b.trace()), gst.device, gst.batch_cols, Vec::new()))
+                    Ok((
+                        Payload::Scalar(b.trace()),
+                        gst.device,
+                        gst.batch_cols,
+                        gst.device_us,
+                        Vec::new(),
+                    ))
                 }
             }
         }
@@ -1226,8 +1328,9 @@ fn execute_job(
                 aux: cap,
                 ..cache.key(src, Artifact::StreamCorange, s.rows, s.sketch_m, Precision::F64)
             });
-            let (sq_res, device, batch_cols) = match cache.lookup(key, bypass) {
-                Lookup::Hit(h) => (h.vals[0].clone(), h.device, 0),
+            let (sq_res, device, batch_cols, device_us) = match cache.lookup_for(id, key, bypass)
+            {
+                Lookup::Hit(h) => (h.vals[0].clone(), h.device, 0, 0),
                 Lookup::Miss(guard) => {
                     let sq = svc.project(q.clone(), s.sketch_m)?;
                     ensure_same_arm(arm, sq.planned, "randsvd(stream)")?;
@@ -1235,7 +1338,7 @@ fn execute_job(
                     if let Some(g) = guard {
                         g.publish(vec![res.clone()], sq.device);
                     }
-                    (res, sq.device, sq.batch_cols)
+                    (res, sq.device, sq.batch_cols, sq.device_us)
                 }
             };
             let x = solve_corange(&sq_res, &s.sa);
@@ -1255,6 +1358,7 @@ fn execute_job(
                 },
                 device,
                 batch_cols,
+                device_us,
                 aux,
             ))
         }
@@ -1290,7 +1394,7 @@ fn execute_job(
             ensure_same_arm(arm, rb.planned, "lstsq(stream)")?;
             let sb: Vec<f64> = (0..rb.result.rows).map(|i| rb.result.at(i, 0)).collect();
             let x = linalg::lstsq(&s.sa, &sb);
-            Ok((Payload::Vector(x), rb.device, rb.batch_cols, Vec::new()))
+            Ok((Payload::Vector(x), rb.device, rb.batch_cols, rb.device_us, Vec::new()))
         }
         ResolvedJob::Nystrom { a, m, rcond } => {
             anyhow::ensure!(a.is_square(), "nystrom needs PSD (square) input");
@@ -1298,13 +1402,13 @@ fn execute_job(
             // the rcond-dependent pinv stays host-side and outside the
             // key, so hits across rcond values share one artifact.
             let key = source.map(|s| cache.key(s, Artifact::Nystrom, a.rows, *m, precision));
-            match cache.lookup(key, bypass) {
+            match cache.lookup_for(id, key, bypass) {
                 Lookup::Hit(h) => {
                     let (ga, core) = (&h.vals[0], &h.vals[1]);
                     let agt = ga.transpose();
                     let core_pinv = crate::randnla::nystrom::pinv(&core.symmetrized(), *rcond);
                     let approx = linalg::matmul(&linalg::matmul(&agt, &core_pinv), ga);
-                    Ok((Payload::Matrix(approx), h.device, 0, Vec::new()))
+                    Ok((Payload::Matrix(approx), h.device, 0, 0, Vec::new()))
                 }
                 Lookup::Miss(guard) => {
                     // (G A)^T = A G^T only holds for symmetric A; a
@@ -1336,6 +1440,9 @@ fn execute_job(
                         Payload::Matrix(approx),
                         ga.device,
                         ga.batch_cols.max(core.batch_cols),
+                        // Sequential passes (the core projects the
+                        // first pass's output): device time sums.
+                        ga.device_us + core.device_us,
                         Vec::new(),
                     ))
                 }
@@ -1389,7 +1496,7 @@ fn symmetric_sketch_via(
     a: &Arc<Mat>,
     m: usize,
     precision: Precision,
-) -> Result<(Mat, Device, usize)> {
+) -> Result<(Mat, Device, usize, u64)> {
     anyhow::ensure!(a.is_square(), "symmetric sketch needs square input");
     let s = svc.project_at(a.clone(), m, precision)?;
     let gst = svc.project_at(s.result.transpose(), m, precision)?;
@@ -1398,6 +1505,8 @@ fn symmetric_sketch_via(
         gst.result.transpose().scale(1.0 / m as f64),
         s.device,
         s.batch_cols.max(gst.batch_cols),
+        // The second pass projects the first's output: sequential, sum.
+        s.device_us + gst.device_us,
     ))
 }
 
@@ -1412,24 +1521,25 @@ fn symmetric_sketch_via(
 fn symmetric_sketch_cached(
     svc: &ProjectionService,
     cache: &Arc<SketchCache>,
+    job: u64,
     source: Option<Source>,
     bypass: bool,
     aux: usize,
     a: &Arc<Mat>,
     m: usize,
     precision: Precision,
-) -> Result<(Arc<Mat>, Device, usize)> {
+) -> Result<(Arc<Mat>, Device, usize, u64)> {
     let key = source
         .map(|s| SketchKey { aux, ..cache.key(s, Artifact::Symmetric, a.rows, m, precision) });
-    match cache.lookup(key, bypass) {
-        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0)),
+    match cache.lookup_for(job, key, bypass) {
+        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0, 0)),
         Lookup::Miss(guard) => {
-            let (b, device, cols) = symmetric_sketch_via(svc, a, m, precision)?;
+            let (b, device, cols, us) = symmetric_sketch_via(svc, a, m, precision)?;
             let b = Arc::new(b);
             if let Some(g) = guard {
                 g.publish(vec![b.clone()], device);
             }
-            Ok((b, device, cols))
+            Ok((b, device, cols, us))
         }
     }
 }
@@ -1439,25 +1549,27 @@ fn symmetric_sketch_cached(
 /// at its own width). The cached value is the *raw* pass output — the
 /// orthonormalization and everything downstream is deterministic host
 /// algebra, so a hit reproduces the cold path bit for bit.
+#[allow(clippy::too_many_arguments)]
 fn range_pass_cached(
     svc: &ProjectionService,
     cache: &Arc<SketchCache>,
+    job: u64,
     source: Option<Source>,
     bypass: bool,
     a: &Arc<Mat>,
     width: usize,
     precision: Precision,
-) -> Result<(Arc<Mat>, Device, usize)> {
+) -> Result<(Arc<Mat>, Device, usize, u64)> {
     let key = source.map(|s| cache.key(s, Artifact::Range, a.cols, width, precision));
-    match cache.lookup(key, bypass) {
-        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0)),
+    match cache.lookup_for(job, key, bypass) {
+        Lookup::Hit(h) => Ok((h.vals[0].clone(), h.device, 0, 0)),
         Lookup::Miss(guard) => {
             let r = svc.project_at(a.transpose(), width, precision)?;
             let y = Arc::new(r.result);
             if let Some(g) = guard {
                 g.publish(vec![y.clone()], r.device);
             }
-            Ok((y, r.device, r.batch_cols))
+            Ok((y, r.device, r.batch_cols, r.device_us))
         }
     }
 }
@@ -1482,7 +1594,7 @@ fn adaptive_range_via(
     cap: usize,
     tol: f64,
     precision: Precision,
-) -> Result<(crate::randnla::adaptive::RangeFindResult, Device, usize)> {
+) -> Result<(crate::randnla::adaptive::RangeFindResult, Device, usize, u64)> {
     anyhow::ensure!(
         tol > 0.0 && tol < 1.0,
         "adaptive tolerance must lie in (0, 1), got {tol}"
@@ -1493,6 +1605,8 @@ fn adaptive_range_via(
     let mut parked: Option<OperandId> = None;
     let mut device = Device::Host;
     let mut batch_cols = 0usize;
+    // Sequential ladder passes: device time sums over them.
+    let mut device_us = 0u64;
     // One transpose for every pass: the batcher shares the Arc.
     let at: Arc<Mat> = Arc::new(a.transpose());
     let run = (|| -> Result<()> {
@@ -1502,6 +1616,7 @@ fn adaptive_range_via(
             metrics.adaptive_passes.fetch_add(1, Ordering::Relaxed);
             device = r.device;
             batch_cols = batch_cols.max(r.batch_cols);
+            device_us += r.device_us;
             if inc.absorb(a, r.result.transpose()) == 0 {
                 break; // block already in span: the basis is complete
             }
@@ -1537,7 +1652,7 @@ fn adaptive_range_via(
         inc.q().is_some(),
         "adaptive rangefinder made no progress (degenerate input)"
     );
-    Ok((inc.into_result(), device, batch_cols))
+    Ok((inc.into_result(), device, batch_cols, device_us))
 }
 
 #[cfg(test)]

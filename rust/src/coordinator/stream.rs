@@ -31,10 +31,12 @@
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::coordinator::batcher::ProjectionService;
 use crate::coordinator::cluster::ClusterError;
+use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Device;
 use crate::coordinator::store::{OperandStore, StoreError};
@@ -273,6 +275,10 @@ pub struct StreamRegistry {
     next: AtomicU64,
     store: Arc<OperandStore>,
     metrics: Arc<Metrics>,
+    /// Telemetry sink: unset (the default) journals nothing — the
+    /// pre-telemetry ingest path, bitwise. Armed once by the
+    /// coordinator when its telemetry plane is on.
+    events: OnceLock<Arc<EventLog>>,
 }
 
 impl StreamRegistry {
@@ -282,7 +288,15 @@ impl StreamRegistry {
             next: AtomicU64::new(1),
             store,
             metrics,
+            events: OnceLock::new(),
         }
+    }
+
+    /// Arm ingest/seal stage journaling ([`Event::StreamIngest`] per
+    /// chunk flush, [`Event::StreamSealed`] per seal). First call wins;
+    /// the gate cannot be disarmed.
+    pub fn enable_telemetry(&self, events: Arc<EventLog>) {
+        let _ = self.events.set(events);
     }
 
     /// Open a stream of a `rows × cols` operand whose rows will arrive
@@ -463,7 +477,7 @@ impl StreamRegistry {
             st.buf_rows += take;
             at += take;
             if st.buf_rows == st.chunk_rows {
-                self.flush(st, svc)?;
+                self.flush(id, st, svc)?;
             }
         }
         Ok(())
@@ -476,8 +490,9 @@ impl StreamRegistry {
         let slot = self.slot(id)?;
         let mut state = slot.lock().unwrap();
         let st = open_mut(&mut state, id)?;
+        let clock = self.events.get().map(|_| Instant::now());
         if st.buf_rows > 0 {
-            self.flush(st, svc)?;
+            self.flush(id, st, svc)?;
         }
         if st.rows_seen() < st.rows {
             return Err(StreamError::Short { declared: st.rows, got: st.rows_seen() });
@@ -510,6 +525,12 @@ impl StreamRegistry {
         *state = State::Sealed(Arc::new(sealed));
         self.store.release(released);
         self.metrics.stream_resident_bytes.fetch_sub(released as u64, Ordering::Relaxed);
+        if let (Some(ev), Some(t0)) = (self.events.get(), clock) {
+            ev.append(Event::StreamSealed {
+                stream: id.0,
+                dur_us: t0.elapsed().as_micros() as u64,
+            });
+        }
         Ok(())
     }
 
@@ -609,7 +630,13 @@ impl StreamRegistry {
     /// co-range pass (`(rows, sketch_m)` operator addressed at the
     /// chunk's absolute offset) are submitted together, then folded into
     /// the summaries.
-    fn flush(&self, st: &mut OpenStream, svc: &ProjectionService) -> Result<(), StreamError> {
+    fn flush(
+        &self,
+        id: StreamId,
+        st: &mut OpenStream,
+        svc: &ProjectionService,
+    ) -> Result<(), StreamError> {
+        let clock = self.events.get().map(|_| Instant::now());
         let take = st.buf_rows;
         let r0 = st.rows_seen();
         let chunk = Arc::new(st.buf.crop(take, st.cols));
@@ -642,6 +669,13 @@ impl StreamRegistry {
         st.buf_rows = 0;
         st.chunks += 1;
         self.metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
+        if let (Some(ev), Some(t0)) = (self.events.get(), clock) {
+            ev.append(Event::StreamIngest {
+                stream: id.0,
+                rows: take,
+                dur_us: t0.elapsed().as_micros() as u64,
+            });
+        }
         Ok(())
     }
 }

@@ -1,0 +1,1115 @@
+//! Telemetry plane: request spans, Prometheus exposition, and
+//! perfmodel drift auditing.
+//!
+//! The plane is a single [`Projector`] — [`TelemetryRegistry`] —
+//! following the same [`EventLog`](super::events::EventLog) every
+//! other view consumes (the PR-7 pattern), so it reconstructs each
+//! job's life as a trace of timed spans without touching the hot path:
+//!
+//! ```text
+//! queued → resolved → projected(arm, tier, shard cell) → reduced → completed
+//! ```
+//!
+//! stitched from the stage events (`Dequeued`, `CacheProbe`,
+//! `Projected`, `Completed`, …) that the queue, cache, batcher, stream
+//! plane, cluster plane, and network front door journal *only when
+//! telemetry is enabled* — disabled, none of those events are
+//! constructed and the serving plane is bit-for-bit the pre-telemetry
+//! build. Three exposure surfaces:
+//!
+//! 1. **Prometheus text exposition** — [`TelemetryRegistry::render`]
+//!    covers every counter/gauge in [`Metrics::report`] plus the
+//!    per-stage latency histograms and per-(arm, tier, sketch)
+//!    perfmodel drift gauges; [`MetricsServer`] serves it over a
+//!    minimal std-only HTTP/1.1 `GET /metrics` responder
+//!    (`serve --metrics-listen ADDR`), and the wire frame
+//!    `Frame::Metrics` serves the same text through the authed front
+//!    door (`photon remote --metrics`).
+//! 2. **Chrome `trace_event` JSON** — `serve --trace-out FILE` streams
+//!    each completed job's spans as `"ph":"X"` slices loadable in
+//!    `chrome://tracing` / Perfetto ([`TelemetryRegistry::trace_to`]).
+//! 3. **Drift auditing** — [`DriftAuditor`] accumulates the router's
+//!    predicted latency vs the measured wall time per (device arm,
+//!    precision tier, sketch kind) from `BatchExecuted` events, so a
+//!    mispriced route (stale SRHT chunk cost, optimistic tier speedup)
+//!    shows up as a drift ratio far from 1.0 instead of silently
+//!    skewing the load-aware scheduler.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::events::{Event, Projector};
+use super::metrics::Metrics;
+use super::request::{Device, Priority};
+use crate::linalg::Precision;
+use crate::perfmodel::SketchKind;
+
+/// Completed-span ring capacity (postmortems want recent history).
+const SPAN_RING: usize = 1024;
+
+/// In-flight span-state capacity: jobs past this age out oldest-first
+/// (a leak guard — terminal events normally retire entries long before).
+const PENDING_CAP: usize = 4096;
+
+/// Histogram buckets (powers of two, µs) — matches the layout of
+/// [`Metrics::latency_snapshot`] so both render identically.
+const HIST_BUCKETS: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Stage histograms
+// ---------------------------------------------------------------------------
+
+/// One power-of-two latency histogram: bucket `i` counts samples in
+/// `[2^(i-1), 2^i)` µs (bucket 31 is the overflow tail).
+#[derive(Default, Clone)]
+struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    sum_us: u64,
+    count: u64,
+}
+
+impl Hist {
+    fn record(&mut self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.sum_us += us;
+        self.count += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span assembly
+// ---------------------------------------------------------------------------
+
+/// One device pass attributed to a job (a merged-batch share or one
+/// shard cell).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProjectedSpan {
+    pub arm: Device,
+    pub tier: Precision,
+    pub cols: usize,
+    pub device_us: u64,
+}
+
+/// The assembled trace of one completed job.
+#[derive(Clone, Debug)]
+pub struct JobSpan {
+    pub job: u64,
+    pub kind: &'static str,
+    pub tier: Precision,
+    /// Queue residency (submit → pop), from `Dequeued`.
+    pub queued_us: u64,
+    /// Cache verdict, when the job consulted the sketch cache.
+    pub cache_hit: Option<bool>,
+    /// Device passes; empty for cache-hit jobs (zero device work).
+    pub projected: Vec<ProjectedSpan>,
+    /// Residual serve time: total minus queue wait minus device time
+    /// (reduction, scatter, result delivery).
+    pub reduced_us: u64,
+    /// End-to-end latency (submit → response delivered).
+    pub total_us: u64,
+}
+
+/// In-flight per-job accumulation between `Submitted` and a terminal
+/// event.
+struct PendingJob {
+    kind: &'static str,
+    tier: Precision,
+    queued_us: u64,
+    cache_hit: Option<bool>,
+    projected: Vec<ProjectedSpan>,
+}
+
+#[derive(Default)]
+struct SpanState {
+    pending: HashMap<u64, PendingJob>,
+    pending_order: VecDeque<u64>,
+    completed: VecDeque<JobSpan>,
+    completed_total: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Perfmodel drift auditing
+// ---------------------------------------------------------------------------
+
+#[derive(Default, Clone, Copy)]
+struct DriftCell {
+    batches: u64,
+    predicted_us: u64,
+    measured_us: u64,
+}
+
+/// Predicted-vs-measured latency ledger per (device arm, precision
+/// tier, sketch kind) — the cells the router's
+/// [`perfmodel`](crate::perfmodel) costs steer. A drift ratio
+/// (measured / predicted) near 1.0 means the model prices that route
+/// honestly; far above 1.0 the scheduler is over-booking the arm, far
+/// below it is leaving it idle.
+#[derive(Default)]
+pub struct DriftAuditor {
+    cells: Mutex<HashMap<(Device, Precision, SketchKind), DriftCell>>,
+}
+
+impl DriftAuditor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one executed batch into its route cell.
+    pub fn record(
+        &self,
+        arm: Device,
+        tier: Precision,
+        sketch: SketchKind,
+        predicted_us: u64,
+        measured_us: u64,
+    ) {
+        let mut cells = self.cells.lock().unwrap();
+        let c = cells.entry((arm, tier, sketch)).or_default();
+        c.batches += 1;
+        c.predicted_us += predicted_us;
+        c.measured_us += measured_us;
+    }
+
+    /// Drift ratio (measured / predicted) of one route; `None` until
+    /// the route has executed a batch with a nonzero prediction.
+    pub fn ratio(&self, arm: Device, tier: Precision, sketch: SketchKind) -> Option<f64> {
+        let cells = self.cells.lock().unwrap();
+        let c = cells.get(&(arm, tier, sketch))?;
+        if c.predicted_us == 0 {
+            return None;
+        }
+        Some(c.measured_us as f64 / c.predicted_us as f64)
+    }
+
+    /// Every observed route, sorted (arm, tier, sketch) for stable
+    /// exposition: `(key, batches, predicted_us, measured_us)`.
+    fn snapshot(&self) -> Vec<((Device, Precision, SketchKind), (u64, u64, u64))> {
+        let cells = self.cells.lock().unwrap();
+        let mut rows: Vec<_> = cells
+            .iter()
+            .map(|(k, c)| (*k, (c.batches, c.predicted_us, c.measured_us)))
+            .collect();
+        rows.sort_by_key(|((a, t, s), _)| (a.name(), t.label(), s.label()));
+        rows
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event output
+// ---------------------------------------------------------------------------
+
+struct TraceOut {
+    w: BufWriter<File>,
+    events_written: u64,
+    finished: bool,
+}
+
+impl TraceOut {
+    /// One complete `"ph":"X"` slice. `ts`/`dur` are µs, per the
+    /// trace_event spec; `tid` carries the job id so each job gets its
+    /// own track.
+    fn slice(&mut self, name: &str, args: &str, ts: u64, dur: u64, tid: u64) {
+        let sep = if self.events_written == 0 { "" } else { ",\n" };
+        let _ = write!(
+            self.w,
+            "{sep}{{\"name\":\"{name}\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur},\
+             \"pid\":1,\"tid\":{tid},\"args\":{{{args}}}}}"
+        );
+        self.events_written += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry (a Projector)
+// ---------------------------------------------------------------------------
+
+/// The telemetry plane's materialised view: span assembler, per-stage
+/// histograms, drift auditor, and (optionally) a streaming Chrome
+/// trace writer — all fed exactly once per event, in seq order, from
+/// the projector thread.
+pub struct TelemetryRegistry {
+    metrics: Arc<Metrics>,
+    /// Wall-clock origin for trace timestamps (spans are laid out
+    /// backwards from each job's completion instant, since events
+    /// carry durations, not absolute times).
+    origin: Instant,
+    spans: Mutex<SpanState>,
+    /// Per-stage histograms, keyed by stage label (BTreeMap for stable
+    /// exposition order).
+    stages: Mutex<BTreeMap<&'static str, Hist>>,
+    drift: DriftAuditor,
+    trace: OnceLock<Mutex<TraceOut>>,
+}
+
+impl TelemetryRegistry {
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        Self {
+            metrics,
+            origin: Instant::now(),
+            spans: Mutex::new(SpanState::default()),
+            stages: Mutex::new(BTreeMap::new()),
+            drift: DriftAuditor::new(),
+            trace: OnceLock::new(),
+        }
+    }
+
+    /// Stream completed spans to `path` as Chrome `trace_event` JSON
+    /// (an array of `"ph":"X"` slices). First call wins; call
+    /// [`TelemetryRegistry::finish_trace`] at shutdown to close the
+    /// array (Perfetto also loads an unterminated file).
+    pub fn trace_to(&self, path: &Path) -> io::Result<()> {
+        let f = File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(b"[\n")?;
+        let _ = self
+            .trace
+            .set(Mutex::new(TraceOut { w, events_written: 0, finished: false }));
+        Ok(())
+    }
+
+    /// Close the trace array and flush. Idempotent.
+    pub fn finish_trace(&self) {
+        if let Some(t) = self.trace.get() {
+            let mut t = t.lock().unwrap();
+            if !t.finished {
+                t.finished = true;
+                let _ = t.w.write_all(b"\n]\n");
+                let _ = t.w.flush();
+            }
+        }
+    }
+
+    /// The drift auditor (tests and diagnostics).
+    pub fn drift(&self) -> &DriftAuditor {
+        &self.drift
+    }
+
+    /// The assembled span of one completed job, if still in the ring.
+    pub fn span(&self, job: u64) -> Option<JobSpan> {
+        let st = self.spans.lock().unwrap();
+        st.completed.iter().find(|s| s.job == job).cloned()
+    }
+
+    /// Spans assembled since start (completed jobs only).
+    pub fn spans_completed(&self) -> u64 {
+        self.spans.lock().unwrap().completed_total
+    }
+
+    fn record_stage(&self, stage: &'static str, us: u64) {
+        self.stages.lock().unwrap().entry(stage).or_default().record(us);
+    }
+
+    fn trace_span(&self, span: &JobSpan) {
+        let Some(trace) = self.trace.get() else { return };
+        let end = self.origin.elapsed().as_micros() as u64;
+        let t0 = end.saturating_sub(span.total_us);
+        let mut t = trace.lock().unwrap();
+        if t.finished {
+            return;
+        }
+        let job = span.job;
+        t.slice(
+            span.kind,
+            &format!("\"job\":{job},\"tier\":\"{}\"", span.tier.label()),
+            t0,
+            span.total_us,
+            job,
+        );
+        t.slice("queued", "", t0, span.queued_us, job);
+        if let Some(hit) = span.cache_hit {
+            t.slice("cache_probe", &format!("\"hit\":{hit}"), t0 + span.queued_us, 0, job);
+        }
+        let mut cursor = t0 + span.queued_us;
+        for p in &span.projected {
+            t.slice(
+                &format!("projected({}, {})", p.arm.name(), p.tier.label()),
+                &format!("\"cols\":{}", p.cols),
+                cursor,
+                p.device_us,
+                job,
+            );
+            cursor += p.device_us;
+        }
+        t.slice("reduced", "", end.saturating_sub(span.reduced_us), span.reduced_us, job);
+        let _ = t.w.flush();
+    }
+}
+
+impl Projector for TelemetryRegistry {
+    fn apply(&self, _seq: u64, event: &Event) {
+        match event {
+            Event::Submitted { job, kind, tier, .. } => {
+                let mut st = self.spans.lock().unwrap();
+                if st.pending.len() >= PENDING_CAP {
+                    if let Some(old) = st.pending_order.pop_front() {
+                        st.pending.remove(&old);
+                    }
+                }
+                st.pending_order.push_back(*job);
+                st.pending.insert(
+                    *job,
+                    PendingJob {
+                        kind,
+                        tier: *tier,
+                        queued_us: 0,
+                        cache_hit: None,
+                        projected: Vec::new(),
+                    },
+                );
+            }
+            Event::Dequeued { job, wait_us } => {
+                self.record_stage("queued", *wait_us);
+                let mut st = self.spans.lock().unwrap();
+                if let Some(p) = st.pending.get_mut(job) {
+                    p.queued_us = *wait_us;
+                }
+            }
+            Event::CacheProbe { job, hit } => {
+                let mut st = self.spans.lock().unwrap();
+                if let Some(p) = st.pending.get_mut(job) {
+                    p.cache_hit = Some(*hit);
+                }
+            }
+            Event::Projected { job, arm, tier, cols, device_us } => {
+                self.record_stage("projected", *device_us);
+                let mut st = self.spans.lock().unwrap();
+                if let Some(p) = st.pending.get_mut(job) {
+                    p.projected.push(ProjectedSpan {
+                        arm: *arm,
+                        tier: *tier,
+                        cols: *cols,
+                        device_us: *device_us,
+                    });
+                }
+            }
+            Event::Completed { job, latency_us } => {
+                let mut st = self.spans.lock().unwrap();
+                let Some(p) = st.pending.remove(job) else { return };
+                let device_us: u64 = p.projected.iter().map(|s| s.device_us).sum();
+                let reduced_us = latency_us.saturating_sub(p.queued_us + device_us);
+                let span = JobSpan {
+                    job: *job,
+                    kind: p.kind,
+                    tier: p.tier,
+                    queued_us: p.queued_us,
+                    cache_hit: p.cache_hit,
+                    projected: p.projected,
+                    reduced_us,
+                    total_us: *latency_us,
+                };
+                st.completed.push_back(span.clone());
+                st.completed_total += 1;
+                if st.completed.len() > SPAN_RING {
+                    st.completed.pop_front();
+                }
+                drop(st);
+                self.record_stage("reduced", reduced_us);
+                self.record_stage("completed", *latency_us);
+                self.trace_span(&span);
+            }
+            Event::Failed { job } | Event::Cancelled { job } => {
+                self.spans.lock().unwrap().pending.remove(job);
+            }
+            Event::BatchExecuted { arm, tier, sketch, predicted_us, measured_us, .. } => {
+                self.record_stage("batch", *measured_us);
+                self.drift.record(*arm, *tier, *sketch, *predicted_us, *measured_us);
+            }
+            Event::StreamIngest { dur_us, .. } => self.record_stage("stream_ingest", *dur_us),
+            Event::StreamSealed { dur_us, .. } => self.record_stage("stream_seal", *dur_us),
+            Event::WorkerSlot { ingest_us, .. } => {
+                self.record_stage("worker_ingest", *ingest_us)
+            }
+            Event::WorkerSealed { seal_us, .. } => self.record_stage("worker_seal", *seal_us),
+            Event::WireHandled { dur_us, .. } => self.record_stage("wire", *dur_us),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Escape a label value per the exposition format (`\` → `\\`,
+/// `"` → `\"`, newline → `\n`).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: &str) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+        return;
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    let _ = writeln!(out, "{name}{{{}}} {value}", body.join(","));
+}
+
+/// Render one power-of-two histogram as cumulative Prometheus buckets.
+/// Bucket `i` covers `[2^(i-1), 2^i)` µs, so its inclusive upper bound
+/// is `2^i - 1`; the top bucket is the `+Inf` tail.
+fn hist_samples(
+    out: &mut String,
+    name: &str,
+    labels: &[(&str, &str)],
+    buckets: &[u64],
+    sum_us: u64,
+) {
+    let mut cum = 0u64;
+    let bucket_name = format!("{name}_bucket");
+    for (i, &c) in buckets.iter().enumerate() {
+        cum += c;
+        let le = if i == buckets.len() - 1 {
+            "+Inf".to_string()
+        } else {
+            format!("{}", (1u64 << i) - 1)
+        };
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", le.as_str()));
+        sample(out, &bucket_name, &ls, &cum.to_string());
+    }
+    sample(out, &format!("{name}_sum"), labels, &sum_us.to_string());
+    sample(out, &format!("{name}_count"), labels, &cum.to_string());
+}
+
+/// Render every counter and gauge of [`Metrics::report`] (plus the
+/// served-latency and queue-wait histograms) in Prometheus text
+/// exposition format. This free function needs no telemetry plane, so
+/// the wire `Frame::Metrics` responder works even when stage spans are
+/// disabled; [`TelemetryRegistry::render`] appends the per-stage and
+/// drift families on top.
+pub fn render_metrics_text(m: &Metrics) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    let ld = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed).to_string();
+
+    let counters: [(&str, &std::sync::atomic::AtomicU64, &str); 24] = [
+        ("photon_jobs_submitted_total", &m.submitted, "Jobs admitted to the queue."),
+        ("photon_jobs_completed_total", &m.completed, "Jobs completed and delivered."),
+        ("photon_jobs_failed_total", &m.failed, "Jobs failed (error or expired deadline)."),
+        ("photon_batches_total", &m.batches, "Merged batches flushed to device arms."),
+        ("photon_batched_cols_total", &m.batched_cols, "Total columns across flushed batches."),
+        ("photon_sharded_jobs_total", &m.sharded_jobs, "Batches split by the shard planner."),
+        ("photon_shards_dispatched_total", &m.shards_dispatched, "Shard cells dispatched."),
+        ("photon_rerouted_total", &m.rerouted, "Shard executions rerouted off failed replicas."),
+        ("photon_jobs_cancelled_total", &m.cancelled, "Jobs cancelled before touching a device."),
+        (
+            "photon_deadline_expired_total",
+            &m.deadline_expired,
+            "Jobs whose deadline expired while queued.",
+        ),
+        (
+            "photon_rejected_busy_total",
+            &m.rejected_busy,
+            "Submissions refused by the bounded admission queue.",
+        ),
+        (
+            "photon_operand_bytes_copied_total",
+            &m.operand_bytes_copied,
+            "Operand payload bytes deep-copied on the serving path.",
+        ),
+        (
+            "photon_adaptive_passes_total",
+            &m.adaptive_passes,
+            "Rangefinder ladder passes executed by adaptive jobs.",
+        ),
+        (
+            "photon_stream_chunks_total",
+            &m.stream_chunks,
+            "Chunks flushed through the streaming ingestion plane.",
+        ),
+        ("photon_streams_aborted_total", &m.streams_aborted, "Streams freed before seal."),
+        ("photon_cache_hits_total", &m.cache_hits, "Sketch-cache lookups served without device passes."),
+        ("photon_cache_misses_total", &m.cache_misses, "Sketch-cache lookups that led a fresh computation."),
+        (
+            "photon_cache_coalesced_total",
+            &m.cache_coalesced,
+            "Lookups parked on another requester's in-flight computation.",
+        ),
+        ("photon_cache_evictions_total", &m.cache_evictions, "Cache entries dropped."),
+        (
+            "photon_operands_deduped_total",
+            &m.operands_deduped,
+            "Uploads served as refcount bumps on identical resident operands.",
+        ),
+        (
+            "photon_projections_executed_total",
+            &m.projections_executed,
+            "Projection requests that reached a batcher flush.",
+        ),
+        ("photon_cluster_streams_total", &m.cluster_streams, "Streams opened cluster-partitioned."),
+        (
+            "photon_cluster_rows_forwarded_total",
+            &m.cluster_rows_forwarded,
+            "Rows forwarded to workers over the partition wire.",
+        ),
+        ("photon_summary_merges_total", &m.summary_merges, "Seal-time summary-merge reductions."),
+    ];
+    for (name, a, help) in counters {
+        family(&mut out, name, "counter", help);
+        sample(&mut out, name, &[], &ld(a));
+    }
+
+    family(
+        &mut out,
+        "photon_device_jobs_total",
+        "counter",
+        "Batches served per device arm.",
+    );
+    let (opu, pjrt, host) = m.device_counts();
+    sample(&mut out, "photon_device_jobs_total", &[("arm", "opu")], &opu.to_string());
+    sample(&mut out, "photon_device_jobs_total", &[("arm", "pjrt")], &pjrt.to_string());
+    sample(&mut out, "photon_device_jobs_total", &[("arm", "host")], &host.to_string());
+
+    family(
+        &mut out,
+        "photon_event_log_blocked_total",
+        "counter",
+        "Appends that blocked on the event-log ring being full.",
+    );
+    sample(&mut out, "photon_event_log_blocked_total", &[], &ld(&m.event_log_blocked));
+    family(
+        &mut out,
+        "photon_event_log_block_us_total",
+        "counter",
+        "Microseconds producers spent blocked in event-log appends.",
+    );
+    sample(&mut out, "photon_event_log_block_us_total", &[], &ld(&m.event_log_block_us));
+
+    let gauges: [(&str, &std::sync::atomic::AtomicU64, &str); 4] = [
+        ("photon_store_bytes", &m.store_bytes, "Bytes resident in the operand store."),
+        (
+            "photon_stream_resident_bytes",
+            &m.stream_resident_bytes,
+            "Bytes resident across open and sealed streams.",
+        ),
+        ("photon_cache_bytes", &m.cache_bytes, "Bytes parked in the content-addressed sketch cache."),
+        ("photon_workers_connected", &m.workers_connected, "Map workers registered on the cluster plane."),
+    ];
+    for (name, a, help) in gauges {
+        family(&mut out, name, "gauge", help);
+        sample(&mut out, name, &[], &ld(a));
+    }
+
+    family(&mut out, "photon_queue_depth", "gauge", "Jobs queued right now, per class.");
+    sample(
+        &mut out,
+        "photon_queue_depth",
+        &[("class", "interactive")],
+        &ld(&m.queue_interactive),
+    );
+    sample(&mut out, "photon_queue_depth", &[("class", "batch")], &ld(&m.queue_batch));
+
+    family(
+        &mut out,
+        "photon_request_latency_us",
+        "histogram",
+        "End-to-end served latency (submit to response), microseconds.",
+    );
+    let (lb, ls) = m.latency_snapshot();
+    hist_samples(&mut out, "photon_request_latency_us", &[], &lb, ls);
+
+    family(
+        &mut out,
+        "photon_queue_wait_us",
+        "histogram",
+        "Admission-queue wait (submit to pop), microseconds, per class.",
+    );
+    for (class, label) in [(Priority::Interactive, "interactive"), (Priority::Batch, "batch")] {
+        let (b, s) = m.queue_wait_snapshot(class);
+        hist_samples(&mut out, "photon_queue_wait_us", &[("class", label)], &b, s);
+    }
+
+    let tenants = m.tenant_counts();
+    if !tenants.is_empty() {
+        family(&mut out, "photon_tenant_submits_total", "counter", "Accepted submissions per tenant.");
+        for (name, submits, ..) in &tenants {
+            sample(&mut out, "photon_tenant_submits_total", &[("tenant", name)], &submits.to_string());
+        }
+        family(
+            &mut out,
+            "photon_tenant_operand_bytes_total",
+            "counter",
+            "Operand/stream bytes charged per tenant.",
+        );
+        for (name, _, bytes, ..) in &tenants {
+            sample(
+                &mut out,
+                "photon_tenant_operand_bytes_total",
+                &[("tenant", name)],
+                &bytes.to_string(),
+            );
+        }
+        family(&mut out, "photon_tenant_busy_total", "counter", "Busy refusals per tenant.");
+        for (name, _, _, busy, _) in &tenants {
+            sample(&mut out, "photon_tenant_busy_total", &[("tenant", name)], &busy.to_string());
+        }
+        family(&mut out, "photon_tenant_quota_rejected_total", "counter", "OverQuota refusals per tenant.");
+        for (name, _, _, _, quota) in &tenants {
+            sample(
+                &mut out,
+                "photon_tenant_quota_rejected_total",
+                &[("tenant", name)],
+                &quota.to_string(),
+            );
+        }
+    }
+
+    let workers = m.worker_rows();
+    if !workers.is_empty() {
+        family(
+            &mut out,
+            "photon_worker_ingest_rows_total",
+            "counter",
+            "Rows ingested per cluster map worker.",
+        );
+        for (name, rows) in &workers {
+            sample(&mut out, "photon_worker_ingest_rows_total", &[("worker", name)], &rows.to_string());
+        }
+    }
+
+    out
+}
+
+impl TelemetryRegistry {
+    /// Full Prometheus text exposition: everything
+    /// [`render_metrics_text`] covers, plus the per-stage latency
+    /// histograms, span-assembly counters, and perfmodel drift gauges.
+    pub fn render(&self) -> String {
+        let mut out = render_metrics_text(&self.metrics);
+
+        family(
+            &mut out,
+            "photon_spans_completed_total",
+            "counter",
+            "Jobs whose span trace was fully assembled.",
+        );
+        sample(
+            &mut out,
+            "photon_spans_completed_total",
+            &[],
+            &self.spans_completed().to_string(),
+        );
+
+        let stages = self.stages.lock().unwrap().clone();
+        if !stages.is_empty() {
+            family(
+                &mut out,
+                "photon_stage_duration_us",
+                "histogram",
+                "Per-stage span durations, microseconds (queued, projected, reduced, completed, batch, stream/worker/wire stages).",
+            );
+            for (stage, h) in &stages {
+                hist_samples(
+                    &mut out,
+                    "photon_stage_duration_us",
+                    &[("stage", stage)],
+                    &h.buckets,
+                    h.sum_us,
+                );
+            }
+        }
+
+        let drift = self.drift.snapshot();
+        if !drift.is_empty() {
+            family(
+                &mut out,
+                "photon_perfmodel_batches_total",
+                "counter",
+                "Executed batches per (arm, tier, sketch) route.",
+            );
+            for ((arm, tier, sketch), (batches, _, _)) in &drift {
+                sample(
+                    &mut out,
+                    "photon_perfmodel_batches_total",
+                    &[("arm", arm.name()), ("tier", tier.label()), ("sketch", sketch.label())],
+                    &batches.to_string(),
+                );
+            }
+            family(
+                &mut out,
+                "photon_perfmodel_predicted_us_total",
+                "counter",
+                "Router-predicted latency per route, microseconds.",
+            );
+            for ((arm, tier, sketch), (_, pred, _)) in &drift {
+                sample(
+                    &mut out,
+                    "photon_perfmodel_predicted_us_total",
+                    &[("arm", arm.name()), ("tier", tier.label()), ("sketch", sketch.label())],
+                    &pred.to_string(),
+                );
+            }
+            family(
+                &mut out,
+                "photon_perfmodel_measured_us_total",
+                "counter",
+                "Measured batch wall time per route, microseconds.",
+            );
+            for ((arm, tier, sketch), (_, _, meas)) in &drift {
+                sample(
+                    &mut out,
+                    "photon_perfmodel_measured_us_total",
+                    &[("arm", arm.name()), ("tier", tier.label()), ("sketch", sketch.label())],
+                    &meas.to_string(),
+                );
+            }
+            family(
+                &mut out,
+                "photon_perfmodel_drift_ratio",
+                "gauge",
+                "Measured / predicted latency per route (1.0 = the perfmodel prices this route honestly).",
+            );
+            for ((arm, tier, sketch), (_, pred, meas)) in &drift {
+                if *pred == 0 {
+                    continue;
+                }
+                let ratio = *meas as f64 / *pred as f64;
+                sample(
+                    &mut out,
+                    "photon_perfmodel_drift_ratio",
+                    &[("arm", arm.name()), ("tier", tier.label()), ("sketch", sketch.label())],
+                    &format!("{ratio:.6}"),
+                );
+            }
+        }
+
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal std-only HTTP/1.1 GET /metrics responder
+// ---------------------------------------------------------------------------
+
+/// The scrape endpoint: a hand-rolled HTTP/1.1 responder on the
+/// PR-8 nonblocking-listener pattern — no framework, no async runtime.
+/// Answers `GET /metrics` with the rendered exposition and anything
+/// else with 404; every response closes the connection.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve `render()` on every
+    /// scrape. The renderer runs on the accept thread — scrapes are
+    /// cheap string renders, so one thread is plenty.
+    pub fn start(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new().name("metrics-http".into()).spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => serve_scrape(stream, render.as_ref()),
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })?
+        };
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Handle one scrape connection: read the request head, answer, close.
+fn serve_scrape(mut stream: TcpStream, render: &dyn Fn() -> String) {
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    stream.set_nodelay(true).ok();
+    let mut head = Vec::with_capacity(256);
+    let mut tmp = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut tmp) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => head.extend_from_slice(&tmp[..n]),
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let mut parts = line.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method == "GET" && (path == "/metrics" || path.starts_with("/metrics?"))
+    {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(header.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn submitted(job: u64) -> Event {
+        Event::Submitted {
+            job,
+            kind: "approx_matmul",
+            priority: Priority::Batch,
+            tier: Precision::F64,
+        }
+    }
+
+    #[test]
+    fn spans_assemble_from_stage_events() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = TelemetryRegistry::new(metrics);
+        reg.apply(0, &submitted(7));
+        reg.apply(1, &Event::Dequeued { job: 7, wait_us: 40 });
+        reg.apply(2, &Event::CacheProbe { job: 7, hit: false });
+        reg.apply(
+            3,
+            &Event::Projected {
+                job: 7,
+                arm: Device::Host,
+                tier: Precision::F64,
+                cols: 8,
+                device_us: 100,
+            },
+        );
+        reg.apply(4, &Event::Completed { job: 7, latency_us: 200 });
+        let span = reg.span(7).expect("span assembled");
+        assert_eq!(span.queued_us, 40);
+        assert_eq!(span.cache_hit, Some(false));
+        assert_eq!(span.projected.len(), 1);
+        assert_eq!(span.projected[0].device_us, 100);
+        assert_eq!(span.reduced_us, 60, "total - queued - device");
+        assert_eq!(span.total_us, 200);
+        assert_eq!(reg.spans_completed(), 1);
+    }
+
+    #[test]
+    fn cache_hit_jobs_carry_zero_projected_spans() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = TelemetryRegistry::new(metrics);
+        reg.apply(0, &submitted(1));
+        reg.apply(1, &Event::Dequeued { job: 1, wait_us: 5 });
+        reg.apply(2, &Event::CacheProbe { job: 1, hit: true });
+        reg.apply(3, &Event::Completed { job: 1, latency_us: 30 });
+        let span = reg.span(1).unwrap();
+        assert_eq!(span.cache_hit, Some(true));
+        assert!(span.projected.is_empty(), "cache hit executed no device pass");
+    }
+
+    #[test]
+    fn failed_and_cancelled_jobs_do_not_linger() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = TelemetryRegistry::new(metrics);
+        reg.apply(0, &submitted(1));
+        reg.apply(1, &Event::Failed { job: 1 });
+        reg.apply(2, &submitted(2));
+        reg.apply(3, &Event::Cancelled { job: 2 });
+        assert_eq!(reg.spans.lock().unwrap().pending.len(), 0);
+        assert!(reg.span(1).is_none());
+        assert!(reg.span(2).is_none());
+    }
+
+    #[test]
+    fn pending_state_is_bounded() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = TelemetryRegistry::new(metrics);
+        for job in 0..(PENDING_CAP as u64 + 10) {
+            reg.apply(job, &submitted(job));
+        }
+        assert!(reg.spans.lock().unwrap().pending.len() <= PENDING_CAP);
+    }
+
+    #[test]
+    fn drift_auditor_tracks_routes_independently() {
+        let d = DriftAuditor::new();
+        assert!(d.ratio(Device::Opu, Precision::F32, SketchKind::Dense).is_none());
+        d.record(Device::Opu, Precision::F32, SketchKind::Dense, 100, 150);
+        d.record(Device::Opu, Precision::F32, SketchKind::Dense, 100, 250);
+        d.record(Device::Host, Precision::F64, SketchKind::Srht, 50, 25);
+        let r = d.ratio(Device::Opu, Precision::F32, SketchKind::Dense).unwrap();
+        assert!((r - 2.0).abs() < 1e-9, "{r}");
+        let r = d.ratio(Device::Host, Precision::F64, SketchKind::Srht).unwrap();
+        assert!((r - 0.5).abs() < 1e-9, "{r}");
+        assert!(d.ratio(Device::Pjrt, Precision::Bf16, SketchKind::Sparse).is_none());
+    }
+
+    #[test]
+    fn exposition_covers_report_and_stage_families() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.submitted.fetch_add(3, Ordering::Relaxed);
+        metrics.record_latency_us(120);
+        metrics.tenant_submit("acme");
+        metrics.worker_ingest("w1", 64);
+        let reg = TelemetryRegistry::new(Arc::clone(&metrics));
+        reg.apply(0, &submitted(1));
+        reg.apply(1, &Event::Dequeued { job: 1, wait_us: 10 });
+        reg.apply(2, &Event::Completed { job: 1, latency_us: 50 });
+        reg.apply(
+            3,
+            &Event::BatchExecuted {
+                arm: Device::Host,
+                tier: Precision::F64,
+                sketch: SketchKind::Dense,
+                cols: 8,
+                shards: 1,
+                predicted_us: 100,
+                measured_us: 120,
+            },
+        );
+        let text = reg.render();
+        for needle in [
+            "photon_jobs_submitted_total 3",
+            "# TYPE photon_request_latency_us histogram",
+            "photon_request_latency_us_count 1",
+            "photon_tenant_submits_total{tenant=\"acme\"} 1",
+            "photon_worker_ingest_rows_total{worker=\"w1\"} 64",
+            "photon_stage_duration_us_bucket{stage=\"queued\"",
+            "photon_spans_completed_total 1",
+            "photon_perfmodel_drift_ratio{arm=\"host\",tier=\"f64\",sketch=\"dense\"} 1.2",
+            "# TYPE photon_queue_depth gauge",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn exposition_buckets_are_cumulative_and_monotone() {
+        let metrics = Arc::new(Metrics::new());
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            metrics.record_latency_us(us);
+        }
+        let text = render_metrics_text(&metrics);
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("photon_request_latency_us_bucket") {
+                let v: u64 = rest.split_whitespace().last().unwrap().parse().unwrap();
+                assert!(v >= last, "buckets must be cumulative: {line}");
+                last = v;
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, HIST_BUCKETS);
+        assert_eq!(last, 5, "+Inf bucket equals count");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut out = String::new();
+        sample(&mut out, "m", &[("k", "a\"b\\c\nd")], "1");
+        assert_eq!(out, "m{k=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn http_responder_serves_metrics_and_404s_elsewhere() {
+        let render: Arc<dyn Fn() -> String + Send + Sync> =
+            Arc::new(|| "photon_up 1\n".to_string());
+        let srv = MetricsServer::start("127.0.0.1:0", render).expect("bind");
+        let addr = srv.addr();
+        let scrape = |path: &str| -> String {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            buf
+        };
+        let ok = scrape("/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("photon_up 1"), "{ok}");
+        assert!(ok.contains("text/plain"), "{ok}");
+        let missing = scrape("/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn trace_out_emits_loadable_chrome_json() {
+        let metrics = Arc::new(Metrics::new());
+        let reg = TelemetryRegistry::new(metrics);
+        let path = std::env::temp_dir().join(format!(
+            "photon-trace-test-{}.json",
+            std::process::id()
+        ));
+        reg.trace_to(&path).expect("create trace file");
+        reg.apply(0, &submitted(3));
+        reg.apply(1, &Event::Dequeued { job: 3, wait_us: 10 });
+        reg.apply(
+            2,
+            &Event::Projected {
+                job: 3,
+                arm: Device::Opu,
+                tier: Precision::F32,
+                cols: 4,
+                device_us: 20,
+            },
+        );
+        reg.apply(3, &Event::Completed { job: 3, latency_us: 40 });
+        reg.finish_trace();
+        reg.finish_trace(); // idempotent
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let t = text.trim();
+        assert!(t.starts_with('[') && t.ends_with(']'), "{t}");
+        assert!(t.contains("\"ph\":\"X\""), "{t}");
+        assert!(t.contains("projected(opu, f32)"), "{t}");
+        assert!(t.contains("\"tid\":3"), "{t}");
+        // Balanced braces => structurally sound JSON objects.
+        let opens = t.matches('{').count();
+        let closes = t.matches('}').count();
+        assert_eq!(opens, closes, "{t}");
+    }
+}

@@ -663,10 +663,11 @@ impl fmt::Display for WireStatus {
     }
 }
 
-/// Every frame of the protocol. Tags 1..=15 travel client → server
+/// Every frame of the protocol. Tags 1..=16 travel client → server
 /// (1..=11 the tenant session API, 12..=15 the worker role of the
-/// scale-out plane), 32..=47 server → client (32..=42 the session
-/// replies, 43..=47 the coordinator → worker partition protocol);
+/// scale-out plane, 16 the telemetry scrape), 32..=48 server → client
+/// (32..=42 the session replies, 43..=47 the coordinator → worker
+/// partition protocol, 48 the telemetry scrape reply);
 /// [`Frame::Unknown`] is the decoded shape of any unassigned tag
 /// (payload consumed, connection survives).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -690,6 +691,9 @@ pub enum Frame {
     Submit { spec: WireSpec, opts: WireOptions },
     Cancel { job: u64 },
     Report,
+    /// Request the Prometheus text exposition of the coordinator's
+    /// telemetry registry; answered with [`Frame::MetricsText`].
+    Metrics,
     Goodbye,
     // worker -> coordinator (the map side of the scale-out plane)
     /// Register this connection as a map worker instead of a tenant
@@ -711,11 +715,16 @@ pub enum Frame {
         y_arm: u8,
         sa: WireMat,
         yt: WireMat,
+        /// Cumulative wall time the worker spent ingesting this slot's
+        /// row blocks, in microseconds (0 with telemetry off).
+        ingest_us: u64,
     },
     /// Epoch-barrier ack: every owned slot's [`Frame::SlotSummary`] has
     /// been pushed; the worker's Frequent Directions sketch and its
-    /// measured Σδ bound (f64 bits) ride along for the merge reduction.
-    PartitionSealed { stream: u64, epoch: u64, fd_bound: u64, fd: WireMat },
+    /// measured Σδ bound (f64 bits) ride along for the merge reduction,
+    /// plus the wall time the seal pass took on the worker
+    /// (microseconds, 0 with telemetry off).
+    PartitionSealed { stream: u64, epoch: u64, fd_bound: u64, fd: WireMat, seal_us: u64 },
     /// Ack of [`Frame::FreePartition`]: worker-side reserved bytes for
     /// the stream are back to baseline.
     PartitionFreed { stream: u64 },
@@ -730,6 +739,9 @@ pub enum Frame {
     JobDone(WireResponse),
     CancelOk { cancelled: bool },
     ReportText { text: String },
+    /// Reply to [`Frame::Metrics`]: the full Prometheus text exposition
+    /// (same bytes `GET /metrics` would serve).
+    MetricsText { text: String },
     ShuttingDown,
     // coordinator -> worker (the partition protocol)
     /// Reply to [`Frame::WorkerHello`]: the worker's id, the signature
@@ -781,6 +793,7 @@ impl Frame {
             Frame::Cancel { .. } => 9,
             Frame::Report => 10,
             Frame::Goodbye => 11,
+            Frame::Metrics => 16,
             Frame::WorkerHello { .. } => 12,
             Frame::SlotSummary { .. } => 13,
             Frame::PartitionSealed { .. } => 14,
@@ -796,6 +809,7 @@ impl Frame {
             Frame::CancelOk { .. } => 40,
             Frame::ReportText { .. } => 41,
             Frame::ShuttingDown => 42,
+            Frame::MetricsText { .. } => 48,
             Frame::WorkerOk { .. } => 43,
             Frame::AssignPartition { .. } => 44,
             Frame::PartitionRows { .. } => 45,
@@ -1343,12 +1357,12 @@ fn encode_frame_body(e: &mut Enc, frame: &Frame) {
             e.boolean(opts.bypass_cache);
         }
         Frame::Cancel { job } => e.u64(*job),
-        Frame::Report | Frame::Goodbye | Frame::Ack | Frame::ShuttingDown => {}
+        Frame::Report | Frame::Metrics | Frame::Goodbye | Frame::Ack | Frame::ShuttingDown => {}
         Frame::WorkerHello { version, token } => {
             e.u16(*version);
             e.str(token);
         }
-        Frame::SlotSummary { stream, slot, r0, r1, chunks, fro2, arm, y_arm, sa, yt } => {
+        Frame::SlotSummary { stream, slot, r0, r1, chunks, fro2, arm, y_arm, sa, yt, ingest_us } => {
             e.u64(*stream);
             e.u64(*slot);
             e.u64(*r0);
@@ -1359,12 +1373,14 @@ fn encode_frame_body(e: &mut Enc, frame: &Frame) {
             e.u8(*y_arm);
             e.mat(sa);
             e.mat(yt);
+            e.u64(*ingest_us);
         }
-        Frame::PartitionSealed { stream, epoch, fd_bound, fd } => {
+        Frame::PartitionSealed { stream, epoch, fd_bound, fd, seal_us } => {
             e.u64(*stream);
             e.u64(*epoch);
             e.u64(*fd_bound);
             e.mat(fd);
+            e.u64(*seal_us);
         }
         Frame::PartitionFreed { stream } => e.u64(*stream),
         Frame::WorkerOk { worker, seed, chunk_rows } => {
@@ -1423,6 +1439,7 @@ fn encode_frame_body(e: &mut Enc, frame: &Frame) {
         Frame::JobDone(r) => encode_response(e, r),
         Frame::CancelOk { cancelled } => e.boolean(*cancelled),
         Frame::ReportText { text } => e.str(text),
+        Frame::MetricsText { text } => e.str(text),
         Frame::Unknown { .. } => {}
     }
 }
@@ -1484,14 +1501,17 @@ pub fn decode_body(body: &[u8]) -> Result<(u64, Frame), WireError> {
             y_arm: d.u8()?,
             sa: d.mat()?,
             yt: d.mat()?,
+            ingest_us: d.u64()?,
         },
         14 => Frame::PartitionSealed {
             stream: d.u64()?,
             epoch: d.u64()?,
             fd_bound: d.u64()?,
             fd: d.mat()?,
+            seal_us: d.u64()?,
         },
         15 => Frame::PartitionFreed { stream: d.u64()? },
+        16 => Frame::Metrics,
         32 => Frame::HelloOk { tenant: d.str()?, qos: d.u8()?, quota: d.u64()? },
         33 => Frame::Status(decode_status(&mut d)?),
         34 => Frame::OperandOk { id: d.u64()?, bytes: d.u64()? },
@@ -1503,6 +1523,7 @@ pub fn decode_body(body: &[u8]) -> Result<(u64, Frame), WireError> {
         40 => Frame::CancelOk { cancelled: d.boolean()? },
         41 => Frame::ReportText { text: d.str()? },
         42 => Frame::ShuttingDown,
+        48 => Frame::MetricsText { text: d.str()? },
         43 => Frame::WorkerOk { worker: d.u64()?, seed: d.u64()?, chunk_rows: d.u64()? },
         44 => Frame::AssignPartition {
             stream: d.u64()?,
@@ -1642,6 +1663,8 @@ mod tests {
     fn simple_frames_round_trip() {
         roundtrip(&Frame::Hello { version: WIRE_VERSION, token: "secret".into() });
         roundtrip(&Frame::Report);
+        roundtrip(&Frame::Metrics);
+        roundtrip(&Frame::MetricsText { text: "# TYPE photon_jobs_submitted counter".into() });
         roundtrip(&Frame::Goodbye);
         roundtrip(&Frame::Ack);
         roundtrip(&Frame::ShuttingDown);

@@ -16,9 +16,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use photonic_randnla::cli::Args;
 use photonic_randnla::coordinator::{
-    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, OperandId,
-    OperandRef, Payload, Policy, PoolConfig, Precision, PrecisionPolicy, StreamError, StreamId,
-    StreamOpts, SubmitOptions, TenantRegistry, Ticket, TraceEstimator,
+    BatchConfig, Coordinator, CoordinatorConfig, HostSketch, JobSpec, LsqrOpts, MetricsServer,
+    OperandId, OperandRef, Payload, Policy, PoolConfig, Precision, PrecisionPolicy, StreamError,
+    StreamId, StreamOpts, SubmitOptions, TenantRegistry, Ticket, TraceEstimator,
 };
 use photonic_randnla::graph::generators::erdos_renyi;
 use photonic_randnla::linalg::{matvec, Mat};
@@ -58,6 +58,11 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|worker|remote|info> [options
          [--expect-workers N] (with --listen: wait for N map workers
            to join before announcing readiness; streams opened while
            workers are connected are partitioned across them)
+         [--metrics-listen ADDR] (arm the telemetry plane and serve
+           the Prometheus text exposition at GET /metrics on ADDR)
+         [--trace-out FILE] (arm the telemetry plane and stream
+           completed job spans to FILE as Chrome trace_event JSON;
+           load it at chrome://tracing or ui.perfetto.dev)
   worker --connect HOST:PORT --token TOKEN
          [--policy host|auto] [--noise ideal|realistic|harsh]
            (join the coordinator as a map worker: ingest forwarded
@@ -66,7 +71,9 @@ const USAGE: &str = "photon <fig1|fig2|claims|serve|worker|remote|info> [options
   remote --connect HOST:PORT --token TOKEN
          [--op trace|projection|randsvd|nystrom] [--n 256] [--m 64]
          [--jobs 8] [--seed 7] [--report] (print the server's
-           metrics report, including per-tenant counters)
+           metrics report: global gauges + your own tenant lines)
+         [--metrics] (print the server's Prometheus text exposition
+           through the authed session — no scrape port needed)
   info   [--artifacts DIR]";
 
 /// Set by the SIGINT handler; `serve --listen` polls it to begin a
@@ -250,6 +257,12 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             None => return Err(format!("unknown precision tier {tier}")),
         },
     };
+    // The telemetry plane arms whenever either output is requested;
+    // without both flags the serving plane is bit-for-bit the
+    // pre-telemetry one (no stage events, no span assembly).
+    let metrics_listen = args.get("metrics-listen");
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let telemetry = metrics_listen.is_some() || trace_out.is_some();
     let coord = Coordinator::start(CoordinatorConfig {
         workers: args.get_usize("workers", 4)?,
         policy,
@@ -262,8 +275,25 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         stream_chunk_rows,
         precision,
         cache_quota: cache_mb * 1024 * 1024,
+        telemetry,
+        trace_out,
     })
     .map_err(|e| e.to_string())?;
+
+    // Scrape endpoint: a std-only HTTP/1.1 responder rendering the
+    // registry on every GET /metrics. Held until the engine drains so
+    // the last scrape still answers during shutdown.
+    let _metrics_srv = match (&metrics_listen, coord.telemetry()) {
+        (Some(addr), Some(registry)) => {
+            let registry = std::sync::Arc::clone(registry);
+            let srv =
+                MetricsServer::start(addr, std::sync::Arc::new(move || registry.render()))
+                    .map_err(|e| e.to_string())?;
+            println!("telemetry: scrape endpoint at http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        _ => None,
+    };
 
     // Network front door: hand the engine to the TCP serving plane and
     // run until SIGINT, then drain gracefully (no synthetic trace).
@@ -625,7 +655,7 @@ fn submit_stream_job(
 /// of them, and free the handle — the network twin of the `serve`
 /// trace driver's session lifecycle.
 fn cmd_remote(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["report"])?;
+    let args = Args::parse(argv, &["report", "metrics"])?;
     let addr = args
         .get("connect")
         .ok_or_else(|| "--connect HOST:PORT is required".to_string())?;
@@ -697,6 +727,9 @@ fn cmd_remote(argv: &[String]) -> Result<(), String> {
     client.free_operand(id).map_err(|e| e.to_string())?;
     if args.has("report") {
         println!("{}", client.report().map_err(|e| e.to_string())?);
+    }
+    if args.has("metrics") {
+        println!("{}", client.metrics().map_err(|e| e.to_string())?);
     }
     Ok(())
 }

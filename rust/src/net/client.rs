@@ -316,10 +316,22 @@ impl WireClient {
         }
     }
 
-    /// The server's metrics report (includes the per-tenant lines).
+    /// The server's metrics report (global gauges plus this tenant's
+    /// own `tenant[...]` lines — peers' lines are filtered server-side).
     pub fn report(&self) -> Result<String, ClientError> {
         match self.inner.request(&Frame::Report)? {
             Frame::ReportText { text } => Ok(text),
+            Frame::Status(s) => Err(denied(s)),
+            other => Err(Self::unexpected(&other)),
+        }
+    }
+
+    /// The server's Prometheus text exposition — the same bytes its
+    /// `GET /metrics` endpoint serves, fetched through the authed
+    /// session instead of a separate scrape port.
+    pub fn metrics(&self) -> Result<String, ClientError> {
+        match self.inner.request(&Frame::Metrics)? {
+            Frame::MetricsText { text } => Ok(text),
             Frame::Status(s) => Err(denied(s)),
             other => Err(Self::unexpected(&other)),
         }

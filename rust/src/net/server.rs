@@ -35,9 +35,10 @@ use std::ops::ControlFlow;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::events::Event;
+use crate::coordinator::render_metrics_text;
 use crate::coordinator::request::{CancelHandle, OperandRef, SubmitError};
 use crate::coordinator::store::{mat_bytes, OperandId, StoreError};
 use crate::coordinator::stream::{StreamError, StreamId, StreamOpts};
@@ -358,8 +359,55 @@ fn serve_worker(
     coord.cluster().worker_lost(id);
 }
 
+/// Static frame label for the telemetry journal (`&'static str` so
+/// [`Event::WireHandled`] never allocates per request).
+fn frame_kind(frame: &Frame) -> &'static str {
+    match frame {
+        Frame::Upload { .. } => "upload",
+        Frame::FreeOperand { .. } => "free_operand",
+        Frame::BeginStream { .. } => "begin_stream",
+        Frame::AppendStream { .. } => "append_stream",
+        Frame::SealStream { .. } => "seal_stream",
+        Frame::FreeStream { .. } => "free_stream",
+        Frame::Submit { .. } => "submit",
+        Frame::Cancel { .. } => "cancel",
+        Frame::Report => "report",
+        Frame::Metrics => "metrics",
+        Frame::Goodbye => "goodbye",
+        _ => "other",
+    }
+}
+
+/// Satellite isolation on the report surface: a remote tenant sees the
+/// global gauges plus its *own* `tenant[...]` lines, never a peer's.
+/// (The in-process `Metrics::report` stays unfiltered — it is the
+/// operator's view.)
+fn tenant_report(full: &str, tenant: &str) -> String {
+    let own = format!("tenant[{tenant}]");
+    full.lines()
+        .filter(|l| !l.starts_with("tenant[") || l.starts_with(own.as_str()))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 impl Session {
+    /// Route one authenticated frame, journaling a [`Event::WireHandled`]
+    /// span (tenant, frame kind, wall time) when telemetry is armed.
     fn handle(&mut self, req: u64, frame: Frame) -> ControlFlow<()> {
+        let clock = self.coord.telemetry().is_some().then(Instant::now);
+        let kind = frame_kind(&frame);
+        let flow = self.dispatch(req, frame);
+        if let Some(t0) = clock {
+            self.coord.events().append(Event::WireHandled {
+                tenant: self.tenant.name.to_string(),
+                kind,
+                dur_us: t0.elapsed().as_micros() as u64,
+            });
+        }
+        flow
+    }
+
+    fn dispatch(&mut self, req: u64, frame: Frame) -> ControlFlow<()> {
         match frame {
             Frame::Upload { mat } => self.upload(req, &mat),
             Frame::FreeOperand { id } => self.free_operand(req, id),
@@ -385,8 +433,18 @@ impl Session {
                 self.send(req, &Frame::CancelOk { cancelled });
             }
             Frame::Report => {
-                let text = self.coord.metrics.report();
+                let text = tenant_report(&self.coord.metrics.report(), &self.tenant.name);
                 self.send(req, &Frame::ReportText { text });
+            }
+            Frame::Metrics => {
+                // Same bytes `GET /metrics` serves: the armed registry's
+                // exposition, or the bare counter families when the
+                // telemetry plane is off.
+                let text = match self.coord.telemetry() {
+                    Some(t) => t.render(),
+                    None => render_metrics_text(&self.coord.metrics),
+                };
+                self.send(req, &Frame::MetricsText { text });
             }
             Frame::Goodbye => return ControlFlow::Break(()),
             Frame::Hello { .. } | Frame::WorkerHello { .. } => {

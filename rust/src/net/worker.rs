@@ -33,7 +33,7 @@ use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchConfig, ProjectionService};
 use crate::coordinator::metrics::Metrics;
@@ -101,6 +101,10 @@ struct Partition {
     mixed_arms: bool,
     y_arm: Option<Device>,
     mixed_y_arms: bool,
+    /// Cumulative wall time this slot spent flushing chunks through the
+    /// projection plane (µs); rides home on the slot summary so the
+    /// coordinator's telemetry plane can stitch worker-side spans.
+    ingest_us: u64,
 }
 
 impl Partition {
@@ -303,6 +307,7 @@ fn run_loop(
                     mixed_arms: false,
                     y_arm: None,
                     mixed_y_arms: false,
+                    ingest_us: 0,
                 };
                 let bytes = p.reserved_bytes() as u64;
                 st.slots.insert(slot, p);
@@ -347,6 +352,7 @@ fn run_loop(
             }
             Frame::SealPartition { stream, epoch } => {
                 let Some(mut st) = streams.remove(&stream) else { continue };
+                let seal_clock = Instant::now();
                 let mut failed: Option<String> = None;
                 // Flush tails and push summaries in ascending slot
                 // order (the canonical order the reduction folds in).
@@ -368,6 +374,7 @@ fn run_loop(
                         y_arm: arm_code(if p.mixed_y_arms { None } else { p.y_arm }),
                         sa: WireMat::from_mat(&p.sa),
                         yt: WireMat::from_mat(&p.yt),
+                        ingest_us: p.ingest_us,
                     };
                     if !send(writer, &summary) {
                         failed = Some("summary push failed".into());
@@ -386,6 +393,7 @@ fn run_loop(
                     epoch,
                     fd_bound: st.fd.bound().to_bits(),
                     fd: WireMat::from_mat(&st.fd.sketch()),
+                    seal_us: seal_clock.elapsed().as_micros() as u64,
                 };
                 send(writer, &sealed);
                 metrics.stream_resident_bytes.fetch_sub(released, Ordering::Relaxed);
@@ -413,6 +421,7 @@ fn flush(
     svc: &ProjectionService,
     metrics: &Arc<Metrics>,
 ) -> Result<(), String> {
+    let clock = Instant::now();
     let take = p.buf_rows;
     let r0 = p.next;
     let chunk = Arc::new(p.buf.crop(take, p.cols));
@@ -446,6 +455,7 @@ fn flush(
     p.next += take;
     p.buf_rows = 0;
     p.chunks += 1;
+    p.ingest_us += clock.elapsed().as_micros() as u64;
     metrics.stream_chunks.fetch_add(1, Ordering::Relaxed);
     Ok(())
 }

@@ -133,7 +133,7 @@ pub fn sparse_projection_ms(n: usize, m: usize, k: usize, s: usize) -> f64 {
 /// The router prices each with the cost terms above and routes the host
 /// arm through the cheapest (or a CLI-forced one); see
 /// `crate::randnla::structured` for the operators themselves.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SketchKind {
     /// Materialised Gaussian operator + packed GEMM (the seed path).
     Dense,

@@ -131,12 +131,12 @@ fn gresponse(g: &mut Gen) -> WireResponse {
     }
 }
 
-/// A tag the protocol has not assigned (client/worker 1–15, server/
-/// coordinator 32–47).
+/// A tag the protocol has not assigned (client/worker 1–16, server/
+/// coordinator 32–48).
 fn unassigned_tag(g: &mut Gen) -> u16 {
     loop {
         let t = g.u64(0..=u16::MAX as u64) as u16;
-        if !(1..=15).contains(&t) && !(32..=47).contains(&t) {
+        if !(1..=16).contains(&t) && !(32..=48).contains(&t) {
             return t;
         }
     }
@@ -144,7 +144,7 @@ fn unassigned_tag(g: &mut Gen) -> u16 {
 
 /// Every Frame variant, weighted uniformly.
 fn gframe(g: &mut Gen) -> Frame {
-    match g.usize(0, 31) {
+    match g.usize(0, 33) {
         0 => Frame::Hello { version: g.u64(0..=u16::MAX as u64) as u16, token: gstr(g) },
         1 => Frame::Upload { mat: gmat(g) },
         2 => Frame::FreeOperand { id: g.u64(0..=u64::MAX) },
@@ -189,12 +189,14 @@ fn gframe(g: &mut Gen) -> Frame {
             y_arm: g.u64(0..=3) as u8,
             sa: gmat(g),
             yt: gmat(g),
+            ingest_us: g.u64(0..=u64::MAX),
         },
         24 => Frame::PartitionSealed {
             stream: g.u64(0..=u64::MAX),
             epoch: g.u64(0..=1 << 16),
             fd_bound: bits(g),
             fd: gmat(g),
+            seal_us: g.u64(0..=u64::MAX),
         },
         25 => Frame::PartitionFreed { stream: g.u64(0..=u64::MAX) },
         26 => Frame::WorkerOk {
@@ -218,6 +220,9 @@ fn gframe(g: &mut Gen) -> Frame {
         28 => Frame::PartitionRows { stream: g.u64(0..=u64::MAX), slot: g.u64(0..=1 << 8), rows: gmat(g) },
         29 => Frame::SealPartition { stream: g.u64(0..=u64::MAX), epoch: g.u64(0..=1 << 16) },
         30 => Frame::FreePartition { stream: g.u64(0..=u64::MAX) },
+        // The telemetry scrape pair.
+        31 => Frame::Metrics,
+        32 => Frame::MetricsText { text: gstr(g) },
         _ => Frame::Unknown { tag: unassigned_tag(g) },
     }
 }

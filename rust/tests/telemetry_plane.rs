@@ -1,0 +1,387 @@
+//! End-to-end coverage for the telemetry plane (ISSUE 10):
+//!
+//! - **span assembly**: a cache-hit job's span carries zero `projected`
+//!   passes and `cache_hit = Some(true)`; the cold job that parked the
+//!   sketch shows the real device pass;
+//! - **exposition validity**: [`TelemetryRegistry::render`] emits
+//!   parseable Prometheus text — legal metric names, a `# TYPE` comment
+//!   ahead of every family, monotone cumulative `_bucket` series ending
+//!   in `+Inf`, finite sample values;
+//! - **drift auditing**: a seeded ForceHost workload populates the
+//!   (host, f64, dense) perfmodel route and its drift-ratio gauge;
+//! - **cluster stitching**: worker-side ingest/seal spans journaled on
+//!   the wire plane land in the coordinator's stage histograms;
+//! - **trace-out**: `trace_out` streams loadable Chrome `trace_event`
+//!   JSON.
+
+use std::time::{Duration, Instant};
+
+use photonic_randnla::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Device, EventLog, Job, JobSpan, JobSpec,
+    OperandRef, Policy, PoolConfig, Precision, QosClass, StreamId, StreamOpts, SubmitOptions,
+    TelemetryRegistry, TenantRegistry, TraceEstimator,
+};
+use photonic_randnla::linalg::Mat;
+use photonic_randnla::net::{WireServer, WorkerConfig, WorkerNode};
+use photonic_randnla::opu::NoiseModel;
+use photonic_randnla::perfmodel::SketchKind;
+use photonic_randnla::rng::Xoshiro256;
+use photonic_randnla::testkit::ephemeral_loopback;
+use photonic_randnla::workload::psd_matrix;
+
+fn telemetry_coordinator(cache_quota: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            noise: NoiseModel::ideal(),
+            max_wait: Duration::from_micros(50),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        cache_quota,
+        telemetry: true,
+        ..Default::default()
+    })
+    .expect("coordinator start")
+}
+
+/// Spans assemble asynchronously (the registry is a projector); sync the
+/// log and poll — the terminal event may land after `Ticket::wait`
+/// returns.
+fn wait_span(reg: &TelemetryRegistry, events: &EventLog, job: u64) -> JobSpan {
+    let t0 = Instant::now();
+    loop {
+        events.sync();
+        if let Some(s) = reg.span(job) {
+            return s;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "span {job} never assembled");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn cache_hit_span_has_zero_projected_passes() {
+    let c = telemetry_coordinator(1 << 20);
+    let reg = c.telemetry().expect("telemetry plane armed").clone();
+    let id = c.upload(psd_matrix(24, 48, 1)).unwrap();
+    let spec = || JobSpec::Trace {
+        a: OperandRef::Handle(id),
+        m: 12,
+        estimator: TraceEstimator::Hutchinson,
+    };
+
+    // Cold: misses the cache, takes a real device pass.
+    let t1 = c.submit_spec(spec(), SubmitOptions::default()).unwrap();
+    let job1 = t1.id;
+    t1.wait().unwrap();
+    // Warm: same spec, same operand — must be served from the cache.
+    let t2 = c.submit_spec(spec(), SubmitOptions::default()).unwrap();
+    let job2 = t2.id;
+    t2.wait().unwrap();
+    assert_eq!(c.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    let cold = wait_span(&reg, c.events(), job1);
+    assert_eq!(cold.cache_hit, Some(false), "cold span: {cold:?}");
+    assert!(!cold.projected.is_empty(), "cold job must record a device pass: {cold:?}");
+    for p in &cold.projected {
+        assert_eq!(p.arm, Device::Host);
+        assert!(p.cols > 0);
+    }
+    assert!(cold.total_us > 0);
+
+    let warm = wait_span(&reg, c.events(), job2);
+    assert_eq!(warm.cache_hit, Some(true), "warm span: {warm:?}");
+    assert!(
+        warm.projected.is_empty(),
+        "cache-hit job did zero device work yet recorded passes: {warm:?}"
+    );
+
+    assert!(reg.spans_completed() >= 2);
+    c.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Exposition format
+// ---------------------------------------------------------------------------
+
+fn legal_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with(|c: char| c.is_ascii_digit())
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// One parsed sample line: (family name, label pairs, value).
+fn parse_sample(line: &str) -> (String, Vec<(String, String)>, f64) {
+    let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+    let value: f64 = value.parse().unwrap_or_else(|_| {
+        if value == "+Inf" {
+            f64::INFINITY
+        } else {
+            panic!("unparseable value in {line:?}")
+        }
+    });
+    let (name, labels) = match series.split_once('{') {
+        None => (series.to_string(), Vec::new()),
+        Some((name, rest)) => {
+            let body = rest.strip_suffix('}').unwrap_or_else(|| panic!("unclosed labels: {line}"));
+            let mut pairs = Vec::new();
+            // Label values in this plane never contain escaped quotes or
+            // commas (tenant/worker names are identifiers + addresses),
+            // so a flat split is an honest parser for the test corpus.
+            for pair in body.split(',') {
+                let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("bad label: {line}"));
+                let v = v.strip_prefix('"').and_then(|v| v.strip_suffix('"'));
+                pairs.push((k.to_string(), v.unwrap_or_else(|| panic!("unquoted: {line}")).to_string()));
+            }
+            (name.to_string(), pairs)
+        }
+    };
+    (name, labels, value)
+}
+
+/// The family a sample belongs to for `# TYPE` purposes: histogram
+/// samples hang off the base name.
+fn base_family(name: &str) -> &str {
+    name.strip_suffix("_bucket")
+        .or_else(|| name.strip_suffix("_sum"))
+        .or_else(|| name.strip_suffix("_count"))
+        .unwrap_or(name)
+}
+
+#[test]
+fn exposition_is_valid_prometheus_text() {
+    let c = telemetry_coordinator(1 << 20);
+    let mut rng = Xoshiro256::new(41);
+    // A workload wide enough to light up every family: projections
+    // (device histograms + drift), a cached trace pair (probe counters),
+    // and a queued burst (queue-wait reservoirs).
+    let tickets: Vec<_> = (0..8)
+        .map(|_| c.submit(Job::Projection { data: Mat::gaussian(48, 2, 1.0, &mut rng), m: 16 }))
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let id = c.upload(psd_matrix(24, 48, 2)).unwrap();
+    let spec = || JobSpec::Trace {
+        a: OperandRef::Handle(id),
+        m: 12,
+        estimator: TraceEstimator::Hutchinson,
+    };
+    c.run_spec(spec(), SubmitOptions::default()).unwrap();
+    c.run_spec(spec(), SubmitOptions::default()).unwrap();
+    c.events().sync();
+
+    let text = c.telemetry().unwrap().render();
+    let mut typed: std::collections::HashSet<String> = std::collections::HashSet::new();
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let fam = it.next().unwrap();
+            let kind = it.next().unwrap_or_else(|| panic!("TYPE without kind: {line}"));
+            assert!(legal_name(fam), "illegal family name {fam:?}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown metric type in {line:?}"
+            );
+            assert!(typed.insert(fam.to_string()), "duplicate # TYPE for {fam}");
+            continue;
+        }
+        if line.starts_with('#') {
+            assert!(line.starts_with("# HELP "), "unknown comment {line:?}");
+            continue;
+        }
+        samples.push(parse_sample(line));
+    }
+    assert!(!samples.is_empty(), "empty exposition");
+    for (name, labels, value) in &samples {
+        assert!(legal_name(name), "illegal sample name {name:?}");
+        assert!(
+            typed.contains(base_family(name)),
+            "sample {name} has no preceding # TYPE"
+        );
+        for (k, _) in labels {
+            assert!(legal_name(k), "illegal label name {k:?} on {name}");
+        }
+        assert!(value.is_infinite() || value.is_finite(), "NaN sample on {name}");
+        assert!(!value.is_nan(), "NaN sample on {name}");
+    }
+
+    // Cumulative histogram buckets: per (name, non-le labels) the counts
+    // are monotone nondecreasing in `le` order and the series ends +Inf.
+    let mut series: std::collections::HashMap<String, Vec<(String, f64)>> =
+        std::collections::HashMap::new();
+    for (name, labels, value) in &samples {
+        if !name.ends_with("_bucket") {
+            continue;
+        }
+        let le = labels.iter().find(|(k, _)| k == "le").expect("bucket without le").1.clone();
+        let mut key = name.clone();
+        for (k, v) in labels {
+            if k != "le" {
+                key.push_str(&format!("|{k}={v}"));
+            }
+        }
+        series.entry(key).or_default().push((le, *value));
+    }
+    assert!(!series.is_empty(), "no histogram series rendered");
+    for (key, buckets) in &series {
+        // Exposition order is ascending-le already; hold it to that.
+        let mut prev = 0.0f64;
+        for (_, count) in buckets {
+            assert!(*count >= prev, "{key}: bucket counts regressed");
+            prev = *count;
+        }
+        assert_eq!(buckets.last().unwrap().0, "+Inf", "{key}: no +Inf bucket");
+    }
+
+    // The families the acceptance bar names must all be present.
+    for fam in [
+        "photon_jobs_submitted_total",
+        "photon_cache_hits_total",
+        "photon_request_latency_us",
+        "photon_queue_wait_us",
+        "photon_spans_completed_total",
+        "photon_stage_duration_us",
+        "photon_perfmodel_batches_total",
+        "photon_perfmodel_drift_ratio",
+    ] {
+        assert!(typed.contains(fam), "family {fam} missing from exposition:\n{text}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn drift_auditor_prices_the_host_route() {
+    let c = telemetry_coordinator(0);
+    let reg = c.telemetry().unwrap().clone();
+    let mut rng = Xoshiro256::new(43);
+    let tickets: Vec<_> = (0..6)
+        .map(|_| c.submit(Job::Projection { data: Mat::gaussian(64, 2, 1.0, &mut rng), m: 24 }))
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    c.events().sync();
+
+    // ForceHost + dense operator: every batch lands on one route, and
+    // the host model's fixed overhead guarantees a nonzero prediction,
+    // so the ratio is well-defined.
+    let ratio = reg
+        .drift()
+        .ratio(Device::Host, Precision::F64, SketchKind::Dense)
+        .expect("host route never audited");
+    assert!(ratio.is_finite() && ratio >= 0.0, "nonsense drift ratio {ratio}");
+    assert!(
+        reg.drift().ratio(Device::Opu, Precision::F64, SketchKind::Dense).is_none(),
+        "phantom route audited"
+    );
+    let text = reg.render();
+    assert!(
+        text.contains(r#"photon_perfmodel_drift_ratio{arm="host",tier="f64",sketch="dense"}"#),
+        "drift gauge missing:\n{text}"
+    );
+    c.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Cluster stitching
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_stream_stitches_worker_spans_into_stage_histograms() {
+    let tenants = TenantRegistry::new().add("w", "wtok", usize::MAX, QosClass::Batch);
+    let srv = WireServer::start(telemetry_coordinator(0), &ephemeral_loopback(), tenants)
+        .expect("server start");
+    let workers: Vec<WorkerNode> = (0..2)
+        .map(|i| {
+            WorkerNode::connect(&srv.addr().to_string(), "wtok", WorkerConfig::default())
+                .unwrap_or_else(|e| panic!("worker {i} join: {e}"))
+        })
+        .collect();
+    let c = srv.coordinator();
+    let t0 = Instant::now();
+    while c.cluster().worker_count() < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "workers never registered");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let mut rng = Xoshiro256::new(47);
+    let a = Mat::gaussian(64, 8, 1.0, &mut rng);
+    let opts = StreamOpts { chunk_rows: Some(8), sketch_m: 16, fd_rank: 8, range_cap: 4 };
+    let id: StreamId = c.begin_stream(a.rows, a.cols, opts).unwrap();
+    let mut r0 = 0usize;
+    while r0 < a.rows {
+        let r1 = (r0 + 8).min(a.rows);
+        c.append_stream(id, &Mat::from_fn(r1 - r0, a.cols, |i, j| a.at(r0 + i, j))).unwrap();
+        r0 = r1;
+    }
+    c.seal_stream(id).unwrap();
+
+    // Worker slot summaries arrive on server session threads; poll the
+    // exposition until every wire-plane stage shows up.
+    let reg = c.telemetry().unwrap();
+    let t0 = Instant::now();
+    loop {
+        c.events().sync();
+        let text = reg.render();
+        let stitched = [r#"stage="worker_ingest""#, r#"stage="worker_seal""#, r#"stage="stream_seal""#]
+            .iter()
+            .all(|s| text.contains(s));
+        if stitched {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "worker spans never reached the registry:\n{text}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(c.free_stream(id));
+    drop(workers);
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_out_streams_loadable_chrome_json() {
+    let path = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("telemetry_plane_trace.json");
+    std::fs::remove_file(&path).ok();
+    let c = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        policy: Policy::ForceHost,
+        batch: BatchConfig {
+            noise: NoiseModel::ideal(),
+            max_wait: Duration::from_micros(50),
+            ..Default::default()
+        },
+        pool: PoolConfig { pjrt_replicas: 0, ..Default::default() },
+        telemetry: true,
+        trace_out: Some(path.clone()),
+        ..Default::default()
+    })
+    .expect("coordinator start");
+    let mut rng = Xoshiro256::new(53);
+    for _ in 0..3 {
+        c.run(Job::Projection { data: Mat::gaussian(48, 2, 1.0, &mut rng), m: 16 }).unwrap();
+    }
+    c.events().sync();
+    c.shutdown(); // closes the JSON array via finish_trace
+
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    std::fs::remove_file(&path).ok();
+    let t = text.trim();
+    assert!(t.starts_with('[') && t.ends_with(']'), "not a JSON array:\n{t}");
+    assert!(t.contains(r#""ph":"X""#), "no complete slices:\n{t}");
+    assert!(t.contains(r#""pid":1"#) && t.contains(r#""ts":"#) && t.contains(r#""dur":"#));
+    // Balanced braces => structurally sound slice objects.
+    assert_eq!(t.matches('{').count(), t.matches('}').count(), "unbalanced JSON:\n{t}");
+}
